@@ -1,0 +1,82 @@
+//! Run all three paper ablations (§2.1, §2.2, §2.3) on one small
+//! workload and print a compact summary — the quick-look version of the
+//! full benches in `rust/benches/`.
+//!
+//! ```bash
+//! cargo run --release --example ablations
+//! ```
+
+use anyhow::Result;
+use xeonserve::config::{EngineConfig, OptFlags, Variant};
+use xeonserve::engine::Engine;
+
+struct Row {
+    name: &'static str,
+    wall_ms: f64,
+    sim_ms: f64,
+    wire_b: u64,
+    staged_b: u64,
+    allreduces: u64,
+}
+
+fn run(name: &'static str, variant: Variant, opt: OptFlags) -> Result<Row> {
+    let cfg = EngineConfig {
+        model: "tiny".into(),
+        variant,
+        world: 4,
+        batch: 1,
+        opt,
+        ..Default::default()
+    };
+    let mut engine = Engine::new(cfg)?;
+    engine.enqueue(vec![1, 2, 3, 4], 12);
+    let before = engine.comm_stats();
+    engine.run_to_completion()?;
+    let d = engine.comm_stats().since(&before);
+    let m = &mut engine.metrics;
+    let toks = m.decode_wall.count().max(1) as u64;
+    Ok(Row {
+        name,
+        wall_ms: m.decode_wall.mean_us() / 1e3,
+        sim_ms: m.decode_sim.mean_us() / 1e3,
+        wire_b: d.wire_bytes / toks,
+        staged_b: d.staged_copy_bytes / toks,
+        allreduces: d.allreduces / toks,
+    })
+}
+
+fn main() -> Result<()> {
+    let rows = vec![
+        run("paper (all opts)", Variant::Parallel, OptFlags::default())?,
+        run("naive baseline", Variant::Parallel, OptFlags::naive())?,
+        run("§2.1 off (bcast+gather)", Variant::Parallel, OptFlags {
+            broadcast_ids: false,
+            local_topk: false,
+            zero_copy: true,
+        })?,
+        run("§2.2 off (serial 2-sync)", Variant::Serial,
+            OptFlags::default())?,
+        run("§2.3 off (staged copies)", Variant::Parallel, OptFlags {
+            zero_copy: false,
+            ..Default::default()
+        })?,
+    ];
+
+    println!("\n=== ablation summary (tiny, world=4, per decoded token) ===");
+    println!(
+        "{:<26} {:>9} {:>9} {:>10} {:>10} {:>6}",
+        "config", "wall_ms", "sim_ms", "wire_B", "staged_B", "ARs"
+    );
+    for r in &rows {
+        println!(
+            "{:<26} {:>9.2} {:>9.3} {:>10} {:>10} {:>6}",
+            r.name, r.wall_ms, r.sim_ms, r.wire_b, r.staged_b, r.allreduces
+        );
+    }
+    println!(
+        "\nreading guide: §2.1 cuts wire_B at the round boundaries; \
+         §2.2 halves ARs (and sim_ms comm share); §2.3 zeroes the \
+         allreduce staged_B."
+    );
+    Ok(())
+}

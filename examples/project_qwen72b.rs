@@ -1,0 +1,149 @@
+//! Project the calibrated cost model to the paper's actual operating
+//! point — Qwen-72B on 4× Xeon 8575C — and check that the §3 headline
+//! (140 ms/token) falls inside the model's predicted band.
+//!
+//! Decode at batch 1 is **memory-bound**: every generated token streams
+//! the full weight shard (plus KV cache) through each socket's memory
+//! system once.  Per-token latency per socket ≈
+//!
+//!   weights_bytes/socket / achieved_bandwidth
+//!   + sync_count × allreduce(H·dtype, W)        (ccl::wire α/β model)
+//!   + round boundaries (§2.1: ids vs embeddings, top-k vs allgather)
+//!
+//! The same model, fed our measured small/medium numbers, reproduces the
+//! observed sim latencies (E1), which is what licenses the extrapolation.
+//!
+//! ```bash
+//! cargo run --release --example project_qwen72b
+//! ```
+
+use xeonserve::ccl::wire::WireModel;
+
+struct ModelScale {
+    name: &'static str,
+    params: f64,
+    n_layers: usize,
+    hidden: usize,
+    vocab: usize,
+}
+
+const QWEN72B: ModelScale = ModelScale {
+    name: "Qwen-72B",
+    params: 72.7e9,
+    n_layers: 80,
+    hidden: 8192,
+    vocab: 152_064,
+};
+
+/// 8575C-class socket: 48 cores, 8-channel DDR5-5600.
+/// Theoretical stream bandwidth ≈ 350 GB/s; sustained GEMV-style
+/// achieved bandwidth is typically 40–70 % of that.
+const BW_GBPS: [f64; 3] = [120.0, 200.0, 280.0];
+
+fn per_token_ms(
+    m: &ModelScale,
+    world: usize,
+    dtype_bytes: f64,
+    bw_gbps: f64,
+    wire: &WireModel,
+    syncs_per_layer: usize,
+    broadcast_ids: bool,
+    local_topk: bool,
+    seq_len: usize,
+) -> f64 {
+    // weight streaming per socket per token
+    let weight_bytes = m.params * dtype_bytes / world as f64;
+    // KV cache read at this sequence position (GQA: Qwen-72B uses
+    // 64 q heads / 64 kv at 72B-v1 — take full MHA as upper bound)
+    let kv_bytes =
+        (m.n_layers * 2 * seq_len * m.hidden) as f64 * dtype_bytes
+            / world as f64;
+    let compute_ms = (weight_bytes + kv_bytes) / (bw_gbps * 1e9) * 1e3;
+
+    // collectives per token (ccl::wire, µs)
+    let h_payload = (m.hidden as f64 * dtype_bytes) as u64;
+    let mut comm_us =
+        (m.n_layers * syncs_per_layer) as f64
+            * wire.allreduce_us(h_payload, world);
+    comm_us += if broadcast_ids {
+        wire.broadcast_us(4, world)
+    } else {
+        wire.broadcast_us(h_payload, world)
+    };
+    comm_us += if local_topk {
+        wire.gather_us(40 * 8, world)
+    } else {
+        wire.allgather_us(
+            (m.vocab as f64 / world as f64 * dtype_bytes) as u64, world)
+    };
+    compute_ms + comm_us / 1e3
+}
+
+fn main() {
+    let wire = WireModel::default(); // UPI-class: 1.1 µs, 20 GB/s
+    let m = &QWEN72B;
+    let world = 4;
+    let seq = 512; // the paper's input length
+
+    println!("=== projecting to the paper's operating point ===");
+    println!(
+        "{} | TP={world} sockets | input {seq} tokens | paper: 140 ms/token\n",
+        m.name
+    );
+    println!(
+        "{:<26} {:>8} {:>10} {:>10}",
+        "configuration", "dtype", "bw GB/s", "ms/token"
+    );
+    for &bw in &BW_GBPS {
+        for (dtype, db) in [("bf16", 2.0_f64), ("fp32", 4.0)] {
+            let opt = per_token_ms(m, world, db, bw, &wire, 1, true, true,
+                                   seq);
+            println!(
+                "{:<26} {:>8} {:>10.0} {:>10.1}",
+                "paper (all opts, 1-sync)", dtype, bw, opt
+            );
+        }
+    }
+    println!();
+
+    // ablation deltas at 72B scale (bw = 200 GB/s, bf16)
+    let base = per_token_ms(m, world, 2.0, 200.0, &wire, 1, true, true, seq);
+    let two_sync =
+        per_token_ms(m, world, 2.0, 200.0, &wire, 2, true, true, seq);
+    let no_ids =
+        per_token_ms(m, world, 2.0, 200.0, &wire, 1, false, true, seq);
+    let no_topk =
+        per_token_ms(m, world, 2.0, 200.0, &wire, 1, true, false, seq);
+    println!("ablations @ bf16 / 200 GB/s:");
+    println!("  optimized (paper)            {base:7.1} ms/token");
+    println!(
+        "  §2.2 off (2 syncs/layer)     {two_sync:7.1} ms/token  (+{:.2})",
+        two_sync - base
+    );
+    println!(
+        "  §2.1a off (embed bcast)      {no_ids:7.1} ms/token  (+{:.2})",
+        no_ids - base
+    );
+    println!(
+        "  §2.1b off (logit allgather)  {no_topk:7.1} ms/token  (+{:.2})",
+        no_topk - base
+    );
+    println!();
+
+    // scaling curve
+    println!("scaling (bf16, 200 GB/s, optimized):");
+    for w in [1usize, 2, 4, 8] {
+        let ms = per_token_ms(m, w, 2.0, 200.0, &wire, 1, true, true, seq);
+        println!("  TP={w}: {ms:7.1} ms/token");
+    }
+    println!(
+        "\nreading: the paper's 140 ms/token sits between the bf16 \
+         200 GB/s (184 ms) and 280 GB/s (132 ms) rows — i.e. bf16 \
+         weights at ~65-80% of the socket's peak stream bandwidth, \
+         which is exactly the regime a tuned AMX/oneDNN stack reaches; \
+         fp32 would land ~2x above the paper's number, so the paper is \
+         implicitly a reduced-precision result.  Comm is <1% at TP=4: \
+         the optimizations' value is keeping it that way as W grows and \
+         in the latency tail (§2.1) rather than in the mean."
+    );
+}

@@ -1,0 +1,45 @@
+//! Quickstart: bring up a 2-rank tensor-parallel engine on the tiny
+//! preset and generate a few tokens.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use xeonserve::config::EngineConfig;
+use xeonserve::engine::Engine;
+use xeonserve::tokenizer::Tokenizer;
+
+fn main() -> Result<()> {
+    let cfg = EngineConfig {
+        model: "tiny".into(),
+        world: 2,
+        batch: 2,
+        ..Default::default()
+    };
+    println!(
+        "engine: model={} variant={} world={} (opt: ids-bcast={} \
+         local-topk={} zero-copy={})",
+        cfg.model, cfg.variant, cfg.world, cfg.opt.broadcast_ids,
+        cfg.opt.local_topk, cfg.opt.zero_copy
+    );
+    let mut engine = Engine::new(cfg)?;
+    let tok = Tokenizer::byte_level(engine.preset().vocab)?;
+
+    let prompts = ["hello world", "the quick brown fox"];
+    let ids: Vec<Vec<i32>> =
+        prompts.iter().map(|p| tok.encode(p)).collect();
+    let outs = engine.generate(&ids, 8)?;
+
+    for (p, out) in prompts.iter().zip(&outs) {
+        println!("prompt {p:?} -> {} new tokens: {:?}", out.len(), out);
+    }
+    println!("{}", engine.metrics.report());
+    println!(
+        "per-token: {:.2} ms wall / {:.3} ms simulated-cluster",
+        engine.metrics.decode_wall.mean_us() / 1e3,
+        engine.metrics.decode_sim.mean_us() / 1e3
+    );
+    println!("comm: {:?}", engine.comm_stats());
+    Ok(())
+}

@@ -1,0 +1,340 @@
+"""AOT pipeline: lower every model segment to HLO *text* + manifest.json.
+
+HLO text (not ``lowered.compile().serialize()`` / serialized protos) is the
+interchange format: jax >= 0.5 emits HloModuleProtos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the rust
+``xla`` 0.1.6 crate) rejects (``proto.id() <= INT_MAX``); the HLO text
+parser reassigns ids, so text round-trips cleanly.
+
+Outputs under --out-dir:
+
+  manifest.json                       segment index + shapes + configs
+  hlo/<segment-id>.hlo.txt            one per segment
+  golden/tiny_w{W}_{variant}/...      weights (npy) + reference outputs
+                                      for the rust parity test
+
+``make artifacts`` runs this once; rust never invokes python.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS, ModelConfig
+from .kernels import ref
+
+BLOCK_K = 128
+
+# Default artifact set: (config, worlds, batch buckets, prefill buckets).
+# tiny drives tests + golden parity; small drives the e2e example; medium
+# drives the scalability sweeps.  Extend with --full for the big sweep.
+DEFAULT_SET = [
+    ("tiny", [1, 2, 4], [1, 2], [16]),
+    ("small", [1, 2, 4], [1, 4], [128, 512]),
+    ("medium", [4], [1], [512]),
+]
+FULL_SET = [
+    ("tiny", [1, 2, 4, 8], [1, 2, 4], [16]),
+    ("small", [1, 2, 4, 8], [1, 4], [128, 512]),
+    ("medium", [1, 2, 4, 8], [1], [512]),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _arg(name, shape, dtype="f32"):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def segment_specs(cfg: ModelConfig, world: int, b: int, prefill_s: list[int],
+                  use_pallas: bool | None = None):
+    """Yield (segment_id, fn, example_args, meta) for one (config, world, B).
+
+    use_pallas: lower the L1 pallas kernels into the segments (True), or
+    the XLA-fused oracle math (False).  Default: pallas for the tiny
+    config only — interpret-mode pallas is the TPU-structured artifact but
+    runs ~35x off the fused graph on CPU-PJRT (EXPERIMENTS.md §Perf), so
+    the perf-bearing presets ship the fused form.
+    """
+    if use_pallas is None:
+        use_pallas = cfg.name == "tiny"
+    sc = cfg.shard(world)
+    h, t, hd = cfg.hidden, cfg.max_seq, cfg.head_dim
+    nkv_l = sc.n_kv_heads_l
+    kv_shape = (b, nkv_l, t, hd)
+    base = f"{cfg.name}_w{world}_b{b}"
+
+    wmeta = {
+        "ln1_g": (h,), "ln2_g": (h,),
+        "wq": (h, sc.q_dim), "wk": (h, sc.kv_dim), "wv": (h, sc.kv_dim),
+        "wo": (sc.q_dim, h),
+        "wg": (h, sc.ffn_l), "wu": (h, sc.ffn_l), "wd": (sc.ffn_l, h),
+    }
+
+    def wspecs(names):
+        return [_spec(wmeta[n]) for n in names]
+
+    def wargs(names):
+        return [_arg(n, wmeta[n]) for n in names]
+
+    # --- decode-side segments (per batch bucket) ---
+    yield (
+        f"{base}_embed_decode",
+        model.build_embed(cfg),
+        [_spec((b, 1), jnp.int32), _spec((cfg.vocab, h))],
+        {
+            "kind": "embed", "mode": "decode", "seq": 1,
+            "inputs": [_arg("tokens", (b, 1), "i32"),
+                       _arg("embedding", (cfg.vocab, h))],
+            "outputs": [_arg("x", (b, 1, h))],
+        },
+    )
+    dec_state = [_spec((b, 1, h)), _spec(kv_shape), _spec(kv_shape),
+                 _spec((b,), jnp.int32)]
+    dec_state_meta = [_arg("x", (b, 1, h)), _arg("k_cache", kv_shape),
+                      _arg("v_cache", kv_shape), _arg("pos", (b,), "i32")]
+    dec_out_meta = [_arg("y_partial", (b, 1, h)), _arg("k_cache", kv_shape),
+                    _arg("v_cache", kv_shape)]
+    yield (
+        f"{base}_parallel_decode",
+        model.build_parallel_block_decode(sc, BLOCK_K, use_pallas),
+        dec_state + wspecs(model.PARALLEL_BLOCK_ARGS),
+        {
+            "kind": "parallel_block", "mode": "decode", "seq": 1,
+            "inputs": dec_state_meta + wargs(model.PARALLEL_BLOCK_ARGS),
+            "outputs": dec_out_meta,
+            "weight_args": model.PARALLEL_BLOCK_ARGS,
+        },
+    )
+    yield (
+        f"{base}_serial_attn_decode",
+        model.build_serial_attn_decode(sc, BLOCK_K, use_pallas),
+        dec_state + wspecs(model.SERIAL_ATTN_ARGS),
+        {
+            "kind": "serial_attn", "mode": "decode", "seq": 1,
+            "inputs": dec_state_meta + wargs(model.SERIAL_ATTN_ARGS),
+            "outputs": [_arg("attn_partial", (b, 1, h)),
+                        _arg("k_cache", kv_shape), _arg("v_cache", kv_shape)],
+            "weight_args": model.SERIAL_ATTN_ARGS,
+        },
+    )
+    yield (
+        f"{base}_serial_ffn_decode",
+        model.build_serial_ffn_decode(sc, use_pallas),
+        [_spec((b, 1, h))] + wspecs(model.SERIAL_FFN_ARGS),
+        {
+            "kind": "serial_ffn", "mode": "decode", "seq": 1,
+            "inputs": [_arg("x", (b, 1, h))] + wargs(model.SERIAL_FFN_ARGS),
+            "outputs": [_arg("ffn_partial", (b, 1, h))],
+            "weight_args": model.SERIAL_FFN_ARGS,
+        },
+    )
+    yield (
+        f"{base}_lm_head",
+        model.build_lm_head(sc, use_pallas),
+        [_spec((b, 1, h)), _spec((h,)), _spec((h, sc.vocab_l))],
+        {
+            "kind": "lm_head", "mode": "decode", "seq": 1,
+            "inputs": [_arg("x", (b, 1, h)), _arg("final_g", (h,)),
+                       _arg("lm_head", (h, sc.vocab_l))],
+            "outputs": [_arg("logits_local", (b, sc.vocab_l))],
+            "weight_args": ["final_g", "lm_head"],
+        },
+    )
+
+    # --- prefill segments (per (B, S) bucket; x is single-lane) ---
+    for s in prefill_s:
+        if s > t:
+            continue
+        pre_state = [_spec((1, s, h)), _spec(kv_shape), _spec(kv_shape),
+                     _spec((1,), jnp.int32), _spec((1,), jnp.int32)]
+        pre_state_meta = [
+            _arg("x", (1, s, h)), _arg("k_cache", kv_shape),
+            _arg("v_cache", kv_shape), _arg("lane", (1,), "i32"),
+            _arg("length", (1,), "i32")]
+        yield (
+            f"{base}_embed_prefill_s{s}",
+            model.build_embed(cfg),
+            [_spec((1, s), jnp.int32), _spec((cfg.vocab, h))],
+            {
+                "kind": "embed", "mode": "prefill", "seq": s,
+                "inputs": [_arg("tokens", (1, s), "i32"),
+                           _arg("embedding", (cfg.vocab, h))],
+                "outputs": [_arg("x", (1, s, h))],
+            },
+        )
+        yield (
+            f"{base}_parallel_prefill_s{s}",
+            model.build_parallel_block_prefill(sc, use_pallas),
+            pre_state + wspecs(model.PARALLEL_BLOCK_ARGS),
+            {
+                "kind": "parallel_block", "mode": "prefill", "seq": s,
+                "inputs": pre_state_meta + wargs(model.PARALLEL_BLOCK_ARGS),
+                "outputs": [_arg("y_partial", (1, s, h)),
+                            _arg("k_cache", kv_shape),
+                            _arg("v_cache", kv_shape)],
+                "weight_args": model.PARALLEL_BLOCK_ARGS,
+            },
+        )
+        yield (
+            f"{base}_serial_attn_prefill_s{s}",
+            model.build_serial_attn_prefill(sc, use_pallas),
+            pre_state + wspecs(model.SERIAL_ATTN_ARGS),
+            {
+                "kind": "serial_attn", "mode": "prefill", "seq": s,
+                "inputs": pre_state_meta + wargs(model.SERIAL_ATTN_ARGS),
+                "outputs": [_arg("attn_partial", (1, s, h)),
+                            _arg("k_cache", kv_shape),
+                            _arg("v_cache", kv_shape)],
+                "weight_args": model.SERIAL_ATTN_ARGS,
+            },
+        )
+        yield (
+            f"{base}_serial_ffn_prefill_s{s}",
+            model.build_serial_ffn_prefill(sc, use_pallas),
+            [_spec((1, s, h))] + wspecs(model.SERIAL_FFN_ARGS),
+            {
+                "kind": "serial_ffn", "mode": "prefill", "seq": s,
+                "inputs": [_arg("x", (1, s, h))] + wargs(model.SERIAL_FFN_ARGS),
+                "outputs": [_arg("ffn_partial", (1, s, h))],
+                "weight_args": model.SERIAL_FFN_ARGS,
+            },
+        )
+
+
+def lower_all(out_dir: str, artifact_set, verbose=True) -> dict:
+    hlo_dir = os.path.join(out_dir, "hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    segments = []
+    for cfg_name, worlds, batches, prefills in artifact_set:
+        cfg = CONFIGS[cfg_name]
+        for world in worlds:
+            for b in batches:
+                for seg_id, fn, args, meta in segment_specs(
+                        cfg, world, b, prefills):
+                    # Donate the KV caches (inputs 1,2 of attention-bearing
+                    # segments): the lowered HLO carries
+                    # `input_output_alias` (may-alias), letting PJRT update
+                    # the cache in place instead of copying ~MBs per layer
+                    # per step.  EXPERIMENTS.md §Perf quantifies this.
+                    donate = tuple(
+                        i for i, arg in enumerate(meta["inputs"])
+                        if arg["name"] in ("k_cache", "v_cache")
+                    )
+                    lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+                    text = to_hlo_text(lowered)
+                    rel = f"hlo/{seg_id}.hlo.txt"
+                    with open(os.path.join(out_dir, rel), "w") as f:
+                        f.write(text)
+                    meta.update(id=seg_id, file=rel, config=cfg_name,
+                                world=world, batch=b,
+                                kernel="pallas" if cfg_name == "tiny"
+                                else "xla-fused")
+                    segments.append(meta)
+                    if verbose:
+                        print(f"  lowered {seg_id} ({len(text)} chars)")
+    return {
+        "version": 1,
+        "block_k": BLOCK_K,
+        "configs": {
+            name: {
+                "name": c.name, "n_layers": c.n_layers, "hidden": c.hidden,
+                "n_heads": c.n_heads, "n_kv_heads": c.n_kv_heads,
+                "head_dim": c.head_dim, "ffn": c.ffn, "vocab": c.vocab,
+                "max_seq": c.max_seq, "rope_theta": c.rope_theta,
+                "norm_eps": c.norm_eps, "params": c.params(),
+            } for name, c in CONFIGS.items()
+        },
+        "segments": segments,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Golden data for the rust parity test: tiny model, world=2, both variants.
+# ---------------------------------------------------------------------------
+
+def write_golden(out_dir: str, world: int = 2, n_decode: int = 6,
+                 bucket_s: int = 16):
+    cfg = CONFIGS["tiny"]
+    full = model.make_full_weights(cfg, seed=0)
+    tokens = jnp.array([[5, 17, 42, 101, 7, 0, 0, 0],
+                        [250, 3, 9, 12, 77, 130, 200, 11]], jnp.int32)
+    lengths = jnp.array([5, 8], jnp.int32)
+
+    for variant in ("parallel", "serial"):
+        gdir = os.path.join(out_dir, "golden", f"tiny_w{world}_{variant}")
+        os.makedirs(gdir, exist_ok=True)
+        pre_logits, dec_logits, greedy = model.compose_prefill_decode(
+            cfg, full, world, variant, tokens, lengths, n_decode, bucket_s,
+            block_k=BLOCK_K)
+        np.save(os.path.join(gdir, "tokens.npy"), np.asarray(tokens))
+        np.save(os.path.join(gdir, "lengths.npy"), np.asarray(lengths))
+        np.save(os.path.join(gdir, "prefill_logits.npy"),
+                np.asarray(pre_logits, np.float32))
+        np.save(os.path.join(gdir, "decode_logits.npy"),
+                np.asarray(dec_logits, np.float32))
+        np.save(os.path.join(gdir, "greedy_tokens.npy"),
+                np.asarray(greedy, np.int32))
+        # sanity vs the unsharded reference at the prefill point
+        s = int(tokens.shape[1])
+        ref_lg = ref.ref_forward(cfg, full, tokens, lengths, variant)
+        last = ref_lg[jnp.arange(2), lengths - 1, :]
+        np.testing.assert_allclose(pre_logits, last, atol=2e-3, rtol=2e-3)
+
+        for r in range(world):
+            sw = model.shard_weights(cfg, full, world, r)
+            np.save(os.path.join(gdir, f"r{r}_embedding.npy"),
+                    np.asarray(sw["embedding"], np.float32))
+            np.save(os.path.join(gdir, f"r{r}_final_g.npy"),
+                    np.asarray(sw["final_g"], np.float32))
+            np.save(os.path.join(gdir, f"r{r}_lm_head.npy"),
+                    np.asarray(sw["lm_head"], np.float32))
+            for li, lw in enumerate(sw["layers"]):
+                for name, arr in lw.items():
+                    np.save(os.path.join(gdir, f"r{r}_l{li}_{name}.npy"),
+                            np.asarray(arr, np.float32))
+        print(f"  golden {variant}: greedy={np.asarray(greedy).tolist()}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--full", action="store_true",
+                    help="lower the full sweep set (worlds up to 8)")
+    ap.add_argument("--skip-golden", action="store_true")
+    args = ap.parse_args()
+
+    artifact_set = FULL_SET if args.full else DEFAULT_SET
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = lower_all(args.out_dir, artifact_set)
+    if not args.skip_golden:
+        write_golden(args.out_dir)
+        manifest["golden"] = {
+            "config": "tiny", "world": 2, "n_decode": 6, "bucket_s": 16,
+            "variants": ["parallel", "serial"],
+        }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(manifest['segments'])} segments + manifest to "
+          f"{args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Model configuration presets for the xeonserve reproduction.
+
+The paper runs Qwen-72B (80 layers, hidden 8192) tensor-parallel over four
+Xeon sockets.  We cannot hold 72B parameters on this testbed, so we define
+architecture-faithful presets (RMSNorm + RoPE + GQA-capable attention +
+SiLU-gated FFN, parallel- or serial-block) at sizes the simulated cluster
+can run, and sweep them in the benches.  See DESIGN.md §4.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    hidden: int          # = n_heads * head_dim
+    n_heads: int         # query heads
+    n_kv_heads: int      # kv heads (GQA when < n_heads)
+    head_dim: int
+    ffn: int             # gated-FFN inner width
+    vocab: int
+    max_seq: int
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    def __post_init__(self):
+        assert self.hidden == self.n_heads * self.head_dim, self.name
+        assert self.n_heads % self.n_kv_heads == 0, self.name
+
+    def shard(self, world: int) -> "ShardConfig":
+        assert self.n_heads % world == 0, (self.name, world)
+        assert self.n_kv_heads % world == 0, (self.name, world)
+        assert self.ffn % world == 0, (self.name, world)
+        assert self.vocab % world == 0, (self.name, world)
+        return ShardConfig(
+            base=self,
+            world=world,
+            n_heads_l=self.n_heads // world,
+            n_kv_heads_l=self.n_kv_heads // world,
+            ffn_l=self.ffn // world,
+            vocab_l=self.vocab // world,
+        )
+
+    def params(self) -> int:
+        """Total parameter count (untied lm head)."""
+        qkv = self.hidden * (self.n_heads + 2 * self.n_kv_heads) * self.head_dim
+        attn = qkv + self.n_heads * self.head_dim * self.hidden
+        ffn = 3 * self.hidden * self.ffn
+        per_layer = attn + ffn + 2 * self.hidden  # two norm gains
+        return (
+            self.vocab * self.hidden          # embedding
+            + self.n_layers * per_layer
+            + self.hidden                      # final norm
+            + self.hidden * self.vocab         # lm head
+        )
+
+
+@dataclass(frozen=True)
+class ShardConfig:
+    """Per-rank tensor-parallel slice of a ModelConfig."""
+    base: ModelConfig
+    world: int
+    n_heads_l: int
+    n_kv_heads_l: int
+    ffn_l: int
+    vocab_l: int
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads_l * self.base.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads_l * self.base.head_dim
+
+
+# Presets.  Head counts are powers of two so every world size in
+# {1, 2, 4, 8} divides them; vocab/ffn likewise.
+#
+#   tiny   — unit tests, golden parity files, fast CI.
+#   small  — ~165M params (~110M non-embedding): the e2e example model.
+#   medium — ~390M params: scalability sweeps.
+TINY = ModelConfig(
+    name="tiny", n_layers=2, hidden=64, n_heads=8, n_kv_heads=8,
+    head_dim=8, ffn=128, vocab=256, max_seq=64,
+)
+SMALL = ModelConfig(
+    name="small", n_layers=12, hidden=768, n_heads=8, n_kv_heads=8,
+    head_dim=96, ffn=3072, vocab=32000, max_seq=1024,
+)
+MEDIUM = ModelConfig(
+    name="medium", n_layers=24, hidden=1024, n_heads=16, n_kv_heads=8,
+    head_dim=64, ffn=4096, vocab=32000, max_seq=1024,
+)
+
+CONFIGS = {c.name: c for c in (TINY, SMALL, MEDIUM)}
+
+
+def config_dict(cfg: ModelConfig) -> dict:
+    return asdict(cfg)

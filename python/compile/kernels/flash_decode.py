@@ -1,0 +1,137 @@
+"""Pallas flash-decode kernel: single-query attention over the KV cache.
+
+This is the L1 hot spot of the decode step (the per-token latency the
+paper's §3 headline measures is dominated by attention + GEMMs over the
+KV cache as the sequence grows).
+
+Hardware adaptation (DESIGN.md §5): the paper's CPU implementation gets
+its memory locality from cache blocking over the KV sequence; here the
+same schedule is expressed TPU-style —
+
+  * grid = (batch, kv_head): one kernel instance per (lane, kv head);
+    the query-head *group* of that kv head rides along in VMEM.
+  * the KV cache is streamed block-by-block (``block_k`` rows at a time)
+    through VMEM with an online-softmax accumulator (m, l, acc) carried
+    in registers — the classic flash-attention recurrence.
+  * Q·Kᵀ and P·V are whole-block ``dot_general``s so a real TPU lowers
+    them onto the MXU; nothing is elementwise-looped.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel lowers to plain HLO.  Real-TPU VMEM/MXU
+estimates are derived from the BlockSpec in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_K = 128
+
+
+def _flash_decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, block_k: int):
+    """One (lane, kv-head) instance.
+
+    q_ref: [group, hd]   queries of this kv head's group (pre-scaled)
+    k_ref: [T, hd]       key cache rows for this (lane, head)
+    v_ref: [T, hd]       value cache rows
+    len_ref: [1] int32   valid cache length for this lane
+    o_ref: [group, hd]   attention output
+    """
+    group, head_dim = q_ref.shape
+    t = k_ref.shape[0]
+    num_blocks = pl.cdiv(t, block_k)
+
+    q = q_ref[...].astype(jnp.float32)          # [group, hd], stays in VMEM
+    length = len_ref[0]
+
+    def body(i, carry):
+        m_prev, l_prev, acc_prev = carry
+        start = i * block_k
+        k_blk = pl.load(k_ref, (pl.ds(start, block_k), slice(None)))
+        v_blk = pl.load(v_ref, (pl.ds(start, block_k), slice(None)))
+        # [group, block_k] — MXU-shaped dot, f32 accumulation.
+        scores = jax.lax.dot_general(
+            q, k_blk.astype(jnp.float32),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        mask = (start + jax.lax.iota(jnp.int32, block_k)) < length  # [block_k]
+        scores = jnp.where(mask[None, :], scores, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1))        # [group]
+        p = jnp.exp(scores - m_new[:, None])
+        p = jnp.where(mask[None, :], p, 0.0)                        # kill padded cols
+        alpha = jnp.exp(m_prev - m_new)                             # [group]
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        pv = jax.lax.dot_general(
+            p, v_blk.astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                            # [group, hd]
+        acc_new = acc_prev * alpha[:, None] + pv
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((group,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((group,), jnp.float32)
+    acc0 = jnp.zeros((group, head_dim), jnp.float32)
+    _, l, acc = jax.lax.fori_loop(0, num_blocks, body, (m0, l0, acc0))
+    # length == 0 lanes: l == 0 -> output zeros (inactive batch lanes).
+    o_ref[...] = (acc / jnp.maximum(l, 1e-20)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def flash_decode(
+    q: jax.Array,        # [B, n_kv, group, head_dim]
+    k_cache: jax.Array,  # [B, n_kv, T, head_dim]
+    v_cache: jax.Array,  # [B, n_kv, T, head_dim]
+    lengths: jax.Array,  # [B] int32
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Flash decode attention; see ref.ref_flash_decode for the oracle."""
+    b, n_kv, group, head_dim = q.shape
+    t = k_cache.shape[2]
+    # block_k must divide T: pl.ds reads past the cache otherwise, and the
+    # out-of-bounds garbage poisons the masked P·V dot (NaN * 0 == NaN).
+    block_k = min(block_k, t)
+    while t % block_k != 0:
+        block_k -= 1
+    scale = 1.0 / jnp.sqrt(jnp.array(head_dim, jnp.float32))
+    q_scaled = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    lengths2d = lengths.astype(jnp.int32).reshape(b, 1)
+
+    kernel = functools.partial(_flash_decode_kernel, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, n_kv),
+        in_specs=[
+            pl.BlockSpec((None, None, group, head_dim), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, t, head_dim), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, None, t, head_dim), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((None, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, group, head_dim),
+                               lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, group, head_dim), q.dtype),
+        interpret=True,
+    )(q_scaled, k_cache, v_cache, lengths2d)
+
+
+def vmem_bytes(t: int, head_dim: int, group: int, block_k: int,
+               dtype_bytes: int = 4) -> int:
+    """Estimated VMEM footprint of one kernel instance on a real TPU.
+
+    Counted: resident Q block + double-buffered K/V streaming blocks +
+    accumulator.  Used by EXPERIMENTS.md §Perf (interpret mode gives no
+    hardware numbers).
+    """
+    q = group * head_dim * dtype_bytes
+    kv_stream = 2 * 2 * block_k * head_dim * dtype_bytes   # K+V, double-buffered
+    acc = group * head_dim * 4 + 2 * group * 4             # f32 acc + m + l
+    return q + kv_stream + acc
+
+
+def mxu_flops(t: int, head_dim: int, group: int) -> int:
+    """MXU FLOPs of one instance: QK^T + PV."""
+    return 2 * group * t * head_dim * 2

@@ -1,0 +1,146 @@
+"""Pure-jnp oracles for the pallas kernels and the model math.
+
+Everything in this file is the *specification*: the pallas kernels
+(flash_decode, rmsnorm) and the sharded segments in model.py are tested
+against these functions, and the rust engine is tested against golden
+outputs generated from the full-model reference below.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_rmsnorm(x: jax.Array, gain: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last axis: x * rsqrt(mean(x^2) + eps) * gain."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * gain
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for NeoX-style (half-rotation) RoPE."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """NeoX-style rotary embedding.
+
+    x:          [..., S, n_heads, head_dim]
+    positions:  [..., S] absolute token positions (int32)
+    """
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * inv    # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                        # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    return jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+
+
+def ref_flash_decode(
+    q: jax.Array,        # [B, n_kv, group, head_dim] (query heads grouped by kv head)
+    k_cache: jax.Array,  # [B, n_kv, T, head_dim]
+    v_cache: jax.Array,  # [B, n_kv, T, head_dim]
+    lengths: jax.Array,  # [B] int32, number of valid cache entries per lane
+) -> jax.Array:
+    """Single-query attention over the KV cache with per-lane lengths.
+
+    Returns [B, n_kv, group, head_dim].  Lanes with length 0 return zeros.
+    """
+    head_dim = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.array(head_dim, jnp.float32))
+    scores = jnp.einsum("bhgd,bhtd->bhgt", q.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    t = k_cache.shape[2]
+    mask = jnp.arange(t)[None, None, None, :] < lengths[:, None, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.maximum(denom, 1e-20)
+    out = jnp.einsum("bhgt,bhtd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_attention_prefill(
+    q: jax.Array,        # [B, S, n_heads, head_dim]
+    k: jax.Array,        # [B, S, n_kv, head_dim]
+    v: jax.Array,        # [B, S, n_kv, head_dim]
+    lengths: jax.Array,  # [B] int32 valid prefix length (<= S)
+) -> jax.Array:
+    """Causal attention for the prefill phase, padded to S. [B,S,nh,hd]."""
+    b, s, nh, hd = q.shape
+    nkv = k.shape[2]
+    group = nh // nkv
+    kr = jnp.repeat(k, group, axis=2)
+    vr = jnp.repeat(v, group, axis=2)
+    scale = 1.0 / jnp.sqrt(jnp.array(hd, jnp.float32))
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * scale
+    rows = jnp.arange(s)[:, None]
+    cols = jnp.arange(s)[None, :]
+    causal = cols <= rows                                    # [S, S]
+    valid = cols[None] < lengths[:, None, None]              # [B, S, S]
+    mask = (causal[None] & valid)[:, None]                   # [B, 1, S, S]
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = jnp.where(mask, p, 0.0)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-20)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p / denom, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_gated_ffn(x, wg, wu, wd):
+    """SiLU-gated FFN: (silu(x@wg) * (x@wu)) @ wd."""
+    return (jax.nn.silu(x @ wg) * (x @ wu)) @ wd
+
+
+# ---------------------------------------------------------------------------
+# Full (unsharded) reference model — the end-to-end numerical spec.
+# Weight dict layout matches model.make_full_weights().
+# ---------------------------------------------------------------------------
+
+def ref_forward(cfg, weights: dict, tokens: jax.Array, lengths: jax.Array,
+                variant: str) -> jax.Array:
+    """Run the full model on [B, S] tokens; returns logits [B, S, vocab].
+
+    variant: "parallel" (GPT-J/Falcon-style fused block, one sync point)
+             or "serial" (LLaMA-style, two sync points).
+    """
+    b, s = tokens.shape
+    x = weights["embedding"][tokens]                         # [B, S, H]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    for li in range(cfg.n_layers):
+        lw = weights["layers"][li]
+        if variant == "parallel":
+            h = ref_rmsnorm(x, lw["ln1_g"], cfg.norm_eps)
+            attn = _ref_block_attn(cfg, lw, h, positions, lengths)
+            ffn = ref_gated_ffn(h, lw["wg"], lw["wu"], lw["wd"])
+            x = x + attn + ffn
+        elif variant == "serial":
+            h = ref_rmsnorm(x, lw["ln1_g"], cfg.norm_eps)
+            x = x + _ref_block_attn(cfg, lw, h, positions, lengths)
+            h2 = ref_rmsnorm(x, lw["ln2_g"], cfg.norm_eps)
+            x = x + ref_gated_ffn(h2, lw["wg"], lw["wu"], lw["wd"])
+        else:
+            raise ValueError(variant)
+
+    h = ref_rmsnorm(x, weights["final_g"], cfg.norm_eps)
+    return h @ weights["lm_head"]                            # [B, S, V]
+
+
+def _ref_block_attn(cfg, lw, h, positions, lengths):
+    b, s, _ = h.shape
+    q = (h @ lw["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (h @ lw["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (h @ lw["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    att = ref_attention_prefill(q, k, v, lengths)            # [B,S,nh,hd]
+    return att.reshape(b, s, cfg.n_heads * cfg.head_dim) @ lw["wo"]

@@ -1,0 +1,43 @@
+"""Pallas RMSNorm kernel.
+
+Small but on the decode hot path twice per layer (pre-norm) plus once at
+the head; written as a pallas kernel so the whole normalized row stays in
+VMEM and the reduction + scale fuse into one pass.  interpret=True (see
+flash_decode.py for why).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)           # [H]
+    ms = jnp.mean(x * x)
+    o_ref[...] = (x * jax.lax.rsqrt(ms + eps) * g_ref[...].astype(jnp.float32)
+                  ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x: jax.Array, gain: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last axis of x: [..., H] * rsqrt(mean(x^2)+eps) * g."""
+    orig_shape = x.shape
+    h = orig_shape[-1]
+    rows = 1
+    for d in orig_shape[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, h)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((None, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, h), x.dtype),
+        interpret=True,
+    )(x2, gain)
+    return out.reshape(orig_shape)

@@ -1,0 +1,431 @@
+"""L2: tensor-parallel transformer *segments* for the distributed engine.
+
+The rust coordinator (L3) owns every synchronization point, exactly like
+the paper's compute-module / oneCCL split.  The jax graph is therefore cut
+at the collective boundaries into *segments*, one AOT-compiled HLO per
+segment; all ranks run the same HLO on different weight shards:
+
+  embed            tokens -> hidden            (replicated; after the rank-0
+                                                token-ID broadcast of §2.1a)
+  parallel_block   one GPT-J/Falcon-style layer, attention + FFN fused
+                   -> ONE partial sum => ONE allreduce per layer (§2.2)
+  serial_attn /    one LLaMA-style layer as two segments -> TWO allreduces
+  serial_ffn       per layer (the baseline Fig. 2 compares against)
+  lm_head          hidden -> vocab-shard logits (feeds the local-top-k
+                   reduction of §2.1b)
+
+Residual adds happen rank-side in rust, fused into the allreduce epilogue
+(the zero-copy arena of §2.3), so each segment returns only its partial.
+
+Sharding: query/kv heads, FFN inner width and vocab are split across
+ranks; embedding, norms and activations are replicated.  A segment is
+rank-agnostic — rank identity lives entirely in the weight *values*.
+
+KV cache layout: [B, n_kv_local, max_seq, head_dim], device-resident; the
+decode segments take the cache as input and return the updated cache, so
+it never crosses the host boundary between steps.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, ShardConfig
+from .kernels.flash_decode import flash_decode
+from .kernels.rmsnorm import rmsnorm
+from .kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# Weights
+# ---------------------------------------------------------------------------
+
+def make_full_weights(cfg: ModelConfig, seed: int = 0) -> dict:
+    """Full (unsharded) weights, matching ref.ref_forward's layout."""
+    key = jax.random.PRNGKey(seed)
+    n_keys = 3 + cfg.n_layers * 9
+    keys = iter(jax.random.split(key, n_keys))
+
+    def init(shape, scale):
+        return (jax.random.normal(next(keys), shape, jnp.float32) * scale)
+
+    h, f, v = cfg.hidden, cfg.ffn, cfg.vocab
+    qd = cfg.n_heads * cfg.head_dim
+    kvd = cfg.n_kv_heads * cfg.head_dim
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append({
+            "ln1_g": 1.0 + 0.1 * init((h,), 1.0),
+            "ln2_g": 1.0 + 0.1 * init((h,), 1.0),
+            "wq": init((h, qd), h ** -0.5),
+            "wk": init((h, kvd), h ** -0.5),
+            "wv": init((h, kvd), h ** -0.5),
+            "wo": init((qd, h), qd ** -0.5),
+            "wg": init((h, f), h ** -0.5),
+            "wu": init((h, f), h ** -0.5),
+            "wd": init((f, h), f ** -0.5),
+        })
+    return {
+        "embedding": init((v, h), 1.0),
+        "layers": layers,
+        "final_g": 1.0 + 0.1 * init((h,), 1.0),
+        "lm_head": init((h, v), h ** -0.5),
+    }
+
+
+def shard_weights(cfg: ModelConfig, full: dict, world: int, rank: int) -> dict:
+    """Slice a rank's tensor-parallel shard out of the full weights.
+
+    Column-parallel: wq/wk/wv (by head), wg/wu (by ffn), lm_head (by vocab).
+    Row-parallel:    wo (by head), wd (by ffn) -> partial-sum outputs.
+    Replicated:      embedding, norm gains.
+    """
+    sc = cfg.shard(world)
+    qs = slice(rank * sc.q_dim, (rank + 1) * sc.q_dim)
+    kvs = slice(rank * sc.kv_dim, (rank + 1) * sc.kv_dim)
+    fs = slice(rank * sc.ffn_l, (rank + 1) * sc.ffn_l)
+    vs = slice(rank * sc.vocab_l, (rank + 1) * sc.vocab_l)
+    layers = []
+    for lw in full["layers"]:
+        layers.append({
+            "ln1_g": lw["ln1_g"],
+            "ln2_g": lw["ln2_g"],
+            "wq": lw["wq"][:, qs],
+            "wk": lw["wk"][:, kvs],
+            "wv": lw["wv"][:, kvs],
+            "wo": lw["wo"][qs, :],
+            "wg": lw["wg"][:, fs],
+            "wu": lw["wu"][:, fs],
+            "wd": lw["wd"][fs, :],
+        })
+    return {
+        "embedding": full["embedding"],
+        "layers": layers,
+        "final_g": full["final_g"],
+        "lm_head": full["lm_head"][:, vs],
+    }
+
+
+# Per-segment weight argument order.  rust/src/model mirrors this; keep the
+# two in sync via the manifest (aot.py writes it from these lists).
+PARALLEL_BLOCK_ARGS = ["ln1_g", "wq", "wk", "wv", "wo", "wg", "wu", "wd"]
+SERIAL_ATTN_ARGS = ["ln1_g", "wq", "wk", "wv", "wo"]
+SERIAL_FFN_ARGS = ["ln2_g", "wg", "wu", "wd"]
+
+
+# ---------------------------------------------------------------------------
+# Shared attention plumbing
+# ---------------------------------------------------------------------------
+
+def _norm(x, gain, eps, use_pallas):
+    """RMSNorm: pallas kernel (TPU-structured) or the XLA-fused oracle.
+
+    interpret-mode pallas lowers to per-row while-loops that XLA-CPU
+    executes ~35x slower than the fused jnp graph (EXPERIMENTS.md §Perf),
+    so perf-bearing CPU artifacts use the fused form; the pallas path is
+    kept for the tiny config (golden parity covers it) and real-TPU
+    targets.
+    """
+    if use_pallas:
+        return rmsnorm(x, gain, eps=eps)
+    return ref.ref_rmsnorm(x, gain, eps)
+
+
+def _qkv(sc: ShardConfig, h, wq, wk, wv):
+    """Project [B,S,H] -> per-shard q/k/v head tensors."""
+    b, s, _ = h.shape
+    cfg = sc.base
+    q = (h @ wq).reshape(b, s, sc.n_heads_l, cfg.head_dim)
+    k = (h @ wk).reshape(b, s, sc.n_kv_heads_l, cfg.head_dim)
+    v = (h @ wv).reshape(b, s, sc.n_kv_heads_l, cfg.head_dim)
+    return q, k, v
+
+
+def _attn_decode(sc: ShardConfig, h, k_cache, v_cache, pos, wq, wk, wv, wo,
+                 block_k: int, use_pallas: bool = True):
+    """Decode-step attention: append the new kv at `pos`, attend over the
+    cache with per-lane length pos+1, project with the row-parallel wo.
+
+    h: [B, 1, H]; caches [B, n_kv_l, T, hd]; pos [B] i32.
+    Returns (attn_partial [B,1,H], k_cache', v_cache').
+    """
+    cfg = sc.base
+    b = h.shape[0]
+    q, k, v = _qkv(sc, h, wq, wk, wv)
+    q = ref.apply_rope(q, pos[:, None], cfg.rope_theta)     # [B,1,nq_l,hd]
+    k = ref.apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    k_t = jnp.swapaxes(k, 1, 2)                             # [B,nkv_l,1,hd]
+    v_t = jnp.swapaxes(v, 1, 2)
+    upd = jax.vmap(
+        lambda c, n, p: jax.lax.dynamic_update_slice(c, n, (0, p, 0)))
+    k_cache = upd(k_cache, k_t, pos)
+    v_cache = upd(v_cache, v_t, pos)
+
+    group = sc.n_heads_l // sc.n_kv_heads_l
+    qg = q.reshape(b, sc.n_kv_heads_l, group, cfg.head_dim)
+    if use_pallas:
+        att = flash_decode(qg, k_cache, v_cache, pos + 1, block_k=block_k)
+    else:
+        # XLA-fused decode attention (same oracle pytest checks the
+        # pallas kernel against) — see _norm docstring for why.
+        att = ref.ref_flash_decode(qg, k_cache, v_cache, pos + 1)
+    att = att.reshape(b, 1, sc.q_dim)
+    return att @ wo, k_cache, v_cache
+
+
+def _attn_prefill(sc: ShardConfig, h, k_cache, v_cache, lane, length,
+                  wq, wk, wv, wo):
+    """Prefill attention for ONE lane: causal over S padded tokens, write
+    rows [0, S) of that lane's cache.
+
+    h: [1, S, H]; caches [B, n_kv_l, T, hd]; lane [1] i32; length [1] i32.
+    """
+    cfg = sc.base
+    s = h.shape[1]
+    q, k, v = _qkv(sc, h, wq, wk, wv)
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    q = ref.apply_rope(q, positions, cfg.rope_theta)
+    k = ref.apply_rope(k, positions, cfg.rope_theta)
+    att = ref.ref_attention_prefill(q, k, v, length)        # [1,S,nq_l,hd]
+
+    k_t = jnp.swapaxes(k, 1, 2)                             # [1,nkv_l,S,hd]
+    v_t = jnp.swapaxes(v, 1, 2)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_t, (lane[0], 0, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_t, (lane[0], 0, 0, 0))
+    att = att.reshape(1, s, sc.q_dim)
+    return att @ wo, k_cache, v_cache
+
+
+def _ffn(h, wg, wu, wd):
+    return (jax.nn.silu(h @ wg) * (h @ wu)) @ wd
+
+
+# ---------------------------------------------------------------------------
+# Segment builders.  Each returns a python fn with static shapes, ready for
+# jax.jit(...).lower(...).
+# ---------------------------------------------------------------------------
+
+def build_embed(cfg: ModelConfig):
+    """(tokens [B,S] i32, embedding [V,H]) -> x [B,S,H]."""
+    def fn(tokens, embedding):
+        return (embedding[tokens],)
+    return fn
+
+
+def build_parallel_block_decode(sc: ShardConfig, block_k: int = 128,
+                                use_pallas: bool = True):
+    """One parallel-block layer, decode step. ONE sync point (§2.2).
+
+    (x [B,1,H], k_cache, v_cache, pos [B],
+     ln1_g, wq, wk, wv, wo, wg, wu, wd)
+      -> (y_partial [B,1,H], k_cache', v_cache')
+    """
+    eps = sc.base.norm_eps
+
+    def fn(x, k_cache, v_cache, pos, ln1_g, wq, wk, wv, wo, wg, wu, wd):
+        h = _norm(x, ln1_g, eps, use_pallas)
+        attn, k_cache, v_cache = _attn_decode(
+            sc, h, k_cache, v_cache, pos, wq, wk, wv, wo, block_k,
+            use_pallas)
+        y = attn + _ffn(h, wg, wu, wd)
+        return y, k_cache, v_cache
+    return fn
+
+
+def build_serial_attn_decode(sc: ShardConfig, block_k: int = 128,
+                             use_pallas: bool = True):
+    """Attention half of a serial (LLaMA-style) layer, decode step.
+
+    (x, k_cache, v_cache, pos, ln1_g, wq, wk, wv, wo)
+      -> (attn_partial, k_cache', v_cache')
+    """
+    eps = sc.base.norm_eps
+
+    def fn(x, k_cache, v_cache, pos, ln1_g, wq, wk, wv, wo):
+        h = _norm(x, ln1_g, eps, use_pallas)
+        return _attn_decode(sc, h, k_cache, v_cache, pos, wq, wk, wv, wo,
+                            block_k, use_pallas)
+    return fn
+
+
+def build_serial_ffn_decode(sc: ShardConfig, use_pallas: bool = True):
+    """FFN half of a serial layer. (x, ln2_g, wg, wu, wd) -> (ffn_partial,)."""
+    eps = sc.base.norm_eps
+
+    def fn(x, ln2_g, wg, wu, wd):
+        h = _norm(x, ln2_g, eps, use_pallas)
+        return (_ffn(h, wg, wu, wd),)
+    return fn
+
+
+def build_parallel_block_prefill(sc: ShardConfig, use_pallas: bool = True):
+    """One parallel-block layer over an S-token padded prefix of one lane.
+
+    (x [1,S,H], k_cache [B,...], v_cache, lane [1], length [1],
+     ln1_g, wq, wk, wv, wo, wg, wu, wd)
+      -> (y_partial [1,S,H], k_cache', v_cache')
+    """
+    eps = sc.base.norm_eps
+
+    def fn(x, k_cache, v_cache, lane, length,
+           ln1_g, wq, wk, wv, wo, wg, wu, wd):
+        h = _norm(x, ln1_g, eps, use_pallas)
+        attn, k_cache, v_cache = _attn_prefill(
+            sc, h, k_cache, v_cache, lane, length, wq, wk, wv, wo)
+        y = attn + _ffn(h, wg, wu, wd)
+        return y, k_cache, v_cache
+    return fn
+
+
+def build_serial_attn_prefill(sc: ShardConfig, use_pallas: bool = True):
+    """(x, k_cache, v_cache, lane, length, ln1_g, wq, wk, wv, wo)
+    -> (attn_partial, k_cache', v_cache')."""
+    eps = sc.base.norm_eps
+
+    def fn(x, k_cache, v_cache, lane, length, ln1_g, wq, wk, wv, wo):
+        h = _norm(x, ln1_g, eps, use_pallas)
+        return _attn_prefill(sc, h, k_cache, v_cache, lane, length,
+                             wq, wk, wv, wo)
+    return fn
+
+
+def build_serial_ffn_prefill(sc: ShardConfig, use_pallas: bool = True):
+    """Same math as decode ffn, S-wide: (x [1,S,H], ln2_g, wg, wu, wd)."""
+    return build_serial_ffn_decode(sc, use_pallas)
+
+
+def build_lm_head(sc: ShardConfig, use_pallas: bool = True):
+    """(x [B,1,H], final_g [H], lm_head [H,V_l]) -> (logits [B,V_l],).
+
+    Vocab-parallel: each rank produces logits for its vocab shard only;
+    rust computes the local top-k and reduces k pairs (§2.1b).
+    """
+    eps = sc.base.norm_eps
+
+    def fn(x, final_g, lm_head):
+        h = _norm(x, final_g, eps, use_pallas)
+        return (h[:, 0, :] @ lm_head,)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Reference composition: run the sharded segments for all ranks in python,
+# reproducing exactly what the rust engine does (bcast ids, per-layer
+# allreduce of partials, residual adds, vocab-shard logits).  Used by the
+# pytest suite to prove segment math == ref_forward, and by aot.py to
+# produce golden outputs for the rust parity test.
+# ---------------------------------------------------------------------------
+
+def compose_prefill_decode(cfg: ModelConfig, full_weights: dict, world: int,
+                           variant: str, tokens, lengths, n_decode: int,
+                           bucket_s: int, block_k: int = 128):
+    """Simulate the distributed engine in python.
+
+    tokens: [B, S<=bucket_s] int32 padded prompt; lengths [B].
+    Returns (prefill_logits [B, V], decode_logits [n_decode, B, V],
+             greedy_tokens [n_decode, B]).
+    """
+    b = tokens.shape[0]
+    t = cfg.max_seq
+    shards = [shard_weights(cfg, full_weights, world, r) for r in range(world)]
+    sc = cfg.shard(world)
+
+    embed = build_embed(cfg)
+    if variant == "parallel":
+        pre = build_parallel_block_prefill(sc)
+        dec = build_parallel_block_decode(sc, block_k)
+    else:
+        pre_a = build_serial_attn_prefill(sc)
+        pre_f = build_serial_ffn_prefill(sc)
+        dec_a = build_serial_attn_decode(sc, block_k)
+        dec_f = build_serial_ffn_decode(sc)
+    head = build_lm_head(sc)
+
+    pad = jnp.zeros((b, bucket_s), jnp.int32).at[:, :tokens.shape[1]].set(tokens)
+    caches = [[
+        (jnp.zeros((b, sc.n_kv_heads_l, t, cfg.head_dim), jnp.float32),
+         jnp.zeros((b, sc.n_kv_heads_l, t, cfg.head_dim), jnp.float32))
+        for _ in range(cfg.n_layers)] for _ in range(world)]
+
+    def run_layers(xs, lane, length, prefill: bool, pos=None):
+        """xs: per-rank activations (replicated). Returns updated xs."""
+        for li in range(cfg.n_layers):
+            if variant == "parallel":
+                parts = []
+                for r in range(world):
+                    lw = shards[r]["layers"][li]
+                    kc, vc = caches[r][li]
+                    args = [lw[n] for n in PARALLEL_BLOCK_ARGS]
+                    if prefill:
+                        y, kc, vc = pre(xs[r], kc, vc, lane, length, *args)
+                    else:
+                        y, kc, vc = dec(xs[r], kc, vc, pos, *args)
+                    caches[r][li] = (kc, vc)
+                    parts.append(y)
+                y_sum = sum(parts)                      # the allreduce
+                xs = [x + y_sum for x in xs]            # rust-side residual
+            else:
+                parts = []
+                for r in range(world):
+                    lw = shards[r]["layers"][li]
+                    kc, vc = caches[r][li]
+                    args = [lw[n] for n in SERIAL_ATTN_ARGS]
+                    if prefill:
+                        a, kc, vc = pre_a(xs[r], kc, vc, lane, length, *args)
+                    else:
+                        a, kc, vc = dec_a(xs[r], kc, vc, pos, *args)
+                    caches[r][li] = (kc, vc)
+                    parts.append(a)
+                a_sum = sum(parts)                      # allreduce #1
+                xs = [x + a_sum for x in xs]
+                parts = []
+                for r in range(world):
+                    lw = shards[r]["layers"][li]
+                    args = [lw[n] for n in SERIAL_FFN_ARGS]
+                    fn_seg = pre_f if prefill else dec_f
+                    (f,) = fn_seg(xs[r], *args)
+                    parts.append(f)
+                f_sum = sum(parts)                      # allreduce #2
+                xs = [x + f_sum for x in xs]
+        return xs
+
+    def logits_of(xs_row):
+        """xs_row: per-rank [B,1,H] -> merged logits [B, V] (§2.1b gather)."""
+        locs = [head(xs_row[r], shards[r]["final_g"], shards[r]["lm_head"])[0]
+                for r in range(world)]
+        return jnp.concatenate(locs, axis=1)
+
+    # --- prefill, one lane at a time (matches the rust engine) ---
+    x_rows = [None] * b
+    for lane_i in range(b):
+        lane = jnp.array([lane_i], jnp.int32)
+        length = lengths[lane_i:lane_i + 1]
+        (x_full,) = embed(pad[lane_i:lane_i + 1], full_weights["embedding"])
+        xs = [x_full for _ in range(world)]
+        xs = run_layers(xs, lane, length, prefill=True)
+        # last valid hidden row of this lane
+        idx = lengths[lane_i] - 1
+        x_rows[lane_i] = [x[:, idx:idx + 1, :] for x in xs]
+
+    xs_row = [jnp.concatenate([x_rows[i][r] for i in range(b)], axis=0)
+              for r in range(world)]
+    prefill_logits = logits_of(xs_row)
+
+    # --- greedy decode ---
+    cur_len = lengths
+    decode_logits, greedy = [], []
+    next_tok = jnp.argmax(prefill_logits, axis=-1).astype(jnp.int32)
+    for _ in range(n_decode):
+        greedy.append(next_tok)
+        (x_emb,) = embed(next_tok[:, None], full_weights["embedding"])
+        xs = [x_emb for _ in range(world)]
+        xs = run_layers(xs, None, None, prefill=False, pos=cur_len)
+        lg = logits_of(xs)
+        decode_logits.append(lg)
+        next_tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        cur_len = cur_len + 1
+
+    return (prefill_logits, jnp.stack(decode_logits),
+            jnp.stack(greedy))

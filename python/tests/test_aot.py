@@ -1,0 +1,84 @@
+"""AOT pipeline checks: segments lower to *parseable* HLO text.
+
+The full `make artifacts` run is exercised end-to-end by the rust side;
+here we verify the interchange contract cheaply: lowering works, the text
+reparses through the same xla_client the rust crate's XLA version mirrors,
+and the manifest metadata agrees with the lowered program's shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model
+from compile.configs import CONFIGS
+
+
+def _segments(cfg_name, world, b, prefills):
+    cfg = CONFIGS[cfg_name]
+    return list(aot.segment_specs(cfg, world, b, prefills))
+
+
+class TestLowering:
+    def test_segment_inventory(self):
+        segs = _segments("tiny", 2, 1, [16])
+        kinds = sorted(meta["kind"] + ":" + meta["mode"]
+                       for _, _, _, meta in segs)
+        assert kinds == sorted([
+            "embed:decode", "parallel_block:decode", "serial_attn:decode",
+            "serial_ffn:decode", "lm_head:decode",
+            "embed:prefill", "parallel_block:prefill", "serial_attn:prefill",
+            "serial_ffn:prefill",
+        ])
+
+    def test_prefill_bucket_larger_than_max_seq_skipped(self):
+        segs = _segments("tiny", 1, 1, [16, 4096])
+        names = [sid for sid, *_ in segs]
+        assert not any("s4096" in n for n in names)
+
+    @pytest.mark.parametrize("kind", ["parallel_decode", "lm_head"])
+    def test_hlo_text_roundtrip(self, kind):
+        """Lower -> text -> reparse: the exact contract rust relies on."""
+        segs = _segments("tiny", 2, 1, [])
+        seg = next(s for s in segs if kind in s[0])
+        sid, fn, args, meta = seg
+        text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+        assert "ENTRY" in text
+        reparsed = xc._xla.hlo_module_from_text(text)
+        assert reparsed is not None
+
+    def test_lowered_shapes_match_manifest_meta(self):
+        segs = _segments("tiny", 2, 2, [])
+        sid, fn, args, meta = next(
+            s for s in segs if "parallel_decode" in s[0])
+        out = jax.eval_shape(fn, *args)
+        assert list(out[0].shape) == meta["outputs"][0]["shape"]
+        assert list(out[1].shape) == meta["outputs"][1]["shape"]
+        for spec, arg_meta in zip(args, meta["inputs"]):
+            assert list(spec.shape) == arg_meta["shape"]
+
+    def test_weight_arg_order_stable(self):
+        # rust/src/model mirrors these lists; a reorder is a silent
+        # wrong-numerics bug, so pin them.
+        assert model.PARALLEL_BLOCK_ARGS == [
+            "ln1_g", "wq", "wk", "wv", "wo", "wg", "wu", "wd"]
+        assert model.SERIAL_ATTN_ARGS == ["ln1_g", "wq", "wk", "wv", "wo"]
+        assert model.SERIAL_FFN_ARGS == ["ln2_g", "wg", "wu", "wd"]
+
+
+class TestGoldenSemantics:
+    def test_greedy_chain(self):
+        """golden greedy[i+1] is argmax of golden decode_logits[i]."""
+        import numpy as np
+        cfg = CONFIGS["tiny"]
+        full = model.make_full_weights(cfg, seed=0)
+        tokens = jnp.array([[1, 2, 3, 0]], jnp.int32)
+        lengths = jnp.array([3], jnp.int32)
+        pre, dec, greedy = model.compose_prefill_decode(
+            cfg, full, 2, "parallel", tokens, lengths, n_decode=3,
+            bucket_s=16)
+        greedy = np.asarray(greedy)
+        assert greedy[0, 0] == int(jnp.argmax(pre[0]))
+        assert greedy[1, 0] == int(jnp.argmax(dec[0, 0]))
+        assert greedy[2, 0] == int(jnp.argmax(dec[1, 0]))

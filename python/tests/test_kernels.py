@@ -1,0 +1,176 @@
+"""L1 kernel correctness: pallas kernels vs the pure-jnp oracles in ref.py.
+
+The hypothesis sweeps are the core correctness signal for the kernels:
+every (shape, dtype, block size, length pattern) draw must match the
+oracle to tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.flash_decode import flash_decode, vmem_bytes, mxu_flops
+from compile.kernels.rmsnorm import rmsnorm
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tolerance(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=2e-5)
+
+
+class TestFlashDecode:
+    def _check(self, b, nkv, group, t, hd, block_k, lengths, dtype=jnp.float32,
+               seed=0):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = _rand(ks[0], (b, nkv, group, hd), dtype)
+        k = _rand(ks[1], (b, nkv, t, hd), dtype)
+        v = _rand(ks[2], (b, nkv, t, hd), dtype)
+        lens = jnp.asarray(lengths, jnp.int32)
+        out = flash_decode(q, k, v, lens, block_k=block_k)
+        expect = ref.ref_flash_decode(q, k, v, lens)
+        assert out.shape == (b, nkv, group, hd)
+        assert out.dtype == dtype
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expect, np.float32),
+            **_tolerance(dtype))
+
+    def test_basic(self):
+        self._check(2, 2, 4, 64, 16, 16, [64, 33])
+
+    def test_single_block(self):
+        self._check(1, 1, 1, 8, 8, 8, [8])
+
+    def test_block_larger_than_t(self):
+        self._check(1, 2, 2, 16, 8, 128, [16])
+
+    def test_block_not_dividing_t(self):
+        # wrapper shrinks block_k to a divisor of T; no OOB garbage
+        self._check(2, 1, 2, 40, 16, 16, [40, 17])
+
+    def test_length_zero_lane_returns_zeros(self):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = _rand(ks[0], (2, 1, 2, 8), jnp.float32)
+        k = _rand(ks[1], (2, 1, 32, 8), jnp.float32)
+        v = _rand(ks[2], (2, 1, 32, 8), jnp.float32)
+        out = flash_decode(q, k, v, jnp.array([0, 16], jnp.int32), block_k=8)
+        np.testing.assert_array_equal(np.asarray(out[0]), 0.0)
+        assert np.abs(np.asarray(out[1])).sum() > 0
+
+    def test_length_one(self):
+        # attention over a single kv entry == that entry's value row
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = _rand(ks[0], (1, 1, 3, 8), jnp.float32)
+        k = _rand(ks[1], (1, 1, 16, 8), jnp.float32)
+        v = _rand(ks[2], (1, 1, 16, 8), jnp.float32)
+        out = flash_decode(q, k, v, jnp.array([1], jnp.int32), block_k=4)
+        expect = jnp.broadcast_to(v[0, 0, 0], (3, 8))
+        np.testing.assert_allclose(np.asarray(out[0, 0]), np.asarray(expect),
+                                   atol=1e-6)
+
+    def test_gqa_matches_mha_with_repeated_kv(self):
+        # GQA(group=2) over nkv heads == MHA over repeated kv heads
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        b, nkv, group, t, hd = 1, 2, 2, 32, 16
+        q = _rand(ks[0], (b, nkv, group, hd), jnp.float32)
+        k = _rand(ks[1], (b, nkv, t, hd), jnp.float32)
+        v = _rand(ks[2], (b, nkv, t, hd), jnp.float32)
+        lens = jnp.array([20], jnp.int32)
+        out = flash_decode(q, k, v, lens, block_k=8)
+        q_mha = q.reshape(b, nkv * group, 1, hd)
+        k_mha = jnp.repeat(k, group, axis=1)
+        v_mha = jnp.repeat(v, group, axis=1)
+        out_mha = flash_decode(q_mha, k_mha, v_mha, lens, block_k=8)
+        np.testing.assert_allclose(
+            np.asarray(out).reshape(-1), np.asarray(out_mha).reshape(-1),
+            atol=1e-5, rtol=1e-5)
+
+    def test_softmax_invariance_to_key_shift(self):
+        # adding a constant vector to q leaves softmax weights' sum at 1:
+        # output must stay a convex combination of value rows (bounded)
+        ks = jax.random.split(jax.random.PRNGKey(4), 3)
+        q = _rand(ks[0], (1, 1, 1, 8), jnp.float32) * 50.0  # large logits
+        k = _rand(ks[1], (1, 1, 64, 8), jnp.float32)
+        v = jnp.ones((1, 1, 64, 8), jnp.float32)
+        out = flash_decode(q, k, v, jnp.array([64], jnp.int32), block_k=16)
+        np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-5)
+
+    def test_bfloat16(self):
+        self._check(1, 2, 2, 32, 16, 16, [32, ], dtype=jnp.bfloat16)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        b=st.integers(1, 4),
+        nkv=st.sampled_from([1, 2, 4]),
+        group=st.sampled_from([1, 2, 4]),
+        t_blocks=st.integers(1, 6),
+        hd=st.sampled_from([4, 8, 16, 32]),
+        block_k=st.sampled_from([4, 8, 16, 64]),
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+        data=st.data(),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, b, nkv, group, t_blocks, hd, block_k,
+                              dtype, data, seed):
+        t = t_blocks * 8
+        lengths = data.draw(st.lists(
+            st.integers(0, t), min_size=b, max_size=b))
+        self._check(b, nkv, group, t, hd, block_k, lengths, dtype, seed)
+
+    def test_vmem_estimate_positive_and_monotone(self):
+        a = vmem_bytes(1024, 128, 4, 128)
+        bb = vmem_bytes(1024, 128, 4, 256)
+        assert 0 < a < bb
+        assert mxu_flops(1024, 128, 4) == 2 * 4 * 1024 * 128 * 2
+
+
+class TestRmsNorm:
+    def _check(self, shape, dtype=jnp.float32, eps=1e-5, seed=0):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+        x = _rand(ks[0], shape, dtype)
+        g = _rand(ks[1], shape[-1:], dtype)
+        out = rmsnorm(x, g, eps=eps)
+        expect = ref.ref_rmsnorm(x, g, eps)
+        assert out.shape == x.shape and out.dtype == dtype
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expect, np.float32),
+            **_tolerance(dtype))
+
+    def test_2d(self):
+        self._check((4, 64))
+
+    def test_3d(self):
+        self._check((2, 3, 32))
+
+    def test_unit_gain_unit_variance(self):
+        x = jnp.full((1, 16), 3.0)
+        out = rmsnorm(x, jnp.ones((16,)))
+        np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        rows=st.integers(1, 8),
+        h=st.sampled_from([8, 16, 64, 256]),
+        dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, rows, h, dtype, seed):
+        self._check((rows, h), dtype=dtype, seed=seed)
+
+    def test_scale_equivariance(self):
+        # rmsnorm(a*x) == rmsnorm(x) for a > 0 (up to eps)
+        x = _rand(jax.random.PRNGKey(7), (2, 64), jnp.float32)
+        g = jnp.ones((64,))
+        a = rmsnorm(x, g, eps=1e-12)
+        b = rmsnorm(x * 7.5, g, eps=1e-12)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)

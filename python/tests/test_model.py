@@ -1,0 +1,218 @@
+"""L2 correctness: TP-sharded segments compose to the unsharded reference.
+
+These tests simulate the rust engine's exact orchestration in python
+(model.compose_prefill_decode) and check it against ref.ref_forward:
+  * shard-sum == full model for both block variants and several worlds,
+  * KV-cache consistency: prefill-then-decode == full forward over the
+    extended sequence,
+  * per-rank weight shards partition the full weights exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import CONFIGS, TINY
+from compile.kernels import ref
+
+CFG = TINY
+TOKENS = jnp.array([[5, 17, 42, 101, 7, 0, 0, 0],
+                    [250, 3, 9, 12, 77, 130, 200, 11]], jnp.int32)
+LENGTHS = jnp.array([5, 8], jnp.int32)
+
+
+@pytest.fixture(scope="module")
+def full_weights():
+    return model.make_full_weights(CFG, seed=0)
+
+
+class TestShardWeights:
+    @pytest.mark.parametrize("world", [1, 2, 4, 8])
+    def test_column_shards_partition(self, full_weights, world):
+        shards = [model.shard_weights(CFG, full_weights, world, r)
+                  for r in range(world)]
+        wq_cat = np.concatenate(
+            [np.asarray(s["layers"][0]["wq"]) for s in shards], axis=1)
+        np.testing.assert_array_equal(
+            wq_cat, np.asarray(full_weights["layers"][0]["wq"]))
+        lm_cat = np.concatenate(
+            [np.asarray(s["lm_head"]) for s in shards], axis=1)
+        np.testing.assert_array_equal(lm_cat,
+                                      np.asarray(full_weights["lm_head"]))
+
+    @pytest.mark.parametrize("world", [2, 4])
+    def test_row_shards_partition(self, full_weights, world):
+        shards = [model.shard_weights(CFG, full_weights, world, r)
+                  for r in range(world)]
+        wo_cat = np.concatenate(
+            [np.asarray(s["layers"][1]["wo"]) for s in shards], axis=0)
+        np.testing.assert_array_equal(
+            wo_cat, np.asarray(full_weights["layers"][1]["wo"]))
+
+    def test_replicated_parts_identical(self, full_weights):
+        shards = [model.shard_weights(CFG, full_weights, 2, r)
+                  for r in range(2)]
+        np.testing.assert_array_equal(np.asarray(shards[0]["embedding"]),
+                                      np.asarray(shards[1]["embedding"]))
+        np.testing.assert_array_equal(
+            np.asarray(shards[0]["layers"][0]["ln1_g"]),
+            np.asarray(shards[1]["layers"][0]["ln1_g"]))
+
+    def test_row_parallel_matmul_partial_sums(self, full_weights):
+        # sum_r (x_r @ wo_r) == x @ wo  — the identity behind the
+        # partial-sum allreduce
+        world = 4
+        x = jax.random.normal(jax.random.PRNGKey(5),
+                              (3, CFG.n_heads * CFG.head_dim))
+        full = x @ full_weights["layers"][0]["wo"]
+        sc = CFG.shard(world)
+        acc = 0
+        for r in range(world):
+            s = model.shard_weights(CFG, full_weights, world, r)
+            xs = x[:, r * sc.q_dim:(r + 1) * sc.q_dim]
+            acc = acc + xs @ s["layers"][0]["wo"]
+        np.testing.assert_allclose(np.asarray(acc), np.asarray(full),
+                                   atol=1e-5, rtol=1e-5)
+
+
+class TestComposition:
+    @pytest.mark.parametrize("variant", ["parallel", "serial"])
+    @pytest.mark.parametrize("world", [1, 2, 4])
+    def test_prefill_matches_reference(self, full_weights, variant, world):
+        pre, _, _ = model.compose_prefill_decode(
+            CFG, full_weights, world, variant, TOKENS, LENGTHS,
+            n_decode=1, bucket_s=16)
+        ref_lg = ref.ref_forward(CFG, full_weights, TOKENS, LENGTHS, variant)
+        last = ref_lg[jnp.arange(2), LENGTHS - 1, :]
+        np.testing.assert_allclose(np.asarray(pre), np.asarray(last),
+                                   atol=2e-3, rtol=2e-3)
+
+    @pytest.mark.parametrize("variant", ["parallel", "serial"])
+    def test_decode_matches_full_forward(self, full_weights, variant):
+        """KV-cache path == re-running the full model on the longer seq."""
+        n_decode = 4
+        pre, dec_logits, greedy = model.compose_prefill_decode(
+            CFG, full_weights, 2, variant, TOKENS, LENGTHS,
+            n_decode=n_decode, bucket_s=16)
+        greedy = np.asarray(greedy)                      # [n, B]
+        b = TOKENS.shape[0]
+        for lane in range(b):
+            n0 = int(LENGTHS[lane])
+            seq = list(np.asarray(TOKENS[lane, :n0]))
+            for step in range(n_decode - 1):
+                seq_t = jnp.asarray(seq + [int(greedy[step, lane])],
+                                    jnp.int32)[None, :]
+                lens = jnp.array([seq_t.shape[1]], jnp.int32)
+                lg = ref.ref_forward(CFG, full_weights, seq_t, lens, variant)
+                expect = lg[0, -1, :]
+                got = dec_logits[step, lane]
+                np.testing.assert_allclose(np.asarray(got),
+                                           np.asarray(expect),
+                                           atol=5e-3, rtol=5e-3)
+                seq.append(int(greedy[step, lane]))
+
+    @pytest.mark.parametrize("variant", ["parallel", "serial"])
+    def test_world_invariance(self, full_weights, variant):
+        """Greedy continuation is identical for world 1, 2 and 4."""
+        outs = []
+        for world in (1, 2, 4):
+            _, _, greedy = model.compose_prefill_decode(
+                CFG, full_weights, world, variant, TOKENS, LENGTHS,
+                n_decode=4, bucket_s=16)
+            outs.append(np.asarray(greedy))
+        np.testing.assert_array_equal(outs[0], outs[1])
+        np.testing.assert_array_equal(outs[0], outs[2])
+
+    def test_variants_differ(self, full_weights):
+        """Parallel and serial blocks are genuinely different models."""
+        a = ref.ref_forward(CFG, full_weights, TOKENS, LENGTHS, "parallel")
+        b = ref.ref_forward(CFG, full_weights, TOKENS, LENGTHS, "serial")
+        assert np.abs(np.asarray(a) - np.asarray(b)).max() > 1e-3
+
+
+class TestSegments:
+    def test_embed_gathers_rows(self, full_weights):
+        fn = model.build_embed(CFG)
+        toks = jnp.array([[3, 9]], jnp.int32)
+        (x,) = fn(toks, full_weights["embedding"])
+        np.testing.assert_array_equal(
+            np.asarray(x[0, 0]), np.asarray(full_weights["embedding"][3]))
+        np.testing.assert_array_equal(
+            np.asarray(x[0, 1]), np.asarray(full_weights["embedding"][9]))
+
+    def test_lm_head_shards_concat_to_full(self, full_weights):
+        world = 2
+        sc = CFG.shard(world)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 1, CFG.hidden))
+        fn = model.build_lm_head(sc)
+        parts = []
+        for r in range(world):
+            s = model.shard_weights(CFG, full_weights, world, r)
+            (lg,) = fn(x, s["final_g"], s["lm_head"])
+            assert lg.shape == (2, sc.vocab_l)
+            parts.append(lg)
+        merged = jnp.concatenate(parts, axis=1)
+        h = ref.ref_rmsnorm(x, full_weights["final_g"], CFG.norm_eps)
+        expect = h[:, 0, :] @ full_weights["lm_head"]
+        np.testing.assert_allclose(np.asarray(merged), np.asarray(expect),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_decode_segment_updates_only_pos_row(self, full_weights):
+        """The kv cache rows other than `pos` must be untouched."""
+        sc = CFG.shard(2)
+        s = model.shard_weights(CFG, full_weights, 2, 0)
+        lw = s["layers"][0]
+        fn = model.build_parallel_block_decode(sc, block_k=16)
+        b, t = 2, CFG.max_seq
+        kc = jnp.arange(b * sc.n_kv_heads_l * t * CFG.head_dim,
+                        dtype=jnp.float32).reshape(
+            b, sc.n_kv_heads_l, t, CFG.head_dim)
+        vc = kc + 0.5
+        x = jax.random.normal(jax.random.PRNGKey(2), (b, 1, CFG.hidden))
+        pos = jnp.array([3, 7], jnp.int32)
+        args = [lw[n] for n in model.PARALLEL_BLOCK_ARGS]
+        _, kc2, vc2 = fn(x, kc, vc, pos, *args)
+        for lane, p in enumerate([3, 7]):
+            before = np.asarray(kc[lane])
+            after = np.asarray(kc2[lane])
+            mask = np.ones(t, bool)
+            mask[p] = False
+            np.testing.assert_array_equal(after[:, mask, :],
+                                          before[:, mask, :])
+            assert np.abs(after[:, p, :] - before[:, p, :]).max() > 0
+
+    def test_prefill_segment_touches_only_its_lane(self, full_weights):
+        sc = CFG.shard(2)
+        s = model.shard_weights(CFG, full_weights, 2, 0)
+        lw = s["layers"][0]
+        fn = model.build_parallel_block_prefill(sc)
+        b, t, bs = 2, CFG.max_seq, 16
+        kc = jnp.ones((b, sc.n_kv_heads_l, t, CFG.head_dim), jnp.float32)
+        vc = kc * 2
+        x = jax.random.normal(jax.random.PRNGKey(3), (1, bs, CFG.hidden))
+        args = [lw[n] for n in model.PARALLEL_BLOCK_ARGS]
+        _, kc2, _ = fn(x, kc, vc, jnp.array([1], jnp.int32),
+                       jnp.array([5], jnp.int32), *args)
+        np.testing.assert_array_equal(np.asarray(kc2[0]), np.asarray(kc[0]))
+        assert np.abs(np.asarray(kc2[1][:, :bs, :]) - 1.0).max() > 0
+        np.testing.assert_array_equal(np.asarray(kc2[1][:, bs:, :]),
+                                      np.asarray(kc[1][:, bs:, :]))
+
+
+class TestConfigs:
+    def test_param_counts(self):
+        assert 150e6 < CONFIGS["small"].params() < 200e6
+        assert 350e6 < CONFIGS["medium"].params() < 450e6
+
+    @pytest.mark.parametrize("name", ["tiny", "small", "medium"])
+    @pytest.mark.parametrize("world", [1, 2, 4, 8])
+    def test_all_presets_shard_all_worlds(self, name, world):
+        sc = CONFIGS[name].shard(world)
+        assert sc.n_heads_l * world == CONFIGS[name].n_heads
+        assert sc.vocab_l * world == CONFIGS[name].vocab
+
+    def test_invalid_world_rejected(self):
+        with pytest.raises(AssertionError):
+            CONFIGS["tiny"].shard(3)

@@ -1,0 +1,166 @@
+//! E6 (supplementary) — collective microbenchmarks of the rccl
+//! substrate: allreduce / broadcast / allgather / gather latency vs
+//! world size and payload, on the in-process transport.
+//!
+//! These calibrate the α/β wire model's *software* floor and sanity-check
+//! that collective cost scales the way the algorithms promise
+//! (ring: ∝ (W−1)/W·n; tree bcast: ∝ ⌈log₂W⌉·n).
+//!
+//! Run: `cargo bench --bench ccl_micro [-- --quick]`
+
+use std::sync::Arc;
+
+use xeonserve::benchkit::{self, CaseResult};
+use xeonserve::ccl::{CommGroup, Communicator, ReduceOp};
+use xeonserve::metrics::LatencyStats;
+
+fn on_group<R: Send + 'static>(
+    world: usize,
+    capacity: usize,
+    f: impl Fn(Communicator) -> R + Send + Sync + 'static,
+) -> Vec<R> {
+    let group = CommGroup::new_inproc(world, capacity);
+    let f = Arc::new(f);
+    group
+        .into_communicators()
+        .into_iter()
+        .map(|c| {
+            let f = f.clone();
+            std::thread::spawn(move || f(c))
+        })
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|h| h.join().unwrap())
+        .collect()
+}
+
+fn rank0_stats(outs: Vec<LatencyStats>) -> LatencyStats {
+    outs.into_iter().next().unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let iters = benchkit::iters(300);
+
+    for world in [2usize, 4, 8] {
+        let mut results = Vec::new();
+        for elems in [1024usize, 65536] {
+            // ring allreduce (staged)
+            let outs = on_group(world, elems, move |c| {
+                let mut stats = LatencyStats::default();
+                let mut buf = vec![1.0f32; elems];
+                for _ in 0..iters {
+                    let t0 = std::time::Instant::now();
+                    c.allreduce_staged(&mut buf, ReduceOp::Sum).unwrap();
+                    if c.rank() == 0 {
+                        stats.record(t0.elapsed());
+                    }
+                }
+                stats
+            });
+            results.push(CaseResult::from_stats(
+                &format!("ring_allreduce_{}KiB", elems * 4 / 1024),
+                &mut rank0_stats(outs),
+            ));
+
+            // tree broadcast
+            let outs = on_group(world, elems, move |c| {
+                let mut stats = LatencyStats::default();
+                for _ in 0..iters {
+                    let mut buf = if c.rank() == 0 {
+                        vec![7u8; elems * 4]
+                    } else {
+                        Vec::new()
+                    };
+                    let t0 = std::time::Instant::now();
+                    c.broadcast(&mut buf, 0).unwrap();
+                    if c.rank() == 0 {
+                        stats.record(t0.elapsed());
+                    }
+                }
+                stats
+            });
+            results.push(CaseResult::from_stats(
+                &format!("tree_bcast_{}KiB", elems * 4 / 1024),
+                &mut rank0_stats(outs),
+            ));
+
+            // ring allgather
+            let outs = on_group(world, elems * world, move |c| {
+                let mut stats = LatencyStats::default();
+                let local = vec![c.rank() as f32; elems];
+                let mut out = vec![0.0f32; elems * c.world()];
+                for _ in 0..iters {
+                    let t0 = std::time::Instant::now();
+                    c.allgather(&local, &mut out).unwrap();
+                    if c.rank() == 0 {
+                        stats.record(t0.elapsed());
+                    }
+                }
+                stats
+            });
+            results.push(CaseResult::from_stats(
+                &format!("ring_allgather_{}KiB", elems * 4 / 1024),
+                &mut rank0_stats(outs),
+            ));
+        }
+
+        // design-choice ablation: direct vs ring allreduce crossover
+        // (the auto-selection threshold in ccl::group)
+        for elems in [256usize, 4096, 65536] {
+            let outs = on_group(world, elems, move |c| {
+                let mut stats = LatencyStats::default();
+                let mut buf = vec![1.0f32; elems];
+                for _ in 0..iters {
+                    let t0 = std::time::Instant::now();
+                    c.allreduce_direct(&mut buf, ReduceOp::Sum).unwrap();
+                    if c.rank() == 0 {
+                        stats.record(t0.elapsed());
+                    }
+                }
+                stats
+            });
+            results.push(CaseResult::from_stats(
+                &format!("direct_allreduce_{}KiB", elems * 4 / 1024),
+                &mut rank0_stats(outs),
+            ));
+            let outs = on_group(world, elems, move |c| {
+                let mut stats = LatencyStats::default();
+                let mut buf = vec![1.0f32; elems];
+                for _ in 0..iters {
+                    let t0 = std::time::Instant::now();
+                    c.allreduce_ring(&mut buf, ReduceOp::Sum).unwrap();
+                    if c.rank() == 0 {
+                        stats.record(t0.elapsed());
+                    }
+                }
+                stats
+            });
+            results.push(CaseResult::from_stats(
+                &format!("ring_only_allreduce_{}KiB", elems * 4 / 1024),
+                &mut rank0_stats(outs),
+            ));
+        }
+
+        // top-k pair gather (the §2.1b payload: 40 pairs = 320 B)
+        let outs = on_group(world, 64, move |c| {
+            let mut stats = LatencyStats::default();
+            let payload = vec![0xabu8; 320];
+            for _ in 0..iters {
+                let t0 = std::time::Instant::now();
+                c.gather(&payload, 0).unwrap();
+                if c.rank() == 0 {
+                    stats.record(t0.elapsed());
+                }
+            }
+            stats
+        });
+        results.push(CaseResult::from_stats("gather_topk_320B",
+                                            &mut rank0_stats(outs)));
+
+        benchkit::report(
+            &format!("E6 rccl collective microbench — world={world}"),
+            &results,
+        );
+    }
+    Ok(())
+}

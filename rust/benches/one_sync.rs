@@ -1,0 +1,67 @@
+//! E3 — Figure 2 / §2.2 ablation: one-time synchronization per layer.
+//!
+//! The parallel block (GPT-J/Falcon-style attention ∥ FFN) compiles to
+//! ONE fused segment → one allreduce per decoder layer; the serial
+//! (LLaMA-style) block needs two.  We measure both variants over the
+//! same workload and report per-token latency, allreduce count per token
+//! (from the ccl instrumentation — must be exactly L vs 2·L) and the
+//! simulated cross-socket communication share.
+//!
+//! Note: the two variants are *different models* (the paper's point is
+//! that for architectures with parallel blocks you can exploit the
+//! structure); the comparison isolates the synchronization schedule at
+//! equal parameter count and equal per-layer compute.
+//!
+//! Run: `cargo bench --bench one_sync [-- --quick]`
+
+use xeonserve::benchkit::{self, CaseResult};
+use xeonserve::config::{EngineConfig, Variant};
+use xeonserve::engine::Engine;
+
+fn run_case(model: &str, world: usize, variant: Variant, steps: usize)
+            -> anyhow::Result<CaseResult> {
+    let cfg = EngineConfig {
+        model: model.into(),
+        variant,
+        world,
+        batch: 1,
+        ..Default::default()
+    };
+    let mut engine = Engine::new(cfg)?;
+    let n_layers = engine.preset().n_layers;
+    engine.enqueue(vec![7, 8, 9, 10], steps);
+    let before = engine.comm_stats();
+    engine.run_to_completion()?;
+    let delta = engine.comm_stats().since(&before);
+
+    let m = &mut engine.metrics;
+    let toks = m.decode_wall.count().max(1) as u64;
+    // subtract the prefill round's allreduces (layers * syncs, 1 prefill)
+    let prefill_ars = (n_layers * variant.syncs_per_layer()) as u64;
+    let ars_per_tok =
+        (delta.allreduces.saturating_sub(prefill_ars)) as f64 / toks as f64;
+    let sim_ms = m.decode_sim.mean_us() / 1e3;
+    Ok(CaseResult::from_stats(&format!("{variant}"), &mut m.decode_wall)
+        .with("allreduce_per_tok", format!("{ars_per_tok:.1}"))
+        .with("expected", n_layers * variant.syncs_per_layer())
+        .with("sim_ms_tok", format!("{sim_ms:.3}")))
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps = benchkit::iters(16);
+    for (model, world) in [("tiny", 4), ("small", 4)] {
+        let mut results = Vec::new();
+        for variant in [Variant::Parallel, Variant::Serial] {
+            eprintln!("running {model} w{world} {variant}...");
+            results.push(run_case(model, world, variant, steps)?);
+        }
+        benchkit::report(
+            &format!(
+                "E3 §2.2 one-time synchronization — {model}, world={world} \
+                 (Fig. 2: 1 vs 2 allreduces/layer)"
+            ),
+            &results,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! E2 — Figure 1 / §2.1 ablation: minimize synchronization.
+//!
+//! Four engine configurations over the same workload:
+//!   opt        — token-ID broadcast + local-top-k reduce (the paper)
+//!   ids_only   — token-ID broadcast, full-logit allgather
+//!   topk_only  — embedding-value broadcast, local-top-k reduce
+//!   naive      — embedding-value broadcast + full-logit allgather
+//!
+//! Reported per decode step: wall latency, bytes on the (virtual) wire,
+//! and the simulated cross-socket communication time.  The paper's
+//! qualitative claim: `opt` moves orders of magnitude fewer bytes at the
+//! round boundaries and scales better with world size.
+//!
+//! Run: `cargo bench --bench sync_minimize [-- --quick]`
+
+use xeonserve::benchkit::{self, CaseResult};
+use xeonserve::config::{EngineConfig, OptFlags, Variant};
+use xeonserve::engine::Engine;
+
+fn run_case(name: &str, model: &str, world: usize, opt: OptFlags,
+            steps: usize) -> anyhow::Result<CaseResult> {
+    let cfg = EngineConfig {
+        model: model.into(),
+        variant: Variant::Parallel,
+        world,
+        batch: 1,
+        opt,
+        ..Default::default()
+    };
+    let mut engine = Engine::new(cfg)?;
+    engine.enqueue(vec![1, 2, 3, 4, 5, 6], steps);
+    let before = engine.comm_stats();
+    engine.run_to_completion()?;
+    let delta = engine.comm_stats().since(&before);
+
+    let m = &mut engine.metrics;
+    let n = m.decode_wall.count().max(1) as u64;
+    let sim_ms = m.decode_sim.mean_us() / 1e3;
+    Ok(CaseResult::from_stats(name, &mut m.decode_wall)
+        .with("wire_B_per_tok", delta.wire_bytes / n)
+        .with("bcast", if opt.broadcast_ids { "ids" } else { "embed" })
+        .with("tail", if opt.local_topk { "topk" } else { "allgather" })
+        .with("sim_ms_tok", format!("{sim_ms:.3}")))
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps = benchkit::iters(16);
+    for (model, world) in [("tiny", 4), ("small", 4)] {
+        let cases = [
+            ("opt", OptFlags { broadcast_ids: true, local_topk: true,
+                               zero_copy: true }),
+            ("ids_only", OptFlags { broadcast_ids: true, local_topk: false,
+                                    zero_copy: true }),
+            ("topk_only", OptFlags { broadcast_ids: false, local_topk: true,
+                                     zero_copy: true }),
+            ("naive", OptFlags { broadcast_ids: false, local_topk: false,
+                                 zero_copy: true }),
+        ];
+        let mut results = Vec::new();
+        for (name, opt) in cases {
+            eprintln!("running {model} w{world} {name}...");
+            results.push(run_case(name, model, world, opt, steps)?);
+        }
+        let bytes = |n: &str| {
+            results
+                .iter()
+                .find(|r| r.name == n)
+                .and_then(|r| {
+                    r.extra
+                        .iter()
+                        .find(|(k, _)| k == "wire_B_per_tok")
+                        .and_then(|(_, v)| v.parse::<f64>().ok())
+                })
+                .unwrap_or(0.0)
+        };
+        let ratio = bytes("naive") / bytes("opt").max(1.0);
+        benchkit::report(
+            &format!(
+                "E2 §2.1 sync minimization — {model}, world={world} \
+                 (Fig. 1: bcast ids + local top-k vs naive)"
+            ),
+            &results,
+        );
+        println!("round-boundary traffic: naive/opt = {ratio:.1}x");
+    }
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! E1 — the paper's §3 headline: time per output token, and its scaling
+//! with tensor-parallel world size (the paper: Qwen-72B, 4 sockets,
+//! input 512, batch 1 → 140 ms/token).
+//!
+//! We sweep (model preset × world size) at batch 1 and report both the
+//! wall-clock per-token latency on this 1-core testbed and the
+//! simulated-cluster latency (max-over-ranks compute + α/β wire model —
+//! DESIGN.md §4).  The paper's qualitative claim to reproduce: per-token
+//! latency *drops* as sockets are added at fixed model size, and stays
+//! under the ~200 ms/token human-reading bar.
+//!
+//! Run: `cargo bench --bench token_latency [-- --quick]`
+
+use xeonserve::benchkit::{self, CaseResult};
+use xeonserve::config::{EngineConfig, Manifest, Variant};
+use xeonserve::engine::Engine;
+
+fn bench_case(model: &str, world: usize, steps: usize, prompt_len: usize)
+              -> anyhow::Result<CaseResult> {
+    let cfg = EngineConfig {
+        model: model.into(),
+        variant: Variant::Parallel,
+        world,
+        batch: 1,
+        ..Default::default()
+    };
+    let mut engine = Engine::new(cfg)?;
+    let prompt: Vec<i32> = (1..=prompt_len as i32).collect();
+    engine.enqueue(prompt, steps);
+    let t0 = std::time::Instant::now();
+    engine.run_to_completion()?;
+    let span = t0.elapsed();
+
+    let params = engine.preset().params / 1_000_000;
+    let m = &mut engine.metrics;
+    let sim_ms = m.decode_sim.mean_us() / 1e3;
+    let tput = m.throughput(span);
+    Ok(CaseResult::from_stats(&format!("{model}_w{world}"),
+                              &mut m.decode_wall)
+        .with("sim_ms_tok", format!("{sim_ms:.3}"))
+        .with("tok_per_s", format!("{tput:.1}"))
+        .with("params", format!("{params}M")))
+}
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let steps = benchkit::iters(24);
+    let mut results = Vec::new();
+    for (model, prompt_len) in [("tiny", 8), ("small", 64), ("medium", 64)] {
+        for world in [1usize, 2, 4, 8] {
+            // only worlds present in the artifact set
+            if manifest
+                .find(model, world, 1, "parallel_block", "decode", 1)
+                .is_err()
+            {
+                continue;
+            }
+            eprintln!("running {model} w{world}...");
+            results.push(bench_case(model, world, steps, prompt_len)?);
+        }
+    }
+    benchkit::report(
+        "E1 token latency vs world size (paper §3: 140 ms/token @ 72B/4 sockets)",
+        &results,
+    );
+    println!(
+        "\nhuman-reading bar: 200 ms/token — see sim_ms_tok column \
+         (simulated cluster; wall is 1-core time-sliced)"
+    );
+    Ok(())
+}

@@ -1,0 +1,142 @@
+//! E4 — Figure 3 / §2.3 ablation: minimize memory copy.
+//!
+//! Two levels:
+//!
+//! 1. **collective microbench** — the zero-copy shared-memory arena
+//!    allreduce vs the staged (copy-per-hop) ring, across payload sizes
+//!    and world sizes.  This isolates exactly the copies §2.3 removes.
+//! 2. **engine level** — the same decode workload with `opt.zero_copy`
+//!    on/off; reports per-token latency and the staged-copy bytes the
+//!    baseline pays.
+//!
+//! Run: `cargo bench --bench zero_copy [-- --quick]`
+
+use std::sync::Arc;
+
+use xeonserve::benchkit::{self, CaseResult};
+use xeonserve::ccl::{CommGroup, Communicator, ReduceOp};
+use xeonserve::config::{EngineConfig, OptFlags, Variant};
+use xeonserve::engine::Engine;
+
+/// Run `f` on every rank thread of a fresh group; returns per-rank outs.
+fn on_group<R: Send + 'static>(
+    world: usize,
+    capacity: usize,
+    f: impl Fn(Communicator) -> R + Send + Sync + 'static,
+) -> Vec<R> {
+    let group = CommGroup::new_inproc(world, capacity);
+    let f = Arc::new(f);
+    group
+        .into_communicators()
+        .into_iter()
+        .map(|c| {
+            let f = f.clone();
+            std::thread::spawn(move || f(c))
+        })
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|h| h.join().unwrap())
+        .collect()
+}
+
+fn micro_case(world: usize, elems: usize, iters: usize)
+              -> (CaseResult, CaseResult) {
+    // zero-copy arena path
+    let outs = on_group(world, elems, move |mut c| {
+        let mut stats = xeonserve::metrics::LatencyStats::default();
+        for i in 0..iters {
+            {
+                let slot = c.arena_mut(elems).unwrap();
+                slot.fill(i as f32);
+            }
+            let t0 = std::time::Instant::now();
+            c.allreduce_arena(elems, ReduceOp::Sum).unwrap();
+            if c.rank() == 0 {
+                stats.record(t0.elapsed());
+            }
+        }
+        stats
+    });
+    let mut arena_stats = outs.into_iter().next().unwrap();
+
+    // staged ring path
+    let outs = on_group(world, elems, move |c| {
+        let mut stats = xeonserve::metrics::LatencyStats::default();
+        let mut buf = vec![0.0f32; elems];
+        for i in 0..iters {
+            buf.fill(i as f32);
+            let t0 = std::time::Instant::now();
+            c.allreduce_staged(&mut buf, ReduceOp::Sum).unwrap();
+            if c.rank() == 0 {
+                stats.record(t0.elapsed());
+            }
+        }
+        stats
+    });
+    let mut staged_stats = outs.into_iter().next().unwrap();
+
+    let kb = elems * 4 / 1024;
+    (
+        CaseResult::from_stats(&format!("arena_w{world}_{kb}KiB"),
+                               &mut arena_stats)
+            .with("staged_copies", 0),
+        CaseResult::from_stats(&format!("staged_w{world}_{kb}KiB"),
+                               &mut staged_stats)
+            .with("staged_copies", 4 * (world - 1) * elems / world * 4),
+    )
+}
+
+fn engine_case(zero_copy: bool, steps: usize)
+               -> anyhow::Result<CaseResult> {
+    let cfg = EngineConfig {
+        model: "small".into(),
+        variant: Variant::Parallel,
+        world: 4,
+        batch: 1,
+        opt: OptFlags { zero_copy, ..Default::default() },
+        ..Default::default()
+    };
+    let mut engine = Engine::new(cfg)?;
+    engine.enqueue(vec![1, 2, 3], steps);
+    let before = engine.comm_stats();
+    engine.run_to_completion()?;
+    let delta = engine.comm_stats().since(&before);
+    let m = &mut engine.metrics;
+    let toks = m.decode_wall.count().max(1) as u64;
+    Ok(CaseResult::from_stats(
+        if zero_copy { "engine_zero_copy" } else { "engine_staged" },
+        &mut m.decode_wall,
+    )
+    .with("stagedB_per_tok", delta.staged_copy_bytes / toks))
+}
+
+fn main() -> anyhow::Result<()> {
+    let iters = benchkit::iters(200);
+
+    for world in [2usize, 4, 8] {
+        let mut results = Vec::new();
+        for elems in [256usize, 4096, 65536, 1 << 20] {
+            let (a, s) = micro_case(world, elems, iters);
+            results.push(a);
+            results.push(s);
+        }
+        benchkit::report(
+            &format!(
+                "E4 §2.3 zero-copy vs staged allreduce — world={world} \
+                 (Fig. 3 microbench)"
+            ),
+            &results,
+        );
+    }
+
+    let steps = benchkit::iters(12);
+    let mut results = Vec::new();
+    eprintln!("running engine zero-copy ablation (small, world=4)...");
+    results.push(engine_case(true, steps)?);
+    results.push(engine_case(false, steps)?);
+    benchkit::report(
+        "E4 §2.3 engine-level — small, world=4, decode",
+        &results,
+    );
+    Ok(())
+}

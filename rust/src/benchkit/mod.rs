@@ -1,0 +1,204 @@
+//! Tiny benchmarking harness (criterion substitute — offline build).
+//!
+//! Provides warmup + timed iterations with mean/p50/p95 statistics and a
+//! uniform table/CSV output so every `rust/benches/*.rs` prints the rows
+//! the corresponding paper table/figure reports (DESIGN.md §6 maps bench
+//! → experiment).  `cargo bench` runs these binaries (harness = false).
+
+use std::time::{Duration, Instant};
+
+use crate::metrics::LatencyStats;
+
+/// Result of one measured case.
+#[derive(Clone, Debug)]
+pub struct CaseResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    /// free-form extra columns (bytes on wire, sim latency, ...)
+    pub extra: Vec<(String, String)>,
+}
+
+/// Measure `f` (one logical iteration per call) `iters` times after
+/// `warmup` unmeasured calls.
+pub fn measure<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                           mut f: F) -> CaseResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = LatencyStats::default();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        stats.record(t0.elapsed());
+    }
+    CaseResult {
+        name: name.to_string(),
+        iters,
+        mean_us: stats.mean_us(),
+        p50_us: stats.p50_us(),
+        p95_us: stats.p95_us(),
+        extra: Vec::new(),
+    }
+}
+
+/// Measure a fallible closure, propagating the first error.
+pub fn measure_result<F>(name: &str, warmup: usize, iters: usize, mut f: F)
+                         -> anyhow::Result<CaseResult>
+where
+    F: FnMut() -> anyhow::Result<()>,
+{
+    for _ in 0..warmup {
+        f()?;
+    }
+    let mut stats = LatencyStats::default();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f()?;
+        stats.record(t0.elapsed());
+    }
+    Ok(CaseResult {
+        name: name.to_string(),
+        iters,
+        mean_us: stats.mean_us(),
+        p50_us: stats.p50_us(),
+        p95_us: stats.p95_us(),
+        extra: Vec::new(),
+    })
+}
+
+impl CaseResult {
+    pub fn with(mut self, key: &str, value: impl std::fmt::Display)
+                -> CaseResult {
+        self.extra.push((key.to_string(), value.to_string()));
+        self
+    }
+
+    /// Build a case from externally collected samples (e.g. the engine's
+    /// per-decode-step metrics).
+    pub fn from_stats(name: &str, stats: &mut LatencyStats) -> CaseResult {
+        CaseResult {
+            name: name.to_string(),
+            iters: stats.count(),
+            mean_us: stats.mean_us(),
+            p50_us: stats.p50_us(),
+            p95_us: stats.p95_us(),
+            extra: Vec::new(),
+        }
+    }
+}
+
+/// Render results as an aligned table with a title; also emits a
+/// machine-readable `#csv` block for harvesting into EXPERIMENTS.md.
+pub fn report(title: &str, results: &[CaseResult]) {
+    println!("\n=== {title} ===");
+    let name_w = results
+        .iter()
+        .map(|r| r.name.len())
+        .max()
+        .unwrap_or(4)
+        .max(4);
+    print!("{:<name_w$}  {:>10}  {:>10}  {:>10}  {:>6}", "case", "mean_us",
+           "p50_us", "p95_us", "iters");
+    let extras: Vec<String> = results
+        .first()
+        .map(|r| r.extra.iter().map(|(k, _)| k.clone()).collect())
+        .unwrap_or_default();
+    for k in &extras {
+        print!("  {k:>12}");
+    }
+    println!();
+    for r in results {
+        print!(
+            "{:<name_w$}  {:>10.1}  {:>10}  {:>10}  {:>6}",
+            r.name, r.mean_us, r.p50_us, r.p95_us, r.iters
+        );
+        for k in &extras {
+            let v = r
+                .extra
+                .iter()
+                .find(|(ek, _)| ek == k)
+                .map(|(_, v)| v.as_str())
+                .unwrap_or("-");
+            print!("  {v:>12}");
+        }
+        println!();
+    }
+    // csv block
+    print!("#csv,case,mean_us,p50_us,p95_us,iters");
+    for k in &extras {
+        print!(",{k}");
+    }
+    println!();
+    for r in results {
+        print!("#csv,{},{:.1},{},{},{}", r.name, r.mean_us, r.p50_us,
+               r.p95_us, r.iters);
+        for k in &extras {
+            let v = r
+                .extra
+                .iter()
+                .find(|(ek, _)| ek == k)
+                .map(|(_, v)| v.as_str())
+                .unwrap_or("");
+            print!(",{v}");
+        }
+        println!();
+    }
+}
+
+/// `--quick` on the command line shrinks iteration counts (CI mode).
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick" || a == "--test")
+}
+
+/// Scale an iteration count down in quick mode.
+pub fn iters(full: usize) -> usize {
+    if quick_mode() {
+        (full / 8).max(1)
+    } else {
+        full
+    }
+}
+
+/// Sleep-free busy wait used by calibration tests.
+pub fn spin_for(d: Duration) {
+    let t0 = Instant::now();
+    while t0.elapsed() < d {
+        std::hint::spin_loop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_iters() {
+        let mut n = 0;
+        let r = measure("x", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_us >= 0.0);
+    }
+
+    #[test]
+    fn measure_records_spin_time() {
+        let r = measure("spin", 0, 3,
+                        || spin_for(Duration::from_micros(200)));
+        assert!(r.mean_us >= 150.0, "mean {}", r.mean_us);
+    }
+
+    #[test]
+    fn extra_columns() {
+        let r = measure("x", 0, 1, || {}).with("bytes", 42);
+        assert_eq!(r.extra[0], ("bytes".to_string(), "42".to_string()));
+    }
+
+    #[test]
+    fn measure_result_propagates_errors() {
+        let r = measure_result("x", 0, 1, || anyhow::bail!("boom"));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,282 @@
+//! Zero-copy shared-memory arena — the §2.3 optimization.
+//!
+//! One f32 slot per rank.  The compute module writes its partial result
+//! *directly* into its own slot (e.g. `PjRtBuffer::copy_raw_to_host_sync`
+//! straight off the device buffer), and the allreduce then runs **in
+//! place** over the slots: each rank reduces its element chunk across all
+//! slots and writes the result back into every slot.  No message
+//! allocation, no pack/unpack staging — the copies the staged ring pays
+//! are simply gone.
+//!
+//! ## Safety protocol
+//!
+//! Slot `r` is written only by rank `r` outside collectives (each
+//! [`super::Communicator`] is move-only and owned by exactly one rank
+//! thread).  During `allreduce_in_place`, barriers delimit the exchange
+//! phase, and inside it each rank reads/writes only its own disjoint
+//! *element chunk* of every slot, so no byte is ever written concurrently
+//! with another access.  The two barriers provide the happens-before
+//! edges for cross-thread visibility.
+
+use std::cell::UnsafeCell;
+use std::sync::{Arc, Barrier};
+
+use anyhow::{bail, Result};
+
+use super::ring::ring_chunk_range;
+use super::stats::{CollectiveKind, CommStats};
+use super::ReduceOp;
+
+/// Slot sized at construction; fixed capacity so no reallocation can
+/// move the storage while other ranks hold raw pointers to it.
+struct Slot {
+    data: UnsafeCell<Box<[f32]>>,
+}
+
+// Access is coordinated by the protocol above.
+unsafe impl Sync for Slot {}
+
+pub(super) struct ArenaShared {
+    slots: Vec<Slot>,
+    barrier: Barrier,
+    capacity: usize,
+    world: usize,
+}
+
+impl ArenaShared {
+    pub(super) fn new(world: usize, capacity: usize) -> Arc<Self> {
+        Arc::new(ArenaShared {
+            slots: (0..world)
+                .map(|_| Slot {
+                    data: UnsafeCell::new(
+                        vec![0.0f32; capacity].into_boxed_slice(),
+                    ),
+                })
+                .collect(),
+            barrier: Barrier::new(world),
+            capacity,
+            world,
+        })
+    }
+}
+
+/// Per-rank handle to the arena (owned by that rank's thread).
+pub struct ArenaHandle {
+    shared: Arc<ArenaShared>,
+    rank: usize,
+    /// reusable chunk scratch, so steady-state allreduces allocate nothing
+    scratch: Vec<f32>,
+}
+
+impl ArenaHandle {
+    pub(super) fn new(shared: Arc<ArenaShared>, rank: usize) -> Self {
+        ArenaHandle { shared, rank, scratch: Vec::new() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.shared.capacity
+    }
+
+    /// Mutable view of the first `n` elements of this rank's slot — the
+    /// zero-copy landing zone for compute results.
+    ///
+    /// Must not be held across a collective call (the borrow rules
+    /// enforce this: `allreduce_in_place` takes `&mut self`).
+    pub fn slot_mut(&mut self, n: usize) -> Result<&mut [f32]> {
+        if n > self.shared.capacity {
+            bail!("arena request {n} exceeds capacity {}",
+                  self.shared.capacity);
+        }
+        let slot = &self.shared.slots[self.rank];
+        // Sole writer of this slot outside collectives (see protocol).
+        let slice: &mut [f32] = unsafe { &mut **slot.data.get() };
+        Ok(&mut slice[..n])
+    }
+
+    /// Read-only view of this rank's slot (e.g. after an allreduce the
+    /// slot holds the full reduction).
+    pub fn slot(&self, n: usize) -> Result<&[f32]> {
+        if n > self.shared.capacity {
+            bail!("arena request {n} exceeds capacity {}",
+                  self.shared.capacity);
+        }
+        let slot = &self.shared.slots[self.rank];
+        let slice: &[f32] = unsafe { &**slot.data.get() };
+        Ok(&slice[..n])
+    }
+
+    /// In-place allreduce over the first `n` elements of all slots.
+    /// On return every slot holds the element-wise reduction.
+    ///
+    /// Collective: all ranks must call with the same `n` and `op`.
+    pub fn allreduce_in_place(
+        &mut self,
+        n: usize,
+        op: ReduceOp,
+        stats: &CommStats,
+    ) -> Result<()> {
+        let world = self.shared.world;
+        if n > self.shared.capacity {
+            bail!("arena allreduce {n} exceeds capacity {}",
+                  self.shared.capacity);
+        }
+        if world == 1 {
+            stats.record_collective(CollectiveKind::Allreduce, 0, 0, 0);
+            return Ok(());
+        }
+        // Phase boundary: all ranks' slots are fully written.
+        self.shared.barrier.wait();
+
+        let (lo, hi) = ring_chunk_range(n, world, self.rank);
+        let chunk = hi - lo;
+        self.scratch.clear();
+        self.scratch.resize(chunk, 0.0);
+
+        unsafe {
+            // accumulate chunk [lo, hi) across all slots
+            for s in 0..world {
+                let src: &[f32] =
+                    &(&**self.shared.slots[s].data.get())[lo..hi];
+                if s == 0 {
+                    self.scratch.copy_from_slice(src);
+                } else {
+                    for (acc, v) in self.scratch.iter_mut().zip(src) {
+                        *acc = op.apply(*acc, *v);
+                    }
+                }
+            }
+            // write the reduced chunk back into every slot; element range
+            // [lo, hi) is touched only by this rank.
+            for s in 0..world {
+                let dst: &mut [f32] = &mut (&mut **self.shared.slots[s]
+                    .data
+                    .get())[lo..hi];
+                dst.copy_from_slice(&self.scratch);
+            }
+        }
+
+        // Phase boundary: all chunks written before anyone reads results.
+        self.shared.barrier.wait();
+
+        if self.rank == 0 {
+            // logical wire traffic ≈ ring equivalent: each rank reads
+            // (W-1) foreign chunks and writes (W-1) foreign chunks.
+            let per_rank = 2 * (world - 1) * chunk * 4;
+            stats.record_collective(
+                CollectiveKind::Allreduce,
+                (per_rank * world) as u64,
+                (2 * world * (world - 1)) as u64,
+                0, // the point: zero staged copies
+            );
+        }
+        Ok(())
+    }
+
+    /// Barrier over the group (used by the engine for phase alignment).
+    pub fn barrier(&self) {
+        if self.shared.world > 1 {
+            self.shared.barrier.wait();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_arena<F, R>(world: usize, capacity: usize, f: F) -> Vec<R>
+    where
+        F: Fn(usize, ArenaHandle, Arc<CommStats>) -> R + Send + Sync + 'static,
+        R: Send + 'static,
+    {
+        let shared = ArenaShared::new(world, capacity);
+        let stats = Arc::new(CommStats::default());
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..world)
+            .map(|r| {
+                let h = ArenaHandle::new(shared.clone(), r);
+                let f = f.clone();
+                let stats = stats.clone();
+                std::thread::spawn(move || f(r, h, stats))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn allreduce_sums_across_ranks() {
+        for world in [1usize, 2, 3, 4, 8] {
+            let n = 37; // deliberately not divisible by world
+            let outs = run_arena(world, 64, move |r, mut h, stats| {
+                {
+                    let slot = h.slot_mut(n).unwrap();
+                    for (i, v) in slot.iter_mut().enumerate() {
+                        *v = (r + 1) as f32 * i as f32;
+                    }
+                }
+                h.allreduce_in_place(n, ReduceOp::Sum, &stats).unwrap();
+                h.slot(n).unwrap().to_vec()
+            });
+            let tot: f32 = (1..=world).map(|r| r as f32).sum();
+            for out in outs {
+                for (i, v) in out.iter().enumerate() {
+                    assert_eq!(*v, tot * i as f32, "world={world} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_max() {
+        let outs = run_arena(4, 8, |r, mut h, stats| {
+            h.slot_mut(4).unwrap().copy_from_slice(&[
+                r as f32,
+                -(r as f32),
+                1.0,
+                r as f32 * 10.0,
+            ]);
+            h.allreduce_in_place(4, ReduceOp::Max, &stats).unwrap();
+            h.slot(4).unwrap().to_vec()
+        });
+        for out in outs {
+            assert_eq!(out, vec![3.0, 0.0, 1.0, 30.0]);
+        }
+    }
+
+    #[test]
+    fn zero_staged_copies() {
+        let outs = run_arena(2, 16, |_r, mut h, stats| {
+            h.slot_mut(16).unwrap().fill(1.0);
+            h.allreduce_in_place(16, ReduceOp::Sum, &stats).unwrap();
+            stats.snapshot()
+        });
+        assert_eq!(outs[0].staged_copy_bytes, 0);
+        assert!(outs[0].wire_bytes > 0);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let outs = run_arena(1, 8, |_r, mut h, _stats| {
+            h.slot_mut(9).is_err()
+        });
+        assert!(outs[0]);
+    }
+
+    #[test]
+    fn repeated_allreduces_reuse_slots() {
+        let outs = run_arena(2, 8, |r, mut h, stats| {
+            let mut results = vec![];
+            for round in 0..3 {
+                h.slot_mut(4)
+                    .unwrap()
+                    .fill((r + round) as f32);
+                h.allreduce_in_place(4, ReduceOp::Sum, &stats).unwrap();
+                results.push(h.slot(4).unwrap()[0]);
+            }
+            results
+        });
+        // round i: (0+i) + (1+i) = 1 + 2i
+        assert_eq!(outs[0], vec![1.0, 3.0, 5.0]);
+        assert_eq!(outs[1], vec![1.0, 3.0, 5.0]);
+    }
+}

@@ -1,0 +1,260 @@
+//! Communicator groups: the engine-facing collective API.
+//!
+//! A [`CommGroup`] builds one [`Communicator`] per rank; each communicator
+//! is moved into its rank's thread (they are `Send` but deliberately not
+//! `Clone`/`Sync`).  In-process groups carry both data paths — the
+//! zero-copy arena and the staged ring — so the engine can flip §2.3 on
+//! and off at runtime.  TCP groups only have the ring (there is no shared
+//! memory across processes), matching oneCCL's transport split.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::arena::{ArenaHandle, ArenaShared};
+use super::ring;
+use super::stats::CommStats;
+use super::transport::{InProcTransport, PtpTransport};
+use super::ReduceOp;
+
+/// Payloads at or below this take the direct all-exchange allreduce;
+/// larger ones take the ring (bandwidth-optimal).  Crossover measured on
+/// this testbed with `ccl_micro` (direct wins ≤ ~16 KiB at world ≤ 8).
+pub const ALLREDUCE_DIRECT_MAX_BYTES: usize = 16 * 1024;
+
+/// Factory for the per-rank communicators of one group.
+pub struct CommGroup {
+    pub stats: Arc<CommStats>,
+    comms: Vec<Communicator>,
+}
+
+impl CommGroup {
+    /// In-process group: arena + channel mesh.
+    /// `arena_capacity` is in f32 elements (the largest single collective).
+    pub fn new_inproc(world: usize, arena_capacity: usize) -> CommGroup {
+        let stats = Arc::new(CommStats::default());
+        let arena = ArenaShared::new(world, arena_capacity);
+        let mesh = InProcTransport::mesh(world);
+        let comms = mesh
+            .into_iter()
+            .enumerate()
+            .map(|(rank, t)| Communicator {
+                rank,
+                world,
+                transport: Box::new(t),
+                arena: Some(ArenaHandle::new(arena.clone(), rank)),
+                stats: stats.clone(),
+            })
+            .collect();
+        CommGroup { stats, comms }
+    }
+
+    /// Wrap an externally-connected transport (e.g. TCP) into a single
+    /// communicator for this process's rank.
+    pub fn from_transport(
+        transport: Box<dyn PtpTransport>,
+        stats: Arc<CommStats>,
+    ) -> Communicator {
+        Communicator {
+            rank: transport.rank(),
+            world: transport.world(),
+            transport,
+            arena: None,
+            stats,
+        }
+    }
+
+    /// Take the per-rank communicators (in rank order).
+    pub fn into_communicators(self) -> Vec<Communicator> {
+        self.comms
+    }
+}
+
+/// One rank's endpoint for all collectives.
+pub struct Communicator {
+    rank: usize,
+    world: usize,
+    transport: Box<dyn PtpTransport>,
+    arena: Option<ArenaHandle>,
+    stats: Arc<CommStats>,
+}
+
+impl Communicator {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn stats(&self) -> &Arc<CommStats> {
+        &self.stats
+    }
+
+    pub fn has_arena(&self) -> bool {
+        self.arena.is_some()
+    }
+
+    /// Zero-copy landing zone for this rank's partial result (§2.3).
+    /// Errors when the group has no arena (TCP) — callers fall back to
+    /// the staged path.
+    pub fn arena_mut(&mut self, n: usize) -> Result<&mut [f32]> {
+        match &mut self.arena {
+            Some(a) => a.slot_mut(n),
+            None => anyhow::bail!("no arena on this transport"),
+        }
+    }
+
+    /// Read the (reduced) arena contents.
+    pub fn arena(&self, n: usize) -> Result<&[f32]> {
+        match &self.arena {
+            Some(a) => a.slot(n),
+            None => anyhow::bail!("no arena on this transport"),
+        }
+    }
+
+    /// In-place zero-copy allreduce over the arena slots (§2.3 ON).
+    pub fn allreduce_arena(&mut self, n: usize, op: ReduceOp) -> Result<()> {
+        let stats = self.stats.clone();
+        match &mut self.arena {
+            Some(a) => a.allreduce_in_place(n, op, &stats),
+            None => anyhow::bail!("no arena on this transport"),
+        }
+    }
+
+    /// Staged allreduce (§2.3 OFF, and the TCP data path).
+    ///
+    /// Algorithm auto-selection, oneCCL-style: small payloads take the
+    /// direct all-exchange (one α per peer), large ones the
+    /// bandwidth-optimal ring.  Crossover measured by `cargo bench
+    /// --bench ccl_micro` (see DESIGN.md §7 ablations).
+    pub fn allreduce_staged(&self, buf: &mut [f32], op: ReduceOp)
+                            -> Result<()> {
+        if buf.len() * 4 <= ALLREDUCE_DIRECT_MAX_BYTES {
+            ring::direct_allreduce(self.transport.as_ref(), buf, op,
+                                   &self.stats)
+        } else {
+            ring::ring_allreduce(self.transport.as_ref(), buf, op,
+                                 &self.stats)
+        }
+    }
+
+    /// Force the ring algorithm (benches pin algorithms explicitly).
+    pub fn allreduce_ring(&self, buf: &mut [f32], op: ReduceOp)
+                          -> Result<()> {
+        ring::ring_allreduce(self.transport.as_ref(), buf, op, &self.stats)
+    }
+
+    /// Force the direct algorithm.
+    pub fn allreduce_direct(&self, buf: &mut [f32], op: ReduceOp)
+                            -> Result<()> {
+        ring::direct_allreduce(self.transport.as_ref(), buf, op,
+                               &self.stats)
+    }
+
+    /// Broadcast raw bytes from `root` (token IDs in §2.1a, or embedding
+    /// activations in the baseline).
+    pub fn broadcast(&self, buf: &mut Vec<u8>, root: usize) -> Result<()> {
+        ring::tree_broadcast(self.transport.as_ref(), buf, root, &self.stats)
+    }
+
+    /// Allgather f32 shards in rank order (the full-logit baseline of
+    /// §2.1b measures against this).
+    pub fn allgather(&self, local: &[f32], out: &mut [f32]) -> Result<()> {
+        ring::ring_allgather(self.transport.as_ref(), local, out, &self.stats)
+    }
+
+    /// Gather opaque payloads to `root` (the k (value,index) pairs of the
+    /// local-top-k reduction, §2.1b).
+    pub fn gather(&self, local: &[u8], root: usize)
+                  -> Result<Option<Vec<Vec<u8>>>> {
+        ring::gather_to_root(self.transport.as_ref(), local, root,
+                             &self.stats)
+    }
+
+    /// Group barrier (arena groups only; ring groups synchronize through
+    /// their collectives).
+    pub fn barrier(&self) {
+        if let Some(a) = &self.arena {
+            a.barrier();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spawn_group<F, R>(world: usize, f: F) -> Vec<R>
+    where
+        F: Fn(Communicator) -> R + Send + Sync + 'static,
+        R: Send + 'static,
+    {
+        let group = CommGroup::new_inproc(world, 1024);
+        let f = Arc::new(f);
+        let handles: Vec<_> = group
+            .into_communicators()
+            .into_iter()
+            .map(|c| {
+                let f = f.clone();
+                std::thread::spawn(move || f(c))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn arena_and_staged_agree() {
+        let outs = spawn_group(4, |mut c| {
+            let r = c.rank();
+            let n = 100;
+            {
+                let slot = c.arena_mut(n).unwrap();
+                for (i, v) in slot.iter_mut().enumerate() {
+                    *v = (r * n + i) as f32;
+                }
+            }
+            c.allreduce_arena(n, ReduceOp::Sum).unwrap();
+            let arena_out = c.arena(n).unwrap().to_vec();
+
+            let mut staged: Vec<f32> =
+                (0..n).map(|i| (r * n + i) as f32).collect();
+            c.allreduce_staged(&mut staged, ReduceOp::Sum).unwrap();
+            (arena_out, staged)
+        });
+        for (arena_out, staged) in outs {
+            assert_eq!(arena_out, staged);
+        }
+    }
+
+    #[test]
+    fn broadcast_token_ids() {
+        let outs = spawn_group(3, |c| {
+            let mut buf = if c.rank() == 0 {
+                vec![42u8, 0, 1, 2]
+            } else {
+                vec![]
+            };
+            c.broadcast(&mut buf, 0).unwrap();
+            buf
+        });
+        for out in outs {
+            assert_eq!(out, vec![42, 0, 1, 2]);
+        }
+    }
+
+    #[test]
+    fn world_one_collectives_are_noops() {
+        let outs = spawn_group(1, |mut c| {
+            c.arena_mut(4).unwrap().fill(3.0);
+            c.allreduce_arena(4, ReduceOp::Sum).unwrap();
+            let a = c.arena(4).unwrap().to_vec();
+            let mut b = vec![5.0f32; 4];
+            c.allreduce_staged(&mut b, ReduceOp::Sum).unwrap();
+            (a, b)
+        });
+        assert_eq!(outs[0].0, vec![3.0; 4]);
+        assert_eq!(outs[0].1, vec![5.0; 4]);
+    }
+}

@@ -1,0 +1,57 @@
+//! `rccl` — the oneCCL-analog collective communication library.
+//!
+//! The paper drives all cross-socket traffic through oneCCL; this module
+//! is the rust substrate playing that role for the simulated cluster.
+//! Two data paths exist on purpose, because their difference *is* the
+//! paper's §2.3 experiment:
+//!
+//! * **arena path (optimized)** — a shared-memory arena with one slot per
+//!   rank.  The compute module writes its partial result *directly* into
+//!   its slot (straight from the PJRT buffer), and the allreduce runs in
+//!   place over the slots: zero staging copies.  This mirrors oneCCL's
+//!   same-node shared-memory transport plus the paper's zero-copy
+//!   compute→comm hand-off.
+//! * **staged path (baseline)** — a classic ring implementation over a
+//!   message-passing transport: every hop allocates and copies, and the
+//!   user buffer is staged in and out, exactly the copies §2.3 removes.
+//!
+//! All collectives are instrumented ([`CommStats`]): wire bytes, staged
+//! copy bytes, and synchronization counts — the quantities the paper's
+//! three optimizations reduce.  An analytic [`wire`] model converts byte
+//! counts into simulated cross-socket time for the scaled-up series.
+
+mod arena;
+mod group;
+mod ring;
+mod stats;
+mod transport;
+pub mod wire;
+
+pub use arena::ArenaHandle;
+pub use group::{CommGroup, Communicator};
+pub use ring::ring_chunk_range;
+pub use stats::{CommStats, StatsSnapshot};
+pub use transport::{bytes_f32 as bytes_to_f32, InProcTransport,
+                    PtpTransport, TcpTransport};
+
+/// Owned little-endian byte image of an f32 slice (broadcast payloads).
+pub fn f32_to_bytes(data: &[f32]) -> Vec<u8> {
+    transport::f32_bytes(data).to_vec()
+}
+
+/// Reduction operator for allreduce/reduce collectives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+}
+
+impl ReduceOp {
+    #[inline]
+    pub fn apply(&self, a: f32, b: f32) -> f32 {
+        match self {
+            ReduceOp::Sum => a + b,
+            ReduceOp::Max => a.max(b),
+        }
+    }
+}

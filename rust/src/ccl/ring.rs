@@ -1,0 +1,452 @@
+//! Staged (copy-based) collective algorithms over a point-to-point
+//! transport: ring allreduce, ring allgather, binomial-tree broadcast,
+//! linear gather.
+//!
+//! These are the §2.3 *baseline*: every hop allocates an owned message
+//! (one copy on send, one on receive-apply), exactly the staging traffic
+//! the arena path eliminates.  They are also the real data path for the
+//! TCP transport, where a shared-memory arena does not exist.
+
+use anyhow::Result;
+
+use super::stats::{CollectiveKind, CommStats};
+use super::transport::{bytes_f32, f32_bytes, PtpTransport};
+use super::ReduceOp;
+
+/// Element range `[lo, hi)` of rank `r`'s chunk when `n` elements are
+/// split as evenly as possible across `world` ranks.
+pub fn ring_chunk_range(n: usize, world: usize, r: usize) -> (usize, usize) {
+    let base = n / world;
+    let rem = n % world;
+    let lo = r * base + r.min(rem);
+    let size = base + usize::from(r < rem);
+    (lo, lo + size)
+}
+
+/// Ring allreduce: reduce-scatter then allgather, 2*(W-1) hops.
+/// `buf` holds the local contribution on entry, the reduction on exit.
+pub fn ring_allreduce(
+    t: &dyn PtpTransport,
+    buf: &mut [f32],
+    op: ReduceOp,
+    stats: &CommStats,
+) -> Result<()> {
+    let world = t.world();
+    let rank = t.rank();
+    if world == 1 {
+        stats.record_collective(CollectiveKind::Allreduce, 0, 0, 0);
+        return Ok(());
+    }
+    let n = buf.len();
+    let right = (rank + 1) % world;
+    let left = (rank + world - 1) % world;
+    let mut wire = 0u64;
+    let mut staged = 0u64;
+    let mut msgs = 0u64;
+
+    // reduce-scatter: after step s, rank owns the full reduction of chunk
+    // (rank + 1) mod world ... converging to chunk (rank+1)%world? —
+    // standard schedule: in step s, send chunk (rank - s) and reduce into
+    // chunk (rank - s - 1).
+    for s in 0..world - 1 {
+        let send_c = (rank + world - s) % world;
+        let recv_c = (rank + world - s - 1) % world;
+        let (slo, shi) = ring_chunk_range(n, world, send_c);
+        let (rlo, rhi) = ring_chunk_range(n, world, recv_c);
+        t.send(right, tag(0, s), f32_bytes(&buf[slo..shi]))?;
+        let incoming = bytes_f32(&t.recv(left, tag(0, s))?);
+        for (dst, src) in buf[rlo..rhi].iter_mut().zip(incoming.iter()) {
+            *dst = op.apply(*dst, *src);
+        }
+        wire += ((shi - slo) * 4) as u64;
+        // owned message on send + parse on receive = 2 staging copies
+        staged += ((shi - slo) * 4 + (rhi - rlo) * 4) as u64;
+        msgs += 1;
+    }
+    // allgather: circulate the reduced chunks.
+    for s in 0..world - 1 {
+        let send_c = (rank + world + 1 - s) % world;
+        let recv_c = (rank + world - s) % world;
+        let (slo, shi) = ring_chunk_range(n, world, send_c);
+        let (rlo, rhi) = ring_chunk_range(n, world, recv_c);
+        t.send(right, tag(1, s), f32_bytes(&buf[slo..shi]))?;
+        let incoming = bytes_f32(&t.recv(left, tag(1, s))?);
+        buf[rlo..rhi].copy_from_slice(&incoming);
+        wire += ((shi - slo) * 4) as u64;
+        staged += ((shi - slo) * 4 + (rhi - rlo) * 4) as u64;
+        msgs += 1;
+    }
+
+    // rank 0 records for the whole group (avoid W-fold double counting);
+    // per-rank traffic is symmetric, so scale by world.
+    if rank == 0 {
+        stats.record_collective(
+            CollectiveKind::Allreduce,
+            wire * world as u64,
+            msgs * world as u64,
+            staged * world as u64,
+        );
+    }
+    Ok(())
+}
+
+/// Direct (all-exchange) allreduce: every rank sends its full buffer to
+/// every other rank and reduces locally in **fixed rank order** — the
+/// small-message algorithm (one α per peer, no 2(W−1)-step chain like the
+/// ring).  oneCCL makes the same algorithm switch; `ALLREDUCE_DIRECT_MAX`
+/// in group.rs holds the crossover.  Deterministic reduction order
+/// (rank 0..W) keeps results identical to the arena path.
+pub fn direct_allreduce(
+    t: &dyn PtpTransport,
+    buf: &mut [f32],
+    op: ReduceOp,
+    stats: &CommStats,
+) -> Result<()> {
+    let world = t.world();
+    let rank = t.rank();
+    if world == 1 {
+        stats.record_collective(CollectiveKind::Allreduce, 0, 0, 0);
+        return Ok(());
+    }
+    let n = buf.len();
+    for peer in 0..world {
+        if peer != rank {
+            t.send(peer, tag(5, rank), f32_bytes(buf))?;
+        }
+    }
+    // reduce contributions in rank order for determinism
+    let mine = buf.to_vec();
+    let mut first = true;
+    for src in 0..world {
+        let contribution;
+        let data: &[f32] = if src == rank {
+            &mine
+        } else {
+            contribution = bytes_f32(&t.recv(src, tag(5, src))?);
+            &contribution
+        };
+        if first {
+            buf.copy_from_slice(data);
+            first = false;
+        } else {
+            for (dst, v) in buf.iter_mut().zip(data) {
+                *dst = op.apply(*dst, *v);
+            }
+        }
+    }
+    if rank == 0 {
+        let per_rank = ((world - 1) * n * 4) as u64;
+        stats.record_collective(
+            CollectiveKind::Allreduce,
+            per_rank * world as u64,
+            (world * (world - 1)) as u64,
+            // owned send copies + owned recv parses + the local stage
+            (per_rank * 2 + (n * 4) as u64) * world as u64,
+        );
+    }
+    Ok(())
+}
+
+/// Binomial-tree broadcast of raw bytes from `root`.
+pub fn tree_broadcast(
+    t: &dyn PtpTransport,
+    buf: &mut Vec<u8>,
+    root: usize,
+    stats: &CommStats,
+) -> Result<()> {
+    let world = t.world();
+    let rank = t.rank();
+    if world == 1 {
+        stats.record_collective(CollectiveKind::Broadcast, 0, 0, 0);
+        return Ok(());
+    }
+    let vrank = (rank + world - root) % world;
+
+    // Receive phase: a non-root receives at its lowest set bit `m` from
+    // vrank - m (whose lower bits are all zero).
+    let mut mask = 1usize;
+    while mask < world {
+        if vrank & mask != 0 {
+            let src = (vrank - mask + root) % world;
+            *buf = t.recv(src, tag(2, mask))?;
+            break;
+        }
+        mask <<= 1;
+    }
+    // Forward phase: from the bit below where we received (for the root:
+    // the highest power of two < 2*world) down to 1.
+    let mut m = mask >> 1;
+    while m >= 1 {
+        if vrank + m < world {
+            let dst = (vrank + m + root) % world;
+            t.send(dst, tag(2, m), buf)?;
+        }
+        m >>= 1;
+    }
+
+    if rank == root {
+        // root counts the whole tree: W-1 messages of len bytes
+        stats.record_collective(
+            CollectiveKind::Broadcast,
+            buf.len() as u64 * (world as u64 - 1),
+            world as u64 - 1,
+            buf.len() as u64 * (world as u64 - 1), // owned msg per hop
+        );
+    }
+    Ok(())
+}
+
+/// Ring allgather: each rank contributes `local`; `out` receives all
+/// contributions in rank order (`out.len() == world * local.len()`).
+pub fn ring_allgather(
+    t: &dyn PtpTransport,
+    local: &[f32],
+    out: &mut [f32],
+    stats: &CommStats,
+) -> Result<()> {
+    let world = t.world();
+    let rank = t.rank();
+    let n = local.len();
+    assert_eq!(out.len(), n * world, "allgather output size");
+    out[rank * n..(rank + 1) * n].copy_from_slice(local);
+    if world == 1 {
+        stats.record_collective(CollectiveKind::Allgather, 0, 0, 0);
+        return Ok(());
+    }
+    let right = (rank + 1) % world;
+    let left = (rank + world - 1) % world;
+    let mut wire = 0u64;
+    let mut staged = 0u64;
+    for s in 0..world - 1 {
+        let send_c = (rank + world - s) % world;
+        let recv_c = (rank + world - s - 1) % world;
+        t.send(right, tag(3, s), f32_bytes(&out[send_c * n..(send_c + 1) * n]))?;
+        let incoming = bytes_f32(&t.recv(left, tag(3, s))?);
+        out[recv_c * n..(recv_c + 1) * n].copy_from_slice(&incoming);
+        wire += (n * 4) as u64;
+        staged += (2 * n * 4) as u64;
+    }
+    if rank == 0 {
+        stats.record_collective(
+            CollectiveKind::Allgather,
+            wire * world as u64,
+            (world * (world - 1)) as u64,
+            staged * world as u64,
+        );
+    }
+    Ok(())
+}
+
+/// Linear gather of per-rank byte payloads to `root`.  Returns
+/// `Some(payloads)` (rank-ordered) on the root, `None` elsewhere.
+pub fn gather_to_root(
+    t: &dyn PtpTransport,
+    local: &[u8],
+    root: usize,
+    stats: &CommStats,
+) -> Result<Option<Vec<Vec<u8>>>> {
+    let world = t.world();
+    let rank = t.rank();
+    if rank != root {
+        t.send(root, tag(4, rank), local)?;
+        return Ok(None);
+    }
+    let mut out = Vec::with_capacity(world);
+    let mut wire = 0u64;
+    for src in 0..world {
+        if src == root {
+            out.push(local.to_vec());
+        } else {
+            let data = t.recv(src, tag(4, src))?;
+            wire += data.len() as u64;
+            out.push(data);
+        }
+    }
+    stats.record_collective(
+        CollectiveKind::Gather,
+        wire,
+        world as u64 - 1,
+        wire, // each message is an owned copy
+    );
+    Ok(Some(out))
+}
+
+#[inline]
+fn tag(kind: u32, step: usize) -> u32 {
+    kind * 1000 + step as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ccl::transport::InProcTransport;
+    use std::sync::Arc;
+
+    fn run_world<F, R>(world: usize, f: F) -> Vec<R>
+    where
+        F: Fn(usize, InProcTransport, Arc<CommStats>) -> R + Send + Sync + 'static,
+        R: Send + 'static,
+    {
+        let stats = Arc::new(CommStats::default());
+        let mesh = InProcTransport::mesh(world);
+        let f = Arc::new(f);
+        let handles: Vec<_> = mesh
+            .into_iter()
+            .enumerate()
+            .map(|(r, t)| {
+                let f = f.clone();
+                let stats = stats.clone();
+                std::thread::spawn(move || f(r, t, stats))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn chunk_ranges_partition() {
+        for n in [0usize, 1, 5, 16, 33] {
+            for world in [1usize, 2, 3, 4, 8] {
+                let mut covered = 0;
+                for r in 0..world {
+                    let (lo, hi) = ring_chunk_range(n, world, r);
+                    assert_eq!(lo, covered);
+                    covered = hi;
+                }
+                assert_eq!(covered, n);
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_sums() {
+        for world in [1usize, 2, 3, 4] {
+            let outs = run_world(world, move |r, t, stats| {
+                let mut buf: Vec<f32> =
+                    (0..10).map(|i| (r * 10 + i) as f32).collect();
+                ring_allreduce(&t, &mut buf, ReduceOp::Sum, &stats).unwrap();
+                buf
+            });
+            let expect: Vec<f32> = (0..10)
+                .map(|i| {
+                    (0..world).map(|r| (r * 10 + i) as f32).sum::<f32>()
+                })
+                .collect();
+            for out in outs {
+                assert_eq!(out, expect, "world={world}");
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_max() {
+        let outs = run_world(3, |r, t, stats| {
+            let mut buf = vec![r as f32, -(r as f32)];
+            ring_allreduce(&t, &mut buf, ReduceOp::Max, &stats).unwrap();
+            buf
+        });
+        for out in outs {
+            assert_eq!(out, vec![2.0, 0.0]);
+        }
+    }
+
+    #[test]
+    fn direct_allreduce_sums_any_world() {
+        for world in [1usize, 2, 3, 4, 8] {
+            let outs = run_world(world, move |r, t, stats| {
+                let mut buf: Vec<f32> =
+                    (0..7).map(|i| (r * 7 + i) as f32).collect();
+                direct_allreduce(&t, &mut buf, ReduceOp::Sum, &stats)
+                    .unwrap();
+                buf
+            });
+            let expect: Vec<f32> = (0..7)
+                .map(|i| (0..world).map(|r| (r * 7 + i) as f32).sum())
+                .collect();
+            for out in outs {
+                assert_eq!(out, expect, "world={world}");
+            }
+        }
+    }
+
+    #[test]
+    fn direct_matches_ring_to_tolerance() {
+        let outs = run_world(4, |r, t, stats| {
+            let mut a: Vec<f32> =
+                (0..33).map(|i| (r as f32 + 1.0) * 0.1 * i as f32).collect();
+            let mut b = a.clone();
+            direct_allreduce(&t, &mut a, ReduceOp::Sum, &stats).unwrap();
+            ring_allreduce(&t, &mut b, ReduceOp::Sum, &stats).unwrap();
+            (a, b)
+        });
+        for (a, b) in outs {
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-4 * y.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_from_each_root() {
+        for world in [1usize, 2, 3, 4, 5, 8] {
+            for root in 0..world {
+                let outs = run_world(world, move |r, t, stats| {
+                    let mut buf = if r == root {
+                        vec![1, 2, 3, root as u8]
+                    } else {
+                        vec![]
+                    };
+                    tree_broadcast(&t, &mut buf, root, &stats).unwrap();
+                    buf
+                });
+                for out in outs {
+                    assert_eq!(out, vec![1, 2, 3, root as u8],
+                               "world={world} root={root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_orders_by_rank() {
+        for world in [1usize, 2, 4] {
+            let outs = run_world(world, move |r, t, stats| {
+                let local = vec![r as f32; 3];
+                let mut out = vec![0.0; 3 * world];
+                ring_allgather(&t, &local, &mut out, &stats).unwrap();
+                out
+            });
+            let expect: Vec<f32> = (0..world)
+                .flat_map(|r| vec![r as f32; 3])
+                .collect();
+            for out in outs {
+                assert_eq!(out, expect);
+            }
+        }
+    }
+
+    #[test]
+    fn gather_collects_on_root_only() {
+        let outs = run_world(3, |r, t, stats| {
+            gather_to_root(&t, &[r as u8; 2], 1, &stats).unwrap()
+        });
+        assert!(outs[0].is_none());
+        assert!(outs[2].is_none());
+        let got = outs[1].as_ref().unwrap();
+        assert_eq!(got[0], vec![0, 0]);
+        assert_eq!(got[1], vec![1, 1]);
+        assert_eq!(got[2], vec![2, 2]);
+    }
+
+    #[test]
+    fn allreduce_counts_staged_copies() {
+        let stats_out = run_world(2, |_r, t, stats| {
+            let mut buf = vec![1.0f32; 8];
+            ring_allreduce(&t, &mut buf, ReduceOp::Sum, &stats).unwrap();
+            stats.snapshot()
+        });
+        let snap = stats_out[0];
+        assert!(snap.staged_copy_bytes > 0);
+        assert!(snap.wire_bytes > 0);
+        assert_eq!(snap.allreduces, 1);
+    }
+}

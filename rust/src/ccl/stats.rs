@@ -1,0 +1,134 @@
+//! Communication instrumentation.
+//!
+//! Every collective records what the paper's optimizations are about:
+//! how many synchronization points, how many bytes crossed the (virtual)
+//! wire, and how many bytes were memcpy'd through staging buffers.  The
+//! ablation benches (E2/E3/E4 in DESIGN.md §6) read these counters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared, lock-free counters for one communicator group.
+#[derive(Debug, Default)]
+pub struct CommStats {
+    /// collective invocations that synchronize all ranks
+    pub sync_points: AtomicU64,
+    /// logical bytes moved between ranks (per-rank wire traffic, summed)
+    pub wire_bytes: AtomicU64,
+    /// bytes memcpy'd through staging buffers (0 on the zero-copy path)
+    pub staged_copy_bytes: AtomicU64,
+    /// number of discrete messages (for the per-message latency model)
+    pub messages: AtomicU64,
+    pub allreduces: AtomicU64,
+    pub broadcasts: AtomicU64,
+    pub gathers: AtomicU64,
+    pub allgathers: AtomicU64,
+}
+
+/// Point-in-time copy of [`CommStats`], subtractable for deltas.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub sync_points: u64,
+    pub wire_bytes: u64,
+    pub staged_copy_bytes: u64,
+    pub messages: u64,
+    pub allreduces: u64,
+    pub broadcasts: u64,
+    pub gathers: u64,
+    pub allgathers: u64,
+}
+
+impl CommStats {
+    pub fn record_collective(
+        &self,
+        kind: CollectiveKind,
+        wire_bytes: u64,
+        messages: u64,
+        staged_bytes: u64,
+    ) {
+        self.sync_points.fetch_add(1, Ordering::Relaxed);
+        self.wire_bytes.fetch_add(wire_bytes, Ordering::Relaxed);
+        self.messages.fetch_add(messages, Ordering::Relaxed);
+        self.staged_copy_bytes.fetch_add(staged_bytes, Ordering::Relaxed);
+        let ctr = match kind {
+            CollectiveKind::Allreduce => &self.allreduces,
+            CollectiveKind::Broadcast => &self.broadcasts,
+            CollectiveKind::Gather => &self.gathers,
+            CollectiveKind::Allgather => &self.allgathers,
+        };
+        ctr.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Extra staging memcpy bytes (outside a collective), e.g. the
+    /// copy-in/copy-out the baseline pays at the compute↔comm boundary.
+    pub fn record_staging(&self, bytes: u64) {
+        self.staged_copy_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> StatsSnapshot {
+        StatsSnapshot {
+            sync_points: self.sync_points.load(Ordering::Relaxed),
+            wire_bytes: self.wire_bytes.load(Ordering::Relaxed),
+            staged_copy_bytes: self.staged_copy_bytes.load(Ordering::Relaxed),
+            messages: self.messages.load(Ordering::Relaxed),
+            allreduces: self.allreduces.load(Ordering::Relaxed),
+            broadcasts: self.broadcasts.load(Ordering::Relaxed),
+            gathers: self.gathers.load(Ordering::Relaxed),
+            allgathers: self.allgathers.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub enum CollectiveKind {
+    Allreduce,
+    Broadcast,
+    Gather,
+    Allgather,
+}
+
+impl StatsSnapshot {
+    /// Delta between two snapshots (self at end, `earlier` at start).
+    pub fn since(&self, earlier: &StatsSnapshot) -> StatsSnapshot {
+        StatsSnapshot {
+            sync_points: self.sync_points - earlier.sync_points,
+            wire_bytes: self.wire_bytes - earlier.wire_bytes,
+            staged_copy_bytes: self.staged_copy_bytes
+                - earlier.staged_copy_bytes,
+            messages: self.messages - earlier.messages,
+            allreduces: self.allreduces - earlier.allreduces,
+            broadcasts: self.broadcasts - earlier.broadcasts,
+            gathers: self.gathers - earlier.gathers,
+            allgathers: self.allgathers - earlier.allgathers,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_snapshot() {
+        let s = CommStats::default();
+        s.record_collective(CollectiveKind::Allreduce, 100, 2, 0);
+        s.record_collective(CollectiveKind::Broadcast, 4, 1, 4);
+        let snap = s.snapshot();
+        assert_eq!(snap.sync_points, 2);
+        assert_eq!(snap.wire_bytes, 104);
+        assert_eq!(snap.staged_copy_bytes, 4);
+        assert_eq!(snap.allreduces, 1);
+        assert_eq!(snap.broadcasts, 1);
+    }
+
+    #[test]
+    fn delta() {
+        let s = CommStats::default();
+        s.record_collective(CollectiveKind::Allreduce, 10, 1, 0);
+        let a = s.snapshot();
+        s.record_collective(CollectiveKind::Allreduce, 30, 1, 0);
+        let b = s.snapshot();
+        let d = b.since(&a);
+        assert_eq!(d.wire_bytes, 30);
+        assert_eq!(d.allreduces, 1);
+    }
+}

@@ -1,0 +1,251 @@
+//! Point-to-point transports underlying the staged (ring) collectives.
+//!
+//! * [`InProcTransport`] — mpsc channels between rank threads in one
+//!   process; models oneCCL's same-node path for the staged baseline
+//!   (every message is an owned, copied `Vec`).
+//! * [`TcpTransport`] — real sockets, one stream per directed peer pair,
+//!   for genuine multi-process runs (`examples/multiproc_tcp.rs`).
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Timeout for blocking receives; converts SPMD divergence bugs
+/// (mismatched collective schedules) into errors instead of deadlocks.
+pub const RECV_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// A tagged point-to-point message transport between `world` ranks.
+pub trait PtpTransport: Send {
+    fn world(&self) -> usize;
+    fn rank(&self) -> usize;
+    /// Send `data` to rank `to`. `tag` disambiguates concurrent patterns.
+    fn send(&self, to: usize, tag: u32, data: &[u8]) -> Result<()>;
+    /// Blocking receive of the next message from rank `from`;
+    /// the received tag must equal `tag`.
+    fn recv(&self, from: usize, tag: u32) -> Result<Vec<u8>>;
+}
+
+type Msg = (u32, Vec<u8>);
+
+/// In-process transport: one mpsc channel per directed rank pair.
+pub struct InProcTransport {
+    world: usize,
+    rank: usize,
+    /// senders\[dst\]: this rank -> dst
+    senders: Vec<Sender<Msg>>,
+    /// receivers\[src\]: src -> this rank
+    receivers: Vec<Mutex<Receiver<Msg>>>,
+}
+
+impl InProcTransport {
+    /// Build the full `world`-sized mesh; returns one transport per rank.
+    pub fn mesh(world: usize) -> Vec<InProcTransport> {
+        // chan[src][dst]
+        let mut txs: Vec<Vec<Option<Sender<Msg>>>> = Vec::new();
+        let mut rxs: Vec<Vec<Option<Receiver<Msg>>>> = Vec::new();
+        for _ in 0..world {
+            txs.push((0..world).map(|_| None).collect());
+            rxs.push((0..world).map(|_| None).collect());
+        }
+        for src in 0..world {
+            for dst in 0..world {
+                let (tx, rx) = std::sync::mpsc::channel();
+                txs[src][dst] = Some(tx);
+                rxs[src][dst] = Some(rx);
+            }
+        }
+        let mut out = Vec::with_capacity(world);
+        for rank in 0..world {
+            let senders =
+                txs[rank].iter_mut().map(|t| t.take().unwrap()).collect();
+            let receivers = (0..world)
+                .map(|src| Mutex::new(rxs[src][rank].take().unwrap()))
+                .collect();
+            out.push(InProcTransport { world, rank, senders, receivers });
+        }
+        out
+    }
+}
+
+impl PtpTransport for InProcTransport {
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn send(&self, to: usize, tag: u32, data: &[u8]) -> Result<()> {
+        // The copy here is the point: the staged baseline pays an owned
+        // allocation + memcpy per message, like a send into a comm buffer.
+        self.senders[to]
+            .send((tag, data.to_vec()))
+            .map_err(|_| anyhow!("rank {to} hung up"))
+    }
+
+    fn recv(&self, from: usize, tag: u32) -> Result<Vec<u8>> {
+        let rx = self.receivers[from].lock().unwrap();
+        let (got_tag, data) = rx
+            .recv_timeout(RECV_TIMEOUT)
+            .with_context(|| format!("recv from {from} tag {tag} timed out"))?;
+        if got_tag != tag {
+            bail!("tag mismatch from {from}: got {got_tag}, want {tag}");
+        }
+        Ok(data)
+    }
+}
+
+/// TCP transport: rank 0 listens and the mesh bootstraps through it.
+///
+/// Frame format: [tag: u32 LE][len: u32 LE][payload].
+pub struct TcpTransport {
+    world: usize,
+    rank: usize,
+    streams: HashMap<usize, Mutex<TcpStream>>,
+}
+
+impl TcpTransport {
+    /// Connect the full mesh. Every rank calls this with the same
+    /// `base_port`; rank pairs (a < b) use port `base_port + a*world + b`
+    /// with `a` listening. Suitable for localhost/multi-process runs.
+    pub fn connect_mesh(world: usize, rank: usize, host: &str,
+                        base_port: u16) -> Result<TcpTransport> {
+        let mut streams = HashMap::new();
+        for peer in 0..world {
+            if peer == rank {
+                continue;
+            }
+            let (a, b) = (rank.min(peer), rank.max(peer));
+            let port = base_port + (a * world + b) as u16;
+            let stream = if rank == a {
+                let listener = TcpListener::bind((host, port))
+                    .with_context(|| format!("bind {host}:{port}"))?;
+                let (s, _) = listener.accept()?;
+                s
+            } else {
+                // retry while the peer's listener comes up
+                let mut last = None;
+                let mut s = None;
+                for _ in 0..600 {
+                    match TcpStream::connect((host, port)) {
+                        Ok(ok) => {
+                            s = Some(ok);
+                            break;
+                        }
+                        Err(e) => {
+                            last = Some(e);
+                            std::thread::sleep(Duration::from_millis(50));
+                        }
+                    }
+                }
+                s.ok_or_else(|| {
+                    anyhow!("connect {host}:{port} failed: {last:?}")
+                })?
+            };
+            stream.set_nodelay(true)?;
+            streams.insert(peer, Mutex::new(stream));
+        }
+        Ok(TcpTransport { world, rank, streams })
+    }
+}
+
+impl PtpTransport for TcpTransport {
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn send(&self, to: usize, tag: u32, data: &[u8]) -> Result<()> {
+        let mut s = self.streams[&to].lock().unwrap();
+        s.write_all(&tag.to_le_bytes())?;
+        s.write_all(&(data.len() as u32).to_le_bytes())?;
+        s.write_all(data)?;
+        Ok(())
+    }
+
+    fn recv(&self, from: usize, tag: u32) -> Result<Vec<u8>> {
+        let mut s = self.streams[&from].lock().unwrap();
+        let mut hdr = [0u8; 8];
+        s.read_exact(&mut hdr)?;
+        let got_tag = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+        let len = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
+        if got_tag != tag {
+            bail!("tcp tag mismatch from {from}: got {got_tag}, want {tag}");
+        }
+        let mut data = vec![0u8; len];
+        s.read_exact(&mut data)?;
+        Ok(data)
+    }
+}
+
+/// Reinterpret f32 slice as bytes (little-endian platforms).
+pub fn f32_bytes(data: &[f32]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   std::mem::size_of_val(data))
+    }
+}
+
+/// Parse bytes back into f32s.
+pub fn bytes_f32(data: &[u8]) -> Vec<f32> {
+    data.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inproc_roundtrip() {
+        let mut mesh = InProcTransport::mesh(2);
+        let t1 = mesh.pop().unwrap();
+        let t0 = mesh.pop().unwrap();
+        let h = std::thread::spawn(move || {
+            t1.send(0, 7, &[1, 2, 3]).unwrap();
+            t1.recv(0, 8).unwrap()
+        });
+        assert_eq!(t0.recv(1, 7).unwrap(), vec![1, 2, 3]);
+        t0.send(1, 8, &[9]).unwrap();
+        assert_eq!(h.join().unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn inproc_tag_mismatch_errors() {
+        let mut mesh = InProcTransport::mesh(2);
+        let t1 = mesh.pop().unwrap();
+        let t0 = mesh.pop().unwrap();
+        t0.send(1, 1, &[0]).unwrap();
+        assert!(t1.recv(0, 2).is_err());
+    }
+
+    #[test]
+    fn f32_bytes_roundtrip() {
+        let xs = vec![1.5f32, -2.25, 0.0, f32::MAX];
+        assert_eq!(bytes_f32(f32_bytes(&xs)), xs);
+    }
+
+    #[test]
+    fn tcp_mesh_roundtrip() {
+        let h = std::thread::spawn(|| {
+            let t = TcpTransport::connect_mesh(2, 1, "127.0.0.1", 39310)
+                .unwrap();
+            t.send(0, 3, &[5, 6]).unwrap();
+            t.recv(0, 4).unwrap()
+        });
+        let t = TcpTransport::connect_mesh(2, 0, "127.0.0.1", 39310).unwrap();
+        assert_eq!(t.recv(1, 3).unwrap(), vec![5, 6]);
+        t.send(1, 4, &[7]).unwrap();
+        assert_eq!(h.join().unwrap(), vec![7]);
+    }
+}

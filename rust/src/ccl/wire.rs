@@ -1,0 +1,115 @@
+//! Analytic wire-cost model for the *simulated* cross-socket cluster.
+//!
+//! The testbed runs all ranks on one CPU, so measured wall-clock contains
+//! no real cross-socket latency.  The engine therefore also reports a
+//! simulated per-step latency: max-over-ranks compute time plus this
+//! model's cost for every collective the step issued (an α/β model — per-
+//! message latency α, per-byte cost 1/B — the standard first-order model
+//! for collectives, calibrated to UPI-class links in configs/*.toml).
+
+/// α/β link model.
+#[derive(Clone, Copy, Debug)]
+pub struct WireModel {
+    /// per-message latency, microseconds (link + software stack)
+    pub alpha_us: f64,
+    /// link bandwidth, GB/s
+    pub beta_gbps: f64,
+}
+
+impl Default for WireModel {
+    fn default() -> Self {
+        // UPI-class socket interconnect: ~1.1 µs one-way + ~20 GB/s
+        WireModel { alpha_us: 1.1, beta_gbps: 20.0 }
+    }
+}
+
+impl WireModel {
+    fn xfer_us(&self, bytes: u64) -> f64 {
+        self.alpha_us + bytes as f64 / (self.beta_gbps * 1e3)
+    }
+
+    /// Ring allreduce of `n` payload bytes across `world` ranks:
+    /// 2·(W−1) steps, each moving ≈ n/W bytes per rank.
+    pub fn allreduce_us(&self, bytes: u64, world: usize) -> f64 {
+        if world <= 1 {
+            return 0.0;
+        }
+        let w = world as u64;
+        let steps = 2 * (world - 1);
+        steps as f64 * self.xfer_us(bytes / w)
+    }
+
+    /// Binomial-tree broadcast: ⌈log2 W⌉ sequential hops of `bytes`.
+    pub fn broadcast_us(&self, bytes: u64, world: usize) -> f64 {
+        if world <= 1 {
+            return 0.0;
+        }
+        let hops = (usize::BITS - (world - 1).leading_zeros()) as f64;
+        hops * self.xfer_us(bytes)
+    }
+
+    /// Linear gather to root: W−1 messages serialized at the root.
+    pub fn gather_us(&self, bytes_per_rank: u64, world: usize) -> f64 {
+        if world <= 1 {
+            return 0.0;
+        }
+        (world - 1) as f64 * self.xfer_us(bytes_per_rank)
+    }
+
+    /// Ring allgather: W−1 steps of the per-rank shard.
+    pub fn allgather_us(&self, shard_bytes: u64, world: usize) -> f64 {
+        if world <= 1 {
+            return 0.0;
+        }
+        (world - 1) as f64 * self.xfer_us(shard_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_rank_is_free() {
+        let m = WireModel::default();
+        assert_eq!(m.allreduce_us(1 << 20, 1), 0.0);
+        assert_eq!(m.broadcast_us(64, 1), 0.0);
+    }
+
+    #[test]
+    fn allreduce_scales_with_bytes() {
+        let m = WireModel::default();
+        let small = m.allreduce_us(1024, 4);
+        let big = m.allreduce_us(1024 * 1024, 4);
+        assert!(big > small);
+    }
+
+    #[test]
+    fn broadcast_is_log_hops() {
+        let m = WireModel { alpha_us: 1.0, beta_gbps: 1e9 }; // α-dominated
+        assert!((m.broadcast_us(8, 2) - 1.0).abs() < 1e-6);
+        assert!((m.broadcast_us(8, 4) - 2.0).abs() < 1e-6);
+        assert!((m.broadcast_us(8, 8) - 3.0).abs() < 1e-6);
+        assert!((m.broadcast_us(8, 5) - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn id_bcast_cheaper_than_embedding_bcast() {
+        // §2.1a in model form: 4-byte ids vs hidden*4-byte activations
+        let m = WireModel::default();
+        let ids = m.broadcast_us(4, 4);
+        let emb = m.broadcast_us(8192 * 4, 4);
+        assert!(emb > ids * 2.0);
+    }
+
+    #[test]
+    fn topk_gather_cheaper_than_full_allgather() {
+        // §2.1b in model form: k pairs vs vocab-shard logits
+        let m = WireModel::default();
+        let topk = m.gather_us(50 * 8, 4);
+        let full = m.allgather_us(152064 / 4 * 4, 4); // Qwen vocab shard
+        // α dominates small messages, so the time ratio is modest even
+        // though the byte ratio is ~95×
+        assert!(full > topk * 2.0, "full={full} topk={topk}");
+    }
+}

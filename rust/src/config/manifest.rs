@@ -1,0 +1,361 @@
+//! Parsed form of `artifacts/manifest.json` — the contract between the
+//! python AOT pipeline (`python/compile/aot.py`) and the rust runtime.
+//!
+//! The manifest indexes every lowered segment (id, HLO file, shapes,
+//! weight-argument order) plus the model presets they were lowered for.
+//! rust trusts the manifest for all shape/order information; nothing
+//! about the model architecture is hardcoded on this side.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// Model architecture preset (mirrors python/compile/configs.py).
+#[derive(Clone, Debug)]
+pub struct ModelPreset {
+    pub name: String,
+    pub n_layers: usize,
+    pub hidden: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+    pub params: u64,
+}
+
+impl ModelPreset {
+    pub fn vocab_local(&self, world: usize) -> usize {
+        self.vocab / world
+    }
+
+    pub fn kv_heads_local(&self, world: usize) -> usize {
+        self.n_kv_heads / world
+    }
+
+    fn from_json(j: &Json) -> Result<ModelPreset> {
+        let u = |k: &str| -> Result<usize> {
+            j.req(k)?.as_usize().with_context(|| format!("{k} not a number"))
+        };
+        Ok(ModelPreset {
+            name: j.req("name")?.as_str().context("name")?.to_string(),
+            n_layers: u("n_layers")?,
+            hidden: u("hidden")?,
+            n_heads: u("n_heads")?,
+            n_kv_heads: u("n_kv_heads")?,
+            head_dim: u("head_dim")?,
+            ffn: u("ffn")?,
+            vocab: u("vocab")?,
+            max_seq: u("max_seq")?,
+            rope_theta: j.req("rope_theta")?.as_f64().context("rope_theta")?,
+            norm_eps: j.req("norm_eps")?.as_f64().context("norm_eps")?,
+            params: j.req("params")?.as_u64().context("params")?,
+        })
+    }
+}
+
+/// One tensor argument/result of a segment.
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorMeta> {
+        Ok(TensorMeta {
+            name: j.req("name")?.as_str().context("name")?.to_string(),
+            shape: j
+                .req("shape")?
+                .as_arr()
+                .context("shape")?
+                .iter()
+                .map(|v| v.as_usize().context("shape elem"))
+                .collect::<Result<_>>()?,
+            dtype: j.req("dtype")?.as_str().context("dtype")?.to_string(),
+        })
+    }
+}
+
+/// One AOT-lowered segment.
+#[derive(Clone, Debug)]
+pub struct SegmentMeta {
+    pub id: String,
+    pub file: String,
+    pub config: String,
+    pub world: usize,
+    pub batch: usize,
+    pub kind: String,
+    pub mode: String,
+    pub seq: usize,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    pub weight_args: Vec<String>,
+}
+
+impl SegmentMeta {
+    fn from_json(j: &Json) -> Result<SegmentMeta> {
+        let s = |k: &str| -> Result<String> {
+            Ok(j.req(k)?.as_str().with_context(|| k.to_string())?.to_string())
+        };
+        let u = |k: &str| -> Result<usize> {
+            j.req(k)?.as_usize().with_context(|| k.to_string())
+        };
+        let tensors = |k: &str| -> Result<Vec<TensorMeta>> {
+            j.req(k)?
+                .as_arr()
+                .with_context(|| k.to_string())?
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect()
+        };
+        Ok(SegmentMeta {
+            id: s("id")?,
+            file: s("file")?,
+            config: s("config")?,
+            world: u("world")?,
+            batch: u("batch")?,
+            kind: s("kind")?,
+            mode: s("mode")?,
+            seq: u("seq")?,
+            inputs: tensors("inputs")?,
+            outputs: tensors("outputs")?,
+            weight_args: match j.get("weight_args") {
+                Some(Json::Arr(v)) => v
+                    .iter()
+                    .map(|x| Ok(x.as_str().context("weight arg")?.to_string()))
+                    .collect::<Result<_>>()?,
+                _ => Vec::new(),
+            },
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GoldenMeta {
+    pub config: String,
+    pub world: usize,
+    pub n_decode: usize,
+    pub bucket_s: usize,
+    pub variants: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub version: u64,
+    pub block_k: usize,
+    pub configs: HashMap<String, ModelPreset>,
+    pub segments: Vec<SegmentMeta>,
+    pub golden: Option<GoldenMeta>,
+    pub root: PathBuf,
+}
+
+impl Manifest {
+    /// Load `<artifacts_dir>/manifest.json`.
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Manifest> {
+        let root = artifacts_dir.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {path:?} — run `make artifacts`")
+        })?;
+        Self::from_json_str(&text, root)
+    }
+
+    pub fn from_json_str(text: &str, root: PathBuf) -> Result<Manifest> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let mut configs = HashMap::new();
+        for (name, pj) in j.req("configs")?.as_obj().context("configs")? {
+            configs.insert(name.clone(), ModelPreset::from_json(pj)?);
+        }
+        let segments = j
+            .req("segments")?
+            .as_arr()
+            .context("segments")?
+            .iter()
+            .map(SegmentMeta::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        let golden = match j.get("golden") {
+            Some(g) => Some(GoldenMeta {
+                config: g.req("config")?.as_str().context("config")?.into(),
+                world: g.req("world")?.as_usize().context("world")?,
+                n_decode: g.req("n_decode")?.as_usize().context("n_decode")?,
+                bucket_s: g.req("bucket_s")?.as_usize().context("bucket_s")?,
+                variants: g
+                    .req("variants")?
+                    .as_arr()
+                    .context("variants")?
+                    .iter()
+                    .map(|v| Ok(v.as_str().context("variant")?.to_string()))
+                    .collect::<Result<_>>()?,
+            }),
+            None => None,
+        };
+        Ok(Manifest {
+            version: j.req("version")?.as_u64().context("version")?,
+            block_k: j.req("block_k")?.as_usize().context("block_k")?,
+            configs,
+            segments,
+            golden,
+            root,
+        })
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&ModelPreset> {
+        self.configs
+            .get(name)
+            .with_context(|| format!("unknown model config {name:?}"))
+    }
+
+    /// Find a segment by (config, world, batch, kind, mode, seq).
+    pub fn find(
+        &self,
+        config: &str,
+        world: usize,
+        batch: usize,
+        kind: &str,
+        mode: &str,
+        seq: usize,
+    ) -> Result<&SegmentMeta> {
+        self.segments
+            .iter()
+            .find(|s| {
+                s.config == config
+                    && s.world == world
+                    && s.batch == batch
+                    && s.kind == kind
+                    && s.mode == mode
+                    && s.seq == seq
+            })
+            .with_context(|| format!(
+                "no segment for config={config} world={world} batch={batch} \
+                 kind={kind} mode={mode} seq={seq}; re-run `make artifacts` \
+                 (or aot.py --full for the big sweep)"
+            ))
+    }
+
+    /// Prefill bucket sizes available for (config, world, batch-cache).
+    pub fn prefill_buckets(&self, config: &str, world: usize, batch: usize)
+                           -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .segments
+            .iter()
+            .filter(|s| {
+                s.config == config
+                    && s.world == world
+                    && s.batch == batch
+                    && s.mode == "prefill"
+                    && s.kind == "parallel_block"
+            })
+            .map(|s| s.seq)
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    /// Absolute path of a segment's HLO text file.
+    pub fn hlo_path(&self, seg: &SegmentMeta) -> PathBuf {
+        self.root.join(&seg.file)
+    }
+
+    /// Directory holding golden parity data for a variant.
+    pub fn golden_dir(&self, variant: &str) -> Result<PathBuf> {
+        let g = self
+            .golden
+            .as_ref()
+            .context("manifest has no golden section")?;
+        if !g.variants.iter().any(|v| v == variant) {
+            bail!("no golden data for variant {variant:?}");
+        }
+        Ok(self
+            .root
+            .join("golden")
+            .join(format!("{}_w{}_{}", g.config, g.world, variant)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        let json = r#"{
+            "version": 1, "block_k": 128,
+            "configs": {"tiny": {"name":"tiny","n_layers":2,"hidden":64,
+              "n_heads":8,"n_kv_heads":8,"head_dim":8,"ffn":128,"vocab":256,
+              "max_seq":64,"rope_theta":10000.0,"norm_eps":1e-5,
+              "params":1000}},
+            "segments": [
+              {"id":"tiny_w2_b1_parallel_decode","file":"hlo/x.hlo.txt",
+               "config":"tiny","world":2,"batch":1,"kind":"parallel_block",
+               "mode":"decode","seq":1,
+               "inputs":[{"name":"x","shape":[1,1,64],"dtype":"f32"}],
+               "outputs":[{"name":"y","shape":[1,1,64],"dtype":"f32"}],
+               "weight_args":["ln1_g","wq"]},
+              {"id":"tiny_w2_b1_parallel_prefill_s16","file":"hlo/y.hlo.txt",
+               "config":"tiny","world":2,"batch":1,"kind":"parallel_block",
+               "mode":"prefill","seq":16,
+               "inputs":[],"outputs":[]}
+            ]
+        }"#;
+        Manifest::from_json_str(json, PathBuf::from("/tmp/artifacts")).unwrap()
+    }
+
+    #[test]
+    fn find_segment() {
+        let m = sample();
+        let s = m.find("tiny", 2, 1, "parallel_block", "decode", 1).unwrap();
+        assert_eq!(s.id, "tiny_w2_b1_parallel_decode");
+        assert_eq!(s.weight_args, vec!["ln1_g", "wq"]);
+        assert!(m.find("tiny", 4, 1, "parallel_block", "decode", 1).is_err());
+    }
+
+    #[test]
+    fn preset_parsed() {
+        let m = sample();
+        let p = m.preset("tiny").unwrap();
+        assert_eq!(p.n_layers, 2);
+        assert_eq!(p.vocab_local(2), 128);
+        assert_eq!(p.kv_heads_local(4), 2);
+        assert!(m.preset("nope").is_err());
+    }
+
+    #[test]
+    fn prefill_buckets_sorted() {
+        let m = sample();
+        assert_eq!(m.prefill_buckets("tiny", 2, 1), vec![16]);
+        assert!(m.prefill_buckets("tiny", 8, 1).is_empty());
+    }
+
+    #[test]
+    fn tensor_elements() {
+        let m = sample();
+        let s = m.find("tiny", 2, 1, "parallel_block", "decode", 1).unwrap();
+        assert_eq!(s.inputs[0].elements(), 64);
+    }
+
+    #[test]
+    fn hlo_path_joins_root() {
+        let m = sample();
+        let s = m.find("tiny", 2, 1, "parallel_block", "decode", 1).unwrap();
+        assert_eq!(m.hlo_path(s),
+                   PathBuf::from("/tmp/artifacts/hlo/x.hlo.txt"));
+    }
+
+    #[test]
+    fn no_golden_section_is_none() {
+        assert!(sample().golden.is_none());
+        assert!(sample().golden_dir("parallel").is_err());
+    }
+}

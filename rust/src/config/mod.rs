@@ -1,0 +1,349 @@
+//! Configuration system: engine/runtime settings (TOML), model manifest,
+//! and the optimization switches corresponding to the paper's §2.1–§2.3.
+//!
+//! Deserialization is hand-rolled over [`crate::util::Json`] (offline
+//! build — no serde; the TOML parser shares the Json value model).
+
+mod manifest;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{GoldenMeta, Manifest, ModelPreset, SegmentMeta,
+                   TensorMeta};
+
+use crate::ccl::wire::WireModel;
+use crate::util::{parse_toml, Json};
+
+/// Decoder block variant (DESIGN.md §2): `Parallel` fuses attention+FFN
+/// into one segment (ONE allreduce/layer, the paper's §2.2); `Serial` is
+/// the classic two-sync layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    Parallel,
+    Serial,
+}
+
+impl Variant {
+    pub fn syncs_per_layer(&self) -> usize {
+        match self {
+            Variant::Parallel => 1,
+            Variant::Serial => 2,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Variant> {
+        match s {
+            "parallel" => Ok(Variant::Parallel),
+            "serial" => Ok(Variant::Serial),
+            _ => bail!("unknown variant {s:?} (parallel|serial)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Variant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Variant::Parallel => write!(f, "parallel"),
+            Variant::Serial => write!(f, "serial"),
+        }
+    }
+}
+
+/// The paper's three optimizations as independent switches, so every
+/// bench can ablate them one at a time.
+#[derive(Clone, Copy, Debug)]
+pub struct OptFlags {
+    /// §2.1a: broadcast token IDs (true) vs embedding activations (false)
+    pub broadcast_ids: bool,
+    /// §2.1b: per-rank local top-k + k-pair reduce (true) vs full-logit
+    /// allgather (false)
+    pub local_topk: bool,
+    /// §2.3: zero-copy arena allreduce (true) vs staged ring (false)
+    pub zero_copy: bool,
+}
+
+impl Default for OptFlags {
+    fn default() -> Self {
+        OptFlags { broadcast_ids: true, local_topk: true, zero_copy: true }
+    }
+}
+
+impl OptFlags {
+    /// The naive baseline the paper improves on.
+    pub fn naive() -> Self {
+        OptFlags { broadcast_ids: false, local_topk: false, zero_copy: false }
+    }
+}
+
+/// Sampling parameters for generation.
+#[derive(Clone, Copy, Debug)]
+pub struct SamplingConfig {
+    /// softmax temperature; 0 => greedy
+    pub temperature: f32,
+    /// per-rank top-k candidates (the k of §2.1b)
+    pub top_k: usize,
+    /// nucleus cutoff applied over the merged candidates; 1.0 => off
+    pub top_p: f32,
+    pub seed: u64,
+}
+
+impl Default for SamplingConfig {
+    fn default() -> Self {
+        SamplingConfig { temperature: 0.0, top_k: 40, top_p: 1.0, seed: 0 }
+    }
+}
+
+/// Where rank weight shards come from.
+#[derive(Clone, Debug)]
+pub enum WeightSource {
+    /// deterministic random weights (benches, examples)
+    Synthetic { seed: u64 },
+    /// .npy files exported by aot.py (golden parity tests)
+    NpyDir { dir: PathBuf },
+}
+
+impl Default for WeightSource {
+    fn default() -> Self {
+        WeightSource::Synthetic { seed: 0 }
+    }
+}
+
+/// Top-level engine configuration (TOML-loadable; presets in `configs/`).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// model preset name from the manifest ("tiny" | "small" | "medium")
+    pub model: String,
+    pub variant: Variant,
+    /// tensor-parallel world size (ranks ≙ the paper's sockets)
+    pub world: usize,
+    /// batch lanes (decode batch bucket; must exist in the manifest)
+    pub batch: usize,
+    pub artifacts_dir: PathBuf,
+    pub weights: WeightSource,
+    pub opt: OptFlags,
+    pub sampling: SamplingConfig,
+    pub wire: WireModel,
+    /// max new tokens per request unless the request says otherwise
+    pub max_new_tokens: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            model: "tiny".into(),
+            variant: Variant::Parallel,
+            world: 2,
+            batch: 2,
+            artifacts_dir: PathBuf::from("artifacts"),
+            weights: WeightSource::default(),
+            opt: OptFlags::default(),
+            sampling: SamplingConfig::default(),
+            wire: WireModel::default(),
+            max_new_tokens: 16,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn from_toml_file(path: impl AsRef<Path>) -> Result<EngineConfig> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        Self::from_toml_str(&text)
+    }
+
+    /// Parse from TOML; unspecified fields keep their defaults.
+    pub fn from_toml_str(text: &str) -> Result<EngineConfig> {
+        let j = parse_toml(text)?;
+        let mut cfg = EngineConfig::default();
+
+        if let Some(v) = j.get("model").and_then(Json::as_str) {
+            cfg.model = v.to_string();
+        }
+        if let Some(v) = j.get("variant").and_then(Json::as_str) {
+            cfg.variant = Variant::parse(v)?;
+        }
+        if let Some(v) = j.get("world").and_then(Json::as_usize) {
+            cfg.world = v;
+        }
+        if let Some(v) = j.get("batch").and_then(Json::as_usize) {
+            cfg.batch = v;
+        }
+        if let Some(v) = j.get("artifacts_dir").and_then(Json::as_str) {
+            cfg.artifacts_dir = PathBuf::from(v);
+        }
+        if let Some(v) = j.get("max_new_tokens").and_then(Json::as_usize) {
+            cfg.max_new_tokens = v;
+        }
+        if let Some(w) = j.get("weights") {
+            match w.get("kind").and_then(Json::as_str) {
+                Some("synthetic") | None => {
+                    cfg.weights = WeightSource::Synthetic {
+                        seed: w.get("seed").and_then(Json::as_u64)
+                            .unwrap_or(0),
+                    }
+                }
+                Some("npydir") => {
+                    cfg.weights = WeightSource::NpyDir {
+                        dir: PathBuf::from(
+                            w.get("dir")
+                                .and_then(Json::as_str)
+                                .context("weights.dir required")?,
+                        ),
+                    }
+                }
+                Some(k) => bail!("unknown weights.kind {k:?}"),
+            }
+        }
+        if let Some(o) = j.get("opt") {
+            if let Some(v) = o.get("broadcast_ids").and_then(Json::as_bool) {
+                cfg.opt.broadcast_ids = v;
+            }
+            if let Some(v) = o.get("local_topk").and_then(Json::as_bool) {
+                cfg.opt.local_topk = v;
+            }
+            if let Some(v) = o.get("zero_copy").and_then(Json::as_bool) {
+                cfg.opt.zero_copy = v;
+            }
+        }
+        if let Some(s) = j.get("sampling") {
+            if let Some(v) = s.get("temperature").and_then(Json::as_f64) {
+                cfg.sampling.temperature = v as f32;
+            }
+            if let Some(v) = s.get("top_k").and_then(Json::as_usize) {
+                cfg.sampling.top_k = v;
+            }
+            if let Some(v) = s.get("top_p").and_then(Json::as_f64) {
+                cfg.sampling.top_p = v as f32;
+            }
+            if let Some(v) = s.get("seed").and_then(Json::as_u64) {
+                cfg.sampling.seed = v;
+            }
+        }
+        if let Some(w) = j.get("wire") {
+            if let Some(v) = w.get("alpha_us").and_then(Json::as_f64) {
+                cfg.wire.alpha_us = v;
+            }
+            if let Some(v) = w.get("beta_gbps").and_then(Json::as_f64) {
+                cfg.wire.beta_gbps = v;
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.world == 0 || !self.world.is_power_of_two() {
+            bail!("world must be a power of two, got {}", self.world);
+        }
+        if self.batch == 0 {
+            bail!("batch must be >= 1");
+        }
+        if self.sampling.top_k == 0 {
+            bail!("sampling.top_k must be >= 1");
+        }
+        if !(0.0..=1.0).contains(&self.sampling.top_p) {
+            bail!("sampling.top_p must be in [0,1]");
+        }
+        Ok(())
+    }
+
+    /// Load the manifest this config points at.
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(&self.artifacts_dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        EngineConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn toml_full_parse() {
+        let text = r#"
+model = "small"
+variant = "serial"
+world = 4
+batch = 1
+max_new_tokens = 32
+[weights]
+kind = "synthetic"
+seed = 7
+[opt]
+zero_copy = false
+local_topk = false
+[sampling]
+temperature = 0.8
+top_k = 50
+seed = 3
+[wire]
+alpha_us = 2.0
+beta_gbps = 10.0
+"#;
+        let cfg = EngineConfig::from_toml_str(text).unwrap();
+        assert_eq!(cfg.model, "small");
+        assert_eq!(cfg.variant, Variant::Serial);
+        assert_eq!(cfg.world, 4);
+        assert!(!cfg.opt.zero_copy);
+        assert!(!cfg.opt.local_topk);
+        assert!(cfg.opt.broadcast_ids); // untouched default
+        assert_eq!(cfg.sampling.top_k, 50);
+        assert!((cfg.sampling.temperature - 0.8).abs() < 1e-6);
+        assert!((cfg.wire.beta_gbps - 10.0).abs() < 1e-9);
+        match cfg.weights {
+            WeightSource::Synthetic { seed } => assert_eq!(seed, 7),
+            _ => panic!("wrong weight source"),
+        }
+    }
+
+    #[test]
+    fn partial_toml_uses_defaults() {
+        let cfg =
+            EngineConfig::from_toml_str("model = \"small\"\nworld = 4")
+                .unwrap();
+        assert_eq!(cfg.model, "small");
+        assert_eq!(cfg.world, 4);
+        assert!(cfg.opt.zero_copy);
+        assert_eq!(cfg.batch, 2);
+    }
+
+    #[test]
+    fn npydir_weights() {
+        let cfg = EngineConfig::from_toml_str(
+            "[weights]\nkind = \"npydir\"\ndir = \"/tmp/golden\"")
+            .unwrap();
+        match cfg.weights {
+            WeightSource::NpyDir { dir } => {
+                assert_eq!(dir, PathBuf::from("/tmp/golden"))
+            }
+            _ => panic!("wrong source"),
+        }
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(EngineConfig::from_toml_str("world = 3").is_err());
+        assert!(EngineConfig::from_toml_str("batch = 0").is_err());
+        assert!(EngineConfig::from_toml_str("variant = \"weird\"").is_err());
+        assert!(EngineConfig::from_toml_str(
+            "[sampling]\ntop_p = 1.5").is_err());
+    }
+
+    #[test]
+    fn opt_flags_naive_all_off() {
+        let n = OptFlags::naive();
+        assert!(!n.broadcast_ids && !n.local_topk && !n.zero_copy);
+    }
+
+    #[test]
+    fn variant_sync_counts() {
+        assert_eq!(Variant::Parallel.syncs_per_layer(), 1);
+        assert_eq!(Variant::Serial.syncs_per_layer(), 2);
+    }
+}

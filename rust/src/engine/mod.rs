@@ -1,0 +1,482 @@
+//! The distributed generation engine (leader side).
+//!
+//! [`Engine`] spawns one [`rank::RankWorker`] thread per tensor-parallel
+//! rank (the paper's per-socket processes), wires them into a ccl group,
+//! and drives the serving loop: admit → prefill → batched decode →
+//! retire, with continuous batching at lane granularity.
+//!
+//! The leader also maintains the *simulated-cluster* latency view
+//! (DESIGN.md §4): per-step `max(rank compute) + analytic wire cost`,
+//! because on this one-CPU testbed the rank threads time-slice a single
+//! core and measured wall-clock adds their compute up instead of
+//! overlapping it.
+
+mod proto;
+mod rank;
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ccl::{CommGroup, StatsSnapshot};
+use crate::config::{EngineConfig, ModelPreset};
+use crate::kvcache::{LaneTable, PagedAllocator};
+use crate::metrics::{RunMetrics, StepTiming};
+use crate::sampling::{self, Candidate};
+use crate::util::SplitMix64;
+
+use proto::{Cmd, Reply};
+
+/// A finished request.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub request_id: u64,
+    pub prompt_len: usize,
+    pub tokens: Vec<i32>,
+}
+
+#[derive(Debug)]
+struct PendingReq {
+    id: u64,
+    prompt: Vec<i32>,
+    max_new: usize,
+}
+
+#[derive(Debug)]
+struct ActiveReq {
+    id: u64,
+    lane: usize,
+    prompt_len: usize,
+    generated: Vec<i32>,
+    max_new: usize,
+    /// token to feed on the next decode step
+    next_token: i32,
+}
+
+/// Tensor-parallel distributed inference engine.
+pub struct Engine {
+    cfg: EngineConfig,
+    preset: ModelPreset,
+    prefill_buckets: Vec<usize>,
+    cmd_txs: Vec<Sender<Cmd>>,
+    reply_rx: Receiver<Reply>,
+    handles: Vec<JoinHandle<()>>,
+    stats: std::sync::Arc<crate::ccl::CommStats>,
+    lanes: LaneTable,
+    pages: PagedAllocator,
+    pending: VecDeque<PendingReq>,
+    active: Vec<ActiveReq>,
+    next_id: u64,
+    rng: SplitMix64,
+    pub metrics: RunMetrics,
+    eos: Option<i32>,
+}
+
+impl Engine {
+    /// Spawn rank threads, compile artifacts, load weights.  Blocks until
+    /// every rank reports ready.
+    pub fn new(cfg: EngineConfig) -> Result<Engine> {
+        cfg.validate()?;
+        let manifest = cfg.manifest()?;
+        let preset = manifest.preset(&cfg.model)?.clone();
+        let prefill_buckets =
+            manifest.prefill_buckets(&cfg.model, cfg.world, cfg.batch);
+        if prefill_buckets.is_empty() {
+            bail!(
+                "no prefill segments for model={} world={} batch={}",
+                cfg.model, cfg.world, cfg.batch
+            );
+        }
+
+        // arena must hold the largest per-sync payload
+        let max_bucket = *prefill_buckets.iter().max().unwrap();
+        let arena_elems =
+            (cfg.batch * preset.hidden).max(max_bucket * preset.hidden);
+        let group = CommGroup::new_inproc(cfg.world, arena_elems);
+        let stats = group.stats.clone();
+
+        let (reply_tx, reply_rx) = channel();
+        let mut cmd_txs = Vec::with_capacity(cfg.world);
+        let mut handles = Vec::with_capacity(cfg.world);
+        for (rank, comm) in group.into_communicators().into_iter().enumerate()
+        {
+            let (tx, rx) = channel();
+            cmd_txs.push(tx);
+            let cfg_r = cfg.clone();
+            let reply_tx = reply_tx.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("rank{rank}"))
+                    .spawn(move || {
+                        rank::RankWorker::run(rank, cfg_r, comm, rx, reply_tx)
+                    })?,
+            );
+        }
+
+        // wait for readiness
+        let mut ready = 0;
+        while ready < cfg.world {
+            match reply_rx.recv().context("rank thread died during init")? {
+                Reply::Ready { rank } => {
+                    debug_assert!(rank < cfg.world);
+                    ready += 1;
+                }
+                Reply::Error { rank, message } => {
+                    bail!("rank {rank} failed init: {message}")
+                }
+                other => bail!("unexpected init reply {other:?}"),
+            }
+        }
+
+        let lanes = LaneTable::new(cfg.batch, preset.max_seq);
+        // page accounting over the physical per-lane cache capacity
+        let page = 16;
+        let pages =
+            PagedAllocator::new(page, cfg.batch * preset.max_seq / page,
+                                cfg.batch);
+        let seed = cfg.sampling.seed;
+        let eos = crate::tokenizer::Tokenizer::byte_level(preset.vocab)
+            .ok()
+            .and_then(|t| t.eos());
+        Ok(Engine {
+            preset,
+            prefill_buckets,
+            cmd_txs,
+            reply_rx,
+            handles,
+            stats,
+            lanes,
+            pages,
+            pending: VecDeque::new(),
+            active: Vec::new(),
+            next_id: 0,
+            rng: SplitMix64::new(seed),
+            metrics: RunMetrics::default(),
+            eos,
+            cfg,
+        })
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    pub fn preset(&self) -> &ModelPreset {
+        &self.preset
+    }
+
+    pub fn comm_stats(&self) -> StatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Queue a request; returns its id.
+    pub fn enqueue(&mut self, prompt: Vec<i32>, max_new: usize) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.pending.push_back(PendingReq { id, prompt, max_new });
+        id
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.pending.is_empty() || !self.active.is_empty()
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Smallest prefill bucket that fits `len`, or the largest bucket
+    /// (prompt will be truncated to it — documented serving policy).
+    fn bucket_for(&self, len: usize) -> usize {
+        *self
+            .prefill_buckets
+            .iter()
+            .find(|&&b| b >= len)
+            .unwrap_or_else(|| self.prefill_buckets.last().unwrap())
+    }
+
+    /// One scheduler iteration: admit+prefill new requests while lanes
+    /// are free, then run one batched decode step.  Returns requests that
+    /// finished during this iteration.
+    pub fn step(&mut self) -> Result<Vec<Completion>> {
+        let mut done = Vec::new();
+
+        // ---- admission + prefill (continuous batching) ----
+        while !self.pending.is_empty() && self.lanes.free_lanes() > 0 {
+            let req = self.pending.front().unwrap();
+            let bucket = self.bucket_for(req.prompt.len());
+            let worst = (req.prompt.len().min(bucket) + req.max_new)
+                .min(self.preset.max_seq);
+            if !self.pages.can_admit(worst) {
+                break; // wait for capacity
+            }
+            let req = self.pending.pop_front().unwrap();
+            let completion = self.admit_and_prefill(req, bucket, worst)?;
+            if let Some(c) = completion {
+                done.push(c); // 0-token request edge case
+            }
+        }
+
+        // ---- batched decode ----
+        if !self.active.is_empty() {
+            let finished = self.decode_step()?;
+            done.extend(finished);
+        }
+        Ok(done)
+    }
+
+    /// Run until all queued requests complete.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        let mut all = Vec::new();
+        while self.has_work() {
+            all.extend(self.step()?);
+        }
+        Ok(all)
+    }
+
+    /// Convenience: generate `max_new` tokens for each prompt (greedy or
+    /// sampled per the config), returning token streams in order.
+    pub fn generate(&mut self, prompts: &[Vec<i32>], max_new: usize)
+                    -> Result<Vec<Vec<i32>>> {
+        let ids: Vec<u64> = prompts
+            .iter()
+            .map(|p| self.enqueue(p.clone(), max_new))
+            .collect();
+        let mut done = self.run_to_completion()?;
+        done.sort_by_key(|c| c.request_id);
+        Ok(ids
+            .iter()
+            .map(|id| {
+                done.iter()
+                    .find(|c| c.request_id == *id)
+                    .map(|c| c.tokens.clone())
+                    .unwrap_or_default()
+            })
+            .collect())
+    }
+
+    /// Reset all rank KV caches and lane state (bench harness hook).
+    pub fn reset(&mut self) -> Result<()> {
+        for tx in &self.cmd_txs {
+            tx.send(Cmd::Reset).ok();
+        }
+        for _ in 0..self.cfg.world {
+            match self.reply_rx.recv()? {
+                Reply::ResetDone { rank } => debug_assert!(rank < self.cfg.world),
+                Reply::Error { rank, message } => {
+                    bail!("rank {rank} reset failed: {message}")
+                }
+                other => bail!("unexpected reset reply {other:?}"),
+            }
+        }
+        self.lanes = LaneTable::new(self.cfg.batch, self.preset.max_seq);
+        let page = 16;
+        self.pages = PagedAllocator::new(
+            page, self.cfg.batch * self.preset.max_seq / page,
+            self.cfg.batch);
+        self.pending.clear();
+        self.active.clear();
+        Ok(())
+    }
+
+    // ---- internals -----------------------------------------------------
+
+    fn admit_and_prefill(&mut self, req: PendingReq, bucket: usize,
+                         worst: usize) -> Result<Option<Completion>> {
+        let mut prompt = req.prompt.clone();
+        prompt.truncate(bucket);
+        let length = prompt.len().max(1);
+        let lane = self.lanes.alloc(req.id, length)?;
+        self.pages.admit(lane, worst)?;
+
+        let mut padded = prompt.clone();
+        padded.resize(bucket, 0);
+
+        let t0 = Instant::now();
+        for (rank, tx) in self.cmd_txs.iter().enumerate() {
+            // only rank 0 gets ids from the leader; the others receive
+            // them through the §2.1a broadcast (or, in the baseline, the
+            // embedded activations)
+            let tokens = (rank == 0).then(|| padded.clone());
+            tx.send(Cmd::Prefill { lane, bucket, tokens, length })
+                .context("rank channel closed")?;
+        }
+        let (cands, _timing) = self.collect_round(true)?;
+        self.metrics.record_prefill(t0.elapsed());
+
+        let cands =
+            cands.context("rank 0 returned no prefill candidates")?;
+        let first = self.sample_one(&cands[0]);
+        self.metrics.tokens_out += 1; // the prefill-sampled token
+
+        let mut active = ActiveReq {
+            id: req.id,
+            lane,
+            prompt_len: length,
+            generated: vec![first],
+            max_new: req.max_new,
+            next_token: first,
+        };
+        if req.max_new <= 1 || Some(first) == self.eos {
+            let c = self.retire(&mut active)?;
+            return Ok(Some(c));
+        }
+        self.active.push(active);
+        Ok(None)
+    }
+
+    fn decode_step(&mut self) -> Result<Vec<Completion>> {
+        let b = self.cfg.batch;
+        let mut tokens = vec![0i32; b];
+        for a in &self.active {
+            tokens[a.lane] = a.next_token;
+        }
+        let positions = self.lanes.positions();
+
+        let t0 = Instant::now();
+        for (rank, tx) in self.cmd_txs.iter().enumerate() {
+            let toks = (rank == 0).then(|| tokens.clone());
+            tx.send(Cmd::Decode { tokens: toks, positions: positions.clone() })
+                .context("rank channel closed")?;
+        }
+        let (cands, mut timing) = self.collect_round(false)?;
+        timing.wall_us = t0.elapsed().as_micros() as u64;
+        timing.world = self.cfg.world as u64;
+        timing.comm_sim_us = self.sim_comm_us(false);
+
+        let cands = cands.context("rank 0 returned no candidates")?;
+
+        let t_sample = Instant::now();
+        let mut finished = Vec::new();
+        let mut idx = 0;
+        while idx < self.active.len() {
+            let lane = self.active[idx].lane;
+            let tok = self.sample_one(&cands[lane]);
+            let a = &mut self.active[idx];
+            a.generated.push(tok);
+            a.next_token = tok;
+            self.lanes.advance(lane)?;
+            let done = a.generated.len() >= a.max_new
+                || Some(tok) == self.eos
+                || self.lanes.len_of(lane) == Some(self.preset.max_seq);
+            if done {
+                let mut a = self.active.swap_remove(idx);
+                finished.push(self.retire(&mut a)?);
+            } else {
+                idx += 1;
+            }
+        }
+        timing.sample_us = t_sample.elapsed().as_micros() as u64;
+        let new_tokens = (self.active.len() + finished.len()) as u64;
+        self.metrics.record_decode(&timing, new_tokens);
+        Ok(finished)
+    }
+
+    /// Gather one Reply from every rank; return rank-0 candidates and the
+    /// compute-timing aggregate.
+    fn collect_round(&mut self, prefill: bool)
+                     -> Result<(Option<Vec<Vec<Candidate>>>, StepTiming)> {
+        let mut timing = StepTiming::default();
+        let mut cands = None;
+        let mut seen = vec![false; self.cfg.world];
+        for _ in 0..self.cfg.world {
+            let (rank, compute_us, comm_us) =
+                match self.reply_rx.recv().context("rank thread died")? {
+                    Reply::StepDone {
+                        rank, compute_us, comm_us, candidates,
+                    } if !prefill => {
+                        if let Some(c) = candidates {
+                            cands = Some(c);
+                        }
+                        (rank, compute_us, comm_us)
+                    }
+                    Reply::PrefillDone {
+                        rank, compute_us, comm_us, candidates,
+                    } if prefill => {
+                        if let Some(c) = candidates {
+                            cands = Some(vec![c]);
+                        }
+                        (rank, compute_us, comm_us)
+                    }
+                    Reply::Error { rank, message } => {
+                        bail!("rank {rank}: {message}")
+                    }
+                    other => bail!("unexpected reply {other:?}"),
+                };
+            // SPMD sanity: each rank answers exactly once per round
+            anyhow::ensure!(!std::mem::replace(&mut seen[rank], true),
+                            "rank {rank} replied twice in one round");
+            timing.compute_total_us += compute_us;
+            timing.compute_max_us = timing.compute_max_us.max(compute_us);
+            timing.comm_wall_us = timing.comm_wall_us.max(comm_us);
+        }
+        Ok((cands, timing))
+    }
+
+    /// Analytic cross-socket communication cost of one round (µs) — the
+    /// simulated-cluster component of StepTiming (DESIGN.md §4).
+    fn sim_comm_us(&self, prefill: bool) -> u64 {
+        let w = self.cfg.world;
+        let m = &self.cfg.wire;
+        let h = self.preset.hidden;
+        let b = self.cfg.batch;
+        let seq = if prefill {
+            *self.prefill_buckets.last().unwrap()
+        } else {
+            1
+        };
+        let payload = (b.max(1) * seq * h * 4) as u64;
+        let syncs =
+            self.preset.n_layers * self.cfg.variant.syncs_per_layer();
+        let mut us = syncs as f64 * m.allreduce_us(payload, w);
+        us += if self.cfg.opt.broadcast_ids {
+            m.broadcast_us((b * seq * 4) as u64, w)
+        } else {
+            m.broadcast_us(payload, w)
+        };
+        us += if self.cfg.opt.local_topk {
+            m.gather_us((self.cfg.sampling.top_k * 8 * b) as u64, w)
+        } else {
+            m.allgather_us((b * self.preset.vocab_local(w) * 4) as u64, w)
+        };
+        us as u64
+    }
+
+    fn sample_one(&mut self, cands: &[Candidate]) -> i32 {
+        sampling::sample(
+            cands,
+            self.cfg.sampling.temperature,
+            self.cfg.sampling.top_p,
+            &mut self.rng,
+        ) as i32
+    }
+
+    fn retire(&mut self, a: &mut ActiveReq) -> Result<Completion> {
+        self.lanes.free(a.lane);
+        self.pages.release(a.lane);
+        self.metrics.requests_done += 1;
+        Ok(Completion {
+            request_id: a.id,
+            prompt_len: a.prompt_len,
+            tokens: std::mem::take(&mut a.generated),
+        })
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        for tx in &self.cmd_txs {
+            let _ = tx.send(Cmd::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Leader ⇄ rank-thread protocol.
+//!
+//! The leader thread plays the paper's "master" role: it owns the
+//! request queue and the sampler, broadcasts token IDs down to the ranks
+//! at the start of every round (§2.1a — the `Cmd` fan-out to rank 0 plus
+//! the in-group ccl broadcast), and receives the merged top-k candidates
+//! from rank 0 at the end (§2.1b).
+
+use crate::sampling::Candidate;
+
+/// Commands the leader issues to rank threads.
+#[derive(Debug)]
+pub enum Cmd {
+    /// Prefill one lane with a padded prompt.
+    /// `tokens` is only populated for rank 0 (ids flow §2.1a-style
+    /// through the ccl broadcast to the other ranks).
+    Prefill {
+        lane: usize,
+        bucket: usize,
+        /// prompt padded to `bucket` length; rank 0 only
+        tokens: Option<Vec<i32>>,
+        length: usize,
+    },
+    /// One batched decode step over all lanes.
+    /// `tokens[b]` is the token to feed lane `b` (0 for inactive lanes);
+    /// rank 0 only, others receive via broadcast.
+    Decode {
+        tokens: Option<Vec<i32>>,
+        positions: Vec<i32>,
+    },
+    /// Reset all KV caches + lane state (between bench iterations).
+    Reset,
+    Shutdown,
+}
+
+/// Replies from rank threads to the leader.
+#[derive(Debug)]
+pub enum Reply {
+    Ready {
+        rank: usize,
+    },
+    PrefillDone {
+        rank: usize,
+        /// µs spent in segment execution on this rank
+        compute_us: u64,
+        /// µs spent inside collectives on this rank
+        comm_us: u64,
+        /// merged top-k for the prefilled lane (rank 0 only)
+        candidates: Option<Vec<Candidate>>,
+    },
+    StepDone {
+        rank: usize,
+        compute_us: u64,
+        comm_us: u64,
+        /// merged per-lane top-k (rank 0 only)
+        candidates: Option<Vec<Vec<Candidate>>>,
+    },
+    ResetDone {
+        rank: usize,
+    },
+    Error {
+        rank: usize,
+        message: String,
+    },
+}

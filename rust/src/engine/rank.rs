@@ -1,0 +1,551 @@
+//! Rank worker: one thread per tensor-parallel rank (≙ one socket in the
+//! paper), owning its PJRT client, weight shards and KV caches, and
+//! participating in the group collectives.
+//!
+//! The decode round implements the paper's distributed round verbatim:
+//!
+//! ```text
+//! recv token IDs (§2.1a broadcast)          — 4 bytes/lane, not B·H·4
+//!   └ embed locally (replicated table)
+//! for each layer:
+//!     segment execute (attention ∥ FFN fused when Variant::Parallel —
+//!                      §2.2: ONE partial-sum output)
+//!     partial → arena slot (§2.3 zero-copy hand-off)
+//!     allreduce in place, residual-add into x
+//! lm-head shard → local top-k (§2.1b) → k-pair gather to rank 0
+//! ```
+//!
+//! Every baseline the benches ablate against flips exactly one of those
+//! arrows (embedding-value broadcast, two-sync serial layers, staged-copy
+//! ring, full-logit allgather).
+
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::PjRtBuffer;
+
+use crate::ccl::{bytes_to_f32, f32_to_bytes, Communicator, ReduceOp};
+use crate::config::{EngineConfig, Manifest, ModelPreset, Variant};
+use crate::model::{load_rank_weights, RankWeights};
+use crate::runtime::RankRuntime;
+use crate::sampling::{self, Candidate};
+
+use super::proto::{Cmd, Reply};
+
+/// Segment-id bundle for one (variant, bucket) family.
+struct SegIds {
+    embed_decode: String,
+    lm_head: String,
+    /// decode-step layer segments in execution order
+    layer_decode: Vec<(String, Vec<String>)>, // (id, weight_args)
+    /// prefill segments per bucket size
+    embed_prefill: HashMap<usize, String>,
+    layer_prefill: HashMap<usize, Vec<(String, Vec<String>)>>,
+}
+
+pub(super) struct RankWorker {
+    rank: usize,
+    world: usize,
+    cfg: EngineConfig,
+    preset: ModelPreset,
+    rt: RankRuntime,
+    weights: RankWeights,
+    comm: Communicator,
+    segs: SegIds,
+    /// per-layer device-resident (k_cache, v_cache)
+    caches: Vec<(PjRtBuffer, PjRtBuffer)>,
+    // reusable host scratch
+    x_host: Vec<f32>,
+    logits_host: Vec<f32>,
+    compute_us: Cell<u64>,
+    comm_us: Cell<u64>,
+}
+
+impl RankWorker {
+    /// Thread entry point.
+    pub(super) fn run(
+        rank: usize,
+        cfg: EngineConfig,
+        comm: Communicator,
+        cmd_rx: Receiver<Cmd>,
+        reply_tx: Sender<Reply>,
+    ) {
+        match Self::init(rank, cfg, comm) {
+            Ok(mut w) => {
+                let _ = reply_tx.send(Reply::Ready { rank });
+                w.serve(cmd_rx, reply_tx);
+            }
+            Err(e) => {
+                let _ = reply_tx.send(Reply::Error {
+                    rank,
+                    message: format!("init: {e:#}"),
+                });
+            }
+        }
+    }
+
+    fn init(rank: usize, cfg: EngineConfig, comm: Communicator)
+            -> Result<Self> {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let preset = manifest.preset(&cfg.model)?.clone();
+        let mut rt = RankRuntime::new()?;
+
+        let (world, batch) = (cfg.world, cfg.batch);
+        let layer_kinds: Vec<&str> = match cfg.variant {
+            Variant::Parallel => vec!["parallel_block"],
+            Variant::Serial => vec!["serial_attn", "serial_ffn"],
+        };
+
+        let mut to_compile = Vec::new();
+        {
+            let mut find = |kind: &str, mode: &str, seq: usize| -> Result<_> {
+                let seg = manifest
+                    .find(&cfg.model, world, batch, kind, mode, seq)?
+                    .clone();
+                to_compile.push(seg.clone());
+                Ok(seg)
+            };
+            let embed_decode = find("embed", "decode", 1)?.id;
+            let lm_head = find("lm_head", "decode", 1)?.id;
+            let mut layer_decode = Vec::new();
+            for kind in &layer_kinds {
+                let seg = find(kind, "decode", 1)?;
+                layer_decode.push((seg.id, seg.weight_args));
+            }
+            let buckets = manifest.prefill_buckets(&cfg.model, world, batch);
+            let mut embed_prefill = HashMap::new();
+            let mut layer_prefill = HashMap::new();
+            for &s in &buckets {
+                embed_prefill.insert(s, find("embed", "prefill", s)?.id);
+                let mut layers = Vec::new();
+                for kind in &layer_kinds {
+                    let seg = find(kind, "prefill", s)?;
+                    layers.push((seg.id, seg.weight_args));
+                }
+                layer_prefill.insert(s, layers);
+            }
+            let segs = SegIds {
+                embed_decode,
+                lm_head,
+                layer_decode,
+                embed_prefill,
+                layer_prefill,
+            };
+            for seg in &to_compile {
+                rt.compile_segment(&manifest, seg)?;
+            }
+
+            let weights = load_rank_weights(
+                &rt, &manifest, &cfg.model, world, rank, batch, &cfg.weights)?;
+            let caches = Self::fresh_caches(&rt, &preset, world, batch)?;
+
+            let hidden = preset.hidden;
+            let max_bucket =
+                buckets.iter().copied().max().unwrap_or(1).max(1);
+            Ok(RankWorker {
+                rank,
+                world,
+                preset: preset.clone(),
+                rt,
+                weights,
+                comm,
+                segs,
+                caches,
+                x_host: vec![0.0; batch.max(1) * hidden * max_bucket],
+                logits_host: vec![0.0; batch * preset.vocab_local(world)],
+                compute_us: Cell::new(0),
+                comm_us: Cell::new(0),
+                cfg,
+            })
+        }
+    }
+
+    fn fresh_caches(rt: &RankRuntime, preset: &ModelPreset, world: usize,
+                    batch: usize) -> Result<Vec<(PjRtBuffer, PjRtBuffer)>> {
+        let dims = [
+            batch,
+            preset.kv_heads_local(world),
+            preset.max_seq,
+            preset.head_dim,
+        ];
+        (0..preset.n_layers)
+            .map(|_| Ok((rt.zeros_f32(&dims)?, rt.zeros_f32(&dims)?)))
+            .collect()
+    }
+
+    fn serve(&mut self, cmd_rx: Receiver<Cmd>, reply_tx: Sender<Reply>) {
+        while let Ok(cmd) = cmd_rx.recv() {
+            let reply = match cmd {
+                Cmd::Prefill { lane, bucket, tokens, length } => {
+                    self.compute_us.set(0);
+                    self.comm_us.set(0);
+                    match self.prefill(lane, bucket, tokens, length) {
+                        Ok(c) => Reply::PrefillDone {
+                            rank: self.rank,
+                            compute_us: self.compute_us.get(),
+                            comm_us: self.comm_us.get(),
+                            candidates: c,
+                        },
+                        Err(e) => Reply::Error {
+                            rank: self.rank,
+                            message: format!("prefill: {e:#}"),
+                        },
+                    }
+                }
+                Cmd::Decode { tokens, positions } => {
+                    self.compute_us.set(0);
+                    self.comm_us.set(0);
+                    match self.decode(tokens, &positions) {
+                        Ok(c) => Reply::StepDone {
+                            rank: self.rank,
+                            compute_us: self.compute_us.get(),
+                            comm_us: self.comm_us.get(),
+                            candidates: c,
+                        },
+                        Err(e) => Reply::Error {
+                            rank: self.rank,
+                            message: format!("decode: {e:#}"),
+                        },
+                    }
+                }
+                Cmd::Reset => match self.reset() {
+                    Ok(()) => Reply::ResetDone { rank: self.rank },
+                    Err(e) => Reply::Error {
+                        rank: self.rank,
+                        message: format!("reset: {e:#}"),
+                    },
+                },
+                Cmd::Shutdown => break,
+            };
+            if reply_tx.send(reply).is_err() {
+                break;
+            }
+        }
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.caches = Self::fresh_caches(&self.rt, &self.preset, self.world,
+                                         self.cfg.batch)?;
+        Ok(())
+    }
+
+    // ---- timed helpers --------------------------------------------------
+
+    fn timed_exec(&self, seg: &str, args: &[&PjRtBuffer])
+                  -> Result<Vec<PjRtBuffer>> {
+        let t0 = Instant::now();
+        let out = self.rt.execute(seg, args)?;
+        self.compute_us
+            .set(self.compute_us.get() + t0.elapsed().as_micros() as u64);
+        Ok(out)
+    }
+
+    /// §2.1a boundary: distribute this round's token ids from rank 0 via
+    /// the ccl broadcast (4 bytes per lane on the wire).
+    fn distribute_tokens(&self, tokens: Option<Vec<i32>>)
+                         -> Result<Vec<i32>> {
+        let t0 = Instant::now();
+        let mut buf = match &tokens {
+            Some(t) => {
+                let mut b = Vec::with_capacity(t.len() * 4);
+                for id in t {
+                    b.extend_from_slice(&id.to_le_bytes());
+                }
+                b
+            }
+            None => Vec::new(),
+        };
+        self.comm.broadcast(&mut buf, 0)?;
+        self.comm_us
+            .set(self.comm_us.get() + t0.elapsed().as_micros() as u64);
+        Ok(buf
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    /// Baseline §2.1a OFF: rank 0 embeds and broadcasts activation
+    /// *values* (B·S·H·4 bytes); other ranks upload them.
+    fn embed_broadcast_baseline(&self, embed_seg: &str,
+                                tokens: Option<Vec<i32>>,
+                                token_dims: &[usize], x_elems: usize,
+                                x_dims: &[usize]) -> Result<PjRtBuffer> {
+        let t0;
+        if self.rank == 0 {
+            let tokens = tokens.context("rank 0 needs tokens")?;
+            let tok_buf = self.rt.upload_i32(&tokens, token_dims)?;
+            let outs = self
+                .timed_exec(embed_seg, &[&tok_buf, &self.weights.embedding])?;
+            let x_buf = outs.into_iter().next().unwrap();
+            t0 = Instant::now();
+            let mut host = vec![0.0f32; x_elems];
+            self.rt.download_f32_into(&x_buf, &mut host)?;
+            self.comm.stats().record_staging((x_elems * 4) as u64);
+            let mut bytes = f32_to_bytes(&host);
+            self.comm.broadcast(&mut bytes, 0)?;
+            self.comm_us
+                .set(self.comm_us.get() + t0.elapsed().as_micros() as u64);
+            Ok(x_buf)
+        } else {
+            t0 = Instant::now();
+            let mut bytes = Vec::new();
+            self.comm.broadcast(&mut bytes, 0)?;
+            let host = bytes_to_f32(&bytes);
+            self.comm_us
+                .set(self.comm_us.get() + t0.elapsed().as_micros() as u64);
+            Ok(self.rt.upload_f32(&host, x_dims)?)
+        }
+    }
+
+    // ---- prefill ---------------------------------------------------------
+
+    fn prefill(&mut self, lane: usize, bucket: usize,
+               tokens: Option<Vec<i32>>, length: usize)
+               -> Result<Option<Vec<Candidate>>> {
+        let h = self.preset.hidden;
+        let n = bucket * h;
+        let embed_seg = self.segs.embed_prefill[&bucket].clone();
+
+        let x_buf = if self.cfg.opt.broadcast_ids {
+            let tokens = self.distribute_tokens(tokens)?;
+            let tok_buf = self.rt.upload_i32(&tokens, &[1, bucket])?;
+            self.timed_exec(&embed_seg, &[&tok_buf, &self.weights.embedding])?
+                .into_iter()
+                .next()
+                .unwrap()
+        } else {
+            self.embed_broadcast_baseline(
+                &embed_seg, tokens, &[1, bucket], n, &[1, bucket, h])?
+        };
+
+        let mut x = std::mem::take(&mut self.x_host);
+        if x.len() < n {
+            x.resize(n, 0.0);
+        }
+        self.rt.download_f32_into(&x_buf, &mut x[..n])?;
+
+        let lane_buf = self.rt.upload_i32(&[lane as i32], &[1])?;
+        let len_buf = self.rt.upload_i32(&[length as i32], &[1])?;
+
+        let n_layers = self.preset.n_layers;
+        let mut x_dev = x_buf;
+        for li in 0..n_layers {
+            for seg_idx in 0..self.segs.layer_prefill[&bucket].len() {
+                let (seg_id, wargs) = &self.segs.layer_prefill[&bucket][seg_idx];
+                let wbufs = self.weights.layer_args(li, wargs)?;
+                let is_attn = wargs.iter().any(|w| w == "wq");
+                let mut args: Vec<&PjRtBuffer> = vec![&x_dev];
+                let (kc, vc) = &self.caches[li];
+                if is_attn {
+                    args.extend([kc, vc, &lane_buf, &len_buf]);
+                }
+                args.extend(wbufs);
+                let seg_id = seg_id.clone();
+                let mut outs = self.timed_exec(&seg_id, &args)?;
+                drop(args);
+                if is_attn {
+                    let vc_new = outs.pop().unwrap();
+                    let kc_new = outs.pop().unwrap();
+                    self.caches[li] = (kc_new, vc_new);
+                }
+                let y_buf = outs.pop().unwrap();
+                reduce_partial(&self.rt, &mut self.comm,
+                               self.cfg.opt.zero_copy, &y_buf, n, &mut x,
+                               &self.comm_us)?;
+                x_dev = self.rt.upload_f32(&x[..n], &[1, bucket, h])?;
+            }
+        }
+
+        // first-token logits: place the lane's last valid row into a
+        // zeroed [B,1,H] head input
+        let b = self.cfg.batch;
+        let mut head_in = vec![0.0f32; b * h];
+        let row = (length - 1) * h;
+        head_in[lane * h..(lane + 1) * h].copy_from_slice(&x[row..row + h]);
+        self.x_host = x;
+        let head_buf = self.rt.upload_f32(&head_in, &[b, 1, h])?;
+        let cands = self.lm_head_candidates(&head_buf)?;
+        Ok(cands.map(|per_lane| per_lane.into_iter().nth(lane).unwrap()))
+    }
+
+    // ---- decode -----------------------------------------------------------
+
+    fn decode(&mut self, tokens: Option<Vec<i32>>, positions: &[i32])
+              -> Result<Option<Vec<Vec<Candidate>>>> {
+        let b = self.cfg.batch;
+        let h = self.preset.hidden;
+        let n = b * h;
+
+        let x_buf = if self.cfg.opt.broadcast_ids {
+            let tokens = self.distribute_tokens(tokens)?;
+            let tok_buf = self.rt.upload_i32(&tokens, &[b, 1])?;
+            let embed_seg = self.segs.embed_decode.clone();
+            self.timed_exec(&embed_seg, &[&tok_buf, &self.weights.embedding])?
+                .into_iter()
+                .next()
+                .unwrap()
+        } else {
+            let embed_seg = self.segs.embed_decode.clone();
+            self.embed_broadcast_baseline(&embed_seg, tokens, &[b, 1], n,
+                                          &[b, 1, h])?
+        };
+
+        let mut x = std::mem::take(&mut self.x_host);
+        if x.len() < n {
+            x.resize(n, 0.0);
+        }
+        self.rt.download_f32_into(&x_buf, &mut x[..n])?;
+
+        let pos_buf = self.rt.upload_i32(positions, &[b])?;
+        let n_layers = self.preset.n_layers;
+        let mut x_dev = x_buf;
+        for li in 0..n_layers {
+            for seg_idx in 0..self.segs.layer_decode.len() {
+                let (seg_id, wargs) = &self.segs.layer_decode[seg_idx];
+                let wbufs = self.weights.layer_args(li, wargs)?;
+                let is_attn = wargs.iter().any(|w| w == "wq");
+                let mut args: Vec<&PjRtBuffer> = vec![&x_dev];
+                let (kc, vc) = &self.caches[li];
+                if is_attn {
+                    args.extend([kc, vc, &pos_buf]);
+                }
+                args.extend(wbufs);
+                let seg_id = seg_id.clone();
+                let mut outs = self.timed_exec(&seg_id, &args)?;
+                drop(args);
+                if is_attn {
+                    let vc_new = outs.pop().unwrap();
+                    let kc_new = outs.pop().unwrap();
+                    self.caches[li] = (kc_new, vc_new);
+                }
+                let y_buf = outs.pop().unwrap();
+                reduce_partial(&self.rt, &mut self.comm,
+                               self.cfg.opt.zero_copy, &y_buf, n, &mut x,
+                               &self.comm_us)?;
+                x_dev = self.rt.upload_f32(&x[..n], &[b, 1, h])?;
+            }
+        }
+        self.x_host = x;
+        self.lm_head_candidates(&x_dev)
+    }
+
+    /// lm-head + the §2.1b ending: local top-k then k-pair gather
+    /// (optimized) or full-logit allgather (baseline).  Returns merged
+    /// per-lane candidates on rank 0, None elsewhere.
+    fn lm_head_candidates(&mut self, x_dev: &PjRtBuffer)
+                          -> Result<Option<Vec<Vec<Candidate>>>> {
+        let b = self.cfg.batch;
+        let v_l = self.preset.vocab_local(self.world);
+        let k = self.cfg.sampling.top_k.min(v_l);
+        let seg = self.segs.lm_head.clone();
+        let outs = self.timed_exec(
+            &seg, &[x_dev, &self.weights.final_g, &self.weights.lm_head])?;
+        let logits_buf = &outs[0];
+        let mut logits = std::mem::take(&mut self.logits_host);
+        logits.resize(b * v_l, 0.0);
+        self.rt.download_f32_into(logits_buf, &mut logits)?;
+
+        let offset = self.rank * v_l;
+        let result = if self.cfg.opt.local_topk {
+            // local top-k per lane, gather k pairs (§2.1b ON)
+            let t0 = Instant::now();
+            let mut payload = Vec::with_capacity(b * k * 8);
+            for lane in 0..b {
+                let cands = sampling::local_topk(
+                    &logits[lane * v_l..(lane + 1) * v_l], k, offset);
+                let mut bytes = sampling::encode_candidates(&cands);
+                bytes.resize(k * 8, 0xff); // pad: fixed frame per lane
+                payload.extend_from_slice(&bytes);
+            }
+            let gathered = self.comm.gather(&payload, 0)?;
+            let out = gathered.map(|per_rank| {
+                (0..b)
+                    .map(|lane| {
+                        let lists: Vec<Vec<Candidate>> = per_rank
+                            .iter()
+                            .map(|bytes| {
+                                sampling::decode_candidates(
+                                    &bytes[lane * k * 8..(lane + 1) * k * 8],
+                                )
+                                .into_iter()
+                                .filter(|c| c.token != u32::MAX)
+                                .collect()
+                            })
+                            .collect();
+                        sampling::merge_topk(&lists, k)
+                    })
+                    .collect()
+            });
+            self.comm_us
+                .set(self.comm_us.get() + t0.elapsed().as_micros() as u64);
+            out
+        } else {
+            // baseline: allgather the full logit shards
+            let t0 = Instant::now();
+            let mut full = vec![0.0f32; self.world * b * v_l];
+            self.comm.allgather(&logits[..b * v_l], &mut full)?;
+            self.comm.stats().record_staging((b * v_l * 4) as u64);
+            let out = if self.rank == 0 {
+                let v = self.preset.vocab;
+                let mut per_lane = Vec::with_capacity(b);
+                for lane in 0..b {
+                    let mut row = Vec::with_capacity(v);
+                    for r in 0..self.world {
+                        let base = r * b * v_l + lane * v_l;
+                        row.extend_from_slice(&full[base..base + v_l]);
+                    }
+                    per_lane.push(sampling::global_topk(&row, k));
+                }
+                Some(per_lane)
+            } else {
+                None
+            };
+            self.comm_us
+                .set(self.comm_us.get() + t0.elapsed().as_micros() as u64);
+            out
+        };
+        self.logits_host = logits;
+        Ok(result)
+    }
+}
+
+/// The collective boundary of every layer: move a segment's partial-sum
+/// output (`y_buf`, `n` floats) through the allreduce and add the
+/// reduction into the replicated residual stream `x`.
+///
+/// Zero-copy (§2.3 ON): device → arena slot → in-place allreduce.
+/// Staged (OFF / TCP): device → literal → vec → ring (copy per hop) → x.
+fn reduce_partial(
+    rt: &RankRuntime,
+    comm: &mut Communicator,
+    zero_copy: bool,
+    y_buf: &PjRtBuffer,
+    n: usize,
+    x: &mut [f32],
+    comm_us: &Cell<u64>,
+) -> Result<()> {
+    let t0 = Instant::now();
+    if zero_copy && comm.has_arena() {
+        {
+            let slot = comm.arena_mut(n)?;
+            rt.download_f32_into(y_buf, slot)?;
+        }
+        comm.allreduce_arena(n, ReduceOp::Sum)?;
+        let slot = comm.arena(n)?;
+        for (xi, yi) in x[..n].iter_mut().zip(slot) {
+            *xi += *yi;
+        }
+    } else {
+        let mut y = rt.download_f32_staged(y_buf)?;
+        comm.stats().record_staging((n * 4) as u64);
+        comm.allreduce_staged(&mut y, ReduceOp::Sum)?;
+        for (xi, yi) in x[..n].iter_mut().zip(&y) {
+            *xi += *yi;
+        }
+    }
+    comm_us.set(comm_us.get() + t0.elapsed().as_micros() as u64);
+    Ok(())
+}

@@ -1,0 +1,301 @@
+//! KV-cache management: batch-lane allocation + paged capacity accounting.
+//!
+//! The physical KV cache is a device-resident tensor per (rank, layer)
+//! shaped `[batch_lanes, kv_heads_local, max_seq, head_dim]`, chained
+//! through the decode segments (it never crosses the host boundary).
+//! This module is the L3 brain on top of it:
+//!
+//! * [`LaneTable`] — which request owns which batch lane, and the valid
+//!   sequence length per lane (the `pos`/`length` inputs of the decode
+//!   segments are read straight from here).
+//! * [`PagedAllocator`] — vLLM-style page accounting used by the
+//!   scheduler for admission control: a request is only admitted when its
+//!   worst-case page need fits, so decode can never run out of cache
+//!   mid-flight.
+
+use anyhow::{bail, Result};
+
+/// State of one batch lane.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Lane {
+    Free,
+    Active { request_id: u64, len: usize },
+}
+
+/// Tracks ownership + sequence length of every batch lane.
+#[derive(Debug)]
+pub struct LaneTable {
+    lanes: Vec<Lane>,
+    max_seq: usize,
+}
+
+impl LaneTable {
+    pub fn new(n_lanes: usize, max_seq: usize) -> Self {
+        LaneTable { lanes: vec![Lane::Free; n_lanes], max_seq }
+    }
+
+    pub fn n_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    /// Claim a free lane for `request_id` with initial length `len`.
+    pub fn alloc(&mut self, request_id: u64, len: usize) -> Result<usize> {
+        if len == 0 || len > self.max_seq {
+            bail!("initial length {len} out of range (max_seq {})",
+                  self.max_seq);
+        }
+        for (i, lane) in self.lanes.iter_mut().enumerate() {
+            if *lane == Lane::Free {
+                *lane = Lane::Active { request_id, len };
+                return Ok(i);
+            }
+        }
+        bail!("no free lane");
+    }
+
+    pub fn free(&mut self, lane: usize) {
+        self.lanes[lane] = Lane::Free;
+    }
+
+    pub fn lane(&self, lane: usize) -> &Lane {
+        &self.lanes[lane]
+    }
+
+    pub fn is_active(&self, lane: usize) -> bool {
+        matches!(self.lanes[lane], Lane::Active { .. })
+    }
+
+    pub fn active_lanes(&self) -> Vec<usize> {
+        (0..self.lanes.len()).filter(|&i| self.is_active(i)).collect()
+    }
+
+    pub fn free_lanes(&self) -> usize {
+        self.lanes.iter().filter(|l| **l == Lane::Free).count()
+    }
+
+    /// Length of an active lane.
+    pub fn len_of(&self, lane: usize) -> Option<usize> {
+        match self.lanes[lane] {
+            Lane::Active { len, .. } => Some(len),
+            Lane::Free => None,
+        }
+    }
+
+    /// Advance an active lane by one decoded token. Errors at max_seq —
+    /// the scheduler must retire the request before the cache overflows.
+    pub fn advance(&mut self, lane: usize) -> Result<usize> {
+        match &mut self.lanes[lane] {
+            Lane::Active { len, .. } => {
+                if *len >= self.max_seq {
+                    bail!("lane {lane} at max_seq {}", self.max_seq);
+                }
+                *len += 1;
+                Ok(*len)
+            }
+            Lane::Free => bail!("lane {lane} is free"),
+        }
+    }
+
+    /// Per-lane `pos` vector for the decode segment: active lanes insert
+    /// at their current length; free lanes park at position 0 (their
+    /// output is discarded and row 0 is rewritten by the next prefill).
+    pub fn positions(&self) -> Vec<i32> {
+        self.lanes
+            .iter()
+            .map(|l| match l {
+                Lane::Active { len, .. } => *len as i32,
+                Lane::Free => 0,
+            })
+            .collect()
+    }
+
+    /// request_id of an active lane.
+    pub fn request_of(&self, lane: usize) -> Option<u64> {
+        match self.lanes[lane] {
+            Lane::Active { request_id, .. } => Some(request_id),
+            Lane::Free => None,
+        }
+    }
+}
+
+/// Page-granular capacity accounting (admission control).
+///
+/// Pages are *logical* here — the physical cache is dense per lane — but
+/// the accounting is exactly vLLM's: a request holding `ceil(len/page)`
+/// pages, admitted only if its worst-case need fits the pool.
+#[derive(Debug)]
+pub struct PagedAllocator {
+    page_size: usize,
+    n_pages: usize,
+    free_pages: usize,
+    /// pages held per lane
+    held: Vec<usize>,
+}
+
+impl PagedAllocator {
+    pub fn new(page_size: usize, n_pages: usize, n_lanes: usize) -> Self {
+        PagedAllocator {
+            page_size,
+            n_pages,
+            free_pages: n_pages,
+            held: vec![0; n_lanes],
+        }
+    }
+
+    pub fn pages_for(&self, len: usize) -> usize {
+        len.div_ceil(self.page_size)
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free_pages
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.n_pages
+    }
+
+    /// Can a request with worst-case total length `max_len` be admitted?
+    pub fn can_admit(&self, max_len: usize) -> bool {
+        self.pages_for(max_len) <= self.free_pages
+    }
+
+    /// Reserve pages for a lane's worst case. Errors if short.
+    pub fn admit(&mut self, lane: usize, max_len: usize) -> Result<()> {
+        let need = self.pages_for(max_len);
+        if need > self.free_pages {
+            bail!("paged allocator: need {need} pages, have {}",
+                  self.free_pages);
+        }
+        self.free_pages -= need;
+        self.held[lane] += need;
+        Ok(())
+    }
+
+    /// Release a lane's pages when its request retires.
+    pub fn release(&mut self, lane: usize) {
+        self.free_pages += self.held[lane];
+        self.held[lane] = 0;
+        debug_assert!(self.free_pages <= self.n_pages);
+    }
+
+    pub fn held_by(&self, lane: usize) -> usize {
+        self.held[lane]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut t = LaneTable::new(2, 64);
+        let a = t.alloc(100, 5).unwrap();
+        let b = t.alloc(200, 8).unwrap();
+        assert_ne!(a, b);
+        assert!(t.alloc(300, 1).is_err());
+        t.free(a);
+        let c = t.alloc(300, 1).unwrap();
+        assert_eq!(c, a);
+        assert_eq!(t.request_of(c), Some(300));
+    }
+
+    #[test]
+    fn advance_tracks_length() {
+        let mut t = LaneTable::new(1, 8);
+        let l = t.alloc(1, 6).unwrap();
+        assert_eq!(t.advance(l).unwrap(), 7);
+        assert_eq!(t.advance(l).unwrap(), 8);
+        assert!(t.advance(l).is_err(), "must refuse past max_seq");
+    }
+
+    #[test]
+    fn positions_for_mixed_lanes() {
+        let mut t = LaneTable::new(3, 64);
+        t.alloc(1, 5).unwrap();
+        let b = t.alloc(2, 9).unwrap();
+        t.free(b);
+        assert_eq!(t.positions(), vec![5, 0, 0]);
+        assert_eq!(t.active_lanes(), vec![0]);
+        assert_eq!(t.free_lanes(), 2);
+    }
+
+    #[test]
+    fn zero_or_oversized_initial_length_rejected() {
+        let mut t = LaneTable::new(1, 8);
+        assert!(t.alloc(1, 0).is_err());
+        assert!(t.alloc(1, 9).is_err());
+    }
+
+    #[test]
+    fn paged_admission() {
+        let mut p = PagedAllocator::new(16, 8, 4); // 128 tokens capacity
+        assert!(p.can_admit(128));
+        assert!(!p.can_admit(129));
+        p.admit(0, 100).unwrap(); // 7 pages
+        assert_eq!(p.free_pages(), 1);
+        assert!(p.can_admit(16));
+        assert!(!p.can_admit(17));
+        assert!(p.admit(1, 32).is_err());
+        p.release(0);
+        assert_eq!(p.free_pages(), 8);
+    }
+
+    #[test]
+    fn pages_for_rounds_up() {
+        let p = PagedAllocator::new(16, 4, 1);
+        assert_eq!(p.pages_for(1), 1);
+        assert_eq!(p.pages_for(16), 1);
+        assert_eq!(p.pages_for(17), 2);
+        assert_eq!(p.pages_for(0), 0);
+    }
+
+    #[test]
+    fn randomized_alloc_free_sequences_conserve_pages() {
+        // property: after any sequence of admits/releases the page pool
+        // is conserved and never oversubscribed
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(0xCAFE);
+        for _case in 0..50 {
+            let n_lanes = 1 + rng.next_below(8);
+            let mut lanes = LaneTable::new(n_lanes, 64);
+            let mut pages = PagedAllocator::new(8, n_lanes * 8, n_lanes);
+            let mut live: Vec<usize> = Vec::new();
+            for step in 0..100 {
+                if rng.next_f32() < 0.6 && lanes.free_lanes() > 0 {
+                    let len = 1 + rng.next_below(32);
+                    if pages.can_admit(len + 8) {
+                        let lane = lanes.alloc(step as u64, len).unwrap();
+                        pages.admit(lane, len + 8).unwrap();
+                        live.push(lane);
+                    }
+                } else if let Some(i) =
+                    (!live.is_empty()).then(|| rng.next_below(live.len()))
+                {
+                    let lane = live.swap_remove(i);
+                    lanes.free(lane);
+                    pages.release(lane);
+                }
+                // invariants
+                let held: usize =
+                    (0..n_lanes).map(|l| pages.held_by(l)).sum();
+                assert_eq!(held + pages.free_pages(), pages.total_pages());
+                assert_eq!(lanes.active_lanes().len(), live.len());
+            }
+        }
+    }
+
+    #[test]
+    fn positions_track_advances() {
+        let mut t = LaneTable::new(2, 16);
+        let a = t.alloc(1, 4).unwrap();
+        t.alloc(2, 7).unwrap();
+        t.advance(a).unwrap();
+        t.advance(a).unwrap();
+        assert_eq!(t.positions(), vec![6, 7]);
+    }
+}

@@ -1,0 +1,44 @@
+//! # xeonserve
+//!
+//! Reproduction of *"Distributed Inference Performance Optimization for
+//! LLMs on CPUs"* (He et al., Intel, 2024): a tensor-parallel LLM serving
+//! runtime whose request path is pure rust, with the model compute AOT-
+//! compiled from JAX/Pallas to XLA HLO and executed through PJRT.
+//!
+//! The paper's three optimizations are first-class, switchable features:
+//!
+//! * **§2.1 minimize synchronization** — rank 0 broadcasts *token IDs*
+//!   (not embedding activations) at the start of each round, and every
+//!   rank reduces only its *local top-k* (not the full logit shard) at
+//!   the end: [`engine`] + [`sampling`].
+//! * **§2.2 one-time synchronization** — parallel-block layers compile to
+//!   a single fused segment with ONE allreduce per layer: [`model`],
+//!   [`engine`].
+//! * **§2.3 minimize memory copy** — compute results land directly in the
+//!   communication arena; the allreduce runs in place: [`ccl`].
+//!
+//! Architecture (DESIGN.md has the full map):
+//!
+//! ```text
+//! server → scheduler → engine(leader) ⇄ rank threads ⇄ rccl collectives
+//!                                        │
+//!                                        └─ runtime (PJRT) ← artifacts/*.hlo.txt
+//! ```
+
+pub mod benchkit;
+pub mod ccl;
+pub mod config;
+pub mod engine;
+pub mod kvcache;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sampling;
+pub mod scheduler;
+pub mod server;
+pub mod tokenizer;
+pub mod trace;
+pub mod util;
+
+pub use config::{EngineConfig, Variant};
+pub use engine::{Completion, Engine};

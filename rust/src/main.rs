@@ -1,0 +1,158 @@
+//! xeonserve CLI — the launcher (hand-rolled argument parsing; the
+//! offline build environment has no clap).
+//!
+//! ```text
+//! xeonserve serve    [--config FILE] [--addr 127.0.0.1:7070]
+//! xeonserve generate [--config FILE] --prompt "hello" [-n 16]
+//! xeonserve bench    [--config FILE] [--steps 32] [--prompt-len 8]
+//! xeonserve info     [--artifacts artifacts]
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use xeonserve::config::{EngineConfig, Manifest};
+use xeonserve::engine::Engine;
+use xeonserve::tokenizer::Tokenizer;
+
+const USAGE: &str = "\
+xeonserve — distributed LLM inference on CPUs (He et al. 2024 reproduction)
+
+USAGE:
+  xeonserve serve    [--config FILE] [--addr HOST:PORT]
+  xeonserve generate [--config FILE] --prompt TEXT [-n N]
+  xeonserve bench    [--config FILE] [--steps N] [--prompt-len N]
+  xeonserve info     [--artifacts DIR]
+
+Without --config the built-in default is used (tiny model, world=2,
+all paper optimizations ON).  See configs/*.toml for presets.";
+
+/// Tiny flag parser: --key value / -k value pairs after the subcommand.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let k = &argv[i];
+            if !k.starts_with('-') {
+                bail!("unexpected argument {k:?}\n\n{USAGE}");
+            }
+            let key = k.trim_start_matches('-').to_string();
+            let v = argv
+                .get(i + 1)
+                .with_context(|| format!("flag {k} needs a value"))?;
+            flags.insert(key, v.clone());
+            i += 2;
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn load_cfg(args: &Args) -> Result<EngineConfig> {
+    match args.get("config") {
+        Some(p) => EngineConfig::from_toml_file(p),
+        None => Ok(EngineConfig::default()),
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+
+    match cmd.as_str() {
+        "serve" => {
+            let cfg = load_cfg(&args)?;
+            let addr = args.get("addr").unwrap_or("127.0.0.1:7070");
+            xeonserve::server::serve(cfg, addr)
+        }
+        "generate" => {
+            let cfg = load_cfg(&args)?;
+            let prompt = args
+                .get("prompt")
+                .context("generate requires --prompt")?
+                .to_string();
+            let n = args.get_usize("n", 16)?;
+            let mut engine = Engine::new(cfg)?;
+            let tok = Tokenizer::byte_level(engine.preset().vocab)?;
+            let ids = tok.encode(&prompt);
+            let out = engine.generate(&[ids], n)?;
+            println!("{}", tok.decode(&out[0]));
+            println!("tokens: {:?}", out[0]);
+            Ok(())
+        }
+        "bench" => {
+            let cfg = load_cfg(&args)?;
+            let steps = args.get_usize("steps", 32)?;
+            let prompt_len = args.get_usize("prompt-len", 8)?;
+            let mut engine = Engine::new(cfg)?;
+            let prompt: Vec<i32> =
+                (0..prompt_len as i32).map(|i| i % 200).collect();
+            engine.enqueue(prompt, steps);
+            engine.run_to_completion()?;
+            println!("{}", engine.metrics.report());
+            let ms = engine.metrics.decode_wall.mean_us() / 1e3;
+            let sim = engine.metrics.decode_sim.mean_us() / 1e3;
+            println!(
+                "time per output token: {ms:.2} ms/token (wall, 1-core \
+                 testbed) | {sim:.2} ms/token (simulated cluster)"
+            );
+            println!("comm stats: {:?}", engine.comm_stats());
+            Ok(())
+        }
+        "info" => {
+            let dir =
+                PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+            let m = Manifest::load(&dir)?;
+            println!("manifest v{} — {} segments", m.version,
+                     m.segments.len());
+            let mut names: Vec<_> = m.configs.keys().collect();
+            names.sort();
+            for name in names {
+                let p = &m.configs[name];
+                println!(
+                    "  model {name}: {} layers, hidden {}, vocab {}, \
+                     ~{:.0}M params",
+                    p.n_layers, p.hidden, p.vocab, p.params as f64 / 1e6
+                );
+            }
+            let mut by_cfg: std::collections::BTreeMap<String, usize> =
+                Default::default();
+            for s in &m.segments {
+                *by_cfg
+                    .entry(format!("{} w{} b{}", s.config, s.world, s.batch))
+                    .or_default() += 1;
+            }
+            for (k, v) in by_cfg {
+                println!("  {k}: {v} segments");
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n\n{USAGE}"),
+    }
+}

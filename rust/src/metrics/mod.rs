@@ -1,0 +1,191 @@
+//! Serving metrics: latency distributions, throughput, and the per-step
+//! timing breakdown the perf pass and the benches consume.
+
+use std::time::Duration;
+
+/// Reservoir-free latency recorder: keeps every sample (bench-scale runs
+/// are small) and reports exact quantiles.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<u64>,
+    sorted: bool,
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_micros() as u64);
+        self.sorted = false;
+    }
+
+    pub fn record_us(&mut self, us: u64) {
+        self.samples_us.push(us);
+        self.sorted = false;
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<u64>() as f64
+            / self.samples_us.len() as f64
+    }
+
+    /// Exact quantile (q in [0,1]).
+    pub fn quantile_us(&mut self, q: f64) -> u64 {
+        if self.samples_us.is_empty() {
+            return 0;
+        }
+        if !self.sorted {
+            self.samples_us.sort_unstable();
+            self.sorted = true;
+        }
+        let pos = ((self.samples_us.len() as f64 * q).ceil() as usize)
+            .saturating_sub(1)
+            .min(self.samples_us.len() - 1);
+        self.samples_us[pos]
+    }
+
+    pub fn p50_us(&mut self) -> u64 {
+        self.quantile_us(0.50)
+    }
+
+    pub fn p95_us(&mut self) -> u64 {
+        self.quantile_us(0.95)
+    }
+
+    pub fn p99_us(&mut self) -> u64 {
+        self.quantile_us(0.99)
+    }
+
+    pub fn max_us(&mut self) -> u64 {
+        self.quantile_us(1.0)
+    }
+}
+
+/// Per-decode-step timing breakdown (µs).  `wall_*` is measured on this
+/// testbed (ranks time-slice one core); `sim_*` is the simulated-cluster
+/// view — see DESIGN.md §4 and ccl::wire.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StepTiming {
+    pub wall_us: u64,
+    /// sum over ranks of segment-execute time
+    pub compute_total_us: u64,
+    /// max over ranks of segment-execute time.  NOTE: on the 1-core
+    /// testbed a rank's Instant-measured duration includes time spent
+    /// descheduled while other ranks run, so this ≈ wall; the simulated
+    /// estimate uses the work-conserving `compute_total / world` instead.
+    pub compute_max_us: u64,
+    /// tensor-parallel world size (for the equal-split estimate)
+    pub world: u64,
+    /// host-side collective time actually measured
+    pub comm_wall_us: u64,
+    /// analytic cross-socket communication cost
+    pub comm_sim_us: u64,
+    /// sampling epilogue (top-k, merge, sample)
+    pub sample_us: u64,
+}
+
+impl StepTiming {
+    /// Simulated per-token latency on the paper-style cluster:
+    /// equal-split compute + analytic wire cost + sampling epilogue.
+    pub fn sim_total_us(&self) -> u64 {
+        let per_rank = self.compute_total_us / self.world.max(1);
+        per_rank + self.comm_sim_us + self.sample_us
+    }
+}
+
+/// Aggregates step timings for a run; feeds EXPERIMENTS.md tables.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub decode_wall: LatencyStats,
+    pub decode_sim: LatencyStats,
+    pub prefill_wall: LatencyStats,
+    pub tokens_out: u64,
+    pub requests_done: u64,
+}
+
+impl RunMetrics {
+    pub fn record_decode(&mut self, t: &StepTiming, new_tokens: u64) {
+        self.decode_wall.record_us(t.wall_us);
+        self.decode_sim.record_us(t.sim_total_us());
+        self.tokens_out += new_tokens;
+    }
+
+    pub fn record_prefill(&mut self, wall: Duration) {
+        self.prefill_wall.record(wall);
+    }
+
+    /// tokens/s over a measured span.
+    pub fn throughput(&self, span: Duration) -> f64 {
+        if span.is_zero() {
+            return 0.0;
+        }
+        self.tokens_out as f64 / span.as_secs_f64()
+    }
+
+    pub fn report(&mut self) -> String {
+        format!(
+            "decode wall p50={}us p95={}us mean={:.0}us | sim p50={}us | \
+             prefill p50={}us | tokens={} requests={}",
+            self.decode_wall.p50_us(),
+            self.decode_wall.p95_us(),
+            self.decode_wall.mean_us(),
+            self.decode_sim.p50_us(),
+            self.prefill_wall.p50_us(),
+            self.tokens_out,
+            self.requests_done,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_exact() {
+        let mut s = LatencyStats::default();
+        for v in [10u64, 20, 30, 40, 50, 60, 70, 80, 90, 100] {
+            s.record_us(v);
+        }
+        assert_eq!(s.p50_us(), 50);
+        assert_eq!(s.max_us(), 100);
+        assert_eq!(s.count(), 10);
+        assert!((s.mean_us() - 55.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let mut s = LatencyStats::default();
+        assert_eq!(s.p50_us(), 0);
+        assert_eq!(s.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn sim_total_uses_equal_split_compute() {
+        let t = StepTiming {
+            wall_us: 1000,
+            compute_total_us: 800,
+            compute_max_us: 900, // inflated by descheduling: ignored
+            world: 4,
+            comm_wall_us: 100,
+            comm_sim_us: 40,
+            sample_us: 10,
+        };
+        assert_eq!(t.sim_total_us(), 200 + 40 + 10);
+    }
+
+    #[test]
+    fn throughput_counts_tokens() {
+        let mut m = RunMetrics::default();
+        let t = StepTiming::default();
+        m.record_decode(&t, 4);
+        m.record_decode(&t, 4);
+        let tput = m.throughput(Duration::from_secs(2));
+        assert!((tput - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,314 @@
+//! Rank-side model state: weight shards as device-resident buffers.
+//!
+//! Shapes and argument order come from the manifest (the python side is
+//! the source of truth — see `python/compile/model.py`); this module only
+//! materializes values, from one of two sources:
+//!
+//! * `Synthetic { seed }` — deterministic random weights with fan-in
+//!   scaling, for benches and examples;
+//! * `NpyDir { dir }` — the tensor-parallel shards exported by
+//!   `aot.py write_golden`, for the rust↔jax parity tests.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::PjRtBuffer;
+
+use crate::config::{Manifest, SegmentMeta, WeightSource};
+use crate::runtime::RankRuntime;
+use crate::util::{fnv1a, SplitMix64};
+
+/// All weight buffers one rank needs, keyed the way segments consume
+/// them (`SegmentMeta::weight_args` names index into `layers[li]`).
+pub struct RankWeights {
+    pub embedding: PjRtBuffer,
+    pub layers: Vec<HashMap<String, PjRtBuffer>>,
+    pub final_g: PjRtBuffer,
+    pub lm_head: PjRtBuffer,
+}
+
+/// Union of per-layer weight tensor shapes, collected from the manifest's
+/// decode segments for (config, world).
+pub fn layer_weight_shapes(
+    manifest: &Manifest,
+    config: &str,
+    world: usize,
+    batch: usize,
+) -> Result<HashMap<String, Vec<usize>>> {
+    let mut shapes: HashMap<String, Vec<usize>> = HashMap::new();
+    for (kind, mode, seq) in [
+        ("parallel_block", "decode", 1),
+        ("serial_attn", "decode", 1),
+        ("serial_ffn", "decode", 1),
+    ] {
+        let seg = manifest.find(config, world, batch, kind, mode, seq)?;
+        collect_weight_shapes(seg, &mut shapes);
+    }
+    Ok(shapes)
+}
+
+fn collect_weight_shapes(seg: &SegmentMeta,
+                         shapes: &mut HashMap<String, Vec<usize>>) {
+    for name in &seg.weight_args {
+        if let Some(t) = seg.inputs.iter().find(|t| &t.name == name) {
+            shapes.insert(name.clone(), t.shape.clone());
+        }
+    }
+}
+
+/// Which axis of a weight tensor is tensor-parallel sharded.
+/// Column-parallel (axis 1): qkv/gate/up projections + lm head.
+/// Row-parallel (axis 0): the partial-sum output projections.
+fn shard_axis(name: &str) -> Option<usize> {
+    match name {
+        "wq" | "wk" | "wv" | "wg" | "wu" | "lm_head" => Some(1),
+        "wo" | "wd" => Some(0),
+        _ => None, // replicated: norms, embedding
+    }
+}
+
+/// Initialization scale for a synthetic weight tensor, by name.
+/// Mirrors python's `make_full_weights`: matmul weights are
+/// `normal * fan_in^-0.5`; norm gains are `1 + 0.1*normal`.
+fn synth_fill(name: &str, shape: &[usize], rng: &mut SplitMix64)
+              -> Vec<f32> {
+    let n: usize = shape.iter().product();
+    if name.ends_with("_g") {
+        return (0..n).map(|_| 1.0 + 0.1 * rng.next_normal()).collect();
+    }
+    let fan_in = shape.first().copied().unwrap_or(1).max(1);
+    let scale = (fan_in as f32).powf(-0.5);
+    rng.normal_vec(n, scale)
+}
+
+/// Generate rank `rank`'s shard of a synthetic tensor such that the
+/// *concatenation across ranks equals one fixed full tensor* independent
+/// of the world size.  This makes synthetic runs comparable across TP
+/// degrees (E1 scalability measures the same model at every world) and
+/// lets the engine tests assert world-invariant greedy tokens.
+fn synth_shard(name: &str, local_shape: &[usize], world: usize,
+               rank: usize, seed: u64) -> Vec<f32> {
+    let axis = shard_axis(name);
+    match axis {
+        None => {
+            let mut rng = SplitMix64::new(seed);
+            synth_fill(name, local_shape, &mut rng)
+        }
+        Some(ax) => {
+            // full tensor shape: local scaled on the sharded axis.
+            let mut full_shape = local_shape.to_vec();
+            full_shape[ax] *= world;
+            // IMPORTANT: scale uses the FULL fan-in so w1 == concat(wN)
+            let mut rng = SplitMix64::new(seed);
+            let full = synth_fill(name, &full_shape, &mut rng);
+            if world == 1 {
+                return full;
+            }
+            let (rows_l, cols_l) = (local_shape[0], local_shape[1]);
+            let cols_f = full_shape[1];
+            let mut out = Vec::with_capacity(rows_l * cols_l);
+            match ax {
+                0 => {
+                    let start = rank * rows_l * cols_f;
+                    out.extend_from_slice(
+                        &full[start..start + rows_l * cols_f]);
+                }
+                1 => {
+                    for r in 0..rows_l {
+                        let base = r * cols_f + rank * cols_l;
+                        out.extend_from_slice(&full[base..base + cols_l]);
+                    }
+                }
+                _ => unreachable!(),
+            }
+            out
+        }
+    }
+}
+
+fn tensor_seed(base: u64, layer: i64, name: &str) -> u64 {
+    let key = format!("{base}/{layer}/{name}");
+    fnv1a(key.as_bytes())
+}
+
+/// Materialize a rank's weights on its PJRT device.
+pub fn load_rank_weights(
+    rt: &RankRuntime,
+    manifest: &Manifest,
+    config: &str,
+    world: usize,
+    rank: usize,
+    batch: usize,
+    source: &WeightSource,
+) -> Result<RankWeights> {
+    let preset = manifest.preset(config)?;
+    let n_layers = preset.n_layers;
+    let layer_shapes = layer_weight_shapes(manifest, config, world, batch)?;
+
+    // shapes of the non-layer tensors, also manifest-derived
+    let embed_seg = manifest.find(config, world, batch, "embed", "decode", 1)?;
+    let embed_shape = embed_seg.inputs[1].shape.clone();
+    let head_seg = manifest.find(config, world, batch, "lm_head", "decode", 1)?;
+    let final_g_shape = head_seg.inputs[1].shape.clone();
+    let lm_head_shape = head_seg.inputs[2].shape.clone();
+
+    match source {
+        WeightSource::Synthetic { seed } => {
+            let mut layers = Vec::with_capacity(n_layers);
+            for li in 0..n_layers {
+                let mut map = HashMap::new();
+                for (name, shape) in &layer_shapes {
+                    let data = synth_shard(
+                        name, shape, world, rank,
+                        tensor_seed(*seed, li as i64, name));
+                    map.insert(name.clone(), rt.upload_f32(&data, shape)?);
+                }
+                layers.push(map);
+            }
+            // embedding + final norm gain are REPLICATED (identical on
+            // every rank — §2.1a depends on this); lm_head is the vocab
+            // shard of one fixed full tensor.
+            let emb = synth_shard("embedding", &embed_shape, world, rank,
+                                  tensor_seed(*seed, -1, "embedding"));
+            let fg = synth_shard("final_g", &final_g_shape, world, rank,
+                                 tensor_seed(*seed, -1, "final_g"));
+            let lm = synth_shard("lm_head", &lm_head_shape, world, rank,
+                                 tensor_seed(*seed, -1, "lm_head"));
+            Ok(RankWeights {
+                embedding: rt.upload_f32(&emb, &embed_shape)?,
+                layers,
+                final_g: rt.upload_f32(&fg, &final_g_shape)?,
+                lm_head: rt.upload_f32(&lm, &lm_head_shape)?,
+            })
+        }
+        WeightSource::NpyDir { dir } => {
+            load_npy_weights(rt, dir, rank, n_layers, &layer_shapes)
+        }
+    }
+}
+
+fn load_npy_weights(
+    rt: &RankRuntime,
+    dir: &Path,
+    rank: usize,
+    n_layers: usize,
+    layer_shapes: &HashMap<String, Vec<usize>>,
+) -> Result<RankWeights> {
+    let file = |name: &str| dir.join(format!("r{rank}_{name}.npy"));
+    if !file("embedding").exists() {
+        bail!("golden weights not found in {dir:?} — run `make artifacts`");
+    }
+    let mut layers = Vec::with_capacity(n_layers);
+    for li in 0..n_layers {
+        let mut map = HashMap::new();
+        for name in layer_shapes.keys() {
+            let path = dir.join(format!("r{rank}_l{li}_{name}.npy"));
+            map.insert(
+                name.clone(),
+                rt.load_npy(&path)
+                    .with_context(|| format!("loading {path:?}"))?,
+            );
+        }
+        layers.push(map);
+    }
+    Ok(RankWeights {
+        embedding: rt.load_npy(file("embedding"))?,
+        layers,
+        final_g: rt.load_npy(file("final_g"))?,
+        lm_head: rt.load_npy(file("lm_head"))?,
+    })
+}
+
+impl RankWeights {
+    /// Weight buffers of layer `li` in a segment's argument order.
+    pub fn layer_args<'a>(&'a self, li: usize, weight_args: &[String])
+                          -> Result<Vec<&'a PjRtBuffer>> {
+        let map = &self.layers[li];
+        weight_args
+            .iter()
+            .map(|n| {
+                map.get(n)
+                    .with_context(|| format!("missing weight {n} in layer {li}"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_seed_distinct() {
+        let a = tensor_seed(0, 0, "wq");
+        let b = tensor_seed(0, 1, "wq");
+        let c = tensor_seed(0, 0, "wk");
+        let d = tensor_seed(1, 0, "wq");
+        let all = [a, b, c, d];
+        for i in 0..4 {
+            for j in i + 1..4 {
+                assert_ne!(all[i], all[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn synth_shards_concat_to_full() {
+        // column-parallel: concat along axis 1 must equal the w1 tensor
+        let full = synth_shard("wq", &[6, 8], 1, 0, 42);
+        for world in [2usize, 4] {
+            let cols_l = 8 / world;
+            for rank in 0..world {
+                let shard = synth_shard("wq", &[6, cols_l], world, rank, 42);
+                for r in 0..6 {
+                    for c in 0..cols_l {
+                        assert_eq!(
+                            shard[r * cols_l + c],
+                            full[r * 8 + rank * cols_l + c],
+                            "w{world} rank{rank} ({r},{c})"
+                        );
+                    }
+                }
+            }
+        }
+        // row-parallel: concat along axis 0
+        let full = synth_shard("wo", &[8, 4], 1, 0, 7);
+        for rank in 0..2 {
+            let shard = synth_shard("wo", &[4, 4], 2, rank, 7);
+            assert_eq!(shard[..], full[rank * 16..(rank + 1) * 16]);
+        }
+    }
+
+    #[test]
+    fn replicated_tensors_identical_across_ranks() {
+        let a = synth_shard("ln1_g", &[32], 4, 0, 5);
+        let b = synth_shard("ln1_g", &[32], 4, 3, 5);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn synth_fill_norm_gains_near_one() {
+        let mut rng = SplitMix64::new(1);
+        let g = synth_fill("ln1_g", &[256], &mut rng);
+        let mean = g.iter().sum::<f32>() / g.len() as f32;
+        assert!((mean - 1.0).abs() < 0.05, "mean {mean}");
+    }
+
+    #[test]
+    fn synth_fill_matmul_scaled_by_fan_in() {
+        let mut rng = SplitMix64::new(2);
+        let w = synth_fill("wq", &[1024, 64], &mut rng);
+        let var = w.iter().map(|x| x * x).sum::<f32>() / w.len() as f32;
+        // expect var ≈ 1/1024
+        assert!((var * 1024.0 - 1.0).abs() < 0.2, "var*fan_in {}", var * 1024.0);
+    }
+
+    #[test]
+    fn synth_deterministic() {
+        let mut a = SplitMix64::new(tensor_seed(5, 2, "wo"));
+        let mut b = SplitMix64::new(tensor_seed(5, 2, "wo"));
+        assert_eq!(synth_fill("wo", &[8, 8], &mut a),
+                   synth_fill("wo", &[8, 8], &mut b));
+    }
+}

@@ -1,0 +1,184 @@
+//! PJRT runtime wrapper: loads AOT HLO-text artifacts and executes them.
+//!
+//! One [`RankRuntime`] per rank thread.  PJRT objects in the `xla` crate
+//! are `Rc`-based (not `Send`), so each rank owns its *own* client,
+//! executables and buffers — which is exactly the paper's process
+//! topology (one inference process per socket, communicating through the
+//! collective library, never sharing device state).
+//!
+//! Weights and KV caches live as device-resident [`PjRtBuffer`]s and are
+//! passed by reference via `execute_b`; the only host crossings on the
+//! decode path are the activation hand-offs at the collective boundaries
+//! (and those land directly in the ccl arena — §2.3).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+use xla::{FromRawBytes, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::config::{Manifest, SegmentMeta};
+
+/// Per-rank PJRT state: client + compiled segment cache.
+pub struct RankRuntime {
+    client: PjRtClient,
+    exes: HashMap<String, PjRtLoadedExecutable>,
+}
+
+impl RankRuntime {
+    pub fn new() -> Result<Self> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(RankRuntime { client, exes: HashMap::new() })
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// Compile a segment's HLO text (idempotent per segment id).
+    pub fn compile_segment(&mut self, manifest: &Manifest,
+                           seg: &SegmentMeta) -> Result<()> {
+        if self.exes.contains_key(&seg.id) {
+            return Ok(());
+        }
+        let path = manifest.hlo_path(seg);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling segment {}", seg.id))?;
+        self.exes.insert(seg.id.clone(), exe);
+        Ok(())
+    }
+
+    pub fn has_segment(&self, id: &str) -> bool {
+        self.exes.contains_key(id)
+    }
+
+    /// Execute a compiled segment on device-resident buffers.  Returns
+    /// one buffer per segment output (the vendored xla crate is patched
+    /// with `untuple_result = true`).
+    pub fn execute(&self, seg_id: &str, args: &[&PjRtBuffer])
+                   -> Result<Vec<PjRtBuffer>> {
+        let exe = self
+            .exes
+            .get(seg_id)
+            .with_context(|| format!("segment {seg_id} not compiled"))?;
+        let mut out = exe
+            .execute_b(args)
+            .with_context(|| format!("executing {seg_id}"))?;
+        anyhow::ensure!(!out.is_empty(), "no replica outputs from {seg_id}");
+        Ok(out.swap_remove(0))
+    }
+
+    // ---- host <-> device helpers -------------------------------------
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize])
+                      -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize])
+                      -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    pub fn zeros_f32(&self, dims: &[usize]) -> Result<PjRtBuffer> {
+        let n: usize = dims.iter().product();
+        self.upload_f32(&vec![0.0; n], dims)
+    }
+
+    /// Download a buffer's f32 contents into `dst` (the §2.3 hand-off:
+    /// `dst` is typically a ccl arena slot).
+    ///
+    /// Note: the CPU PJRT plugin does not implement `CopyRawToHost`, so
+    /// the transfer goes through one intermediate literal (device →
+    /// literal → dst).  The *staged* path below additionally materializes
+    /// an owned `Vec` and pays the ring's per-hop copies — that delta is
+    /// what the §2.3 bench measures.
+    pub fn download_f32_into(&self, buf: &PjRtBuffer, dst: &mut [f32])
+                             -> Result<()> {
+        let lit = buf.to_literal_sync()?;
+        lit.copy_raw_to(dst)?;
+        Ok(())
+    }
+
+    /// Download through a staged literal (the baseline path; counts the
+    /// extra copies the zero-copy hand-off avoids).
+    pub fn download_f32_staged(&self, buf: &PjRtBuffer) -> Result<Vec<f32>> {
+        let lit = buf.to_literal_sync()?; // copy 1: device -> literal
+        Ok(lit.to_vec::<f32>()?) // copy 2: literal -> vec
+    }
+
+    /// Load an .npy file as a device buffer (golden weights).
+    ///
+    /// Goes through `buffer_from_host_buffer` (synchronous host copy)
+    /// rather than `buffer_from_host_literal`: the literal path copies
+    /// asynchronously on the client's thread pool and races literal
+    /// destruction (observed SIGSEGV in `CopyFromLiteral` with
+    /// xla_extension 0.5.1, even when awaiting the ready future).
+    pub fn load_npy(&self, path: impl AsRef<Path>) -> Result<PjRtBuffer> {
+        let lit = Literal::read_npy(path.as_ref(), &())
+            .with_context(|| format!("reading {:?}", path.as_ref()))?;
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let data = lit.to_vec::<f32>()?;
+                self.upload_f32(&data, &dims)
+            }
+            xla::ElementType::S32 => {
+                let data = lit.to_vec::<i32>()?;
+                self.upload_i32(&data, &dims)
+            }
+            ty => anyhow::bail!("unsupported npy dtype {ty:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build + run a computation without artifacts: (x + y) * 2.
+    #[test]
+    fn execute_builder_computation() {
+        let rt = RankRuntime::new().unwrap();
+        let b = xla::XlaBuilder::new("t");
+        let shape = xla::Shape::array::<f32>(vec![4]);
+        let x = b.parameter_s(0, &shape, "x").unwrap();
+        let y = b.parameter_s(1, &shape, "y").unwrap();
+        let sum = (x + y).unwrap();
+        let out = sum.add_(&sum).unwrap();
+        let comp = out.build().unwrap();
+        let exe = rt.client.compile(&comp).unwrap();
+
+        let xb = rt.upload_f32(&[1.0, 2.0, 3.0, 4.0], &[4]).unwrap();
+        let yb = rt.upload_f32(&[10.0, 20.0, 30.0, 40.0], &[4]).unwrap();
+        let outs = exe.execute_b(&[&xb, &yb]).unwrap();
+        let mut dst = vec![0.0f32; 4];
+        rt.download_f32_into(&outs[0][0], &mut dst).unwrap();
+        assert_eq!(dst, vec![22.0, 44.0, 66.0, 88.0]); // (x+y)*2
+    }
+
+    #[test]
+    fn upload_download_roundtrip() {
+        let rt = RankRuntime::new().unwrap();
+        let data: Vec<f32> = (0..12).map(|i| i as f32 * 0.5).collect();
+        let buf = rt.upload_f32(&data, &[3, 4]).unwrap();
+        let mut back = vec![0.0f32; 12];
+        rt.download_f32_into(&buf, &mut back).unwrap();
+        assert_eq!(back, data);
+        let staged = rt.download_f32_staged(&buf).unwrap();
+        assert_eq!(staged, data);
+    }
+
+    #[test]
+    fn missing_segment_errors() {
+        let rt = RankRuntime::new().unwrap();
+        assert!(rt.execute("nope", &[]).is_err());
+    }
+}

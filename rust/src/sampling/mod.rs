@@ -1,0 +1,232 @@
+//! Distributed sampling — the §2.1b optimization.
+//!
+//! The lm-head is vocab-sharded: rank *r* holds logits for vocab slice
+//! `[r·V/W, (r+1)·V/W)`.  The naive ending of a round allgathers the full
+//! logit vector (V floats) to rank 0.  The paper instead has **each rank
+//! compute its local top-k first** and reduce only k (value, index) pairs
+//! — `W·k·8` bytes instead of `V·4`.  For Qwen-72B on 4 ranks that is
+//! 1.6 kB vs 608 kB per token.
+//!
+//! Both paths produce *identical* samples (the global top-k is a subset
+//! of the union of local top-ks — see `merged_equals_global` proptest),
+//! so the optimization is free of quality loss.
+
+use crate::util::SplitMix64;
+
+/// One candidate token: global vocab index + raw logit.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Candidate {
+    pub token: u32,
+    pub logit: f32,
+}
+
+/// Local top-k over a rank's logit shard. `offset` is the shard's global
+/// vocab base; returned candidates carry *global* token ids, descending
+/// by logit (ties: lower index first, for cross-world determinism).
+pub fn local_topk(logits: &[f32], k: usize, offset: usize) -> Vec<Candidate> {
+    let k = k.min(logits.len());
+    // partial selection: O(n) average via select_nth on an index array
+    let mut idx: Vec<u32> = (0..logits.len() as u32).collect();
+    if k < logits.len() {
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            cmp_desc(logits[a as usize], a, logits[b as usize], b)
+        });
+        idx.truncate(k);
+    }
+    idx.sort_unstable_by(|&a, &b| {
+        cmp_desc(logits[a as usize], a, logits[b as usize], b)
+    });
+    idx.into_iter()
+        .map(|i| Candidate {
+            token: offset as u32 + i,
+            logit: logits[i as usize],
+        })
+        .collect()
+}
+
+#[inline]
+fn cmp_desc(la: f32, ia: u32, lb: f32, ib: u32) -> std::cmp::Ordering {
+    lb.partial_cmp(&la)
+        .unwrap_or(std::cmp::Ordering::Equal)
+        .then(ia.cmp(&ib))
+}
+
+/// Merge per-rank candidate lists into the global top-k (the "reduction"
+/// of §2.1b, performed on rank 0 after the k-pair gather).
+pub fn merge_topk(per_rank: &[Vec<Candidate>], k: usize) -> Vec<Candidate> {
+    let mut all: Vec<Candidate> =
+        per_rank.iter().flatten().copied().collect();
+    all.sort_unstable_by(|a, b| cmp_desc(a.logit, a.token, b.logit, b.token));
+    all.truncate(k);
+    all
+}
+
+/// Full-vector top-k (the baseline path, after the full-logit allgather).
+pub fn global_topk(logits: &[f32], k: usize) -> Vec<Candidate> {
+    local_topk(logits, k, 0)
+}
+
+/// Sample a token from (already merged) candidates.
+///
+/// `temperature == 0` is greedy.  `top_p < 1` applies a nucleus cutoff
+/// over the candidate distribution before sampling.
+pub fn sample(
+    candidates: &[Candidate],
+    temperature: f32,
+    top_p: f32,
+    rng: &mut SplitMix64,
+) -> u32 {
+    assert!(!candidates.is_empty(), "no candidates to sample");
+    if temperature <= 0.0 {
+        return candidates[0].token; // lists are sorted descending
+    }
+    // softmax over candidates at the given temperature
+    let m = candidates
+        .iter()
+        .map(|c| c.logit)
+        .fold(f32::NEG_INFINITY, f32::max);
+    let mut probs: Vec<f32> = candidates
+        .iter()
+        .map(|c| ((c.logit - m) / temperature).exp())
+        .collect();
+    let sum: f32 = probs.iter().sum();
+    for p in &mut probs {
+        *p /= sum;
+    }
+    // nucleus cutoff (candidates are sorted by prob, same order as logit)
+    let mut cut = probs.len();
+    if top_p < 1.0 {
+        let mut acc = 0.0;
+        for (i, p) in probs.iter().enumerate() {
+            acc += p;
+            if acc >= top_p {
+                cut = i + 1;
+                break;
+            }
+        }
+    }
+    let total: f32 = probs[..cut].iter().sum();
+    let mut u = rng.next_f32() * total;
+    for (i, p) in probs[..cut].iter().enumerate() {
+        u -= p;
+        if u <= 0.0 {
+            return candidates[i].token;
+        }
+    }
+    candidates[cut - 1].token
+}
+
+/// Wire encoding of candidates for the k-pair gather: 8 bytes each.
+pub fn encode_candidates(cands: &[Candidate]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(cands.len() * 8);
+    for c in cands {
+        out.extend_from_slice(&c.token.to_le_bytes());
+        out.extend_from_slice(&c.logit.to_le_bytes());
+    }
+    out
+}
+
+pub fn decode_candidates(bytes: &[u8]) -> Vec<Candidate> {
+    bytes
+        .chunks_exact(8)
+        .map(|ch| Candidate {
+            token: u32::from_le_bytes(ch[0..4].try_into().unwrap()),
+            logit: f32::from_le_bytes(ch[4..8].try_into().unwrap()),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_topk_sorted_desc() {
+        let logits = vec![0.1, 5.0, -1.0, 3.0, 3.0];
+        let top = local_topk(&logits, 3, 100);
+        assert_eq!(top[0], Candidate { token: 101, logit: 5.0 });
+        assert_eq!(top[1], Candidate { token: 103, logit: 3.0 });
+        assert_eq!(top[2], Candidate { token: 104, logit: 3.0 });
+    }
+
+    #[test]
+    fn topk_k_larger_than_shard() {
+        let top = local_topk(&[1.0, 2.0], 10, 0);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].token, 1);
+    }
+
+    #[test]
+    fn merged_equals_global() {
+        // THE §2.1b correctness property, on a fixed example
+        let full: Vec<f32> = (0..64)
+            .map(|i| ((i * 2654435761u64 % 97) as f32) / 7.0)
+            .collect();
+        let world = 4;
+        let shard = full.len() / world;
+        let k = 8;
+        let per_rank: Vec<Vec<Candidate>> = (0..world)
+            .map(|r| {
+                local_topk(&full[r * shard..(r + 1) * shard], k, r * shard)
+            })
+            .collect();
+        let merged = merge_topk(&per_rank, k);
+        let global = global_topk(&full, k);
+        assert_eq!(merged, global);
+    }
+
+    #[test]
+    fn greedy_takes_argmax() {
+        let cands = vec![
+            Candidate { token: 7, logit: 2.0 },
+            Candidate { token: 3, logit: 1.0 },
+        ];
+        let mut rng = SplitMix64::new(0);
+        assert_eq!(sample(&cands, 0.0, 1.0, &mut rng), 7);
+    }
+
+    #[test]
+    fn temperature_sampling_hits_all_candidates() {
+        let cands = vec![
+            Candidate { token: 1, logit: 0.0 },
+            Candidate { token: 2, logit: 0.0 },
+            Candidate { token: 3, logit: 0.0 },
+        ];
+        let mut rng = SplitMix64::new(1);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            seen.insert(sample(&cands, 1.0, 1.0, &mut rng));
+        }
+        assert_eq!(seen.len(), 3);
+    }
+
+    #[test]
+    fn top_p_cuts_tail() {
+        // one dominant candidate with p > top_p: must always be chosen
+        let cands = vec![
+            Candidate { token: 9, logit: 100.0 },
+            Candidate { token: 1, logit: 0.0 },
+        ];
+        let mut rng = SplitMix64::new(2);
+        for _ in 0..50 {
+            assert_eq!(sample(&cands, 1.0, 0.5, &mut rng), 9);
+        }
+    }
+
+    #[test]
+    fn candidate_codec_roundtrip() {
+        let cands = vec![
+            Candidate { token: 12345, logit: -3.25 },
+            Candidate { token: 0, logit: f32::MAX },
+        ];
+        assert_eq!(decode_candidates(&encode_candidates(&cands)), cands);
+    }
+
+    #[test]
+    fn deterministic_across_tie_breaks() {
+        let logits = vec![1.0; 16];
+        let a = local_topk(&logits, 4, 0);
+        let tokens: Vec<u32> = a.iter().map(|c| c.token).collect();
+        assert_eq!(tokens, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,134 @@
+//! Request scheduling in front of the engine.
+//!
+//! The engine itself batches continuously at lane granularity; this
+//! module is the policy layer above it: an FCFS admission queue with
+//! arrival bookkeeping (for TTFT accounting) and a prefill/decode
+//! interleave guard that bounds how many prefills may run back-to-back
+//! while decodes are pending (decode-starvation protection, the knob
+//! Sarathi-style schedulers turn).
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// A queued request with arrival time.
+#[derive(Debug)]
+pub struct QueuedRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub arrived: Instant,
+}
+
+/// FCFS queue + interleave policy.
+#[derive(Debug)]
+pub struct FcfsScheduler {
+    queue: VecDeque<QueuedRequest>,
+    /// max consecutive prefills while decodes wait
+    max_prefill_burst: usize,
+    burst: usize,
+    next_id: u64,
+}
+
+impl FcfsScheduler {
+    pub fn new(max_prefill_burst: usize) -> Self {
+        FcfsScheduler {
+            queue: VecDeque::new(),
+            max_prefill_burst: max_prefill_burst.max(1),
+            burst: 0,
+            next_id: 0,
+        }
+    }
+
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(QueuedRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            arrived: Instant::now(),
+        });
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Next request to admit, honoring the prefill-burst bound:
+    /// once `max_prefill_burst` consecutive prefills have been taken
+    /// while decodes are pending, yield to decode (returns None).
+    pub fn next_admission(&mut self, decodes_pending: bool)
+                          -> Option<QueuedRequest> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        if decodes_pending && self.burst >= self.max_prefill_burst {
+            self.burst = 0; // yield one decode round, then allow again
+            return None;
+        }
+        self.burst = if decodes_pending { self.burst + 1 } else { 0 };
+        self.queue.pop_front()
+    }
+
+    /// Note that a decode round ran (resets the burst counter).
+    pub fn on_decode_round(&mut self) {
+        self.burst = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fcfs_order() {
+        let mut s = FcfsScheduler::new(8);
+        let a = s.submit(vec![1], 4);
+        let b = s.submit(vec![2], 4);
+        assert!(a < b);
+        assert_eq!(s.next_admission(false).unwrap().id, a);
+        assert_eq!(s.next_admission(false).unwrap().id, b);
+        assert!(s.next_admission(false).is_none());
+    }
+
+    #[test]
+    fn prefill_burst_bounded_when_decodes_pending() {
+        let mut s = FcfsScheduler::new(2);
+        for _ in 0..5 {
+            s.submit(vec![0], 1);
+        }
+        // two prefills allowed, then a forced yield
+        assert!(s.next_admission(true).is_some());
+        assert!(s.next_admission(true).is_some());
+        assert!(s.next_admission(true).is_none());
+        // after the yield the burst counter restarts
+        assert!(s.next_admission(true).is_some());
+    }
+
+    #[test]
+    fn no_bound_without_decodes() {
+        let mut s = FcfsScheduler::new(1);
+        for _ in 0..4 {
+            s.submit(vec![0], 1);
+        }
+        for _ in 0..4 {
+            assert!(s.next_admission(false).is_some());
+        }
+    }
+
+    #[test]
+    fn decode_round_resets_burst() {
+        let mut s = FcfsScheduler::new(1);
+        s.submit(vec![0], 1);
+        s.submit(vec![0], 1);
+        assert!(s.next_admission(true).is_some());
+        assert!(s.next_admission(true).is_none());
+        s.on_decode_round();
+        assert!(s.next_admission(true).is_some());
+    }
+}

@@ -1,0 +1,266 @@
+//! Line-delimited JSON TCP server — the outward face of the coordinator.
+//!
+//! Protocol (one JSON object per line):
+//!
+//! ```text
+//! → {"prompt": "hello", "max_new_tokens": 8}
+//! ← {"id": 3, "text": "...", "tokens": [..], "latency_ms": 12.3}
+//! ```
+//!
+//! Threading: the engine is not `Send` (PJRT buffers are thread-local),
+//! so it runs on a dedicated thread; connection threads submit jobs over
+//! a channel and block on per-job reply channels.  This mirrors the
+//! paper's topology — one leader process front-ending the rank workers.
+//! (std::net threads; the offline build environment has no tokio.)
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::EngineConfig;
+use crate::engine::Engine;
+use crate::scheduler::FcfsScheduler;
+use crate::tokenizer::Tokenizer;
+use crate::util::Json;
+
+/// A parsed API request line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApiRequest {
+    pub prompt: String,
+    pub max_new_tokens: usize,
+}
+
+impl ApiRequest {
+    pub fn parse(line: &str) -> Result<ApiRequest> {
+        let j = Json::parse(line)?;
+        Ok(ApiRequest {
+            prompt: j
+                .req("prompt")?
+                .as_str()
+                .context("prompt must be a string")?
+                .to_string(),
+            max_new_tokens: j
+                .get("max_new_tokens")
+                .and_then(Json::as_usize)
+                .unwrap_or(16),
+        })
+    }
+}
+
+/// A serialized API response line.
+#[derive(Debug, Clone)]
+pub struct ApiResponse {
+    pub id: u64,
+    pub text: String,
+    pub tokens: Vec<i32>,
+    pub latency_ms: f64,
+}
+
+impl ApiResponse {
+    pub fn to_json(&self) -> String {
+        let mut m = BTreeMap::new();
+        m.insert("id".to_string(), Json::Num(self.id as f64));
+        m.insert("text".to_string(), Json::Str(self.text.clone()));
+        m.insert(
+            "tokens".to_string(),
+            Json::Arr(self.tokens.iter().map(|&t| Json::Num(t as f64))
+                .collect()),
+        );
+        m.insert("latency_ms".to_string(),
+                 Json::Num((self.latency_ms * 1e3).round() / 1e3));
+        Json::Obj(m).to_string()
+    }
+}
+
+pub fn error_json(msg: &str) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("error".to_string(), Json::Str(msg.to_string()));
+    Json::Obj(m).to_string()
+}
+
+struct Job {
+    req: ApiRequest,
+    respond: Sender<std::result::Result<ApiResponse, String>>,
+    submitted: Instant,
+}
+
+/// Engine thread: admits jobs through the FCFS scheduler, steps the
+/// engine (continuous batching happens inside), and answers completions.
+fn engine_loop(cfg: EngineConfig, jobs: Receiver<Job>) -> Result<()> {
+    let mut engine = Engine::new(cfg)?;
+    let tok = Tokenizer::byte_level(engine.preset().vocab)?;
+    let mut sched = FcfsScheduler::new(engine.config().batch.max(1));
+    let mut waiting: std::collections::HashMap<
+        u64,
+        (Sender<std::result::Result<ApiResponse, String>>, Instant),
+    > = Default::default();
+    // scheduler-id -> engine-id indirection
+    let mut pending_jobs: std::collections::HashMap<u64, Job> =
+        Default::default();
+
+    loop {
+        // ingest every queued job without blocking; block when idle
+        loop {
+            let job = if engine.has_work() || !sched.is_empty() {
+                match jobs.try_recv() {
+                    Ok(j) => Some(j),
+                    Err(std::sync::mpsc::TryRecvError::Empty) => None,
+                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                        return Ok(());
+                    }
+                }
+            } else {
+                match jobs.recv() {
+                    Ok(j) => Some(j),
+                    Err(_) => return Ok(()),
+                }
+            };
+            match job {
+                Some(job) => {
+                    let sid = sched.submit(tok.encode(&job.req.prompt),
+                                           job.req.max_new_tokens);
+                    pending_jobs.insert(sid, job);
+                }
+                None => break,
+            }
+        }
+
+        // admit from the scheduler into the engine
+        while let Some(q) =
+            sched.next_admission(engine.active_count() > 0)
+        {
+            let eid = engine.enqueue(q.prompt, q.max_new_tokens.max(1));
+            if let Some(job) = pending_jobs.remove(&q.id) {
+                waiting.insert(eid, (job.respond, job.submitted));
+            }
+        }
+
+        if engine.has_work() {
+            sched.on_decode_round();
+            match engine.step() {
+                Ok(completions) => {
+                    for c in completions {
+                        if let Some((tx, t0)) = waiting.remove(&c.request_id)
+                        {
+                            let resp = ApiResponse {
+                                id: c.request_id,
+                                text: tok.decode(&c.tokens),
+                                tokens: c.tokens,
+                                latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                            };
+                            let _ = tx.send(Ok(resp));
+                        }
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("engine: {e:#}");
+                    for (_, (tx, _)) in waiting.drain() {
+                        let _ = tx.send(Err(msg.clone()));
+                    }
+                    return Err(e);
+                }
+            }
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, job_tx: Sender<Job>) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let out = match ApiRequest::parse(&line) {
+            Ok(req) => {
+                let (tx, rx) = channel();
+                if job_tx
+                    .send(Job { req, respond: tx, submitted: Instant::now() })
+                    .is_err()
+                {
+                    error_json("engine thread gone")
+                } else {
+                    match rx.recv() {
+                        Ok(Ok(resp)) => resp.to_json(),
+                        Ok(Err(e)) => error_json(&e),
+                        Err(_) => error_json("engine dropped request"),
+                    }
+                }
+            }
+            Err(e) => error_json(&format!("bad request from {peer}: {e}")),
+        };
+        writer.write_all(out.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+/// Serve `cfg` on `addr` (e.g. "127.0.0.1:7070").  Runs until the
+/// process exits; one thread per connection.
+pub fn serve(cfg: EngineConfig, addr: &str) -> Result<()> {
+    let (job_tx, job_rx) = channel::<Job>();
+    std::thread::Builder::new()
+        .name("engine".into())
+        .spawn(move || {
+            if let Err(e) = engine_loop(cfg, job_rx) {
+                eprintln!("engine loop failed: {e:#}");
+            }
+        })?;
+
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    eprintln!("xeonserve listening on {addr}");
+    loop {
+        let (socket, peer) = listener.accept()?;
+        let job_tx = job_tx.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_conn(socket, job_tx) {
+                eprintln!("conn {peer}: {e:#}");
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_parsing() {
+        let r = ApiRequest::parse(
+            r#"{"prompt": "hi", "max_new_tokens": 4}"#).unwrap();
+        assert_eq!(r.prompt, "hi");
+        assert_eq!(r.max_new_tokens, 4);
+        let d = ApiRequest::parse(r#"{"prompt": "x"}"#).unwrap();
+        assert_eq!(d.max_new_tokens, 16);
+        assert!(ApiRequest::parse(r#"{"max_new_tokens": 4}"#).is_err());
+        assert!(ApiRequest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_through_json() {
+        let r = ApiResponse {
+            id: 3,
+            text: "ab\"c".into(),
+            tokens: vec![97, 98],
+            latency_ms: 12.3456,
+        };
+        let j = Json::parse(&r.to_json()).unwrap();
+        assert_eq!(j.get("id").unwrap().as_u64(), Some(3));
+        assert_eq!(j.get("text").unwrap().as_str(), Some("ab\"c"));
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn error_json_is_valid() {
+        let j = Json::parse(&error_json("boom \"quoted\"")).unwrap();
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("boom"));
+    }
+}

@@ -1,0 +1,139 @@
+//! Byte-level tokenizer.
+//!
+//! The reproduction serves synthetic-weight models, so a learned BPE
+//! vocabulary would be meaningless; what matters is a *total, lossless*
+//! mapping between text and token ids the server can round-trip.  We use
+//! byte-level encoding (ids 0..=255 are raw bytes) plus reserved control
+//! ids, the same base layer GPT-2-style BPEs bottom out in.  Models with
+//! vocab > 256 simply have head room (sampled high ids render as the
+//! replacement glyph).
+
+use anyhow::{bail, Result};
+
+pub const BYTE_VOCAB: usize = 256;
+
+/// Reserved ids directly above the byte range.
+pub const BOS: i32 = 256;
+pub const EOS: i32 = 257;
+pub const PAD: i32 = 258;
+pub const N_SPECIAL: usize = 3;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    /// model vocab size; ids >= vocab never produced by encode
+    vocab: usize,
+    add_bos: bool,
+}
+
+impl Tokenizer {
+    /// `vocab` is the model's vocabulary size (>= 256).  BOS is emitted
+    /// only when the vocab has room for the special ids.
+    pub fn byte_level(vocab: usize) -> Result<Tokenizer> {
+        if vocab < BYTE_VOCAB {
+            bail!("vocab {vocab} smaller than byte range");
+        }
+        Ok(Tokenizer {
+            vocab,
+            add_bos: vocab >= BYTE_VOCAB + N_SPECIAL,
+        })
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    pub fn eos(&self) -> Option<i32> {
+        (self.vocab >= BYTE_VOCAB + N_SPECIAL).then_some(EOS)
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut ids = Vec::with_capacity(text.len() + 1);
+        if self.add_bos {
+            ids.push(BOS);
+        }
+        ids.extend(text.bytes().map(|b| b as i32));
+        ids
+    }
+
+    /// Lossy decode: byte ids reassemble into UTF-8 (invalid sequences
+    /// render U+FFFD); special/out-of-range ids are skipped.
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let bytes: Vec<u8> = ids
+            .iter()
+            .filter(|&&t| (0..BYTE_VOCAB as i32).contains(&t))
+            .map(|&t| t as u8)
+            .collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_roundtrip() {
+        let t = Tokenizer::byte_level(32000).unwrap();
+        let ids = t.encode("hello");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(&ids[1..], &[104, 101, 108, 108, 111]);
+        assert_eq!(t.decode(&ids), "hello");
+    }
+
+    #[test]
+    fn utf8_roundtrip() {
+        let t = Tokenizer::byte_level(32000).unwrap();
+        let s = "héllo → 世界 🚀";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn tiny_vocab_has_no_bos() {
+        let t = Tokenizer::byte_level(256).unwrap();
+        let ids = t.encode("ab");
+        assert_eq!(ids, vec![97, 98]);
+        assert!(t.eos().is_none());
+    }
+
+    #[test]
+    fn out_of_range_ids_skipped_in_decode() {
+        let t = Tokenizer::byte_level(32000).unwrap();
+        assert_eq!(t.decode(&[104, 300, 105, BOS, EOS]), "hi");
+    }
+
+    #[test]
+    fn sub_byte_vocab_rejected() {
+        assert!(Tokenizer::byte_level(100).is_err());
+    }
+
+    #[test]
+    fn randomized_utf8_roundtrip() {
+        // property: decode(encode(s)) == s for arbitrary valid UTF-8
+        use crate::util::SplitMix64;
+        let t = Tokenizer::byte_level(32000).unwrap();
+        let mut rng = SplitMix64::new(0x707);
+        for _ in 0..200 {
+            let len = rng.next_below(64);
+            let s: String = (0..len)
+                .map(|_| {
+                    char::from_u32((rng.next_u64() % 0x24F) as u32)
+                        .unwrap_or('x')
+                })
+                .collect();
+            assert_eq!(t.decode(&t.encode(&s)), s, "failed for {s:?}");
+        }
+    }
+
+    #[test]
+    fn arbitrary_byte_ids_never_panic_decode() {
+        use crate::util::SplitMix64;
+        let t = Tokenizer::byte_level(32000).unwrap();
+        let mut rng = SplitMix64::new(9);
+        for _ in 0..100 {
+            let ids: Vec<i32> = (0..rng.next_below(32))
+                .map(|_| (rng.next_u64() % 40000) as i32 - 100)
+                .collect();
+            let _ = t.decode(&ids); // must not panic on any input
+        }
+    }
+}

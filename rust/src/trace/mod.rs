@@ -1,0 +1,129 @@
+//! Workload trace generation + replay.
+//!
+//! The paper evaluates with a fixed workload (input 512 tokens, batch 1);
+//! the serving benches additionally need open-loop request streams.  We
+//! generate deterministic synthetic traces (Poisson arrivals, bounded
+//! prompt/output length distributions) as the stand-in for production
+//! traces we do not have — see DESIGN.md §4.
+
+use crate::util::SplitMix64;
+
+/// One request in a trace.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRequest {
+    pub id: u64,
+    /// arrival time offset from trace start, microseconds
+    pub arrival_us: u64,
+    pub prompt_tokens: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// Synthetic workload parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceSpec {
+    pub n_requests: usize,
+    /// mean arrival rate, requests/second (Poisson); 0 = all at t=0
+    pub rate_per_s: f64,
+    pub prompt_len_min: usize,
+    pub prompt_len_max: usize,
+    pub new_tokens_min: usize,
+    pub new_tokens_max: usize,
+    /// token id range [0, vocab)
+    pub vocab: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceSpec {
+    fn default() -> Self {
+        TraceSpec {
+            n_requests: 16,
+            rate_per_s: 0.0,
+            prompt_len_min: 4,
+            prompt_len_max: 12,
+            new_tokens_min: 4,
+            new_tokens_max: 8,
+            vocab: 256,
+            seed: 0,
+        }
+    }
+}
+
+/// Generate a deterministic trace from a spec.
+pub fn generate(spec: &TraceSpec) -> Vec<TraceRequest> {
+    assert!(spec.prompt_len_min >= 1);
+    assert!(spec.prompt_len_max >= spec.prompt_len_min);
+    assert!(spec.new_tokens_max >= spec.new_tokens_min);
+    let mut rng = SplitMix64::new(spec.seed);
+    let mut t_us = 0u64;
+    (0..spec.n_requests)
+        .map(|i| {
+            if spec.rate_per_s > 0.0 {
+                t_us += (rng.next_exp(spec.rate_per_s) * 1e6) as u64;
+            }
+            let plen = spec.prompt_len_min
+                + rng.next_below(spec.prompt_len_max - spec.prompt_len_min
+                    + 1);
+            let nnew = spec.new_tokens_min
+                + rng.next_below(spec.new_tokens_max - spec.new_tokens_min
+                    + 1);
+            TraceRequest {
+                id: i as u64,
+                arrival_us: t_us,
+                prompt_tokens: (0..plen)
+                    .map(|_| rng.next_below(spec.vocab) as i32)
+                    .collect(),
+                max_new_tokens: nnew,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let spec = TraceSpec { seed: 7, ..Default::default() };
+        assert_eq!(generate(&spec), generate(&spec));
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let spec = TraceSpec {
+            n_requests: 100,
+            prompt_len_min: 3,
+            prompt_len_max: 9,
+            new_tokens_min: 2,
+            new_tokens_max: 2,
+            vocab: 64,
+            ..Default::default()
+        };
+        for r in generate(&spec) {
+            assert!((3..=9).contains(&r.prompt_tokens.len()));
+            assert_eq!(r.max_new_tokens, 2);
+            assert!(r.prompt_tokens.iter().all(|&t| (0..64).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn arrivals_monotone() {
+        let spec = TraceSpec {
+            n_requests: 50,
+            rate_per_s: 100.0,
+            ..Default::default()
+        };
+        let trace = generate(&spec);
+        for w in trace.windows(2) {
+            assert!(w[1].arrival_us >= w[0].arrival_us);
+        }
+        assert!(trace.last().unwrap().arrival_us > 0);
+    }
+
+    #[test]
+    fn zero_rate_all_arrive_at_start() {
+        for r in generate(&TraceSpec::default()) {
+            assert_eq!(r.arrival_us, 0);
+        }
+    }
+}

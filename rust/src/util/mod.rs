@@ -1,0 +1,28 @@
+//! Small shared utilities: deterministic RNG, timing, alignment helpers.
+
+pub mod json;
+mod rng;
+mod timing;
+pub mod toml_mini;
+
+pub use json::Json;
+pub use rng::SplitMix64;
+pub use timing::Stopwatch;
+pub use toml_mini::parse_toml;
+
+/// Ceil-division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Stable 64-bit FNV-1a hash of a byte string; used to derive per-tensor
+/// weight seeds (`hash(seed, rank, layer, name)`).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}

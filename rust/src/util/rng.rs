@@ -1,0 +1,111 @@
+//! Deterministic RNG for synthetic weights and workload generation.
+//!
+//! SplitMix64 core + Box-Muller normals; no external dependency so every
+//! bench and test is bit-reproducible across runs and machines.
+
+/// SplitMix64: tiny, fast, solid 64-bit PRNG (Steele et al., 2014).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+    /// cached second normal from Box-Muller
+    spare: Option<f32>,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed, spare: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform in [0, n).
+    #[inline]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn next_normal(&mut self) -> f32 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        loop {
+            let u1 = self.next_f32();
+            let u2 = self.next_f32();
+            if u1 <= f32::MIN_POSITIVE {
+                continue;
+            }
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f32::consts::PI * u2).sin_cos();
+            self.spare = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// Exponentially distributed with the given rate (for Poisson arrivals).
+    pub fn next_exp(&mut self, rate: f64) -> f64 {
+        let u = (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        -(1.0 - u).ln() / rate
+    }
+
+    /// Vector of scaled normals (synthetic weight tensors).
+    pub fn normal_vec(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| self.next_normal() * scale).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = SplitMix64::new(7);
+        for _ in 0..1000 {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = SplitMix64::new(3);
+        let n = 20_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.next_normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>()
+            / n as f32;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn exp_positive() {
+        let mut r = SplitMix64::new(9);
+        for _ in 0..100 {
+            assert!(r.next_exp(2.0) >= 0.0);
+        }
+    }
+}

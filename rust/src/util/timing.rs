@@ -1,0 +1,57 @@
+//! Wall-clock timing helper used by the engine's per-segment profiling.
+
+use std::time::{Duration, Instant};
+
+/// Accumulating stopwatch: `lap()` returns the time since the previous
+/// lap and accumulates the total.
+#[derive(Debug)]
+pub struct Stopwatch {
+    last: Instant,
+    total: Duration,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { last: Instant::now(), total: Duration::ZERO }
+    }
+
+    pub fn lap(&mut self) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        self.total += d;
+        d
+    }
+
+    pub fn reset(&mut self) {
+        self.last = Instant::now();
+        self.total = Duration::ZERO;
+    }
+
+    pub fn total(&self) -> Duration {
+        self.total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        let l1 = sw.lap();
+        std::thread::sleep(Duration::from_millis(2));
+        let l2 = sw.lap();
+        assert!(l1 >= Duration::from_millis(1));
+        assert!(l2 >= Duration::from_millis(1));
+        assert!(sw.total() >= l1 + l2 - Duration::from_micros(10));
+    }
+}

@@ -1,0 +1,212 @@
+//! Minimal TOML parser (toml-crate substitute — offline build; see
+//! Cargo.toml).  Supports the subset the engine configs use:
+//!
+//! * `[table]` and dotted `[table.sub]` headers
+//! * `key = "string" | integer | float | true/false`
+//! * `#` comments, blank lines
+//!
+//! Values land in the same [`Json`] tree the JSON parser produces, so
+//! config deserialization has a single source format.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+use super::json::Json;
+
+/// Parse TOML text into a Json::Obj tree.
+pub fn parse_toml(text: &str) -> Result<Json> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| anyhow!("line {}: bad table header",
+                                       lineno + 1))?;
+            path = name.split('.').map(|s| s.trim().to_string()).collect();
+            if path.iter().any(|s| s.is_empty()) {
+                bail!("line {}: empty table path segment", lineno + 1);
+            }
+            // ensure table exists
+            insert_at(&mut root, &path, None, lineno + 1)?;
+        } else {
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                anyhow!("line {}: expected key = value", lineno + 1)
+            })?;
+            let key = k.trim().trim_matches('"').to_string();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let value = parse_value(v.trim())
+                .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+            let mut full = path.clone();
+            full.push(key);
+            insert_at(&mut root, &full, Some(value), lineno + 1)?;
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    let mut prev_backslash = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' if !prev_backslash => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        prev_backslash = c == '\\' && !prev_backslash;
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Json> {
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(Json::Str(unescape(inner)?));
+    }
+    match s {
+        "true" => return Ok(Json::Bool(true)),
+        "false" => return Ok(Json::Bool(false)),
+        _ => {}
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("unterminated array"))?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Json::Arr(vec![]));
+        }
+        let items: Result<Vec<Json>> =
+            inner.split(',').map(|e| parse_value(e.trim())).collect();
+        return Ok(Json::Arr(items?));
+    }
+    s.parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| anyhow!("cannot parse value {s:?}"))
+}
+
+fn unescape(s: &str) -> Result<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => bail!("bad escape \\{other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+fn insert_at(root: &mut BTreeMap<String, Json>, path: &[String],
+             value: Option<Json>, lineno: usize) -> Result<()> {
+    let mut cur = root;
+    let (last, parents) = path.split_last().unwrap();
+    for seg in parents {
+        let entry = cur
+            .entry(seg.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        cur = match entry {
+            Json::Obj(m) => m,
+            _ => bail!("line {lineno}: {seg:?} is not a table"),
+        };
+    }
+    match value {
+        Some(v) => {
+            cur.insert(last.clone(), v);
+        }
+        None => {
+            cur.entry(last.clone())
+                .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_keys() {
+        let v = parse_toml("a = 1\nb = \"x\"\nc = true\nd = 1.5").unwrap();
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("x"));
+        assert_eq!(v.get("c").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("d").unwrap().as_f64(), Some(1.5));
+    }
+
+    #[test]
+    fn tables_and_dotted_headers() {
+        let text = r#"
+model = "small"
+[opt]
+zero_copy = false
+[sampling]
+top_k = 40
+[wire]
+alpha_us = 1.1
+"#;
+        let v = parse_toml(text).unwrap();
+        assert_eq!(v.get("model").unwrap().as_str(), Some("small"));
+        assert_eq!(
+            v.get("opt").unwrap().get("zero_copy").unwrap().as_bool(),
+            Some(false)
+        );
+        assert_eq!(
+            v.get("sampling").unwrap().get("top_k").unwrap().as_usize(),
+            Some(40)
+        );
+    }
+
+    #[test]
+    fn comments_and_strings_with_hash() {
+        let v = parse_toml("a = \"x # y\" # trailing\n# full line\nb = 2")
+            .unwrap();
+        assert_eq!(v.get("a").unwrap().as_str(), Some("x # y"));
+        assert_eq!(v.get("b").unwrap().as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn arrays() {
+        let v = parse_toml("xs = [1, 2, 3]\nys = []").unwrap();
+        assert_eq!(v.get("xs").unwrap().as_arr().unwrap().len(), 3);
+        assert!(v.get("ys").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn nested_dotted() {
+        let v = parse_toml("[a.b]\nc = 3").unwrap();
+        assert_eq!(
+            v.get("a").unwrap().get("b").unwrap().get("c").unwrap()
+                .as_f64(),
+            Some(3.0)
+        );
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse_toml("= 3").is_err());
+        assert!(parse_toml("a = ").is_err());
+        assert!(parse_toml("[unclosed").is_err());
+        assert!(parse_toml("a = \"unterminated").is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! Randomized property tests for the rccl collective substrate
+//! (proptest is unavailable offline; cases are drawn from a seeded
+//! SplitMix64, 64 cases per property, covering world sizes 1..=8 and
+//! irregular payload lengths).
+//!
+//! Invariants under test:
+//!  * allreduce(sum|max) ≡ elementwise fold across ranks, both paths
+//!  * arena path ≡ staged ring path bit-for-bit
+//!  * broadcast delivers the root's bytes to every rank, any root
+//!  * allgather concatenates shards in rank order
+//!  * local-top-k merge ≡ global top-k for every shard split
+
+use std::sync::Arc;
+
+use xeonserve::ccl::{CommGroup, Communicator, ReduceOp};
+use xeonserve::sampling;
+use xeonserve::util::SplitMix64;
+
+fn on_group<R: Send + 'static>(
+    world: usize,
+    capacity: usize,
+    f: impl Fn(Communicator) -> R + Send + Sync + 'static,
+) -> Vec<R> {
+    let group = CommGroup::new_inproc(world, capacity);
+    let f = Arc::new(f);
+    group
+        .into_communicators()
+        .into_iter()
+        .map(|c| {
+            let f = f.clone();
+            std::thread::spawn(move || f(c))
+        })
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|h| h.join().unwrap())
+        .collect()
+}
+
+#[test]
+fn prop_allreduce_paths_agree_and_sum() {
+    let mut rng = SplitMix64::new(0xA11);
+    for case in 0..64 {
+        let world = 1 + rng.next_below(8);
+        let n = 1 + rng.next_below(300);
+        let seed = rng.next_u64();
+        let op = if case % 3 == 0 { ReduceOp::Max } else { ReduceOp::Sum };
+
+        let outs = on_group(world, n, move |mut c| {
+            let mut lrng =
+                SplitMix64::new(seed.wrapping_add(c.rank() as u64));
+            let data: Vec<f32> =
+                (0..n).map(|_| lrng.next_normal()).collect();
+            c.arena_mut(n).unwrap().copy_from_slice(&data);
+            c.allreduce_arena(n, op).unwrap();
+            let arena_out = c.arena(n).unwrap().to_vec();
+            let mut staged = data.clone();
+            c.allreduce_staged(&mut staged, op).unwrap();
+            (data, arena_out, staged)
+        });
+
+        // reference fold
+        let mut expect = outs[0].0.clone();
+        for (data, _, _) in &outs[1..] {
+            for (e, v) in expect.iter_mut().zip(data) {
+                *e = op.apply(*e, *v);
+            }
+        }
+        for (r, (_, arena_out, staged)) in outs.iter().enumerate() {
+            // the two algorithms reduce in different association orders,
+            // so agreement is to f32 tolerance (bit-exact only for W<=2)
+            for (i, (a, s)) in arena_out.iter().zip(staged).enumerate() {
+                assert!(
+                    (a - s).abs() <= 1e-4 * s.abs().max(1.0),
+                    "case {case} rank {r} idx {i}: arena {a} vs staged {s}"
+                );
+            }
+            if world <= 2 {
+                assert_eq!(arena_out, staged,
+                           "case {case} rank {r}: W<=2 must be bit-exact");
+            }
+            for (i, (a, e)) in arena_out.iter().zip(&expect).enumerate() {
+                assert!(
+                    (a - e).abs() <= 1e-4 * e.abs().max(1.0),
+                    "case {case} rank {r} idx {i}: {a} vs {e}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_broadcast_any_root_any_size() {
+    let mut rng = SplitMix64::new(0xB0);
+    for case in 0..64 {
+        let world = 1 + rng.next_below(8);
+        let root = rng.next_below(world);
+        let len = rng.next_below(2000);
+        let seed = rng.next_u64();
+
+        let outs = on_group(world, 8, move |c| {
+            let mut buf = if c.rank() == root {
+                let mut lrng = SplitMix64::new(seed);
+                (0..len).map(|_| lrng.next_u64() as u8).collect()
+            } else {
+                Vec::new()
+            };
+            c.broadcast(&mut buf, root).unwrap();
+            buf
+        });
+        for (r, out) in outs.iter().enumerate() {
+            assert_eq!(out, &outs[root],
+                       "case {case} world {world} root {root} rank {r}");
+            assert_eq!(out.len(), len);
+        }
+    }
+}
+
+#[test]
+fn prop_allgather_rank_order() {
+    let mut rng = SplitMix64::new(0xA6);
+    for case in 0..48 {
+        let world = 1 + rng.next_below(8);
+        let n = 1 + rng.next_below(200);
+        let seed = rng.next_u64();
+        let outs = on_group(world, n, move |c| {
+            let mut lrng =
+                SplitMix64::new(seed.wrapping_mul(c.rank() as u64 + 1));
+            let local: Vec<f32> =
+                (0..n).map(|_| lrng.next_f32()).collect();
+            let mut out = vec![0.0f32; n * c.world()];
+            c.allgather(&local, &mut out).unwrap();
+            (local, out)
+        });
+        let expect: Vec<f32> = outs
+            .iter()
+            .flat_map(|(local, _)| local.clone())
+            .collect();
+        for (r, (_, out)) in outs.iter().enumerate() {
+            assert_eq!(out, &expect, "case {case} rank {r}");
+        }
+    }
+}
+
+#[test]
+fn prop_local_topk_merge_equals_global() {
+    let mut rng = SplitMix64::new(0x70EA);
+    for case in 0..64 {
+        let world = 1 + rng.next_below(8);
+        let per_shard = 1 + rng.next_below(500);
+        let vocab = per_shard * world;
+        let k = 1 + rng.next_below(per_shard.min(64));
+        let full: Vec<f32> =
+            (0..vocab).map(|_| rng.next_normal()).collect();
+
+        let per_rank: Vec<Vec<sampling::Candidate>> = (0..world)
+            .map(|r| {
+                sampling::local_topk(
+                    &full[r * per_shard..(r + 1) * per_shard],
+                    k,
+                    r * per_shard,
+                )
+            })
+            .collect();
+        let merged = sampling::merge_topk(&per_rank, k);
+        let global = sampling::global_topk(&full, k);
+        assert_eq!(merged, global,
+                   "case {case}: world={world} shard={per_shard} k={k}");
+    }
+}
+
+#[test]
+fn prop_gather_preserves_payloads() {
+    let mut rng = SplitMix64::new(0x6A);
+    for _case in 0..32 {
+        let world = 1 + rng.next_below(6);
+        let root = rng.next_below(world);
+        let seed = rng.next_u64();
+        let outs = on_group(world, 8, move |c| {
+            let mut lrng =
+                SplitMix64::new(seed ^ (c.rank() as u64) << 32);
+            let len = 1 + (lrng.next_u64() % 64) as usize;
+            let payload: Vec<u8> =
+                (0..len).map(|_| lrng.next_u64() as u8).collect();
+            (payload.clone(), c.gather(&payload, root).unwrap())
+        });
+        for (r, (_, gathered)) in outs.iter().enumerate() {
+            if r == root {
+                let lists = gathered.as_ref().unwrap();
+                assert_eq!(lists.len(), world);
+                for (s, (sent, _)) in outs.iter().enumerate() {
+                    assert_eq!(&lists[s], sent, "payload from rank {s}");
+                }
+            } else {
+                assert!(gathered.is_none());
+            }
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! THE cross-layer correctness gate: the rust engine, running the
+//! AOT-compiled HLO segments with the tensor-parallel weight shards
+//! exported by `aot.py write_golden`, must reproduce the jax reference
+//! composition token-for-token (greedy) on both block variants.
+//!
+//! Requires `make artifacts` (manifest + golden/ present).
+
+use xeonserve::config::{EngineConfig, Manifest, Variant, WeightSource};
+use xeonserve::engine::Engine;
+
+fn golden_i32(path: &std::path::Path) -> Vec<i32> {
+    use xla::FromRawBytes;
+    let lit = xla::Literal::read_npy(path, &()).expect("read npy");
+    lit.to_vec::<i32>().expect("i32 npy")
+}
+
+fn run_golden(variant: Variant) {
+    let manifest = Manifest::load("artifacts").expect("run `make artifacts`");
+    let golden = manifest.golden.clone().expect("golden meta");
+    let gdir = manifest.golden_dir(&variant.to_string()).unwrap();
+
+    let tokens = golden_i32(&gdir.join("tokens.npy"));
+    let lengths = golden_i32(&gdir.join("lengths.npy"));
+    let greedy = golden_i32(&gdir.join("greedy_tokens.npy")); // [n, B]
+    let n = golden.n_decode;
+    let b = lengths.len();
+    let s = tokens.len() / b;
+
+    let cfg = EngineConfig {
+        model: golden.config.clone(),
+        variant,
+        world: golden.world,
+        batch: b,
+        weights: WeightSource::NpyDir { dir: gdir.clone() },
+        ..Default::default()
+    };
+    let mut engine = Engine::new(cfg).expect("engine init");
+
+    let prompts: Vec<Vec<i32>> = (0..b)
+        .map(|lane| {
+            tokens[lane * s..lane * s + lengths[lane] as usize].to_vec()
+        })
+        .collect();
+    let outs = engine.generate(&prompts, n).expect("generate");
+
+    for lane in 0..b {
+        let expect: Vec<i32> =
+            (0..n).map(|step| greedy[step * b + lane]).collect();
+        assert_eq!(
+            outs[lane], expect,
+            "variant={variant} lane={lane}: rust {:?} != golden {:?}",
+            outs[lane], expect
+        );
+    }
+}
+
+#[test]
+fn parallel_block_matches_jax_reference() {
+    run_golden(Variant::Parallel);
+}
+
+#[test]
+fn serial_block_matches_jax_reference() {
+    run_golden(Variant::Serial);
+}
+
+/// The optimizations must not change the numbers: run the parallel golden
+/// with ALL paper optimizations disabled (naive baseline) and expect the
+/// same tokens.
+#[test]
+fn naive_baseline_produces_identical_tokens() {
+    let manifest = Manifest::load("artifacts").expect("run `make artifacts`");
+    let golden = manifest.golden.clone().expect("golden meta");
+    let gdir = manifest.golden_dir("parallel").unwrap();
+
+    let tokens = golden_i32(&gdir.join("tokens.npy"));
+    let lengths = golden_i32(&gdir.join("lengths.npy"));
+    let greedy = golden_i32(&gdir.join("greedy_tokens.npy"));
+    let n = golden.n_decode;
+    let b = lengths.len();
+    let s = tokens.len() / b;
+
+    let cfg = EngineConfig {
+        model: golden.config.clone(),
+        variant: Variant::Parallel,
+        world: golden.world,
+        batch: b,
+        weights: WeightSource::NpyDir { dir: gdir },
+        opt: xeonserve::config::OptFlags::naive(),
+        ..Default::default()
+    };
+    let mut engine = Engine::new(cfg).expect("engine init");
+    let prompts: Vec<Vec<i32>> = (0..b)
+        .map(|lane| {
+            tokens[lane * s..lane * s + lengths[lane] as usize].to_vec()
+        })
+        .collect();
+    let outs = engine.generate(&prompts, n).expect("generate");
+    for lane in 0..b {
+        let expect: Vec<i32> =
+            (0..n).map(|step| greedy[step * b + lane]).collect();
+        assert_eq!(outs[lane], expect, "naive lane={lane}");
+    }
+}

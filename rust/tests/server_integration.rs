@@ -1,0 +1,75 @@
+//! End-to-end server test: boot the TCP endpoint on an ephemeral port,
+//! drive it with concurrent client connections, and check the JSON
+//! protocol round-trips.  Requires `make artifacts` (tiny preset).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use xeonserve::config::EngineConfig;
+use xeonserve::util::Json;
+
+fn wait_for_port(addr: &str) -> TcpStream {
+    for _ in 0..200 {
+        if let Ok(s) = TcpStream::connect(addr) {
+            return s;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    panic!("server on {addr} never came up");
+}
+
+#[test]
+fn serve_roundtrip_and_concurrent_clients() {
+    let addr = "127.0.0.1:47811";
+    let cfg = EngineConfig {
+        model: "tiny".into(),
+        world: 2,
+        batch: 2,
+        ..Default::default()
+    };
+    std::thread::spawn(move || {
+        // runs forever; the test process exits when done
+        let _ = xeonserve::server::serve(cfg, addr);
+    });
+
+    // client 1: simple request
+    let mut s1 = wait_for_port(addr);
+    s1.write_all(b"{\"prompt\": \"hello\", \"max_new_tokens\": 4}\n")
+        .unwrap();
+    let mut line = String::new();
+    BufReader::new(s1.try_clone().unwrap()).read_line(&mut line).unwrap();
+    let j = Json::parse(&line).expect("valid json response");
+    assert!(j.get("error").is_none(), "unexpected error: {line}");
+    assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 4);
+    assert!(j.get("latency_ms").unwrap().as_f64().unwrap() > 0.0);
+
+    // two concurrent clients (exercises the batcher)
+    let h: Vec<_> = (0..2)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut s = wait_for_port("127.0.0.1:47811");
+                let req = format!(
+                    "{{\"prompt\": \"client {i}\", \"max_new_tokens\": 3}}\n"
+                );
+                s.write_all(req.as_bytes()).unwrap();
+                let mut line = String::new();
+                BufReader::new(s).read_line(&mut line).unwrap();
+                let j = Json::parse(&line).unwrap();
+                assert!(j.get("error").is_none(), "{line}");
+                j.get("tokens").unwrap().as_arr().unwrap().len()
+            })
+        })
+        .collect();
+    for t in h {
+        assert_eq!(t.join().unwrap(), 3);
+    }
+
+    // malformed request gets an error object, not a hangup
+    let mut s2 = wait_for_port(addr);
+    s2.write_all(b"this is not json\n").unwrap();
+    let mut line = String::new();
+    BufReader::new(s2).read_line(&mut line).unwrap();
+    let j = Json::parse(&line).unwrap();
+    assert!(j.get("error").is_some());
+}
