@@ -1,0 +1,21 @@
+# Convenience targets.  `make artifacts` is the one-time AOT step every
+# engine-level example/test/bench needs (requires python + jax + numpy;
+# rust never invokes python at runtime).
+
+.PHONY: artifacts artifacts-full test verify clean-artifacts
+
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+artifacts-full:
+	cd python && python -m compile.aot --out-dir ../artifacts --full
+
+test:
+	cargo test -q
+
+# tier-1 verify (ROADMAP.md)
+verify:
+	cargo build --release && cargo test -q
+
+clean-artifacts:
+	rm -rf artifacts

@@ -1,73 +1,28 @@
-//! Genuine multi-process collectives over TCP — the deployment shape the
-//! paper actually runs (one process per socket, oneCCL over the fabric).
+//! Genuine multi-process serving over TCP — the deployment shape the
+//! paper actually runs (one rank process per socket, collectives over
+//! the fabric), driven through the first-class launch runtime
+//! (DESIGN.md §8) instead of hand-rolled collective calls.
 //!
-//! This example demonstrates the rccl TCP transport with a real ring
-//! allreduce + tree broadcast + top-k gather across OS processes on
-//! localhost.  The parent forks `world` child processes (re-exec'ing
-//! itself with `--rank N`), each of which connects the mesh and runs the
-//! paper's round-boundary collectives.
+//! The parent process plays `xeonserve launch`: it registers `--world`
+//! worker processes (re-exec'd copies of this example running
+//! `launch::run_worker`), distributes the engine config over the
+//! control connection, waits for the rank mesh + model bring-up, and
+//! generates a prompt end-to-end — token IDs broadcast, per-layer
+//! allreduces, and the §2.1b top-k gather all crossing real OS-process
+//! boundaries on localhost sockets.
 //!
 //! ```bash
-//! cargo run --release --example multiproc_tcp            # parent, world=2
+//! make artifacts && cargo run --release --example multiproc_tcp
 //! cargo run --release --example multiproc_tcp -- --world 4
 //! ```
 
 use anyhow::{Context, Result};
-use xeonserve::ccl::{CommGroup, CommStats, ReduceOp, TcpTransport};
-use xeonserve::sampling::{self, Candidate};
+use xeonserve::config::EngineConfig;
+use xeonserve::launch::{self, LaunchOptions};
+use xeonserve::tokenizer::Tokenizer;
 
-const BASE_PORT: u16 = 41820;
-
-fn child(world: usize, rank: usize) -> Result<()> {
-    let transport =
-        TcpTransport::connect_mesh(world, rank, "127.0.0.1", BASE_PORT)?;
-    let stats = std::sync::Arc::new(CommStats::default());
-    let comm = CommGroup::from_transport(Box::new(transport), stats.clone());
-
-    // 1. §2.1a: rank 0 broadcasts token ids
-    let mut ids = if rank == 0 {
-        vec![11u8, 22, 33, 44]
-    } else {
-        Vec::new()
-    };
-    comm.broadcast(&mut ids, 0)?;
-    anyhow::ensure!(ids == vec![11, 22, 33, 44], "broadcast mismatch");
-
-    // 2. per-layer partial-sum allreduce (staged ring over TCP)
-    let mut partial: Vec<f32> =
-        (0..1024).map(|i| (rank * 1000 + i) as f32).collect();
-    comm.allreduce_staged(&mut partial, ReduceOp::Sum)?;
-    let expect0: f32 = (0..world).map(|r| (r * 1000) as f32).sum();
-    anyhow::ensure!((partial[0] - expect0).abs() < 1e-3,
-                    "allreduce mismatch: {} != {}", partial[0], expect0);
-
-    // 3. §2.1b: local top-k -> gather k pairs on rank 0
-    let local = vec![
-        Candidate { token: rank as u32 * 10, logit: rank as f32 },
-        Candidate { token: rank as u32 * 10 + 1, logit: -1.0 },
-    ];
-    let gathered = comm.gather(&sampling::encode_candidates(&local), 0)?;
-    if rank == 0 {
-        let lists: Vec<Vec<Candidate>> = gathered
-            .unwrap()
-            .iter()
-            .map(|b| sampling::decode_candidates(b))
-            .collect();
-        let merged = sampling::merge_topk(&lists, 3);
-        println!(
-            "rank 0: merged top-3 after TCP gather: {:?}",
-            merged.iter().map(|c| (c.token, c.logit)).collect::<Vec<_>>()
-        );
-        anyhow::ensure!(merged[0].token == (world as u32 - 1) * 10);
-    }
-
-    let snap = stats.snapshot();
-    println!(
-        "rank {rank}: OK — {} collectives, {} wire bytes",
-        snap.sync_points, snap.wire_bytes
-    );
-    Ok(())
-}
+const CONTROL_ADDR: &str = "127.0.0.1:47230";
+const MESH_BASE_PORT: u16 = 41820;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().collect();
@@ -79,22 +34,56 @@ fn main() -> Result<()> {
     let world: usize =
         get("--world").map(|v| v.parse()).transpose()?.unwrap_or(2);
 
+    // child mode: one tensor-parallel rank worker process
     if let Some(rank) = get("--rank") {
-        return child(world, rank.parse()?);
+        let coordinator =
+            get("--coordinator").unwrap_or_else(|| CONTROL_ADDR.into());
+        return launch::run_worker(rank.parse()?, &coordinator);
     }
 
-    // parent: spawn one child per rank, re-exec'ing this binary
+    // parent mode: the coordinator
+    let cfg = EngineConfig {
+        model: "tiny".into(),
+        world,
+        batch: 2,
+        ..Default::default()
+    };
+    let opts = LaunchOptions {
+        world,
+        control_addr: CONTROL_ADDR.into(),
+        mesh_base_port: MESH_BASE_PORT,
+        ..Default::default()
+    };
+
+    // spawn one worker process per rank, re-exec'ing this binary
     let exe = std::env::current_exe()?;
     let mut children = Vec::new();
     for rank in 0..world {
         children.push(
             std::process::Command::new(&exe)
-                .args(["--world", &world.to_string(), "--rank",
-                       &rank.to_string()])
+                .args(["--world", &world.to_string(),
+                       "--rank", &rank.to_string(),
+                       "--coordinator", CONTROL_ADDR])
                 .spawn()
                 .with_context(|| format!("spawning rank {rank}"))?,
         );
     }
+
+    let run = || -> Result<()> {
+        let fleet = launch::coordinate(&cfg, &opts)?;
+        let mut engine = fleet.into_engine(cfg.clone())?;
+        let tok = Tokenizer::byte_level(engine.preset().vocab)?;
+
+        let prompt = "the quick brown fox";
+        let out = engine.generate(&[tok.encode(prompt)], 8)?;
+        println!("prompt: {prompt:?}");
+        println!("completion: {:?}", tok.decode(&out[0]));
+        println!("tokens: {:?}", out[0]);
+        // engine drop sends Cmd::Shutdown to every worker
+        Ok(())
+    };
+    let result = run();
+
     let mut ok = true;
     for (rank, mut c) in children.into_iter().enumerate() {
         let status = c.wait()?;
@@ -103,7 +92,8 @@ fn main() -> Result<()> {
             ok = false;
         }
     }
+    result?;
     anyhow::ensure!(ok, "some ranks failed");
-    println!("multiproc_tcp: all {world} processes completed ✓");
+    println!("multiproc_tcp: all {world} worker processes completed ✓");
     Ok(())
 }

@@ -32,7 +32,7 @@ pub use group::{CommGroup, Communicator};
 pub use ring::ring_chunk_range;
 pub use stats::{CommStats, StatsSnapshot};
 pub use transport::{bytes_f32 as bytes_to_f32, InProcTransport,
-                    PtpTransport, TcpTransport};
+                    PtpTransport, TcpTransport, RECV_TIMEOUT};
 
 /// Owned little-endian byte image of an f32 slice (broadcast payloads).
 pub fn f32_to_bytes(data: &[f32]) -> Vec<u8> {

@@ -4,7 +4,8 @@
 //!   process; models oneCCL's same-node path for the staged baseline
 //!   (every message is an owned, copied `Vec`).
 //! * [`TcpTransport`] — real sockets, one stream per directed peer pair,
-//!   for genuine multi-process runs (`examples/multiproc_tcp.rs`).
+//!   for genuine multi-process runs: the rank mesh of `xeonserve worker`
+//!   processes (see `crate::launch` and `examples/multiproc_tcp.rs`).
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
@@ -20,6 +21,24 @@ use anyhow::{anyhow, bail, Context, Result};
 pub const RECV_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// A tagged point-to-point message transport between `world` ranks.
+///
+/// All staged collectives ([`crate::ccl::Communicator`]'s ring/direct
+/// allreduce, tree broadcast, gathers) are built from these two
+/// primitives, so a new fabric only has to implement `send`/`recv`.
+///
+/// # Example
+///
+/// ```
+/// use xeonserve::ccl::{InProcTransport, PtpTransport};
+///
+/// // a 2-rank in-process mesh; rank 1 sends, rank 0 receives
+/// let mut mesh = InProcTransport::mesh(2);
+/// let r1 = mesh.pop().unwrap();
+/// let r0 = mesh.pop().unwrap();
+/// let h = std::thread::spawn(move || r1.send(0, 7, b"hi").unwrap());
+/// assert_eq!(r0.recv(1, 7).unwrap(), b"hi".to_vec());
+/// h.join().unwrap();
+/// ```
 pub trait PtpTransport: Send {
     fn world(&self) -> usize;
     fn rank(&self) -> usize;
@@ -103,11 +122,19 @@ impl PtpTransport for InProcTransport {
 
 /// TCP transport: rank 0 listens and the mesh bootstraps through it.
 ///
-/// Frame format: [tag: u32 LE][len: u32 LE][payload].
+/// Frame format: `[tag: u32 LE] [len: u32 LE] [payload]`.
+///
+/// Every stream carries a receive timeout (default [`RECV_TIMEOUT`]) so
+/// a peer process that dies mid-collective turns into an error on the
+/// survivors instead of a hang; the launch control plane (see
+/// `crate::launch`) detects the death faster via heartbeats, and this
+/// timeout is the backstop that unblocks ranks already inside a
+/// collective.
 pub struct TcpTransport {
     world: usize,
     rank: usize,
     streams: HashMap<usize, Mutex<TcpStream>>,
+    recv_timeout: Option<Duration>,
 }
 
 impl TcpTransport {
@@ -124,9 +151,35 @@ impl TcpTransport {
             let (a, b) = (rank.min(peer), rank.max(peer));
             let port = base_port + (a * world + b) as u16;
             let stream = if rank == a {
+                // accept with a deadline: if the peer dies before ever
+                // connecting, bring-up must error out, not hang forever
                 let listener = TcpListener::bind((host, port))
                     .with_context(|| format!("bind {host}:{port}"))?;
-                let (s, _) = listener.accept()?;
+                listener.set_nonblocking(true)?;
+                let deadline = std::time::Instant::now() + RECV_TIMEOUT;
+                let s = loop {
+                    match listener.accept() {
+                        Ok((s, _)) => break s,
+                        Err(e)
+                            if e.kind()
+                                == std::io::ErrorKind::WouldBlock =>
+                        {
+                            if std::time::Instant::now() > deadline {
+                                bail!(
+                                    "rank {peer} never connected \
+                                     {host}:{port} within {RECV_TIMEOUT:?}"
+                                );
+                            }
+                            std::thread::sleep(Duration::from_millis(50));
+                        }
+                        Err(e) => {
+                            return Err(e).with_context(|| {
+                                format!("accept on {host}:{port}")
+                            })
+                        }
+                    }
+                };
+                s.set_nonblocking(false)?;
                 s
             } else {
                 // retry while the peer's listener comes up
@@ -151,7 +204,30 @@ impl TcpTransport {
             stream.set_nodelay(true)?;
             streams.insert(peer, Mutex::new(stream));
         }
-        Ok(TcpTransport { world, rank, streams })
+        let t = TcpTransport {
+            world,
+            rank,
+            streams,
+            recv_timeout: Some(RECV_TIMEOUT),
+        };
+        t.apply_recv_timeout()?;
+        Ok(t)
+    }
+
+    /// Override the receive timeout on every peer stream (`None`
+    /// blocks forever).  Tests use short timeouts to exercise the
+    /// dead-peer path quickly; production keeps [`RECV_TIMEOUT`].
+    pub fn set_recv_timeout(&mut self, timeout: Option<Duration>)
+                            -> Result<()> {
+        self.recv_timeout = timeout;
+        self.apply_recv_timeout()
+    }
+
+    fn apply_recv_timeout(&self) -> Result<()> {
+        for s in self.streams.values() {
+            s.lock().unwrap().set_read_timeout(self.recv_timeout)?;
+        }
+        Ok(())
     }
 }
 
@@ -173,16 +249,36 @@ impl PtpTransport for TcpTransport {
     }
 
     fn recv(&self, from: usize, tag: u32) -> Result<Vec<u8>> {
+        let classify = |e: std::io::Error| -> anyhow::Error {
+            match e.kind() {
+                // SO_RCVTIMEO expiry surfaces as WouldBlock (unix) or
+                // TimedOut (windows): the peer is silent, likely dead or
+                // diverged from the SPMD collective schedule.
+                std::io::ErrorKind::WouldBlock
+                | std::io::ErrorKind::TimedOut => anyhow!(
+                    "recv from rank {from} tag {tag} timed out after \
+                     {:?} (peer dead or SPMD schedule mismatch)",
+                    self.recv_timeout
+                ),
+                // EOF: the peer closed its end — it exited or was killed.
+                std::io::ErrorKind::UnexpectedEof => anyhow!(
+                    "rank {from} hung up mid-collective (peer process \
+                     exited or was killed)"
+                ),
+                _ => anyhow::Error::new(e)
+                    .context(format!("recv from rank {from} tag {tag}")),
+            }
+        };
         let mut s = self.streams[&from].lock().unwrap();
         let mut hdr = [0u8; 8];
-        s.read_exact(&mut hdr)?;
+        s.read_exact(&mut hdr).map_err(classify)?;
         let got_tag = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
         let len = u32::from_le_bytes(hdr[4..8].try_into().unwrap()) as usize;
         if got_tag != tag {
             bail!("tcp tag mismatch from {from}: got {got_tag}, want {tag}");
         }
         let mut data = vec![0u8; len];
-        s.read_exact(&mut data)?;
+        s.read_exact(&mut data).map_err(classify)?;
         Ok(data)
     }
 }
@@ -247,5 +343,49 @@ mod tests {
         assert_eq!(t.recv(1, 3).unwrap(), vec![5, 6]);
         t.send(1, 4, &[7]).unwrap();
         assert_eq!(h.join().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn tcp_recv_errors_on_dropped_peer() {
+        // rank 1 connects the mesh and immediately exits; rank 0's recv
+        // must fail promptly (EOF) instead of hanging.
+        let h = std::thread::spawn(|| {
+            let t = TcpTransport::connect_mesh(2, 1, "127.0.0.1", 39320)
+                .unwrap();
+            drop(t); // peer process "dies"
+        });
+        let t = TcpTransport::connect_mesh(2, 0, "127.0.0.1", 39320).unwrap();
+        h.join().unwrap();
+        let t0 = std::time::Instant::now();
+        let err = t.recv(1, 9).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert!(err.to_string().contains("hung up"),
+                "unexpected error: {err:#}");
+    }
+
+    #[test]
+    fn tcp_recv_times_out_on_silent_peer() {
+        // peer is alive but never sends (SPMD divergence): recv must
+        // return the timeout error once the configured deadline passes.
+        let (done_tx, done_rx) = std::sync::mpsc::channel::<()>();
+        let h = std::thread::spawn(move || {
+            let t = TcpTransport::connect_mesh(2, 1, "127.0.0.1", 39330)
+                .unwrap();
+            // hold the connection open, silently, until the test is done
+            let _ = done_rx.recv();
+            drop(t);
+        });
+        let mut t =
+            TcpTransport::connect_mesh(2, 0, "127.0.0.1", 39330).unwrap();
+        t.set_recv_timeout(Some(Duration::from_millis(200))).unwrap();
+        let t0 = std::time::Instant::now();
+        let err = t.recv(1, 9).unwrap_err();
+        let waited = t0.elapsed();
+        assert!(waited >= Duration::from_millis(150), "waited {waited:?}");
+        assert!(waited < Duration::from_secs(10), "waited {waited:?}");
+        assert!(err.to_string().contains("timed out"),
+                "unexpected error: {err:#}");
+        done_tx.send(()).unwrap();
+        h.join().unwrap();
     }
 }

@@ -233,6 +233,51 @@ impl EngineConfig {
         Ok(cfg)
     }
 
+    /// Serialize to the same TOML dialect [`Self::from_toml_str`]
+    /// parses.  This is how the launch coordinator ships the engine
+    /// config to `xeonserve worker` processes (DESIGN.md §8): one
+    /// source of truth on the coordinator, byte-identical settings on
+    /// every rank.
+    pub fn to_toml_string(&self) -> String {
+        // names/paths must survive the trip through the TOML parser
+        fn esc(s: impl std::fmt::Display) -> String {
+            crate::util::toml_mini::escape(&s.to_string())
+        }
+        let mut s = String::new();
+        use std::fmt::Write;
+        let _ = writeln!(s, "model = \"{}\"", esc(&self.model));
+        let _ = writeln!(s, "variant = \"{}\"", self.variant);
+        let _ = writeln!(s, "world = {}", self.world);
+        let _ = writeln!(s, "batch = {}", self.batch);
+        let _ = writeln!(s, "artifacts_dir = \"{}\"",
+                         esc(self.artifacts_dir.display()));
+        let _ = writeln!(s, "max_new_tokens = {}", self.max_new_tokens);
+        match &self.weights {
+            WeightSource::Synthetic { seed } => {
+                let _ = writeln!(
+                    s, "[weights]\nkind = \"synthetic\"\nseed = {seed}");
+            }
+            WeightSource::NpyDir { dir } => {
+                let _ = writeln!(
+                    s, "[weights]\nkind = \"npydir\"\ndir = \"{}\"",
+                    esc(dir.display()));
+            }
+        }
+        let _ = writeln!(s, "[opt]");
+        let _ = writeln!(s, "broadcast_ids = {}", self.opt.broadcast_ids);
+        let _ = writeln!(s, "local_topk = {}", self.opt.local_topk);
+        let _ = writeln!(s, "zero_copy = {}", self.opt.zero_copy);
+        let _ = writeln!(s, "[sampling]");
+        let _ = writeln!(s, "temperature = {}", self.sampling.temperature);
+        let _ = writeln!(s, "top_k = {}", self.sampling.top_k);
+        let _ = writeln!(s, "top_p = {}", self.sampling.top_p);
+        let _ = writeln!(s, "seed = {}", self.sampling.seed);
+        let _ = writeln!(s, "[wire]");
+        let _ = writeln!(s, "alpha_us = {}", self.wire.alpha_us);
+        let _ = writeln!(s, "beta_gbps = {}", self.wire.beta_gbps);
+        s
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.world == 0 || !self.world.is_power_of_two() {
             bail!("world must be a power of two, got {}", self.world);
@@ -323,6 +368,49 @@ beta_gbps = 10.0
                 assert_eq!(dir, PathBuf::from("/tmp/golden"))
             }
             _ => panic!("wrong source"),
+        }
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        // the launch coordinator ships configs as TOML; every field must
+        // survive serialize → parse
+        let mut cfg = EngineConfig {
+            model: "small".into(),
+            variant: Variant::Serial,
+            world: 4,
+            batch: 1,
+            // quotes and backslashes must survive the escaping layer
+            artifacts_dir: PathBuf::from("some\\odd \"artifacts\" dir"),
+            max_new_tokens: 9,
+            ..Default::default()
+        };
+        cfg.opt.zero_copy = false;
+        cfg.sampling.temperature = 0.75;
+        cfg.sampling.top_k = 13;
+        cfg.sampling.seed = 42;
+        cfg.wire.alpha_us = 2.5;
+        cfg.weights = WeightSource::NpyDir { dir: PathBuf::from("/g/w") };
+
+        let back =
+            EngineConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
+        assert_eq!(back.model, cfg.model);
+        assert_eq!(back.variant, cfg.variant);
+        assert_eq!(back.world, cfg.world);
+        assert_eq!(back.batch, cfg.batch);
+        assert_eq!(back.artifacts_dir, cfg.artifacts_dir);
+        assert_eq!(back.max_new_tokens, cfg.max_new_tokens);
+        assert!(!back.opt.zero_copy);
+        assert_eq!(back.opt.broadcast_ids, cfg.opt.broadcast_ids);
+        assert_eq!(back.sampling.top_k, 13);
+        assert_eq!(back.sampling.seed, 42);
+        assert!((back.sampling.temperature - 0.75).abs() < 1e-6);
+        assert!((back.wire.alpha_us - 2.5).abs() < 1e-9);
+        match back.weights {
+            WeightSource::NpyDir { dir } => {
+                assert_eq!(dir, PathBuf::from("/g/w"))
+            }
+            _ => panic!("wrong weight source"),
         }
     }
 

@@ -1,0 +1,81 @@
+//! Rank hosting: where a tensor-parallel rank worker actually lives.
+//!
+//! The engine drives every rank through the [`RankHost`] trait and never
+//! assumes a topology.  Two implementations exist (DESIGN.md §8):
+//!
+//! * [`ThreadRankHost`] — the classic in-process shape: one
+//!   `RankWorker` thread per rank, commands over an mpsc channel.
+//! * `RemoteRankHost` (in [`crate::launch`]) — one OS process per rank,
+//!   commands framed over the launch control TCP connection.
+//!
+//! Replies do not flow through this trait: every host funnels its rank's
+//! [`Reply`](super::proto::Reply) stream into the single mpsc reply
+//! channel the engine owns,
+//! so the serving loop is identical for both topologies (and a host that
+//! dies injects a `Reply::Error` there instead of letting the engine
+//! hang).
+
+use std::sync::mpsc::Sender;
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use super::proto::Cmd;
+
+/// A handle driving one rank worker, wherever it runs.
+///
+/// Contract: `send` delivers commands in order; the worker answers every
+/// `Prefill`/`Decode`/`Reset` with exactly one reply on the engine's
+/// reply channel; `shutdown` is idempotent and best-effort (the worker
+/// may already be gone).
+pub trait RankHost: Send {
+    /// The tensor-parallel rank this host drives.
+    fn rank(&self) -> usize;
+
+    /// Deliver one command to the worker.
+    fn send(&self, cmd: Cmd) -> Result<()>;
+
+    /// Ask the worker to exit and reclaim host resources.  Called by
+    /// `Engine::drop`; must not block indefinitely.
+    fn shutdown(&mut self);
+}
+
+/// In-process rank host: a `RankWorker` thread fed over an mpsc channel.
+pub struct ThreadRankHost {
+    rank: usize,
+    cmd_tx: Sender<Cmd>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ThreadRankHost {
+    pub fn new(rank: usize, cmd_tx: Sender<Cmd>, handle: JoinHandle<()>)
+               -> Self {
+        ThreadRankHost { rank, cmd_tx, handle: Some(handle) }
+    }
+}
+
+impl RankHost for ThreadRankHost {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn send(&self, cmd: Cmd) -> Result<()> {
+        self.cmd_tx
+            .send(cmd)
+            .ok()
+            .with_context(|| format!("rank {} thread gone", self.rank))
+    }
+
+    fn shutdown(&mut self) {
+        let _ = self.cmd_tx.send(Cmd::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ThreadRankHost {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}

@@ -1,28 +1,57 @@
 //! The distributed generation engine (leader side).
 //!
-//! [`Engine`] spawns one [`rank::RankWorker`] thread per tensor-parallel
-//! rank (the paper's per-socket processes), wires them into a ccl group,
-//! and drives the serving loop: admit → prefill → batched decode →
-//! retire, with continuous batching at lane granularity.
+//! [`Engine`] drives one rank worker per tensor-parallel rank (the
+//! paper's per-socket processes) through the [`RankHost`] abstraction,
+//! wires them into a ccl group, and runs the serving loop: admit →
+//! prefill → batched decode → retire, with continuous batching at lane
+//! granularity.
+//!
+//! Rank workers can live in two places (DESIGN.md §8):
+//!
+//! * **in-process threads** — [`Engine::new`] spawns a `RankWorker`
+//!   thread per rank over an in-process ccl group (the default, and the
+//!   simulated-cluster testbed);
+//! * **remote processes** — [`Engine::from_rank_hosts`] accepts hosts
+//!   built by [`crate::launch`], each forwarding the same
+//!   [`proto::Cmd`]/[`proto::Reply`] protocol over a TCP control
+//!   connection to an `xeonserve worker` process whose collectives run
+//!   over the ccl TCP transport.
 //!
 //! The leader also maintains the *simulated-cluster* latency view
 //! (DESIGN.md §4): per-step `max(rank compute) + analytic wire cost`,
 //! because on this one-CPU testbed the rank threads time-slice a single
 //! core and measured wall-clock adds their compute up instead of
 //! overlapping it.
+//!
+//! # Example
+//!
+//! ```no_run
+//! use xeonserve::config::EngineConfig;
+//! use xeonserve::engine::Engine;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! // two in-process ranks over the tiny preset (needs `make artifacts`)
+//! let mut engine = Engine::new(EngineConfig::default())?;
+//! let outs = engine.generate(&[vec![1, 2, 3]], 8)?;
+//! println!("generated: {:?}", outs[0]);
+//! # Ok(())
+//! # }
+//! ```
 
-mod proto;
-mod rank;
+mod host;
+pub mod proto;
+pub(crate) mod rank;
 
 use std::collections::VecDeque;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::thread::JoinHandle;
+use std::sync::mpsc::{channel, Receiver};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+pub use host::{RankHost, ThreadRankHost};
+
 use crate::ccl::{CommGroup, StatsSnapshot};
-use crate::config::{EngineConfig, ModelPreset};
+use crate::config::{EngineConfig, Manifest, ModelPreset};
 use crate::kvcache::{LaneTable, PagedAllocator};
 use crate::metrics::{RunMetrics, StepTiming};
 use crate::sampling::{self, Candidate};
@@ -61,9 +90,8 @@ pub struct Engine {
     cfg: EngineConfig,
     preset: ModelPreset,
     prefill_buckets: Vec<usize>,
-    cmd_txs: Vec<Sender<Cmd>>,
+    hosts: Vec<Box<dyn RankHost>>,
     reply_rx: Receiver<Reply>,
-    handles: Vec<JoinHandle<()>>,
     stats: std::sync::Arc<crate::ccl::CommStats>,
     lanes: LaneTable,
     pages: PagedAllocator,
@@ -76,8 +104,8 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Spawn rank threads, compile artifacts, load weights.  Blocks until
-    /// every rank reports ready.
+    /// Spawn in-process rank threads, compile artifacts, load weights.
+    /// Blocks until every rank reports ready.
     pub fn new(cfg: EngineConfig) -> Result<Engine> {
         cfg.validate()?;
         let manifest = cfg.manifest()?;
@@ -99,30 +127,83 @@ impl Engine {
         let stats = group.stats.clone();
 
         let (reply_tx, reply_rx) = channel();
-        let mut cmd_txs = Vec::with_capacity(cfg.world);
-        let mut handles = Vec::with_capacity(cfg.world);
+        let mut hosts: Vec<Box<dyn RankHost>> =
+            Vec::with_capacity(cfg.world);
         for (rank, comm) in group.into_communicators().into_iter().enumerate()
         {
             let (tx, rx) = channel();
-            cmd_txs.push(tx);
             let cfg_r = cfg.clone();
             let reply_tx = reply_tx.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("rank{rank}"))
-                    .spawn(move || {
-                        rank::RankWorker::run(rank, cfg_r, comm, rx, reply_tx)
-                    })?,
+            let handle = std::thread::Builder::new()
+                .name(format!("rank{rank}"))
+                .spawn(move || {
+                    rank::RankWorker::run(rank, cfg_r, comm, rx, reply_tx)
+                })?;
+            hosts.push(Box::new(ThreadRankHost::new(rank, tx, handle)));
+        }
+        Self::build(cfg, &manifest, hosts, reply_rx, stats)
+    }
+
+    /// Build an engine over externally hosted rank workers (the
+    /// distributed deployment path — see [`crate::launch`]).
+    ///
+    /// `hosts` must cover ranks `0..cfg.world` in rank order, each
+    /// funneling its worker's replies into the `reply_rx` channel.
+    /// `stats` is the comm-stats handle for [`Engine::comm_stats`]
+    /// (remote workers keep their own counters; the coordinator-side
+    /// snapshot then only reflects leader-visible traffic).
+    ///
+    /// Blocks until every rank reports [`proto::Reply::Ready`]; a worker
+    /// that fails or disappears during bring-up surfaces as an error.
+    pub fn from_rank_hosts(
+        cfg: EngineConfig,
+        hosts: Vec<Box<dyn RankHost>>,
+        reply_rx: Receiver<Reply>,
+        stats: std::sync::Arc<crate::ccl::CommStats>,
+    ) -> Result<Engine> {
+        cfg.validate()?;
+        let manifest = cfg.manifest()?;
+        Self::build(cfg, &manifest, hosts, reply_rx, stats)
+    }
+
+    /// Shared tail of both constructors (the config is already
+    /// validated and the manifest loaded exactly once by the caller).
+    fn build(
+        cfg: EngineConfig,
+        manifest: &Manifest,
+        hosts: Vec<Box<dyn RankHost>>,
+        reply_rx: Receiver<Reply>,
+        stats: std::sync::Arc<crate::ccl::CommStats>,
+    ) -> Result<Engine> {
+        if hosts.len() != cfg.world {
+            bail!("{} rank hosts for world={}", hosts.len(), cfg.world);
+        }
+        for (i, h) in hosts.iter().enumerate() {
+            if h.rank() != i {
+                bail!("host {} claims rank {}", i, h.rank());
+            }
+        }
+        let preset = manifest.preset(&cfg.model)?.clone();
+        let prefill_buckets =
+            manifest.prefill_buckets(&cfg.model, cfg.world, cfg.batch);
+        if prefill_buckets.is_empty() {
+            bail!(
+                "no prefill segments for model={} world={} batch={}",
+                cfg.model, cfg.world, cfg.batch
             );
         }
 
-        // wait for readiness
-        let mut ready = 0;
-        while ready < cfg.world {
-            match reply_rx.recv().context("rank thread died during init")? {
+        // wait for readiness — once per rank, like collect_round, so a
+        // duplicated Ready frame can't start the engine early
+        let mut ready = vec![false; cfg.world];
+        while ready.iter().any(|&r| !r) {
+            match reply_rx.recv().context("rank worker died during init")? {
                 Reply::Ready { rank } => {
-                    debug_assert!(rank < cfg.world);
-                    ready += 1;
+                    anyhow::ensure!(rank < cfg.world,
+                                    "Ready from out-of-range rank {rank}");
+                    anyhow::ensure!(!std::mem::replace(&mut ready[rank],
+                                                       true),
+                                    "rank {rank} reported Ready twice");
                 }
                 Reply::Error { rank, message } => {
                     bail!("rank {rank} failed init: {message}")
@@ -144,9 +225,8 @@ impl Engine {
         Ok(Engine {
             preset,
             prefill_buckets,
-            cmd_txs,
+            hosts,
             reply_rx,
-            handles,
             stats,
             lanes,
             pages,
@@ -264,12 +344,15 @@ impl Engine {
 
     /// Reset all rank KV caches and lane state (bench harness hook).
     pub fn reset(&mut self) -> Result<()> {
-        for tx in &self.cmd_txs {
-            tx.send(Cmd::Reset).ok();
+        for host in &self.hosts {
+            host.send(Cmd::Reset).ok();
         }
         for _ in 0..self.cfg.world {
             match self.reply_rx.recv()? {
-                Reply::ResetDone { rank } => debug_assert!(rank < self.cfg.world),
+                Reply::ResetDone { rank } => {
+                    anyhow::ensure!(rank < self.cfg.world,
+                                    "ResetDone from out-of-range rank {rank}")
+                }
                 Reply::Error { rank, message } => {
                     bail!("rank {rank} reset failed: {message}")
                 }
@@ -300,13 +383,13 @@ impl Engine {
         padded.resize(bucket, 0);
 
         let t0 = Instant::now();
-        for (rank, tx) in self.cmd_txs.iter().enumerate() {
+        for host in &self.hosts {
             // only rank 0 gets ids from the leader; the others receive
             // them through the §2.1a broadcast (or, in the baseline, the
             // embedded activations)
-            let tokens = (rank == 0).then(|| padded.clone());
-            tx.send(Cmd::Prefill { lane, bucket, tokens, length })
-                .context("rank channel closed")?;
+            let tokens = (host.rank() == 0).then(|| padded.clone());
+            host.send(Cmd::Prefill { lane, bucket, tokens, length })
+                .context("rank host unreachable")?;
         }
         let (cands, _timing) = self.collect_round(true)?;
         self.metrics.record_prefill(t0.elapsed());
@@ -341,10 +424,13 @@ impl Engine {
         let positions = self.lanes.positions();
 
         let t0 = Instant::now();
-        for (rank, tx) in self.cmd_txs.iter().enumerate() {
-            let toks = (rank == 0).then(|| tokens.clone());
-            tx.send(Cmd::Decode { tokens: toks, positions: positions.clone() })
-                .context("rank channel closed")?;
+        for host in &self.hosts {
+            let toks = (host.rank() == 0).then(|| tokens.clone());
+            host.send(Cmd::Decode {
+                tokens: toks,
+                positions: positions.clone(),
+            })
+            .context("rank host unreachable")?;
         }
         let (cands, mut timing) = self.collect_round(false)?;
         timing.wall_us = t0.elapsed().as_micros() as u64;
@@ -352,6 +438,9 @@ impl Engine {
         timing.comm_sim_us = self.sim_comm_us(false);
 
         let cands = cands.context("rank 0 returned no candidates")?;
+        anyhow::ensure!(cands.len() >= b,
+                        "rank 0 returned {} candidate lanes for batch {b}",
+                        cands.len());
 
         let t_sample = Instant::now();
         let mut finished = Vec::new();
@@ -388,7 +477,7 @@ impl Engine {
         let mut seen = vec![false; self.cfg.world];
         for _ in 0..self.cfg.world {
             let (rank, compute_us, comm_us) =
-                match self.reply_rx.recv().context("rank thread died")? {
+                match self.reply_rx.recv().context("rank worker died")? {
                     Reply::StepDone {
                         rank, compute_us, comm_us, candidates,
                     } if !prefill => {
@@ -410,6 +499,10 @@ impl Engine {
                     }
                     other => bail!("unexpected reply {other:?}"),
                 };
+            // replies may come off the wire from remote workers — never
+            // trust the decoded rank enough to index with it
+            anyhow::ensure!(rank < self.cfg.world,
+                            "reply from out-of-range rank {rank}");
             // SPMD sanity: each rank answers exactly once per round
             anyhow::ensure!(!std::mem::replace(&mut seen[rank], true),
                             "rank {rank} replied twice in one round");
@@ -472,11 +565,8 @@ impl Engine {
 
 impl Drop for Engine {
     fn drop(&mut self) {
-        for tx in &self.cmd_txs {
-            let _ = tx.send(Cmd::Shutdown);
-        }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        for host in &mut self.hosts {
+            host.shutdown();
         }
     }
 }

@@ -1,15 +1,25 @@
-//! Leader ⇄ rank-thread protocol.
+//! Leader ⇄ rank-worker protocol.
 //!
-//! The leader thread plays the paper's "master" role: it owns the
-//! request queue and the sampler, broadcasts token IDs down to the ranks
-//! at the start of every round (§2.1a — the `Cmd` fan-out to rank 0 plus
-//! the in-group ccl broadcast), and receives the merged top-k candidates
-//! from rank 0 at the end (§2.1b).
+//! The leader plays the paper's "master" role: it owns the request queue
+//! and the sampler, broadcasts token IDs down to the ranks at the start
+//! of every round (§2.1a — the `Cmd` fan-out to rank 0 plus the in-group
+//! ccl broadcast), and receives the merged top-k candidates from rank 0
+//! at the end (§2.1b).
+//!
+//! A rank worker is driven through this protocol regardless of where it
+//! lives (DESIGN.md §8): in-process rank threads receive [`Cmd`] values
+//! over mpsc channels, while remote worker processes receive the same
+//! commands as binary frames over the launch control connection.  The
+//! [`Cmd::encode`]/[`Cmd::decode`] pair (and the [`Reply`] equivalents)
+//! define that wire image: little-endian, length-prefixed vectors, one
+//! discriminant byte per message.
 
-use crate::sampling::Candidate;
+use anyhow::{bail, Result};
 
-/// Commands the leader issues to rank threads.
-#[derive(Debug)]
+use crate::sampling::{self, Candidate};
+
+/// Commands the leader issues to rank workers.
+#[derive(Debug, Clone, PartialEq)]
 pub enum Cmd {
     /// Prefill one lane with a padded prompt.
     /// `tokens` is only populated for rank 0 (ids flow §2.1a-style
@@ -33,8 +43,8 @@ pub enum Cmd {
     Shutdown,
 }
 
-/// Replies from rank threads to the leader.
-#[derive(Debug)]
+/// Replies from rank workers to the leader.
+#[derive(Debug, Clone, PartialEq)]
 pub enum Reply {
     Ready {
         rank: usize,
@@ -62,4 +72,348 @@ pub enum Reply {
         rank: usize,
         message: String,
     },
+}
+
+// ---- wire image --------------------------------------------------------
+//
+// Everything is little-endian.  Collections carry a u32 element count;
+// candidate lists reuse the 8-byte (token, logit) frame of
+// `sampling::encode_candidates` — the exact bytes the §2.1b gather moves.
+
+/// Bounded cursor over a received frame.
+pub(crate) struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        WireReader { buf, pos: 0 }
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("frame truncated: need {} bytes at offset {}, have {}",
+                  n, self.pos, self.buf.len());
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn usize32(&mut self) -> Result<usize> {
+        Ok(self.u32()? as usize)
+    }
+
+    pub(crate) fn str(&mut self) -> Result<String> {
+        let n = self.usize32()?;
+        Ok(String::from_utf8_lossy(self.take(n)?).into_owned())
+    }
+
+    pub(crate) fn vec_i32(&mut self) -> Result<Vec<i32>> {
+        let n = self.usize32()?;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub(crate) fn opt_vec_i32(&mut self) -> Result<Option<Vec<i32>>> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.vec_i32()?)),
+            b => bail!("bad option tag {b}"),
+        }
+    }
+
+    pub(crate) fn candidates(&mut self) -> Result<Vec<Candidate>> {
+        let n = self.usize32()?;
+        Ok(sampling::decode_candidates(self.take(n * 8)?))
+    }
+
+    pub(crate) fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("frame has {} trailing bytes", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+pub(crate) fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+pub(crate) fn put_vec_i32(out: &mut Vec<u8>, v: &[i32]) {
+    put_u32(out, v.len() as u32);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+pub(crate) fn put_opt_vec_i32(out: &mut Vec<u8>, v: &Option<Vec<i32>>) {
+    match v {
+        None => out.push(0),
+        Some(v) => {
+            out.push(1);
+            put_vec_i32(out, v);
+        }
+    }
+}
+
+fn put_candidates(out: &mut Vec<u8>, c: &[Candidate]) {
+    put_u32(out, c.len() as u32);
+    out.extend_from_slice(&sampling::encode_candidates(c));
+}
+
+impl Cmd {
+    /// Append this command's wire image to `out`.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Cmd::Prefill { lane, bucket, tokens, length } => {
+                out.push(0);
+                put_u32(out, *lane as u32);
+                put_u32(out, *bucket as u32);
+                put_opt_vec_i32(out, tokens);
+                put_u32(out, *length as u32);
+            }
+            Cmd::Decode { tokens, positions } => {
+                out.push(1);
+                put_opt_vec_i32(out, tokens);
+                put_vec_i32(out, positions);
+            }
+            Cmd::Reset => out.push(2),
+            Cmd::Shutdown => out.push(3),
+        }
+    }
+
+    /// Decode one command from a complete frame.
+    pub fn decode(buf: &[u8]) -> Result<Cmd> {
+        let mut r = WireReader::new(buf);
+        let cmd = match r.u8()? {
+            0 => Cmd::Prefill {
+                lane: r.usize32()?,
+                bucket: r.usize32()?,
+                tokens: r.opt_vec_i32()?,
+                length: r.usize32()?,
+            },
+            1 => Cmd::Decode {
+                tokens: r.opt_vec_i32()?,
+                positions: r.vec_i32()?,
+            },
+            2 => Cmd::Reset,
+            3 => Cmd::Shutdown,
+            d => bail!("unknown Cmd discriminant {d}"),
+        };
+        r.done()?;
+        Ok(cmd)
+    }
+}
+
+impl Reply {
+    /// Append this reply's wire image to `out`.
+    pub fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            Reply::Ready { rank } => {
+                out.push(0);
+                put_u32(out, *rank as u32);
+            }
+            Reply::PrefillDone { rank, compute_us, comm_us, candidates } => {
+                out.push(1);
+                put_u32(out, *rank as u32);
+                put_u64(out, *compute_us);
+                put_u64(out, *comm_us);
+                match candidates {
+                    None => out.push(0),
+                    Some(c) => {
+                        out.push(1);
+                        put_candidates(out, c);
+                    }
+                }
+            }
+            Reply::StepDone { rank, compute_us, comm_us, candidates } => {
+                out.push(2);
+                put_u32(out, *rank as u32);
+                put_u64(out, *compute_us);
+                put_u64(out, *comm_us);
+                match candidates {
+                    None => out.push(0),
+                    Some(lanes) => {
+                        out.push(1);
+                        put_u32(out, lanes.len() as u32);
+                        for lane in lanes {
+                            put_candidates(out, lane);
+                        }
+                    }
+                }
+            }
+            Reply::ResetDone { rank } => {
+                out.push(3);
+                put_u32(out, *rank as u32);
+            }
+            Reply::Error { rank, message } => {
+                out.push(4);
+                put_u32(out, *rank as u32);
+                put_str(out, message);
+            }
+        }
+    }
+
+    /// Decode one reply from a complete frame.
+    pub fn decode(buf: &[u8]) -> Result<Reply> {
+        let mut r = WireReader::new(buf);
+        let reply = match r.u8()? {
+            0 => Reply::Ready { rank: r.usize32()? },
+            1 => {
+                let rank = r.usize32()?;
+                let compute_us = r.u64()?;
+                let comm_us = r.u64()?;
+                let candidates = match r.u8()? {
+                    0 => None,
+                    1 => Some(r.candidates()?),
+                    b => bail!("bad option tag {b}"),
+                };
+                Reply::PrefillDone { rank, compute_us, comm_us, candidates }
+            }
+            2 => {
+                let rank = r.usize32()?;
+                let compute_us = r.u64()?;
+                let comm_us = r.u64()?;
+                let candidates = match r.u8()? {
+                    0 => None,
+                    1 => {
+                        let n = r.usize32()?;
+                        let mut lanes = Vec::with_capacity(n);
+                        for _ in 0..n {
+                            lanes.push(r.candidates()?);
+                        }
+                        Some(lanes)
+                    }
+                    b => bail!("bad option tag {b}"),
+                };
+                Reply::StepDone { rank, compute_us, comm_us, candidates }
+            }
+            3 => Reply::ResetDone { rank: r.usize32()? },
+            4 => Reply::Error { rank: r.usize32()?, message: r.str()? },
+            d => bail!("unknown Reply discriminant {d}"),
+        };
+        r.done()?;
+        Ok(reply)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_cmd(c: Cmd) {
+        let mut buf = Vec::new();
+        c.encode(&mut buf);
+        assert_eq!(Cmd::decode(&buf).unwrap(), c);
+    }
+
+    fn roundtrip_reply(r: Reply) {
+        let mut buf = Vec::new();
+        r.encode(&mut buf);
+        assert_eq!(Reply::decode(&buf).unwrap(), r);
+    }
+
+    #[test]
+    fn cmd_roundtrips() {
+        roundtrip_cmd(Cmd::Prefill {
+            lane: 3,
+            bucket: 16,
+            tokens: Some(vec![1, -2, 3]),
+            length: 3,
+        });
+        roundtrip_cmd(Cmd::Prefill {
+            lane: 0,
+            bucket: 16,
+            tokens: None,
+            length: 1,
+        });
+        roundtrip_cmd(Cmd::Decode {
+            tokens: Some(vec![7, 0]),
+            positions: vec![4, 0],
+        });
+        roundtrip_cmd(Cmd::Decode { tokens: None, positions: vec![] });
+        roundtrip_cmd(Cmd::Reset);
+        roundtrip_cmd(Cmd::Shutdown);
+    }
+
+    #[test]
+    fn reply_roundtrips() {
+        let cand = |t: u32, l: f32| Candidate { token: t, logit: l };
+        roundtrip_reply(Reply::Ready { rank: 1 });
+        roundtrip_reply(Reply::PrefillDone {
+            rank: 0,
+            compute_us: 1234,
+            comm_us: 56,
+            candidates: Some(vec![cand(9, 1.5), cand(2, -0.25)]),
+        });
+        roundtrip_reply(Reply::PrefillDone {
+            rank: 2,
+            compute_us: 0,
+            comm_us: 0,
+            candidates: None,
+        });
+        roundtrip_reply(Reply::StepDone {
+            rank: 0,
+            compute_us: u64::MAX,
+            comm_us: 7,
+            candidates: Some(vec![vec![cand(1, 0.0)], vec![]]),
+        });
+        roundtrip_reply(Reply::StepDone {
+            rank: 3,
+            compute_us: 1,
+            comm_us: 2,
+            candidates: None,
+        });
+        roundtrip_reply(Reply::ResetDone { rank: 0 });
+        roundtrip_reply(Reply::Error {
+            rank: 5,
+            message: "prefill: boom — §2.1".into(),
+        });
+    }
+
+    #[test]
+    fn truncated_frames_error() {
+        let mut buf = Vec::new();
+        Cmd::Decode { tokens: Some(vec![1, 2, 3]), positions: vec![4] }
+            .encode(&mut buf);
+        for cut in 0..buf.len() {
+            assert!(Cmd::decode(&buf[..cut]).is_err(), "cut at {cut}");
+        }
+        assert!(Cmd::decode(&[]).is_err());
+        assert!(Reply::decode(&[99]).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut buf = Vec::new();
+        Cmd::Reset.encode(&mut buf);
+        buf.push(0);
+        assert!(Cmd::decode(&buf).is_err());
+    }
 }

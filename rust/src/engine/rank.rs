@@ -46,7 +46,7 @@ struct SegIds {
     layer_prefill: HashMap<usize, Vec<(String, Vec<String>)>>,
 }
 
-pub(super) struct RankWorker {
+pub(crate) struct RankWorker {
     rank: usize,
     world: usize,
     cfg: EngineConfig,
@@ -65,8 +65,10 @@ pub(super) struct RankWorker {
 }
 
 impl RankWorker {
-    /// Thread entry point.
-    pub(super) fn run(
+    /// Worker entry point: serve commands until `Cmd::Shutdown` (or the
+    /// command channel closes).  Runs on a dedicated thread in-process,
+    /// or on the main thread of an `xeonserve worker` process.
+    pub(crate) fn run(
         rank: usize,
         cfg: EngineConfig,
         comm: Communicator,

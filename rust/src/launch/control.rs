@@ -1,0 +1,246 @@
+//! The coordinator ⇄ worker control protocol (DESIGN.md §8.2).
+//!
+//! One TCP connection per worker carries, in order:
+//!
+//! ```text
+//! worker → Hello   { version, rank }                (registration)
+//! coord  → Welcome { rank, world, config_toml,      (accept + config/
+//!                    mesh_host, mesh_base_port }     mesh bootstrap)
+//! coord  → Start                                    (all ranks present —
+//!                                                    connect the mesh)
+//! ...steady state...
+//! coord  → Cmd(..)            engine commands       (engine::proto)
+//! worker → Reply(..)          engine replies        (engine::proto)
+//! worker → Heartbeat          every HEARTBEAT_PERIOD while idle
+//! either → Fatal { message }  unrecoverable error, then close
+//! ```
+//!
+//! Framing: `[len: u32 LE] [type: u8] [payload]`, everything
+//! little-endian.  Failure detection is asymmetric by design: the
+//! coordinator reads with a [`WORKER_LOSS_TIMEOUT`] deadline (workers
+//! heartbeat every [`HEARTBEAT_PERIOD`], so silence means death), while
+//! workers block forever and treat EOF/reset as "coordinator gone".
+
+use std::io::{Read, Write};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::proto::{self, Cmd, Reply, WireReader};
+
+/// Bump when the control frame layout changes; `Hello.version` must
+/// match the coordinator's or registration is refused.
+pub const PROTO_VERSION: u32 = 1;
+
+/// How often an idle worker proves liveness to the coordinator.
+pub const HEARTBEAT_PERIOD: Duration = Duration::from_secs(2);
+
+/// Silence threshold after which the coordinator declares a worker
+/// dead.  Several heartbeat periods of slack, and deliberately well
+/// under [`crate::ccl::RECV_TIMEOUT`] (30 s): the coordinator reports a
+/// dead rank before the surviving ranks' mesh collectives hit their own
+/// timeout backstop.
+pub const WORKER_LOSS_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Hard cap on a control frame (largest real payload is a batched
+/// decode reply: ~`batch · top_k · 8` bytes, far below this).
+pub const MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
+
+/// One message on the control connection.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ControlMsg {
+    /// worker → coordinator: request to register as `rank`
+    Hello { version: u32, rank: usize },
+    /// coordinator → worker: accepted; full config + mesh bootstrap
+    Welcome {
+        rank: usize,
+        world: usize,
+        /// `EngineConfig::to_toml_string()` of the coordinator's config
+        config_toml: String,
+        /// host the rank mesh binds/connects on
+        mesh_host: String,
+        /// base port of the `TcpTransport::connect_mesh` port block
+        mesh_base_port: u16,
+    },
+    /// coordinator → worker: every rank registered; bring up the mesh
+    Start,
+    /// coordinator → worker: engine command
+    Cmd(Cmd),
+    /// worker → coordinator: engine reply
+    Reply(Reply),
+    /// worker → coordinator: liveness proof while idle
+    Heartbeat,
+    /// either direction: unrecoverable error, connection closes after
+    Fatal { message: String },
+}
+
+impl ControlMsg {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            ControlMsg::Hello { version, rank } => {
+                out.push(0);
+                proto::put_u32(out, *version);
+                proto::put_u32(out, *rank as u32);
+            }
+            ControlMsg::Welcome {
+                rank, world, config_toml, mesh_host, mesh_base_port,
+            } => {
+                out.push(1);
+                proto::put_u32(out, *rank as u32);
+                proto::put_u32(out, *world as u32);
+                proto::put_str(out, config_toml);
+                proto::put_str(out, mesh_host);
+                proto::put_u32(out, *mesh_base_port as u32);
+            }
+            ControlMsg::Start => out.push(2),
+            ControlMsg::Cmd(c) => {
+                out.push(3);
+                c.encode(out);
+            }
+            ControlMsg::Reply(r) => {
+                out.push(4);
+                r.encode(out);
+            }
+            ControlMsg::Heartbeat => out.push(5),
+            ControlMsg::Fatal { message } => {
+                out.push(6);
+                proto::put_str(out, message);
+            }
+        }
+    }
+
+    fn decode(buf: &[u8]) -> Result<ControlMsg> {
+        let mut r = WireReader::new(buf);
+        let msg = match r.u8()? {
+            0 => {
+                let m = ControlMsg::Hello {
+                    version: r.u32()?,
+                    rank: r.usize32()?,
+                };
+                r.done()?;
+                m
+            }
+            1 => {
+                let m = ControlMsg::Welcome {
+                    rank: r.usize32()?,
+                    world: r.usize32()?,
+                    config_toml: r.str()?,
+                    mesh_host: r.str()?,
+                    mesh_base_port: r.u32()? as u16,
+                };
+                r.done()?;
+                m
+            }
+            2 => {
+                r.done()?;
+                ControlMsg::Start
+            }
+            // Cmd/Reply own the rest of the frame; their decoders check
+            // for trailing bytes themselves.
+            3 => ControlMsg::Cmd(Cmd::decode(&buf[1..])?),
+            4 => ControlMsg::Reply(Reply::decode(&buf[1..])?),
+            5 => {
+                r.done()?;
+                ControlMsg::Heartbeat
+            }
+            6 => {
+                let m = ControlMsg::Fatal { message: r.str()? };
+                r.done()?;
+                m
+            }
+            d => bail!("unknown control message type {d}"),
+        };
+        Ok(msg)
+    }
+}
+
+/// Write one length-prefixed control frame.
+pub fn write_msg(mut w: impl Write, msg: &ControlMsg) -> Result<()> {
+    let mut body = Vec::new();
+    msg.encode(&mut body);
+    w.write_all(&(body.len() as u32).to_le_bytes())
+        .and_then(|_| w.write_all(&body))
+        .and_then(|_| w.flush())
+        .context("control connection write failed")?;
+    Ok(())
+}
+
+/// Read one length-prefixed control frame (blocking; honors the
+/// stream's read timeout).
+pub fn read_msg(mut r: impl Read) -> Result<ControlMsg> {
+    let mut hdr = [0u8; 4];
+    r.read_exact(&mut hdr).context("control connection closed")?;
+    let len = u32::from_le_bytes(hdr) as usize;
+    if len > MAX_FRAME_BYTES {
+        bail!("control frame of {len} bytes exceeds cap");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("control connection closed")?;
+    ControlMsg::decode(&body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::Candidate;
+
+    fn roundtrip(m: ControlMsg) {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &m).unwrap();
+        let back = read_msg(&buf[..]).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn control_messages_roundtrip() {
+        roundtrip(ControlMsg::Hello { version: PROTO_VERSION, rank: 3 });
+        roundtrip(ControlMsg::Welcome {
+            rank: 1,
+            world: 4,
+            config_toml: "model = \"tiny\"\nworld = 4\n".into(),
+            mesh_host: "127.0.0.1".into(),
+            mesh_base_port: 41900,
+        });
+        roundtrip(ControlMsg::Start);
+        roundtrip(ControlMsg::Cmd(Cmd::Decode {
+            tokens: Some(vec![1, 2]),
+            positions: vec![5, 6],
+        }));
+        roundtrip(ControlMsg::Reply(Reply::StepDone {
+            rank: 0,
+            compute_us: 12,
+            comm_us: 3,
+            candidates: Some(vec![vec![Candidate { token: 7, logit: 0.5 }]]),
+        }));
+        roundtrip(ControlMsg::Heartbeat);
+        roundtrip(ControlMsg::Fatal { message: "rank 2 lost".into() });
+    }
+
+    #[test]
+    fn oversized_frame_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(read_msg(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        // valid length prefix, unknown discriminant
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.push(200);
+        assert!(read_msg(&buf[..]).is_err());
+        // truncated body
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&10u32.to_le_bytes());
+        buf.push(2);
+        assert!(read_msg(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn timeouts_are_ordered() {
+        // heartbeat cadence < loss threshold < mesh recv backstop
+        assert!(HEARTBEAT_PERIOD * 3 <= WORKER_LOSS_TIMEOUT);
+        assert!(WORKER_LOSS_TIMEOUT < crate::ccl::RECV_TIMEOUT);
+    }
+}

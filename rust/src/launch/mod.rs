@@ -1,0 +1,457 @@
+//! Multi-process deployment: the coordinator/worker launch runtime
+//! (DESIGN.md §8).
+//!
+//! The paper's serving shape is one rank *process* per Xeon socket,
+//! synchronizing over oneCCL.  This module makes that shape first-class
+//! instead of an example:
+//!
+//! * `xeonserve launch --world N` runs the **coordinator**: it owns the
+//!   [`EngineConfig`], accepts worker registrations on a control TCP
+//!   port, ships each worker the config + mesh bootstrap info
+//!   ([`control::ControlMsg::Welcome`]), and then drives the ordinary
+//!   [`Engine`] serving loop with each rank behind a
+//!   [`RemoteRankHost`].
+//! * `xeonserve worker --rank R --coordinator HOST:PORT` runs one
+//!   **rank worker** process: it registers, receives its config,
+//!   connects the rank-to-rank [`TcpTransport`] mesh, and serves the
+//!   same `engine::proto` command stream a rank thread would — the
+//!   engine cannot tell the difference.
+//!
+//! Failure detection: workers heartbeat every
+//! [`control::HEARTBEAT_PERIOD`]; the coordinator-side reader declares a
+//! worker dead after [`control::WORKER_LOSS_TIMEOUT`] of silence (or
+//! instantly on EOF) and injects a `Reply::Error` into the engine's
+//! reply channel, so a killed worker surfaces as a clean engine error
+//! instead of a hang.  Ranks already blocked inside a collective are
+//! unblocked by the mesh's own [`crate::ccl::RECV_TIMEOUT`] backstop.
+//!
+//! Topology notes: the mesh bootstrap uses the `connect_mesh` port-block
+//! scheme, which assumes all ranks can reach `mesh_host` — i.e. one
+//! multi-socket machine or a localhost simulation.  The artifacts
+//! directory named in the config must be readable by every worker
+//! (shared filesystem for true multi-node).
+
+pub mod control;
+
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::ccl::{CommGroup, CommStats, TcpTransport};
+use crate::config::{EngineConfig, WeightSource};
+use crate::engine::proto::{Cmd, Reply};
+use crate::engine::{rank::RankWorker, Engine, RankHost};
+
+use control::{read_msg, write_msg, ControlMsg, HEARTBEAT_PERIOD,
+              PROTO_VERSION, WORKER_LOSS_TIMEOUT};
+
+/// Coordinator-side knobs for one launch.
+#[derive(Clone, Debug)]
+pub struct LaunchOptions {
+    /// tensor-parallel world size (must equal the config's `world`)
+    pub world: usize,
+    /// control endpoint workers register against, e.g. "127.0.0.1:7200"
+    pub control_addr: String,
+    /// host the worker-to-worker mesh binds/connects on
+    pub mesh_host: String,
+    /// base port of the mesh port block (`connect_mesh` scheme)
+    pub mesh_base_port: u16,
+    /// how long to wait for all `world` workers to register
+    pub register_timeout: Duration,
+}
+
+impl Default for LaunchOptions {
+    fn default() -> Self {
+        LaunchOptions {
+            world: 2,
+            control_addr: "127.0.0.1:7200".into(),
+            mesh_host: "127.0.0.1".into(),
+            mesh_base_port: 41900,
+            register_timeout: Duration::from_secs(120),
+        }
+    }
+}
+
+/// The coordinator's view of a registered worker fleet: one
+/// [`RankHost`] per rank plus the funneled reply channel — exactly the
+/// ingredients of [`Engine::from_rank_hosts`].
+pub struct RankFleet {
+    pub hosts: Vec<Box<dyn RankHost>>,
+    pub reply_rx: Receiver<Reply>,
+    pub stats: Arc<CommStats>,
+}
+
+impl RankFleet {
+    /// Bring up the engine over this fleet (blocks until every worker
+    /// compiled its segments and reported ready).
+    pub fn into_engine(self, cfg: EngineConfig) -> Result<Engine> {
+        Engine::from_rank_hosts(cfg, self.hosts, self.reply_rx, self.stats)
+    }
+}
+
+/// A rank worker living in another OS process, driven over the control
+/// connection.  The engine-facing mirror of `ThreadRankHost`.
+pub struct RemoteRankHost {
+    rank: usize,
+    stream: TcpStream,
+    reader: Option<JoinHandle<()>>,
+    /// set before teardown so the reader doesn't report the resulting
+    /// EOF as a worker loss
+    closing: Arc<AtomicBool>,
+}
+
+impl RemoteRankHost {
+    /// Wrap an accepted, post-handshake control connection.  Spawns the
+    /// reader thread that forwards the worker's replies into
+    /// `reply_tx` and watches liveness.
+    fn new(rank: usize, stream: TcpStream, reply_tx: Sender<Reply>)
+           -> Result<RemoteRankHost> {
+        let closing = Arc::new(AtomicBool::new(false));
+        let read_half = stream.try_clone().context("clone control stream")?;
+        read_half
+            .set_read_timeout(Some(WORKER_LOSS_TIMEOUT))
+            .context("set control read timeout")?;
+        let closing_r = closing.clone();
+        let reader = std::thread::Builder::new()
+            .name(format!("ctl-rank{rank}"))
+            .spawn(move || {
+                Self::reader_loop(rank, read_half, reply_tx, closing_r)
+            })?;
+        Ok(RemoteRankHost { rank, stream, reader: Some(reader), closing })
+    }
+
+    fn reader_loop(rank: usize, stream: TcpStream, reply_tx: Sender<Reply>,
+                   closing: Arc<AtomicBool>) {
+        loop {
+            match read_msg(&stream) {
+                Ok(ControlMsg::Reply(r)) => {
+                    if reply_tx.send(r).is_err() {
+                        return; // engine gone
+                    }
+                }
+                Ok(ControlMsg::Heartbeat) => continue,
+                Ok(ControlMsg::Fatal { message }) => {
+                    let _ = reply_tx.send(Reply::Error { rank, message });
+                    return;
+                }
+                Ok(other) => {
+                    let _ = reply_tx.send(Reply::Error {
+                        rank,
+                        message: format!(
+                            "protocol violation from worker: {other:?}"),
+                    });
+                    return;
+                }
+                Err(e) => {
+                    if !closing.load(Ordering::SeqCst) {
+                        let _ = reply_tx.send(Reply::Error {
+                            rank,
+                            message: format!(
+                                "worker rank {rank} lost: {e:#}"),
+                        });
+                    }
+                    return;
+                }
+            }
+        }
+    }
+}
+
+impl RankHost for RemoteRankHost {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn send(&self, cmd: Cmd) -> Result<()> {
+        write_msg(&self.stream, &ControlMsg::Cmd(cmd)).with_context(|| {
+            format!("sending command to worker rank {}", self.rank)
+        })
+    }
+
+    fn shutdown(&mut self) {
+        self.closing.store(true, Ordering::SeqCst);
+        let _ = write_msg(&self.stream, &ControlMsg::Cmd(Cmd::Shutdown));
+        // unblock the reader thread (its blocking read returns EOF);
+        // already-written frames are still delivered to the worker
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RemoteRankHost {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Coordinator bring-up: bind the control port, register `world`
+/// workers (rank-discovery handshake + config distribution), and
+/// release them into mesh bring-up.  Returns the fleet; feed it to
+/// [`RankFleet::into_engine`].
+pub fn coordinate(cfg: &EngineConfig, opts: &LaunchOptions)
+                  -> Result<RankFleet> {
+    ensure!(cfg.world == opts.world,
+            "config world={} but launch --world {}", cfg.world, opts.world);
+    let config_toml = cfg.to_toml_string();
+    // the TOML number model is f64, so u64 seeds above 2^53 would be
+    // silently rounded on the worker side — refuse to ship a config
+    // that does not survive the round-trip
+    let back = EngineConfig::from_toml_str(&config_toml)
+        .context("engine config does not re-parse from TOML")?;
+    let seeds_survive = back.sampling.seed == cfg.sampling.seed
+        && match (&back.weights, &cfg.weights) {
+            (WeightSource::Synthetic { seed: a },
+             WeightSource::Synthetic { seed: b }) => a == b,
+            (WeightSource::NpyDir { dir: a },
+             WeightSource::NpyDir { dir: b }) => a == b,
+            _ => false,
+        };
+    ensure!(seeds_survive,
+            "config seeds do not survive TOML distribution (values above \
+             2^53 round in the f64 number model) — pick smaller seeds");
+
+    let listener = TcpListener::bind(&opts.control_addr)
+        .with_context(|| format!("binding control {}", opts.control_addr))?;
+    listener.set_nonblocking(true)?;
+    eprintln!(
+        "coordinator: waiting for {} workers on {}",
+        opts.world, opts.control_addr
+    );
+
+    let deadline = Instant::now() + opts.register_timeout;
+    let mut slots: Vec<Option<TcpStream>> =
+        (0..opts.world).map(|_| None).collect();
+    let mut registered = 0;
+    while registered < opts.world {
+        if Instant::now() > deadline {
+            bail!(
+                "only {registered} of {} workers registered within {:?}",
+                opts.world, opts.register_timeout
+            );
+        }
+        let (stream, peer) = match listener.accept() {
+            Ok(s) => s,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+                continue;
+            }
+            Err(e) => return Err(e).context("control accept"),
+        };
+        stream.set_nonblocking(false)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+        match register_worker(&stream, &mut slots, opts, &config_toml) {
+            Ok(rank) => {
+                eprintln!("coordinator: rank {rank} registered from {peer}");
+                registered += 1;
+            }
+            Err(e) => {
+                eprintln!("coordinator: rejected {peer}: {e:#}");
+                let _ = write_msg(&stream, &ControlMsg::Fatal {
+                    message: format!("{e:#}"),
+                });
+            }
+        }
+    }
+
+    // all present: release the fleet into mesh bring-up
+    for s in slots.iter().flatten() {
+        write_msg(s, &ControlMsg::Start)?;
+    }
+
+    let (reply_tx, reply_rx) = channel();
+    let mut hosts: Vec<Box<dyn RankHost>> = Vec::with_capacity(opts.world);
+    for (rank, slot) in slots.into_iter().enumerate() {
+        let stream = slot.unwrap();
+        stream.set_read_timeout(Some(WORKER_LOSS_TIMEOUT))?;
+        hosts.push(Box::new(RemoteRankHost::new(
+            rank, stream, reply_tx.clone())?));
+    }
+    Ok(RankFleet { hosts, reply_rx, stats: Arc::new(CommStats::default()) })
+}
+
+/// Handle one registration handshake; on success the stream is parked
+/// in `slots[rank]`.
+fn register_worker(stream: &TcpStream, slots: &mut [Option<TcpStream>],
+                   opts: &LaunchOptions, config_toml: &str)
+                   -> Result<usize> {
+    let hello = read_msg(stream).context("reading Hello")?;
+    let ControlMsg::Hello { version, rank } = hello else {
+        bail!("expected Hello, got {hello:?}");
+    };
+    ensure!(version == PROTO_VERSION,
+            "protocol version mismatch: worker {version}, \
+             coordinator {PROTO_VERSION}");
+    ensure!(rank < opts.world,
+            "rank {rank} out of range for world {}", opts.world);
+    ensure!(slots[rank].is_none(), "rank {rank} already registered");
+    write_msg(stream, &ControlMsg::Welcome {
+        rank,
+        world: opts.world,
+        config_toml: config_toml.to_string(),
+        mesh_host: opts.mesh_host.clone(),
+        mesh_base_port: opts.mesh_base_port,
+    })?;
+    slots[rank] = Some(
+        stream.try_clone().context("cloning registered stream")?);
+    Ok(rank)
+}
+
+/// Worker process entry point: register with the coordinator, receive
+/// the config, join the rank mesh, and serve engine commands until
+/// shutdown.  Returns once the coordinator says goodbye (clean) or
+/// errors out if the coordinator disappears first.
+pub fn run_worker(rank: usize, coordinator: &str) -> Result<()> {
+    // the coordinator may still be binding its port — retry briefly
+    let stream = connect_with_retry(coordinator, Duration::from_secs(30))?;
+    stream.set_nodelay(true)?;
+    write_msg(&stream, &ControlMsg::Hello { version: PROTO_VERSION, rank })?;
+
+    let welcome = read_msg(&stream).context("reading Welcome")?;
+    let (world, config_toml, mesh_host, mesh_base_port) = match welcome {
+        ControlMsg::Welcome {
+            rank: r, world, config_toml, mesh_host, mesh_base_port,
+        } => {
+            ensure!(r == rank, "coordinator assigned rank {r}, asked {rank}");
+            (world, config_toml, mesh_host, mesh_base_port)
+        }
+        ControlMsg::Fatal { message } => {
+            bail!("coordinator refused registration: {message}")
+        }
+        other => bail!("expected Welcome, got {other:?}"),
+    };
+    let cfg = EngineConfig::from_toml_str(&config_toml)
+        .context("parsing coordinator config")?;
+    ensure!(cfg.world == world,
+            "coordinator config world={} but announced world={}",
+            cfg.world, world);
+    eprintln!("worker rank {rank}/{world}: registered, waiting for start");
+
+    match read_msg(&stream).context("waiting for Start")? {
+        ControlMsg::Start => {}
+        ControlMsg::Fatal { message } => bail!("launch aborted: {message}"),
+        other => bail!("expected Start, got {other:?}"),
+    }
+
+    let (cmd_tx, cmd_rx) = channel::<Cmd>();
+    let (reply_tx, reply_rx) = channel::<Reply>();
+
+    // command pump: control frames → RankWorker mailbox
+    let read_half = stream.try_clone()?;
+    let cmd_pump = std::thread::Builder::new()
+        .name("cmd-pump".into())
+        .spawn(move || loop {
+            match read_msg(&read_half) {
+                Ok(ControlMsg::Cmd(c)) => {
+                    let stop = c == Cmd::Shutdown;
+                    if cmd_tx.send(c).is_err() || stop {
+                        return;
+                    }
+                }
+                Ok(ControlMsg::Fatal { message }) => {
+                    eprintln!("worker: coordinator aborted: {message}");
+                    let _ = cmd_tx.send(Cmd::Shutdown);
+                    return;
+                }
+                Ok(other) => {
+                    eprintln!("worker: unexpected control frame {other:?}");
+                    let _ = cmd_tx.send(Cmd::Shutdown);
+                    return;
+                }
+                Err(e) => {
+                    eprintln!("worker: coordinator gone ({e:#})");
+                    let _ = cmd_tx.send(Cmd::Shutdown);
+                    return;
+                }
+            }
+        })?;
+
+    // reply pump: RankWorker replies → control frames, heartbeats when
+    // idle so the coordinator can tell silence from death
+    let write_half = stream.try_clone()?;
+    let reply_pump = std::thread::Builder::new()
+        .name("reply-pump".into())
+        .spawn(move || loop {
+            let msg = match reply_rx.recv_timeout(HEARTBEAT_PERIOD) {
+                Ok(r) => ControlMsg::Reply(r),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    ControlMsg::Heartbeat
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    return;
+                }
+            };
+            if write_msg(&write_half, &msg).is_err() {
+                return; // coordinator gone; RankWorker will be told by
+                        // the command pump
+            }
+        })?;
+
+    // rank-to-rank data plane.  This runs AFTER both pumps are up: mesh
+    // bring-up can legitimately take tens of seconds (accept deadlines,
+    // connect retries), and the reply pump's idle heartbeats are what
+    // keep the coordinator's WORKER_LOSS_TIMEOUT reader satisfied
+    // meanwhile.  Commands arriving early just queue in the channel.
+    let transport = TcpTransport::connect_mesh(
+        world, rank, &mesh_host, mesh_base_port)
+        .context("connecting rank mesh")?;
+    let stats = Arc::new(CommStats::default());
+    let comm = CommGroup::from_transport(Box::new(transport), stats);
+    eprintln!("worker rank {rank}: mesh up, loading model");
+
+    // the worker's main thread IS the rank worker (PJRT state stays
+    // thread-local, same as the in-process rank threads)
+    RankWorker::run(rank, cfg, comm, cmd_rx, reply_tx);
+
+    // RankWorker dropped its reply sender, so the reply pump drains and
+    // exits; then close the socket (all clones) to unblock the command
+    // pump if it is still parked in a read.
+    let _ = reply_pump.join();
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+    let _ = cmd_pump.join();
+    eprintln!("worker rank {rank}: clean shutdown");
+    Ok(())
+}
+
+fn connect_with_retry(addr: &str, budget: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + budget;
+    let mut last: Option<std::io::Error> = None;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = Some(e),
+        }
+        if Instant::now() > deadline {
+            bail!("connecting coordinator {addr} failed: {last:?}");
+        }
+        std::thread::sleep(Duration::from_millis(250));
+    }
+}
+
+/// Spawn `world` local `xeonserve worker` subprocesses (re-exec'ing the
+/// current executable), for single-machine launches and the CI smoke
+/// job.  The caller's binary must understand
+/// `worker --rank R --coordinator ADDR`.
+pub fn spawn_local_workers(world: usize, coordinator: &str)
+                           -> Result<Vec<Child>> {
+    let exe = std::env::current_exe().context("locating own binary")?;
+    let mut children = Vec::with_capacity(world);
+    for rank in 0..world {
+        children.push(
+            Command::new(&exe)
+                .args(["worker", "--rank", &rank.to_string(),
+                       "--coordinator", coordinator])
+                .spawn()
+                .with_context(|| format!("spawning worker rank {rank}"))?,
+        );
+    }
+    Ok(children)
+}

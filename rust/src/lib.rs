@@ -20,16 +20,27 @@
 //! Architecture (DESIGN.md has the full map):
 //!
 //! ```text
-//! server → scheduler → engine(leader) ⇄ rank threads ⇄ rccl collectives
+//! server → scheduler → engine(leader) ⇄ rank hosts ⇄ rccl collectives
 //!                                        │
+//!                                        ├─ in-process rank threads
+//!                                        │    (shared-memory arena)
+//!                                        ├─ worker processes over TCP
+//!                                        │    (launch coordinator,
+//!                                        │     §8 deployment shape)
 //!                                        └─ runtime (PJRT) ← artifacts/*.hlo.txt
 //! ```
+//!
+//! Deployment modes (DESIGN.md §8): `xeonserve serve` runs every rank as
+//! an in-process thread; `xeonserve launch` + `xeonserve worker` run one
+//! OS process per rank — the paper's actual shape — with the same
+//! engine driving either through [`engine::RankHost`].
 
 pub mod benchkit;
 pub mod ccl;
 pub mod config;
 pub mod engine;
 pub mod kvcache;
+pub mod launch;
 pub mod metrics;
 pub mod model;
 pub mod runtime;

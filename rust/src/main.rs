@@ -3,6 +3,9 @@
 //!
 //! ```text
 //! xeonserve serve    [--config FILE] [--addr 127.0.0.1:7070]
+//! xeonserve launch   --world N [--config FILE] [--control HOST:PORT]
+//!                    [--prompt "hello" [-n 16] | --addr HOST:PORT]
+//! xeonserve worker   --rank R --coordinator HOST:PORT
 //! xeonserve generate [--config FILE] --prompt "hello" [-n 16]
 //! xeonserve bench    [--config FILE] [--steps 32] [--prompt-len 8]
 //! xeonserve info     [--artifacts artifacts]
@@ -14,6 +17,7 @@ use anyhow::{bail, Context, Result};
 
 use xeonserve::config::{EngineConfig, Manifest};
 use xeonserve::engine::Engine;
+use xeonserve::launch::{self, LaunchOptions};
 use xeonserve::tokenizer::Tokenizer;
 
 const USAGE: &str = "\
@@ -21,9 +25,21 @@ xeonserve — distributed LLM inference on CPUs (He et al. 2024 reproduction)
 
 USAGE:
   xeonserve serve    [--config FILE] [--addr HOST:PORT]
+  xeonserve launch   --world N [--config FILE] [--control HOST:PORT]
+                     [--mesh-port PORT] [--spawn-workers true]
+                     [--prompt TEXT [-n N] | --addr HOST:PORT]
+  xeonserve worker   --rank R --coordinator HOST:PORT
   xeonserve generate [--config FILE] --prompt TEXT [-n N]
   xeonserve bench    [--config FILE] [--steps N] [--prompt-len N]
   xeonserve info     [--artifacts DIR]
+
+serve runs every rank as an in-process thread.  launch/worker is the
+distributed deployment (DESIGN.md \u{a7}8): the coordinator registers
+--world worker processes on the control port, ships them the config,
+and then either answers one --prompt and exits, or serves the JSON API
+on --addr.  With --spawn-workers true the coordinator forks the
+workers itself (single-machine convenience; CI smoke path starts them
+explicitly).
 
 Without --config the built-in default is used (tiny model, world=2,
 all paper optimizations ON).  See configs/*.toml for presets.";
@@ -73,6 +89,39 @@ fn load_cfg(args: &Args) -> Result<EngineConfig> {
     }
 }
 
+/// Coordinator body: bring up the worker fleet, then either answer one
+/// `--prompt` and exit (the smoke/one-shot mode) or serve the JSON API
+/// on `--addr`.
+fn run_launch(cfg: EngineConfig, opts: &LaunchOptions, args: &Args)
+              -> Result<()> {
+    match args.get("prompt") {
+        Some(prompt) => {
+            let prompt = prompt.to_string();
+            let n = args.get_usize("n", 16)?;
+            let fleet = launch::coordinate(&cfg, opts)?;
+            let mut engine = fleet.into_engine(cfg)?;
+            let tok = Tokenizer::byte_level(engine.preset().vocab)?;
+            let ids = tok.encode(&prompt);
+            let out = engine.generate(&[ids], n)?;
+            println!("{}", tok.decode(&out[0]));
+            println!("tokens: {:?}", out[0]);
+            Ok(())
+        }
+        None => {
+            let addr =
+                args.get("addr").unwrap_or("127.0.0.1:7070").to_string();
+            let opts = opts.clone();
+            xeonserve::server::serve_with(
+                move || {
+                    let fleet = launch::coordinate(&cfg, &opts)?;
+                    fleet.into_engine(cfg)
+                },
+                &addr,
+            )
+        }
+    }
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
@@ -86,6 +135,53 @@ fn main() -> Result<()> {
             let cfg = load_cfg(&args)?;
             let addr = args.get("addr").unwrap_or("127.0.0.1:7070");
             xeonserve::server::serve(cfg, addr)
+        }
+        "launch" => {
+            let mut cfg = load_cfg(&args)?;
+            let defaults = LaunchOptions::default();
+            let world = args.get_usize("world", cfg.world)?;
+            cfg.world = world;
+            let control_addr = args
+                .get("control")
+                .unwrap_or(&defaults.control_addr)
+                .to_string();
+            let mesh_base_port = args
+                .get_usize("mesh-port", defaults.mesh_base_port as usize)?
+                as u16;
+            let opts = LaunchOptions {
+                world,
+                control_addr,
+                mesh_base_port,
+                ..defaults
+            };
+            let spawn = args.get("spawn-workers") == Some("true");
+            let mut children = if spawn {
+                launch::spawn_local_workers(world, &opts.control_addr)?
+            } else {
+                Vec::new()
+            };
+            let result = run_launch(cfg, &opts, &args);
+            for (rank, c) in children.iter_mut().enumerate() {
+                match c.wait() {
+                    Ok(st) if !st.success() => {
+                        eprintln!("worker rank {rank} exited: {st}")
+                    }
+                    Err(e) => eprintln!("worker rank {rank}: wait: {e}"),
+                    _ => {}
+                }
+            }
+            result
+        }
+        "worker" => {
+            let rank = args
+                .get_usize("rank", usize::MAX)?;
+            if rank == usize::MAX {
+                bail!("worker requires --rank\n\n{USAGE}");
+            }
+            let coordinator = args
+                .get("coordinator")
+                .context("worker requires --coordinator HOST:PORT")?;
+            launch::run_worker(rank, coordinator)
         }
         "generate" => {
             let cfg = load_cfg(&args)?;

@@ -20,6 +20,23 @@ pub struct QueuedRequest {
 }
 
 /// FCFS queue + interleave policy.
+///
+/// # Example
+///
+/// ```
+/// use xeonserve::scheduler::FcfsScheduler;
+///
+/// // at most 1 prefill may jump ahead while decodes are waiting
+/// let mut sched = FcfsScheduler::new(1);
+/// sched.submit(vec![1, 2, 3], 8);
+/// sched.submit(vec![4, 5], 8);
+///
+/// let decodes_pending = true;
+/// assert!(sched.next_admission(decodes_pending).is_some()); // 1 prefill
+/// assert!(sched.next_admission(decodes_pending).is_none()); // yield!
+/// sched.on_decode_round();                                  // decode ran
+/// assert!(sched.next_admission(decodes_pending).is_some()); // next one
+/// ```
 #[derive(Debug)]
 pub struct FcfsScheduler {
     queue: VecDeque<QueuedRequest>,
@@ -119,6 +136,48 @@ mod tests {
         for _ in 0..4 {
             assert!(s.next_admission(false).is_some());
         }
+    }
+
+    #[test]
+    fn starvation_bound_holds_under_sustained_pressure() {
+        // the decode-starvation guarantee, stated as an invariant: with
+        // decodes always pending, no more than `k` prefills are ever
+        // admitted between two decode rounds, for any burst bound k
+        for k in 1..=4 {
+            let mut s = FcfsScheduler::new(k);
+            for _ in 0..50 {
+                s.submit(vec![0], 1);
+            }
+            let mut admitted_total = 0;
+            let mut decode_rounds = 0;
+            while !s.is_empty() {
+                // drain one admission burst
+                let mut burst = 0;
+                while s.next_admission(true).is_some() {
+                    burst += 1;
+                }
+                assert!(burst <= k,
+                        "burst of {burst} exceeded bound {k}");
+                admitted_total += burst;
+                // the scheduler forced a yield: a decode round runs
+                s.on_decode_round();
+                decode_rounds += 1;
+                assert!(decode_rounds <= 200, "no forward progress");
+            }
+            assert_eq!(admitted_total, 50);
+            // lower bound on decode service: at least one decode round
+            // per k admissions
+            assert!(decode_rounds >= 50 / k);
+        }
+    }
+
+    #[test]
+    fn zero_burst_bound_is_clamped_to_one() {
+        // a bound of 0 would starve prefills forever; the constructor
+        // clamps it so the queue still drains
+        let mut s = FcfsScheduler::new(0);
+        s.submit(vec![0], 1);
+        assert!(s.next_admission(true).is_some());
     }
 
     #[test]

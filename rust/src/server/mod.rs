@@ -90,8 +90,7 @@ struct Job {
 
 /// Engine thread: admits jobs through the FCFS scheduler, steps the
 /// engine (continuous batching happens inside), and answers completions.
-fn engine_loop(cfg: EngineConfig, jobs: Receiver<Job>) -> Result<()> {
-    let mut engine = Engine::new(cfg)?;
+fn engine_loop(mut engine: Engine, jobs: Receiver<Job>) -> Result<()> {
     let tok = Tokenizer::byte_level(engine.preset().vocab)?;
     let mut sched = FcfsScheduler::new(engine.config().batch.max(1));
     let mut waiting: std::collections::HashMap<
@@ -202,14 +201,32 @@ fn handle_conn(stream: TcpStream, job_tx: Sender<Job>) -> Result<()> {
     Ok(())
 }
 
-/// Serve `cfg` on `addr` (e.g. "127.0.0.1:7070").  Runs until the
-/// process exits; one thread per connection.
+/// Serve `cfg` on `addr` (e.g. "127.0.0.1:7070") with in-process rank
+/// threads.  Runs until the process exits; one thread per connection.
 pub fn serve(cfg: EngineConfig, addr: &str) -> Result<()> {
+    serve_with(move || Engine::new(cfg), addr)
+}
+
+/// Serve on `addr` with an engine produced by `build` — the hook the
+/// launch coordinator uses to front a fleet of remote rank workers
+/// (see `crate::launch`).  `build` runs on the dedicated engine thread,
+/// so the engine never has to cross threads.
+pub fn serve_with<F>(build: F, addr: &str) -> Result<()>
+where
+    F: FnOnce() -> Result<Engine> + Send + 'static,
+{
     let (job_tx, job_rx) = channel::<Job>();
     std::thread::Builder::new()
         .name("engine".into())
         .spawn(move || {
-            if let Err(e) = engine_loop(cfg, job_rx) {
+            let engine = match build() {
+                Ok(e) => e,
+                Err(e) => {
+                    eprintln!("engine bring-up failed: {e:#}");
+                    return;
+                }
+            };
+            if let Err(e) = engine_loop(engine, job_rx) {
                 eprintln!("engine loop failed: {e:#}");
             }
         })?;

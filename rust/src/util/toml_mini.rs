@@ -96,6 +96,25 @@ fn parse_value(s: &str) -> Result<Json> {
         .map_err(|_| anyhow!("cannot parse value {s:?}"))
 }
 
+/// Inverse of [`unescape`]: make a string safe inside a double-quoted
+/// TOML value.  Kept next to the parser so the two halves of the
+/// escaping contract cannot drift (config serialization uses this when
+/// the launch coordinator ships configs to workers).
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
 fn unescape(s: &str) -> Result<String> {
     let mut out = String::with_capacity(s.len());
     let mut chars = s.chars();
@@ -147,6 +166,13 @@ mod tests {
 
     #[test]
     fn flat_keys() {
+        for ugly in ["plain", "has \"quotes\"", "back\\slash", "nl\nnl",
+                     "tab\there", "cr\rhere"] {
+            let text = format!("k = \"{}\"", escape(ugly));
+            let v = parse_toml(&text).unwrap();
+            assert_eq!(v.get("k").unwrap().as_str(), Some(ugly),
+                       "escape/unescape roundtrip for {ugly:?}");
+        }
         let v = parse_toml("a = 1\nb = \"x\"\nc = true\nd = 1.5").unwrap();
         assert_eq!(v.get("a").unwrap().as_f64(), Some(1.0));
         assert_eq!(v.get("b").unwrap().as_str(), Some("x"));

@@ -1,0 +1,14 @@
+//! Shared helpers for the integration-test crates (pulled in via
+//! `#[macro_use] #[path = "common/mod.rs"] mod common;`).
+
+/// Artifacts are a build product (`make artifacts`), not checked in;
+/// skip (loudly) instead of failing when they are absent so the
+/// artifact-free test tiers stay green.  CI always builds them first.
+macro_rules! require_artifacts {
+    () => {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("SKIP: artifacts/ not built — run `make artifacts`");
+            return;
+        }
+    };
+}

@@ -6,6 +6,10 @@
 use xeonserve::config::{EngineConfig, OptFlags, Variant, WeightSource};
 use xeonserve::engine::Engine;
 
+#[macro_use]
+#[path = "common/mod.rs"]
+mod common;
+
 fn cfg(world: usize, batch: usize) -> EngineConfig {
     EngineConfig {
         model: "tiny".into(),
@@ -19,6 +23,7 @@ fn cfg(world: usize, batch: usize) -> EngineConfig {
 
 #[test]
 fn optimizations_do_not_change_tokens() {
+    require_artifacts!();
     // §2.1/§2.3 are pure communication changes; greedy output must be
     // bit-identical with them on or off.
     let prompts = vec![vec![3, 1, 4, 1, 5], vec![9, 2, 6]];
@@ -44,6 +49,7 @@ fn optimizations_do_not_change_tokens() {
 
 #[test]
 fn world_size_does_not_change_tokens() {
+    require_artifacts!();
     // tensor-parallel partitioning is numerically exact up to f32
     // reduction order; greedy tokens must agree across world sizes
     let prompts = vec![vec![10, 20, 30, 40]];
@@ -58,6 +64,7 @@ fn world_size_does_not_change_tokens() {
 
 #[test]
 fn continuous_batching_more_requests_than_lanes() {
+    require_artifacts!();
     let mut engine = Engine::new(cfg(2, 2)).unwrap();
     // 5 requests through 2 lanes
     let prompts: Vec<Vec<i32>> =
@@ -75,6 +82,7 @@ fn continuous_batching_more_requests_than_lanes() {
 
 #[test]
 fn batched_lanes_match_single_lane_runs() {
+    require_artifacts!();
     // the SAME request must produce the same tokens whether it shares a
     // batch with others or runs alone (lane isolation / masking)
     let a = vec![7, 7, 7, 7];
@@ -89,6 +97,7 @@ fn batched_lanes_match_single_lane_runs() {
 
 #[test]
 fn sampled_generation_is_seeded_and_in_vocab() {
+    require_artifacts!();
     let mut c = cfg(2, 1);
     c.sampling.temperature = 0.9;
     c.sampling.top_k = 20;
@@ -104,6 +113,7 @@ fn sampled_generation_is_seeded_and_in_vocab() {
 
 #[test]
 fn reset_clears_state_and_reproduces() {
+    require_artifacts!();
     let mut engine = Engine::new(cfg(2, 2)).unwrap();
     let p = vec![vec![5, 6, 7]];
     let first = engine.generate(&p, 5).unwrap();
@@ -114,6 +124,7 @@ fn reset_clears_state_and_reproduces() {
 
 #[test]
 fn comm_stats_count_expected_collectives() {
+    require_artifacts!();
     let mut engine = Engine::new(cfg(4, 1)).unwrap();
     let n_layers = engine.preset().n_layers;
     let before = engine.comm_stats();
@@ -138,6 +149,7 @@ fn comm_stats_count_expected_collectives() {
 
 #[test]
 fn serial_variant_doubles_allreduces() {
+    require_artifacts!();
     let mut c = cfg(2, 1);
     c.variant = Variant::Serial;
     let mut engine = Engine::new(c).unwrap();
@@ -150,6 +162,7 @@ fn serial_variant_doubles_allreduces() {
 
 #[test]
 fn long_generation_respects_max_seq() {
+    require_artifacts!();
     // tiny max_seq = 64; prompt 16-bucket + many tokens must stop at cap
     let mut engine = Engine::new(cfg(1, 1)).unwrap();
     let out = engine.generate(&[vec![1; 10]], 500).unwrap();
@@ -159,6 +172,7 @@ fn long_generation_respects_max_seq() {
 
 #[test]
 fn invalid_model_or_world_fails_cleanly() {
+    require_artifacts!();
     let mut c = cfg(2, 1);
     c.model = "nonexistent".into();
     assert!(Engine::new(c).is_err());
@@ -168,6 +182,7 @@ fn invalid_model_or_world_fails_cleanly() {
 
 #[test]
 fn oversized_prompt_truncates_to_bucket() {
+    require_artifacts!();
     // tiny prefill bucket is 16; a 40-token prompt must still serve
     let mut engine = Engine::new(cfg(2, 1)).unwrap();
     let long: Vec<i32> = (0..40).map(|i| i % 200).collect();
@@ -177,6 +192,7 @@ fn oversized_prompt_truncates_to_bucket() {
 
 #[test]
 fn empty_prompt_serves_without_panic() {
+    require_artifacts!();
     let mut engine = Engine::new(cfg(2, 1)).unwrap();
     let outs = engine.generate(&[vec![]], 3).unwrap();
     assert_eq!(outs[0].len(), 3);
@@ -184,6 +200,7 @@ fn empty_prompt_serves_without_panic() {
 
 #[test]
 fn serial_and_parallel_are_different_models() {
+    require_artifacts!();
     let mut p = Engine::new(cfg(2, 1)).unwrap();
     let mut c = cfg(2, 1);
     c.variant = Variant::Serial;
@@ -196,6 +213,7 @@ fn serial_and_parallel_are_different_models() {
 
 #[test]
 fn top_p_sampling_stays_in_candidate_set() {
+    require_artifacts!();
     let mut c = cfg(2, 1);
     c.sampling.temperature = 1.2;
     c.sampling.top_p = 0.7;
@@ -208,6 +226,7 @@ fn top_p_sampling_stays_in_candidate_set() {
 
 #[test]
 fn metrics_populated_after_run() {
+    require_artifacts!();
     let mut engine = Engine::new(cfg(2, 1)).unwrap();
     engine.generate(&[vec![1, 2, 3, 4]], 4).unwrap();
     let m = &mut engine.metrics;

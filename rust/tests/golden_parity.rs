@@ -8,6 +8,10 @@
 use xeonserve::config::{EngineConfig, Manifest, Variant, WeightSource};
 use xeonserve::engine::Engine;
 
+#[macro_use]
+#[path = "common/mod.rs"]
+mod common;
+
 fn golden_i32(path: &std::path::Path) -> Vec<i32> {
     use xla::FromRawBytes;
     let lit = xla::Literal::read_npy(path, &()).expect("read npy");
@@ -56,11 +60,13 @@ fn run_golden(variant: Variant) {
 
 #[test]
 fn parallel_block_matches_jax_reference() {
+    require_artifacts!();
     run_golden(Variant::Parallel);
 }
 
 #[test]
 fn serial_block_matches_jax_reference() {
+    require_artifacts!();
     run_golden(Variant::Serial);
 }
 
@@ -69,6 +75,7 @@ fn serial_block_matches_jax_reference() {
 /// same tokens.
 #[test]
 fn naive_baseline_produces_identical_tokens() {
+    require_artifacts!();
     let manifest = Manifest::load("artifacts").expect("run `make artifacts`");
     let golden = manifest.golden.clone().expect("golden meta");
     let gdir = manifest.golden_dir("parallel").unwrap();

@@ -1,0 +1,211 @@
+//! Launch control-plane integration tests: registration handshake,
+//! config distribution, command/reply framing, and failure detection —
+//! exercised against scripted workers so no artifacts/PJRT are needed
+//! (the full 2-process serving path is the CI launch-smoke job).
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use xeonserve::config::EngineConfig;
+use xeonserve::engine::proto::{Cmd, Reply};
+use xeonserve::engine::RankHost;
+use xeonserve::launch::control::{read_msg, write_msg, ControlMsg,
+                                 PROTO_VERSION};
+use xeonserve::launch::{coordinate, LaunchOptions};
+
+fn opts(world: usize, port: u16) -> LaunchOptions {
+    LaunchOptions {
+        world,
+        control_addr: format!("127.0.0.1:{port}"),
+        register_timeout: Duration::from_secs(30),
+        ..Default::default()
+    }
+}
+
+fn connect(addr: &str) -> TcpStream {
+    for _ in 0..400 {
+        if let Ok(s) = TcpStream::connect(addr) {
+            return s;
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    panic!("coordinator on {addr} never came up");
+}
+
+/// Register as `rank` and return the post-Start stream + the Welcome.
+fn register(addr: &str, rank: usize) -> (TcpStream, ControlMsg) {
+    let s = connect(addr);
+    write_msg(&s, &ControlMsg::Hello { version: PROTO_VERSION, rank })
+        .unwrap();
+    let welcome = read_msg(&s).unwrap();
+    match read_msg(&s).unwrap() {
+        ControlMsg::Start => {}
+        other => panic!("expected Start, got {other:?}"),
+    }
+    (s, welcome)
+}
+
+#[test]
+fn handshake_config_distribution_and_command_roundtrip() {
+    let mut cfg = EngineConfig { world: 2, ..Default::default() };
+    cfg.sampling.seed = 1234; // must survive the trip to the workers
+    let o = opts(2, 48621);
+    let addr = o.control_addr.clone();
+
+    let coord = {
+        let cfg = cfg.clone();
+        std::thread::spawn(move || coordinate(&cfg, &o).unwrap())
+    };
+
+    let workers: Vec<_> = (0..2)
+        .map(|rank| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let (s, welcome) = register(&addr, rank);
+                let ControlMsg::Welcome {
+                    rank: r, world, config_toml, ..
+                } = welcome
+                else {
+                    panic!("expected Welcome");
+                };
+                assert_eq!(r, rank);
+                assert_eq!(world, 2);
+                let got =
+                    EngineConfig::from_toml_str(&config_toml).unwrap();
+                assert_eq!(got.world, 2);
+                assert_eq!(got.sampling.seed, 1234);
+
+                // prove liveness traffic is transparent to the engine
+                write_msg(&s, &ControlMsg::Heartbeat).unwrap();
+                // serve the command stream like a rank worker would
+                loop {
+                    match read_msg(&s).unwrap() {
+                        ControlMsg::Cmd(Cmd::Reset) => {
+                            write_msg(&s, &ControlMsg::Reply(
+                                Reply::ResetDone { rank })).unwrap();
+                        }
+                        ControlMsg::Cmd(Cmd::Shutdown) => return,
+                        other => panic!("worker got {other:?}"),
+                    }
+                }
+            })
+        })
+        .collect();
+
+    let fleet = coord.join().unwrap();
+    assert_eq!(fleet.hosts.len(), 2);
+    for (i, h) in fleet.hosts.iter().enumerate() {
+        assert_eq!(h.rank(), i);
+        h.send(Cmd::Reset).unwrap();
+    }
+    let mut seen = [false; 2];
+    for _ in 0..2 {
+        match fleet.reply_rx.recv_timeout(Duration::from_secs(10)).unwrap()
+        {
+            Reply::ResetDone { rank } => seen[rank] = true,
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    assert!(seen[0] && seen[1]);
+
+    drop(fleet); // hosts send Cmd::Shutdown — workers exit their loop
+    for w in workers {
+        w.join().unwrap();
+    }
+}
+
+#[test]
+fn killed_worker_surfaces_as_clean_error() {
+    let cfg = EngineConfig { world: 1, ..Default::default() };
+    let o = opts(1, 48631);
+    let addr = o.control_addr.clone();
+
+    let coord = {
+        let cfg = cfg.clone();
+        std::thread::spawn(move || coordinate(&cfg, &o).unwrap())
+    };
+    let worker = std::thread::spawn(move || {
+        let (s, _) = register(&addr, 0);
+        drop(s); // the process "dies" right after bring-up
+    });
+
+    let fleet = coord.join().unwrap();
+    worker.join().unwrap();
+    // the per-worker reader must inject an error, not leave the engine
+    // blocking forever on its reply channel
+    match fleet.reply_rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+        Reply::Error { rank: 0, message } => {
+            assert!(message.contains("lost"), "message: {message}");
+        }
+        other => panic!("unexpected reply {other:?}"),
+    }
+}
+
+#[test]
+fn bad_registrations_are_refused() {
+    let cfg = EngineConfig { world: 2, ..Default::default() };
+    let o = opts(2, 48641);
+    let addr = o.control_addr.clone();
+
+    let coord = {
+        let cfg = cfg.clone();
+        std::thread::spawn(move || coordinate(&cfg, &o).unwrap())
+    };
+
+    // rank 0 registers normally (Welcome arrives right after Hello, so
+    // this serializes: rank 0 is taken before the bad claims below)
+    let s0 = connect(&addr);
+    write_msg(&s0, &ControlMsg::Hello { version: PROTO_VERSION, rank: 0 })
+        .unwrap();
+    assert!(matches!(read_msg(&s0).unwrap(), ControlMsg::Welcome { .. }));
+
+    // a second claim on rank 0 must be refused with Fatal
+    let dup = connect(&addr);
+    write_msg(&dup, &ControlMsg::Hello { version: PROTO_VERSION, rank: 0 })
+        .unwrap();
+    match read_msg(&dup).unwrap() {
+        ControlMsg::Fatal { message } => {
+            assert!(message.contains("already registered"),
+                    "message: {message}");
+        }
+        other => panic!("expected Fatal, got {other:?}"),
+    }
+
+    // an out-of-range rank must be refused too
+    let oob = connect(&addr);
+    write_msg(&oob, &ControlMsg::Hello { version: PROTO_VERSION, rank: 7 })
+        .unwrap();
+    match read_msg(&oob).unwrap() {
+        ControlMsg::Fatal { message } => {
+            assert!(message.contains("out of range"), "message: {message}");
+        }
+        other => panic!("expected Fatal, got {other:?}"),
+    }
+
+    // a wrong protocol version must be refused
+    let old = connect(&addr);
+    write_msg(&old, &ControlMsg::Hello { version: 0, rank: 1 }).unwrap();
+    match read_msg(&old).unwrap() {
+        ControlMsg::Fatal { message } => {
+            assert!(message.contains("version"), "message: {message}");
+        }
+        other => panic!("expected Fatal, got {other:?}"),
+    }
+
+    // rank 1 registers properly; the launch completes despite the noise
+    let s1 = connect(&addr);
+    write_msg(&s1, &ControlMsg::Hello { version: PROTO_VERSION, rank: 1 })
+        .unwrap();
+    assert!(matches!(read_msg(&s1).unwrap(), ControlMsg::Welcome { .. }));
+    assert!(matches!(read_msg(&s0).unwrap(), ControlMsg::Start));
+    assert!(matches!(read_msg(&s1).unwrap(), ControlMsg::Start));
+
+    let fleet = coord.join().unwrap();
+    assert_eq!(fleet.hosts.len(), 2);
+    // graceful teardown reaches both workers
+    drop(fleet);
+    assert!(matches!(read_msg(&s0).unwrap(),
+                     ControlMsg::Cmd(Cmd::Shutdown)));
+    assert!(matches!(read_msg(&s1).unwrap(),
+                     ControlMsg::Cmd(Cmd::Shutdown)));
+}

@@ -9,6 +9,10 @@ use std::time::Duration;
 use xeonserve::config::EngineConfig;
 use xeonserve::util::Json;
 
+#[macro_use]
+#[path = "common/mod.rs"]
+mod common;
+
 fn wait_for_port(addr: &str) -> TcpStream {
     for _ in 0..200 {
         if let Ok(s) = TcpStream::connect(addr) {
@@ -21,6 +25,7 @@ fn wait_for_port(addr: &str) -> TcpStream {
 
 #[test]
 fn serve_roundtrip_and_concurrent_clients() {
+    require_artifacts!();
     let addr = "127.0.0.1:47811";
     let cfg = EngineConfig {
         model: "tiny".into(),
