@@ -2,7 +2,7 @@
 # engine-level example/test/bench needs (requires python + jax + numpy;
 # rust never invokes python at runtime).
 
-.PHONY: artifacts artifacts-full test verify clean-artifacts
+.PHONY: artifacts artifacts-full test test-xla verify clean-artifacts
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -13,7 +13,11 @@ artifacts-full:
 test:
 	cargo test -q
 
-# tier-1 verify (ROADMAP.md)
+# the artifact/PJRT tier (requires `make artifacts` + xla_extension)
+test-xla:
+	cargo test -q --features xla
+
+# tier-1 verify (ROADMAP.md) — hermetic: reference backend, no artifacts
 verify:
 	cargo build --release && cargo test -q
 

@@ -12,8 +12,9 @@
 //! boundaries on localhost sockets.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example multiproc_tcp
+//! cargo run --release --example multiproc_tcp       # hermetic (reference backend)
 //! cargo run --release --example multiproc_tcp -- --world 4
+//! # PJRT backend: make artifacts, then add --features xla
 //! ```
 
 use anyhow::{Context, Result};

@@ -2,7 +2,9 @@
 //! preset and generate a few tokens.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart          # hermetic (reference backend)
+//! make artifacts && \
+//!   cargo run --release --features xla --example quickstart   # PJRT backend
 //! ```
 
 use anyhow::Result;

@@ -9,7 +9,8 @@
 //! batched requests.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example serve_batch
+//! cargo run --release --example serve_batch    # hermetic (reference backend)
+//! # PJRT backend: make artifacts, then add --features xla
 //! ```
 
 use std::time::Instant;

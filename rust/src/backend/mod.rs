@@ -1,0 +1,110 @@
+//! Execution backends: where a rank's model math actually runs.
+//!
+//! The distributed machinery (leader, scheduler, KV accounting, ccl
+//! collectives, launch runtime, server) is backend-agnostic: a rank
+//! worker drives its compute through [`ExecBackend`] and owns every
+//! synchronization point itself.  The trait boundary sits exactly at
+//! the host-side activation hand-offs of the paper's design — the
+//! points where partial sums enter the allreduce — so both backends
+//! share the identical collective choreography (DESIGN.md §9):
+//!
+//! * [`reference::ReferenceBackend`] — a pure-Rust deterministic
+//!   transformer (RMSNorm + RoPE + GQA attention + SiLU-gated FFN,
+//!   the same architecture family the AOT pipeline lowers).  No
+//!   native dependencies, no artifacts: the hermetic test tier runs
+//!   the full engine/server/launch stack on it, and its
+//!   fixed-granularity reductions make greedy decodes *bit-identical*
+//!   across tensor-parallel world sizes.
+//! * `xla::XlaBackend` (behind `--features xla`) — the PJRT runtime
+//!   executing AOT-compiled HLO segments from `artifacts/`, the
+//!   perf-bearing path the paper's numbers come from.
+//!
+//! Contract: a backend instance belongs to ONE rank and ONE thread
+//! (PJRT state is `Rc`-based), holds that rank's weight shards and
+//! device/KV state, and computes *rank-local partials only* — it never
+//! communicates.  All methods are deterministic for a fixed
+//! (config, rank) pair.
+
+pub mod reference;
+#[cfg(feature = "xla")]
+pub mod xla;
+
+use anyhow::Result;
+
+use crate::config::{BackendKind, EngineConfig, ResolvedModel};
+
+/// What kind of engine round a backend call belongs to, carrying the
+/// lane/position context the KV cache needs.
+#[derive(Clone, Copy, Debug)]
+pub enum StepCtx<'a> {
+    /// Single-lane prefill over a padded `bucket`-token prompt:
+    /// activations are `[1, bucket, hidden]`, the KV rows `[0, bucket)`
+    /// of `lane` are (re)written, `length` is the valid prefix.
+    Prefill { lane: usize, bucket: usize, length: usize },
+    /// One batched decode step: activations are `[batch, 1, hidden]`,
+    /// lane `b` appends its KV at `positions[b]` and attends over
+    /// `[0, positions[b]]`.
+    Decode { positions: &'a [i32] },
+}
+
+impl StepCtx<'_> {
+    /// Number of activation rows (`bucket` for prefill, `batch` rows
+    /// for decode).
+    pub fn rows(&self, batch: usize) -> usize {
+        match self {
+            StepCtx::Prefill { bucket, .. } => *bucket,
+            StepCtx::Decode { .. } => batch,
+        }
+    }
+}
+
+/// One rank's compute provider.  `x`/`partial`/`logits` are dense
+/// row-major f32 host buffers; sizes are fixed by the config and the
+/// `StepCtx` (callers allocate).
+pub trait ExecBackend {
+    /// Token embedding (replicated table): fill `x` (`tokens.len() *
+    /// hidden` floats) with the embedded rows.
+    fn embed(&mut self, ctx: &StepCtx, tokens: &[i32], x: &mut [f32])
+             -> Result<()>;
+
+    /// Execute layer `li`, segment `seg` (0 = fused parallel block or
+    /// serial attention, 1 = serial FFN) over the replicated residual
+    /// activations `x`, writing this rank's *partial sum* into
+    /// `partial` (same length as `x`) and updating KV state for
+    /// attention segments.  The caller allreduces `partial` and adds
+    /// it into `x`.
+    fn layer_partial(&mut self, ctx: &StepCtx, li: usize, seg: usize,
+                     x: &[f32], partial: &mut [f32]) -> Result<()>;
+
+    /// Final-norm + lm-head over `[batch, hidden]` head inputs,
+    /// writing this rank's vocab-shard logits (`batch * vocab_local`)
+    /// into `logits`.
+    fn lm_head(&mut self, x: &[f32], logits: &mut [f32]) -> Result<()>;
+
+    /// Drop all KV-cache state (between bench iterations).
+    fn reset(&mut self) -> Result<()>;
+}
+
+/// Instantiate the backend `cfg` selects for `rank`, reusing the
+/// already-resolved model (`rm`) so the manifest is parsed once per
+/// rank.  Must be called on the thread that will use it (PJRT clients
+/// are thread-local).
+pub fn make_backend(cfg: &EngineConfig, rank: usize, rm: &ResolvedModel)
+                    -> Result<Box<dyn ExecBackend>> {
+    match cfg.backend {
+        BackendKind::Reference => Ok(Box::new(
+            reference::ReferenceBackend::new(cfg, rank, &rm.preset)?,
+        )),
+        #[cfg(feature = "xla")]
+        BackendKind::Xla => {
+            let manifest = rm.manifest.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("resolved model carries no manifest")
+            })?;
+            Ok(Box::new(xla::XlaBackend::new(cfg, rank, manifest)?))
+        }
+        #[cfg(not(feature = "xla"))]
+        BackendKind::Xla => anyhow::bail!(
+            "backend \"xla\" requires building with `--features xla`"
+        ),
+    }
+}

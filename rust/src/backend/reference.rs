@@ -1,0 +1,625 @@
+//! The pure-Rust reference backend: a tiny deterministic transformer
+//! that runs anywhere `cargo` runs — no PJRT, no artifacts.
+//!
+//! It implements the same architecture family the AOT pipeline lowers
+//! (`python/compile/model.py`): RMSNorm → (GQA attention with RoPE ∥
+//! SiLU-gated FFN) with real tensor-parallel sharding — query/kv heads,
+//! FFN width and vocab split across ranks; embedding, norms and
+//! activations replicated — and real lane/KV-cache semantics.  The rank
+//! worker drives it through [`ExecBackend`] and moves its partial sums
+//! through the ccl allreduce exactly as it does for the XLA backend.
+//!
+//! # World-invariant determinism
+//!
+//! The hermetic tier's headline assertion is that greedy decodes are
+//! **bit-identical across world sizes 1/2/4** — the tensor-parallel
+//! invariant the paper's design depends on.  f32 addition is not
+//! associative, so a naive implementation would drift with the
+//! allreduce's summation order.  This backend makes the reduction
+//! *exact* instead:
+//!
+//! * every row-parallel contraction (the `wo`/`wd` partial-sum matmuls)
+//!   is computed over a fixed grid of [`REDUCE_CHUNKS`] chunks of the
+//!   FULL contraction axis, independent of how ranks partition it;
+//! * each chunk's partial output is snapped to a dyadic grid
+//!   ([`quantize_partial`]: multiples of 2⁻¹⁰, clamped to ±2⁹), so all
+//!   subsequent additions — across chunks, across ranks, in any ring
+//!   order — are exact in f32 and therefore order-independent;
+//! * everything else (norms, RoPE, softmax, column-parallel matmuls)
+//!   is computed per absolute head/column from replicated inputs, so
+//!   every world size executes the identical float ops.
+//!
+//! Weights come from [`crate::model::synth_shard`], which slices each
+//! rank's shard out of one fixed full tensor — the same scheme the XLA
+//! synthetic path uses — so `concat(shards) == full` at every world.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::config::{EngineConfig, ModelPreset, Variant, WeightSource};
+use crate::model::{synth_shard, tensor_seed};
+
+use super::{ExecBackend, StepCtx};
+
+/// Fixed reduction granularity of the row-parallel matmuls: the full
+/// contraction axis is always cut into this many chunks, whichever
+/// world size runs.  Must be ≥ the largest supported world (8) and
+/// divide the attention (`n_heads·head_dim`) and FFN widths.
+pub const REDUCE_CHUNKS: usize = 8;
+
+/// Snap a chunk partial to the exactness grid: multiples of 2⁻¹⁰
+/// clamped to ±2⁹.  Sums of up to 2⁴ such values stay ≤ 2¹³ with a
+/// 2⁻¹⁰ step — 2²³ representable steps, inside f32's 24-bit mantissa —
+/// so every addition of quantized partials is exact (and associative).
+#[inline]
+fn quantize_partial(v: f32) -> f32 {
+    const STEP: f32 = 1024.0;
+    const LIM: f32 = 512.0;
+    (v.clamp(-LIM, LIM) * STEP).round() / STEP
+}
+
+/// Reusable per-rank scratch buffers: the inner loops run per row ×
+/// layer × step, so none of them may heap-allocate.
+#[derive(Default)]
+struct Scratch {
+    h_n: Vec<f32>,    // [h] normed row
+    q: Vec<f32>,      // [qd_l]
+    k: Vec<f32>,      // [kvd_l]
+    v: Vec<f32>,      // [kvd_l]
+    ctxv: Vec<f32>,   // [qd_l] attention context
+    head: Vec<f32>,   // [hd] one head's context
+    tmp: Vec<f32>,    // [h] row-parallel chunk accumulator
+    scores: Vec<f32>, // [≤ max_seq] attention scores
+    g: Vec<f32>,      // [f_l] gate activations
+    u: Vec<f32>,      // [f_l] up activations
+}
+
+struct LayerWeights {
+    ln1_g: Vec<f32>, // [h]
+    ln2_g: Vec<f32>, // [h]
+    wq: Vec<f32>,    // [h, qd_l]
+    wk: Vec<f32>,    // [h, kvd_l]
+    wv: Vec<f32>,    // [h, kvd_l]
+    wo: Vec<f32>,    // [qd_l, h]  (row-parallel)
+    wg: Vec<f32>,    // [h, f_l]
+    wu: Vec<f32>,    // [h, f_l]
+    wd: Vec<f32>,    // [f_l, h]   (row-parallel)
+}
+
+/// One rank's deterministic in-memory model + KV caches.
+pub struct ReferenceBackend {
+    batch: usize,
+    preset: ModelPreset,
+    variant: Variant,
+    // local shard dims
+    n_heads_l: usize,
+    n_kv_heads_l: usize,
+    ffn_l: usize,
+    vocab_l: usize,
+    // weights
+    embedding: Vec<f32>, // [vocab, h] (replicated)
+    layers: Vec<LayerWeights>,
+    final_g: Vec<f32>,   // [h] (replicated)
+    lm_head: Vec<f32>,   // [h, vocab_l]
+    /// per-layer (k, v) caches, each [batch, n_kv_heads_l, max_seq, hd]
+    caches: Vec<(Vec<f32>, Vec<f32>)>,
+    /// precomputed NeoX RoPE inverse frequencies, [hd/2]
+    rope_inv: Vec<f32>,
+    scratch: Scratch,
+}
+
+impl ReferenceBackend {
+    /// Build rank `rank`'s model from `preset` (the caller resolves it —
+    /// normally via `EngineConfig::resolve_model`, so the engine and the
+    /// backend can never see different architectures).
+    pub fn new(cfg: &EngineConfig, rank: usize, preset: &ModelPreset)
+               -> Result<Self> {
+        let preset = preset.clone();
+        let world = cfg.world;
+        ensure!(rank < world, "rank {rank} out of world {world}");
+        ensure!(preset.supports_world(world),
+                "model {} does not shard over world={world}", preset.name);
+        let (h, hd) = (preset.hidden, preset.head_dim);
+        let qd = preset.n_heads * hd;
+        ensure!(
+            world <= REDUCE_CHUNKS
+                && REDUCE_CHUNKS % world == 0
+                && qd % REDUCE_CHUNKS == 0
+                && preset.ffn % REDUCE_CHUNKS == 0,
+            "reference backend needs world ≤ {REDUCE_CHUNKS} and \
+             attn/ffn widths divisible by {REDUCE_CHUNKS} \
+             (model {}, world {world})",
+            preset.name
+        );
+        let seed = match &cfg.weights {
+            WeightSource::Synthetic { seed } => *seed,
+            WeightSource::NpyDir { .. } => bail!(
+                "the reference backend only supports synthetic weights \
+                 (weights.kind = \"npydir\" is an XLA-backend golden-\
+                 parity feature)"
+            ),
+        };
+
+        let n_heads_l = preset.heads_local(world);
+        let n_kv_heads_l = preset.kv_heads_local(world);
+        let ffn_l = preset.ffn_local(world);
+        let vocab_l = preset.vocab_local(world);
+        let (qd_l, kvd_l) = (n_heads_l * hd, n_kv_heads_l * hd);
+
+        let t = |li: i64, name: &str| tensor_seed(seed, li, name);
+        let mut layers = Vec::with_capacity(preset.n_layers);
+        for li in 0..preset.n_layers as i64 {
+            layers.push(LayerWeights {
+                ln1_g: synth_shard("ln1_g", &[h], world, rank,
+                                   t(li, "ln1_g")),
+                ln2_g: synth_shard("ln2_g", &[h], world, rank,
+                                   t(li, "ln2_g")),
+                wq: synth_shard("wq", &[h, qd_l], world, rank, t(li, "wq")),
+                wk: synth_shard("wk", &[h, kvd_l], world, rank, t(li, "wk")),
+                wv: synth_shard("wv", &[h, kvd_l], world, rank, t(li, "wv")),
+                wo: synth_shard("wo", &[qd_l, h], world, rank, t(li, "wo")),
+                wg: synth_shard("wg", &[h, ffn_l], world, rank, t(li, "wg")),
+                wu: synth_shard("wu", &[h, ffn_l], world, rank, t(li, "wu")),
+                wd: synth_shard("wd", &[ffn_l, h], world, rank, t(li, "wd")),
+            });
+        }
+        let embedding = synth_shard("embedding", &[preset.vocab, h], world,
+                                    rank, t(-1, "embedding"));
+        let final_g =
+            synth_shard("final_g", &[h], world, rank, t(-1, "final_g"));
+        let lm_head = synth_shard("lm_head", &[h, vocab_l], world, rank,
+                                  t(-1, "lm_head"));
+
+        let cache_len = cfg.batch * n_kv_heads_l * preset.max_seq * hd;
+        let caches = (0..preset.n_layers)
+            .map(|_| (vec![0.0; cache_len], vec![0.0; cache_len]))
+            .collect();
+        let rope_inv = (0..hd / 2)
+            .map(|i| {
+                (preset.rope_theta as f32)
+                    .powf(-(2.0 * i as f32) / hd as f32)
+            })
+            .collect();
+
+        Ok(ReferenceBackend {
+            batch: cfg.batch,
+            variant: cfg.variant,
+            n_heads_l,
+            n_kv_heads_l,
+            ffn_l,
+            vocab_l,
+            embedding,
+            layers,
+            final_g,
+            lm_head,
+            caches,
+            rope_inv,
+            scratch: Scratch::default(),
+            preset,
+        })
+    }
+
+    // ---- math helpers ----------------------------------------------------
+    //
+    // All contractions iterate the contraction index ascending, so the
+    // same absolute column is computed with the identical op sequence
+    // at every world size.
+
+    fn rmsnorm(&self, x: &[f32], gain: &[f32], out: &mut [f32]) {
+        let h = self.preset.hidden;
+        let eps = self.preset.norm_eps as f32;
+        let mut ss = 0.0f32;
+        for &v in &x[..h] {
+            ss += v * v;
+        }
+        let inv = 1.0 / (ss / h as f32 + eps).sqrt();
+        for j in 0..h {
+            out[j] = x[j] * inv * gain[j];
+        }
+    }
+
+    /// Column-parallel matmul: `out[j] += Σ_k a[k]·w[k, j]` over the
+    /// full (replicated) contraction axis.  `out` must be zeroed.
+    fn col_matmul(a: &[f32], w: &[f32], cols: usize, out: &mut [f32]) {
+        for (k, &ak) in a.iter().enumerate() {
+            let row = &w[k * cols..(k + 1) * cols];
+            for (o, &wkj) in out[..cols].iter_mut().zip(row) {
+                *o += ak * wkj;
+            }
+        }
+    }
+
+    /// Row-parallel matmul with the fixed chunk grid: adds this rank's
+    /// quantized partial `Σ_chunks q(a[chunk] @ w[chunk, :])` into
+    /// `out[..h]`.  `k_full` is the FULL contraction width; `a`/`w`
+    /// cover this rank's contiguous `k_local` slice of it.  `tmp` is
+    /// caller-provided scratch (hot path — no allocation here).
+    fn rowpar_matmul(&self, a: &[f32], w: &[f32], k_local: usize,
+                     k_full: usize, tmp: &mut Vec<f32>, out: &mut [f32]) {
+        let h = self.preset.hidden;
+        let cs = k_full / REDUCE_CHUNKS;
+        debug_assert_eq!(k_local % cs, 0);
+        tmp.resize(h, 0.0);
+        for c in 0..k_local / cs {
+            tmp.fill(0.0);
+            for k in c * cs..(c + 1) * cs {
+                let ak = a[k];
+                let row = &w[k * h..(k + 1) * h];
+                for (t, &wkj) in tmp[..h].iter_mut().zip(row) {
+                    *t += ak * wkj;
+                }
+            }
+            for (o, &t) in out[..h].iter_mut().zip(&tmp[..h]) {
+                *o += quantize_partial(t);
+            }
+        }
+    }
+
+    /// NeoX-style rotary embedding in place over `[n_heads, hd]` rows.
+    fn rope(&self, v: &mut [f32], n_heads: usize, pos: i32) {
+        let hd = self.preset.head_dim;
+        let half = hd / 2;
+        for head in 0..n_heads {
+            let base = head * hd;
+            for i in 0..half {
+                let ang = pos as f32 * self.rope_inv[i];
+                let (s, c) = ang.sin_cos();
+                let a = v[base + i];
+                let b = v[base + half + i];
+                v[base + i] = a * c - b * s;
+                v[base + half + i] = b * c + a * s;
+            }
+        }
+    }
+
+    /// Softmax-weighted value sum over cache entries `[0, hi)` of
+    /// `(lane, kv_head)` for one query head; writes `hd` floats.
+    /// `scores` is caller-provided scratch.
+    #[allow(clippy::too_many_arguments)]
+    fn attend_cache(&self, li: usize, lane: usize, kh: usize, q: &[f32],
+                    hi: usize, scores: &mut Vec<f32>, out: &mut [f32]) {
+        let hd = self.preset.head_dim;
+        let t_max = self.preset.max_seq;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let (kc, vc) = &self.caches[li];
+        let base = (lane * self.n_kv_heads_l + kh) * t_max * hd;
+
+        scores.clear();
+        scores.resize(hi, 0.0);
+        let mut m = f32::NEG_INFINITY;
+        for (t, s) in scores.iter_mut().enumerate() {
+            let krow = &kc[base + t * hd..base + (t + 1) * hd];
+            let mut dot = 0.0f32;
+            for (qa, kb) in q[..hd].iter().zip(krow) {
+                dot += qa * kb;
+            }
+            *s = dot * scale;
+            m = m.max(*s);
+        }
+        let mut denom = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - m).exp();
+            denom += *s;
+        }
+        let inv = 1.0 / denom.max(1e-20);
+        out[..hd].fill(0.0);
+        for (t, &p) in scores.iter().enumerate() {
+            let w = p * inv;
+            let vrow = &vc[base + t * hd..base + (t + 1) * hd];
+            for (o, &vb) in out[..hd].iter_mut().zip(vrow) {
+                *o += w * vb;
+            }
+        }
+    }
+
+    /// Attention partial for one activation row (already normed into
+    /// `s.h_n`): project q/k/v, rope, append to the cache at `pos`
+    /// (lane `lane`), attend over `[0, attend_hi)`, and add the
+    /// quantized `context @ wo` partial into `out`.
+    fn attn_row(&mut self, li: usize, lane: usize, pos: i32,
+                attend_hi: usize, s: &mut Scratch, out: &mut [f32]) {
+        let hd = self.preset.head_dim;
+        let (qd_l, kvd_l) =
+            (self.n_heads_l * hd, self.n_kv_heads_l * hd);
+        let group = self.n_heads_l / self.n_kv_heads_l;
+        let t_max = self.preset.max_seq;
+
+        s.q.clear();
+        s.q.resize(qd_l, 0.0);
+        s.k.clear();
+        s.k.resize(kvd_l, 0.0);
+        s.v.clear();
+        s.v.resize(kvd_l, 0.0);
+        {
+            let lw = &self.layers[li];
+            Self::col_matmul(&s.h_n, &lw.wq, qd_l, &mut s.q);
+            Self::col_matmul(&s.h_n, &lw.wk, kvd_l, &mut s.k);
+            Self::col_matmul(&s.h_n, &lw.wv, kvd_l, &mut s.v);
+        }
+        self.rope(&mut s.q, self.n_heads_l, pos);
+        self.rope(&mut s.k, self.n_kv_heads_l, pos);
+
+        {
+            let (kc, vc) = &mut self.caches[li];
+            let t = pos as usize;
+            for kh in 0..self.n_kv_heads_l {
+                let dst =
+                    ((lane * self.n_kv_heads_l + kh) * t_max + t) * hd;
+                kc[dst..dst + hd]
+                    .copy_from_slice(&s.k[kh * hd..(kh + 1) * hd]);
+                vc[dst..dst + hd]
+                    .copy_from_slice(&s.v[kh * hd..(kh + 1) * hd]);
+            }
+        }
+
+        s.ctxv.clear();
+        s.ctxv.resize(qd_l, 0.0);
+        s.head.resize(hd, 0.0);
+        for qh in 0..self.n_heads_l {
+            let kh = qh / group;
+            self.attend_cache(li, lane, kh, &s.q[qh * hd..(qh + 1) * hd],
+                              attend_hi, &mut s.scores, &mut s.head);
+            s.ctxv[qh * hd..(qh + 1) * hd].copy_from_slice(&s.head[..hd]);
+        }
+        let qd_full = self.preset.n_heads * hd;
+        self.rowpar_matmul(&s.ctxv, &self.layers[li].wo, qd_l, qd_full,
+                           &mut s.tmp, out);
+    }
+
+    /// FFN partial for one normed row (`s.h_n`): adds the quantized
+    /// `(silu(h@wg) ⊙ (h@wu)) @ wd` partial into `out`.
+    fn ffn_row(&self, li: usize, s: &mut Scratch, out: &mut [f32]) {
+        let lw = &self.layers[li];
+        let f_l = self.ffn_l;
+        s.g.clear();
+        s.g.resize(f_l, 0.0);
+        s.u.clear();
+        s.u.resize(f_l, 0.0);
+        Self::col_matmul(&s.h_n, &lw.wg, f_l, &mut s.g);
+        Self::col_matmul(&s.h_n, &lw.wu, f_l, &mut s.u);
+        for (gi, &ui) in s.g.iter_mut().zip(&s.u) {
+            let sig = *gi / (1.0 + (-*gi).exp()); // SiLU
+            *gi = sig * ui;
+        }
+        self.rowpar_matmul(&s.g, &lw.wd, f_l, self.preset.ffn, &mut s.tmp,
+                           out);
+    }
+}
+
+impl ExecBackend for ReferenceBackend {
+    fn embed(&mut self, _ctx: &StepCtx, tokens: &[i32], x: &mut [f32])
+             -> Result<()> {
+        let h = self.preset.hidden;
+        ensure!(x.len() >= tokens.len() * h,
+                "embed output buffer too small");
+        for (i, &t) in tokens.iter().enumerate() {
+            let t = (t.max(0) as usize).min(self.preset.vocab - 1);
+            x[i * h..(i + 1) * h]
+                .copy_from_slice(&self.embedding[t * h..(t + 1) * h]);
+        }
+        Ok(())
+    }
+
+    fn layer_partial(&mut self, ctx: &StepCtx, li: usize, seg: usize,
+                     x: &[f32], partial: &mut [f32]) -> Result<()> {
+        ensure!(li < self.preset.n_layers, "layer {li} out of range");
+        let segs = self.variant.syncs_per_layer();
+        ensure!(seg < segs, "segment {seg} out of range for {:?}",
+                self.variant);
+        let h = self.preset.hidden;
+        let max_seq = self.preset.max_seq;
+        let rows = ctx.rows(self.batch);
+        ensure!(x.len() >= rows * h && partial.len() >= rows * h,
+                "activation buffers too small");
+        // reject malformed lane/position bookkeeping loudly: silently
+        // clamping would turn an engine bug into KV corruption
+        match ctx {
+            StepCtx::Prefill { lane, bucket, length } => {
+                ensure!(*bucket <= max_seq && *length >= 1
+                            && *length <= *bucket,
+                        "prefill shape out of range: bucket={bucket} \
+                         length={length} max_seq={max_seq}");
+                ensure!(*lane < self.batch,
+                        "prefill lane {lane} out of range (batch {})",
+                        self.batch);
+            }
+            StepCtx::Decode { positions } => {
+                ensure!(positions.len() == rows,
+                        "decode got {} positions for batch {rows}",
+                        positions.len());
+                for (b, &p) in positions.iter().enumerate() {
+                    ensure!(p >= 0 && (p as usize) < max_seq,
+                            "lane {b} position {p} out of range \
+                             (max_seq {max_seq})");
+                }
+            }
+        }
+        partial[..rows * h].fill(0.0);
+
+        let mut s = std::mem::take(&mut self.scratch);
+        s.h_n.resize(h, 0.0);
+        for r in 0..rows {
+            let x_row = &x[r * h..(r + 1) * h];
+            let out = r * h..(r + 1) * h;
+            // (lane, pos, attend_hi) for this row's KV update
+            let (lane, pos, hi) = match ctx {
+                StepCtx::Prefill { lane, length, .. } => {
+                    let hi = if r < *length { r + 1 } else { *length };
+                    (*lane, r as i32, hi)
+                }
+                StepCtx::Decode { positions } => {
+                    let pos = positions[r];
+                    (r, pos, pos as usize + 1)
+                }
+            };
+            match (self.variant, seg) {
+                (Variant::Parallel, _) => {
+                    // fused block: ONE partial sum (the paper's §2.2);
+                    // attention and FFN share the ln1 norm, as in
+                    // python's build_parallel_block_*
+                    self.rmsnorm(x_row, &self.layers[li].ln1_g,
+                                 &mut s.h_n);
+                    self.attn_row(li, lane, pos, hi, &mut s,
+                                  &mut partial[out.clone()]);
+                    self.ffn_row(li, &mut s, &mut partial[out]);
+                }
+                (Variant::Serial, 0) => {
+                    self.rmsnorm(x_row, &self.layers[li].ln1_g,
+                                 &mut s.h_n);
+                    self.attn_row(li, lane, pos, hi, &mut s,
+                                  &mut partial[out]);
+                }
+                (Variant::Serial, _) => {
+                    self.rmsnorm(x_row, &self.layers[li].ln2_g,
+                                 &mut s.h_n);
+                    self.ffn_row(li, &mut s, &mut partial[out]);
+                }
+            }
+        }
+        self.scratch = s;
+        Ok(())
+    }
+
+    fn lm_head(&mut self, x: &[f32], logits: &mut [f32]) -> Result<()> {
+        let h = self.preset.hidden;
+        let v_l = self.vocab_l;
+        let b = self.batch;
+        ensure!(x.len() >= b * h && logits.len() >= b * v_l,
+                "lm_head buffers too small");
+        let mut s = std::mem::take(&mut self.scratch);
+        s.h_n.resize(h, 0.0);
+        for r in 0..b {
+            self.rmsnorm(&x[r * h..(r + 1) * h], &self.final_g,
+                         &mut s.h_n);
+            let out = &mut logits[r * v_l..(r + 1) * v_l];
+            out.fill(0.0);
+            Self::col_matmul(&s.h_n, &self.lm_head, v_l, out);
+        }
+        self.scratch = s;
+        Ok(())
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        for (kc, vc) in &mut self.caches {
+            kc.fill(0.0);
+            vc.fill(0.0);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BackendKind;
+
+    fn cfg(world: usize, batch: usize) -> EngineConfig {
+        EngineConfig {
+            backend: BackendKind::Reference,
+            world,
+            batch,
+            weights: WeightSource::Synthetic { seed: 7 },
+            ..Default::default()
+        }
+    }
+
+    fn backend(c: &EngineConfig, rank: usize) -> Result<ReferenceBackend> {
+        let preset = ModelPreset::builtin(&c.model)?;
+        ReferenceBackend::new(c, rank, &preset)
+    }
+
+    #[test]
+    fn quantized_grid_sums_are_exact_in_any_order() {
+        // the invariant the world-parity guarantee rests on
+        let vals: Vec<f32> = (0..16)
+            .map(|i| quantize_partial((i as f32 * 0.377).sin() * 3.0))
+            .collect();
+        let fwd: f32 = vals.iter().sum();
+        let rev: f32 = vals.iter().rev().sum();
+        let pairs: f32 = vals.chunks(2).map(|c| c[0] + c[1]).sum();
+        assert_eq!(fwd.to_bits(), rev.to_bits());
+        assert_eq!(fwd.to_bits(), pairs.to_bits());
+    }
+
+    #[test]
+    fn decode_partials_sum_identically_across_worlds() {
+        // one decode step through one layer: Σ_ranks partial must be
+        // bit-identical for world 1, 2 and 4
+        let h = 64;
+        let x: Vec<f32> =
+            (0..h).map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.05).collect();
+        let mut sums: Vec<Vec<f32>> = Vec::new();
+        for world in [1usize, 2, 4] {
+            let mut total = vec![0.0f32; h];
+            for rank in 0..world {
+                let mut be = backend(&cfg(world, 1), rank).unwrap();
+                let mut part = vec![0.0f32; h];
+                let ctx = StepCtx::Decode { positions: &[0] };
+                be.layer_partial(&ctx, 0, 0, &x, &mut part).unwrap();
+                for (t, p) in total.iter_mut().zip(&part) {
+                    *t += *p;
+                }
+            }
+            sums.push(total);
+        }
+        for w in 1..sums.len() {
+            for j in 0..h {
+                assert_eq!(
+                    sums[0][j].to_bits(),
+                    sums[w][j].to_bits(),
+                    "col {j} differs between world 1 and {}",
+                    [1, 2, 4][w]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lm_head_shards_concat_to_world1_logits() {
+        let h = 64;
+        let x: Vec<f32> = (0..h).map(|i| (i as f32 * 0.11).cos()).collect();
+        let mut be1 = backend(&cfg(1, 1), 0).unwrap();
+        let mut full = vec![0.0f32; 256];
+        be1.lm_head(&x, &mut full).unwrap();
+        let world = 4;
+        let v_l = 256 / world;
+        for rank in 0..world {
+            let mut be = backend(&cfg(world, 1), rank).unwrap();
+            let mut local = vec![0.0f32; v_l];
+            be.lm_head(&x, &mut local).unwrap();
+            for j in 0..v_l {
+                assert_eq!(local[j].to_bits(),
+                           full[rank * v_l + j].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn reset_restores_fresh_kv_state() {
+        let mut be = backend(&cfg(1, 1), 0).unwrap();
+        let h = 64;
+        let tokens = [5i32; 4];
+        let ctx = StepCtx::Prefill { lane: 0, bucket: 4, length: 4 };
+        let mut x = vec![0.0f32; 4 * h];
+        be.embed(&ctx, &tokens, &mut x).unwrap();
+        let mut p1 = vec![0.0f32; 4 * h];
+        be.layer_partial(&ctx, 0, 0, &x, &mut p1).unwrap();
+        be.reset().unwrap();
+        let mut p2 = vec![0.0f32; 4 * h];
+        be.layer_partial(&ctx, 0, 0, &x, &mut p2).unwrap();
+        assert_eq!(p1, p2, "reset must reproduce the first run exactly");
+    }
+
+    #[test]
+    fn npydir_weights_rejected() {
+        let mut c = cfg(1, 1);
+        c.weights = WeightSource::NpyDir { dir: "/tmp/x".into() };
+        assert!(backend(&c, 0).is_err());
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let mut c = cfg(1, 1);
+        c.model = "qwen72b".into();
+        assert!(backend(&c, 0).is_err());
+    }
+}

@@ -1,0 +1,245 @@
+//! The PJRT execution backend: AOT-compiled HLO segments from
+//! `artifacts/`, executed through the `xla` crate (feature `xla`).
+//!
+//! This is the perf-bearing path the paper's measurements come from.
+//! One instance per rank thread: PJRT objects are `Rc`-based, so the
+//! client, executables, weight shards and KV caches all stay
+//! thread-local — exactly the paper's one-process-per-socket topology.
+//!
+//! Activations cross the host boundary at every segment edge (the
+//! collective boundaries); weights and KV caches are device-resident
+//! and chained through the segments (`DESIGN.md §3`).
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+use xla::PjRtBuffer;
+
+use crate::config::{EngineConfig, Manifest, ModelPreset, Variant};
+use crate::model::{load_rank_weights, RankWeights};
+use crate::runtime::RankRuntime;
+
+use super::{ExecBackend, StepCtx};
+
+/// Segment-id bundle for one (variant, bucket) family.
+struct SegIds {
+    embed_decode: String,
+    lm_head: String,
+    /// decode-step layer segments in execution order
+    layer_decode: Vec<(String, Vec<String>)>, // (id, weight_args)
+    /// prefill segments per bucket size
+    embed_prefill: HashMap<usize, String>,
+    layer_prefill: HashMap<usize, Vec<(String, Vec<String>)>>,
+}
+
+pub struct XlaBackend {
+    batch: usize,
+    hidden: usize,
+    vocab_local: usize,
+    preset: ModelPreset,
+    world: usize,
+    rt: RankRuntime,
+    weights: RankWeights,
+    segs: SegIds,
+    /// per-layer device-resident (k_cache, v_cache)
+    caches: Vec<(PjRtBuffer, PjRtBuffer)>,
+}
+
+impl XlaBackend {
+    /// Compile this rank's segments and materialize its weight shards
+    /// on the PJRT device.  Must run on the thread that will use it.
+    /// `manifest` is the already-loaded artifact manifest (see
+    /// `EngineConfig::resolve_model`).
+    pub fn new(cfg: &EngineConfig, rank: usize, manifest: &Manifest)
+               -> Result<Self> {
+        let preset = manifest.preset(&cfg.model)?.clone();
+        let mut rt = RankRuntime::new()?;
+
+        let (world, batch) = (cfg.world, cfg.batch);
+        let layer_kinds: Vec<&str> = match cfg.variant {
+            Variant::Parallel => vec!["parallel_block"],
+            Variant::Serial => vec!["serial_attn", "serial_ffn"],
+        };
+
+        let mut to_compile = Vec::new();
+        let segs = {
+            let mut find = |kind: &str, mode: &str, seq: usize| -> Result<_> {
+                let seg = manifest
+                    .find(&cfg.model, world, batch, kind, mode, seq)?
+                    .clone();
+                to_compile.push(seg.clone());
+                Ok(seg)
+            };
+            let embed_decode = find("embed", "decode", 1)?.id;
+            let lm_head = find("lm_head", "decode", 1)?.id;
+            let mut layer_decode = Vec::new();
+            for kind in &layer_kinds {
+                let seg = find(kind, "decode", 1)?;
+                layer_decode.push((seg.id, seg.weight_args));
+            }
+            let buckets = manifest.prefill_buckets(&cfg.model, world, batch);
+            let mut embed_prefill = HashMap::new();
+            let mut layer_prefill = HashMap::new();
+            for &s in &buckets {
+                embed_prefill.insert(s, find("embed", "prefill", s)?.id);
+                let mut layers = Vec::new();
+                for kind in &layer_kinds {
+                    let seg = find(kind, "prefill", s)?;
+                    layers.push((seg.id, seg.weight_args));
+                }
+                layer_prefill.insert(s, layers);
+            }
+            SegIds {
+                embed_decode,
+                lm_head,
+                layer_decode,
+                embed_prefill,
+                layer_prefill,
+            }
+        };
+        for seg in &to_compile {
+            rt.compile_segment(manifest, seg)?;
+        }
+
+        let weights = load_rank_weights(
+            &rt, manifest, &cfg.model, world, rank, batch, &cfg.weights)?;
+        let caches = Self::fresh_caches(&rt, &preset, world, batch)?;
+
+        Ok(XlaBackend {
+            batch,
+            hidden: preset.hidden,
+            vocab_local: preset.vocab_local(world),
+            world,
+            rt,
+            weights,
+            segs,
+            caches,
+            preset,
+        })
+    }
+
+    fn fresh_caches(rt: &RankRuntime, preset: &ModelPreset, world: usize,
+                    batch: usize) -> Result<Vec<(PjRtBuffer, PjRtBuffer)>> {
+        let dims = [
+            batch,
+            preset.kv_heads_local(world),
+            preset.max_seq,
+            preset.head_dim,
+        ];
+        (0..preset.n_layers)
+            .map(|_| Ok((rt.zeros_f32(&dims)?, rt.zeros_f32(&dims)?)))
+            .collect()
+    }
+}
+
+impl ExecBackend for XlaBackend {
+    fn embed(&mut self, ctx: &StepCtx, tokens: &[i32], x: &mut [f32])
+             -> Result<()> {
+        let (seg_id, dims) = match ctx {
+            StepCtx::Prefill { bucket, .. } => (
+                self.segs
+                    .embed_prefill
+                    .get(bucket)
+                    .with_context(|| {
+                        format!("no prefill embed segment for bucket {bucket}")
+                    })?
+                    .as_str(),
+                [1usize, *bucket],
+            ),
+            StepCtx::Decode { .. } => {
+                (self.segs.embed_decode.as_str(), [self.batch, 1])
+            }
+        };
+        let n = dims[0] * dims[1] * self.hidden;
+        anyhow::ensure!(tokens.len() == dims[0] * dims[1] && x.len() >= n,
+                        "embed buffer shapes");
+        let tok_buf = self.rt.upload_i32(tokens, &dims)?;
+        let outs = self
+            .rt
+            .execute(seg_id, &[&tok_buf, &self.weights.embedding])?;
+        self.rt.download_f32_into(&outs[0], &mut x[..n])?;
+        Ok(())
+    }
+
+    fn layer_partial(&mut self, ctx: &StepCtx, li: usize, seg: usize,
+                     x: &[f32], partial: &mut [f32]) -> Result<()> {
+        let h = self.hidden;
+        // shape + segment lookup per round kind
+        let (entry, dims, ctrl): (_, [usize; 3], Vec<i32>) = match ctx {
+            StepCtx::Prefill { lane, bucket, length } => {
+                let layers =
+                    self.segs.layer_prefill.get(bucket).with_context(|| {
+                        format!("no prefill segments for bucket {bucket}")
+                    })?;
+                (&layers[seg], [1, *bucket, h],
+                 vec![*lane as i32, *length as i32])
+            }
+            StepCtx::Decode { positions } => {
+                (&self.segs.layer_decode[seg], [self.batch, 1, h],
+                 positions.to_vec())
+            }
+        };
+        let n = dims[0] * dims[1] * h;
+        anyhow::ensure!(x.len() >= n && partial.len() >= n,
+                        "activation buffer shapes");
+        let (seg_id, wargs) = entry;
+        let is_attn = wargs.iter().any(|w| w == "wq");
+
+        let x_dev = self.rt.upload_f32(&x[..n], &dims)?;
+        // control inputs of the attention segments: (lane, length) for
+        // prefill, per-lane positions for decode
+        let ctrl_bufs: Vec<PjRtBuffer> = if is_attn {
+            match ctx {
+                StepCtx::Prefill { .. } => vec![
+                    self.rt.upload_i32(&ctrl[..1], &[1])?,
+                    self.rt.upload_i32(&ctrl[1..], &[1])?,
+                ],
+                StepCtx::Decode { .. } => {
+                    vec![self.rt.upload_i32(&ctrl, &[self.batch])?]
+                }
+            }
+        } else {
+            Vec::new()
+        };
+
+        let wbufs = self.weights.layer_args(li, wargs)?;
+        let mut args: Vec<&PjRtBuffer> = vec![&x_dev];
+        let (kc, vc) = &self.caches[li];
+        if is_attn {
+            args.extend([kc, vc]);
+            args.extend(ctrl_bufs.iter());
+        }
+        args.extend(wbufs);
+        let mut outs = self.rt.execute(seg_id, &args)?;
+        drop(args);
+        if is_attn {
+            let vc_new = outs.pop().context("missing v_cache output")?;
+            let kc_new = outs.pop().context("missing k_cache output")?;
+            self.caches[li] = (kc_new, vc_new);
+        }
+        let y_buf = outs.pop().context("missing partial output")?;
+        self.rt.download_f32_into(&y_buf, &mut partial[..n])?;
+        Ok(())
+    }
+
+    fn lm_head(&mut self, x: &[f32], logits: &mut [f32]) -> Result<()> {
+        let (b, h) = (self.batch, self.hidden);
+        let n_logits = b * self.vocab_local;
+        anyhow::ensure!(x.len() >= b * h && logits.len() >= n_logits,
+                        "lm_head buffer shapes");
+        let x_dev = self.rt.upload_f32(&x[..b * h], &[b, 1, h])?;
+        let outs = self.rt.execute(
+            &self.segs.lm_head,
+            &[&x_dev, &self.weights.final_g, &self.weights.lm_head],
+        )?;
+        self.rt.download_f32_into(&outs[0], &mut logits[..n_logits])?;
+        Ok(())
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.caches =
+            Self::fresh_caches(&self.rt, &self.preset, self.world,
+                               self.batch)?;
+        Ok(())
+    }
+}

@@ -39,6 +39,78 @@ impl ModelPreset {
         self.n_kv_heads / world
     }
 
+    pub fn heads_local(&self, world: usize) -> usize {
+        self.n_heads / world
+    }
+
+    pub fn ffn_local(&self, world: usize) -> usize {
+        self.ffn / world
+    }
+
+    /// The architecture presets baked into the binary, mirroring
+    /// `python/compile/configs.py` (the manifest's `configs` section is
+    /// generated from the same table).  These let the `reference`
+    /// backend run without any artifacts on disk.
+    pub fn builtin(name: &str) -> Result<ModelPreset> {
+        // (n_layers, hidden, n_heads, n_kv_heads, head_dim, ffn, vocab,
+        //  max_seq)
+        let dims = match name {
+            "tiny" => (2, 64, 8, 8, 8, 128, 256, 64),
+            "small" => (12, 768, 8, 8, 96, 3072, 32000, 1024),
+            "medium" => (24, 1024, 16, 8, 64, 4096, 32000, 1024),
+            _ => bail!(
+                "unknown built-in model {name:?} (tiny|small|medium)"
+            ),
+        };
+        let (n_layers, hidden, n_heads, n_kv_heads, head_dim, ffn, vocab,
+             max_seq) = dims;
+        let mut p = ModelPreset {
+            name: name.to_string(),
+            n_layers,
+            hidden,
+            n_heads,
+            n_kv_heads,
+            head_dim,
+            ffn,
+            vocab,
+            max_seq,
+            rope_theta: 10000.0,
+            norm_eps: 1e-5,
+            params: 0,
+        };
+        // same formula as ModelConfig.params() on the python side
+        let qkv = p.hidden * (p.n_heads + 2 * p.n_kv_heads) * p.head_dim;
+        let attn = qkv + p.n_heads * p.head_dim * p.hidden;
+        let ffn3 = 3 * p.hidden * p.ffn;
+        let per_layer = attn + ffn3 + 2 * p.hidden;
+        p.params = (p.vocab * p.hidden
+            + p.n_layers * per_layer
+            + p.hidden
+            + p.hidden * p.vocab) as u64;
+        Ok(p)
+    }
+
+    /// Prefill bucket sizes the artifact pipeline lowers for this preset
+    /// (DEFAULT_SET in aot.py) — reused by the reference backend so both
+    /// backends see the same admission/bucketing behavior.
+    pub fn builtin_prefill_buckets(&self) -> Vec<usize> {
+        match self.name.as_str() {
+            "tiny" => vec![16],
+            "small" => vec![128, 512],
+            "medium" => vec![512],
+            _ => vec![self.max_seq.min(128).max(1)],
+        }
+    }
+
+    /// Does this preset shard evenly over `world` ranks?
+    pub fn supports_world(&self, world: usize) -> bool {
+        world > 0
+            && self.n_heads % world == 0
+            && self.n_kv_heads % world == 0
+            && self.ffn % world == 0
+            && self.vocab % world == 0
+    }
+
     fn from_json(j: &Json) -> Result<ModelPreset> {
         let u = |k: &str| -> Result<usize> {
             j.req(k)?.as_usize().with_context(|| format!("{k} not a number"))

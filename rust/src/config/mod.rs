@@ -51,6 +51,49 @@ impl std::fmt::Display for Variant {
     }
 }
 
+/// Which execution backend materializes the model math (DESIGN.md §9).
+///
+/// * `Reference` — the pure-Rust deterministic transformer: no native
+///   deps, no artifacts, runs anywhere `cargo` runs.  The hermetic
+///   test tier and the default build use it.
+/// * `Xla` — the PJRT runtime executing AOT-compiled HLO segments from
+///   `artifacts/` (requires building with `--features xla`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Reference,
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "reference" => Ok(BackendKind::Reference),
+            "xla" => Ok(BackendKind::Xla),
+            _ => bail!("unknown backend {s:?} (reference|xla)"),
+        }
+    }
+
+    /// Build-dependent default: the XLA path when it is compiled in
+    /// (so artifact-driven examples/benches keep their old behavior),
+    /// the hermetic reference backend otherwise.
+    pub fn build_default() -> BackendKind {
+        if cfg!(feature = "xla") {
+            BackendKind::Xla
+        } else {
+            BackendKind::Reference
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendKind::Reference => write!(f, "reference"),
+            BackendKind::Xla => write!(f, "xla"),
+        }
+    }
+}
+
 /// The paper's three optimizations as independent switches, so every
 /// bench can ablate them one at a time.
 #[derive(Clone, Copy, Debug)]
@@ -115,6 +158,8 @@ impl Default for WeightSource {
 pub struct EngineConfig {
     /// model preset name from the manifest ("tiny" | "small" | "medium")
     pub model: String,
+    /// which execution backend runs the model math (DESIGN.md §9)
+    pub backend: BackendKind,
     pub variant: Variant,
     /// tensor-parallel world size (ranks ≙ the paper's sockets)
     pub world: usize,
@@ -133,6 +178,7 @@ impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
             model: "tiny".into(),
+            backend: BackendKind::build_default(),
             variant: Variant::Parallel,
             world: 2,
             batch: 2,
@@ -160,6 +206,9 @@ impl EngineConfig {
 
         if let Some(v) = j.get("model").and_then(Json::as_str) {
             cfg.model = v.to_string();
+        }
+        if let Some(v) = j.get("backend").and_then(Json::as_str) {
+            cfg.backend = BackendKind::parse(v)?;
         }
         if let Some(v) = j.get("variant").and_then(Json::as_str) {
             cfg.variant = Variant::parse(v)?;
@@ -246,6 +295,7 @@ impl EngineConfig {
         let mut s = String::new();
         use std::fmt::Write;
         let _ = writeln!(s, "model = \"{}\"", esc(&self.model));
+        let _ = writeln!(s, "backend = \"{}\"", self.backend);
         let _ = writeln!(s, "variant = \"{}\"", self.variant);
         let _ = writeln!(s, "world = {}", self.world);
         let _ = writeln!(s, "batch = {}", self.batch);
@@ -279,6 +329,12 @@ impl EngineConfig {
     }
 
     pub fn validate(&self) -> Result<()> {
+        if self.backend == BackendKind::Xla && !cfg!(feature = "xla") {
+            bail!(
+                "backend \"xla\" requires building with `--features xla` \
+                 (this binary only has the pure-Rust reference backend)"
+            );
+        }
         if self.world == 0 || !self.world.is_power_of_two() {
             bail!("world must be a power of two, got {}", self.world);
         }
@@ -298,6 +354,53 @@ impl EngineConfig {
     pub fn manifest(&self) -> Result<Manifest> {
         Manifest::load(&self.artifacts_dir)
     }
+
+    /// Resolve the model architecture this config names, from wherever
+    /// the selected backend sources it: the artifact manifest for the
+    /// XLA backend, the built-in preset table for the reference backend
+    /// (which must run without any artifacts on disk).
+    pub fn resolve_model(&self) -> Result<ResolvedModel> {
+        let (preset, prefill_buckets, manifest) = match self.backend {
+            BackendKind::Reference => {
+                let preset = ModelPreset::builtin(&self.model)?;
+                let buckets = preset.builtin_prefill_buckets();
+                (preset, buckets, None)
+            }
+            BackendKind::Xla => {
+                let manifest = self.manifest()?;
+                let preset = manifest.preset(&self.model)?.clone();
+                let buckets = manifest.prefill_buckets(
+                    &self.model, self.world, self.batch);
+                (preset, buckets, Some(manifest))
+            }
+        };
+        if prefill_buckets.is_empty() {
+            bail!(
+                "no prefill segments for model={} world={} batch={}",
+                self.model, self.world, self.batch
+            );
+        }
+        if !preset.supports_world(self.world) {
+            bail!(
+                "model {} does not shard over world={} (heads/ffn/vocab \
+                 must divide evenly)",
+                self.model, self.world
+            );
+        }
+        Ok(ResolvedModel { preset, prefill_buckets, manifest })
+    }
+}
+
+/// A model architecture bound to a config: the preset plus the prefill
+/// bucket ladder both the engine (admission) and the backends (segment
+/// selection) agree on.  For the XLA backend the loaded manifest rides
+/// along so backend construction does not parse it a second time.
+#[derive(Debug)]
+pub struct ResolvedModel {
+    pub preset: ModelPreset,
+    pub prefill_buckets: Vec<usize>,
+    /// populated iff `backend == Xla`
+    pub manifest: Option<Manifest>,
 }
 
 #[cfg(test)]
@@ -395,6 +498,7 @@ beta_gbps = 10.0
         let back =
             EngineConfig::from_toml_str(&cfg.to_toml_string()).unwrap();
         assert_eq!(back.model, cfg.model);
+        assert_eq!(back.backend, cfg.backend);
         assert_eq!(back.variant, cfg.variant);
         assert_eq!(back.world, cfg.world);
         assert_eq!(back.batch, cfg.batch);
@@ -421,6 +525,50 @@ beta_gbps = 10.0
         assert!(EngineConfig::from_toml_str("variant = \"weird\"").is_err());
         assert!(EngineConfig::from_toml_str(
             "[sampling]\ntop_p = 1.5").is_err());
+    }
+
+    #[test]
+    fn backend_toml_parse_and_feature_gate() {
+        let r = EngineConfig::from_toml_str("backend = \"reference\"")
+            .unwrap();
+        assert_eq!(r.backend, BackendKind::Reference);
+        let x = EngineConfig::from_toml_str("backend = \"xla\"");
+        if cfg!(feature = "xla") {
+            assert_eq!(x.unwrap().backend, BackendKind::Xla);
+        } else {
+            // hermetic build: asking for the XLA backend is a clean
+            // config error, not a runtime surprise
+            assert!(x.is_err());
+        }
+        assert!(EngineConfig::from_toml_str("backend = \"weird\"").is_err());
+    }
+
+    #[test]
+    fn reference_backend_resolves_without_artifacts() {
+        let cfg = EngineConfig {
+            backend: BackendKind::Reference,
+            artifacts_dir: PathBuf::from("/definitely/not/here"),
+            ..Default::default()
+        };
+        let rm = cfg.resolve_model().unwrap();
+        assert_eq!(rm.preset.name, "tiny");
+        assert_eq!(rm.prefill_buckets, vec![16]);
+        assert!(rm.preset.params > 0);
+
+        // world that does not divide the head/ffn/vocab dims
+        let bad = EngineConfig {
+            backend: BackendKind::Reference,
+            world: 16,
+            ..Default::default()
+        };
+        assert!(bad.resolve_model().is_err());
+
+        let unknown = EngineConfig {
+            backend: BackendKind::Reference,
+            model: "nonexistent".into(),
+            ..Default::default()
+        };
+        assert!(unknown.resolve_model().is_err());
     }
 
     #[test]

@@ -30,7 +30,10 @@
 //! use xeonserve::engine::Engine;
 //!
 //! # fn main() -> anyhow::Result<()> {
-//! // two in-process ranks over the tiny preset (needs `make artifacts`)
+//! // two in-process ranks over the tiny preset.  The default backend
+//! // is the hermetic pure-Rust reference model; builds with
+//! // `--features xla` default to the PJRT backend instead (which
+//! // needs `make artifacts`).  See DESIGN.md §9.
 //! let mut engine = Engine::new(EngineConfig::default())?;
 //! let outs = engine.generate(&[vec![1, 2, 3]], 8)?;
 //! println!("generated: {:?}", outs[0]);
@@ -51,7 +54,7 @@ use anyhow::{bail, Context, Result};
 pub use host::{RankHost, ThreadRankHost};
 
 use crate::ccl::{CommGroup, StatsSnapshot};
-use crate::config::{EngineConfig, Manifest, ModelPreset};
+use crate::config::{EngineConfig, ModelPreset, ResolvedModel};
 use crate::kvcache::{LaneTable, PagedAllocator};
 use crate::metrics::{RunMetrics, StepTiming};
 use crate::sampling::{self, Candidate};
@@ -104,25 +107,17 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Spawn in-process rank threads, compile artifacts, load weights.
-    /// Blocks until every rank reports ready.
+    /// Spawn in-process rank threads and bring up each rank's execution
+    /// backend (compile segments / materialize weights).  Blocks until
+    /// every rank reports ready.
     pub fn new(cfg: EngineConfig) -> Result<Engine> {
         cfg.validate()?;
-        let manifest = cfg.manifest()?;
-        let preset = manifest.preset(&cfg.model)?.clone();
-        let prefill_buckets =
-            manifest.prefill_buckets(&cfg.model, cfg.world, cfg.batch);
-        if prefill_buckets.is_empty() {
-            bail!(
-                "no prefill segments for model={} world={} batch={}",
-                cfg.model, cfg.world, cfg.batch
-            );
-        }
+        let rm = cfg.resolve_model()?;
 
         // arena must hold the largest per-sync payload
-        let max_bucket = *prefill_buckets.iter().max().unwrap();
-        let arena_elems =
-            (cfg.batch * preset.hidden).max(max_bucket * preset.hidden);
+        let max_bucket = *rm.prefill_buckets.iter().max().unwrap();
+        let arena_elems = (cfg.batch * rm.preset.hidden)
+            .max(max_bucket * rm.preset.hidden);
         let group = CommGroup::new_inproc(cfg.world, arena_elems);
         let stats = group.stats.clone();
 
@@ -141,7 +136,7 @@ impl Engine {
                 })?;
             hosts.push(Box::new(ThreadRankHost::new(rank, tx, handle)));
         }
-        Self::build(cfg, &manifest, hosts, reply_rx, stats)
+        Self::build(cfg, rm, hosts, reply_rx, stats)
     }
 
     /// Build an engine over externally hosted rank workers (the
@@ -162,15 +157,15 @@ impl Engine {
         stats: std::sync::Arc<crate::ccl::CommStats>,
     ) -> Result<Engine> {
         cfg.validate()?;
-        let manifest = cfg.manifest()?;
-        Self::build(cfg, &manifest, hosts, reply_rx, stats)
+        let rm = cfg.resolve_model()?;
+        Self::build(cfg, rm, hosts, reply_rx, stats)
     }
 
     /// Shared tail of both constructors (the config is already
-    /// validated and the manifest loaded exactly once by the caller).
+    /// validated and the model resolved exactly once by the caller).
     fn build(
         cfg: EngineConfig,
-        manifest: &Manifest,
+        rm: ResolvedModel,
         hosts: Vec<Box<dyn RankHost>>,
         reply_rx: Receiver<Reply>,
         stats: std::sync::Arc<crate::ccl::CommStats>,
@@ -183,15 +178,7 @@ impl Engine {
                 bail!("host {} claims rank {}", i, h.rank());
             }
         }
-        let preset = manifest.preset(&cfg.model)?.clone();
-        let prefill_buckets =
-            manifest.prefill_buckets(&cfg.model, cfg.world, cfg.batch);
-        if prefill_buckets.is_empty() {
-            bail!(
-                "no prefill segments for model={} world={} batch={}",
-                cfg.model, cfg.world, cfg.batch
-            );
-        }
+        let ResolvedModel { preset, prefill_buckets, .. } = rm;
 
         // wait for readiness — once per rank, like collect_round, so a
         // duplicated Ready frame can't start the engine early
@@ -552,7 +539,7 @@ impl Engine {
     }
 
     fn retire(&mut self, a: &mut ActiveReq) -> Result<Completion> {
-        self.lanes.free(a.lane);
+        self.lanes.free(a.lane)?;
         self.pages.release(a.lane);
         self.metrics.requests_done += 1;
         Ok(Completion {

@@ -1,15 +1,17 @@
-//! Rank worker: one thread per tensor-parallel rank (≙ one socket in the
-//! paper), owning its PJRT client, weight shards and KV caches, and
+//! Rank worker: one thread (or process) per tensor-parallel rank
+//! (≙ one socket in the paper), owning its execution backend and
 //! participating in the group collectives.
 //!
-//! The decode round implements the paper's distributed round verbatim:
+//! The worker is backend-agnostic: model math runs behind
+//! [`crate::backend::ExecBackend`] (PJRT segments or the pure-Rust
+//! reference transformer — DESIGN.md §9), while this module owns every
+//! synchronization point of the paper's distributed round:
 //!
 //! ```text
 //! recv token IDs (§2.1a broadcast)          — 4 bytes/lane, not B·H·4
 //!   └ embed locally (replicated table)
 //! for each layer:
-//!     segment execute (attention ∥ FFN fused when Variant::Parallel —
-//!                      §2.2: ONE partial-sum output)
+//!     backend segment → rank-local partial sum
 //!     partial → arena slot (§2.3 zero-copy hand-off)
 //!     allreduce in place, residual-add into x
 //! lm-head shard → local top-k (§2.1b) → k-pair gather to rank 0
@@ -19,49 +21,35 @@
 //! arrows (embedding-value broadcast, two-sync serial layers, staged-copy
 //! ring, full-logit allgather).
 
-use std::cell::Cell;
-use std::collections::HashMap;
 use std::sync::mpsc::{Receiver, Sender};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
-use xla::PjRtBuffer;
 
+use crate::backend::{make_backend, ExecBackend, StepCtx};
 use crate::ccl::{bytes_to_f32, f32_to_bytes, Communicator, ReduceOp};
-use crate::config::{EngineConfig, Manifest, ModelPreset, Variant};
-use crate::model::{load_rank_weights, RankWeights};
-use crate::runtime::RankRuntime;
+use crate::config::EngineConfig;
 use crate::sampling::{self, Candidate};
 
 use super::proto::{Cmd, Reply};
-
-/// Segment-id bundle for one (variant, bucket) family.
-struct SegIds {
-    embed_decode: String,
-    lm_head: String,
-    /// decode-step layer segments in execution order
-    layer_decode: Vec<(String, Vec<String>)>, // (id, weight_args)
-    /// prefill segments per bucket size
-    embed_prefill: HashMap<usize, String>,
-    layer_prefill: HashMap<usize, Vec<(String, Vec<String>)>>,
-}
 
 pub(crate) struct RankWorker {
     rank: usize,
     world: usize,
     cfg: EngineConfig,
-    preset: ModelPreset,
-    rt: RankRuntime,
-    weights: RankWeights,
+    backend: Box<dyn ExecBackend>,
     comm: Communicator,
-    segs: SegIds,
-    /// per-layer device-resident (k_cache, v_cache)
-    caches: Vec<(PjRtBuffer, PjRtBuffer)>,
+    // model dims resolved once at init
+    hidden: usize,
+    n_layers: usize,
+    segs_per_layer: usize,
+    vocab_local: usize,
     // reusable host scratch
     x_host: Vec<f32>,
+    y_host: Vec<f32>,
     logits_host: Vec<f32>,
-    compute_us: Cell<u64>,
-    comm_us: Cell<u64>,
+    compute_us: u64,
+    comm_us: u64,
 }
 
 impl RankWorker {
@@ -91,104 +79,42 @@ impl RankWorker {
 
     fn init(rank: usize, cfg: EngineConfig, comm: Communicator)
             -> Result<Self> {
-        let manifest = Manifest::load(&cfg.artifacts_dir)?;
-        let preset = manifest.preset(&cfg.model)?.clone();
-        let mut rt = RankRuntime::new()?;
-
-        let (world, batch) = (cfg.world, cfg.batch);
-        let layer_kinds: Vec<&str> = match cfg.variant {
-            Variant::Parallel => vec!["parallel_block"],
-            Variant::Serial => vec!["serial_attn", "serial_ffn"],
-        };
-
-        let mut to_compile = Vec::new();
-        {
-            let mut find = |kind: &str, mode: &str, seq: usize| -> Result<_> {
-                let seg = manifest
-                    .find(&cfg.model, world, batch, kind, mode, seq)?
-                    .clone();
-                to_compile.push(seg.clone());
-                Ok(seg)
-            };
-            let embed_decode = find("embed", "decode", 1)?.id;
-            let lm_head = find("lm_head", "decode", 1)?.id;
-            let mut layer_decode = Vec::new();
-            for kind in &layer_kinds {
-                let seg = find(kind, "decode", 1)?;
-                layer_decode.push((seg.id, seg.weight_args));
-            }
-            let buckets = manifest.prefill_buckets(&cfg.model, world, batch);
-            let mut embed_prefill = HashMap::new();
-            let mut layer_prefill = HashMap::new();
-            for &s in &buckets {
-                embed_prefill.insert(s, find("embed", "prefill", s)?.id);
-                let mut layers = Vec::new();
-                for kind in &layer_kinds {
-                    let seg = find(kind, "prefill", s)?;
-                    layers.push((seg.id, seg.weight_args));
-                }
-                layer_prefill.insert(s, layers);
-            }
-            let segs = SegIds {
-                embed_decode,
-                lm_head,
-                layer_decode,
-                embed_prefill,
-                layer_prefill,
-            };
-            for seg in &to_compile {
-                rt.compile_segment(&manifest, seg)?;
-            }
-
-            let weights = load_rank_weights(
-                &rt, &manifest, &cfg.model, world, rank, batch, &cfg.weights)?;
-            let caches = Self::fresh_caches(&rt, &preset, world, batch)?;
-
-            let hidden = preset.hidden;
-            let max_bucket =
-                buckets.iter().copied().max().unwrap_or(1).max(1);
-            Ok(RankWorker {
-                rank,
-                world,
-                preset: preset.clone(),
-                rt,
-                weights,
-                comm,
-                segs,
-                caches,
-                x_host: vec![0.0; batch.max(1) * hidden * max_bucket],
-                logits_host: vec![0.0; batch * preset.vocab_local(world)],
-                compute_us: Cell::new(0),
-                comm_us: Cell::new(0),
-                cfg,
-            })
-        }
-    }
-
-    fn fresh_caches(rt: &RankRuntime, preset: &ModelPreset, world: usize,
-                    batch: usize) -> Result<Vec<(PjRtBuffer, PjRtBuffer)>> {
-        let dims = [
-            batch,
-            preset.kv_heads_local(world),
-            preset.max_seq,
-            preset.head_dim,
-        ];
-        (0..preset.n_layers)
-            .map(|_| Ok((rt.zeros_f32(&dims)?, rt.zeros_f32(&dims)?)))
-            .collect()
+        let rm = cfg.resolve_model()?;
+        let backend = make_backend(&cfg, rank, &rm)?;
+        let preset = &rm.preset;
+        let max_bucket =
+            rm.prefill_buckets.iter().copied().max().unwrap_or(1).max(1);
+        let hidden = preset.hidden;
+        let batch = cfg.batch;
+        Ok(RankWorker {
+            rank,
+            world: cfg.world,
+            backend,
+            comm,
+            hidden,
+            n_layers: preset.n_layers,
+            segs_per_layer: cfg.variant.syncs_per_layer(),
+            vocab_local: preset.vocab_local(cfg.world),
+            x_host: vec![0.0; batch.max(1) * hidden * max_bucket],
+            y_host: vec![0.0; batch.max(1) * hidden * max_bucket],
+            logits_host: vec![0.0; batch * preset.vocab_local(cfg.world)],
+            compute_us: 0,
+            comm_us: 0,
+            cfg,
+        })
     }
 
     fn serve(&mut self, cmd_rx: Receiver<Cmd>, reply_tx: Sender<Reply>) {
         while let Ok(cmd) = cmd_rx.recv() {
             let reply = match cmd {
                 Cmd::Prefill { lane, bucket, tokens, length } => {
-                    self.compute_us.set(0);
-                    self.comm_us.set(0);
+                    self.compute_us = 0;
+                    self.comm_us = 0;
                     match self.prefill(lane, bucket, tokens, length) {
                         Ok(c) => Reply::PrefillDone {
                             rank: self.rank,
-                            compute_us: self.compute_us.get(),
-                            comm_us: self.comm_us.get(),
+                            compute_us: self.compute_us,
+                            comm_us: self.comm_us,
                             candidates: c,
                         },
                         Err(e) => Reply::Error {
@@ -198,13 +124,13 @@ impl RankWorker {
                     }
                 }
                 Cmd::Decode { tokens, positions } => {
-                    self.compute_us.set(0);
-                    self.comm_us.set(0);
+                    self.compute_us = 0;
+                    self.comm_us = 0;
                     match self.decode(tokens, &positions) {
                         Ok(c) => Reply::StepDone {
                             rank: self.rank,
-                            compute_us: self.compute_us.get(),
-                            comm_us: self.comm_us.get(),
+                            compute_us: self.compute_us,
+                            comm_us: self.comm_us,
                             candidates: c,
                         },
                         Err(e) => Reply::Error {
@@ -213,7 +139,7 @@ impl RankWorker {
                         },
                     }
                 }
-                Cmd::Reset => match self.reset() {
+                Cmd::Reset => match self.backend.reset() {
                     Ok(()) => Reply::ResetDone { rank: self.rank },
                     Err(e) => Reply::Error {
                         rank: self.rank,
@@ -228,26 +154,11 @@ impl RankWorker {
         }
     }
 
-    fn reset(&mut self) -> Result<()> {
-        self.caches = Self::fresh_caches(&self.rt, &self.preset, self.world,
-                                         self.cfg.batch)?;
-        Ok(())
-    }
-
-    // ---- timed helpers --------------------------------------------------
-
-    fn timed_exec(&self, seg: &str, args: &[&PjRtBuffer])
-                  -> Result<Vec<PjRtBuffer>> {
-        let t0 = Instant::now();
-        let out = self.rt.execute(seg, args)?;
-        self.compute_us
-            .set(self.compute_us.get() + t0.elapsed().as_micros() as u64);
-        Ok(out)
-    }
+    // ---- round plumbing -------------------------------------------------
 
     /// §2.1a boundary: distribute this round's token ids from rank 0 via
     /// the ccl broadcast (4 bytes per lane on the wire).
-    fn distribute_tokens(&self, tokens: Option<Vec<i32>>)
+    fn distribute_tokens(&mut self, tokens: Option<Vec<i32>>)
                          -> Result<Vec<i32>> {
         let t0 = Instant::now();
         let mut buf = match &tokens {
@@ -261,45 +172,102 @@ impl RankWorker {
             None => Vec::new(),
         };
         self.comm.broadcast(&mut buf, 0)?;
-        self.comm_us
-            .set(self.comm_us.get() + t0.elapsed().as_micros() as u64);
+        self.comm_us += t0.elapsed().as_micros() as u64;
         Ok(buf
             .chunks_exact(4)
             .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
 
-    /// Baseline §2.1a OFF: rank 0 embeds and broadcasts activation
-    /// *values* (B·S·H·4 bytes); other ranks upload them.
-    fn embed_broadcast_baseline(&self, embed_seg: &str,
-                                tokens: Option<Vec<i32>>,
-                                token_dims: &[usize], x_elems: usize,
-                                x_dims: &[usize]) -> Result<PjRtBuffer> {
-        let t0;
-        if self.rank == 0 {
-            let tokens = tokens.context("rank 0 needs tokens")?;
-            let tok_buf = self.rt.upload_i32(&tokens, token_dims)?;
-            let outs = self
-                .timed_exec(embed_seg, &[&tok_buf, &self.weights.embedding])?;
-            let x_buf = outs.into_iter().next().unwrap();
-            t0 = Instant::now();
-            let mut host = vec![0.0f32; x_elems];
-            self.rt.download_f32_into(&x_buf, &mut host)?;
-            self.comm.stats().record_staging((x_elems * 4) as u64);
-            let mut bytes = f32_to_bytes(&host);
-            self.comm.broadcast(&mut bytes, 0)?;
-            self.comm_us
-                .set(self.comm_us.get() + t0.elapsed().as_micros() as u64);
-            Ok(x_buf)
-        } else {
-            t0 = Instant::now();
-            let mut bytes = Vec::new();
-            self.comm.broadcast(&mut bytes, 0)?;
-            let host = bytes_to_f32(&bytes);
-            self.comm_us
-                .set(self.comm_us.get() + t0.elapsed().as_micros() as u64);
-            Ok(self.rt.upload_f32(&host, x_dims)?)
+    /// Fill `x` with the embedded activations for this round, via one of
+    /// the two §2.1a strategies: broadcast token *ids* and embed locally
+    /// (optimized), or rank 0 embeds and broadcasts the activation
+    /// *values* (baseline, B·S·H·4 bytes on the wire).
+    fn embed_round(&mut self, ctx: &StepCtx, tokens: Option<Vec<i32>>,
+                   n: usize) -> Result<()> {
+        let mut x = std::mem::take(&mut self.x_host);
+        if x.len() < n {
+            x.resize(n, 0.0);
         }
+        let result = (|| -> Result<()> {
+            if self.cfg.opt.broadcast_ids {
+                let toks = self.distribute_tokens(tokens)?;
+                let t0 = Instant::now();
+                self.backend.embed(ctx, &toks, &mut x[..n])?;
+                self.compute_us += t0.elapsed().as_micros() as u64;
+            } else if self.rank == 0 {
+                let toks = tokens.context("rank 0 needs tokens")?;
+                let t0 = Instant::now();
+                self.backend.embed(ctx, &toks, &mut x[..n])?;
+                self.compute_us += t0.elapsed().as_micros() as u64;
+                let t1 = Instant::now();
+                self.comm.stats().record_staging((n * 4) as u64);
+                let mut bytes = f32_to_bytes(&x[..n]);
+                self.comm.broadcast(&mut bytes, 0)?;
+                self.comm_us += t1.elapsed().as_micros() as u64;
+            } else {
+                let t1 = Instant::now();
+                let mut bytes = Vec::new();
+                self.comm.broadcast(&mut bytes, 0)?;
+                let host = bytes_to_f32(&bytes);
+                anyhow::ensure!(host.len() == n,
+                                "embedding broadcast carried {} floats, \
+                                 expected {n}", host.len());
+                x[..n].copy_from_slice(&host);
+                self.comm_us += t1.elapsed().as_micros() as u64;
+            }
+            Ok(())
+        })();
+        self.x_host = x;
+        result
+    }
+
+    /// One collective boundary: backend partial → allreduce →
+    /// residual-add into `x[..n]`.
+    ///
+    /// Zero-copy (§2.3 ON): the backend writes its partial straight
+    /// into this rank's arena slot and the allreduce runs in place.
+    /// Staged (OFF / TCP): partial lands in a scratch vec and rides the
+    /// copy-per-hop ring.
+    fn layer_round(&mut self, ctx: &StepCtx, li: usize, seg: usize,
+                   n: usize, x: &mut [f32]) -> Result<()> {
+        if self.cfg.opt.zero_copy && self.comm.has_arena() {
+            let t0 = Instant::now();
+            {
+                let slot = self.comm.arena_mut(n)?;
+                self.backend.layer_partial(ctx, li, seg, &x[..n], slot)?;
+            }
+            self.compute_us += t0.elapsed().as_micros() as u64;
+            let t1 = Instant::now();
+            self.comm.allreduce_arena(n, ReduceOp::Sum)?;
+            let slot = self.comm.arena(n)?;
+            for (xi, yi) in x[..n].iter_mut().zip(slot) {
+                *xi += *yi;
+            }
+            self.comm_us += t1.elapsed().as_micros() as u64;
+        } else {
+            let mut y = std::mem::take(&mut self.y_host);
+            if y.len() < n {
+                y.resize(n, 0.0);
+            }
+            let t0 = Instant::now();
+            let r = self.backend.layer_partial(ctx, li, seg, &x[..n],
+                                               &mut y[..n]);
+            self.compute_us += t0.elapsed().as_micros() as u64;
+            let result = r.and_then(|()| {
+                let t1 = Instant::now();
+                self.comm.stats().record_staging((n * 4) as u64);
+                self.comm.allreduce_staged(&mut y[..n], ReduceOp::Sum)?;
+                for (xi, yi) in x[..n].iter_mut().zip(&y[..n]) {
+                    *xi += *yi;
+                }
+                self.comm_us += t1.elapsed().as_micros() as u64;
+                Ok(())
+            });
+            self.y_host = y;
+            result?;
+        }
+        Ok(())
     }
 
     // ---- prefill ---------------------------------------------------------
@@ -307,57 +275,18 @@ impl RankWorker {
     fn prefill(&mut self, lane: usize, bucket: usize,
                tokens: Option<Vec<i32>>, length: usize)
                -> Result<Option<Vec<Candidate>>> {
-        let h = self.preset.hidden;
+        let h = self.hidden;
         let n = bucket * h;
-        let embed_seg = self.segs.embed_prefill[&bucket].clone();
-
-        let x_buf = if self.cfg.opt.broadcast_ids {
-            let tokens = self.distribute_tokens(tokens)?;
-            let tok_buf = self.rt.upload_i32(&tokens, &[1, bucket])?;
-            self.timed_exec(&embed_seg, &[&tok_buf, &self.weights.embedding])?
-                .into_iter()
-                .next()
-                .unwrap()
-        } else {
-            self.embed_broadcast_baseline(
-                &embed_seg, tokens, &[1, bucket], n, &[1, bucket, h])?
-        };
+        let ctx = StepCtx::Prefill { lane, bucket, length };
+        self.embed_round(&ctx, tokens, n)?;
 
         let mut x = std::mem::take(&mut self.x_host);
-        if x.len() < n {
-            x.resize(n, 0.0);
-        }
-        self.rt.download_f32_into(&x_buf, &mut x[..n])?;
-
-        let lane_buf = self.rt.upload_i32(&[lane as i32], &[1])?;
-        let len_buf = self.rt.upload_i32(&[length as i32], &[1])?;
-
-        let n_layers = self.preset.n_layers;
-        let mut x_dev = x_buf;
-        for li in 0..n_layers {
-            for seg_idx in 0..self.segs.layer_prefill[&bucket].len() {
-                let (seg_id, wargs) = &self.segs.layer_prefill[&bucket][seg_idx];
-                let wbufs = self.weights.layer_args(li, wargs)?;
-                let is_attn = wargs.iter().any(|w| w == "wq");
-                let mut args: Vec<&PjRtBuffer> = vec![&x_dev];
-                let (kc, vc) = &self.caches[li];
-                if is_attn {
-                    args.extend([kc, vc, &lane_buf, &len_buf]);
+        for li in 0..self.n_layers {
+            for seg in 0..self.segs_per_layer {
+                if let Err(e) = self.layer_round(&ctx, li, seg, n, &mut x) {
+                    self.x_host = x;
+                    return Err(e);
                 }
-                args.extend(wbufs);
-                let seg_id = seg_id.clone();
-                let mut outs = self.timed_exec(&seg_id, &args)?;
-                drop(args);
-                if is_attn {
-                    let vc_new = outs.pop().unwrap();
-                    let kc_new = outs.pop().unwrap();
-                    self.caches[li] = (kc_new, vc_new);
-                }
-                let y_buf = outs.pop().unwrap();
-                reduce_partial(&self.rt, &mut self.comm,
-                               self.cfg.opt.zero_copy, &y_buf, n, &mut x,
-                               &self.comm_us)?;
-                x_dev = self.rt.upload_f32(&x[..n], &[1, bucket, h])?;
             }
         }
 
@@ -368,8 +297,7 @@ impl RankWorker {
         let row = (length - 1) * h;
         head_in[lane * h..(lane + 1) * h].copy_from_slice(&x[row..row + h]);
         self.x_host = x;
-        let head_buf = self.rt.upload_f32(&head_in, &[b, 1, h])?;
-        let cands = self.lm_head_candidates(&head_buf)?;
+        let cands = self.lm_head_candidates(&head_in)?;
         Ok(cands.map(|per_lane| per_lane.into_iter().nth(lane).unwrap()))
     }
 
@@ -378,77 +306,42 @@ impl RankWorker {
     fn decode(&mut self, tokens: Option<Vec<i32>>, positions: &[i32])
               -> Result<Option<Vec<Vec<Candidate>>>> {
         let b = self.cfg.batch;
-        let h = self.preset.hidden;
+        let h = self.hidden;
         let n = b * h;
-
-        let x_buf = if self.cfg.opt.broadcast_ids {
-            let tokens = self.distribute_tokens(tokens)?;
-            let tok_buf = self.rt.upload_i32(&tokens, &[b, 1])?;
-            let embed_seg = self.segs.embed_decode.clone();
-            self.timed_exec(&embed_seg, &[&tok_buf, &self.weights.embedding])?
-                .into_iter()
-                .next()
-                .unwrap()
-        } else {
-            let embed_seg = self.segs.embed_decode.clone();
-            self.embed_broadcast_baseline(&embed_seg, tokens, &[b, 1], n,
-                                          &[b, 1, h])?
-        };
+        let ctx = StepCtx::Decode { positions };
+        self.embed_round(&ctx, tokens, n)?;
 
         let mut x = std::mem::take(&mut self.x_host);
-        if x.len() < n {
-            x.resize(n, 0.0);
-        }
-        self.rt.download_f32_into(&x_buf, &mut x[..n])?;
-
-        let pos_buf = self.rt.upload_i32(positions, &[b])?;
-        let n_layers = self.preset.n_layers;
-        let mut x_dev = x_buf;
-        for li in 0..n_layers {
-            for seg_idx in 0..self.segs.layer_decode.len() {
-                let (seg_id, wargs) = &self.segs.layer_decode[seg_idx];
-                let wbufs = self.weights.layer_args(li, wargs)?;
-                let is_attn = wargs.iter().any(|w| w == "wq");
-                let mut args: Vec<&PjRtBuffer> = vec![&x_dev];
-                let (kc, vc) = &self.caches[li];
-                if is_attn {
-                    args.extend([kc, vc, &pos_buf]);
+        for li in 0..self.n_layers {
+            for seg in 0..self.segs_per_layer {
+                if let Err(e) = self.layer_round(&ctx, li, seg, n, &mut x) {
+                    self.x_host = x;
+                    return Err(e);
                 }
-                args.extend(wbufs);
-                let seg_id = seg_id.clone();
-                let mut outs = self.timed_exec(&seg_id, &args)?;
-                drop(args);
-                if is_attn {
-                    let vc_new = outs.pop().unwrap();
-                    let kc_new = outs.pop().unwrap();
-                    self.caches[li] = (kc_new, vc_new);
-                }
-                let y_buf = outs.pop().unwrap();
-                reduce_partial(&self.rt, &mut self.comm,
-                               self.cfg.opt.zero_copy, &y_buf, n, &mut x,
-                               &self.comm_us)?;
-                x_dev = self.rt.upload_f32(&x[..n], &[b, 1, h])?;
             }
         }
+        let result = self.lm_head_candidates(&x[..n]);
         self.x_host = x;
-        self.lm_head_candidates(&x_dev)
+        result
     }
 
     /// lm-head + the §2.1b ending: local top-k then k-pair gather
     /// (optimized) or full-logit allgather (baseline).  Returns merged
     /// per-lane candidates on rank 0, None elsewhere.
-    fn lm_head_candidates(&mut self, x_dev: &PjRtBuffer)
+    fn lm_head_candidates(&mut self, x: &[f32])
                           -> Result<Option<Vec<Vec<Candidate>>>> {
         let b = self.cfg.batch;
-        let v_l = self.preset.vocab_local(self.world);
+        let v_l = self.vocab_local;
         let k = self.cfg.sampling.top_k.min(v_l);
-        let seg = self.segs.lm_head.clone();
-        let outs = self.timed_exec(
-            &seg, &[x_dev, &self.weights.final_g, &self.weights.lm_head])?;
-        let logits_buf = &outs[0];
         let mut logits = std::mem::take(&mut self.logits_host);
         logits.resize(b * v_l, 0.0);
-        self.rt.download_f32_into(logits_buf, &mut logits)?;
+        let t0 = Instant::now();
+        let r = self.backend.lm_head(x, &mut logits[..b * v_l]);
+        self.compute_us += t0.elapsed().as_micros() as u64;
+        if let Err(e) = r {
+            self.logits_host = logits;
+            return Err(e);
+        }
 
         let offset = self.rank * v_l;
         let result = if self.cfg.opt.local_topk {
@@ -481,8 +374,7 @@ impl RankWorker {
                     })
                     .collect()
             });
-            self.comm_us
-                .set(self.comm_us.get() + t0.elapsed().as_micros() as u64);
+            self.comm_us += t0.elapsed().as_micros() as u64;
             out
         } else {
             // baseline: allgather the full logit shards
@@ -491,7 +383,7 @@ impl RankWorker {
             self.comm.allgather(&logits[..b * v_l], &mut full)?;
             self.comm.stats().record_staging((b * v_l * 4) as u64);
             let out = if self.rank == 0 {
-                let v = self.preset.vocab;
+                let v = self.world * v_l;
                 let mut per_lane = Vec::with_capacity(b);
                 for lane in 0..b {
                     let mut row = Vec::with_capacity(v);
@@ -505,49 +397,10 @@ impl RankWorker {
             } else {
                 None
             };
-            self.comm_us
-                .set(self.comm_us.get() + t0.elapsed().as_micros() as u64);
+            self.comm_us += t0.elapsed().as_micros() as u64;
             out
         };
         self.logits_host = logits;
         Ok(result)
     }
-}
-
-/// The collective boundary of every layer: move a segment's partial-sum
-/// output (`y_buf`, `n` floats) through the allreduce and add the
-/// reduction into the replicated residual stream `x`.
-///
-/// Zero-copy (§2.3 ON): device → arena slot → in-place allreduce.
-/// Staged (OFF / TCP): device → literal → vec → ring (copy per hop) → x.
-fn reduce_partial(
-    rt: &RankRuntime,
-    comm: &mut Communicator,
-    zero_copy: bool,
-    y_buf: &PjRtBuffer,
-    n: usize,
-    x: &mut [f32],
-    comm_us: &Cell<u64>,
-) -> Result<()> {
-    let t0 = Instant::now();
-    if zero_copy && comm.has_arena() {
-        {
-            let slot = comm.arena_mut(n)?;
-            rt.download_f32_into(y_buf, slot)?;
-        }
-        comm.allreduce_arena(n, ReduceOp::Sum)?;
-        let slot = comm.arena(n)?;
-        for (xi, yi) in x[..n].iter_mut().zip(slot) {
-            *xi += *yi;
-        }
-    } else {
-        let mut y = rt.download_f32_staged(y_buf)?;
-        comm.stats().record_staging((n * 4) as u64);
-        comm.allreduce_staged(&mut y, ReduceOp::Sum)?;
-        for (xi, yi) in x[..n].iter_mut().zip(&y) {
-            *xi += *yi;
-        }
-    }
-    comm_us.set(comm_us.get() + t0.elapsed().as_micros() as u64);
-    Ok(())
 }

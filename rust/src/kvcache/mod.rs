@@ -57,8 +57,19 @@ impl LaneTable {
         bail!("no free lane");
     }
 
-    pub fn free(&mut self, lane: usize) {
-        self.lanes[lane] = Lane::Free;
+    /// Release an active lane.  Double-frees and out-of-range lanes are
+    /// errors: both indicate the engine's lane bookkeeping diverged from
+    /// the cache state, which must never pass silently.
+    pub fn free(&mut self, lane: usize) -> Result<()> {
+        let n = self.lanes.len();
+        match self.lanes.get_mut(lane) {
+            None => bail!("lane {lane} out of range ({n} lanes)"),
+            Some(l @ Lane::Active { .. }) => {
+                *l = Lane::Free;
+                Ok(())
+            }
+            Some(Lane::Free) => bail!("double free of lane {lane}"),
+        }
     }
 
     pub fn lane(&self, lane: usize) -> &Lane {
@@ -163,8 +174,12 @@ impl PagedAllocator {
         self.pages_for(max_len) <= self.free_pages
     }
 
-    /// Reserve pages for a lane's worst case. Errors if short.
+    /// Reserve pages for a lane's worst case. Errors if short or if the
+    /// lane index is out of range — the pool must never over-commit.
     pub fn admit(&mut self, lane: usize, max_len: usize) -> Result<()> {
+        if lane >= self.held.len() {
+            bail!("lane {lane} out of range ({} lanes)", self.held.len());
+        }
         let need = self.pages_for(max_len);
         if need > self.free_pages {
             bail!("paged allocator: need {need} pages, have {}",
@@ -198,7 +213,7 @@ mod tests {
         let b = t.alloc(200, 8).unwrap();
         assert_ne!(a, b);
         assert!(t.alloc(300, 1).is_err());
-        t.free(a);
+        t.free(a).unwrap();
         let c = t.alloc(300, 1).unwrap();
         assert_eq!(c, a);
         assert_eq!(t.request_of(c), Some(300));
@@ -218,7 +233,7 @@ mod tests {
         let mut t = LaneTable::new(3, 64);
         t.alloc(1, 5).unwrap();
         let b = t.alloc(2, 9).unwrap();
-        t.free(b);
+        t.free(b).unwrap();
         assert_eq!(t.positions(), vec![5, 0, 0]);
         assert_eq!(t.active_lanes(), vec![0]);
         assert_eq!(t.free_lanes(), 2);
@@ -277,7 +292,7 @@ mod tests {
                     (!live.is_empty()).then(|| rng.next_below(live.len()))
                 {
                     let lane = live.swap_remove(i);
-                    lanes.free(lane);
+                    lanes.free(lane).unwrap();
                     pages.release(lane);
                 }
                 // invariants
@@ -285,6 +300,100 @@ mod tests {
                     (0..n_lanes).map(|l| pages.held_by(l)).sum();
                 assert_eq!(held + pages.free_pages(), pages.total_pages());
                 assert_eq!(lanes.active_lanes().len(), live.len());
+            }
+        }
+    }
+
+    #[test]
+    fn double_free_and_out_of_range_error() {
+        let mut t = LaneTable::new(2, 8);
+        let a = t.alloc(1, 3).unwrap();
+        t.free(a).unwrap();
+        assert!(t.free(a).is_err(), "double free must be rejected");
+        assert!(t.free(99).is_err(), "out-of-range free must be rejected");
+        // a free that failed must not corrupt the table
+        let b = t.alloc(2, 1).unwrap();
+        assert_eq!(t.request_of(b), Some(2));
+    }
+
+    #[test]
+    fn lane_alloc_free_len_roundtrip_property() {
+        // property: for any interleaving, len_of/request_of reflect
+        // exactly the live set and freed lanes become reusable
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(0xBEEF);
+        for _case in 0..40 {
+            let n = 1 + rng.next_below(6);
+            let mut t = LaneTable::new(n, 32);
+            let mut live: Vec<(usize, u64, usize)> = Vec::new(); // lane,id,len
+            for step in 0..200u64 {
+                if rng.next_f32() < 0.5 && t.free_lanes() > 0 {
+                    let len = 1 + rng.next_below(16);
+                    let lane = t.alloc(step, len).unwrap();
+                    assert!(!live.iter().any(|(l, ..)| *l == lane),
+                            "alloc handed out a live lane");
+                    live.push((lane, step, len));
+                } else if !live.is_empty() {
+                    match rng.next_below(3) {
+                        0 => {
+                            let i = rng.next_below(live.len());
+                            let (lane, ..) = live.swap_remove(i);
+                            t.free(lane).unwrap();
+                            assert!(t.free(lane).is_err());
+                        }
+                        _ => {
+                            let i = rng.next_below(live.len());
+                            let (lane, _, len) = &mut live[i];
+                            if *len < 32 {
+                                *len = t.advance(*lane).unwrap();
+                            }
+                        }
+                    }
+                }
+                for (lane, id, len) in &live {
+                    assert_eq!(t.len_of(*lane), Some(*len));
+                    assert_eq!(t.request_of(*lane), Some(*id));
+                }
+                assert_eq!(t.free_lanes(), n - live.len());
+            }
+        }
+    }
+
+    #[test]
+    fn paged_allocator_never_overcommits_property() {
+        // property: whatever sequence of admits is attempted (including
+        // rejected ones), held + free == total and free never goes
+        // negative — the pool cannot be over-committed
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(0xF00D);
+        for _case in 0..40 {
+            let n_lanes = 1 + rng.next_below(4);
+            let n_pages = 4 + rng.next_below(12);
+            let mut p = PagedAllocator::new(4, n_pages, n_lanes);
+            let mut live: Vec<usize> = Vec::new();
+            for _ in 0..300 {
+                let lane = rng.next_below(n_lanes + 1); // sometimes OOR
+                if rng.next_f32() < 0.6 {
+                    let len = rng.next_below(n_pages * 4 + 8);
+                    let fits =
+                        lane < n_lanes && p.can_admit(len);
+                    let r = p.admit(lane, len);
+                    assert_eq!(r.is_ok(), fits,
+                               "admit must succeed iff can_admit and \
+                                lane in range");
+                    if r.is_ok() && !live.contains(&lane) {
+                        live.push(lane);
+                    }
+                } else if let Some(i) =
+                    (!live.is_empty()).then(|| rng.next_below(live.len()))
+                {
+                    let lane = live.swap_remove(i);
+                    p.release(lane);
+                    assert_eq!(p.held_by(lane), 0);
+                }
+                let held: usize =
+                    (0..n_lanes).map(|l| p.held_by(l)).sum();
+                assert_eq!(held + p.free_pages(), p.total_pages());
             }
         }
     }

@@ -34,7 +34,14 @@
 //! an in-process thread; `xeonserve launch` + `xeonserve worker` run one
 //! OS process per rank — the paper's actual shape — with the same
 //! engine driving either through [`engine::RankHost`].
+//!
+//! Execution backends (DESIGN.md §9): each rank's model math runs
+//! behind [`backend::ExecBackend`] — the PJRT/XLA artifact path
+//! (`--features xla`) or the dependency-free pure-Rust reference
+//! transformer that makes the whole distributed stack testable
+//! hermetically.
 
+pub mod backend;
 pub mod benchkit;
 pub mod ccl;
 pub mod config;
@@ -43,6 +50,7 @@ pub mod kvcache;
 pub mod launch;
 pub mod metrics;
 pub mod model;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod sampling;
 pub mod scheduler;
@@ -51,5 +59,5 @@ pub mod tokenizer;
 pub mod trace;
 pub mod util;
 
-pub use config::{EngineConfig, Variant};
+pub use config::{BackendKind, EngineConfig, Variant};
 pub use engine::{Completion, Engine};

@@ -1,4 +1,5 @@
-//! Rank-side model state: weight shards as device-resident buffers.
+//! Rank-side model state: synthetic tensor-parallel weight generation,
+//! plus (behind `--features xla`) device-resident weight buffers.
 //!
 //! Shapes and argument order come from the manifest (the python side is
 //! the source of truth — see `python/compile/model.py`); this module only
@@ -8,19 +9,31 @@
 //!   scaling, for benches and examples;
 //! * `NpyDir { dir }` — the tensor-parallel shards exported by
 //!   `aot.py write_golden`, for the rust↔jax parity tests.
+//!
+//! The sharding scheme ([`synth_shard`]) is backend-independent: the
+//! reference backend reuses it to build host-resident shards, so both
+//! backends satisfy the same `concat(shards) == full-tensor` invariant
+//! at every world size.
 
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
+#[cfg(feature = "xla")]
 use std::path::Path;
 
+#[cfg(feature = "xla")]
 use anyhow::{bail, Context, Result};
+#[cfg(feature = "xla")]
 use xla::PjRtBuffer;
 
+#[cfg(feature = "xla")]
 use crate::config::{Manifest, SegmentMeta, WeightSource};
+#[cfg(feature = "xla")]
 use crate::runtime::RankRuntime;
 use crate::util::{fnv1a, SplitMix64};
 
 /// All weight buffers one rank needs, keyed the way segments consume
 /// them (`SegmentMeta::weight_args` names index into `layers[li]`).
+#[cfg(feature = "xla")]
 pub struct RankWeights {
     pub embedding: PjRtBuffer,
     pub layers: Vec<HashMap<String, PjRtBuffer>>,
@@ -30,6 +43,7 @@ pub struct RankWeights {
 
 /// Union of per-layer weight tensor shapes, collected from the manifest's
 /// decode segments for (config, world).
+#[cfg(feature = "xla")]
 pub fn layer_weight_shapes(
     manifest: &Manifest,
     config: &str,
@@ -48,6 +62,7 @@ pub fn layer_weight_shapes(
     Ok(shapes)
 }
 
+#[cfg(feature = "xla")]
 fn collect_weight_shapes(seg: &SegmentMeta,
                          shapes: &mut HashMap<String, Vec<usize>>) {
     for name in &seg.weight_args {
@@ -87,8 +102,9 @@ fn synth_fill(name: &str, shape: &[usize], rng: &mut SplitMix64)
 /// of the world size.  This makes synthetic runs comparable across TP
 /// degrees (E1 scalability measures the same model at every world) and
 /// lets the engine tests assert world-invariant greedy tokens.
-fn synth_shard(name: &str, local_shape: &[usize], world: usize,
-               rank: usize, seed: u64) -> Vec<f32> {
+/// Both backends build their synthetic shards through this function.
+pub(crate) fn synth_shard(name: &str, local_shape: &[usize], world: usize,
+                          rank: usize, seed: u64) -> Vec<f32> {
     let axis = shard_axis(name);
     match axis {
         None => {
@@ -127,12 +143,13 @@ fn synth_shard(name: &str, local_shape: &[usize], world: usize,
     }
 }
 
-fn tensor_seed(base: u64, layer: i64, name: &str) -> u64 {
+pub(crate) fn tensor_seed(base: u64, layer: i64, name: &str) -> u64 {
     let key = format!("{base}/{layer}/{name}");
     fnv1a(key.as_bytes())
 }
 
 /// Materialize a rank's weights on its PJRT device.
+#[cfg(feature = "xla")]
 pub fn load_rank_weights(
     rt: &RankRuntime,
     manifest: &Manifest,
@@ -188,6 +205,7 @@ pub fn load_rank_weights(
     }
 }
 
+#[cfg(feature = "xla")]
 fn load_npy_weights(
     rt: &RankRuntime,
     dir: &Path,
@@ -220,6 +238,7 @@ fn load_npy_weights(
     })
 }
 
+#[cfg(feature = "xla")]
 impl RankWeights {
     /// Weight buffers of layer `li` in a segment's argument order.
     pub fn layer_args<'a>(&'a self, li: usize, weight_args: &[String])

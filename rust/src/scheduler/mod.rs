@@ -82,6 +82,9 @@ impl FcfsScheduler {
     pub fn next_admission(&mut self, decodes_pending: bool)
                           -> Option<QueuedRequest> {
         if self.queue.is_empty() {
+            // idle period: the prefill pressure the burst counter guards
+            // against has ended, so the next arrival starts fresh
+            self.burst = 0;
             return None;
         }
         if decodes_pending && self.burst >= self.max_prefill_burst {
@@ -178,6 +181,64 @@ mod tests {
         let mut s = FcfsScheduler::new(0);
         s.submit(vec![0], 1);
         assert!(s.next_admission(true).is_some());
+    }
+
+    #[test]
+    fn empty_prompt_and_zero_max_new_pass_through_unchanged() {
+        // degenerate requests are policy-neutral here: the engine layer
+        // decides what a 0-token generation means
+        let mut s = FcfsScheduler::new(2);
+        let id = s.submit(vec![], 0);
+        let q = s.next_admission(false).unwrap();
+        assert_eq!(q.id, id);
+        assert!(q.prompt.is_empty());
+        assert_eq!(q.max_new_tokens, 0);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn burst_counter_resets_across_idle_periods() {
+        let mut s = FcfsScheduler::new(2);
+        s.submit(vec![1], 1);
+        s.submit(vec![2], 1);
+        // exhaust the burst allowance while decodes are pending
+        assert!(s.next_admission(true).is_some());
+        assert!(s.next_admission(true).is_some());
+        // the queue is now idle; probing it must clear the counter...
+        assert!(s.next_admission(true).is_none());
+        // ...so a fresh arrival after the idle period is NOT charged for
+        // the old burst, even though no decode round was noted
+        s.submit(vec![3], 1);
+        assert!(s.next_admission(true).is_some(),
+                "idle period must reset the prefill burst counter");
+    }
+
+    #[test]
+    fn ttft_bookkeeping_monotonic_and_fcfs_consistent() {
+        // `arrived` is the TTFT anchor: it must never decrease in pop
+        // order, ids must be strictly increasing, and a request's
+        // measured wait only grows while it sits in the queue
+        let mut s = FcfsScheduler::new(8);
+        for i in 0..5 {
+            s.submit(vec![i], 1);
+        }
+        let mut prev_id = None;
+        let mut prev_arrived = None;
+        while let Some(q) = s.next_admission(false) {
+            if let Some(p) = prev_id {
+                assert!(q.id > p, "ids must be strictly increasing");
+            }
+            if let Some(t) = prev_arrived {
+                assert!(q.arrived >= t,
+                        "FCFS pops must see non-decreasing arrival times");
+            }
+            let w1 = q.arrived.elapsed();
+            let w2 = q.arrived.elapsed();
+            assert!(w2 >= w1, "a request's wait must be monotone");
+            prev_id = Some(q.id);
+            prev_arrived = Some(q.arrived);
+        }
+        assert!(s.is_empty());
     }
 
     #[test]

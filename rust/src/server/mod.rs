@@ -37,16 +37,28 @@ pub struct ApiRequest {
 impl ApiRequest {
     pub fn parse(line: &str) -> Result<ApiRequest> {
         let j = Json::parse(line)?;
+        // absent => default; present-but-invalid => reject.  Silently
+        // coercing a malformed value to the default hid client bugs.
+        let max_new_tokens = match j.get("max_new_tokens") {
+            None => 16,
+            Some(v) => {
+                let n = v.as_f64().context(
+                    "max_new_tokens must be a non-negative integer")?;
+                anyhow::ensure!(
+                    n.fract() == 0.0 && (0.0..=1e9).contains(&n),
+                    "max_new_tokens must be a non-negative integer, \
+                     got {n}"
+                );
+                n as usize
+            }
+        };
         Ok(ApiRequest {
             prompt: j
                 .req("prompt")?
                 .as_str()
                 .context("prompt must be a string")?
                 .to_string(),
-            max_new_tokens: j
-                .get("max_new_tokens")
-                .and_then(Json::as_usize)
-                .unwrap_or(16),
+            max_new_tokens,
         })
     }
 }
@@ -259,6 +271,27 @@ mod tests {
         assert_eq!(d.max_new_tokens, 16);
         assert!(ApiRequest::parse(r#"{"max_new_tokens": 4}"#).is_err());
         assert!(ApiRequest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn invalid_max_new_tokens_rejected_not_coerced() {
+        // present-but-invalid values must error (previously they were
+        // silently coerced to the 16-token default)
+        for bad in [
+            r#"{"prompt": "x", "max_new_tokens": "4"}"#,
+            r#"{"prompt": "x", "max_new_tokens": 4.5}"#,
+            r#"{"prompt": "x", "max_new_tokens": -1}"#,
+            r#"{"prompt": "x", "max_new_tokens": true}"#,
+            r#"{"prompt": "x", "max_new_tokens": null}"#,
+            r#"{"prompt": "x", "max_new_tokens": [4]}"#,
+        ] {
+            assert!(ApiRequest::parse(bad).is_err(), "accepted {bad}");
+        }
+        // explicit integers — including 0 — are fine (the engine layer
+        // clamps 0 to a single-token generation)
+        let z = ApiRequest::parse(r#"{"prompt": "x", "max_new_tokens": 0}"#)
+            .unwrap();
+        assert_eq!(z.max_new_tokens, 0);
     }
 
     #[test]

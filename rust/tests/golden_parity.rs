@@ -1,111 +1,279 @@
-//! THE cross-layer correctness gate: the rust engine, running the
-//! AOT-compiled HLO segments with the tensor-parallel weight shards
-//! exported by `aot.py write_golden`, must reproduce the jax reference
-//! composition token-for-token (greedy) on both block variants.
+//! Cross-layer correctness gates.
 //!
-//! Requires `make artifacts` (manifest + golden/ present).
+//! Hermetic half (always runs): the full distributed engine — rank
+//! threads, §2.1a id-broadcast, per-layer allreduce, §2.1b top-k
+//! gather, sampling — must reproduce, token for token, a *straight-line
+//! single-rank forward pass* driven directly against the reference
+//! backend with none of that machinery.  Any bug in the distributed
+//! plumbing (wrong positions, cache corruption, lane mixups, reduction
+//! errors) shows up as a token mismatch.
+//!
+//! Artifact half (`--features xla` + `make artifacts`): the engine
+//! running AOT-compiled HLO segments with jax-exported weight shards
+//! must reproduce the jax reference composition greedily
+//! (`aot.py write_golden`), on both block variants.
 
-use xeonserve::config::{EngineConfig, Manifest, Variant, WeightSource};
+use xeonserve::backend::reference::ReferenceBackend;
+use xeonserve::backend::{ExecBackend, StepCtx};
+use xeonserve::config::{BackendKind, EngineConfig, ModelPreset, Variant,
+                        WeightSource};
 use xeonserve::engine::Engine;
 
 #[macro_use]
 #[path = "common/mod.rs"]
 mod common;
 
-fn golden_i32(path: &std::path::Path) -> Vec<i32> {
-    use xla::FromRawBytes;
-    let lit = xla::Literal::read_npy(path, &()).expect("read npy");
-    lit.to_vec::<i32>().expect("i32 npy")
+fn ref_cfg(world: usize, batch: usize, variant: Variant) -> EngineConfig {
+    EngineConfig {
+        model: "tiny".into(),
+        backend: BackendKind::Reference,
+        variant,
+        world,
+        batch,
+        weights: WeightSource::Synthetic { seed: 2024 },
+        ..Default::default()
+    }
 }
 
-fn run_golden(variant: Variant) {
-    let manifest = Manifest::load("artifacts").expect("run `make artifacts`");
-    let golden = manifest.golden.clone().expect("golden meta");
-    let gdir = manifest.golden_dir(&variant.to_string()).unwrap();
+fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
 
-    let tokens = golden_i32(&gdir.join("tokens.npy"));
-    let lengths = golden_i32(&gdir.join("lengths.npy"));
-    let greedy = golden_i32(&gdir.join("greedy_tokens.npy")); // [n, B]
-    let n = golden.n_decode;
-    let b = lengths.len();
-    let s = tokens.len() / b;
+/// Straight-line greedy decode at world=1, driven directly against the
+/// backend: no engine, no scheduler, no collectives, no sampler.
+/// Mirrors the engine's documented serving policy (bucket selection,
+/// truncation, max_seq stop).
+fn manual_reference_greedy(variant: Variant, prompt: &[i32], n_new: usize)
+                           -> Vec<i32> {
+    let cfg = ref_cfg(1, 1, variant);
+    let preset = ModelPreset::builtin(&cfg.model).unwrap();
+    let buckets = preset.builtin_prefill_buckets();
+    let (h, max_seq, vocab) = (preset.hidden, preset.max_seq, preset.vocab);
+    let segs = variant.syncs_per_layer();
+    let mut be = ReferenceBackend::new(&cfg, 0, &preset).unwrap();
 
-    let cfg = EngineConfig {
-        model: golden.config.clone(),
-        variant,
-        world: golden.world,
-        batch: b,
-        weights: WeightSource::NpyDir { dir: gdir.clone() },
-        ..Default::default()
-    };
-    let mut engine = Engine::new(cfg).expect("engine init");
+    // engine admission policy: smallest bucket that fits, else truncate
+    let bucket = buckets
+        .iter()
+        .copied()
+        .find(|&b| b >= prompt.len())
+        .unwrap_or(*buckets.last().unwrap());
+    let mut p = prompt.to_vec();
+    p.truncate(bucket);
+    let length = p.len().max(1);
+    let mut padded = p;
+    padded.resize(bucket, 0);
 
-    let prompts: Vec<Vec<i32>> = (0..b)
-        .map(|lane| {
-            tokens[lane * s..lane * s + lengths[lane] as usize].to_vec()
-        })
-        .collect();
-    let outs = engine.generate(&prompts, n).expect("generate");
+    // prefill: at world 1 the "allreduce" of a partial is the partial
+    let ctx = StepCtx::Prefill { lane: 0, bucket, length };
+    let mut x = vec![0.0f32; bucket * h];
+    let mut y = vec![0.0f32; bucket * h];
+    be.embed(&ctx, &padded, &mut x).unwrap();
+    for li in 0..preset.n_layers {
+        for seg in 0..segs {
+            be.layer_partial(&ctx, li, seg, &x, &mut y).unwrap();
+            for (xi, yi) in x.iter_mut().zip(&y) {
+                *xi += *yi;
+            }
+        }
+    }
+    let head: Vec<f32> = x[(length - 1) * h..length * h].to_vec();
+    let mut logits = vec![0.0f32; vocab];
+    be.lm_head(&head, &mut logits).unwrap();
+    let mut toks = vec![argmax(&logits)];
 
-    for lane in 0..b {
-        let expect: Vec<i32> =
-            (0..n).map(|step| greedy[step * b + lane]).collect();
-        assert_eq!(
-            outs[lane], expect,
-            "variant={variant} lane={lane}: rust {:?} != golden {:?}",
-            outs[lane], expect
-        );
+    // greedy decode until max_new or the KV cap
+    let mut pos = length;
+    let mut xd = vec![0.0f32; h];
+    let mut yd = vec![0.0f32; h];
+    while toks.len() < n_new.max(1) && pos < max_seq {
+        let positions = [pos as i32];
+        let ctx = StepCtx::Decode { positions: &positions };
+        be.embed(&ctx, &[*toks.last().unwrap()], &mut xd).unwrap();
+        for li in 0..preset.n_layers {
+            for seg in 0..segs {
+                be.layer_partial(&ctx, li, seg, &xd, &mut yd).unwrap();
+                for (xi, yi) in xd.iter_mut().zip(&yd) {
+                    *xi += *yi;
+                }
+            }
+        }
+        be.lm_head(&xd, &mut logits).unwrap();
+        toks.push(argmax(&logits));
+        pos += 1;
+    }
+    toks
+}
+
+fn engine_greedy(world: usize, variant: Variant, prompt: &[i32],
+                 n_new: usize) -> Vec<i32> {
+    let mut engine = Engine::new(ref_cfg(world, 1, variant)).unwrap();
+    engine
+        .generate(&[prompt.to_vec()], n_new)
+        .unwrap()
+        .into_iter()
+        .next()
+        .unwrap()
+}
+
+#[test]
+fn engine_matches_straight_line_reference_parallel() {
+    let prompt = [3, 1, 4, 1, 5, 9, 2, 6];
+    let golden = manual_reference_greedy(Variant::Parallel, &prompt, 8);
+    assert_eq!(golden.len(), 8);
+    for world in [1usize, 2, 4] {
+        let got = engine_greedy(world, Variant::Parallel, &prompt, 8);
+        assert_eq!(got, golden, "world={world} diverged from the \
+                    straight-line reference");
     }
 }
 
 #[test]
-fn parallel_block_matches_jax_reference() {
-    require_artifacts!();
-    run_golden(Variant::Parallel);
+fn engine_matches_straight_line_reference_serial() {
+    let prompt = [42, 17, 200, 8];
+    let golden = manual_reference_greedy(Variant::Serial, &prompt, 6);
+    for world in [1usize, 2, 4] {
+        let got = engine_greedy(world, Variant::Serial, &prompt, 6);
+        assert_eq!(got, golden, "world={world} (serial) diverged");
+    }
 }
 
 #[test]
-fn serial_block_matches_jax_reference() {
-    require_artifacts!();
-    run_golden(Variant::Serial);
+fn naive_opt_flags_match_straight_line_reference() {
+    // the three paper optimizations are pure communication changes:
+    // even with all of them OFF the engine must hit the same tokens
+    let prompt = [7, 7, 7];
+    let golden = manual_reference_greedy(Variant::Parallel, &prompt, 5);
+    let mut cfg = ref_cfg(2, 1, Variant::Parallel);
+    cfg.opt = xeonserve::config::OptFlags::naive();
+    let mut engine = Engine::new(cfg).unwrap();
+    let got = engine.generate(&[prompt.to_vec()], 5).unwrap();
+    assert_eq!(got[0], golden);
 }
 
-/// The optimizations must not change the numbers: run the parallel golden
-/// with ALL paper optimizations disabled (naive baseline) and expect the
-/// same tokens.
 #[test]
-fn naive_baseline_produces_identical_tokens() {
-    require_artifacts!();
-    let manifest = Manifest::load("artifacts").expect("run `make artifacts`");
-    let golden = manifest.golden.clone().expect("golden meta");
-    let gdir = manifest.golden_dir("parallel").unwrap();
+fn max_seq_stop_matches_straight_line_reference() {
+    // a generation that runs into the KV cap must stop at the same
+    // token in both drivers
+    let prompt = [1i32; 10];
+    let golden = manual_reference_greedy(Variant::Parallel, &prompt, 500);
+    let got = engine_greedy(2, Variant::Parallel, &prompt, 500);
+    assert_eq!(got, golden);
+    assert_eq!(golden.len(), 64 - 10 + 1, "should fill to max_seq");
+}
 
-    let tokens = golden_i32(&gdir.join("tokens.npy"));
-    let lengths = golden_i32(&gdir.join("lengths.npy"));
-    let greedy = golden_i32(&gdir.join("greedy_tokens.npy"));
-    let n = golden.n_decode;
-    let b = lengths.len();
-    let s = tokens.len() / b;
+/// The jax↔rust golden gate, unchanged: requires `--features xla` and
+/// `make artifacts` (which exports the golden weight shards + tokens).
+#[cfg(feature = "xla")]
+mod xla_artifacts {
+    use super::*;
+    use xeonserve::config::Manifest;
 
-    let cfg = EngineConfig {
-        model: golden.config.clone(),
-        variant: Variant::Parallel,
-        world: golden.world,
-        batch: b,
-        weights: WeightSource::NpyDir { dir: gdir },
-        opt: xeonserve::config::OptFlags::naive(),
-        ..Default::default()
-    };
-    let mut engine = Engine::new(cfg).expect("engine init");
-    let prompts: Vec<Vec<i32>> = (0..b)
-        .map(|lane| {
-            tokens[lane * s..lane * s + lengths[lane] as usize].to_vec()
-        })
-        .collect();
-    let outs = engine.generate(&prompts, n).expect("generate");
-    for lane in 0..b {
-        let expect: Vec<i32> =
-            (0..n).map(|step| greedy[step * b + lane]).collect();
-        assert_eq!(outs[lane], expect, "naive lane={lane}");
+    fn golden_i32(path: &std::path::Path) -> Vec<i32> {
+        use xla::FromRawBytes;
+        let lit = xla::Literal::read_npy(path, &()).expect("read npy");
+        lit.to_vec::<i32>().expect("i32 npy")
+    }
+
+    fn run_golden(variant: Variant) {
+        let manifest =
+            Manifest::load("artifacts").expect("run `make artifacts`");
+        let golden = manifest.golden.clone().expect("golden meta");
+        let gdir = manifest.golden_dir(&variant.to_string()).unwrap();
+
+        let tokens = golden_i32(&gdir.join("tokens.npy"));
+        let lengths = golden_i32(&gdir.join("lengths.npy"));
+        let greedy = golden_i32(&gdir.join("greedy_tokens.npy")); // [n, B]
+        let n = golden.n_decode;
+        let b = lengths.len();
+        let s = tokens.len() / b;
+
+        let cfg = EngineConfig {
+            model: golden.config.clone(),
+            backend: BackendKind::Xla,
+            variant,
+            world: golden.world,
+            batch: b,
+            weights: WeightSource::NpyDir { dir: gdir.clone() },
+            ..Default::default()
+        };
+        let mut engine = Engine::new(cfg).expect("engine init");
+
+        let prompts: Vec<Vec<i32>> = (0..b)
+            .map(|lane| {
+                tokens[lane * s..lane * s + lengths[lane] as usize].to_vec()
+            })
+            .collect();
+        let outs = engine.generate(&prompts, n).expect("generate");
+
+        for lane in 0..b {
+            let expect: Vec<i32> =
+                (0..n).map(|step| greedy[step * b + lane]).collect();
+            assert_eq!(
+                outs[lane], expect,
+                "variant={variant} lane={lane}: rust {:?} != golden {:?}",
+                outs[lane], expect
+            );
+        }
+    }
+
+    #[test]
+    fn parallel_block_matches_jax_reference() {
+        require_artifacts!();
+        run_golden(Variant::Parallel);
+    }
+
+    #[test]
+    fn serial_block_matches_jax_reference() {
+        require_artifacts!();
+        run_golden(Variant::Serial);
+    }
+
+    /// The optimizations must not change the numbers: run the parallel
+    /// golden with ALL paper optimizations disabled (naive baseline)
+    /// and expect the same tokens.
+    #[test]
+    fn naive_baseline_produces_identical_tokens() {
+        require_artifacts!();
+        let manifest =
+            Manifest::load("artifacts").expect("run `make artifacts`");
+        let golden = manifest.golden.clone().expect("golden meta");
+        let gdir = manifest.golden_dir("parallel").unwrap();
+
+        let tokens = golden_i32(&gdir.join("tokens.npy"));
+        let lengths = golden_i32(&gdir.join("lengths.npy"));
+        let greedy = golden_i32(&gdir.join("greedy_tokens.npy"));
+        let n = golden.n_decode;
+        let b = lengths.len();
+        let s = tokens.len() / b;
+
+        let cfg = EngineConfig {
+            model: golden.config.clone(),
+            backend: BackendKind::Xla,
+            variant: Variant::Parallel,
+            world: golden.world,
+            batch: b,
+            weights: WeightSource::NpyDir { dir: gdir },
+            opt: xeonserve::config::OptFlags::naive(),
+            ..Default::default()
+        };
+        let mut engine = Engine::new(cfg).expect("engine init");
+        let prompts: Vec<Vec<i32>> = (0..b)
+            .map(|lane| {
+                tokens[lane * s..lane * s + lengths[lane] as usize].to_vec()
+            })
+            .collect();
+        let outs = engine.generate(&prompts, n).expect("generate");
+        for lane in 0..b {
+            let expect: Vec<i32> =
+                (0..n).map(|step| greedy[step * b + lane]).collect();
+            assert_eq!(outs[lane], expect, "naive lane={lane}");
+        }
     }
 }

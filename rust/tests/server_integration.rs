@@ -1,12 +1,16 @@
-//! End-to-end server test: boot the TCP endpoint on an ephemeral port,
+//! End-to-end server tests: boot the TCP endpoint on a local port,
 //! drive it with concurrent client connections, and check the JSON
-//! protocol round-trips.  Requires `make artifacts` (tiny preset).
+//! protocol round-trips.
+//!
+//! Hermetic: runs on the pure-Rust reference backend (tiny preset) —
+//! no artifacts required.  The `xla_artifacts` module re-runs the
+//! round-trip against the PJRT backend under `--features xla`.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
-use xeonserve::config::EngineConfig;
+use xeonserve::config::{BackendKind, EngineConfig};
 use xeonserve::util::Json;
 
 #[macro_use]
@@ -23,12 +27,23 @@ fn wait_for_port(addr: &str) -> TcpStream {
     panic!("server on {addr} never came up");
 }
 
+fn request_line(stream: &mut TcpStream, line: &str) -> Json {
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+    let mut out = String::new();
+    BufReader::new(stream.try_clone().unwrap())
+        .read_line(&mut out)
+        .unwrap();
+    Json::parse(&out)
+        .unwrap_or_else(|e| panic!("invalid json response {out:?}: {e}"))
+}
+
 #[test]
 fn serve_roundtrip_and_concurrent_clients() {
-    require_artifacts!();
     let addr = "127.0.0.1:47811";
     let cfg = EngineConfig {
         model: "tiny".into(),
+        backend: BackendKind::Reference,
         world: 2,
         batch: 2,
         ..Default::default()
@@ -40,12 +55,9 @@ fn serve_roundtrip_and_concurrent_clients() {
 
     // client 1: simple request
     let mut s1 = wait_for_port(addr);
-    s1.write_all(b"{\"prompt\": \"hello\", \"max_new_tokens\": 4}\n")
-        .unwrap();
-    let mut line = String::new();
-    BufReader::new(s1.try_clone().unwrap()).read_line(&mut line).unwrap();
-    let j = Json::parse(&line).expect("valid json response");
-    assert!(j.get("error").is_none(), "unexpected error: {line}");
+    let j = request_line(&mut s1,
+                         r#"{"prompt": "hello", "max_new_tokens": 4}"#);
+    assert!(j.get("error").is_none(), "unexpected error: {j:?}");
     assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 4);
     assert!(j.get("latency_ms").unwrap().as_f64().unwrap() > 0.0);
 
@@ -54,14 +66,14 @@ fn serve_roundtrip_and_concurrent_clients() {
         .map(|i| {
             std::thread::spawn(move || {
                 let mut s = wait_for_port("127.0.0.1:47811");
-                let req = format!(
-                    "{{\"prompt\": \"client {i}\", \"max_new_tokens\": 3}}\n"
+                let j = request_line(
+                    &mut s,
+                    &format!(
+                        "{{\"prompt\": \"client {i}\", \
+                         \"max_new_tokens\": 3}}"
+                    ),
                 );
-                s.write_all(req.as_bytes()).unwrap();
-                let mut line = String::new();
-                BufReader::new(s).read_line(&mut line).unwrap();
-                let j = Json::parse(&line).unwrap();
-                assert!(j.get("error").is_none(), "{line}");
+                assert!(j.get("error").is_none(), "{j:?}");
                 j.get("tokens").unwrap().as_arr().unwrap().len()
             })
         })
@@ -72,9 +84,71 @@ fn serve_roundtrip_and_concurrent_clients() {
 
     // malformed request gets an error object, not a hangup
     let mut s2 = wait_for_port(addr);
-    s2.write_all(b"this is not json\n").unwrap();
-    let mut line = String::new();
-    BufReader::new(s2).read_line(&mut line).unwrap();
-    let j = Json::parse(&line).unwrap();
+    let j = request_line(&mut s2, "this is not json");
     assert!(j.get("error").is_some());
+
+    // invalid max_new_tokens is rejected with a clean JSON error line
+    // (it used to be silently coerced to the 16-token default)
+    let mut s3 = wait_for_port(addr);
+    let j = request_line(
+        &mut s3, r#"{"prompt": "x", "max_new_tokens": "five"}"#);
+    let err = j.get("error").expect("expected an error object").as_str()
+        .unwrap().to_string();
+    assert!(err.contains("max_new_tokens"),
+            "error should name the bad field: {err}");
+    // ...and the connection stays usable afterwards
+    let j = request_line(&mut s3, r#"{"prompt": "y", "max_new_tokens": 2}"#);
+    assert!(j.get("error").is_none(), "{j:?}");
+    assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+}
+
+#[test]
+fn multi_line_session_reuses_connection() {
+    let addr = "127.0.0.1:47813";
+    let cfg = EngineConfig {
+        model: "tiny".into(),
+        backend: BackendKind::Reference,
+        world: 1,
+        batch: 1,
+        ..Default::default()
+    };
+    std::thread::spawn(move || {
+        let _ = xeonserve::server::serve(cfg, addr);
+    });
+    let mut s = wait_for_port(addr);
+    for i in 0..3 {
+        let j = request_line(
+            &mut s,
+            &format!("{{\"prompt\": \"turn {i}\", \"max_new_tokens\": 2}}"),
+        );
+        assert!(j.get("error").is_none(), "turn {i}: {j:?}");
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+    }
+}
+
+/// Artifact-gated variant: the same round-trip on the PJRT backend.
+#[cfg(feature = "xla")]
+mod xla_artifacts {
+    use super::*;
+
+    #[test]
+    fn serve_roundtrip_xla() {
+        require_artifacts!();
+        let addr = "127.0.0.1:47815";
+        let cfg = EngineConfig {
+            model: "tiny".into(),
+            backend: BackendKind::Xla,
+            world: 2,
+            batch: 2,
+            ..Default::default()
+        };
+        std::thread::spawn(move || {
+            let _ = xeonserve::server::serve(cfg, addr);
+        });
+        let mut s = wait_for_port(addr);
+        let j = request_line(
+            &mut s, r#"{"prompt": "hello", "max_new_tokens": 4}"#);
+        assert!(j.get("error").is_none(), "{j:?}");
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 4);
+    }
 }
