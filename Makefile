@@ -2,7 +2,7 @@
 # engine-level example/test/bench needs (requires python + jax + numpy;
 # rust never invokes python at runtime).
 
-.PHONY: artifacts artifacts-full test test-xla verify clean-artifacts
+.PHONY: artifacts artifacts-full test test-xla verify bench clean-artifacts
 
 artifacts:
 	cd python && python -m compile.aot --out-dir ../artifacts
@@ -20,6 +20,11 @@ test-xla:
 # tier-1 verify (ROADMAP.md) — hermetic: reference backend, no artifacts
 verify:
 	cargo build --release && cargo test -q
+
+# record the scenario suite (DESIGN.md §10) and schema-check the output
+bench:
+	cargo run --release -- bench --model small --json BENCH_local.json
+	cargo run --release -- bench --validate BENCH_local.json
 
 clean-artifacts:
 	rm -rf artifacts

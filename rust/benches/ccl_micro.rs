@@ -6,11 +6,11 @@
 //! that collective cost scales the way the algorithms promise
 //! (ring: ∝ (W−1)/W·n; tree bcast: ∝ ⌈log₂W⌉·n).
 //!
-//! Run: `cargo bench --bench ccl_micro [-- --quick]`
+//! Run: `cargo bench --bench ccl_micro [-- --quick] [--json FILE]`
 
 use std::sync::Arc;
 
-use xeonserve::benchkit::{self, CaseResult};
+use xeonserve::benchkit::{self, CaseResult, JsonReport};
 use xeonserve::ccl::{CommGroup, Communicator, ReduceOp};
 use xeonserve::metrics::LatencyStats;
 
@@ -41,6 +41,7 @@ fn rank0_stats(outs: Vec<LatencyStats>) -> LatencyStats {
 fn main() -> anyhow::Result<()> {
     let iters = benchkit::iters(300);
 
+    let mut rep = JsonReport::new("ccl_micro");
     for world in [2usize, 4, 8] {
         let mut results = Vec::new();
         for elems in [1024usize, 65536] {
@@ -157,10 +158,10 @@ fn main() -> anyhow::Result<()> {
         results.push(CaseResult::from_stats("gather_topk_320B",
                                             &mut rank0_stats(outs)));
 
-        benchkit::report(
+        rep.section(
             &format!("E6 rccl collective microbench — world={world}"),
-            &results,
+            results,
         );
     }
-    Ok(())
+    rep.finish()
 }

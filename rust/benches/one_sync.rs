@@ -12,9 +12,9 @@
 //! structure); the comparison isolates the synchronization schedule at
 //! equal parameter count and equal per-layer compute.
 //!
-//! Run: `cargo bench --bench one_sync [-- --quick]`
+//! Run: `cargo bench --bench one_sync [-- --quick] [--json FILE]`
 
-use xeonserve::benchkit::{self, CaseResult};
+use xeonserve::benchkit::{self, CaseResult, JsonReport};
 use xeonserve::config::{EngineConfig, Variant};
 use xeonserve::engine::Engine;
 
@@ -49,19 +49,20 @@ fn run_case(model: &str, world: usize, variant: Variant, steps: usize)
 
 fn main() -> anyhow::Result<()> {
     let steps = benchkit::iters(16);
+    let mut rep = JsonReport::new("one_sync");
     for (model, world) in [("tiny", 4), ("small", 4)] {
         let mut results = Vec::new();
         for variant in [Variant::Parallel, Variant::Serial] {
             eprintln!("running {model} w{world} {variant}...");
             results.push(run_case(model, world, variant, steps)?);
         }
-        benchkit::report(
+        rep.section(
             &format!(
                 "E3 §2.2 one-time synchronization — {model}, world={world} \
                  (Fig. 2: 1 vs 2 allreduces/layer)"
             ),
-            &results,
+            results,
         );
     }
-    Ok(())
+    rep.finish()
 }

@@ -11,9 +11,9 @@
 //! qualitative claim: `opt` moves orders of magnitude fewer bytes at the
 //! round boundaries and scales better with world size.
 //!
-//! Run: `cargo bench --bench sync_minimize [-- --quick]`
+//! Run: `cargo bench --bench sync_minimize [-- --quick] [--json FILE]`
 
-use xeonserve::benchkit::{self, CaseResult};
+use xeonserve::benchkit::{self, CaseResult, JsonReport};
 use xeonserve::config::{EngineConfig, OptFlags, Variant};
 use xeonserve::engine::Engine;
 
@@ -45,6 +45,7 @@ fn run_case(name: &str, model: &str, world: usize, opt: OptFlags,
 
 fn main() -> anyhow::Result<()> {
     let steps = benchkit::iters(16);
+    let mut rep = JsonReport::new("sync_minimize");
     for (model, world) in [("tiny", 4), ("small", 4)] {
         let cases = [
             ("opt", OptFlags { broadcast_ids: true, local_topk: true,
@@ -74,14 +75,14 @@ fn main() -> anyhow::Result<()> {
                 .unwrap_or(0.0)
         };
         let ratio = bytes("naive") / bytes("opt").max(1.0);
-        benchkit::report(
+        rep.section(
             &format!(
                 "E2 §2.1 sync minimization — {model}, world={world} \
                  (Fig. 1: bcast ids + local top-k vs naive)"
             ),
-            &results,
+            results,
         );
         println!("round-boundary traffic: naive/opt = {ratio:.1}x");
     }
-    Ok(())
+    rep.finish()
 }

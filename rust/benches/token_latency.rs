@@ -9,10 +9,14 @@
 //! latency *drops* as sockets are added at fixed model size, and stays
 //! under the ~200 ms/token human-reading bar.
 //!
-//! Run: `cargo bench --bench token_latency [-- --quick]`
+//! Hermetic builds sweep the built-in presets on the reference backend;
+//! `--features xla` builds additionally require the artifact set and
+//! only run worlds the manifest was lowered for.
+//!
+//! Run: `cargo bench --bench token_latency [-- --quick] [--json FILE]`
 
-use xeonserve::benchkit::{self, CaseResult};
-use xeonserve::config::{EngineConfig, Manifest, Variant};
+use xeonserve::benchkit::{self, CaseResult, JsonReport};
+use xeonserve::config::{EngineConfig, Manifest, ModelPreset, Variant};
 use xeonserve::engine::Engine;
 
 fn bench_case(model: &str, world: usize, steps: usize, prompt_len: usize)
@@ -43,29 +47,44 @@ fn bench_case(model: &str, world: usize, steps: usize, prompt_len: usize)
 }
 
 fn main() -> anyhow::Result<()> {
-    let manifest = Manifest::load("artifacts")?;
+    // the XLA-backend default needs the lowered artifact set; the
+    // hermetic reference backend only needs the built-in preset to
+    // shard evenly over the world
+    let manifest = if cfg!(feature = "xla") {
+        Some(Manifest::load("artifacts")?)
+    } else {
+        None
+    };
+    let runnable = |model: &str, world: usize| -> bool {
+        match &manifest {
+            Some(m) => m
+                .find(model, world, 1, "parallel_block", "decode", 1)
+                .is_ok(),
+            None => ModelPreset::builtin(model)
+                .map(|p| p.supports_world(world) && world <= 8)
+                .unwrap_or(false),
+        }
+    };
+
     let steps = benchkit::iters(24);
+    let mut rep = JsonReport::new("token_latency");
     let mut results = Vec::new();
     for (model, prompt_len) in [("tiny", 8), ("small", 64), ("medium", 64)] {
         for world in [1usize, 2, 4, 8] {
-            // only worlds present in the artifact set
-            if manifest
-                .find(model, world, 1, "parallel_block", "decode", 1)
-                .is_err()
-            {
+            if !runnable(model, world) {
                 continue;
             }
             eprintln!("running {model} w{world}...");
             results.push(bench_case(model, world, steps, prompt_len)?);
         }
     }
-    benchkit::report(
+    rep.section(
         "E1 token latency vs world size (paper §3: 140 ms/token @ 72B/4 sockets)",
-        &results,
+        results,
     );
     println!(
         "\nhuman-reading bar: 200 ms/token — see sim_ms_tok column \
          (simulated cluster; wall is 1-core time-sliced)"
     );
-    Ok(())
+    rep.finish()
 }

@@ -9,11 +9,11 @@
 //!    on/off; reports per-token latency and the staged-copy bytes the
 //!    baseline pays.
 //!
-//! Run: `cargo bench --bench zero_copy [-- --quick]`
+//! Run: `cargo bench --bench zero_copy [-- --quick] [--json FILE]`
 
 use std::sync::Arc;
 
-use xeonserve::benchkit::{self, CaseResult};
+use xeonserve::benchkit::{self, CaseResult, JsonReport};
 use xeonserve::ccl::{CommGroup, Communicator, ReduceOp};
 use xeonserve::config::{EngineConfig, OptFlags, Variant};
 use xeonserve::engine::Engine;
@@ -113,6 +113,7 @@ fn engine_case(zero_copy: bool, steps: usize)
 fn main() -> anyhow::Result<()> {
     let iters = benchkit::iters(200);
 
+    let mut rep = JsonReport::new("zero_copy");
     for world in [2usize, 4, 8] {
         let mut results = Vec::new();
         for elems in [256usize, 4096, 65536, 1 << 20] {
@@ -120,12 +121,12 @@ fn main() -> anyhow::Result<()> {
             results.push(a);
             results.push(s);
         }
-        benchkit::report(
+        rep.section(
             &format!(
                 "E4 §2.3 zero-copy vs staged allreduce — world={world} \
                  (Fig. 3 microbench)"
             ),
-            &results,
+            results,
         );
     }
 
@@ -134,9 +135,9 @@ fn main() -> anyhow::Result<()> {
     eprintln!("running engine zero-copy ablation (small, world=4)...");
     results.push(engine_case(true, steps)?);
     results.push(engine_case(false, steps)?);
-    benchkit::report(
+    rep.section(
         "E4 §2.3 engine-level — small, world=4, decode",
-        &results,
+        results,
     );
-    Ok(())
+    rep.finish()
 }

@@ -25,6 +25,7 @@
 //! communicates.  All methods are deterministic for a fixed
 //! (config, rank) pair.
 
+pub mod pool;
 pub mod reference;
 #[cfg(feature = "xla")]
 pub mod xla;

@@ -1,0 +1,378 @@
+//! Per-rank worker thread pool for data-parallel kernel loops.
+//!
+//! The reference backend's blocked GEMMs split their *output* index
+//! space into fixed units (column blocks, rows) and fan the units out
+//! over this pool (DESIGN.md §10).  Determinism contract: a unit's
+//! arithmetic never depends on which thread runs it — every float op
+//! sequence is a pure function of the unit index — so any thread
+//! count (including 1, the scalar path) produces bit-identical
+//! results.  The pool only decides *who* computes a unit, never *how*.
+//!
+//! Workers are parked on a condvar between dispatches, so a dispatch
+//! costs roughly one mutex round-trip plus a wakeup (~10 µs), cheap
+//! against the per-layer GEMM work it amortizes.  Small jobs should
+//! bypass the pool entirely via [`WorkerPool::run_if_worth`].
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+use anyhow::{Context, Result};
+
+/// Resolve a configured thread count (`EngineConfig::threads`):
+/// `0` = auto — available cores divided by the tensor-parallel world
+/// (every rank runs its own pool, so a world of R ranks on C cores
+/// gets C/R threads each), clamped to `[1, 64]`.
+pub fn auto_threads(cfg_threads: usize, world: usize) -> usize {
+    let t = if cfg_threads == 0 {
+        thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            / world.max(1)
+    } else {
+        cfg_threads
+    };
+    t.clamp(1, 64)
+}
+
+/// Erased pointer to the caller's task closure.  Only ever dereferenced
+/// between the epoch hand-off and the completion barrier in
+/// [`WorkerPool::run`], which keeps the caller's borrow alive for the
+/// whole window.
+#[derive(Clone, Copy)]
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is Sync (shared calls are safe) and `run` barriers
+// before the underlying borrow ends.
+unsafe impl Send for TaskPtr {}
+
+struct PoolState {
+    /// bumped once per dispatch; workers use it to detect new work
+    epoch: u64,
+    task: Option<TaskPtr>,
+    n_units: usize,
+    /// workers still executing the current epoch
+    running: usize,
+    /// a worker's task panicked this epoch
+    panicked: bool,
+    stop: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    go: Condvar,
+    done: Condvar,
+}
+
+/// A fixed-size pool of parked worker threads executing unit-indexed
+/// tasks; see the module docs for the determinism contract.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Build a pool that executes tasks on `threads` threads total:
+    /// `threads - 1` parked workers plus the calling thread.  `threads
+    /// <= 1` spawns nothing and [`run`](Self::run) executes inline.
+    pub fn new(threads: usize) -> Result<WorkerPool> {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                task: None,
+                n_units: 0,
+                running: 0,
+                panicked: false,
+                stop: false,
+            }),
+            go: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let n_extra = threads.max(1) - 1;
+        let stride = n_extra + 1;
+        let mut workers = Vec::with_capacity(n_extra);
+        for wid in 1..=n_extra {
+            let sh = shared.clone();
+            workers.push(
+                thread::Builder::new()
+                    .name(format!("gemm{wid}"))
+                    .spawn(move || worker_loop(&sh, wid, stride))
+                    .context("spawning gemm pool worker")?,
+            );
+        }
+        Ok(WorkerPool { shared, workers })
+    }
+
+    /// Total threads participating in a dispatch (workers + caller).
+    pub fn threads(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// Execute `task(u)` for every `u` in `0..n_units`, split across
+    /// the pool with a fixed stride partition (thread `t` of `T` runs
+    /// units `t, t+T, t+2T, …`).  Blocks until every unit completes.
+    ///
+    /// Each unit runs exactly once, on exactly one thread.  `task` must
+    /// confine its writes to per-unit disjoint state (see
+    /// [`DisjointSlices`]); reads of shared state are unrestricted.
+    /// Panics in `task` are propagated to the caller after the barrier,
+    /// leaving the pool reusable.  Takes `&mut self`: the epoch/barrier
+    /// protocol supports one dispatch at a time, so concurrent `run`
+    /// calls are rejected at compile time.
+    pub fn run(&mut self, n_units: usize, task: &(dyn Fn(usize) + Sync)) {
+        let stride = self.workers.len() + 1;
+        if stride == 1 || n_units <= 1 {
+            for u in 0..n_units {
+                task(u);
+            }
+            return;
+        }
+        // Erase the borrow's lifetime: the barrier below outlives every
+        // worker dereference, so the pointee stays valid throughout.
+        let ptr = TaskPtr(unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) + Sync),
+                &'static (dyn Fn(usize) + Sync),
+            >(task)
+        });
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert_eq!(st.running, 0, "pool dispatched re-entrantly");
+            st.epoch = st.epoch.wrapping_add(1);
+            st.task = Some(ptr);
+            st.n_units = n_units;
+            st.running = self.workers.len();
+            self.shared.go.notify_all();
+        }
+        // the caller is thread 0 of the partition
+        let caller = catch_unwind(AssertUnwindSafe(|| {
+            let mut u = 0;
+            while u < n_units {
+                task(u);
+                u += stride;
+            }
+        }));
+        let mut st = self.shared.state.lock().unwrap();
+        while st.running > 0 {
+            st = self.shared.done.wait(st).unwrap();
+        }
+        st.task = None;
+        let worker_panicked = std::mem::replace(&mut st.panicked, false);
+        drop(st);
+        if let Err(p) = caller {
+            std::panic::resume_unwind(p);
+        }
+        if worker_panicked {
+            panic!("worker pool task panicked");
+        }
+    }
+
+    /// [`run`](Self::run), but executed inline on the caller when the
+    /// estimated work (`est_macs`, multiply-accumulates) is too small
+    /// to amortize a dispatch wakeup.  `threshold` is the cutoff in
+    /// MACs; results are bit-identical either way.
+    pub fn run_if_worth(
+        &mut self,
+        n_units: usize,
+        est_macs: usize,
+        threshold: usize,
+        task: &(dyn Fn(usize) + Sync),
+    ) {
+        if est_macs < threshold {
+            for u in 0..n_units {
+                task(u);
+            }
+        } else {
+            self.run(n_units, task);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.stop = true;
+            self.shared.go.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(sh: &Shared, wid: usize, stride: usize) {
+    let mut seen = 0u64;
+    loop {
+        let (ptr, n_units) = {
+            let mut st = sh.state.lock().unwrap();
+            while !st.stop && st.epoch == seen {
+                st = sh.go.wait(st).unwrap();
+            }
+            if st.stop {
+                return;
+            }
+            seen = st.epoch;
+            let ptr = st.task.expect("task set when epoch advances");
+            (ptr, st.n_units)
+        };
+        // SAFETY: the dispatching `run` call blocks on the completion
+        // barrier until we decrement `running`, so the closure behind
+        // `ptr` is alive for the whole execution window.
+        let task = unsafe { &*ptr.0 };
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let mut u = wid;
+            while u < n_units {
+                task(u);
+                u += stride;
+            }
+        }));
+        let mut st = sh.state.lock().unwrap();
+        if r.is_err() {
+            st.panicked = true;
+        }
+        st.running -= 1;
+        if st.running == 0 {
+            sh.done.notify_all();
+        }
+    }
+}
+
+/// Shared view of one `&mut [f32]` that pool tasks carve per-unit
+/// mutable sub-slices out of.
+///
+/// The borrow checker cannot prove units write disjoint ranges, so the
+/// proof obligation moves to the caller: every [`slice`](Self::slice)
+/// range handed to concurrently running units MUST be disjoint.  All
+/// uses in this crate derive ranges from the unit index over
+/// non-overlapping row/column blocks.
+pub struct DisjointSlices<'a> {
+    ptr: *mut f32,
+    len: usize,
+    _borrow: std::marker::PhantomData<&'a mut [f32]>,
+}
+
+// SAFETY: access is only through `unsafe fn slice`, whose contract
+// (disjoint ranges across threads) makes concurrent use sound.
+unsafe impl Send for DisjointSlices<'_> {}
+unsafe impl Sync for DisjointSlices<'_> {}
+
+impl<'a> DisjointSlices<'a> {
+    /// Wrap a buffer for per-unit sub-slicing.
+    pub fn new(buf: &'a mut [f32]) -> Self {
+        DisjointSlices {
+            ptr: buf.as_mut_ptr(),
+            len: buf.len(),
+            _borrow: std::marker::PhantomData,
+        }
+    }
+
+    /// Mutable view of `[start, start + len)`.
+    ///
+    /// # Safety
+    /// Ranges taken by distinct units that may run concurrently must
+    /// not overlap, and a unit must not hold two overlapping slices.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [f32] {
+        assert!(
+            start.checked_add(len).is_some_and(|end| end <= self.len),
+            "disjoint slice [{start}, {start}+{len}) out of bounds ({})",
+            self.len
+        );
+        std::slice::from_raw_parts_mut(self.ptr.add(start), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_unit_exactly_once() {
+        for threads in [1usize, 2, 4] {
+            let mut pool = WorkerPool::new(threads).unwrap();
+            for n_units in [0usize, 1, 3, 17, 64] {
+                let hits: Vec<AtomicUsize> =
+                    (0..n_units).map(|_| AtomicUsize::new(0)).collect();
+                pool.run(n_units, &|u| {
+                    hits[u].fetch_add(1, Ordering::SeqCst);
+                });
+                for (u, h) in hits.iter().enumerate() {
+                    assert_eq!(h.load(Ordering::SeqCst), 1,
+                               "unit {u} at threads={threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_reusable_across_dispatches() {
+        let mut pool = WorkerPool::new(3).unwrap();
+        let total = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(8, &|u| {
+                total.fetch_add(u + 1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 50 * 36);
+    }
+
+    #[test]
+    fn disjoint_writes_land_in_place() {
+        let mut pool = WorkerPool::new(4).unwrap();
+        let mut buf = vec![0.0f32; 1024];
+        {
+            let out = DisjointSlices::new(&mut buf);
+            pool.run(16, &|u| {
+                let s = unsafe { out.slice(u * 64, 64) };
+                for (i, v) in s.iter_mut().enumerate() {
+                    *v = (u * 64 + i) as f32;
+                }
+            });
+        }
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let mut pool = WorkerPool::new(2).unwrap();
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|u| {
+                if u == 5 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must reach the caller");
+        // the pool keeps working afterwards
+        let n = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn run_if_worth_inlines_small_jobs() {
+        let mut pool = WorkerPool::new(2).unwrap();
+        let n = AtomicUsize::new(0);
+        pool.run_if_worth(4, 10, 1000, &|_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        pool.run_if_worth(4, 10_000, 1000, &|_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn auto_threads_divides_by_world() {
+        assert_eq!(auto_threads(3, 1), 3);
+        assert_eq!(auto_threads(0, usize::MAX), 1); // never 0
+        assert!(auto_threads(0, 1) >= 1);
+        assert_eq!(auto_threads(1000, 1), 64); // clamped
+    }
+}

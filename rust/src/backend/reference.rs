@@ -9,6 +9,30 @@
 //! worker drives it through [`ExecBackend`] and moves its partial sums
 //! through the ccl allreduce exactly as it does for the XLA backend.
 //!
+//! # Kernels: scalar baseline vs blocked + threaded (DESIGN.md §10)
+//!
+//! Two interchangeable kernel implementations exist behind
+//! [`GemmKernel`]:
+//!
+//! * `scalar` — the naive row-at-a-time loops: every activation row
+//!   re-streams the full weight matrices.  Kept as the recorded
+//!   perf baseline (`BENCH_*.json`) and as the reference the threaded
+//!   path is bit-compared against.
+//! * `blocked` (default) — cache-blocked GEMMs that process ALL rows of
+//!   a step per weight pass (each weight matrix is streamed once per
+//!   *step*, not once per *row* — the big win for batched decode and
+//!   prefill), tiled over `ROW_TILE`×`COL_BLOCK` output tiles, and
+//!   fanned out over a per-rank [`WorkerPool`] (`EngineConfig::threads`,
+//!   0 = auto-detect cores/world).
+//!
+//! The two kernels are **bit-identical by construction**: every output
+//! element is produced by the same single-accumulator, ascending-`k`
+//! chain of f32 ops in both; blocking/tiling only reorders *independent*
+//! elements, and the pool's fixed output-block partitioning only
+//! changes which thread computes an element, never how.  Greedy decode
+//! therefore does not depend on the kernel choice or the thread count —
+//! the invariant `rust/tests/threading_determinism.rs` pins.
+//!
 //! # World-invariant determinism
 //!
 //! The hermetic tier's headline assertion is that greedy decodes are
@@ -35,9 +59,11 @@
 
 use anyhow::{bail, ensure, Result};
 
-use crate::config::{EngineConfig, ModelPreset, Variant, WeightSource};
+use crate::config::{EngineConfig, GemmKernel, ModelPreset, Variant,
+                    WeightSource};
 use crate::model::{synth_shard, tensor_seed};
 
+use super::pool::{auto_threads, DisjointSlices, WorkerPool};
 use super::{ExecBackend, StepCtx};
 
 /// Fixed reduction granularity of the row-parallel matmuls: the full
@@ -57,8 +83,246 @@ fn quantize_partial(v: f32) -> f32 {
     (v.clamp(-LIM, LIM) * STEP).round() / STEP
 }
 
-/// Reusable per-rank scratch buffers: the inner loops run per row ×
-/// layer × step, so none of them may heap-allocate.
+/// Output-column block width of the blocked kernels.  A pool unit owns
+/// one block; the width is FIXED (never derived from the thread count)
+/// so the unit grid — and with it every float op — is identical at any
+/// parallelism.
+const COL_BLOCK: usize = 64;
+
+/// Row-tile height of the blocked kernels: output tiles of
+/// `ROW_TILE × COL_BLOCK` accumulators stay register/L1-resident while
+/// a weight column block streams through.
+const ROW_TILE: usize = 16;
+
+/// Below this many multiply-accumulates a phase runs inline on the
+/// caller instead of waking the pool (a dispatch costs ~10 µs).
+const PAR_THRESHOLD_MACS: usize = 1 << 17;
+
+// ---- shared math helpers (both kernels) --------------------------------
+//
+// All contractions iterate the contraction index ascending with a
+// single accumulator per output element, so the same absolute output
+// is computed with the identical op sequence at every world size, on
+// either kernel, at any thread count.
+
+fn rmsnorm_into(x: &[f32], gain: &[f32], eps: f32, out: &mut [f32]) {
+    let h = gain.len();
+    let mut ss = 0.0f32;
+    for &v in &x[..h] {
+        ss += v * v;
+    }
+    let inv = 1.0 / (ss / h as f32 + eps).sqrt();
+    for j in 0..h {
+        out[j] = x[j] * inv * gain[j];
+    }
+}
+
+/// NeoX-style rotary embedding over one head's `[hd]` slice.
+fn rope_head(v: &mut [f32], rope_inv: &[f32], pos: i32) {
+    let half = v.len() / 2;
+    for i in 0..half {
+        let ang = pos as f32 * rope_inv[i];
+        let (s, c) = ang.sin_cos();
+        let a = v[i];
+        let b = v[half + i];
+        v[i] = a * c - b * s;
+        v[half + i] = b * c + a * s;
+    }
+}
+
+/// Softmax-weighted value sum over cache entries `[0, scores.len())`
+/// at `base` for one query head; writes `hd` floats into `out`.
+fn attend_into(kc: &[f32], vc: &[f32], base: usize, hd: usize, q: &[f32],
+               scores: &mut [f32], out: &mut [f32]) {
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut m = f32::NEG_INFINITY;
+    for (t, s) in scores.iter_mut().enumerate() {
+        let krow = &kc[base + t * hd..base + (t + 1) * hd];
+        let mut dot = 0.0f32;
+        for (qa, kb) in q[..hd].iter().zip(krow) {
+            dot += qa * kb;
+        }
+        *s = dot * scale;
+        m = m.max(*s);
+    }
+    let mut denom = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - m).exp();
+        denom += *s;
+    }
+    let inv = 1.0 / denom.max(1e-20);
+    out[..hd].fill(0.0);
+    for (t, &p) in scores.iter().enumerate() {
+        let w = p * inv;
+        let vrow = &vc[base + t * hd..base + (t + 1) * hd];
+        for (o, &vb) in out[..hd].iter_mut().zip(vrow) {
+            *o += w * vb;
+        }
+    }
+}
+
+// ---- blocked kernels ---------------------------------------------------
+
+fn col_blocks(cols: usize) -> usize {
+    (cols + COL_BLOCK - 1) / COL_BLOCK
+}
+
+fn block_range(b: usize, cols: usize) -> (usize, usize) {
+    let j0 = b * COL_BLOCK;
+    (j0, (j0 + COL_BLOCK).min(cols))
+}
+
+/// Columns `[j0, j1)` of `xn[rows, kdim] @ w[kdim, cols]` for every
+/// row, OVERWRITING `out[r·out_stride + j]`.  Row-fused: the column
+/// block of `w` is streamed once for all rows.  Bit-compatible with
+/// [`col_matmul`]: each output element is one ascending-`k` chain.
+#[allow(clippy::too_many_arguments)]
+fn colpar_block(xn: &[f32], kdim: usize, rows: usize, w: &[f32],
+                cols: usize, j0: usize, j1: usize,
+                out: &DisjointSlices<'_>, out_stride: usize) {
+    let bw = j1 - j0;
+    let mut r0 = 0;
+    while r0 < rows {
+        let rt = ROW_TILE.min(rows - r0);
+        let mut tile = [0.0f32; ROW_TILE * COL_BLOCK];
+        for k in 0..kdim {
+            let wrow = &w[k * cols + j0..k * cols + j1];
+            for ri in 0..rt {
+                let xk = xn[(r0 + ri) * kdim + k];
+                let t = &mut tile[ri * bw..ri * bw + bw];
+                for (tj, &wj) in t.iter_mut().zip(wrow) {
+                    *tj += xk * wj;
+                }
+            }
+        }
+        for ri in 0..rt {
+            // SAFETY: this unit owns columns [j0, j1) of every row;
+            // other units write disjoint column ranges.
+            let dst = unsafe {
+                out.slice((r0 + ri) * out_stride + j0, bw)
+            };
+            dst.copy_from_slice(&tile[ri * bw..ri * bw + bw]);
+        }
+        r0 += rt;
+    }
+}
+
+/// Columns `[j0, j1)` of the fused FFN gate: `silu(xn@wg) ⊙ (xn@wu)`,
+/// overwriting `out[r·cols + j]`.  Same per-element chains as running
+/// [`col_matmul`] for `wg` and `wu` separately, then fusing.
+#[allow(clippy::too_many_arguments)]
+fn gateup_block(xn: &[f32], kdim: usize, rows: usize, wg: &[f32],
+                wu: &[f32], cols: usize, j0: usize, j1: usize,
+                out: &DisjointSlices<'_>) {
+    let bw = j1 - j0;
+    let mut r0 = 0;
+    while r0 < rows {
+        let rt = ROW_TILE.min(rows - r0);
+        let mut gt = [0.0f32; ROW_TILE * COL_BLOCK];
+        let mut ut = [0.0f32; ROW_TILE * COL_BLOCK];
+        for k in 0..kdim {
+            let grow = &wg[k * cols + j0..k * cols + j1];
+            let urow = &wu[k * cols + j0..k * cols + j1];
+            for ri in 0..rt {
+                let xk = xn[(r0 + ri) * kdim + k];
+                let t = &mut gt[ri * bw..ri * bw + bw];
+                for (tj, &wj) in t.iter_mut().zip(grow) {
+                    *tj += xk * wj;
+                }
+                let t = &mut ut[ri * bw..ri * bw + bw];
+                for (tj, &wj) in t.iter_mut().zip(urow) {
+                    *tj += xk * wj;
+                }
+            }
+        }
+        for ri in 0..rt {
+            // SAFETY: disjoint column ranges per unit (see colpar_block)
+            let dst = unsafe { out.slice((r0 + ri) * cols + j0, bw) };
+            for jj in 0..bw {
+                let g = gt[ri * bw + jj];
+                let u = ut[ri * bw + jj];
+                let sig = g / (1.0 + (-g).exp()); // SiLU
+                dst[jj] = sig * u;
+            }
+        }
+        r0 += rt;
+    }
+}
+
+/// Columns `[j0, j1)` of the row-parallel `act[rows, k_local] @
+/// w[k_local, h]` under the fixed [`REDUCE_CHUNKS`] grid (`cs` =
+/// world-invariant chunk width), ADDING the quantized partial into
+/// `out[r·h + j]`.  Bit-compatible with [`rowpar_scalar`]: identical
+/// per-chunk chains, and quantized partials sum exactly in any order.
+#[allow(clippy::too_many_arguments)]
+fn rowpar_block(act: &[f32], k_local: usize, rows: usize, w: &[f32],
+                h: usize, cs: usize, j0: usize, j1: usize,
+                out: &DisjointSlices<'_>) {
+    let bw = j1 - j0;
+    let n_chunks = k_local / cs;
+    let mut r0 = 0;
+    while r0 < rows {
+        let rt = ROW_TILE.min(rows - r0);
+        let mut acc = [0.0f32; ROW_TILE * COL_BLOCK];
+        for c in 0..n_chunks {
+            let mut part = [0.0f32; ROW_TILE * COL_BLOCK];
+            for k in c * cs..(c + 1) * cs {
+                let wrow = &w[k * h + j0..k * h + j1];
+                for ri in 0..rt {
+                    let ak = act[(r0 + ri) * k_local + k];
+                    let t = &mut part[ri * bw..ri * bw + bw];
+                    for (tj, &wj) in t.iter_mut().zip(wrow) {
+                        *tj += ak * wj;
+                    }
+                }
+            }
+            for (a, &p) in
+                acc[..rt * bw].iter_mut().zip(&part[..rt * bw])
+            {
+                *a += quantize_partial(p);
+            }
+        }
+        for ri in 0..rt {
+            // SAFETY: disjoint column ranges per unit (see colpar_block)
+            let dst = unsafe { out.slice((r0 + ri) * h + j0, bw) };
+            for (d, &a) in
+                dst.iter_mut().zip(&acc[ri * bw..ri * bw + bw])
+            {
+                *d += a;
+            }
+        }
+        r0 += rt;
+    }
+}
+
+// ---- scalar kernels (the recorded baseline) ----------------------------
+
+/// Row-parallel matmul with the fixed chunk grid, one row at a time:
+/// adds this rank's quantized partial into `out[..h]`.  `k_full` is
+/// the FULL contraction width; `a`/`w` cover this rank's contiguous
+/// `k_local` slice of it.  `tmp` is caller-provided scratch.
+fn rowpar_scalar(a: &[f32], w: &[f32], k_local: usize, k_full: usize,
+                 h: usize, tmp: &mut Vec<f32>, out: &mut [f32]) {
+    let cs = k_full / REDUCE_CHUNKS;
+    debug_assert_eq!(k_local % cs, 0);
+    tmp.resize(h, 0.0);
+    for c in 0..k_local / cs {
+        tmp.fill(0.0);
+        for k in c * cs..(c + 1) * cs {
+            let ak = a[k];
+            let row = &w[k * h..(k + 1) * h];
+            for (t, &wkj) in tmp[..h].iter_mut().zip(row) {
+                *t += ak * wkj;
+            }
+        }
+        for (o, &t) in out[..h].iter_mut().zip(&tmp[..h]) {
+            *o += quantize_partial(t);
+        }
+    }
+}
+
+/// Reusable per-rank scratch buffers of the scalar kernel: its inner
+/// loops run per row × layer × step, so none of them heap-allocate.
 #[derive(Default)]
 struct Scratch {
     h_n: Vec<f32>,    // [h] normed row
@@ -71,6 +335,20 @@ struct Scratch {
     scores: Vec<f32>, // [≤ max_seq] attention scores
     g: Vec<f32>,      // [f_l] gate activations
     u: Vec<f32>,      // [f_l] up activations
+}
+
+/// Reusable scratch of the blocked kernel — whole-step activations,
+/// sized `[rows, dim]` so phases can fan rows/columns out over the
+/// pool with per-unit disjoint writes.
+#[derive(Default)]
+struct BlockScratch {
+    h_n: Vec<f32>,    // [rows, h] normed inputs
+    q: Vec<f32>,      // [rows, qd_l]
+    k: Vec<f32>,      // [rows, kvd_l]
+    v: Vec<f32>,      // [rows, kvd_l]
+    ctxv: Vec<f32>,   // [rows, qd_l] attention context
+    act: Vec<f32>,    // [rows, f_l] fused silu(g)·u
+    scores: Vec<f32>, // [rows, max_seq] attention scores
 }
 
 struct LayerWeights {
@@ -90,6 +368,7 @@ pub struct ReferenceBackend {
     batch: usize,
     preset: ModelPreset,
     variant: Variant,
+    kernel: GemmKernel,
     // local shard dims
     n_heads_l: usize,
     n_kv_heads_l: usize,
@@ -105,6 +384,9 @@ pub struct ReferenceBackend {
     /// precomputed NeoX RoPE inverse frequencies, [hd/2]
     rope_inv: Vec<f32>,
     scratch: Scratch,
+    blk: BlockScratch,
+    pool: WorkerPool,
+    par_threshold: usize,
 }
 
 impl ReferenceBackend {
@@ -180,9 +462,18 @@ impl ReferenceBackend {
             })
             .collect();
 
+        // the scalar baseline is single-threaded by definition; the
+        // blocked kernel fans out over the configured/auto pool
+        let threads = match cfg.kernel {
+            GemmKernel::Scalar => 1,
+            GemmKernel::Blocked => auto_threads(cfg.threads, world),
+        };
+        let pool = WorkerPool::new(threads)?;
+
         Ok(ReferenceBackend {
             batch: cfg.batch,
             variant: cfg.variant,
+            kernel: cfg.kernel,
             n_heads_l,
             n_kv_heads_l,
             ffn_l,
@@ -194,28 +485,26 @@ impl ReferenceBackend {
             caches,
             rope_inv,
             scratch: Scratch::default(),
+            blk: BlockScratch::default(),
+            pool,
+            par_threshold: PAR_THRESHOLD_MACS,
             preset,
         })
     }
 
-    // ---- math helpers ----------------------------------------------------
-    //
-    // All contractions iterate the contraction index ascending, so the
-    // same absolute column is computed with the identical op sequence
-    // at every world size.
-
-    fn rmsnorm(&self, x: &[f32], gain: &[f32], out: &mut [f32]) {
-        let h = self.preset.hidden;
-        let eps = self.preset.norm_eps as f32;
-        let mut ss = 0.0f32;
-        for &v in &x[..h] {
-            ss += v * v;
-        }
-        let inv = 1.0 / (ss / h as f32 + eps).sqrt();
-        for j in 0..h {
-            out[j] = x[j] * inv * gain[j];
-        }
+    /// Threads the blocked kernel fans out over (1 for `scalar`).
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
     }
+
+    /// Test hook: lower the inline-vs-pool cutoff so small models
+    /// exercise the threaded code paths.  Not part of the public API.
+    #[doc(hidden)]
+    pub fn set_par_threshold(&mut self, macs: usize) {
+        self.par_threshold = macs;
+    }
+
+    // ---- scalar kernel path --------------------------------------------
 
     /// Column-parallel matmul: `out[j] += Σ_k a[k]·w[k, j]` over the
     /// full (replicated) contraction axis.  `out` must be zeroed.
@@ -224,89 +513,6 @@ impl ReferenceBackend {
             let row = &w[k * cols..(k + 1) * cols];
             for (o, &wkj) in out[..cols].iter_mut().zip(row) {
                 *o += ak * wkj;
-            }
-        }
-    }
-
-    /// Row-parallel matmul with the fixed chunk grid: adds this rank's
-    /// quantized partial `Σ_chunks q(a[chunk] @ w[chunk, :])` into
-    /// `out[..h]`.  `k_full` is the FULL contraction width; `a`/`w`
-    /// cover this rank's contiguous `k_local` slice of it.  `tmp` is
-    /// caller-provided scratch (hot path — no allocation here).
-    fn rowpar_matmul(&self, a: &[f32], w: &[f32], k_local: usize,
-                     k_full: usize, tmp: &mut Vec<f32>, out: &mut [f32]) {
-        let h = self.preset.hidden;
-        let cs = k_full / REDUCE_CHUNKS;
-        debug_assert_eq!(k_local % cs, 0);
-        tmp.resize(h, 0.0);
-        for c in 0..k_local / cs {
-            tmp.fill(0.0);
-            for k in c * cs..(c + 1) * cs {
-                let ak = a[k];
-                let row = &w[k * h..(k + 1) * h];
-                for (t, &wkj) in tmp[..h].iter_mut().zip(row) {
-                    *t += ak * wkj;
-                }
-            }
-            for (o, &t) in out[..h].iter_mut().zip(&tmp[..h]) {
-                *o += quantize_partial(t);
-            }
-        }
-    }
-
-    /// NeoX-style rotary embedding in place over `[n_heads, hd]` rows.
-    fn rope(&self, v: &mut [f32], n_heads: usize, pos: i32) {
-        let hd = self.preset.head_dim;
-        let half = hd / 2;
-        for head in 0..n_heads {
-            let base = head * hd;
-            for i in 0..half {
-                let ang = pos as f32 * self.rope_inv[i];
-                let (s, c) = ang.sin_cos();
-                let a = v[base + i];
-                let b = v[base + half + i];
-                v[base + i] = a * c - b * s;
-                v[base + half + i] = b * c + a * s;
-            }
-        }
-    }
-
-    /// Softmax-weighted value sum over cache entries `[0, hi)` of
-    /// `(lane, kv_head)` for one query head; writes `hd` floats.
-    /// `scores` is caller-provided scratch.
-    #[allow(clippy::too_many_arguments)]
-    fn attend_cache(&self, li: usize, lane: usize, kh: usize, q: &[f32],
-                    hi: usize, scores: &mut Vec<f32>, out: &mut [f32]) {
-        let hd = self.preset.head_dim;
-        let t_max = self.preset.max_seq;
-        let scale = 1.0 / (hd as f32).sqrt();
-        let (kc, vc) = &self.caches[li];
-        let base = (lane * self.n_kv_heads_l + kh) * t_max * hd;
-
-        scores.clear();
-        scores.resize(hi, 0.0);
-        let mut m = f32::NEG_INFINITY;
-        for (t, s) in scores.iter_mut().enumerate() {
-            let krow = &kc[base + t * hd..base + (t + 1) * hd];
-            let mut dot = 0.0f32;
-            for (qa, kb) in q[..hd].iter().zip(krow) {
-                dot += qa * kb;
-            }
-            *s = dot * scale;
-            m = m.max(*s);
-        }
-        let mut denom = 0.0f32;
-        for s in scores.iter_mut() {
-            *s = (*s - m).exp();
-            denom += *s;
-        }
-        let inv = 1.0 / denom.max(1e-20);
-        out[..hd].fill(0.0);
-        for (t, &p) in scores.iter().enumerate() {
-            let w = p * inv;
-            let vrow = &vc[base + t * hd..base + (t + 1) * hd];
-            for (o, &vb) in out[..hd].iter_mut().zip(vrow) {
-                *o += w * vb;
             }
         }
     }
@@ -335,8 +541,14 @@ impl ReferenceBackend {
             Self::col_matmul(&s.h_n, &lw.wk, kvd_l, &mut s.k);
             Self::col_matmul(&s.h_n, &lw.wv, kvd_l, &mut s.v);
         }
-        self.rope(&mut s.q, self.n_heads_l, pos);
-        self.rope(&mut s.k, self.n_kv_heads_l, pos);
+        for qh in 0..self.n_heads_l {
+            rope_head(&mut s.q[qh * hd..(qh + 1) * hd], &self.rope_inv,
+                      pos);
+        }
+        for kh in 0..self.n_kv_heads_l {
+            rope_head(&mut s.k[kh * hd..(kh + 1) * hd], &self.rope_inv,
+                      pos);
+        }
 
         {
             let (kc, vc) = &mut self.caches[li];
@@ -356,13 +568,18 @@ impl ReferenceBackend {
         s.head.resize(hd, 0.0);
         for qh in 0..self.n_heads_l {
             let kh = qh / group;
-            self.attend_cache(li, lane, kh, &s.q[qh * hd..(qh + 1) * hd],
-                              attend_hi, &mut s.scores, &mut s.head);
+            let (kc, vc) = &self.caches[li];
+            let base = (lane * self.n_kv_heads_l + kh) * t_max * hd;
+            s.scores.clear();
+            s.scores.resize(attend_hi, 0.0);
+            attend_into(kc, vc, base, hd,
+                        &s.q[qh * hd..(qh + 1) * hd], &mut s.scores,
+                        &mut s.head);
             s.ctxv[qh * hd..(qh + 1) * hd].copy_from_slice(&s.head[..hd]);
         }
         let qd_full = self.preset.n_heads * hd;
-        self.rowpar_matmul(&s.ctxv, &self.layers[li].wo, qd_l, qd_full,
-                           &mut s.tmp, out);
+        rowpar_scalar(&s.ctxv, &self.layers[li].wo, qd_l, qd_full,
+                      self.preset.hidden, &mut s.tmp, out);
     }
 
     /// FFN partial for one normed row (`s.h_n`): adds the quantized
@@ -380,8 +597,249 @@ impl ReferenceBackend {
             let sig = *gi / (1.0 + (-*gi).exp()); // SiLU
             *gi = sig * ui;
         }
-        self.rowpar_matmul(&s.g, &lw.wd, f_l, self.preset.ffn, &mut s.tmp,
-                           out);
+        rowpar_scalar(&s.g, &lw.wd, f_l, self.preset.ffn,
+                      self.preset.hidden, &mut s.tmp, out);
+    }
+
+    /// The scalar layer body: one row at a time through norm →
+    /// attention → FFN, exactly the pre-blocking loop structure.
+    fn layer_scalar(&mut self, ctx: &StepCtx, li: usize, seg: usize,
+                    rows: usize, x: &[f32], partial: &mut [f32]) {
+        let h = self.preset.hidden;
+        let eps = self.preset.norm_eps as f32;
+        let mut s = std::mem::take(&mut self.scratch);
+        s.h_n.resize(h, 0.0);
+        for r in 0..rows {
+            let x_row = &x[r * h..(r + 1) * h];
+            let out = r * h..(r + 1) * h;
+            let (lane, pos, hi) = row_meta(ctx, r);
+            match (self.variant, seg) {
+                (Variant::Parallel, _) => {
+                    // fused block: ONE partial sum (the paper's §2.2);
+                    // attention and FFN share the ln1 norm, as in
+                    // python's build_parallel_block_*
+                    rmsnorm_into(x_row, &self.layers[li].ln1_g, eps,
+                                 &mut s.h_n);
+                    self.attn_row(li, lane, pos, hi, &mut s,
+                                  &mut partial[out.clone()]);
+                    self.ffn_row(li, &mut s, &mut partial[out]);
+                }
+                (Variant::Serial, 0) => {
+                    rmsnorm_into(x_row, &self.layers[li].ln1_g, eps,
+                                 &mut s.h_n);
+                    self.attn_row(li, lane, pos, hi, &mut s,
+                                  &mut partial[out]);
+                }
+                (Variant::Serial, _) => {
+                    rmsnorm_into(x_row, &self.layers[li].ln2_g, eps,
+                                 &mut s.h_n);
+                    self.ffn_row(li, &mut s, &mut partial[out]);
+                }
+            }
+        }
+        self.scratch = s;
+    }
+
+    // ---- blocked kernel path -------------------------------------------
+
+    /// The blocked layer body: whole-step phases (norm → q/k/v GEMM →
+    /// rope/KV → attention → wo ‖ gate/up → wd), each fanned out over
+    /// the pool with fixed output-block units.  Bit-identical to
+    /// [`Self::layer_scalar`] — see the module docs.
+    fn layer_blocked(&mut self, ctx: &StepCtx, li: usize, seg: usize,
+                     rows: usize, x: &[f32], partial: &mut [f32]) {
+        let h = self.preset.hidden;
+        let hd = self.preset.head_dim;
+        let (n_h, n_kv) = (self.n_heads_l, self.n_kv_heads_l);
+        let (qd_l, kvd_l) = (n_h * hd, n_kv * hd);
+        let group = n_h / n_kv;
+        let f_l = self.ffn_l;
+        let t_max = self.preset.max_seq;
+        let eps = self.preset.norm_eps as f32;
+        let qd_full = self.preset.n_heads * hd;
+        let ffn_full = self.preset.ffn;
+        let thr = self.par_threshold;
+        let variant = self.variant;
+        let attn_seg = variant == Variant::Parallel || seg == 0;
+        let ffn_seg = variant == Variant::Parallel || seg == 1;
+
+        let hi_max =
+            (0..rows).map(|r| row_meta(ctx, r).2).max().unwrap_or(1);
+
+        let ReferenceBackend { layers, caches, blk, pool, rope_inv, .. } =
+            self;
+        let lw = &layers[li];
+        let rope_inv = &rope_inv[..];
+
+        blk.h_n.resize(rows * h, 0.0);
+        blk.q.resize(rows * qd_l, 0.0);
+        blk.k.resize(rows * kvd_l, 0.0);
+        blk.v.resize(rows * kvd_l, 0.0);
+        blk.ctxv.resize(rows * qd_l, 0.0);
+        blk.act.resize(rows * f_l, 0.0);
+        blk.scores.resize(rows * t_max, 0.0);
+        let BlockScratch { h_n, q, k, v, ctxv, act, scores } = blk;
+
+        // Phase N: norm every row (ln1 for attention / fused blocks,
+        // ln2 for the serial FFN segment)
+        {
+            let gain =
+                if attn_seg { &lw.ln1_g[..] } else { &lw.ln2_g[..] };
+            let outs = DisjointSlices::new(&mut h_n[..rows * h]);
+            pool.run_if_worth(rows, rows * h * 2, thr, &|r| {
+                // SAFETY: one row per unit
+                let dst = unsafe { outs.slice(r * h, h) };
+                rmsnorm_into(&x[r * h..(r + 1) * h], gain, eps, dst);
+            });
+        }
+
+        if attn_seg {
+            let (kc, vc) = &mut caches[li];
+            // Phase P: q/k/v projections — each weight column block
+            // streams once for ALL rows
+            {
+                let nq = col_blocks(qd_l);
+                let nk = col_blocks(kvd_l);
+                let qs = DisjointSlices::new(&mut q[..rows * qd_l]);
+                let ks = DisjointSlices::new(&mut k[..rows * kvd_l]);
+                let vs = DisjointSlices::new(&mut v[..rows * kvd_l]);
+                let xn = &h_n[..rows * h];
+                let macs = rows * h * (qd_l + 2 * kvd_l);
+                pool.run_if_worth(nq + 2 * nk, macs, thr, &|u| {
+                    if u < nq {
+                        let (j0, j1) = block_range(u, qd_l);
+                        colpar_block(xn, h, rows, &lw.wq, qd_l, j0, j1,
+                                     &qs, qd_l);
+                    } else if u < nq + nk {
+                        let (j0, j1) = block_range(u - nq, kvd_l);
+                        colpar_block(xn, h, rows, &lw.wk, kvd_l, j0, j1,
+                                     &ks, kvd_l);
+                    } else {
+                        let (j0, j1) = block_range(u - nq - nk, kvd_l);
+                        colpar_block(xn, h, rows, &lw.wv, kvd_l, j0, j1,
+                                     &vs, kvd_l);
+                    }
+                });
+            }
+
+            // Phase R: rope q/k and append k/v to the cache, per row.
+            // Disjointness: decode rows are distinct lanes, prefill
+            // rows are distinct positions of one lane.
+            {
+                let qs = DisjointSlices::new(&mut q[..rows * qd_l]);
+                let ks = DisjointSlices::new(&mut k[..rows * kvd_l]);
+                let vr = &v[..rows * kvd_l];
+                let kcs = DisjointSlices::new(&mut kc[..]);
+                let vcs = DisjointSlices::new(&mut vc[..]);
+                let macs = rows * (qd_l + 2 * kvd_l);
+                pool.run_if_worth(rows, macs, thr, &|r| {
+                    let (lane, pos, _hi) = row_meta(ctx, r);
+                    // SAFETY: one row per unit; cache destinations are
+                    // per-(lane,pos) and unique per row
+                    let qrow = unsafe { qs.slice(r * qd_l, qd_l) };
+                    for qh in 0..n_h {
+                        rope_head(&mut qrow[qh * hd..(qh + 1) * hd],
+                                  rope_inv, pos);
+                    }
+                    let krow = unsafe { ks.slice(r * kvd_l, kvd_l) };
+                    for kh in 0..n_kv {
+                        rope_head(&mut krow[kh * hd..(kh + 1) * hd],
+                                  rope_inv, pos);
+                        let dst = ((lane * n_kv + kh) * t_max
+                            + pos as usize)
+                            * hd;
+                        unsafe { kcs.slice(dst, hd) }.copy_from_slice(
+                            &krow[kh * hd..(kh + 1) * hd]);
+                        unsafe { vcs.slice(dst, hd) }.copy_from_slice(
+                            &vr[r * kvd_l + kh * hd
+                                ..r * kvd_l + (kh + 1) * hd]);
+                    }
+                });
+            }
+
+            // Phase A: attention per row over the (fully written) cache
+            {
+                let ctxs = DisjointSlices::new(&mut ctxv[..rows * qd_l]);
+                let scs =
+                    DisjointSlices::new(&mut scores[..rows * t_max]);
+                let qr = &q[..rows * qd_l];
+                let kcr = &kc[..];
+                let vcr = &vc[..];
+                let macs = rows * n_h * hi_max * hd * 2;
+                pool.run_if_worth(rows, macs, thr, &|r| {
+                    let (lane, _pos, hi) = row_meta(ctx, r);
+                    // SAFETY: one row per unit
+                    let sc = unsafe { scs.slice(r * t_max, t_max) };
+                    let out = unsafe { ctxs.slice(r * qd_l, qd_l) };
+                    for qh in 0..n_h {
+                        let kh = qh / group;
+                        let base = (lane * n_kv + kh) * t_max * hd;
+                        attend_into(
+                            kcr, vcr, base, hd,
+                            &qr[r * qd_l + qh * hd
+                                ..r * qd_l + (qh + 1) * hd],
+                            &mut sc[..hi],
+                            &mut out[qh * hd..(qh + 1) * hd],
+                        );
+                    }
+                });
+            }
+
+            // Phase O: context @ wo row-parallel partial
+            {
+                let cs = qd_full / REDUCE_CHUNKS;
+                let outs =
+                    DisjointSlices::new(&mut partial[..rows * h]);
+                let cr = &ctxv[..rows * qd_l];
+                pool.run_if_worth(
+                    col_blocks(h), rows * qd_l * h, thr, &|u| {
+                        let (j0, j1) = block_range(u, h);
+                        rowpar_block(cr, qd_l, rows, &lw.wo, h, cs, j0,
+                                     j1, &outs);
+                    });
+            }
+        }
+
+        if ffn_seg {
+            // Phase G: fused gate/up GEMMs + SiLU
+            {
+                let acts = DisjointSlices::new(&mut act[..rows * f_l]);
+                let xn = &h_n[..rows * h];
+                pool.run_if_worth(
+                    col_blocks(f_l), rows * h * 2 * f_l, thr, &|u| {
+                        let (j0, j1) = block_range(u, f_l);
+                        gateup_block(xn, h, rows, &lw.wg, &lw.wu, f_l,
+                                     j0, j1, &acts);
+                    });
+            }
+            // Phase D: act @ wd row-parallel partial
+            {
+                let cs = ffn_full / REDUCE_CHUNKS;
+                let outs =
+                    DisjointSlices::new(&mut partial[..rows * h]);
+                let ar = &act[..rows * f_l];
+                pool.run_if_worth(
+                    col_blocks(h), rows * f_l * h, thr, &|u| {
+                        let (j0, j1) = block_range(u, h);
+                        rowpar_block(ar, f_l, rows, &lw.wd, h, cs, j0,
+                                     j1, &outs);
+                    });
+            }
+        }
+    }
+}
+
+/// Per-row `(lane, position, attend_hi)` for this step's KV update.
+fn row_meta(ctx: &StepCtx, r: usize) -> (usize, i32, usize) {
+    match ctx {
+        StepCtx::Prefill { lane, length, .. } => {
+            let hi = if r < *length { r + 1 } else { *length };
+            (*lane, r as i32, hi)
+        }
+        StepCtx::Decode { positions } => {
+            let pos = positions[r];
+            (r, pos, pos as usize + 1)
+        }
     }
 }
 
@@ -434,48 +892,14 @@ impl ExecBackend for ReferenceBackend {
             }
         }
         partial[..rows * h].fill(0.0);
-
-        let mut s = std::mem::take(&mut self.scratch);
-        s.h_n.resize(h, 0.0);
-        for r in 0..rows {
-            let x_row = &x[r * h..(r + 1) * h];
-            let out = r * h..(r + 1) * h;
-            // (lane, pos, attend_hi) for this row's KV update
-            let (lane, pos, hi) = match ctx {
-                StepCtx::Prefill { lane, length, .. } => {
-                    let hi = if r < *length { r + 1 } else { *length };
-                    (*lane, r as i32, hi)
-                }
-                StepCtx::Decode { positions } => {
-                    let pos = positions[r];
-                    (r, pos, pos as usize + 1)
-                }
-            };
-            match (self.variant, seg) {
-                (Variant::Parallel, _) => {
-                    // fused block: ONE partial sum (the paper's §2.2);
-                    // attention and FFN share the ln1 norm, as in
-                    // python's build_parallel_block_*
-                    self.rmsnorm(x_row, &self.layers[li].ln1_g,
-                                 &mut s.h_n);
-                    self.attn_row(li, lane, pos, hi, &mut s,
-                                  &mut partial[out.clone()]);
-                    self.ffn_row(li, &mut s, &mut partial[out]);
-                }
-                (Variant::Serial, 0) => {
-                    self.rmsnorm(x_row, &self.layers[li].ln1_g,
-                                 &mut s.h_n);
-                    self.attn_row(li, lane, pos, hi, &mut s,
-                                  &mut partial[out]);
-                }
-                (Variant::Serial, _) => {
-                    self.rmsnorm(x_row, &self.layers[li].ln2_g,
-                                 &mut s.h_n);
-                    self.ffn_row(li, &mut s, &mut partial[out]);
-                }
+        match self.kernel {
+            GemmKernel::Scalar => {
+                self.layer_scalar(ctx, li, seg, rows, x, partial)
+            }
+            GemmKernel::Blocked => {
+                self.layer_blocked(ctx, li, seg, rows, x, partial)
             }
         }
-        self.scratch = s;
         Ok(())
     }
 
@@ -483,18 +907,53 @@ impl ExecBackend for ReferenceBackend {
         let h = self.preset.hidden;
         let v_l = self.vocab_l;
         let b = self.batch;
+        let eps = self.preset.norm_eps as f32;
         ensure!(x.len() >= b * h && logits.len() >= b * v_l,
                 "lm_head buffers too small");
-        let mut s = std::mem::take(&mut self.scratch);
-        s.h_n.resize(h, 0.0);
-        for r in 0..b {
-            self.rmsnorm(&x[r * h..(r + 1) * h], &self.final_g,
-                         &mut s.h_n);
-            let out = &mut logits[r * v_l..(r + 1) * v_l];
-            out.fill(0.0);
-            Self::col_matmul(&s.h_n, &self.lm_head, v_l, out);
+        match self.kernel {
+            GemmKernel::Scalar => {
+                let mut s = std::mem::take(&mut self.scratch);
+                s.h_n.resize(h, 0.0);
+                for r in 0..b {
+                    rmsnorm_into(&x[r * h..(r + 1) * h], &self.final_g,
+                                 eps, &mut s.h_n);
+                    let out = &mut logits[r * v_l..(r + 1) * v_l];
+                    out.fill(0.0);
+                    Self::col_matmul(&s.h_n, &self.lm_head, v_l, out);
+                }
+                self.scratch = s;
+            }
+            GemmKernel::Blocked => {
+                let thr = self.par_threshold;
+                let ReferenceBackend {
+                    blk, pool, final_g, lm_head, ..
+                } = self;
+                blk.h_n.resize(b * h, 0.0);
+                let h_n = &mut blk.h_n;
+                let final_g = &final_g[..];
+                let lm_w = &lm_head[..];
+                {
+                    let outs = DisjointSlices::new(&mut h_n[..b * h]);
+                    pool.run_if_worth(b, b * h * 2, thr, &|r| {
+                        // SAFETY: one row per unit
+                        let dst = unsafe { outs.slice(r * h, h) };
+                        rmsnorm_into(&x[r * h..(r + 1) * h], final_g,
+                                     eps, dst);
+                    });
+                }
+                {
+                    let outs =
+                        DisjointSlices::new(&mut logits[..b * v_l]);
+                    let xn = &h_n[..b * h];
+                    pool.run_if_worth(
+                        col_blocks(v_l), b * h * v_l, thr, &|u| {
+                            let (j0, j1) = block_range(u, v_l);
+                            colpar_block(xn, h, b, lm_w, v_l, j0,
+                                         j1, &outs, v_l);
+                        });
+                }
+            }
         }
-        self.scratch = s;
         Ok(())
     }
 
@@ -621,5 +1080,108 @@ mod tests {
         let mut c = cfg(1, 1);
         c.model = "qwen72b".into();
         assert!(backend(&c, 0).is_err());
+    }
+
+    /// Run a prefill, two decode steps and an lm_head through one
+    /// backend, returning every partial and the logits — the bit
+    /// pattern the kernel/threading comparisons pin.
+    fn forward_fingerprint(c: &EngineConfig, force_pool: bool)
+                           -> Vec<Vec<f32>> {
+        let preset = ModelPreset::builtin(&c.model).unwrap();
+        let mut be = ReferenceBackend::new(c, 0, &preset).unwrap();
+        if force_pool {
+            be.set_par_threshold(0);
+        }
+        let h = preset.hidden;
+        let segs = c.variant.syncs_per_layer();
+        let mut out = Vec::new();
+
+        let tokens = [3i32, 9, 27, 81];
+        let ctx = StepCtx::Prefill { lane: 0, bucket: 8, length: 4 };
+        let mut x = vec![0.0f32; 8 * h];
+        be.embed(&ctx, &tokens, &mut x).unwrap();
+        for li in 0..preset.n_layers {
+            for seg in 0..segs {
+                let mut p = vec![0.0f32; 8 * h];
+                be.layer_partial(&ctx, li, seg, &x, &mut p).unwrap();
+                for (xi, pi) in x.iter_mut().zip(&p) {
+                    *xi += *pi;
+                }
+                out.push(p);
+            }
+        }
+        for step in 0..2i32 {
+            let positions = [4 + step];
+            let ctx = StepCtx::Decode { positions: &positions };
+            let mut xd = vec![0.0f32; h];
+            be.embed(&ctx, &[7 + step], &mut xd).unwrap();
+            for li in 0..preset.n_layers {
+                for seg in 0..segs {
+                    let mut p = vec![0.0f32; h];
+                    be.layer_partial(&ctx, li, seg, &xd, &mut p).unwrap();
+                    for (xi, pi) in xd.iter_mut().zip(&p) {
+                        *xi += *pi;
+                    }
+                    out.push(p);
+                }
+            }
+            let mut logits = vec![0.0f32; preset.vocab];
+            be.lm_head(&xd, &mut logits).unwrap();
+            out.push(logits);
+        }
+        out
+    }
+
+    fn assert_bits_eq(a: &[Vec<f32>], b: &[Vec<f32>], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: buffer counts");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.len(), y.len(), "{what}: buffer {i} len");
+            for (j, (xa, yb)) in x.iter().zip(y).enumerate() {
+                assert_eq!(xa.to_bits(), yb.to_bits(),
+                           "{what}: buffer {i} elem {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_kernel_bit_identical_to_scalar() {
+        for variant in [Variant::Parallel, Variant::Serial] {
+            let mut base = cfg(2, 1);
+            base.variant = variant;
+            base.kernel = GemmKernel::Scalar;
+            let golden = forward_fingerprint(&base, false);
+            let mut blocked = base.clone();
+            blocked.kernel = GemmKernel::Blocked;
+            blocked.threads = 1;
+            let got = forward_fingerprint(&blocked, false);
+            assert_bits_eq(&golden, &got,
+                           &format!("blocked vs scalar ({variant})"));
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_bits() {
+        let mut base = cfg(1, 1);
+        base.kernel = GemmKernel::Scalar;
+        let golden = forward_fingerprint(&base, false);
+        for threads in [1usize, 2, 4] {
+            let mut c = base.clone();
+            c.kernel = GemmKernel::Blocked;
+            c.threads = threads;
+            // par_threshold 0 forces every phase through the pool
+            let got = forward_fingerprint(&c, true);
+            assert_bits_eq(&golden, &got,
+                           &format!("threads={threads} vs scalar"));
+        }
+    }
+
+    #[test]
+    fn scalar_kernel_forces_one_thread() {
+        let mut c = cfg(1, 1);
+        c.kernel = GemmKernel::Scalar;
+        c.threads = 8;
+        let preset = ModelPreset::builtin(&c.model).unwrap();
+        let be = ReferenceBackend::new(&c, 0, &preset).unwrap();
+        assert_eq!(be.threads(), 1);
     }
 }

@@ -1,21 +1,55 @@
 //! Tiny benchmarking harness (criterion substitute — offline build).
 //!
-//! Provides warmup + timed iterations with mean/p50/p95 statistics and a
-//! uniform table/CSV output so every `rust/benches/*.rs` prints the rows
-//! the corresponding paper table/figure reports (DESIGN.md §6 maps bench
-//! → experiment).  `cargo bench` runs these binaries (harness = false).
+//! Provides warmup + timed iterations with mean/p50/p95 statistics, a
+//! uniform table/CSV output, and machine-readable JSON so every
+//! `rust/benches/*.rs` records the rows the corresponding paper
+//! table/figure reports (DESIGN.md §6 maps bench → experiment, §10 the
+//! recording workflow).  `cargo bench` runs these binaries
+//! (`harness = false`); passing `--json PATH` to any of them persists
+//! the tables for later diffing.
+//!
+//! The [`suite`] submodule is the serving-level counterpart: named
+//! scenarios driven through the full engine, recorded to the
+//! `BENCH_*.json` schema by `xeonserve bench`.
+//!
+//! # Example
+//!
+//! ```
+//! use xeonserve::benchkit;
+//!
+//! let mut calls = 0;
+//! let r = benchkit::measure("noop", /*warmup*/ 1, /*iters*/ 3, || {
+//!     calls += 1;
+//! });
+//! assert_eq!(calls, 4); // warmup + timed iterations
+//! assert_eq!(r.iters, 3);
+//! let json = r.to_json().to_string();
+//! assert!(json.contains("\"name\":\"noop\""));
+//! ```
 
+#![warn(missing_docs)]
+
+pub mod suite;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 use crate::metrics::LatencyStats;
+use crate::util::Json;
 
 /// Result of one measured case.
 #[derive(Clone, Debug)]
 pub struct CaseResult {
+    /// case label (one table row)
     pub name: String,
+    /// timed iterations contributing samples
     pub iters: usize,
+    /// mean latency per iteration, microseconds
     pub mean_us: f64,
+    /// nearest-rank median, microseconds
     pub p50_us: u64,
+    /// nearest-rank 95th percentile, microseconds
     pub p95_us: u64,
     /// free-form extra columns (bytes on wire, sim latency, ...)
     pub extra: Vec<(String, String)>,
@@ -70,6 +104,7 @@ where
 }
 
 impl CaseResult {
+    /// Attach an extra column (rendered in the table, CSV and JSON).
     pub fn with(mut self, key: &str, value: impl std::fmt::Display)
                 -> CaseResult {
         self.extra.push((key.to_string(), value.to_string()));
@@ -87,6 +122,23 @@ impl CaseResult {
             p95_us: stats.p95_us(),
             extra: Vec::new(),
         }
+    }
+
+    /// Serialize to a JSON object:
+    /// `{name, iters, mean_us, p50_us, p95_us, extra: {k: v}}`.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("name".into(), Json::Str(self.name.clone()));
+        o.insert("iters".into(), Json::Num(self.iters as f64));
+        o.insert("mean_us".into(), Json::Num(self.mean_us));
+        o.insert("p50_us".into(), Json::Num(self.p50_us as f64));
+        o.insert("p95_us".into(), Json::Num(self.p95_us as f64));
+        let mut extra = BTreeMap::new();
+        for (k, v) in &self.extra {
+            extra.insert(k.clone(), Json::Str(v.clone()));
+        }
+        o.insert("extra".into(), Json::Obj(extra));
+        Json::Obj(o)
     }
 }
 
@@ -148,6 +200,109 @@ pub fn report(title: &str, results: &[CaseResult]) {
     }
 }
 
+/// Collects every section a bench binary reports and, when the process
+/// was started with `--json PATH`, persists them as one JSON document
+/// (`{"schema": "xeonserve-bench-micro/v1", "bench", "sections"}`).
+///
+/// Usage: replace bare [`report`] calls with [`JsonReport::section`]
+/// and call [`JsonReport::finish`] at the end of `main`.
+pub struct JsonReport {
+    bench: String,
+    sections: Vec<(String, Vec<CaseResult>)>,
+}
+
+impl JsonReport {
+    /// Start a report for the named bench binary.
+    ///
+    /// # Panics
+    /// When the process was started with a trailing valueless
+    /// `--json` — failing before the sweep beats silently writing
+    /// nothing after it.
+    pub fn new(bench: &str) -> JsonReport {
+        assert!(
+            !json_flag_missing_path(),
+            "--json requires a PATH argument (e.g. --json out.json)"
+        );
+        JsonReport { bench: bench.to_string(), sections: Vec::new() }
+    }
+
+    /// Print one table (exactly like [`report`]) and retain the rows
+    /// for the JSON document.
+    pub fn section(&mut self, title: &str, results: Vec<CaseResult>) {
+        report(title, &results);
+        self.sections.push((title.to_string(), results));
+    }
+
+    /// The full document as a [`Json`] value.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("schema".into(),
+                 Json::Str("xeonserve-bench-micro/v1".into()));
+        o.insert("bench".into(), Json::Str(self.bench.clone()));
+        let sections = self
+            .sections
+            .iter()
+            .map(|(title, cases)| {
+                let mut s = BTreeMap::new();
+                s.insert("title".into(), Json::Str(title.clone()));
+                s.insert(
+                    "cases".into(),
+                    Json::Arr(cases.iter().map(CaseResult::to_json)
+                                   .collect()),
+                );
+                Json::Obj(s)
+            })
+            .collect();
+        o.insert("sections".into(), Json::Arr(sections));
+        Json::Obj(o)
+    }
+
+    /// Write the document to the `--json PATH` argument, if one was
+    /// given; otherwise a no-op.  A trailing `--json` with no PATH is
+    /// an error (caught in [`JsonReport::new`] as well, before the
+    /// sweep runs).
+    pub fn finish(self) -> anyhow::Result<()> {
+        if let Some(path) = json_path_arg() {
+            std::fs::write(&path, self.to_json().to_string())?;
+            eprintln!("wrote {}", path.display());
+        } else if json_flag_missing_path() {
+            anyhow::bail!("--json requires a PATH argument");
+        }
+        Ok(())
+    }
+}
+
+/// The `PATH` of a `--json PATH` command-line argument, if present.
+/// A valueless `--json` (trailing, or followed by another `-` flag)
+/// yields `None` — benches should call [`JsonReport::new`] early,
+/// which rejects that loudly instead of silently discarding a whole
+/// sweep (or writing to a file named like a flag).
+pub fn json_path_arg() -> Option<PathBuf> {
+    let args: Vec<String> = std::env::args().collect();
+    // --json=PATH form
+    if let Some(p) = args
+        .iter()
+        .find_map(|a| a.strip_prefix("--json="))
+        .filter(|p| !p.is_empty() && !p.starts_with('-'))
+    {
+        return Some(PathBuf::from(p));
+    }
+    // --json PATH form
+    args.windows(2)
+        .find(|w| w[0] == "--json")
+        .map(|w| w[1].clone())
+        .filter(|p| !p.starts_with('-'))
+        .map(PathBuf::from)
+}
+
+/// True when `--json` was passed (either form) but no usable PATH
+/// operand came with it (end of argv, next token is another flag, or
+/// an empty `--json=`).
+fn json_flag_missing_path() -> bool {
+    std::env::args().any(|a| a == "--json" || a.starts_with("--json="))
+        && json_path_arg().is_none()
+}
+
 /// `--quick` on the command line shrinks iteration counts (CI mode).
 pub fn quick_mode() -> bool {
     std::env::args().any(|a| a == "--quick" || a == "--test")
@@ -200,5 +355,33 @@ mod tests {
     fn measure_result_propagates_errors() {
         let r = measure_result("x", 0, 1, || anyhow::bail!("boom"));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn case_json_roundtrips_through_parser() {
+        let r = measure("case_a", 0, 2, || {}).with("kB", 7);
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.get("name").and_then(Json::as_str), Some("case_a"));
+        assert_eq!(j.get("iters").and_then(Json::as_usize), Some(2));
+        assert_eq!(
+            j.get("extra").and_then(|e| e.get("kB"))
+                .and_then(Json::as_str),
+            Some("7")
+        );
+    }
+
+    #[test]
+    fn json_report_document_shape() {
+        let mut rep = JsonReport::new("unit_test");
+        // section() prints; that is fine under cargo test capture
+        rep.section("t1", vec![measure("a", 0, 1, || {})]);
+        rep.section("t2", vec![measure("b", 0, 1, || {})]);
+        let j = Json::parse(&rep.to_json().to_string()).unwrap();
+        assert_eq!(j.get("schema").and_then(Json::as_str),
+                   Some("xeonserve-bench-micro/v1"));
+        assert_eq!(j.get("bench").and_then(Json::as_str),
+                   Some("unit_test"));
+        assert_eq!(j.get("sections").and_then(Json::as_arr).unwrap().len(),
+                   2);
     }
 }

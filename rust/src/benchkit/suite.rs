@@ -1,0 +1,576 @@
+//! The serving-level benchmark suite behind `xeonserve bench`
+//! (DESIGN.md §10).
+//!
+//! A [`Scenario`] is a named, deterministic workload (batch shape,
+//! prompt/output length mix) driven through the full [`Engine`] —
+//! rank workers, collectives, continuous batching, sampling — exactly
+//! like production traffic.  [`run_matrix`] sweeps the standard
+//! scenarios over tensor-parallel world sizes plus the scalar-kernel
+//! baseline, and the results serialize to the stable
+//! `xeonserve-bench/v1` JSON schema (`BENCH_*.json`) so any later PR
+//! can diff its hot-path numbers against the recorded trajectory.
+//!
+//! Scenario → paper mapping (DESIGN.md §10 has the full table):
+//! `single_stream_decode` mirrors the §3 headline measurement
+//! (batch 1, long decode — the 140 ms/token row), `batched_decode`
+//! the throughput view, `prefill_heavy` the first-token path, and
+//! `mixed` a serving mix of all three.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::backend::pool::auto_threads;
+use crate::benchkit::CaseResult;
+use crate::ccl::StatsSnapshot;
+use crate::config::{BackendKind, EngineConfig, GemmKernel};
+use crate::engine::Engine;
+use crate::util::Json;
+
+/// Identifier of the scenario-suite JSON schema this module emits and
+/// [`validate_bench`] accepts.
+pub const SCHEMA: &str = "xeonserve-bench/v1";
+
+/// In a [`Scenario`]'s `prompt_lens`, the sentinel meaning "as long as
+/// the model's largest prefill bucket" (resolved per model at run
+/// time, so one suite definition covers every preset).
+pub const PROMPT_FILL_BUCKET: usize = 0;
+
+/// One named, deterministic serving workload.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// stable scenario name (a schema key — do not rename casually)
+    pub name: String,
+    /// decode batch lanes the engine is configured with
+    pub batch: usize,
+    /// total requests enqueued (continuous batching refills lanes)
+    pub requests: usize,
+    /// per-request prompt lengths, cycled; [`PROMPT_FILL_BUCKET`]
+    /// resolves to the model's largest prefill bucket
+    pub prompt_lens: Vec<usize>,
+    /// per-request `max_new_tokens`, cycled
+    pub new_tokens: Vec<usize>,
+}
+
+impl Scenario {
+    fn new(name: &str, batch: usize, requests: usize,
+           prompt_lens: &[usize], new_tokens: &[usize]) -> Scenario {
+        Scenario {
+            name: name.to_string(),
+            batch,
+            requests,
+            prompt_lens: prompt_lens.to_vec(),
+            new_tokens: new_tokens.to_vec(),
+        }
+    }
+
+    /// Shrink the workload for CI smoke runs (`--quick`): fewer
+    /// requests and shorter decodes, same shapes.
+    pub fn quicken(mut self) -> Scenario {
+        self.requests = self.requests.min(self.batch.max(2));
+        for n in &mut self.new_tokens {
+            *n = (*n / 4).max(4);
+        }
+        self
+    }
+}
+
+/// The standard four-scenario suite every `BENCH_*.json` records.
+pub fn standard_suite() -> Vec<Scenario> {
+    vec![
+        // the paper's §3 headline shape: one stream, decode-dominated
+        Scenario::new("single_stream_decode", 1, 2, &[8], &[32]),
+        // batched decode: the blocked-GEMM headline (weights stream
+        // once per step instead of once per row)
+        Scenario::new("batched_decode", 4, 8, &[8], &[32]),
+        // prefill-dominated: long prompts, almost no decode
+        Scenario::new("prefill_heavy", 2, 6, &[PROMPT_FILL_BUCKET], &[4]),
+        // a serving mix of short/long prompts and outputs
+        Scenario::new(
+            "mixed", 4, 10,
+            &[2, 8, PROMPT_FILL_BUCKET, 5],
+            &[8, 32, 4, 16],
+        ),
+    ]
+}
+
+/// One recorded (scenario × world × kernel × threads) run.
+#[derive(Clone, Debug)]
+pub struct ScenarioRecord {
+    /// scenario name (see [`standard_suite`])
+    pub name: String,
+    /// tensor-parallel world size
+    pub world: usize,
+    /// resolved per-rank compute threads (auto already applied);
+    /// 0 = not applicable (a backend that ignores the GEMM knobs)
+    pub threads: usize,
+    /// GEMM kernel the reference backend ran
+    pub kernel: GemmKernel,
+    /// decode batch lanes
+    pub batch: usize,
+    /// requests served
+    pub requests: usize,
+    /// mean wall-clock decode latency, ms per output token (per-step
+    /// wall divided by the tokens a step produced)
+    pub ms_per_token: f64,
+    /// mean wall-clock latency of one batched decode step, ms
+    pub ms_per_step: f64,
+    /// simulated-cluster decode latency, ms per output token
+    pub ms_per_token_sim: f64,
+    /// mean time to first token (prefill wall), ms
+    pub ttft_ms: f64,
+    /// end-to-end output tokens per second
+    pub tokens_per_s: f64,
+    /// decode wall p50, µs
+    pub decode_p50_us: u64,
+    /// decode wall p95, µs
+    pub decode_p95_us: u64,
+    /// prefill wall p50, µs
+    pub prefill_p50_us: u64,
+    /// tokens emitted over the run
+    pub tokens_out: u64,
+    /// requests retired over the run
+    pub requests_done: u64,
+    /// ccl counters accumulated over the run
+    pub comm: StatsSnapshot,
+}
+
+impl ScenarioRecord {
+    /// Serialize one row of the `xeonserve-bench/v1` schema.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        let mut put = |k: &str, v: Json| {
+            o.insert(k.to_string(), v);
+        };
+        put("name", Json::Str(self.name.clone()));
+        put("world", Json::Num(self.world as f64));
+        put("threads", Json::Num(self.threads as f64));
+        put("kernel", Json::Str(self.kernel.to_string()));
+        put("batch", Json::Num(self.batch as f64));
+        put("requests", Json::Num(self.requests as f64));
+        put("ms_per_token", Json::Num(self.ms_per_token));
+        put("ms_per_step", Json::Num(self.ms_per_step));
+        put("ms_per_token_sim", Json::Num(self.ms_per_token_sim));
+        put("ttft_ms", Json::Num(self.ttft_ms));
+        put("tokens_per_s", Json::Num(self.tokens_per_s));
+        put("decode_p50_us", Json::Num(self.decode_p50_us as f64));
+        put("decode_p95_us", Json::Num(self.decode_p95_us as f64));
+        put("prefill_p50_us", Json::Num(self.prefill_p50_us as f64));
+        put("tokens_out", Json::Num(self.tokens_out as f64));
+        put("requests_done", Json::Num(self.requests_done as f64));
+        let c = &self.comm;
+        let mut comm = BTreeMap::new();
+        for (k, v) in [
+            ("sync_points", c.sync_points),
+            ("wire_bytes", c.wire_bytes),
+            ("staged_copy_bytes", c.staged_copy_bytes),
+            ("messages", c.messages),
+            ("allreduces", c.allreduces),
+            ("broadcasts", c.broadcasts),
+            ("gathers", c.gathers),
+            ("allgathers", c.allgathers),
+        ] {
+            comm.insert(k.to_string(), Json::Num(v as f64));
+        }
+        put("comm", Json::Obj(comm));
+        Json::Obj(o)
+    }
+
+    /// Condense to a [`CaseResult`] row for the human table.
+    pub fn to_case(&self) -> CaseResult {
+        CaseResult {
+            name: format!("{}_w{}_{}x{}", self.name, self.world,
+                          self.kernel, self.threads),
+            iters: self.tokens_out as usize,
+            mean_us: self.ms_per_token * 1e3,
+            p50_us: self.decode_p50_us,
+            p95_us: self.decode_p95_us,
+            extra: Vec::new(),
+        }
+        .with("ms_tok", format!("{:.2}", self.ms_per_token))
+        .with("sim_ms", format!("{:.2}", self.ms_per_token_sim))
+        .with("ttft_ms", format!("{:.2}", self.ttft_ms))
+        .with("tok_s", format!("{:.1}", self.tokens_per_s))
+    }
+}
+
+/// Run one scenario through a fully configured engine (`cfg.world`,
+/// `cfg.kernel`, `cfg.threads` already set by the caller).
+pub fn run_scenario(cfg: &EngineConfig, sc: &Scenario)
+                    -> Result<ScenarioRecord> {
+    let mut cfg = cfg.clone();
+    cfg.batch = sc.batch;
+    cfg.validate()?;
+    let rm = cfg.resolve_model()?;
+    let max_bucket = *rm.prefill_buckets.iter().max().unwrap();
+    let max_seq = rm.preset.max_seq;
+
+    let mut engine = Engine::new(cfg.clone())
+        .with_context(|| format!("bringing up {} w{}", sc.name,
+                                 cfg.world))?;
+    let before = engine.comm_stats();
+    for i in 0..sc.requests {
+        let plen = match sc.prompt_lens[i % sc.prompt_lens.len()] {
+            PROMPT_FILL_BUCKET => max_bucket,
+            n => n,
+        };
+        // leave decode headroom when the prompt fills the bucket
+        let plen = plen.min(max_seq.saturating_sub(4)).max(1);
+        let prompt: Vec<i32> =
+            (0..plen).map(|t| ((t * 13 + i * 7) % 200) as i32 + 1)
+                     .collect();
+        let n_new = sc.new_tokens[i % sc.new_tokens.len()];
+        engine.enqueue(prompt, n_new);
+    }
+    let t0 = Instant::now();
+    engine.run_to_completion()?;
+    let span = t0.elapsed();
+    let comm = engine.comm_stats().since(&before);
+
+    // the kernel/threads knobs are reference-backend GEMM settings;
+    // other backends (xla) ignore them, so report 0 = not applicable
+    // rather than a thread count the run never used
+    let threads = match (cfg.backend, cfg.kernel) {
+        (BackendKind::Reference, GemmKernel::Scalar) => 1,
+        (BackendKind::Reference, GemmKernel::Blocked) => {
+            auto_threads(cfg.threads, cfg.world)
+        }
+        _ => 0,
+    };
+    let m = &mut engine.metrics;
+    let tokens_per_s = m.throughput(span);
+    // decode steps emit (tokens_out - requests_done) tokens: each
+    // request's first token comes from its prefill round
+    let steps = m.decode_wall.count() as f64;
+    let decode_tokens =
+        (m.tokens_out.saturating_sub(m.requests_done)).max(1) as f64;
+    let per_token = |mean_step_us: f64| -> f64 {
+        if steps == 0.0 {
+            0.0
+        } else {
+            mean_step_us * steps / decode_tokens / 1e3
+        }
+    };
+    Ok(ScenarioRecord {
+        name: sc.name.clone(),
+        world: cfg.world,
+        threads,
+        kernel: cfg.kernel,
+        batch: sc.batch,
+        requests: sc.requests,
+        ms_per_token: per_token(m.decode_wall.mean_us()),
+        ms_per_step: m.decode_wall.mean_us() / 1e3,
+        ms_per_token_sim: per_token(m.decode_sim.mean_us()),
+        ttft_ms: m.prefill_wall.mean_us() / 1e3,
+        tokens_per_s,
+        decode_p50_us: m.decode_wall.p50_us(),
+        decode_p95_us: m.decode_wall.p95_us(),
+        prefill_p50_us: m.prefill_wall.p50_us(),
+        tokens_out: m.tokens_out,
+        requests_done: m.requests_done,
+        comm,
+    })
+}
+
+/// Sweep the scenario suite over `worlds`, recording every scenario on
+/// the blocked kernel plus, for `batched_decode`, the scalar baseline
+/// and a single-threaded blocked run — the rows the ≥2× batched-decode
+/// acceptance gate compares.
+///
+/// Blocked rows run at a FIXED 2 threads when `base.threads` is 0
+/// (auto): a host-independent thread count keeps `BENCH_*.json`
+/// recordings comparable across machines.  An explicit `--threads N`
+/// overrides it (floored at 2 so the threaded row always exists).
+pub fn run_matrix(base: &EngineConfig, worlds: &[usize], quick: bool,
+                  mut progress: impl FnMut(&str)) -> Result<Vec<ScenarioRecord>> {
+    let scenarios: Vec<Scenario> = standard_suite()
+        .into_iter()
+        .map(|s| if quick { s.quicken() } else { s })
+        .collect();
+    let mut out = Vec::new();
+    for &world in worlds {
+        for sc in &scenarios {
+            let mut cfg = base.clone();
+            cfg.world = world;
+            cfg.kernel = GemmKernel::Blocked;
+            cfg.threads = if base.threads == 0 {
+                2
+            } else {
+                auto_threads(base.threads, world).max(2)
+            };
+            progress(&format!("{} w{world} blocked x{}", sc.name,
+                              cfg.threads));
+            out.push(run_scenario(&cfg, sc)?);
+            if sc.name == "batched_decode" {
+                let mut scalar = base.clone();
+                scalar.world = world;
+                scalar.kernel = GemmKernel::Scalar;
+                scalar.threads = 1;
+                progress(&format!("{} w{world} scalar baseline",
+                                  sc.name));
+                out.push(run_scenario(&scalar, sc)?);
+                let mut one = base.clone();
+                one.world = world;
+                one.kernel = GemmKernel::Blocked;
+                one.threads = 1;
+                progress(&format!("{} w{world} blocked x1", sc.name));
+                out.push(run_scenario(&one, sc)?);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Assemble the full `xeonserve-bench/v1` document.  `worlds` is the
+/// sweep the recording claims to cover; [`validate_bench`] checks the
+/// rows against it.
+pub fn matrix_to_json(bench: &str, model: &str, quick: bool,
+                      worlds: &[usize], records: &[ScenarioRecord])
+                      -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("schema".into(), Json::Str(SCHEMA.into()));
+    o.insert("bench".into(), Json::Str(bench.into()));
+    o.insert("model".into(), Json::Str(model.into()));
+    o.insert("quick".into(), Json::Bool(quick));
+    o.insert(
+        "worlds".into(),
+        Json::Arr(worlds.iter().map(|&w| Json::Num(w as f64)).collect()),
+    );
+    let mut host = BTreeMap::new();
+    host.insert(
+        "available_parallelism".into(),
+        Json::Num(std::thread::available_parallelism()
+                      .map(|n| n.get()).unwrap_or(1) as f64),
+    );
+    o.insert("host".into(), Json::Obj(host));
+    o.insert(
+        "scenarios".into(),
+        Json::Arr(records.iter().map(ScenarioRecord::to_json).collect()),
+    );
+    Json::Obj(o)
+}
+
+/// Batched-decode speedup of the threaded blocked kernel over the
+/// scalar baseline at world `w` (`None` if either row is missing).
+pub fn batched_speedup(j: &Json, world: usize) -> Option<f64> {
+    let rows = j.get("scenarios")?.as_arr()?;
+    let find = |kernel: &str, min_threads: usize| -> Option<f64> {
+        rows.iter().find_map(|r| {
+            let name = r.get("name")?.as_str()?;
+            let w = r.get("world")?.as_usize()?;
+            let k = r.get("kernel")?.as_str()?;
+            let t = r.get("threads")?.as_usize()?;
+            if name == "batched_decode" && w == world && k == kernel
+                && t >= min_threads
+            {
+                r.get("ms_per_token")?.as_f64()
+            } else {
+                None
+            }
+        })
+    };
+    let scalar = find("scalar", 1)?;
+    let blocked = find("blocked", 2)?;
+    if blocked > 0.0 {
+        Some(scalar / blocked)
+    } else {
+        None
+    }
+}
+
+/// Structural + coverage validation of a `xeonserve-bench/v1`
+/// document (the CI bench-smoke gate).  Checks the schema tag, the
+/// per-row field types, and that the rows cover every world the
+/// document's `worlds` field declares × ≥4 scenarios, including the
+/// threaded-vs-scalar batched-decode pair the acceptance gate reads —
+/// so a `--worlds 2` recording validates against its own sweep, while
+/// the committed full recordings must actually contain what they
+/// claim.
+pub fn validate_bench(j: &Json) -> Result<()> {
+    match j.get("schema").and_then(Json::as_str) {
+        Some(s) if s == SCHEMA => {}
+        other => bail!("schema is {other:?}, expected {SCHEMA:?}"),
+    }
+    for key in ["bench", "model"] {
+        j.get(key)
+            .and_then(Json::as_str)
+            .with_context(|| format!("missing string field {key:?}"))?;
+    }
+    let declared: Vec<usize> = j
+        .get("worlds")
+        .and_then(Json::as_arr)
+        .context("missing worlds array")?
+        .iter()
+        .map(|w| w.as_usize().context("worlds entries must be numbers"))
+        .collect::<Result<_>>()?;
+    if declared.is_empty() {
+        bail!("worlds array is empty");
+    }
+    let rows = j
+        .get("scenarios")
+        .and_then(Json::as_arr)
+        .context("missing scenarios array")?;
+    if rows.is_empty() {
+        bail!("scenarios array is empty");
+    }
+    let mut names = std::collections::BTreeSet::new();
+    let mut worlds = std::collections::BTreeSet::new();
+    let mut batched_scalar = false;
+    let mut batched_threaded = false;
+    for (i, r) in rows.iter().enumerate() {
+        let ctx = || format!("scenario row {i}");
+        let name = r.get("name").and_then(Json::as_str)
+            .with_context(|| format!("{}: missing name", ctx()))?;
+        for key in ["world", "threads", "batch", "requests",
+                    "decode_p50_us", "decode_p95_us", "prefill_p50_us",
+                    "tokens_out", "requests_done"] {
+            r.get(key).and_then(Json::as_f64).with_context(|| {
+                format!("{}: missing numeric field {key:?}", ctx())
+            })?;
+        }
+        for key in ["ms_per_token", "ms_per_step", "ms_per_token_sim",
+                    "ttft_ms", "tokens_per_s"] {
+            let v = r.get(key).and_then(Json::as_f64).with_context(|| {
+                format!("{}: missing numeric field {key:?}", ctx())
+            })?;
+            if !v.is_finite() || v < 0.0 {
+                bail!("{}: {key} = {v} is not a sane latency", ctx());
+            }
+        }
+        let kernel = r.get("kernel").and_then(Json::as_str)
+            .with_context(|| format!("{}: missing kernel", ctx()))?;
+        if kernel != "blocked" && kernel != "scalar" {
+            bail!("{}: unknown kernel {kernel:?}", ctx());
+        }
+        r.get("comm").and_then(Json::as_obj)
+            .with_context(|| format!("{}: missing comm object", ctx()))?;
+        let world = r.get("world").and_then(Json::as_usize).unwrap();
+        let threads = r.get("threads").and_then(Json::as_usize).unwrap();
+        names.insert(name.to_string());
+        worlds.insert(world);
+        if name == "batched_decode" {
+            batched_scalar |= kernel == "scalar";
+            batched_threaded |= kernel == "blocked" && threads >= 2;
+        }
+    }
+    if names.len() < 4 {
+        bail!("only {} distinct scenarios, need >= 4: {names:?}",
+              names.len());
+    }
+    for &w in &declared {
+        if !worlds.contains(&w) {
+            bail!("declared world={w} has no rows (rows cover {worlds:?})");
+        }
+    }
+    if !batched_scalar {
+        bail!("no scalar-kernel batched_decode baseline row");
+    }
+    if !batched_threaded {
+        bail!("no blocked batched_decode row with threads >= 2");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BackendKind;
+
+    fn tiny_cfg() -> EngineConfig {
+        EngineConfig {
+            model: "tiny".into(),
+            backend: BackendKind::Reference,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn standard_suite_shape() {
+        let s = standard_suite();
+        assert!(s.len() >= 4);
+        let names: Vec<&str> =
+            s.iter().map(|x| x.name.as_str()).collect();
+        for required in ["single_stream_decode", "batched_decode",
+                         "prefill_heavy", "mixed"] {
+            assert!(names.contains(&required), "missing {required}");
+        }
+        for sc in &s {
+            assert!(!sc.prompt_lens.is_empty());
+            assert!(!sc.new_tokens.is_empty());
+            assert!(sc.requests >= sc.batch);
+        }
+    }
+
+    #[test]
+    fn quicken_shrinks_but_keeps_shape() {
+        let q = standard_suite()
+            .into_iter()
+            .map(Scenario::quicken)
+            .collect::<Vec<_>>();
+        for sc in &q {
+            assert!(sc.new_tokens.iter().all(|&n| n >= 4));
+            assert!(sc.requests >= 2);
+        }
+    }
+
+    #[test]
+    fn single_scenario_records_and_validates() {
+        let mut cfg = tiny_cfg();
+        cfg.world = 1;
+        cfg.threads = 2;
+        let sc = standard_suite()
+            .into_iter()
+            .find(|s| s.name == "batched_decode")
+            .unwrap()
+            .quicken();
+        let rec = run_scenario(&cfg, &sc).unwrap();
+        assert_eq!(rec.requests_done as usize, sc.requests);
+        assert!(rec.tokens_out > 0);
+        assert!(rec.ms_per_token >= 0.0);
+        assert!(rec.comm.allreduces > 0);
+        let j = Json::parse(&rec.to_json().to_string()).unwrap();
+        assert_eq!(j.get("name").and_then(Json::as_str),
+                   Some("batched_decode"));
+        assert_eq!(j.get("kernel").and_then(Json::as_str),
+                   Some("blocked"));
+    }
+
+    #[test]
+    fn matrix_document_passes_validation() {
+        // world=1-only matrix is fast; splice the same rows into
+        // worlds 2 and 4 to exercise the full validator offline
+        let recs =
+            run_matrix(&tiny_cfg(), &[1], true, |_| {}).unwrap();
+        // the fixed default keeps recordings host-independent
+        assert!(recs.iter().all(|r| r.threads <= 2));
+        let mut all = recs.clone();
+        for w in [2usize, 4] {
+            for r in &recs {
+                let mut c = r.clone();
+                c.world = w;
+                all.push(c);
+            }
+        }
+        let doc = matrix_to_json("unit", "tiny", true, &[1, 2, 4], &all);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        validate_bench(&parsed).unwrap();
+        assert!(batched_speedup(&parsed, 1).is_some());
+
+        // a narrower sweep validates against its own declared worlds
+        let narrow = matrix_to_json("unit", "tiny", true, &[1], &recs);
+        validate_bench(&Json::parse(&narrow.to_string()).unwrap())
+            .unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_gaps() {
+        let recs =
+            run_matrix(&tiny_cfg(), &[1], true, |_| {}).unwrap();
+        // document claims worlds {1,2,4} but only has world-1 rows
+        let doc = matrix_to_json("unit", "tiny", true, &[1, 2, 4], &recs);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert!(validate_bench(&parsed).is_err());
+        assert!(validate_bench(&Json::parse("{}").unwrap()).is_err());
+    }
+}

@@ -94,6 +94,42 @@ impl std::fmt::Display for BackendKind {
     }
 }
 
+/// Which GEMM implementation the reference backend's compute kernels
+/// use (DESIGN.md §10).
+///
+/// * `Blocked` — cache-blocked, row-fused GEMMs fanned out over the
+///   per-rank worker pool ([`EngineConfig::threads`]).  The default,
+///   and the perf-bearing hermetic path.
+/// * `Scalar` — the naive row-at-a-time loops, single-threaded.  Kept
+///   as the recorded benchmark baseline; bit-identical outputs to
+///   `Blocked` by construction.
+///
+/// The XLA backend ignores this knob (PJRT owns its own kernels).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmKernel {
+    Blocked,
+    Scalar,
+}
+
+impl GemmKernel {
+    pub fn parse(s: &str) -> Result<GemmKernel> {
+        match s {
+            "blocked" => Ok(GemmKernel::Blocked),
+            "scalar" => Ok(GemmKernel::Scalar),
+            _ => bail!("unknown kernel {s:?} (blocked|scalar)"),
+        }
+    }
+}
+
+impl std::fmt::Display for GemmKernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GemmKernel::Blocked => write!(f, "blocked"),
+            GemmKernel::Scalar => write!(f, "scalar"),
+        }
+    }
+}
+
 /// The paper's three optimizations as independent switches, so every
 /// bench can ablate them one at a time.
 #[derive(Clone, Copy, Debug)]
@@ -172,6 +208,11 @@ pub struct EngineConfig {
     pub wire: WireModel,
     /// max new tokens per request unless the request says otherwise
     pub max_new_tokens: usize,
+    /// compute threads per rank for the reference backend's blocked
+    /// kernels; 0 = auto (available cores / world).  DESIGN.md §10.
+    pub threads: usize,
+    /// reference-backend GEMM implementation (blocked | scalar)
+    pub kernel: GemmKernel,
 }
 
 impl Default for EngineConfig {
@@ -188,6 +229,8 @@ impl Default for EngineConfig {
             sampling: SamplingConfig::default(),
             wire: WireModel::default(),
             max_new_tokens: 16,
+            threads: 0,
+            kernel: GemmKernel::Blocked,
         }
     }
 }
@@ -224,6 +267,12 @@ impl EngineConfig {
         }
         if let Some(v) = j.get("max_new_tokens").and_then(Json::as_usize) {
             cfg.max_new_tokens = v;
+        }
+        if let Some(v) = j.get("threads").and_then(Json::as_usize) {
+            cfg.threads = v;
+        }
+        if let Some(v) = j.get("kernel").and_then(Json::as_str) {
+            cfg.kernel = GemmKernel::parse(v)?;
         }
         if let Some(w) = j.get("weights") {
             match w.get("kind").and_then(Json::as_str) {
@@ -302,6 +351,8 @@ impl EngineConfig {
         let _ = writeln!(s, "artifacts_dir = \"{}\"",
                          esc(self.artifacts_dir.display()));
         let _ = writeln!(s, "max_new_tokens = {}", self.max_new_tokens);
+        let _ = writeln!(s, "threads = {}", self.threads);
+        let _ = writeln!(s, "kernel = \"{}\"", self.kernel);
         match &self.weights {
             WeightSource::Synthetic { seed } => {
                 let _ = writeln!(
@@ -343,6 +394,12 @@ impl EngineConfig {
         }
         if self.sampling.top_k == 0 {
             bail!("sampling.top_k must be >= 1");
+        }
+        // the pool clamps to 64 (backend::pool::auto_threads); reject
+        // anything above instead of silently degrading it
+        if self.threads > 64 {
+            bail!("threads must be <= 64 (0 = auto), got {}",
+                  self.threads);
         }
         if !(0.0..=1.0).contains(&self.sampling.top_p) {
             bail!("sampling.top_p must be in [0,1]");
@@ -486,6 +543,8 @@ beta_gbps = 10.0
             // quotes and backslashes must survive the escaping layer
             artifacts_dir: PathBuf::from("some\\odd \"artifacts\" dir"),
             max_new_tokens: 9,
+            threads: 3,
+            kernel: GemmKernel::Scalar,
             ..Default::default()
         };
         cfg.opt.zero_copy = false;
@@ -504,6 +563,8 @@ beta_gbps = 10.0
         assert_eq!(back.batch, cfg.batch);
         assert_eq!(back.artifacts_dir, cfg.artifacts_dir);
         assert_eq!(back.max_new_tokens, cfg.max_new_tokens);
+        assert_eq!(back.threads, 3);
+        assert_eq!(back.kernel, GemmKernel::Scalar);
         assert!(!back.opt.zero_copy);
         assert_eq!(back.opt.broadcast_ids, cfg.opt.broadcast_ids);
         assert_eq!(back.sampling.top_k, 13);
@@ -525,6 +586,20 @@ beta_gbps = 10.0
         assert!(EngineConfig::from_toml_str("variant = \"weird\"").is_err());
         assert!(EngineConfig::from_toml_str(
             "[sampling]\ntop_p = 1.5").is_err());
+        assert!(EngineConfig::from_toml_str("threads = 10000").is_err());
+        assert!(EngineConfig::from_toml_str("kernel = \"simd\"").is_err());
+    }
+
+    #[test]
+    fn threads_and_kernel_parse() {
+        let cfg = EngineConfig::from_toml_str(
+            "threads = 4\nkernel = \"scalar\"").unwrap();
+        assert_eq!(cfg.threads, 4);
+        assert_eq!(cfg.kernel, GemmKernel::Scalar);
+        // defaults: auto threads, blocked kernel
+        let d = EngineConfig::default();
+        assert_eq!(d.threads, 0);
+        assert_eq!(d.kernel, GemmKernel::Blocked);
     }
 
     #[test]

@@ -7,7 +7,10 @@
 //!                    [--prompt "hello" [-n 16] | --addr HOST:PORT]
 //! xeonserve worker   --rank R --coordinator HOST:PORT
 //! xeonserve generate [--config FILE] --prompt "hello" [-n 16]
-//! xeonserve bench    [--config FILE] [--steps 32] [--prompt-len 8]
+//! xeonserve bench    [--config FILE] [--model tiny] [--worlds 1,2,4]
+//!                    [--json BENCH.json] [--quick true]
+//! xeonserve bench    --validate BENCH.json
+//! xeonserve bench    [--steps 32] [--prompt-len 8]   (legacy one-shot)
 //! xeonserve info     [--artifacts artifacts]
 //! ```
 
@@ -15,10 +18,12 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
+use xeonserve::benchkit::{self, suite};
 use xeonserve::config::{EngineConfig, Manifest};
 use xeonserve::engine::Engine;
 use xeonserve::launch::{self, LaunchOptions};
 use xeonserve::tokenizer::Tokenizer;
+use xeonserve::util::Json;
 
 const USAGE: &str = "\
 xeonserve — distributed LLM inference on CPUs (He et al. 2024 reproduction)
@@ -30,7 +35,11 @@ USAGE:
                      [--prompt TEXT [-n N] | --addr HOST:PORT]
   xeonserve worker   --rank R --coordinator HOST:PORT
   xeonserve generate [--config FILE] --prompt TEXT [-n N]
-  xeonserve bench    [--config FILE] [--steps N] [--prompt-len N]
+  xeonserve bench    [--config FILE] [--model NAME] [--worlds 1,2,4]
+                     [--json FILE] [--quick true] [--threads N]
+                     [--label NAME]
+  xeonserve bench    --validate FILE
+  xeonserve bench    [--steps N] [--prompt-len N]   (legacy one-shot)
   xeonserve info     [--artifacts DIR]
 
 serve runs every rank as an in-process thread.  launch/worker is the
@@ -40,6 +49,13 @@ and then either answers one --prompt and exits, or serves the JSON API
 on --addr.  With --spawn-workers true the coordinator forks the
 workers itself (single-machine convenience; CI smoke path starts them
 explicitly).
+
+bench runs the recording suite (DESIGN.md \u{a7}10): the standard
+scenarios (single-stream / batched decode, prefill-heavy, mixed) per
+world size, on the blocked kernel plus the scalar batched-decode
+baseline, and writes the xeonserve-bench/v1 JSON (--json) that
+BENCH_*.json files in the repo are recorded with.  --validate
+schema-checks such a file and exits.
 
 Without --config the built-in default is used (tiny model, world=2,
 all paper optimizations ON).  See configs/*.toml for presets.";
@@ -122,6 +138,99 @@ fn run_launch(cfg: EngineConfig, opts: &LaunchOptions, args: &Args)
     }
 }
 
+/// `xeonserve bench`: the recording suite (default), the schema
+/// validator (`--validate FILE`), or the legacy one-shot run when
+/// `--steps`/`--prompt-len` are given.
+fn run_bench(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("validate") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        let j = Json::parse(&text)
+            .with_context(|| format!("parsing {path}"))?;
+        suite::validate_bench(&j)
+            .with_context(|| format!("validating {path}"))?;
+        let rows = j.get("scenarios").and_then(Json::as_arr)
+            .map(|a| a.len()).unwrap_or(0);
+        println!("{path}: valid {} ({rows} scenario rows)",
+                 suite::SCHEMA);
+        return Ok(());
+    }
+
+    let mut cfg = load_cfg(args)?;
+    if let Some(m) = args.get("model") {
+        cfg.model = m.to_string();
+    }
+    if let Some(t) = args.get("threads") {
+        cfg.threads = t.parse().context("--threads must be an integer")?;
+    }
+
+    // legacy one-shot mode: a single engine, one request, raw report
+    if args.get("steps").is_some() || args.get("prompt-len").is_some() {
+        let steps = args.get_usize("steps", 32)?;
+        let prompt_len = args.get_usize("prompt-len", 8)?;
+        let mut engine = Engine::new(cfg)?;
+        let prompt: Vec<i32> =
+            (0..prompt_len as i32).map(|i| i % 200).collect();
+        engine.enqueue(prompt, steps);
+        engine.run_to_completion()?;
+        println!("{}", engine.metrics.report());
+        let ms = engine.metrics.decode_wall.mean_us() / 1e3;
+        let sim = engine.metrics.decode_sim.mean_us() / 1e3;
+        println!(
+            "time per output token: {ms:.2} ms/token (wall, 1-core \
+             testbed) | {sim:.2} ms/token (simulated cluster)"
+        );
+        println!("comm stats: {:?}", engine.comm_stats());
+        return Ok(());
+    }
+
+    let quick = match args.get("quick") {
+        None => false,
+        Some("true") => true,
+        Some("false") => false,
+        Some(v) => bail!("--quick takes true|false, got {v:?}"),
+    };
+    let worlds: Vec<usize> = match args.get("worlds") {
+        Some(csv) => csv
+            .split(',')
+            .map(|w| w.trim().parse::<usize>()
+                .with_context(|| format!("bad world {w:?} in --worlds")))
+            .collect::<Result<_>>()?,
+        None => vec![1, 2, 4],
+    };
+    eprintln!(
+        "bench suite: model={} worlds={worlds:?} quick={quick}",
+        cfg.model
+    );
+    let records = suite::run_matrix(&cfg, &worlds, quick,
+                                    |what| eprintln!("  running {what}"))?;
+    let cases: Vec<_> =
+        records.iter().map(suite::ScenarioRecord::to_case).collect();
+    benchkit::report(
+        &format!("bench suite — model={} (DESIGN.md §10)", cfg.model),
+        &cases,
+    );
+    // --label names the recording (e.g. "pr3" for a committed
+    // BENCH_pr3.json baseline)
+    let label = args.get("label").unwrap_or("xeonserve-bench");
+    let doc = suite::matrix_to_json(label, &cfg.model, quick, &worlds,
+                                    &records);
+    for &w in &worlds {
+        if let Some(s) = suite::batched_speedup(&doc, w) {
+            println!(
+                "batched_decode w{w}: blocked(threads>=2) is {s:.2}x \
+                 the scalar baseline"
+            );
+        }
+    }
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, doc.to_string())
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
@@ -198,25 +307,7 @@ fn main() -> Result<()> {
             println!("tokens: {:?}", out[0]);
             Ok(())
         }
-        "bench" => {
-            let cfg = load_cfg(&args)?;
-            let steps = args.get_usize("steps", 32)?;
-            let prompt_len = args.get_usize("prompt-len", 8)?;
-            let mut engine = Engine::new(cfg)?;
-            let prompt: Vec<i32> =
-                (0..prompt_len as i32).map(|i| i % 200).collect();
-            engine.enqueue(prompt, steps);
-            engine.run_to_completion()?;
-            println!("{}", engine.metrics.report());
-            let ms = engine.metrics.decode_wall.mean_us() / 1e3;
-            let sim = engine.metrics.decode_sim.mean_us() / 1e3;
-            println!(
-                "time per output token: {ms:.2} ms/token (wall, 1-core \
-                 testbed) | {sim:.2} ms/token (simulated cluster)"
-            );
-            println!("comm stats: {:?}", engine.comm_stats());
-            Ok(())
-        }
+        "bench" => run_bench(&args),
         "info" => {
             let dir =
                 PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));

@@ -1,10 +1,32 @@
 //! Serving metrics: latency distributions, throughput, and the per-step
 //! timing breakdown the perf pass and the benches consume.
+//!
+//! [`LatencyStats`] is the single quantile implementation everything
+//! else (benchkit cases, the scenario suite, `RunMetrics`) builds on;
+//! its percentile definition is pinned in the docs below so
+//! `BENCH_*.json` files stay comparable across PRs.
+
+#![warn(missing_docs)]
 
 use std::time::Duration;
 
 /// Reservoir-free latency recorder: keeps every sample (bench-scale runs
 /// are small) and reports exact quantiles.
+///
+/// # Percentile definition
+///
+/// Quantiles use the *nearest-rank* method on the sorted samples:
+/// `quantile(q)` returns the sample at rank `max(1, ceil(q·n))`
+/// (1-based), i.e. the smallest sample such that at least `q·n`
+/// samples are ≤ it.  This is well-defined for every sample count:
+///
+/// * `n = 0` → all statistics return 0 (documented sentinel, no panic);
+/// * `n = 1` → every quantile is the single sample;
+/// * `n = 2` → p50 is the *lower* sample, p95/p99/max the upper;
+/// * `q ≤ 0` → the minimum, `q ≥ 1` → the maximum (q is clamped).
+///
+/// No interpolation is performed: reported values are always real
+/// measured samples.
 #[derive(Clone, Debug, Default)]
 pub struct LatencyStats {
     samples_us: Vec<u64>,
@@ -12,20 +34,29 @@ pub struct LatencyStats {
 }
 
 impl LatencyStats {
+    /// Record one duration sample (microsecond resolution).
     pub fn record(&mut self, d: Duration) {
         self.samples_us.push(d.as_micros() as u64);
         self.sorted = false;
     }
 
+    /// Record one sample already expressed in microseconds.
     pub fn record_us(&mut self, us: u64) {
         self.samples_us.push(us);
         self.sorted = false;
     }
 
+    /// Number of recorded samples.
     pub fn count(&self) -> usize {
         self.samples_us.len()
     }
 
+    /// True when no samples have been recorded (all stats read 0).
+    pub fn is_empty(&self) -> bool {
+        self.samples_us.is_empty()
+    }
+
+    /// Arithmetic mean in microseconds; 0.0 when empty.
     pub fn mean_us(&self) -> f64 {
         if self.samples_us.is_empty() {
             return 0.0;
@@ -34,33 +65,38 @@ impl LatencyStats {
             / self.samples_us.len() as f64
     }
 
-    /// Exact quantile (q in [0,1]).
+    /// Exact nearest-rank quantile (see the type docs); `q` is clamped
+    /// to `[0, 1]` and the empty recorder returns 0.
     pub fn quantile_us(&mut self, q: f64) -> u64 {
-        if self.samples_us.is_empty() {
+        let n = self.samples_us.len();
+        if n == 0 {
             return 0;
         }
         if !self.sorted {
             self.samples_us.sort_unstable();
             self.sorted = true;
         }
-        let pos = ((self.samples_us.len() as f64 * q).ceil() as usize)
-            .saturating_sub(1)
-            .min(self.samples_us.len() - 1);
-        self.samples_us[pos]
+        let q = q.clamp(0.0, 1.0);
+        let rank = (n as f64 * q).ceil() as usize;
+        self.samples_us[rank.max(1).min(n) - 1]
     }
 
+    /// Median (nearest-rank).
     pub fn p50_us(&mut self) -> u64 {
         self.quantile_us(0.50)
     }
 
+    /// 95th percentile (nearest-rank).
     pub fn p95_us(&mut self) -> u64 {
         self.quantile_us(0.95)
     }
 
+    /// 99th percentile (nearest-rank).
     pub fn p99_us(&mut self) -> u64 {
         self.quantile_us(0.99)
     }
 
+    /// Largest recorded sample.
     pub fn max_us(&mut self) -> u64 {
         self.quantile_us(1.0)
     }
@@ -71,6 +107,7 @@ impl LatencyStats {
 /// view — see DESIGN.md §4 and ccl::wire.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StepTiming {
+    /// leader-measured wall time of the whole step
     pub wall_us: u64,
     /// sum over ranks of segment-execute time
     pub compute_total_us: u64,
@@ -98,23 +135,31 @@ impl StepTiming {
     }
 }
 
-/// Aggregates step timings for a run; feeds EXPERIMENTS.md tables.
+/// Aggregates step timings for a run; feeds the bench tables and the
+/// `BENCH_*.json` scenario records.
 #[derive(Clone, Debug, Default)]
 pub struct RunMetrics {
+    /// wall-clock latency of each batched decode step
     pub decode_wall: LatencyStats,
+    /// simulated-cluster latency of each decode step (DESIGN.md §4)
     pub decode_sim: LatencyStats,
+    /// wall-clock latency of each prefill round (≈ time to first token)
     pub prefill_wall: LatencyStats,
+    /// tokens emitted (prefill-sampled + decode)
     pub tokens_out: u64,
+    /// requests fully retired
     pub requests_done: u64,
 }
 
 impl RunMetrics {
+    /// Record one decode step that produced `new_tokens` tokens.
     pub fn record_decode(&mut self, t: &StepTiming, new_tokens: u64) {
         self.decode_wall.record_us(t.wall_us);
         self.decode_sim.record_us(t.sim_total_us());
         self.tokens_out += new_tokens;
     }
 
+    /// Record one prefill round's wall time.
     pub fn record_prefill(&mut self, wall: Duration) {
         self.prefill_wall.record(wall);
     }
@@ -127,6 +172,7 @@ impl RunMetrics {
         self.tokens_out as f64 / span.as_secs_f64()
     }
 
+    /// One-line human summary of the run.
     pub fn report(&mut self) -> String {
         format!(
             "decode wall p50={}us p95={}us mean={:.0}us | sim p50={}us | \
@@ -162,7 +208,49 @@ mod tests {
     fn empty_stats_are_zero() {
         let mut s = LatencyStats::default();
         assert_eq!(s.p50_us(), 0);
+        assert_eq!(s.p95_us(), 0);
+        assert_eq!(s.max_us(), 0);
         assert_eq!(s.mean_us(), 0.0);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn small_sample_counts_are_well_defined() {
+        // n = 1: every quantile is the sample
+        let mut s = LatencyStats::default();
+        s.record_us(42);
+        assert_eq!(s.p50_us(), 42);
+        assert_eq!(s.p95_us(), 42);
+        assert_eq!(s.p99_us(), 42);
+        assert_eq!(s.max_us(), 42);
+
+        // n = 2: nearest-rank picks the lower sample at p50, the
+        // upper at p95+ (ranks ceil(0.5·2)=1, ceil(0.95·2)=2)
+        let mut s = LatencyStats::default();
+        s.record_us(100);
+        s.record_us(10);
+        assert_eq!(s.p50_us(), 10);
+        assert_eq!(s.p95_us(), 100);
+        assert_eq!(s.max_us(), 100);
+
+        // n = 3: p50 is the middle sample
+        let mut s = LatencyStats::default();
+        for v in [30u64, 10, 20] {
+            s.record_us(v);
+        }
+        assert_eq!(s.p50_us(), 20);
+        assert_eq!(s.p95_us(), 30);
+    }
+
+    #[test]
+    fn quantile_q_is_clamped() {
+        let mut s = LatencyStats::default();
+        for v in [1u64, 2, 3] {
+            s.record_us(v);
+        }
+        assert_eq!(s.quantile_us(-1.0), 1);
+        assert_eq!(s.quantile_us(0.0), 1);
+        assert_eq!(s.quantile_us(2.0), 3);
     }
 
     #[test]

@@ -6,30 +6,41 @@
 //! prompt/output length distributions) as the stand-in for production
 //! traces we do not have — see DESIGN.md §4.
 
+#![warn(missing_docs)]
+
 use crate::util::SplitMix64;
 
 /// One request in a trace.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TraceRequest {
+    /// request id, dense from 0 in arrival order
     pub id: u64,
     /// arrival time offset from trace start, microseconds
     pub arrival_us: u64,
+    /// prompt token ids, each in `[0, vocab)`
     pub prompt_tokens: Vec<i32>,
+    /// requested output budget (`max_new_tokens` of the API request)
     pub max_new_tokens: usize,
 }
 
 /// Synthetic workload parameters.
 #[derive(Clone, Copy, Debug)]
 pub struct TraceSpec {
+    /// number of requests to generate
     pub n_requests: usize,
     /// mean arrival rate, requests/second (Poisson); 0 = all at t=0
     pub rate_per_s: f64,
+    /// inclusive lower bound on prompt length (≥ 1)
     pub prompt_len_min: usize,
+    /// inclusive upper bound on prompt length
     pub prompt_len_max: usize,
+    /// inclusive lower bound on requested new tokens
     pub new_tokens_min: usize,
+    /// inclusive upper bound on requested new tokens
     pub new_tokens_max: usize,
     /// token id range [0, vocab)
     pub vocab: usize,
+    /// RNG seed: equal specs generate equal traces
     pub seed: u64,
 }
 

@@ -1,0 +1,198 @@
+//! Determinism gates for the threaded blocked GEMM path (DESIGN.md
+//! §10): threading and cache-blocking are pure *scheduling* changes —
+//! every logit and every greedy token must be bit-identical to the
+//! single-threaded scalar kernel, at any thread count, at any world
+//! size, through the full distributed engine.
+
+use xeonserve::backend::reference::ReferenceBackend;
+use xeonserve::backend::{ExecBackend, StepCtx};
+use xeonserve::config::{BackendKind, EngineConfig, GemmKernel,
+                        ModelPreset, Variant, WeightSource};
+use xeonserve::engine::Engine;
+
+fn cfg(world: usize, batch: usize, kernel: GemmKernel, threads: usize)
+       -> EngineConfig {
+    EngineConfig {
+        model: "tiny".into(),
+        backend: BackendKind::Reference,
+        world,
+        batch,
+        kernel,
+        threads,
+        weights: WeightSource::Synthetic { seed: 2024 },
+        ..Default::default()
+    }
+}
+
+/// Straight-line greedy decode against the backend alone, returning
+/// every step's full logit vector (world 1, lane 0).  `force_pool`
+/// drops the inline-dispatch threshold to 0 so even the tiny preset
+/// actually exercises the worker pool.
+fn greedy_logits(c: &EngineConfig, n_new: usize, force_pool: bool)
+                 -> Vec<Vec<f32>> {
+    let preset = ModelPreset::builtin(&c.model).unwrap();
+    let mut be = ReferenceBackend::new(c, 0, &preset).unwrap();
+    if force_pool {
+        be.set_par_threshold(0);
+    }
+    let (h, vocab) = (preset.hidden, preset.vocab);
+    let segs = c.variant.syncs_per_layer();
+    let prompt = [3i32, 1, 4, 1, 5, 9, 2, 6];
+    let bucket = 16usize;
+    let length = prompt.len();
+    let mut padded = prompt.to_vec();
+    padded.resize(bucket, 0);
+
+    let ctx = StepCtx::Prefill { lane: 0, bucket, length };
+    let mut x = vec![0.0f32; bucket * h];
+    let mut y = vec![0.0f32; bucket * h];
+    be.embed(&ctx, &padded, &mut x).unwrap();
+    for li in 0..preset.n_layers {
+        for seg in 0..segs {
+            be.layer_partial(&ctx, li, seg, &x, &mut y).unwrap();
+            for (xi, yi) in x.iter_mut().zip(&y) {
+                *xi += *yi;
+            }
+        }
+    }
+    let head: Vec<f32> = x[(length - 1) * h..length * h].to_vec();
+    let mut logits = vec![0.0f32; vocab];
+    be.lm_head(&head, &mut logits).unwrap();
+
+    let argmax = |l: &[f32]| -> i32 {
+        let mut best = 0usize;
+        for (i, &v) in l.iter().enumerate() {
+            if v > l[best] {
+                best = i;
+            }
+        }
+        best as i32
+    };
+
+    let mut out = vec![logits.clone()];
+    let mut tok = argmax(&logits);
+    let mut pos = length;
+    let mut xd = vec![0.0f32; h];
+    let mut yd = vec![0.0f32; h];
+    for _ in 1..n_new {
+        let positions = [pos as i32];
+        let ctx = StepCtx::Decode { positions: &positions };
+        be.embed(&ctx, &[tok], &mut xd).unwrap();
+        for li in 0..preset.n_layers {
+            for seg in 0..segs {
+                be.layer_partial(&ctx, li, seg, &xd, &mut yd).unwrap();
+                for (xi, yi) in xd.iter_mut().zip(&yd) {
+                    *xi += *yi;
+                }
+            }
+        }
+        be.lm_head(&xd, &mut logits).unwrap();
+        out.push(logits.clone());
+        tok = argmax(&logits);
+        pos += 1;
+    }
+    out
+}
+
+fn assert_logits_bits_eq(a: &[Vec<f32>], b: &[Vec<f32>], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: step counts differ");
+    for (step, (x, y)) in a.iter().zip(b).enumerate() {
+        for (j, (va, vb)) in x.iter().zip(y).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{what}: step {step} logit {j}: {va} vs {vb}"
+            );
+        }
+    }
+}
+
+/// The satellite gate: threaded GEMM produces bit-identical LOGITS —
+/// not just tokens — vs. the scalar path, at thread counts 1/2/4.
+#[test]
+fn threaded_logits_bit_identical_to_scalar_path() {
+    for variant in [Variant::Parallel, Variant::Serial] {
+        let mut sc = cfg(1, 1, GemmKernel::Scalar, 0);
+        sc.variant = variant;
+        let golden = greedy_logits(&sc, 6, false);
+        for threads in [1usize, 2, 4] {
+            let mut bc = cfg(1, 1, GemmKernel::Blocked, threads);
+            bc.variant = variant;
+            let got = greedy_logits(&bc, 6, true);
+            assert_logits_bits_eq(
+                &golden,
+                &got,
+                &format!("{variant} threads={threads}"),
+            );
+        }
+    }
+}
+
+fn engine_tokens(world: usize, kernel: GemmKernel, threads: usize)
+                 -> Vec<Vec<i32>> {
+    let mut engine =
+        Engine::new(cfg(world, 2, kernel, threads)).unwrap();
+    engine
+        .generate(&[vec![10, 20, 30, 40], vec![7, 7, 7]], 6)
+        .unwrap()
+}
+
+/// Cross-world parity must hold with threading enabled: worlds 1/2/4
+/// on the threaded blocked kernel all reproduce the scalar w1 tokens.
+#[test]
+fn cross_world_parity_holds_with_threading() {
+    let golden = engine_tokens(1, GemmKernel::Scalar, 0);
+    for world in [1usize, 2, 4] {
+        for threads in [2usize, 4] {
+            let got = engine_tokens(world, GemmKernel::Blocked, threads);
+            assert_eq!(
+                got, golden,
+                "world={world} threads={threads} diverged from the \
+                 scalar single-thread reference"
+            );
+        }
+    }
+}
+
+/// The kernel knob must not leak into served tokens even under
+/// continuous batching (more requests than lanes, mixed lengths).
+#[test]
+fn kernel_choice_invisible_under_continuous_batching() {
+    let prompts: Vec<Vec<i32>> =
+        (0..5).map(|i| vec![i + 1, i + 2, i + 3]).collect();
+    let mut outs = Vec::new();
+    for (kernel, threads) in [
+        (GemmKernel::Scalar, 0usize),
+        (GemmKernel::Blocked, 1),
+        (GemmKernel::Blocked, 3),
+    ] {
+        let mut engine =
+            Engine::new(cfg(2, 2, kernel, threads)).unwrap();
+        outs.push(engine.generate(&prompts, 4).unwrap());
+    }
+    assert_eq!(outs[0], outs[1], "blocked x1 vs scalar");
+    assert_eq!(outs[0], outs[2], "blocked x3 vs scalar");
+}
+
+/// TOML-configured threading reaches the backend (the knob the launch
+/// coordinator ships to remote workers must parse and apply).
+#[test]
+fn threads_knob_roundtrips_through_toml() {
+    let mut c = cfg(2, 1, GemmKernel::Blocked, 4);
+    c.kernel = GemmKernel::Scalar;
+    let text = c.to_toml_string();
+    let back = EngineConfig::from_toml_str(&text).unwrap();
+    assert_eq!(back.threads, 4);
+    assert_eq!(back.kernel, GemmKernel::Scalar);
+
+    let preset = ModelPreset::builtin("tiny").unwrap();
+    let be = ReferenceBackend::new(
+        &EngineConfig { kernel: GemmKernel::Blocked, ..back.clone() },
+        0,
+        &preset,
+    )
+    .unwrap();
+    assert_eq!(be.threads(), 4, "explicit thread count must stick");
+    let scalar = ReferenceBackend::new(&back, 0, &preset).unwrap();
+    assert_eq!(scalar.threads(), 1, "scalar kernel is single-threaded");
+}
