@@ -24,8 +24,17 @@
 //! device/KV state, and computes *rank-local partials only* — it never
 //! communicates.  All methods are deterministic for a fixed
 //! (config, rank) pair.
+//!
+//! The reference backend's weight and KV storage is dtype-selectable
+//! (`EngineConfig::weight_dtype` / `kv_dtype`): dense f32 or per-block
+//! symmetric INT8 ([`quant`], DESIGN.md §11).  Backends report their
+//! resident footprint through [`ExecBackend::mem_usage`] so the bench
+//! suite can record measured bytes next to latency.
+
+#![warn(missing_docs)]
 
 pub mod pool;
+pub mod quant;
 pub mod reference;
 #[cfg(feature = "xla")]
 pub mod xla;
@@ -59,6 +68,30 @@ impl StepCtx<'_> {
     }
 }
 
+/// Measured resident memory of one rank's backend state, in bytes —
+/// the figure `xeonserve bench` records per scenario row (DESIGN.md
+/// §11's memory/bandwidth accounting).  Weight bytes include
+/// quantization scales; KV bytes include per-row scales.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MemUsage {
+    /// resident weight bytes (embedding + norms + matmul weights +
+    /// scales)
+    pub weight_bytes: u64,
+    /// resident KV-cache bytes (all layers, full batch × max_seq
+    /// capacity)
+    pub kv_bytes: u64,
+}
+
+impl MemUsage {
+    /// Element-wise sum (aggregating ranks into a deployment total).
+    pub fn add(&self, other: &MemUsage) -> MemUsage {
+        MemUsage {
+            weight_bytes: self.weight_bytes + other.weight_bytes,
+            kv_bytes: self.kv_bytes + other.kv_bytes,
+        }
+    }
+}
+
 /// One rank's compute provider.  `x`/`partial`/`logits` are dense
 /// row-major f32 host buffers; sizes are fixed by the config and the
 /// `StepCtx` (callers allocate).
@@ -84,6 +117,13 @@ pub trait ExecBackend {
 
     /// Drop all KV-cache state (between bench iterations).
     fn reset(&mut self) -> Result<()>;
+
+    /// Resident weight/KV bytes of this rank's state.  Default: zeros,
+    /// meaning "not measured" (the XLA backend's buffers live on the
+    /// PJRT device and are not tracked host-side).
+    fn mem_usage(&self) -> MemUsage {
+        MemUsage::default()
+    }
 }
 
 /// Instantiate the backend `cfg` selects for `rank`, reusing the

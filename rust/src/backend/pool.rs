@@ -238,28 +238,31 @@ fn worker_loop(sh: &Shared, wid: usize, stride: usize) {
     }
 }
 
-/// Shared view of one `&mut [f32]` that pool tasks carve per-unit
-/// mutable sub-slices out of.
+/// Shared view of one `&mut [T]` that pool tasks carve per-unit
+/// mutable sub-slices out of.  `T` defaults to `f32` (the activation
+/// buffers); the INT8 KV-cache path instantiates it at `i8` for the
+/// quantized value planes.
 ///
 /// The borrow checker cannot prove units write disjoint ranges, so the
 /// proof obligation moves to the caller: every [`slice`](Self::slice)
 /// range handed to concurrently running units MUST be disjoint.  All
 /// uses in this crate derive ranges from the unit index over
 /// non-overlapping row/column blocks.
-pub struct DisjointSlices<'a> {
-    ptr: *mut f32,
+pub struct DisjointSlices<'a, T = f32> {
+    ptr: *mut T,
     len: usize,
-    _borrow: std::marker::PhantomData<&'a mut [f32]>,
+    _borrow: std::marker::PhantomData<&'a mut [T]>,
 }
 
 // SAFETY: access is only through `unsafe fn slice`, whose contract
-// (disjoint ranges across threads) makes concurrent use sound.
-unsafe impl Send for DisjointSlices<'_> {}
-unsafe impl Sync for DisjointSlices<'_> {}
+// (disjoint ranges across threads) makes concurrent use sound for any
+// T that may itself cross threads.
+unsafe impl<T: Send + Sync> Send for DisjointSlices<'_, T> {}
+unsafe impl<T: Send + Sync> Sync for DisjointSlices<'_, T> {}
 
-impl<'a> DisjointSlices<'a> {
+impl<'a, T> DisjointSlices<'a, T> {
     /// Wrap a buffer for per-unit sub-slicing.
-    pub fn new(buf: &'a mut [f32]) -> Self {
+    pub fn new(buf: &'a mut [T]) -> Self {
         DisjointSlices {
             ptr: buf.as_mut_ptr(),
             len: buf.len(),
@@ -273,7 +276,7 @@ impl<'a> DisjointSlices<'a> {
     /// Ranges taken by distinct units that may run concurrently must
     /// not overlap, and a unit must not hold two overlapping slices.
     #[allow(clippy::mut_from_ref)]
-    pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [f32] {
+    pub unsafe fn slice(&self, start: usize, len: usize) -> &mut [T] {
         assert!(
             start.checked_add(len).is_some_and(|end| end <= self.len),
             "disjoint slice [{start}, {start}+{len}) out of bounds ({})",

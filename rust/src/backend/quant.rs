@@ -1,0 +1,413 @@
+//! Per-block symmetric INT8 quantization for the hermetic hot path
+//! (DESIGN.md §11).
+//!
+//! Decode on CPUs is memory-bandwidth-bound: every step streams the
+//! full weight set plus the growing KV cache through the cores, so the
+//! bytes *stored* per parameter are the bytes *moved* per token.  This
+//! module stores weights as `i8` with per-block `f32` scales — ~3.8×
+//! fewer bytes than f32 — and the GEMM kernels dequantize inside the
+//! multiply-accumulate (`x · (q·s)`), so the full-precision tensor is
+//! never materialized.
+//!
+//! # Scheme
+//!
+//! A [`QuantMat`] is a row-major `[k, cols]` matrix whose contraction
+//! axis `k` is cut into fixed *quantization groups* of `group` rows.
+//! Each (group, column) block stores one `f32` scale
+//! `s = max|w| / 127` and the block's weights as
+//! `q = round(w / s) ∈ [-127, 127]`, so the reconstruction error is
+//! bounded per element: `|w − q·s| ≤ s/2`.
+//!
+//! Group placement is what keeps the backend's determinism guarantees
+//! intact (DESIGN.md §9.1/§10.1):
+//!
+//! * groups run along `k`, never along the output columns, so a
+//!   column-parallel shard (columns split across ranks) slices scale
+//!   *columns* exactly like weight columns — no group ever straddles a
+//!   rank boundary;
+//! * for row-parallel matrices (`k` split across ranks) the group is
+//!   the §9.1 reduction-chunk width `k_full / REDUCE_CHUNKS`, which
+//!   every supported world size divides — so shard boundaries land on
+//!   group boundaries there too.
+//!
+//! Quantization always runs over the FULL tensor before sharding
+//! ([`crate::model`]'s `synth_quant_shard`): every rank reconstructs
+//! bit-identical `q·s` values for the elements it owns, at any world
+//! size, which is why greedy decode stays bit-identical across worlds
+//! {1,2,4,8} at a fixed dtype.
+
+use anyhow::{ensure, Result};
+
+/// Quantization group width (rows of the contraction axis per scale)
+/// used for column-parallel weights and the lm head.  Row-parallel
+/// weights use the reduction-chunk width instead (module docs).
+pub const WEIGHT_QUANT_GROUP: usize = 64;
+
+/// A dense row-major `[k, cols]` f32 weight matrix (the non-quantized
+/// storage behind [`WeightMat::F32`]).
+pub struct F32Mat {
+    pub(crate) w: Vec<f32>,
+    pub(crate) cols: usize,
+}
+
+impl F32Mat {
+    /// Wrap a row-major `[w.len()/cols, cols]` buffer.
+    pub fn new(w: Vec<f32>, cols: usize) -> F32Mat {
+        debug_assert!(cols > 0 && w.len() % cols == 0);
+        F32Mat { w, cols }
+    }
+}
+
+/// A per-block symmetric INT8 matrix: row-major `[k, cols]` values in
+/// `q`, one `f32` scale per (`group` rows of `k`) × column in `scales`
+/// (row-major `[k/group, cols]`).
+///
+/// ```
+/// use xeonserve::backend::quant::QuantMat;
+///
+/// // quantize → dequantize roundtrip: per-element error is bounded by
+/// // half a quantization step (amax/254 of the element's block)
+/// let k = 8;
+/// let cols = 4;
+/// let w: Vec<f32> =
+///     (0..k * cols).map(|i| ((i * 37 % 23) as f32 - 11.0) * 0.17).collect();
+/// let m = QuantMat::from_f32(&w, k, cols, 4).unwrap();
+/// let amax = w.iter().fold(0.0f32, |a, x| a.max(x.abs()));
+/// for r in 0..k {
+///     for c in 0..cols {
+///         let err = (m.dequant(r, c) - w[r * cols + c]).abs();
+///         assert!(err <= amax / 254.0 + 1e-6, "row {r} col {c}: {err}");
+///     }
+/// }
+/// ```
+pub struct QuantMat {
+    pub(crate) q: Vec<i8>,
+    /// `[k/group, cols]` scales; `scales[(k/group)*cols + j]` covers
+    /// element `(k, j)`
+    pub(crate) scales: Vec<f32>,
+    pub(crate) cols: usize,
+    pub(crate) group: usize,
+}
+
+impl QuantMat {
+    /// Quantize a row-major `[k, cols]` f32 matrix with `group`-row
+    /// blocks along the contraction axis.  `group` must divide `k`.
+    pub fn from_f32(w: &[f32], k: usize, cols: usize, group: usize)
+                    -> Result<QuantMat> {
+        ensure!(cols > 0 && w.len() == k * cols,
+                "quantize: {} elems for [{k}, {cols}]", w.len());
+        ensure!(group > 0 && k % group == 0,
+                "quant group {group} must divide k={k}");
+        let n_groups = k / group;
+        // pass 1: per-(group, column) absolute maxima, streamed row-major
+        let mut amax = vec![0.0f32; n_groups * cols];
+        for kk in 0..k {
+            let row = &w[kk * cols..(kk + 1) * cols];
+            let arow = &mut amax[(kk / group) * cols..][..cols];
+            for (a, &v) in arow.iter_mut().zip(row) {
+                *a = a.max(v.abs());
+            }
+        }
+        let scales: Vec<f32> =
+            amax.iter().map(|&a| a / 127.0).collect();
+        // pass 2: snap to the grid
+        let mut q = vec![0i8; k * cols];
+        for kk in 0..k {
+            let srow = &scales[(kk / group) * cols..][..cols];
+            let wrow = &w[kk * cols..(kk + 1) * cols];
+            let qrow = &mut q[kk * cols..(kk + 1) * cols];
+            for ((qe, &we), &s) in
+                qrow.iter_mut().zip(wrow).zip(srow)
+            {
+                *qe = if s > 0.0 {
+                    (we / s).round().clamp(-127.0, 127.0) as i8
+                } else {
+                    0
+                };
+            }
+        }
+        Ok(QuantMat { q, scales, cols, group })
+    }
+
+    /// Number of `k` rows stored.
+    pub fn k_rows(&self) -> usize {
+        self.q.len() / self.cols
+    }
+
+    /// Reconstructed f32 value of element `(k, j)` — exactly the value
+    /// the fused kernels multiply by.
+    pub fn dequant(&self, k: usize, j: usize) -> f32 {
+        self.q[k * self.cols + j] as f32
+            * self.scales[(k / self.group) * self.cols + j]
+    }
+
+    /// Slice columns `[j0, j1)` out of every row (column-parallel
+    /// sharding).  Scale columns travel with the weight columns, so
+    /// the shard reconstructs the identical values.
+    pub fn slice_cols(&self, j0: usize, j1: usize) -> Result<QuantMat> {
+        ensure!(j0 < j1 && j1 <= self.cols,
+                "bad column slice [{j0}, {j1}) of {}", self.cols);
+        let (k, bw) = (self.k_rows(), j1 - j0);
+        let mut q = Vec::with_capacity(k * bw);
+        for r in 0..k {
+            q.extend_from_slice(&self.q[r * self.cols + j0
+                ..r * self.cols + j1]);
+        }
+        let n_groups = k / self.group;
+        let mut scales = Vec::with_capacity(n_groups * bw);
+        for g in 0..n_groups {
+            scales.extend_from_slice(&self.scales[g * self.cols + j0
+                ..g * self.cols + j1]);
+        }
+        Ok(QuantMat { q, scales, cols: bw, group: self.group })
+    }
+
+    /// Slice rows `[k0, k1)` (row-parallel sharding).  Both bounds
+    /// must land on group boundaries so no scale block is split.
+    pub fn slice_rows(&self, k0: usize, k1: usize) -> Result<QuantMat> {
+        ensure!(k0 < k1 && k1 <= self.k_rows(),
+                "bad row slice [{k0}, {k1}) of {}", self.k_rows());
+        ensure!(k0 % self.group == 0 && k1 % self.group == 0,
+                "row slice [{k0}, {k1}) not aligned to group {}",
+                self.group);
+        let q = self.q[k0 * self.cols..k1 * self.cols].to_vec();
+        let scales = self.scales[(k0 / self.group) * self.cols
+            ..(k1 / self.group) * self.cols]
+            .to_vec();
+        Ok(QuantMat { q, scales, cols: self.cols, group: self.group })
+    }
+}
+
+/// One weight matrix of the reference backend, in whichever storage
+/// `EngineConfig::weight_dtype` selects.  The GEMM kernels are written
+/// against [`WeightMat::mac_row`], so both storages run the identical
+/// single-accumulator, ascending-`k` chains — the property every
+/// determinism guarantee rests on (module docs).
+pub enum WeightMat {
+    /// Dense f32 (4 bytes/weight).
+    F32(F32Mat),
+    /// Per-block symmetric INT8 (1 byte/weight + 4/`group` of scales).
+    Int8(QuantMat),
+}
+
+impl WeightMat {
+    /// Wrap a dense row-major f32 buffer with `cols` columns.
+    pub fn f32(w: Vec<f32>, cols: usize) -> WeightMat {
+        WeightMat::F32(F32Mat::new(w, cols))
+    }
+
+    /// Fused multiply-accumulate of one weight row's column block:
+    /// `acc[j - j0] += xk · w[k, j]` for `j ∈ [j0, j1)`.
+    ///
+    /// For INT8 the dequantization happens inside the MAC
+    /// (`xk · (q·s)`) — only 1 byte per weight crosses the memory bus.
+    /// Both arms add the same f32 value for a given element, in the
+    /// same order, so kernel/thread/world bit-parity is unaffected by
+    /// blocking or partitioning at a fixed dtype.
+    #[inline]
+    pub fn mac_row(&self, k: usize, j0: usize, j1: usize, xk: f32,
+                   acc: &mut [f32]) {
+        match self {
+            WeightMat::F32(m) => {
+                let row = &m.w[k * m.cols + j0..k * m.cols + j1];
+                for (a, &wj) in acc.iter_mut().zip(row) {
+                    *a += xk * wj;
+                }
+            }
+            WeightMat::Int8(m) => {
+                let qrow = &m.q[k * m.cols + j0..k * m.cols + j1];
+                let srow = &m.scales[(k / m.group) * m.cols + j0
+                    ..(k / m.group) * m.cols + j1];
+                for ((a, &qj), &sj) in
+                    acc.iter_mut().zip(qrow).zip(srow)
+                {
+                    *a += xk * (qj as f32 * sj);
+                }
+            }
+        }
+    }
+
+    /// Resident bytes of this matrix (values + scales).
+    pub fn bytes(&self) -> u64 {
+        match self {
+            WeightMat::F32(m) => (m.w.len() * 4) as u64,
+            WeightMat::Int8(m) => {
+                (m.q.len() + m.scales.len() * 4) as u64
+            }
+        }
+    }
+}
+
+/// Quantize one KV-cache row (`vals.len()` contiguous values sharing
+/// one scale) into `q`, returning the scale.  The amax scan and the
+/// rounding both run ascending over the row, so the stored bytes are a
+/// pure function of the row's f32 content — identical at any thread
+/// count or world size.
+pub fn quant_row_into(vals: &[f32], q: &mut [i8]) -> f32 {
+    debug_assert_eq!(vals.len(), q.len());
+    let mut amax = 0.0f32;
+    for &v in vals {
+        amax = amax.max(v.abs());
+    }
+    let scale = amax / 127.0;
+    if scale > 0.0 {
+        for (qe, &v) in q.iter_mut().zip(vals) {
+            *qe = (v / scale).round().clamp(-127.0, 127.0) as i8;
+        }
+    } else {
+        q.fill(0);
+    }
+    scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(n: usize) -> Vec<f32> {
+        (0..n).map(|i| ((i * 29 % 17) as f32 - 8.0) * 0.31).collect()
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_per_block() {
+        let (k, cols, group) = (16, 6, 4);
+        let w = ramp(k * cols);
+        let m = QuantMat::from_f32(&w, k, cols, group).unwrap();
+        for r in 0..k {
+            for c in 0..cols {
+                // block amax for this element
+                let g = r / group;
+                let amax = (g * group..(g + 1) * group)
+                    .map(|kk| w[kk * cols + c].abs())
+                    .fold(0.0f32, f32::max);
+                let err = (m.dequant(r, c) - w[r * cols + c]).abs();
+                assert!(err <= amax / 254.0 + 1e-6,
+                        "({r},{c}): err {err} > bound {}", amax / 254.0);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_block_quantizes_to_zero() {
+        let m = QuantMat::from_f32(&[0.0; 8], 4, 2, 4).unwrap();
+        for r in 0..4 {
+            for c in 0..2 {
+                assert_eq!(m.dequant(r, c), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn col_slice_preserves_dequant_values() {
+        let (k, cols, group) = (8, 12, 4);
+        let w = ramp(k * cols);
+        let full = QuantMat::from_f32(&w, k, cols, group).unwrap();
+        for (j0, j1) in [(0, 3), (3, 9), (9, 12)] {
+            let s = full.slice_cols(j0, j1).unwrap();
+            for r in 0..k {
+                for c in j0..j1 {
+                    assert_eq!(s.dequant(r, c - j0).to_bits(),
+                               full.dequant(r, c).to_bits());
+                }
+            }
+        }
+        assert!(full.slice_cols(4, 4).is_err());
+        assert!(full.slice_cols(0, 13).is_err());
+    }
+
+    #[test]
+    fn row_slice_preserves_dequant_values() {
+        let (k, cols, group) = (16, 5, 4);
+        let w = ramp(k * cols);
+        let full = QuantMat::from_f32(&w, k, cols, group).unwrap();
+        for (k0, k1) in [(0, 4), (4, 12), (12, 16)] {
+            let s = full.slice_rows(k0, k1).unwrap();
+            for r in k0..k1 {
+                for c in 0..cols {
+                    assert_eq!(s.dequant(r - k0, c).to_bits(),
+                               full.dequant(r, c).to_bits());
+                }
+            }
+        }
+        // misaligned slice must be rejected, not silently re-scaled
+        assert!(full.slice_rows(2, 6).is_err());
+    }
+
+    #[test]
+    fn mac_row_matches_dequant_chain() {
+        let (k, cols, group) = (8, 10, 4);
+        let w = ramp(k * cols);
+        let qm = QuantMat::from_f32(&w, k, cols, group).unwrap();
+        let wm = WeightMat::Int8(qm);
+        let x = ramp(k);
+        // reference: explicit ascending-k chain over dequant values
+        let qm2 = QuantMat::from_f32(&w, k, cols, group).unwrap();
+        for (j0, j1) in [(0usize, 10usize), (2, 7)] {
+            let bw = j1 - j0;
+            let mut acc = vec![0.0f32; bw];
+            for (kk, &xk) in x.iter().enumerate() {
+                wm.mac_row(kk, j0, j1, xk, &mut acc);
+            }
+            let mut want = vec![0.0f32; bw];
+            for (kk, &xk) in x.iter().enumerate() {
+                for j in j0..j1 {
+                    want[j - j0] += xk * qm2.dequant(kk, j);
+                }
+            }
+            for (a, b) in acc.iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn f32_mac_row_is_the_plain_chain() {
+        let (k, cols) = (6, 8);
+        let w = ramp(k * cols);
+        let wm = WeightMat::f32(w.clone(), cols);
+        let x = ramp(k);
+        let mut acc = vec![0.0f32; cols];
+        for (kk, &xk) in x.iter().enumerate() {
+            wm.mac_row(kk, 0, cols, xk, &mut acc);
+        }
+        let mut want = vec![0.0f32; cols];
+        for (kk, &xk) in x.iter().enumerate() {
+            for j in 0..cols {
+                want[j] += xk * w[kk * cols + j];
+            }
+        }
+        for (a, b) in acc.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn bytes_reflect_storage() {
+        let (k, cols, group) = (64, 32, 64);
+        let w = ramp(k * cols);
+        let f = WeightMat::f32(w.clone(), cols);
+        let q = WeightMat::Int8(
+            QuantMat::from_f32(&w, k, cols, group).unwrap());
+        assert_eq!(f.bytes(), (k * cols * 4) as u64);
+        assert_eq!(q.bytes(), (k * cols + (k / group) * cols * 4) as u64);
+        assert!(q.bytes() * 3 < f.bytes(),
+                "int8 must be well under a third of f32");
+    }
+
+    #[test]
+    fn quant_row_roundtrip_bound() {
+        let vals = ramp(96);
+        let mut q = vec![0i8; 96];
+        let s = quant_row_into(&vals, &mut q);
+        let amax = vals.iter().fold(0.0f32, |a, x| a.max(x.abs()));
+        assert!((s - amax / 127.0).abs() < 1e-9);
+        for (&qe, &v) in q.iter().zip(&vals) {
+            assert!((qe as f32 * s - v).abs() <= s / 2.0 + 1e-6);
+        }
+        // all-zero row
+        let z = vec![0.0f32; 8];
+        let mut qz = vec![1i8; 8];
+        assert_eq!(quant_row_into(&z, &mut qz), 0.0);
+        assert!(qz.iter().all(|&b| b == 0));
+    }
+}

@@ -56,15 +56,32 @@
 //! Weights come from [`crate::model::synth_shard`], which slices each
 //! rank's shard out of one fixed full tensor — the same scheme the XLA
 //! synthetic path uses — so `concat(shards) == full` at every world.
+//!
+//! # INT8 dtypes (DESIGN.md §11)
+//!
+//! `EngineConfig::weight_dtype` / `kv_dtype` select per-block
+//! symmetric INT8 storage for the matmul weights ([`WeightMat`]) and
+//! the KV cache ([`KvLayer`]): decode is memory-bandwidth-bound, so
+//! quartering the bytes streamed per step is a direct ms/token win and
+//! lets bigger models fit a node.  Every determinism property above
+//! survives *at a fixed dtype*: dequantization (`q·s`) reconstructs a
+//! fixed f32 per element (quantized from the FULL tensor before
+//! sharding, so every world sees identical values), the kernels run
+//! the same single-accumulator chains through [`WeightMat::mac_row`],
+//! and KV rows are quantized once at append time by a pure function of
+//! the row.  Changing the dtype changes the logits — that is the
+//! accuracy/memory trade, pinned by the int8-vs-f32 tolerance tests.
 
 use anyhow::{bail, ensure, Result};
 
-use crate::config::{EngineConfig, GemmKernel, ModelPreset, Variant,
-                    WeightSource};
-use crate::model::{synth_shard, tensor_seed};
+use crate::config::{Dtype, EngineConfig, GemmKernel, ModelPreset,
+                    Variant, WeightSource};
+use crate::kvcache::KvLayer;
+use crate::model::{synth_quant_shard, synth_shard, tensor_seed};
 
 use super::pool::{auto_threads, DisjointSlices, WorkerPool};
-use super::{ExecBackend, StepCtx};
+use super::quant::{quant_row_into, WeightMat, WEIGHT_QUANT_GROUP};
+use super::{ExecBackend, MemUsage, StepCtx};
 
 /// Fixed reduction granularity of the row-parallel matmuls: the full
 /// contraction axis is always cut into this many chunks, whichever
@@ -161,6 +178,44 @@ fn attend_into(kc: &[f32], vc: &[f32], base: usize, hd: usize, q: &[f32],
     }
 }
 
+/// [`attend_into`] over an INT8 cache: identical loop structure, with
+/// each cache element dequantized in the inner products (`q_i8·s` — the
+/// row's scale, one f32 per (lane, head, position) row).  `row0` is
+/// the cache ROW index of this (lane, head)'s position 0, i.e.
+/// `base / hd` of the f32 variant.
+#[allow(clippy::too_many_arguments)]
+fn attend_into_q8(kq: &[i8], ks: &[f32], vq: &[i8], vs: &[f32],
+                  row0: usize, hd: usize, q: &[f32],
+                  scores: &mut [f32], out: &mut [f32]) {
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut m = f32::NEG_INFINITY;
+    for (t, s) in scores.iter_mut().enumerate() {
+        let ksc = ks[row0 + t];
+        let krow = &kq[(row0 + t) * hd..(row0 + t + 1) * hd];
+        let mut dot = 0.0f32;
+        for (qa, &kb) in q[..hd].iter().zip(krow) {
+            dot += qa * (kb as f32 * ksc);
+        }
+        *s = dot * scale;
+        m = m.max(*s);
+    }
+    let mut denom = 0.0f32;
+    for s in scores.iter_mut() {
+        *s = (*s - m).exp();
+        denom += *s;
+    }
+    let inv = 1.0 / denom.max(1e-20);
+    out[..hd].fill(0.0);
+    for (t, &p) in scores.iter().enumerate() {
+        let w = p * inv;
+        let vsc = vs[row0 + t];
+        let vrow = &vq[(row0 + t) * hd..(row0 + t + 1) * hd];
+        for (o, &vb) in out[..hd].iter_mut().zip(vrow) {
+            *o += w * (vb as f32 * vsc);
+        }
+    }
+}
+
 // ---- blocked kernels ---------------------------------------------------
 
 fn col_blocks(cols: usize) -> usize {
@@ -175,9 +230,11 @@ fn block_range(b: usize, cols: usize) -> (usize, usize) {
 /// Columns `[j0, j1)` of `xn[rows, kdim] @ w[kdim, cols]` for every
 /// row, OVERWRITING `out[r·out_stride + j]`.  Row-fused: the column
 /// block of `w` is streamed once for all rows.  Bit-compatible with
-/// [`col_matmul`]: each output element is one ascending-`k` chain.
+/// [`col_matmul`]: each output element is one ascending-`k` chain
+/// (through [`WeightMat::mac_row`], which dequantizes INT8 storage
+/// inside the MAC — same chain, fewer bytes streamed).
 #[allow(clippy::too_many_arguments)]
-fn colpar_block(xn: &[f32], kdim: usize, rows: usize, w: &[f32],
+fn colpar_block(xn: &[f32], kdim: usize, rows: usize, w: &WeightMat,
                 cols: usize, j0: usize, j1: usize,
                 out: &DisjointSlices<'_>, out_stride: usize) {
     let bw = j1 - j0;
@@ -186,13 +243,10 @@ fn colpar_block(xn: &[f32], kdim: usize, rows: usize, w: &[f32],
         let rt = ROW_TILE.min(rows - r0);
         let mut tile = [0.0f32; ROW_TILE * COL_BLOCK];
         for k in 0..kdim {
-            let wrow = &w[k * cols + j0..k * cols + j1];
             for ri in 0..rt {
                 let xk = xn[(r0 + ri) * kdim + k];
-                let t = &mut tile[ri * bw..ri * bw + bw];
-                for (tj, &wj) in t.iter_mut().zip(wrow) {
-                    *tj += xk * wj;
-                }
+                w.mac_row(k, j0, j1, xk,
+                          &mut tile[ri * bw..ri * bw + bw]);
             }
         }
         for ri in 0..rt {
@@ -211,8 +265,8 @@ fn colpar_block(xn: &[f32], kdim: usize, rows: usize, w: &[f32],
 /// overwriting `out[r·cols + j]`.  Same per-element chains as running
 /// [`col_matmul`] for `wg` and `wu` separately, then fusing.
 #[allow(clippy::too_many_arguments)]
-fn gateup_block(xn: &[f32], kdim: usize, rows: usize, wg: &[f32],
-                wu: &[f32], cols: usize, j0: usize, j1: usize,
+fn gateup_block(xn: &[f32], kdim: usize, rows: usize, wg: &WeightMat,
+                wu: &WeightMat, cols: usize, j0: usize, j1: usize,
                 out: &DisjointSlices<'_>) {
     let bw = j1 - j0;
     let mut r0 = 0;
@@ -221,18 +275,10 @@ fn gateup_block(xn: &[f32], kdim: usize, rows: usize, wg: &[f32],
         let mut gt = [0.0f32; ROW_TILE * COL_BLOCK];
         let mut ut = [0.0f32; ROW_TILE * COL_BLOCK];
         for k in 0..kdim {
-            let grow = &wg[k * cols + j0..k * cols + j1];
-            let urow = &wu[k * cols + j0..k * cols + j1];
             for ri in 0..rt {
                 let xk = xn[(r0 + ri) * kdim + k];
-                let t = &mut gt[ri * bw..ri * bw + bw];
-                for (tj, &wj) in t.iter_mut().zip(grow) {
-                    *tj += xk * wj;
-                }
-                let t = &mut ut[ri * bw..ri * bw + bw];
-                for (tj, &wj) in t.iter_mut().zip(urow) {
-                    *tj += xk * wj;
-                }
+                wg.mac_row(k, j0, j1, xk, &mut gt[ri * bw..ri * bw + bw]);
+                wu.mac_row(k, j0, j1, xk, &mut ut[ri * bw..ri * bw + bw]);
             }
         }
         for ri in 0..rt {
@@ -255,7 +301,7 @@ fn gateup_block(xn: &[f32], kdim: usize, rows: usize, wg: &[f32],
 /// `out[r·h + j]`.  Bit-compatible with [`rowpar_scalar`]: identical
 /// per-chunk chains, and quantized partials sum exactly in any order.
 #[allow(clippy::too_many_arguments)]
-fn rowpar_block(act: &[f32], k_local: usize, rows: usize, w: &[f32],
+fn rowpar_block(act: &[f32], k_local: usize, rows: usize, w: &WeightMat,
                 h: usize, cs: usize, j0: usize, j1: usize,
                 out: &DisjointSlices<'_>) {
     let bw = j1 - j0;
@@ -267,13 +313,10 @@ fn rowpar_block(act: &[f32], k_local: usize, rows: usize, w: &[f32],
         for c in 0..n_chunks {
             let mut part = [0.0f32; ROW_TILE * COL_BLOCK];
             for k in c * cs..(c + 1) * cs {
-                let wrow = &w[k * h + j0..k * h + j1];
                 for ri in 0..rt {
                     let ak = act[(r0 + ri) * k_local + k];
-                    let t = &mut part[ri * bw..ri * bw + bw];
-                    for (tj, &wj) in t.iter_mut().zip(wrow) {
-                        *tj += ak * wj;
-                    }
+                    w.mac_row(k, j0, j1, ak,
+                              &mut part[ri * bw..ri * bw + bw]);
                 }
             }
             for (a, &p) in
@@ -301,7 +344,7 @@ fn rowpar_block(act: &[f32], k_local: usize, rows: usize, w: &[f32],
 /// adds this rank's quantized partial into `out[..h]`.  `k_full` is
 /// the FULL contraction width; `a`/`w` cover this rank's contiguous
 /// `k_local` slice of it.  `tmp` is caller-provided scratch.
-fn rowpar_scalar(a: &[f32], w: &[f32], k_local: usize, k_full: usize,
+fn rowpar_scalar(a: &[f32], w: &WeightMat, k_local: usize, k_full: usize,
                  h: usize, tmp: &mut Vec<f32>, out: &mut [f32]) {
     let cs = k_full / REDUCE_CHUNKS;
     debug_assert_eq!(k_local % cs, 0);
@@ -309,11 +352,7 @@ fn rowpar_scalar(a: &[f32], w: &[f32], k_local: usize, k_full: usize,
     for c in 0..k_local / cs {
         tmp.fill(0.0);
         for k in c * cs..(c + 1) * cs {
-            let ak = a[k];
-            let row = &w[k * h..(k + 1) * h];
-            for (t, &wkj) in tmp[..h].iter_mut().zip(row) {
-                *t += ak * wkj;
-            }
+            w.mac_row(k, 0, h, a[k], &mut tmp[..h]);
         }
         for (o, &t) in out[..h].iter_mut().zip(&tmp[..h]) {
             *o += quantize_partial(t);
@@ -352,15 +391,15 @@ struct BlockScratch {
 }
 
 struct LayerWeights {
-    ln1_g: Vec<f32>, // [h]
-    ln2_g: Vec<f32>, // [h]
-    wq: Vec<f32>,    // [h, qd_l]
-    wk: Vec<f32>,    // [h, kvd_l]
-    wv: Vec<f32>,    // [h, kvd_l]
-    wo: Vec<f32>,    // [qd_l, h]  (row-parallel)
-    wg: Vec<f32>,    // [h, f_l]
-    wu: Vec<f32>,    // [h, f_l]
-    wd: Vec<f32>,    // [f_l, h]   (row-parallel)
+    ln1_g: Vec<f32>,  // [h] (norm gains are always f32)
+    ln2_g: Vec<f32>,  // [h]
+    wq: WeightMat,    // [h, qd_l]
+    wk: WeightMat,    // [h, kvd_l]
+    wv: WeightMat,    // [h, kvd_l]
+    wo: WeightMat,    // [qd_l, h]  (row-parallel)
+    wg: WeightMat,    // [h, f_l]
+    wu: WeightMat,    // [h, f_l]
+    wd: WeightMat,    // [f_l, h]   (row-parallel)
 }
 
 /// One rank's deterministic in-memory model + KV caches.
@@ -374,13 +413,15 @@ pub struct ReferenceBackend {
     n_kv_heads_l: usize,
     ffn_l: usize,
     vocab_l: usize,
-    // weights
+    // weights (dtype per EngineConfig::weight_dtype; embedding and
+    // norm gains stay f32 — DESIGN.md §11)
     embedding: Vec<f32>, // [vocab, h] (replicated)
     layers: Vec<LayerWeights>,
     final_g: Vec<f32>,   // [h] (replicated)
-    lm_head: Vec<f32>,   // [h, vocab_l]
-    /// per-layer (k, v) caches, each [batch, n_kv_heads_l, max_seq, hd]
-    caches: Vec<(Vec<f32>, Vec<f32>)>,
+    lm_head: WeightMat,  // [h, vocab_l]
+    /// per-layer KV planes, [batch, n_kv_heads_l, max_seq, hd] rows in
+    /// the configured `kv_dtype`
+    caches: Vec<KvLayer>,
     /// precomputed NeoX RoPE inverse frequencies, [hd/2]
     rope_inv: Vec<f32>,
     scratch: Scratch,
@@ -421,6 +462,15 @@ impl ReferenceBackend {
             ),
         };
 
+        if cfg.weight_dtype == Dtype::Int8 {
+            ensure!(
+                h % WEIGHT_QUANT_GROUP == 0,
+                "weight_dtype = \"int8\" needs hidden divisible by the \
+                 quant group {WEIGHT_QUANT_GROUP} (model {}, hidden {h})",
+                preset.name
+            );
+        }
+
         let n_heads_l = preset.heads_local(world);
         let n_kv_heads_l = preset.kv_heads_local(world);
         let ffn_l = preset.ffn_local(world);
@@ -428,6 +478,30 @@ impl ReferenceBackend {
         let (qd_l, kvd_l) = (n_heads_l * hd, n_kv_heads_l * hd);
 
         let t = |li: i64, name: &str| tensor_seed(seed, li, name);
+        // quant group per matrix (DESIGN.md §11): the reduction-chunk
+        // width for row-parallel weights (shard- and chunk-aligned by
+        // construction), the fixed group otherwise (k = hidden, which
+        // is replicated)
+        let quant_group = |name: &str| match name {
+            "wo" => qd / REDUCE_CHUNKS,
+            "wd" => preset.ffn / REDUCE_CHUNKS,
+            _ => WEIGHT_QUANT_GROUP,
+        };
+        // one matmul weight, in the configured dtype; INT8 quantizes
+        // the FULL tensor before sharding so `q·s` values are
+        // world-invariant
+        let wm = |name: &str, shape: &[usize], seed_v: u64|
+                  -> Result<WeightMat> {
+            match cfg.weight_dtype {
+                Dtype::F32 => Ok(WeightMat::f32(
+                    synth_shard(name, shape, world, rank, seed_v),
+                    shape[1],
+                )),
+                Dtype::Int8 => Ok(WeightMat::Int8(synth_quant_shard(
+                    name, shape, world, rank, seed_v, quant_group(name),
+                )?)),
+            }
+        };
         let mut layers = Vec::with_capacity(preset.n_layers);
         for li in 0..preset.n_layers as i64 {
             layers.push(LayerWeights {
@@ -435,25 +509,24 @@ impl ReferenceBackend {
                                    t(li, "ln1_g")),
                 ln2_g: synth_shard("ln2_g", &[h], world, rank,
                                    t(li, "ln2_g")),
-                wq: synth_shard("wq", &[h, qd_l], world, rank, t(li, "wq")),
-                wk: synth_shard("wk", &[h, kvd_l], world, rank, t(li, "wk")),
-                wv: synth_shard("wv", &[h, kvd_l], world, rank, t(li, "wv")),
-                wo: synth_shard("wo", &[qd_l, h], world, rank, t(li, "wo")),
-                wg: synth_shard("wg", &[h, ffn_l], world, rank, t(li, "wg")),
-                wu: synth_shard("wu", &[h, ffn_l], world, rank, t(li, "wu")),
-                wd: synth_shard("wd", &[ffn_l, h], world, rank, t(li, "wd")),
+                wq: wm("wq", &[h, qd_l], t(li, "wq"))?,
+                wk: wm("wk", &[h, kvd_l], t(li, "wk"))?,
+                wv: wm("wv", &[h, kvd_l], t(li, "wv"))?,
+                wo: wm("wo", &[qd_l, h], t(li, "wo"))?,
+                wg: wm("wg", &[h, ffn_l], t(li, "wg"))?,
+                wu: wm("wu", &[h, ffn_l], t(li, "wu"))?,
+                wd: wm("wd", &[ffn_l, h], t(li, "wd"))?,
             });
         }
         let embedding = synth_shard("embedding", &[preset.vocab, h], world,
                                     rank, t(-1, "embedding"));
         let final_g =
             synth_shard("final_g", &[h], world, rank, t(-1, "final_g"));
-        let lm_head = synth_shard("lm_head", &[h, vocab_l], world, rank,
-                                  t(-1, "lm_head"));
+        let lm_head = wm("lm_head", &[h, vocab_l], t(-1, "lm_head"))?;
 
-        let cache_len = cfg.batch * n_kv_heads_l * preset.max_seq * hd;
+        let cache_rows = cfg.batch * n_kv_heads_l * preset.max_seq;
         let caches = (0..preset.n_layers)
-            .map(|_| (vec![0.0; cache_len], vec![0.0; cache_len]))
+            .map(|_| KvLayer::new(cfg.kv_dtype, cache_rows, hd))
             .collect();
         let rope_inv = (0..hd / 2)
             .map(|i| {
@@ -508,12 +581,9 @@ impl ReferenceBackend {
 
     /// Column-parallel matmul: `out[j] += Σ_k a[k]·w[k, j]` over the
     /// full (replicated) contraction axis.  `out` must be zeroed.
-    fn col_matmul(a: &[f32], w: &[f32], cols: usize, out: &mut [f32]) {
+    fn col_matmul(a: &[f32], w: &WeightMat, cols: usize, out: &mut [f32]) {
         for (k, &ak) in a.iter().enumerate() {
-            let row = &w[k * cols..(k + 1) * cols];
-            for (o, &wkj) in out[..cols].iter_mut().zip(row) {
-                *o += ak * wkj;
-            }
+            w.mac_row(k, 0, cols, ak, &mut out[..cols]);
         }
     }
 
@@ -551,15 +621,13 @@ impl ReferenceBackend {
         }
 
         {
-            let (kc, vc) = &mut self.caches[li];
+            // quantize-on-append at kv_dtype = int8; plain copy at f32
+            let cache = &mut self.caches[li];
             let t = pos as usize;
             for kh in 0..self.n_kv_heads_l {
-                let dst =
-                    ((lane * self.n_kv_heads_l + kh) * t_max + t) * hd;
-                kc[dst..dst + hd]
-                    .copy_from_slice(&s.k[kh * hd..(kh + 1) * hd]);
-                vc[dst..dst + hd]
-                    .copy_from_slice(&s.v[kh * hd..(kh + 1) * hd]);
+                let row = (lane * self.n_kv_heads_l + kh) * t_max + t;
+                cache.append_row(row, (&s.k[kh * hd..(kh + 1) * hd],
+                                       &s.v[kh * hd..(kh + 1) * hd]));
             }
         }
 
@@ -568,13 +636,21 @@ impl ReferenceBackend {
         s.head.resize(hd, 0.0);
         for qh in 0..self.n_heads_l {
             let kh = qh / group;
-            let (kc, vc) = &self.caches[li];
-            let base = (lane * self.n_kv_heads_l + kh) * t_max * hd;
+            let row0 = (lane * self.n_kv_heads_l + kh) * t_max;
             s.scores.clear();
             s.scores.resize(attend_hi, 0.0);
-            attend_into(kc, vc, base, hd,
-                        &s.q[qh * hd..(qh + 1) * hd], &mut s.scores,
-                        &mut s.head);
+            match &self.caches[li] {
+                KvLayer::F32 { k: kc, v: vc } => {
+                    attend_into(kc, vc, row0 * hd, hd,
+                                &s.q[qh * hd..(qh + 1) * hd],
+                                &mut s.scores, &mut s.head);
+                }
+                KvLayer::Int8 { k: kc, v: vc, k_scale, v_scale } => {
+                    attend_into_q8(kc, k_scale, vc, v_scale, row0, hd,
+                                   &s.q[qh * hd..(qh + 1) * hd],
+                                   &mut s.scores, &mut s.head);
+                }
+            }
             s.ctxv[qh * hd..(qh + 1) * hd].copy_from_slice(&s.head[..hd]);
         }
         let qd_full = self.preset.n_heads * hd;
@@ -694,7 +770,7 @@ impl ReferenceBackend {
         }
 
         if attn_seg {
-            let (kc, vc) = &mut caches[li];
+            let cache = &mut caches[li];
             // Phase P: q/k/v projections — each weight column block
             // streams once for ALL rows
             {
@@ -722,67 +798,156 @@ impl ReferenceBackend {
                 });
             }
 
-            // Phase R: rope q/k and append k/v to the cache, per row.
-            // Disjointness: decode rows are distinct lanes, prefill
-            // rows are distinct positions of one lane.
+            // Phase R: rope q/k and append k/v to the cache, per row —
+            // ONE pool pass (the kv_dtype match sits outside the
+            // dispatch, so the f32 path keeps PR 3's single fork/join
+            // per attention segment).  Disjointness: decode rows are
+            // distinct lanes, prefill rows are distinct positions of
+            // one lane, so the per-(lane, head, pos) cache rows (and
+            // their scale slots) are unique per unit.
             {
                 let qs = DisjointSlices::new(&mut q[..rows * qd_l]);
                 let ks = DisjointSlices::new(&mut k[..rows * kvd_l]);
                 let vr = &v[..rows * kvd_l];
-                let kcs = DisjointSlices::new(&mut kc[..]);
-                let vcs = DisjointSlices::new(&mut vc[..]);
                 let macs = rows * (qd_l + 2 * kvd_l);
-                pool.run_if_worth(rows, macs, thr, &|r| {
-                    let (lane, pos, _hi) = row_meta(ctx, r);
-                    // SAFETY: one row per unit; cache destinations are
-                    // per-(lane,pos) and unique per row
-                    let qrow = unsafe { qs.slice(r * qd_l, qd_l) };
-                    for qh in 0..n_h {
-                        rope_head(&mut qrow[qh * hd..(qh + 1) * hd],
-                                  rope_inv, pos);
+                match cache {
+                    KvLayer::F32 { k: kc, v: vc } => {
+                        let kcs = DisjointSlices::new(&mut kc[..]);
+                        let vcs = DisjointSlices::new(&mut vc[..]);
+                        pool.run_if_worth(rows, macs, thr, &|r| {
+                            let (lane, pos, _hi) = row_meta(ctx, r);
+                            // SAFETY: one row per unit; cache rows are
+                            // per-(lane,pos,head) and unique per row
+                            let qrow =
+                                unsafe { qs.slice(r * qd_l, qd_l) };
+                            for qh in 0..n_h {
+                                rope_head(
+                                    &mut qrow[qh * hd..(qh + 1) * hd],
+                                    rope_inv, pos);
+                            }
+                            let krow =
+                                unsafe { ks.slice(r * kvd_l, kvd_l) };
+                            for kh in 0..n_kv {
+                                rope_head(
+                                    &mut krow[kh * hd..(kh + 1) * hd],
+                                    rope_inv, pos);
+                                let dst = ((lane * n_kv + kh) * t_max
+                                    + pos as usize)
+                                    * hd;
+                                unsafe { kcs.slice(dst, hd) }
+                                    .copy_from_slice(
+                                        &krow[kh * hd..(kh + 1) * hd]);
+                                unsafe { vcs.slice(dst, hd) }
+                                    .copy_from_slice(
+                                        &vr[r * kvd_l + kh * hd
+                                            ..r * kvd_l
+                                                + (kh + 1) * hd]);
+                            }
+                        });
                     }
-                    let krow = unsafe { ks.slice(r * kvd_l, kvd_l) };
-                    for kh in 0..n_kv {
-                        rope_head(&mut krow[kh * hd..(kh + 1) * hd],
-                                  rope_inv, pos);
-                        let dst = ((lane * n_kv + kh) * t_max
-                            + pos as usize)
-                            * hd;
-                        unsafe { kcs.slice(dst, hd) }.copy_from_slice(
-                            &krow[kh * hd..(kh + 1) * hd]);
-                        unsafe { vcs.slice(dst, hd) }.copy_from_slice(
-                            &vr[r * kvd_l + kh * hd
-                                ..r * kvd_l + (kh + 1) * hd]);
+                    KvLayer::Int8 { k: kc, v: vc, k_scale, v_scale } => {
+                        let kcs = DisjointSlices::new(&mut kc[..]);
+                        let vcs = DisjointSlices::new(&mut vc[..]);
+                        let kss = DisjointSlices::new(&mut k_scale[..]);
+                        let vss = DisjointSlices::new(&mut v_scale[..]);
+                        pool.run_if_worth(rows, macs, thr, &|r| {
+                            let (lane, pos, _hi) = row_meta(ctx, r);
+                            // SAFETY: one row per unit; cache rows and
+                            // their scale slots are per-(lane,pos,head)
+                            // and unique per row
+                            let qrow =
+                                unsafe { qs.slice(r * qd_l, qd_l) };
+                            for qh in 0..n_h {
+                                rope_head(
+                                    &mut qrow[qh * hd..(qh + 1) * hd],
+                                    rope_inv, pos);
+                            }
+                            let krow =
+                                unsafe { ks.slice(r * kvd_l, kvd_l) };
+                            for kh in 0..n_kv {
+                                rope_head(
+                                    &mut krow[kh * hd..(kh + 1) * hd],
+                                    rope_inv, pos);
+                                let row = (lane * n_kv + kh) * t_max
+                                    + pos as usize;
+                                let kq = unsafe {
+                                    kcs.slice(row * hd, hd)
+                                };
+                                unsafe { kss.slice(row, 1) }[0] =
+                                    quant_row_into(
+                                        &krow[kh * hd..(kh + 1) * hd],
+                                        kq);
+                                let vq = unsafe {
+                                    vcs.slice(row * hd, hd)
+                                };
+                                unsafe { vss.slice(row, 1) }[0] =
+                                    quant_row_into(
+                                        &vr[r * kvd_l + kh * hd
+                                            ..r * kvd_l
+                                                + (kh + 1) * hd],
+                                        vq);
+                            }
+                        });
                     }
-                });
+                }
             }
 
-            // Phase A: attention per row over the (fully written) cache
+            // Phase A: attention per row over the (fully written)
+            // cache, dequantizing int8 rows inside the inner products
             {
                 let ctxs = DisjointSlices::new(&mut ctxv[..rows * qd_l]);
                 let scs =
                     DisjointSlices::new(&mut scores[..rows * t_max]);
                 let qr = &q[..rows * qd_l];
-                let kcr = &kc[..];
-                let vcr = &vc[..];
                 let macs = rows * n_h * hi_max * hd * 2;
-                pool.run_if_worth(rows, macs, thr, &|r| {
-                    let (lane, _pos, hi) = row_meta(ctx, r);
-                    // SAFETY: one row per unit
-                    let sc = unsafe { scs.slice(r * t_max, t_max) };
-                    let out = unsafe { ctxs.slice(r * qd_l, qd_l) };
-                    for qh in 0..n_h {
-                        let kh = qh / group;
-                        let base = (lane * n_kv + kh) * t_max * hd;
-                        attend_into(
-                            kcr, vcr, base, hd,
-                            &qr[r * qd_l + qh * hd
-                                ..r * qd_l + (qh + 1) * hd],
-                            &mut sc[..hi],
-                            &mut out[qh * hd..(qh + 1) * hd],
-                        );
+                match cache {
+                    KvLayer::F32 { k: kc, v: vc } => {
+                        let (kcr, vcr) = (&kc[..], &vc[..]);
+                        pool.run_if_worth(rows, macs, thr, &|r| {
+                            let (lane, _pos, hi) = row_meta(ctx, r);
+                            // SAFETY: one row per unit
+                            let sc =
+                                unsafe { scs.slice(r * t_max, t_max) };
+                            let out =
+                                unsafe { ctxs.slice(r * qd_l, qd_l) };
+                            for qh in 0..n_h {
+                                let kh = qh / group;
+                                let base = (lane * n_kv + kh) * t_max
+                                    * hd;
+                                attend_into(
+                                    kcr, vcr, base, hd,
+                                    &qr[r * qd_l + qh * hd
+                                        ..r * qd_l + (qh + 1) * hd],
+                                    &mut sc[..hi],
+                                    &mut out[qh * hd..(qh + 1) * hd],
+                                );
+                            }
+                        });
                     }
-                });
+                    KvLayer::Int8 { k: kc, v: vc, k_scale, v_scale } => {
+                        let (kcr, vcr) = (&kc[..], &vc[..]);
+                        let (ksr, vsr) = (&k_scale[..], &v_scale[..]);
+                        pool.run_if_worth(rows, macs, thr, &|r| {
+                            let (lane, _pos, hi) = row_meta(ctx, r);
+                            // SAFETY: one row per unit
+                            let sc =
+                                unsafe { scs.slice(r * t_max, t_max) };
+                            let out =
+                                unsafe { ctxs.slice(r * qd_l, qd_l) };
+                            for qh in 0..n_h {
+                                let kh = qh / group;
+                                let row0 = (lane * n_kv + kh) * t_max;
+                                attend_into_q8(
+                                    kcr, ksr, vcr, vsr, row0, hd,
+                                    &qr[r * qd_l + qh * hd
+                                        ..r * qd_l + (qh + 1) * hd],
+                                    &mut sc[..hi],
+                                    &mut out[qh * hd..(qh + 1) * hd],
+                                );
+                            }
+                        });
+                    }
+                }
             }
 
             // Phase O: context @ wo row-parallel partial
@@ -931,7 +1096,7 @@ impl ExecBackend for ReferenceBackend {
                 blk.h_n.resize(b * h, 0.0);
                 let h_n = &mut blk.h_n;
                 let final_g = &final_g[..];
-                let lm_w = &lm_head[..];
+                let lm_w = &*lm_head;
                 {
                     let outs = DisjointSlices::new(&mut h_n[..b * h]);
                     pool.run_if_worth(b, b * h * 2, thr, &|r| {
@@ -958,11 +1123,27 @@ impl ExecBackend for ReferenceBackend {
     }
 
     fn reset(&mut self) -> Result<()> {
-        for (kc, vc) in &mut self.caches {
-            kc.fill(0.0);
-            vc.fill(0.0);
+        for layer in &mut self.caches {
+            layer.reset();
         }
         Ok(())
+    }
+
+    fn mem_usage(&self) -> MemUsage {
+        let mut weight_bytes =
+            ((self.embedding.len() + self.final_g.len()) * 4) as u64;
+        weight_bytes += self.lm_head.bytes();
+        for lw in &self.layers {
+            weight_bytes +=
+                ((lw.ln1_g.len() + lw.ln2_g.len()) * 4) as u64;
+            for m in [&lw.wq, &lw.wk, &lw.wv, &lw.wo, &lw.wg, &lw.wu,
+                      &lw.wd]
+            {
+                weight_bytes += m.bytes();
+            }
+        }
+        let kv_bytes = self.caches.iter().map(KvLayer::bytes).sum();
+        MemUsage { weight_bytes, kv_bytes }
     }
 }
 
@@ -1183,5 +1364,135 @@ mod tests {
         let preset = ModelPreset::builtin(&c.model).unwrap();
         let be = ReferenceBackend::new(&c, 0, &preset).unwrap();
         assert_eq!(be.threads(), 1);
+    }
+
+    fn int8_cfg(world: usize, batch: usize) -> EngineConfig {
+        let mut c = cfg(world, batch);
+        c.weight_dtype = Dtype::Int8;
+        c.kv_dtype = Dtype::Int8;
+        c
+    }
+
+    /// At int8 the same invariant as f32 must hold: blocking, tiling
+    /// and threading are scheduling-only — every partial and logit is
+    /// bit-identical to the scalar int8 path.
+    #[test]
+    fn int8_blocked_kernel_bit_identical_to_scalar() {
+        for variant in [Variant::Parallel, Variant::Serial] {
+            let mut base = int8_cfg(2, 1);
+            base.variant = variant;
+            base.kernel = GemmKernel::Scalar;
+            let golden = forward_fingerprint(&base, false);
+            for threads in [1usize, 3] {
+                let mut blocked = base.clone();
+                blocked.kernel = GemmKernel::Blocked;
+                blocked.threads = threads;
+                let got = forward_fingerprint(&blocked, threads > 1);
+                assert_bits_eq(
+                    &golden,
+                    &got,
+                    &format!("int8 blocked x{threads} vs scalar \
+                              ({variant})"),
+                );
+            }
+        }
+    }
+
+    /// Cross-world exactness at int8: the dequantized weights are
+    /// sliced from one full-tensor quantization grid, so rank partials
+    /// must still sum bit-identically at every world size.
+    #[test]
+    fn int8_decode_partials_sum_identically_across_worlds() {
+        let h = 64;
+        let x: Vec<f32> =
+            (0..h).map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.05).collect();
+        let mut sums: Vec<Vec<f32>> = Vec::new();
+        for world in [1usize, 2, 4] {
+            let mut total = vec![0.0f32; h];
+            for rank in 0..world {
+                let c = int8_cfg(world, 1);
+                let preset = ModelPreset::builtin(&c.model).unwrap();
+                let mut be =
+                    ReferenceBackend::new(&c, rank, &preset).unwrap();
+                let mut part = vec![0.0f32; h];
+                let ctx = StepCtx::Decode { positions: &[0] };
+                be.layer_partial(&ctx, 0, 0, &x, &mut part).unwrap();
+                for (t, p) in total.iter_mut().zip(&part) {
+                    *t += *p;
+                }
+            }
+            sums.push(total);
+        }
+        for w in 1..sums.len() {
+            for j in 0..h {
+                assert_eq!(
+                    sums[0][j].to_bits(),
+                    sums[w][j].to_bits(),
+                    "int8 col {j} differs between world 1 and {}",
+                    [1, 2, 4][w]
+                );
+            }
+        }
+    }
+
+    /// int8 must actually change the resident footprint — and the
+    /// logits, or the quantized path silently fell back to f32.  On
+    /// `tiny` (head_dim 8) the KV ratio is (8 + 4)/(4·8) = 0.375 (the
+    /// per-row scale is proportionally large), so the bound is <½;
+    /// wide-head presets reach ~0.26.
+    #[test]
+    fn int8_shrinks_memory_and_perturbs_logits() {
+        let preset = ModelPreset::builtin("tiny").unwrap();
+        let f = ReferenceBackend::new(&cfg(1, 1), 0, &preset).unwrap();
+        let q = ReferenceBackend::new(&int8_cfg(1, 1), 0, &preset)
+            .unwrap();
+        let (fm, qm) = (f.mem_usage(), q.mem_usage());
+        assert!(fm.weight_bytes > 0 && fm.kv_bytes > 0);
+        // the replicated f32 embedding dominates tiny's weights, so
+        // only the matmul portion shrinks — still strictly smaller
+        assert!(qm.weight_bytes < fm.weight_bytes,
+                "int8 weights {} !< f32 {}", qm.weight_bytes,
+                fm.weight_bytes);
+        assert!(qm.kv_bytes * 2 < fm.kv_bytes,
+                "int8 kv {} not well under half of f32 {}", qm.kv_bytes,
+                fm.kv_bytes);
+
+        let f32_fp = forward_fingerprint(&cfg(1, 1), false);
+        let int8_fp = forward_fingerprint(&int8_cfg(1, 1), false);
+        let identical = f32_fp
+            .iter()
+            .zip(&int8_fp)
+            .all(|(a, b)| {
+                a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+            });
+        assert!(!identical,
+                "int8 logits bit-identical to f32 — quantized path \
+                 not engaged");
+    }
+
+    /// Mixed dtypes are legal: each knob works independently.
+    #[test]
+    fn mixed_dtypes_run_and_reset() {
+        for (wd, kd) in [(Dtype::Int8, Dtype::F32),
+                         (Dtype::F32, Dtype::Int8)] {
+            let mut c = cfg(1, 1);
+            c.weight_dtype = wd;
+            c.kv_dtype = kd;
+            let preset = ModelPreset::builtin(&c.model).unwrap();
+            let mut be =
+                ReferenceBackend::new(&c, 0, &preset).unwrap();
+            let h = preset.hidden;
+            let ctx = StepCtx::Prefill { lane: 0, bucket: 4, length: 4 };
+            let mut x = vec![0.0f32; 4 * h];
+            be.embed(&ctx, &[1, 2, 3, 4], &mut x).unwrap();
+            let mut p1 = vec![0.0f32; 4 * h];
+            be.layer_partial(&ctx, 0, 0, &x, &mut p1).unwrap();
+            be.reset().unwrap();
+            let mut p2 = vec![0.0f32; 4 * h];
+            be.layer_partial(&ctx, 0, 0, &x, &mut p2).unwrap();
+            assert_eq!(p1, p2,
+                       "reset must reproduce the first run at \
+                        weight={wd:?} kv={kd:?}");
+        }
     }
 }

@@ -32,6 +32,9 @@ struct SegIds {
     layer_prefill: HashMap<usize, Vec<(String, Vec<String>)>>,
 }
 
+/// One rank's PJRT-backed compute provider: compiled HLO segments,
+/// device-resident weight shards and KV caches (f32 only — quantized
+/// dtypes are a reference-backend feature, DESIGN.md §11).
 pub struct XlaBackend {
     batch: usize,
     hidden: usize,

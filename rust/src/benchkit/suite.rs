@@ -6,9 +6,11 @@
 //! rank workers, collectives, continuous batching, sampling — exactly
 //! like production traffic.  [`run_matrix`] sweeps the standard
 //! scenarios over tensor-parallel world sizes plus the scalar-kernel
-//! baseline, and the results serialize to the stable
-//! `xeonserve-bench/v1` JSON schema (`BENCH_*.json`) so any later PR
-//! can diff its hot-path numbers against the recorded trajectory.
+//! baseline and the int8 weights+KV rows (DESIGN.md §11), and the
+//! results serialize to the stable `xeonserve-bench/v1` JSON schema
+//! (`BENCH_*.json`) — every row carrying its dtype and measured
+//! resident bytes — so any later PR can diff its hot-path numbers
+//! against the recorded trajectory.
 //!
 //! Scenario → paper mapping (DESIGN.md §10 has the full table):
 //! `single_stream_decode` mirrors the §3 headline measurement
@@ -24,7 +26,7 @@ use anyhow::{bail, Context, Result};
 use crate::backend::pool::auto_threads;
 use crate::benchkit::CaseResult;
 use crate::ccl::StatsSnapshot;
-use crate::config::{BackendKind, EngineConfig, GemmKernel};
+use crate::config::{BackendKind, Dtype, EngineConfig, GemmKernel};
 use crate::engine::Engine;
 use crate::util::Json;
 
@@ -95,7 +97,7 @@ pub fn standard_suite() -> Vec<Scenario> {
     ]
 }
 
-/// One recorded (scenario × world × kernel × threads) run.
+/// One recorded (scenario × world × kernel × threads × dtype) run.
 #[derive(Clone, Debug)]
 pub struct ScenarioRecord {
     /// scenario name (see [`standard_suite`])
@@ -107,6 +109,18 @@ pub struct ScenarioRecord {
     pub threads: usize,
     /// GEMM kernel the reference backend ran
     pub kernel: GemmKernel,
+    /// execution backend that measured this row (int8 rows only exist
+    /// for `reference` — DESIGN.md §11)
+    pub backend: BackendKind,
+    /// weight storage dtype of the run (DESIGN.md §11)
+    pub weight_dtype: Dtype,
+    /// KV-cache storage dtype of the run
+    pub kv_dtype: Dtype,
+    /// measured resident weight bytes, summed over ranks (0 = the
+    /// backend doesn't measure)
+    pub weight_bytes: u64,
+    /// measured resident KV bytes, summed over ranks
+    pub kv_bytes: u64,
     /// decode batch lanes
     pub batch: usize,
     /// requests served
@@ -147,6 +161,11 @@ impl ScenarioRecord {
         put("world", Json::Num(self.world as f64));
         put("threads", Json::Num(self.threads as f64));
         put("kernel", Json::Str(self.kernel.to_string()));
+        put("backend", Json::Str(self.backend.to_string()));
+        put("weight_dtype", Json::Str(self.weight_dtype.to_string()));
+        put("kv_dtype", Json::Str(self.kv_dtype.to_string()));
+        put("weight_bytes", Json::Num(self.weight_bytes as f64));
+        put("kv_bytes", Json::Num(self.kv_bytes as f64));
         put("batch", Json::Num(self.batch as f64));
         put("requests", Json::Num(self.requests as f64));
         put("ms_per_token", Json::Num(self.ms_per_token));
@@ -179,9 +198,16 @@ impl ScenarioRecord {
 
     /// Condense to a [`CaseResult`] row for the human table.
     pub fn to_case(&self) -> CaseResult {
+        // label both dtypes when they differ so mixed-dtype rows never
+        // collide with pure rows in the table
+        let dtype = if self.weight_dtype == self.kv_dtype {
+            self.weight_dtype.to_string()
+        } else {
+            format!("{}+kv{}", self.weight_dtype, self.kv_dtype)
+        };
         CaseResult {
-            name: format!("{}_w{}_{}x{}", self.name, self.world,
-                          self.kernel, self.threads),
+            name: format!("{}_w{}_{}x{}_{}", self.name, self.world,
+                          self.kernel, self.threads, dtype),
             iters: self.tokens_out as usize,
             mean_us: self.ms_per_token * 1e3,
             p50_us: self.decode_p50_us,
@@ -192,6 +218,9 @@ impl ScenarioRecord {
         .with("sim_ms", format!("{:.2}", self.ms_per_token_sim))
         .with("ttft_ms", format!("{:.2}", self.ttft_ms))
         .with("tok_s", format!("{:.1}", self.tokens_per_s))
+        .with("mem_mb", format!("{:.0}",
+                                (self.weight_bytes + self.kv_bytes)
+                                    as f64 / 1e6))
     }
 }
 
@@ -238,6 +267,7 @@ pub fn run_scenario(cfg: &EngineConfig, sc: &Scenario)
         }
         _ => 0,
     };
+    let mem = engine.mem_usage();
     let m = &mut engine.metrics;
     let tokens_per_s = m.throughput(span);
     // decode steps emit (tokens_out - requests_done) tokens: each
@@ -257,6 +287,11 @@ pub fn run_scenario(cfg: &EngineConfig, sc: &Scenario)
         world: cfg.world,
         threads,
         kernel: cfg.kernel,
+        backend: cfg.backend,
+        weight_dtype: cfg.weight_dtype,
+        kv_dtype: cfg.kv_dtype,
+        weight_bytes: mem.weight_bytes,
+        kv_bytes: mem.kv_bytes,
         batch: sc.batch,
         requests: sc.requests,
         ms_per_token: per_token(m.decode_wall.mean_us()),
@@ -276,12 +311,18 @@ pub fn run_scenario(cfg: &EngineConfig, sc: &Scenario)
 /// Sweep the scenario suite over `worlds`, recording every scenario on
 /// the blocked kernel plus, for `batched_decode`, the scalar baseline
 /// and a single-threaded blocked run — the rows the ≥2× batched-decode
-/// acceptance gate compares.
+/// acceptance gate compares.  The decode-dominated scenarios
+/// (`single_stream_decode`, `batched_decode`) additionally record an
+/// `int8` weights+KV row next to the `f32` row, so every recording
+/// carries its own quantization comparison (DESIGN.md §11).
 ///
 /// Blocked rows run at a FIXED 2 threads when `base.threads` is 0
 /// (auto): a host-independent thread count keeps `BENCH_*.json`
 /// recordings comparable across machines.  An explicit `--threads N`
 /// overrides it (floored at 2 so the threaded row always exists).
+/// Row dtypes are likewise pinned (`f32` standard rows, `int8` quant
+/// rows) regardless of the base config, so recordings always compare
+/// like with like.
 pub fn run_matrix(base: &EngineConfig, worlds: &[usize], quick: bool,
                   mut progress: impl FnMut(&str)) -> Result<Vec<ScenarioRecord>> {
     let scenarios: Vec<Scenario> = standard_suite()
@@ -294,24 +335,38 @@ pub fn run_matrix(base: &EngineConfig, worlds: &[usize], quick: bool,
             let mut cfg = base.clone();
             cfg.world = world;
             cfg.kernel = GemmKernel::Blocked;
+            cfg.weight_dtype = Dtype::F32;
+            cfg.kv_dtype = Dtype::F32;
             cfg.threads = if base.threads == 0 {
                 2
             } else {
                 auto_threads(base.threads, world).max(2)
             };
-            progress(&format!("{} w{world} blocked x{}", sc.name,
+            progress(&format!("{} w{world} blocked x{} f32", sc.name,
                               cfg.threads));
             out.push(run_scenario(&cfg, sc)?);
+            // int8 rows are a reference-backend feature; on an XLA
+            // config the sweep stays f32-only instead of aborting on
+            // the validate() dtype rejection
+            if cfg.backend == BackendKind::Reference
+                && matches!(sc.name.as_str(),
+                            "single_stream_decode" | "batched_decode")
+            {
+                let mut q8 = cfg.clone();
+                q8.weight_dtype = Dtype::Int8;
+                q8.kv_dtype = Dtype::Int8;
+                progress(&format!("{} w{world} blocked x{} int8",
+                                  sc.name, q8.threads));
+                out.push(run_scenario(&q8, sc)?);
+            }
             if sc.name == "batched_decode" {
-                let mut scalar = base.clone();
-                scalar.world = world;
+                let mut scalar = cfg.clone();
                 scalar.kernel = GemmKernel::Scalar;
                 scalar.threads = 1;
                 progress(&format!("{} w{world} scalar baseline",
                                   sc.name));
                 out.push(run_scenario(&scalar, sc)?);
-                let mut one = base.clone();
-                one.world = world;
+                let mut one = cfg.clone();
                 one.kernel = GemmKernel::Blocked;
                 one.threads = 1;
                 progress(&format!("{} w{world} blocked x1", sc.name));
@@ -351,27 +406,39 @@ pub fn matrix_to_json(bench: &str, model: &str, quick: bool,
     Json::Obj(o)
 }
 
+/// `ms_per_token` of the first `batched_decode` row matching (world,
+/// kernel, ≥ min threads) whose weight AND KV dtypes both equal
+/// `dtype` — mixed-dtype rows never enter a speedup figure, since
+/// they'd compare different numeric contracts.  Rows recorded before
+/// the dtype fields existed are treated as `f32`.
+fn find_batched_ms(rows: &[Json], world: usize, kernel: &str,
+                   min_threads: usize, dtype: &str) -> Option<f64> {
+    rows.iter().find_map(|r| {
+        let name = r.get("name")?.as_str()?;
+        let w = r.get("world")?.as_usize()?;
+        let k = r.get("kernel")?.as_str()?;
+        let t = r.get("threads")?.as_usize()?;
+        let wd = r.get("weight_dtype").and_then(Json::as_str)
+            .unwrap_or("f32");
+        let kd = r.get("kv_dtype").and_then(Json::as_str)
+            .unwrap_or("f32");
+        if name == "batched_decode" && w == world && k == kernel
+            && t >= min_threads && wd == dtype && kd == dtype
+        {
+            r.get("ms_per_token")?.as_f64()
+        } else {
+            None
+        }
+    })
+}
+
 /// Batched-decode speedup of the threaded blocked kernel over the
-/// scalar baseline at world `w` (`None` if either row is missing).
+/// scalar baseline at world `w`, both at f32 (`None` if either row is
+/// missing).
 pub fn batched_speedup(j: &Json, world: usize) -> Option<f64> {
     let rows = j.get("scenarios")?.as_arr()?;
-    let find = |kernel: &str, min_threads: usize| -> Option<f64> {
-        rows.iter().find_map(|r| {
-            let name = r.get("name")?.as_str()?;
-            let w = r.get("world")?.as_usize()?;
-            let k = r.get("kernel")?.as_str()?;
-            let t = r.get("threads")?.as_usize()?;
-            if name == "batched_decode" && w == world && k == kernel
-                && t >= min_threads
-            {
-                r.get("ms_per_token")?.as_f64()
-            } else {
-                None
-            }
-        })
-    };
-    let scalar = find("scalar", 1)?;
-    let blocked = find("blocked", 2)?;
+    let scalar = find_batched_ms(rows, world, "scalar", 1, "f32")?;
+    let blocked = find_batched_ms(rows, world, "blocked", 2, "f32")?;
     if blocked > 0.0 {
         Some(scalar / blocked)
     } else {
@@ -379,14 +446,31 @@ pub fn batched_speedup(j: &Json, world: usize) -> Option<f64> {
     }
 }
 
+/// Batched-decode speedup of int8 weights+KV over f32 on the threaded
+/// blocked kernel at world `w` — the DESIGN.md §11 acceptance figure
+/// (`None` if either row is missing).
+pub fn int8_speedup(j: &Json, world: usize) -> Option<f64> {
+    let rows = j.get("scenarios")?.as_arr()?;
+    let f32_ms = find_batched_ms(rows, world, "blocked", 2, "f32")?;
+    let int8_ms = find_batched_ms(rows, world, "blocked", 2, "int8")?;
+    if int8_ms > 0.0 {
+        Some(f32_ms / int8_ms)
+    } else {
+        None
+    }
+}
+
 /// Structural + coverage validation of a `xeonserve-bench/v1`
 /// document (the CI bench-smoke gate).  Checks the schema tag, the
-/// per-row field types, and that the rows cover every world the
-/// document's `worlds` field declares × ≥4 scenarios, including the
-/// threaded-vs-scalar batched-decode pair the acceptance gate reads —
-/// so a `--worlds 2` recording validates against its own sweep, while
-/// the committed full recordings must actually contain what they
-/// claim.
+/// per-row field types — including the dtype and memory-bytes fields
+/// every row must carry since DESIGN.md §11 — and that the rows cover
+/// every world the document's `worlds` field declares × ≥4 scenarios,
+/// including the threaded-vs-scalar batched-decode pair and the
+/// int8-vs-f32 batched-decode pair the acceptance gates read — so a
+/// `--worlds 2` recording validates against its own sweep, while the
+/// committed full recordings must actually contain what they claim.
+/// (Pre-§11 recordings without dtype fields no longer validate;
+/// regenerate them.)
 pub fn validate_bench(j: &Json) -> Result<()> {
     match j.get("schema").and_then(Json::as_str) {
         Some(s) if s == SCHEMA => {}
@@ -418,16 +502,23 @@ pub fn validate_bench(j: &Json) -> Result<()> {
     let mut worlds = std::collections::BTreeSet::new();
     let mut batched_scalar = false;
     let mut batched_threaded = false;
+    let mut batched_int8 = false;
+    let mut any_reference = false;
     for (i, r) in rows.iter().enumerate() {
         let ctx = || format!("scenario row {i}");
         let name = r.get("name").and_then(Json::as_str)
             .with_context(|| format!("{}: missing name", ctx()))?;
         for key in ["world", "threads", "batch", "requests",
                     "decode_p50_us", "decode_p95_us", "prefill_p50_us",
-                    "tokens_out", "requests_done"] {
-            r.get(key).and_then(Json::as_f64).with_context(|| {
+                    "tokens_out", "requests_done", "weight_bytes",
+                    "kv_bytes"] {
+            let v = r.get(key).and_then(Json::as_f64).with_context(|| {
                 format!("{}: missing numeric field {key:?}", ctx())
             })?;
+            if !v.is_finite() || v < 0.0 {
+                bail!("{}: {key} = {v} must be a non-negative number",
+                      ctx());
+            }
         }
         for key in ["ms_per_token", "ms_per_step", "ms_per_token_sim",
                     "ttft_ms", "tokens_per_s"] {
@@ -443,15 +534,41 @@ pub fn validate_bench(j: &Json) -> Result<()> {
         if kernel != "blocked" && kernel != "scalar" {
             bail!("{}: unknown kernel {kernel:?}", ctx());
         }
+        let backend = r.get("backend").and_then(Json::as_str)
+            .with_context(|| format!("{}: missing backend", ctx()))?;
+        if backend != "reference" && backend != "xla" {
+            bail!("{}: unknown backend {backend:?}", ctx());
+        }
+        // every row must say what numeric contract it measured —
+        // cross-dtype comparisons are meaningless without it
+        let mut dtypes = [""; 2];
+        for (slot, key) in
+            dtypes.iter_mut().zip(["weight_dtype", "kv_dtype"])
+        {
+            let d = r.get(key).and_then(Json::as_str).with_context(
+                || format!("{}: missing dtype field {key:?}", ctx()))?;
+            if d != "f32" && d != "int8" {
+                bail!("{}: unknown {key} {d:?}", ctx());
+            }
+            *slot = d;
+        }
         r.get("comm").and_then(Json::as_obj)
             .with_context(|| format!("{}: missing comm object", ctx()))?;
         let world = r.get("world").and_then(Json::as_usize).unwrap();
         let threads = r.get("threads").and_then(Json::as_usize).unwrap();
         names.insert(name.to_string());
         worlds.insert(world);
+        any_reference |= backend == "reference";
         if name == "batched_decode" {
-            batched_scalar |= kernel == "scalar";
-            batched_threaded |= kernel == "blocked" && threads >= 2;
+            let f32_row = dtypes == ["f32", "f32"];
+            batched_scalar |= kernel == "scalar" && f32_row;
+            batched_threaded |=
+                kernel == "blocked" && threads >= 2 && f32_row;
+            // threads >= 2 mirrors the f32 gate AND int8_speedup()'s
+            // filter, so a certified document always yields the §11
+            // acceptance figure
+            batched_int8 |= kernel == "blocked" && threads >= 2
+                && dtypes == ["int8", "int8"];
         }
     }
     if names.len() < 4 {
@@ -463,11 +580,20 @@ pub fn validate_bench(j: &Json) -> Result<()> {
             bail!("declared world={w} has no rows (rows cover {worlds:?})");
         }
     }
-    if !batched_scalar {
-        bail!("no scalar-kernel batched_decode baseline row");
+    // the kernel/threads/dtype acceptance pairs are reference-backend
+    // semantics (the XLA backend ignores the GEMM knobs and has no
+    // int8 path — run_matrix skips those rows there), so an XLA-only
+    // recording is exempt from the pair gates
+    if any_reference && !batched_scalar {
+        bail!("no scalar-kernel f32 batched_decode baseline row");
     }
-    if !batched_threaded {
-        bail!("no blocked batched_decode row with threads >= 2");
+    if any_reference && !batched_threaded {
+        bail!("no blocked f32 batched_decode row with threads >= 2");
+    }
+    if any_reference && !batched_int8 {
+        bail!("no int8 batched_decode row (the DESIGN.md §11 \
+               quantization gate needs the int8-vs-f32 pair on \
+               reference-backend recordings)");
     }
     Ok(())
 }
@@ -529,11 +655,46 @@ mod tests {
         assert!(rec.tokens_out > 0);
         assert!(rec.ms_per_token >= 0.0);
         assert!(rec.comm.allreduces > 0);
+        // the reference backend measures its footprint
+        assert!(rec.weight_bytes > 0 && rec.kv_bytes > 0);
         let j = Json::parse(&rec.to_json().to_string()).unwrap();
         assert_eq!(j.get("name").and_then(Json::as_str),
                    Some("batched_decode"));
         assert_eq!(j.get("kernel").and_then(Json::as_str),
                    Some("blocked"));
+        assert_eq!(j.get("backend").and_then(Json::as_str),
+                   Some("reference"));
+        assert_eq!(j.get("weight_dtype").and_then(Json::as_str),
+                   Some("f32"));
+        assert_eq!(j.get("kv_dtype").and_then(Json::as_str),
+                   Some("f32"));
+        assert!(j.get("weight_bytes").and_then(Json::as_u64).unwrap() > 0);
+        assert!(j.get("kv_bytes").and_then(Json::as_u64).unwrap() > 0);
+    }
+
+    #[test]
+    fn int8_scenario_records_smaller_footprint() {
+        let mut f32_cfg = tiny_cfg();
+        f32_cfg.world = 1;
+        f32_cfg.threads = 2;
+        let mut q8_cfg = f32_cfg.clone();
+        q8_cfg.weight_dtype = crate::config::Dtype::Int8;
+        q8_cfg.kv_dtype = crate::config::Dtype::Int8;
+        let sc = standard_suite()
+            .into_iter()
+            .find(|s| s.name == "batched_decode")
+            .unwrap()
+            .quicken();
+        let f = run_scenario(&f32_cfg, &sc).unwrap();
+        let q = run_scenario(&q8_cfg, &sc).unwrap();
+        assert!(q.weight_bytes < f.weight_bytes);
+        // tiny's head_dim 8 puts the int8 KV ratio at 0.375, not ~¼
+        assert!(q.kv_bytes * 2 < f.kv_bytes);
+        let j = Json::parse(&q.to_json().to_string()).unwrap();
+        assert_eq!(j.get("weight_dtype").and_then(Json::as_str),
+                   Some("int8"));
+        assert_eq!(j.get("kv_dtype").and_then(Json::as_str),
+                   Some("int8"));
     }
 
     #[test]
@@ -556,11 +717,33 @@ mod tests {
         let parsed = Json::parse(&doc.to_string()).unwrap();
         validate_bench(&parsed).unwrap();
         assert!(batched_speedup(&parsed, 1).is_some());
+        assert!(int8_speedup(&parsed, 1).is_some());
 
         // a narrower sweep validates against its own declared worlds
         let narrow = matrix_to_json("unit", "tiny", true, &[1], &recs);
         validate_bench(&Json::parse(&narrow.to_string()).unwrap())
             .unwrap();
+    }
+
+    #[test]
+    fn validation_requires_dtype_and_memory_fields() {
+        let recs =
+            run_matrix(&tiny_cfg(), &[1], true, |_| {}).unwrap();
+        let doc = matrix_to_json("unit", "tiny", true, &[1], &recs);
+        let text = doc.to_string();
+        // strip each required §11 field in turn; validation must fail
+        for field in ["weight_dtype", "kv_dtype", "weight_bytes",
+                      "kv_bytes", "backend"] {
+            let crippled =
+                text.replace(&format!("\"{field}\""),
+                             &format!("\"x_{field}\""));
+            let parsed = Json::parse(&crippled).unwrap();
+            assert!(validate_bench(&parsed).is_err(),
+                    "validator accepted a document without {field}");
+        }
+        // a bogus dtype string must also fail
+        let bad = text.replace("\"int8\"", "\"int4\"");
+        assert!(validate_bench(&Json::parse(&bad).unwrap()).is_err());
     }
 
     #[test]

@@ -130,6 +130,51 @@ impl std::fmt::Display for GemmKernel {
     }
 }
 
+/// Numeric storage of a tensor family on the reference backend's hot
+/// path (DESIGN.md §11).
+///
+/// * `F32` — dense 4-byte floats (the default; exact).
+/// * `Int8` — per-block symmetric INT8 with f32 scales
+///   ([`crate::backend::quant`]): ~3.8× fewer resident (and streamed)
+///   bytes for weights, ~3.9× for KV — the lever for memory-limited
+///   nodes and bandwidth-bound decode.  Greedy decode stays
+///   bit-identical across thread counts and world sizes *at a fixed
+///   dtype*; changing the dtype changes the logits (quantization
+///   error), so recordings must never compare across dtypes silently —
+///   which is why the bench schema carries the dtype per row.
+///
+/// The XLA backend has no quantized artifacts; configs selecting it
+/// with a non-f32 dtype are rejected at validation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Dtype {
+    /// Dense 4-byte floats.
+    #[default]
+    F32,
+    /// Per-block symmetric INT8 + f32 scales.
+    Int8,
+}
+
+impl Dtype {
+    /// Strict parse of the TOML/CLI spelling; unknown strings are a
+    /// clean config error, never a silent fallback.
+    pub fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "int8" => Ok(Dtype::Int8),
+            _ => bail!("unknown dtype {s:?} (f32|int8)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Dtype::F32 => write!(f, "f32"),
+            Dtype::Int8 => write!(f, "int8"),
+        }
+    }
+}
+
 /// The paper's three optimizations as independent switches, so every
 /// bench can ablate them one at a time.
 #[derive(Clone, Copy, Debug)]
@@ -213,6 +258,12 @@ pub struct EngineConfig {
     pub threads: usize,
     /// reference-backend GEMM implementation (blocked | scalar)
     pub kernel: GemmKernel,
+    /// weight storage on the reference backend (f32 | int8) —
+    /// DESIGN.md §11
+    pub weight_dtype: Dtype,
+    /// KV-cache storage on the reference backend (f32 | int8) —
+    /// DESIGN.md §11
+    pub kv_dtype: Dtype,
 }
 
 impl Default for EngineConfig {
@@ -231,6 +282,8 @@ impl Default for EngineConfig {
             max_new_tokens: 16,
             threads: 0,
             kernel: GemmKernel::Blocked,
+            weight_dtype: Dtype::F32,
+            kv_dtype: Dtype::F32,
         }
     }
 }
@@ -273,6 +326,12 @@ impl EngineConfig {
         }
         if let Some(v) = j.get("kernel").and_then(Json::as_str) {
             cfg.kernel = GemmKernel::parse(v)?;
+        }
+        if let Some(v) = j.get("weight_dtype").and_then(Json::as_str) {
+            cfg.weight_dtype = Dtype::parse(v)?;
+        }
+        if let Some(v) = j.get("kv_dtype").and_then(Json::as_str) {
+            cfg.kv_dtype = Dtype::parse(v)?;
         }
         if let Some(w) = j.get("weights") {
             match w.get("kind").and_then(Json::as_str) {
@@ -353,6 +412,8 @@ impl EngineConfig {
         let _ = writeln!(s, "max_new_tokens = {}", self.max_new_tokens);
         let _ = writeln!(s, "threads = {}", self.threads);
         let _ = writeln!(s, "kernel = \"{}\"", self.kernel);
+        let _ = writeln!(s, "weight_dtype = \"{}\"", self.weight_dtype);
+        let _ = writeln!(s, "kv_dtype = \"{}\"", self.kv_dtype);
         match &self.weights {
             WeightSource::Synthetic { seed } => {
                 let _ = writeln!(
@@ -403,6 +464,20 @@ impl EngineConfig {
         }
         if !(0.0..=1.0).contains(&self.sampling.top_p) {
             bail!("sampling.top_p must be in [0,1]");
+        }
+        // quantized storage is a reference-backend feature: the XLA
+        // artifacts are lowered at f32, so accepting int8 there would
+        // silently serve a different numeric contract than configured
+        if self.backend == BackendKind::Xla
+            && (self.weight_dtype != Dtype::F32
+                || self.kv_dtype != Dtype::F32)
+        {
+            bail!(
+                "backend \"xla\" only supports f32 dtypes (got \
+                 weight_dtype={}, kv_dtype={}); int8 is a reference-\
+                 backend feature (DESIGN.md §11)",
+                self.weight_dtype, self.kv_dtype
+            );
         }
         Ok(())
     }
@@ -537,6 +612,9 @@ beta_gbps = 10.0
         // survive serialize → parse
         let mut cfg = EngineConfig {
             model: "small".into(),
+            // pin the backend: int8 dtypes + the xla build default
+            // would (correctly) fail validation on --features xla
+            backend: BackendKind::Reference,
             variant: Variant::Serial,
             world: 4,
             batch: 1,
@@ -545,6 +623,8 @@ beta_gbps = 10.0
             max_new_tokens: 9,
             threads: 3,
             kernel: GemmKernel::Scalar,
+            weight_dtype: Dtype::Int8,
+            kv_dtype: Dtype::Int8,
             ..Default::default()
         };
         cfg.opt.zero_copy = false;
@@ -565,6 +645,8 @@ beta_gbps = 10.0
         assert_eq!(back.max_new_tokens, cfg.max_new_tokens);
         assert_eq!(back.threads, 3);
         assert_eq!(back.kernel, GemmKernel::Scalar);
+        assert_eq!(back.weight_dtype, Dtype::Int8);
+        assert_eq!(back.kv_dtype, Dtype::Int8);
         assert!(!back.opt.zero_copy);
         assert_eq!(back.opt.broadcast_ids, cfg.opt.broadcast_ids);
         assert_eq!(back.sampling.top_k, 13);
@@ -588,6 +670,48 @@ beta_gbps = 10.0
             "[sampling]\ntop_p = 1.5").is_err());
         assert!(EngineConfig::from_toml_str("threads = 10000").is_err());
         assert!(EngineConfig::from_toml_str("kernel = \"simd\"").is_err());
+        // unknown dtype strings are clean errors, never a fallback
+        assert!(EngineConfig::from_toml_str(
+            "weight_dtype = \"int4\"").is_err());
+        assert!(EngineConfig::from_toml_str(
+            "kv_dtype = \"fp16\"").is_err());
+        assert!(EngineConfig::from_toml_str(
+            "weight_dtype = \"INT8\"").is_err());
+    }
+
+    #[test]
+    fn dtype_parse_and_defaults() {
+        let d = EngineConfig::default();
+        assert_eq!(d.weight_dtype, Dtype::F32);
+        assert_eq!(d.kv_dtype, Dtype::F32);
+        let cfg = EngineConfig::from_toml_str(
+            "weight_dtype = \"int8\"\nkv_dtype = \"int8\"")
+            .unwrap();
+        assert_eq!(cfg.weight_dtype, Dtype::Int8);
+        assert_eq!(cfg.kv_dtype, Dtype::Int8);
+        // mixed dtypes are allowed (weights int8, KV f32 and vice versa)
+        let m = EngineConfig::from_toml_str("kv_dtype = \"int8\"").unwrap();
+        assert_eq!(m.weight_dtype, Dtype::F32);
+        assert_eq!(m.kv_dtype, Dtype::Int8);
+        assert_eq!(Dtype::F32.to_string(), "f32");
+        assert_eq!(Dtype::Int8.to_string(), "int8");
+    }
+
+    #[test]
+    fn xla_backend_rejects_int8_dtypes() {
+        let cfg = EngineConfig {
+            backend: BackendKind::Xla,
+            weight_dtype: Dtype::Int8,
+            ..Default::default()
+        };
+        // invalid regardless of whether the xla feature is compiled in
+        assert!(cfg.validate().is_err());
+        let cfg = EngineConfig {
+            backend: BackendKind::Xla,
+            kv_dtype: Dtype::Int8,
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

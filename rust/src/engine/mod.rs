@@ -53,6 +53,7 @@ use anyhow::{bail, Context, Result};
 
 pub use host::{RankHost, ThreadRankHost};
 
+use crate::backend::MemUsage;
 use crate::ccl::{CommGroup, StatsSnapshot};
 use crate::config::{EngineConfig, ModelPreset, ResolvedModel};
 use crate::kvcache::{LaneTable, PagedAllocator};
@@ -104,6 +105,8 @@ pub struct Engine {
     rng: SplitMix64,
     pub metrics: RunMetrics,
     eos: Option<i32>,
+    /// per-deployment resident bytes, aggregated from rank Ready replies
+    mem: MemUsage,
 }
 
 impl Engine {
@@ -183,14 +186,16 @@ impl Engine {
         // wait for readiness — once per rank, like collect_round, so a
         // duplicated Ready frame can't start the engine early
         let mut ready = vec![false; cfg.world];
+        let mut mem = MemUsage::default();
         while ready.iter().any(|&r| !r) {
             match reply_rx.recv().context("rank worker died during init")? {
-                Reply::Ready { rank } => {
+                Reply::Ready { rank, weight_bytes, kv_bytes } => {
                     anyhow::ensure!(rank < cfg.world,
                                     "Ready from out-of-range rank {rank}");
                     anyhow::ensure!(!std::mem::replace(&mut ready[rank],
                                                        true),
                                     "rank {rank} reported Ready twice");
+                    mem = mem.add(&MemUsage { weight_bytes, kv_bytes });
                 }
                 Reply::Error { rank, message } => {
                     bail!("rank {rank} failed init: {message}")
@@ -223,6 +228,7 @@ impl Engine {
             rng: SplitMix64::new(seed),
             metrics: RunMetrics::default(),
             eos,
+            mem,
             cfg,
         })
     }
@@ -233,6 +239,14 @@ impl Engine {
 
     pub fn preset(&self) -> &ModelPreset {
         &self.preset
+    }
+
+    /// Measured resident weight/KV bytes, summed over all ranks
+    /// (replicated tensors count once per rank — they really are
+    /// resident on each).  Zeros mean the backend doesn't measure
+    /// (DESIGN.md §11).
+    pub fn mem_usage(&self) -> MemUsage {
+        self.mem
     }
 
     pub fn comm_stats(&self) -> StatsSnapshot {

@@ -48,6 +48,10 @@ pub enum Cmd {
 pub enum Reply {
     Ready {
         rank: usize,
+        /// resident weight bytes of this rank's backend (0 = unknown)
+        weight_bytes: u64,
+        /// resident KV-cache bytes of this rank's backend (0 = unknown)
+        kv_bytes: u64,
     },
     PrefillDone {
         rank: usize,
@@ -235,9 +239,11 @@ impl Reply {
     /// Append this reply's wire image to `out`.
     pub fn encode(&self, out: &mut Vec<u8>) {
         match self {
-            Reply::Ready { rank } => {
+            Reply::Ready { rank, weight_bytes, kv_bytes } => {
                 out.push(0);
                 put_u32(out, *rank as u32);
+                put_u64(out, *weight_bytes);
+                put_u64(out, *kv_bytes);
             }
             Reply::PrefillDone { rank, compute_us, comm_us, candidates } => {
                 out.push(1);
@@ -284,7 +290,11 @@ impl Reply {
     pub fn decode(buf: &[u8]) -> Result<Reply> {
         let mut r = WireReader::new(buf);
         let reply = match r.u8()? {
-            0 => Reply::Ready { rank: r.usize32()? },
+            0 => Reply::Ready {
+                rank: r.usize32()?,
+                weight_bytes: r.u64()?,
+                kv_bytes: r.u64()?,
+            },
             1 => {
                 let rank = r.usize32()?;
                 let compute_us = r.u64()?;
@@ -365,7 +375,16 @@ mod tests {
     #[test]
     fn reply_roundtrips() {
         let cand = |t: u32, l: f32| Candidate { token: t, logit: l };
-        roundtrip_reply(Reply::Ready { rank: 1 });
+        roundtrip_reply(Reply::Ready {
+            rank: 1,
+            weight_bytes: 123_456_789,
+            kv_bytes: u64::MAX,
+        });
+        roundtrip_reply(Reply::Ready {
+            rank: 0,
+            weight_bytes: 0,
+            kv_bytes: 0,
+        });
         roundtrip_reply(Reply::PrefillDone {
             rank: 0,
             compute_us: 1234,

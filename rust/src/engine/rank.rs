@@ -65,7 +65,15 @@ impl RankWorker {
     ) {
         match Self::init(rank, cfg, comm) {
             Ok(mut w) => {
-                let _ = reply_tx.send(Reply::Ready { rank });
+                // report this rank's measured resident footprint with
+                // readiness — the leader aggregates it for the bench
+                // suite's memory accounting (DESIGN.md §11)
+                let mem = w.backend.mem_usage();
+                let _ = reply_tx.send(Reply::Ready {
+                    rank,
+                    weight_bytes: mem.weight_bytes,
+                    kv_bytes: mem.kv_bytes,
+                });
                 w.serve(cmd_rx, reply_tx);
             }
             Err(e) => {

@@ -12,14 +12,142 @@
 //!   scheduler for admission control: a request is only admitted when its
 //!   worst-case page need fits, so decode can never run out of cache
 //!   mid-flight.
+//! * [`KvLayer`] — one layer's physical K/V storage on the reference
+//!   backend, in the dtype `EngineConfig::kv_dtype` selects: dense f32,
+//!   or per-row symmetric INT8 with one f32 scale per (lane, head,
+//!   position) row — quantized on append, dequantized inside the
+//!   attention inner loop (DESIGN.md §11).
+
+#![warn(missing_docs)]
 
 use anyhow::{bail, Result};
+
+use crate::backend::quant::quant_row_into;
+use crate::config::Dtype;
+
+/// One transformer layer's physical K/V cache planes on the reference
+/// backend, shaped `[lanes · kv_heads_local · max_seq]` rows of
+/// `head_dim` values each.
+///
+/// The INT8 variant stores each row as `i8` values plus ONE `f32`
+/// scale per row (`scale = max|row| / 127`, the per-lane scale of
+/// DESIGN.md §11): a cache row costs `head_dim + 4` bytes instead of
+/// `4·head_dim`.  Rows are quantized exactly once, at append time, by
+/// an ascending scan over the row — a pure function of the row's f32
+/// content — so the stored bytes never depend on thread count, world
+/// size, or the order lanes were filled in, and greedy decode stays
+/// bit-identical across worlds at `kv_dtype = "int8"`.
+///
+/// Fields are exposed (as enum payloads) because the blocked kernel
+/// appends rows from pool workers through per-row disjoint slices;
+/// everything else should go through [`KvLayer::append_row`].
+#[derive(Debug)]
+pub enum KvLayer {
+    /// Dense f32 planes (`k`/`v` hold `rows · head_dim` floats).
+    F32 {
+        /// key plane
+        k: Vec<f32>,
+        /// value plane
+        v: Vec<f32>,
+    },
+    /// Per-row symmetric INT8 planes with one f32 scale per row.
+    Int8 {
+        /// quantized key plane (`rows · head_dim` bytes)
+        k: Vec<i8>,
+        /// quantized value plane
+        v: Vec<i8>,
+        /// per-row key scales (`rows` floats)
+        k_scale: Vec<f32>,
+        /// per-row value scales
+        v_scale: Vec<f32>,
+    },
+}
+
+impl KvLayer {
+    /// Allocate zeroed storage for `rows` cache rows of `head_dim`
+    /// values in `dtype`.
+    pub fn new(dtype: Dtype, rows: usize, head_dim: usize) -> KvLayer {
+        let n = rows * head_dim;
+        match dtype {
+            Dtype::F32 => KvLayer::F32 { k: vec![0.0; n], v: vec![0.0; n] },
+            Dtype::Int8 => KvLayer::Int8 {
+                k: vec![0; n],
+                v: vec![0; n],
+                k_scale: vec![0.0; rows],
+                v_scale: vec![0.0; rows],
+            },
+        }
+    }
+
+    /// The storage dtype of this layer.
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            KvLayer::F32 { .. } => Dtype::F32,
+            KvLayer::Int8 { .. } => Dtype::Int8,
+        }
+    }
+
+    /// Write one (lane, head, position) row: copy at f32, quantize
+    /// (ascending scan) at int8.  `kv` are the roped key row and the
+    /// value row, each `head_dim` long.
+    pub fn append_row(&mut self, row: usize, kv: (&[f32], &[f32])) {
+        let (krow, vrow) = kv;
+        debug_assert_eq!(krow.len(), vrow.len());
+        let hd = krow.len();
+        match self {
+            KvLayer::F32 { k, v } => {
+                k[row * hd..(row + 1) * hd].copy_from_slice(krow);
+                v[row * hd..(row + 1) * hd].copy_from_slice(vrow);
+            }
+            KvLayer::Int8 { k, v, k_scale, v_scale } => {
+                k_scale[row] =
+                    quant_row_into(krow, &mut k[row * hd..(row + 1) * hd]);
+                v_scale[row] =
+                    quant_row_into(vrow, &mut v[row * hd..(row + 1) * hd]);
+            }
+        }
+    }
+
+    /// Zero all rows (and scales) — the backend `reset` path.
+    pub fn reset(&mut self) {
+        match self {
+            KvLayer::F32 { k, v } => {
+                k.fill(0.0);
+                v.fill(0.0);
+            }
+            KvLayer::Int8 { k, v, k_scale, v_scale } => {
+                k.fill(0);
+                v.fill(0);
+                k_scale.fill(0.0);
+                v_scale.fill(0.0);
+            }
+        }
+    }
+
+    /// Resident bytes of this layer (values + scales).
+    pub fn bytes(&self) -> u64 {
+        match self {
+            KvLayer::F32 { k, v } => ((k.len() + v.len()) * 4) as u64,
+            KvLayer::Int8 { k, v, k_scale, v_scale } => {
+                (k.len() + v.len()
+                    + (k_scale.len() + v_scale.len()) * 4) as u64
+            }
+        }
+    }
+}
 
 /// State of one batch lane.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Lane {
+    /// Unowned — available for the next admitted request.
     Free,
-    Active { request_id: u64, len: usize },
+    /// Owned by `request_id` with `len` valid KV positions.
+    Active {
+        /// owning request
+        request_id: u64,
+        /// valid sequence length (next decode appends at this position)
+        len: usize,
+    },
 }
 
 /// Tracks ownership + sequence length of every batch lane.
@@ -30,14 +158,17 @@ pub struct LaneTable {
 }
 
 impl LaneTable {
+    /// A table of `n_lanes` free lanes, each bounded by `max_seq`.
     pub fn new(n_lanes: usize, max_seq: usize) -> Self {
         LaneTable { lanes: vec![Lane::Free; n_lanes], max_seq }
     }
 
+    /// Total lanes (the engine's decode batch width).
     pub fn n_lanes(&self) -> usize {
         self.lanes.len()
     }
 
+    /// Per-lane sequence-length bound (the model's `max_seq`).
     pub fn max_seq(&self) -> usize {
         self.max_seq
     }
@@ -72,18 +203,22 @@ impl LaneTable {
         }
     }
 
+    /// The state of one lane.
     pub fn lane(&self, lane: usize) -> &Lane {
         &self.lanes[lane]
     }
 
+    /// Is this lane owned by a request?
     pub fn is_active(&self, lane: usize) -> bool {
         matches!(self.lanes[lane], Lane::Active { .. })
     }
 
+    /// Indices of all active lanes, ascending.
     pub fn active_lanes(&self) -> Vec<usize> {
         (0..self.lanes.len()).filter(|&i| self.is_active(i)).collect()
     }
 
+    /// Number of currently free lanes.
     pub fn free_lanes(&self) -> usize {
         self.lanes.iter().filter(|l| **l == Lane::Free).count()
     }
@@ -148,6 +283,8 @@ pub struct PagedAllocator {
 }
 
 impl PagedAllocator {
+    /// A pool of `n_pages` pages of `page_size` tokens, accounting for
+    /// `n_lanes` lanes.
     pub fn new(page_size: usize, n_pages: usize, n_lanes: usize) -> Self {
         PagedAllocator {
             page_size,
@@ -157,14 +294,17 @@ impl PagedAllocator {
         }
     }
 
+    /// Pages needed to hold `len` tokens (rounded up).
     pub fn pages_for(&self, len: usize) -> usize {
         len.div_ceil(self.page_size)
     }
 
+    /// Pages not currently reserved by any lane.
     pub fn free_pages(&self) -> usize {
         self.free_pages
     }
 
+    /// Total pool capacity in pages.
     pub fn total_pages(&self) -> usize {
         self.n_pages
     }
@@ -197,6 +337,7 @@ impl PagedAllocator {
         debug_assert!(self.free_pages <= self.n_pages);
     }
 
+    /// Pages currently reserved by `lane`.
     pub fn held_by(&self, lane: usize) -> usize {
         self.held[lane]
     }
@@ -396,6 +537,66 @@ mod tests {
                 assert_eq!(held + p.free_pages(), p.total_pages());
             }
         }
+    }
+
+    #[test]
+    fn kv_layer_f32_roundtrips_rows() {
+        let hd = 8;
+        let mut layer = KvLayer::new(Dtype::F32, 4, hd);
+        let krow: Vec<f32> = (0..hd).map(|i| i as f32 * 0.5).collect();
+        let vrow: Vec<f32> = (0..hd).map(|i| -(i as f32)).collect();
+        layer.append_row(2, (&krow, &vrow));
+        match &layer {
+            KvLayer::F32 { k, v } => {
+                assert_eq!(&k[2 * hd..3 * hd], &krow[..]);
+                assert_eq!(&v[2 * hd..3 * hd], &vrow[..]);
+            }
+            _ => panic!("wrong dtype"),
+        }
+        layer.reset();
+        match &layer {
+            KvLayer::F32 { k, .. } => assert!(k.iter().all(|&x| x == 0.0)),
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn kv_layer_int8_quantizes_within_half_step() {
+        let hd = 16;
+        let mut layer = KvLayer::new(Dtype::Int8, 3, hd);
+        let krow: Vec<f32> =
+            (0..hd).map(|i| ((i * 7 % 5) as f32 - 2.0) * 0.33).collect();
+        let vrow: Vec<f32> =
+            (0..hd).map(|i| ((i * 3 % 11) as f32 - 5.0) * 0.21).collect();
+        layer.append_row(1, (&krow, &vrow));
+        match &layer {
+            KvLayer::Int8 { k, v, k_scale, v_scale } => {
+                for (i, &orig) in krow.iter().enumerate() {
+                    let deq = k[hd + i] as f32 * k_scale[1];
+                    assert!((deq - orig).abs() <= k_scale[1] / 2.0 + 1e-6);
+                }
+                for (i, &orig) in vrow.iter().enumerate() {
+                    let deq = v[hd + i] as f32 * v_scale[1];
+                    assert!((deq - orig).abs() <= v_scale[1] / 2.0 + 1e-6);
+                }
+                // untouched rows stay zero
+                assert!(k[..hd].iter().all(|&b| b == 0));
+                assert_eq!(k_scale[0], 0.0);
+            }
+            _ => panic!("wrong dtype"),
+        }
+    }
+
+    #[test]
+    fn kv_layer_bytes_int8_is_about_a_quarter() {
+        let (rows, hd) = (64, 96);
+        let f = KvLayer::new(Dtype::F32, rows, hd);
+        let q = KvLayer::new(Dtype::Int8, rows, hd);
+        assert_eq!(f.bytes(), (2 * rows * hd * 4) as u64);
+        assert_eq!(q.bytes(), (2 * rows * hd + 2 * rows * 4) as u64);
+        assert!(q.bytes() * 3 < f.bytes());
+        assert_eq!(f.dtype(), Dtype::F32);
+        assert_eq!(q.dtype(), Dtype::Int8);
     }
 
     #[test]

@@ -30,7 +30,10 @@ use crate::engine::proto::{self, Cmd, Reply, WireReader};
 
 /// Bump when the control frame layout changes; `Hello.version` must
 /// match the coordinator's or registration is refused.
-pub const PROTO_VERSION: u32 = 1;
+///
+/// v2: `Reply::Ready` grew `weight_bytes`/`kv_bytes` (the §11 memory
+/// accounting) — a v1 worker's Ready frame no longer decodes.
+pub const PROTO_VERSION: u32 = 2;
 
 /// How often an idle worker proves liveness to the coordinator.
 pub const HEARTBEAT_PERIOD: Duration = Duration::from_secs(2);

@@ -59,5 +59,5 @@ pub mod tokenizer;
 pub mod trace;
 pub mod util;
 
-pub use config::{BackendKind, EngineConfig, GemmKernel, Variant};
+pub use config::{BackendKind, Dtype, EngineConfig, GemmKernel, Variant};
 pub use engine::{Completion, Engine};

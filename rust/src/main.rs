@@ -50,12 +50,15 @@ on --addr.  With --spawn-workers true the coordinator forks the
 workers itself (single-machine convenience; CI smoke path starts them
 explicitly).
 
-bench runs the recording suite (DESIGN.md \u{a7}10): the standard
-scenarios (single-stream / batched decode, prefill-heavy, mixed) per
-world size, on the blocked kernel plus the scalar batched-decode
-baseline, and writes the xeonserve-bench/v1 JSON (--json) that
-BENCH_*.json files in the repo are recorded with.  --validate
-schema-checks such a file and exits.
+bench runs the recording suite (DESIGN.md \u{a7}10/\u{a7}11): the
+standard scenarios (single-stream / batched decode, prefill-heavy,
+mixed) per world size, on the blocked kernel plus the scalar
+batched-decode baseline and int8 weights+KV decode rows, and writes
+the xeonserve-bench/v1 JSON (--json) that BENCH_*.json files in the
+repo are recorded with — every row carries its weight/KV dtype and
+measured resident bytes.  --validate schema-checks such a file and
+exits.  Serving dtypes are config knobs: weight_dtype = \"int8\" and
+kv_dtype = \"int8\" in the TOML (reference backend only).
 
 Without --config the built-in default is used (tiny model, world=2,
 all paper optimizations ON).  See configs/*.toml for presets.";
@@ -220,6 +223,12 @@ fn run_bench(args: &Args) -> Result<()> {
             println!(
                 "batched_decode w{w}: blocked(threads>=2) is {s:.2}x \
                  the scalar baseline"
+            );
+        }
+        if let Some(s) = suite::int8_speedup(&doc, w) {
+            println!(
+                "batched_decode w{w}: int8 weights+KV is {s:.2}x the \
+                 f32 blocked row"
             );
         }
     }

@@ -29,6 +29,7 @@ use xla::PjRtBuffer;
 use crate::config::{Manifest, SegmentMeta, WeightSource};
 #[cfg(feature = "xla")]
 use crate::runtime::RankRuntime;
+use crate::backend::quant::QuantMat;
 use crate::util::{fnv1a, SplitMix64};
 
 /// All weight buffers one rank needs, keyed the way segments consume
@@ -140,6 +141,45 @@ pub(crate) fn synth_shard(name: &str, local_shape: &[usize], world: usize,
             }
             out
         }
+    }
+}
+
+/// INT8 variant of [`synth_shard`]: generate the same fixed full
+/// tensor, quantize it on a `group`-row grid along the contraction
+/// axis (DESIGN.md §11), and slice this rank's shard out of the
+/// quantized values *and* their scales.  Quantizing before sharding is
+/// what makes the reconstructed `q·s` values identical at every world
+/// size — the world-parity guarantee at `weight_dtype = "int8"` rests
+/// on it, exactly as the f32 guarantee rests on `concat(shards) ==
+/// full`.
+///
+/// Only sharded matmul weights go through here; replicated tensors
+/// (norm gains, embedding) stay f32.
+pub(crate) fn synth_quant_shard(name: &str, local_shape: &[usize],
+                                world: usize, rank: usize, seed: u64,
+                                group: usize)
+                                -> anyhow::Result<QuantMat> {
+    let axis = shard_axis(name).ok_or_else(|| anyhow::anyhow!(
+        "tensor {name:?} is replicated — it has no quantized form"))?;
+    let mut full_shape = local_shape.to_vec();
+    full_shape[axis] *= world;
+    let mut rng = SplitMix64::new(seed);
+    let full = synth_fill(name, &full_shape, &mut rng);
+    let (k_f, cols_f) = (full_shape[0], full_shape[1]);
+    let q = QuantMat::from_f32(&full, k_f, cols_f, group)?;
+    if world == 1 {
+        return Ok(q);
+    }
+    match axis {
+        0 => {
+            let k_l = local_shape[0];
+            q.slice_rows(rank * k_l, (rank + 1) * k_l)
+        }
+        1 => {
+            let c_l = local_shape[1];
+            q.slice_cols(rank * c_l, (rank + 1) * c_l)
+        }
+        _ => unreachable!(),
     }
 }
 
@@ -297,6 +337,48 @@ mod tests {
             let shard = synth_shard("wo", &[4, 4], 2, rank, 7);
             assert_eq!(shard[..], full[rank * 16..(rank + 1) * 16]);
         }
+    }
+
+    #[test]
+    fn quant_shards_reconstruct_full_tensor_values() {
+        // the int8 analogue of synth_shards_concat_to_full: every
+        // rank's dequantized shard must reproduce the world-1 values
+        // bit-for-bit, on both shard axes
+        for (name, rows, cols, group) in
+            [("wq", 8usize, 16usize, 4usize), ("wo", 16, 8, 4)]
+        {
+            let full =
+                synth_quant_shard(name, &[rows, cols], 1, 0, 42, group)
+                    .unwrap();
+            for world in [2usize, 4] {
+                for rank in 0..world {
+                    let (r_l, c_l, r0, c0) = match shard_axis(name) {
+                        Some(0) => (rows / world, cols,
+                                    rank * (rows / world), 0),
+                        Some(1) => (rows, cols / world, 0,
+                                    rank * (cols / world)),
+                        _ => unreachable!(),
+                    };
+                    let shard = synth_quant_shard(
+                        name, &[r_l, c_l], world, rank, 42, group)
+                        .unwrap();
+                    for r in 0..r_l {
+                        for c in 0..c_l {
+                            assert_eq!(
+                                shard.dequant(r, c).to_bits(),
+                                full.dequant(r0 + r, c0 + c).to_bits(),
+                                "{name} w{world} rank{rank} ({r},{c})"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_shard_rejects_replicated_tensors() {
+        assert!(synth_quant_shard("ln1_g", &[32, 1], 2, 0, 5, 4).is_err());
     }
 
     #[test]
