@@ -74,8 +74,7 @@
 
 use anyhow::{bail, ensure, Result};
 
-use crate::config::{Dtype, EngineConfig, GemmKernel, ModelPreset,
-                    Variant, WeightSource};
+use crate::config::{Dtype, EngineConfig, GemmKernel, ModelPreset, Variant, WeightSource};
 use crate::kvcache::KvLayer;
 use crate::model::{synth_quant_shard, synth_shard, tensor_seed};
 

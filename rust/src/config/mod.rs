@@ -10,8 +10,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-pub use manifest::{GoldenMeta, Manifest, ModelPreset, SegmentMeta,
-                   TensorMeta};
+pub use manifest::{GoldenMeta, Manifest, ModelPreset, SegmentMeta, TensorMeta};
 
 use crate::ccl::wire::WireModel;
 use crate::util::{parse_toml, Json};

@@ -8,8 +8,7 @@
 //! re-runs the key invariants against the AOT artifacts when the crate
 //! is built with `--features xla` (CI's artifact job).
 
-use xeonserve::config::{BackendKind, EngineConfig, OptFlags, Variant,
-                        WeightSource};
+use xeonserve::config::{BackendKind, EngineConfig, OptFlags, Variant, WeightSource};
 use xeonserve::engine::Engine;
 
 #[macro_use]

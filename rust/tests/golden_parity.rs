@@ -15,8 +15,7 @@
 
 use xeonserve::backend::reference::ReferenceBackend;
 use xeonserve::backend::{ExecBackend, StepCtx};
-use xeonserve::config::{BackendKind, EngineConfig, ModelPreset, Variant,
-                        WeightSource};
+use xeonserve::config::{BackendKind, EngineConfig, ModelPreset, Variant, WeightSource};
 use xeonserve::engine::Engine;
 
 #[macro_use]

@@ -9,8 +9,7 @@ use std::time::Duration;
 use xeonserve::config::EngineConfig;
 use xeonserve::engine::proto::{Cmd, Reply};
 use xeonserve::engine::RankHost;
-use xeonserve::launch::control::{read_msg, write_msg, ControlMsg,
-                                 PROTO_VERSION};
+use xeonserve::launch::control::{read_msg, write_msg, ControlMsg, PROTO_VERSION};
 use xeonserve::launch::{coordinate, LaunchOptions};
 
 fn opts(world: usize, port: u16) -> LaunchOptions {

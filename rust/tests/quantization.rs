@@ -14,8 +14,7 @@
 
 use xeonserve::backend::reference::ReferenceBackend;
 use xeonserve::backend::{ExecBackend, StepCtx};
-use xeonserve::config::{BackendKind, Dtype, EngineConfig, ModelPreset,
-                        WeightSource};
+use xeonserve::config::{BackendKind, Dtype, EngineConfig, ModelPreset, WeightSource};
 use xeonserve::engine::Engine;
 
 fn cfg(world: usize, batch: usize, wd: Dtype, kd: Dtype) -> EngineConfig {

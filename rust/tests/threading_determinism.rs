@@ -6,8 +6,7 @@
 
 use xeonserve::backend::reference::ReferenceBackend;
 use xeonserve::backend::{ExecBackend, StepCtx};
-use xeonserve::config::{BackendKind, EngineConfig, GemmKernel,
-                        ModelPreset, Variant, WeightSource};
+use xeonserve::config::{BackendKind, EngineConfig, GemmKernel, ModelPreset, Variant, WeightSource};
 use xeonserve::engine::Engine;
 
 fn cfg(world: usize, batch: usize, kernel: GemmKernel, threads: usize)
