@@ -47,10 +47,17 @@ use crate::config::{BackendKind, EngineConfig, ResolvedModel};
 /// lane/position context the KV cache needs.
 #[derive(Clone, Copy, Debug)]
 pub enum StepCtx<'a> {
-    /// Single-lane prefill over a padded `bucket`-token prompt:
-    /// activations are `[1, bucket, hidden]`, the KV rows `[0, bucket)`
-    /// of `lane` are (re)written, `length` is the valid prefix.
-    Prefill { lane: usize, bucket: usize, length: usize },
+    /// Single-lane prefill over a padded `bucket`-token frame starting
+    /// at absolute position `offset`: activations are
+    /// `[1, bucket, hidden]`, the KV rows `[offset, offset + bucket)`
+    /// of `lane` are (re)written, `length` is the valid prefix of the
+    /// frame.  Whole-prompt prefill is `offset == 0`; a chunked
+    /// prefill round (DESIGN.md §12) continues the lane's existing KV
+    /// region at `offset > 0`, and row `r` attends over
+    /// `[0, offset + r + 1)` — exactly the causal window it would see
+    /// in a whole-prompt pass, which is why chunking never changes the
+    /// computed bits.
+    Prefill { lane: usize, bucket: usize, length: usize, offset: usize },
     /// One batched decode step: activations are `[batch, 1, hidden]`,
     /// lane `b` appends its KV at `positions[b]` and attends over
     /// `[0, positions[b]]`.

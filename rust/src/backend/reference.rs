@@ -994,11 +994,16 @@ impl ReferenceBackend {
 }
 
 /// Per-row `(lane, position, attend_hi)` for this step's KV update.
+/// Prefill rows live at absolute positions `offset + r` and attend
+/// over the full causal window `[0, offset + r + 1)` — for `offset >
+/// 0` that window spans KV rows an *earlier chunk* appended, which is
+/// what lets a chunked prefill reproduce the whole-prompt bits
+/// (DESIGN.md §12).
 fn row_meta(ctx: &StepCtx, r: usize) -> (usize, i32, usize) {
     match ctx {
-        StepCtx::Prefill { lane, length, .. } => {
-            let hi = if r < *length { r + 1 } else { *length };
-            (*lane, r as i32, hi)
+        StepCtx::Prefill { lane, length, offset, .. } => {
+            let hi = offset + if r < *length { r + 1 } else { *length };
+            (*lane, (offset + r) as i32, hi)
         }
         StepCtx::Decode { positions } => {
             let pos = positions[r];
@@ -1035,11 +1040,12 @@ impl ExecBackend for ReferenceBackend {
         // reject malformed lane/position bookkeeping loudly: silently
         // clamping would turn an engine bug into KV corruption
         match ctx {
-            StepCtx::Prefill { lane, bucket, length } => {
-                ensure!(*bucket <= max_seq && *length >= 1
+            StepCtx::Prefill { lane, bucket, length, offset } => {
+                ensure!(*offset + *bucket <= max_seq && *length >= 1
                             && *length <= *bucket,
                         "prefill shape out of range: bucket={bucket} \
-                         length={length} max_seq={max_seq}");
+                         length={length} offset={offset} \
+                         max_seq={max_seq}");
                 ensure!(*lane < self.batch,
                         "prefill lane {lane} out of range (batch {})",
                         self.batch);
@@ -1237,7 +1243,7 @@ mod tests {
         let mut be = backend(&cfg(1, 1), 0).unwrap();
         let h = 64;
         let tokens = [5i32; 4];
-        let ctx = StepCtx::Prefill { lane: 0, bucket: 4, length: 4 };
+        let ctx = StepCtx::Prefill { lane: 0, bucket: 4, length: 4, offset: 0 };
         let mut x = vec![0.0f32; 4 * h];
         be.embed(&ctx, &tokens, &mut x).unwrap();
         let mut p1 = vec![0.0f32; 4 * h];
@@ -1277,7 +1283,7 @@ mod tests {
         let mut out = Vec::new();
 
         let tokens = [3i32, 9, 27, 81];
-        let ctx = StepCtx::Prefill { lane: 0, bucket: 8, length: 4 };
+        let ctx = StepCtx::Prefill { lane: 0, bucket: 8, length: 4, offset: 0 };
         let mut x = vec![0.0f32; 8 * h];
         be.embed(&ctx, &tokens, &mut x).unwrap();
         for li in 0..preset.n_layers {
@@ -1481,7 +1487,7 @@ mod tests {
             let mut be =
                 ReferenceBackend::new(&c, 0, &preset).unwrap();
             let h = preset.hidden;
-            let ctx = StepCtx::Prefill { lane: 0, bucket: 4, length: 4 };
+            let ctx = StepCtx::Prefill { lane: 0, bucket: 4, length: 4, offset: 0 };
             let mut x = vec![0.0f32; 4 * h];
             be.embed(&ctx, &[1, 2, 3, 4], &mut x).unwrap();
             let mut p1 = vec![0.0f32; 4 * h];

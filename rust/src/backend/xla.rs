@@ -169,7 +169,14 @@ impl ExecBackend for XlaBackend {
         let h = self.hidden;
         // shape + segment lookup per round kind
         let (entry, dims, ctrl): (_, [usize; 3], Vec<i32>) = match ctx {
-            StepCtx::Prefill { lane, bucket, length } => {
+            StepCtx::Prefill { lane, bucket, length, offset } => {
+                // the AOT prefill segments are lowered for offset-0
+                // whole-prompt frames only; EngineConfig::validate
+                // rejects prefill_chunk > 0 on this backend, so a
+                // non-zero offset here is an engine bug
+                anyhow::ensure!(*offset == 0,
+                                "chunked prefill (offset {offset}) is \
+                                 not supported on the xla backend");
                 let layers =
                     self.segs.layer_prefill.get(bucket).with_context(|| {
                         format!("no prefill segments for bucket {bucket}")

@@ -68,9 +68,14 @@ impl Scenario {
     }
 
     /// Shrink the workload for CI smoke runs (`--quick`): fewer
-    /// requests and shorter decodes, same shapes.
+    /// requests and shorter decodes, same shapes.  At least one full
+    /// cycle of `prompt_lens` is kept, so a workload built around a
+    /// late-arriving request (`long_prompt_interactive`'s injected
+    /// long prompt at index `batch`) still exercises it while
+    /// single-shape scenarios shrink to the lane count as before.
     pub fn quicken(mut self) -> Scenario {
-        self.requests = self.requests.min(self.batch.max(2));
+        let keep = self.prompt_lens.len().max(self.batch).max(2);
+        self.requests = self.requests.min(keep);
         for n in &mut self.new_tokens {
             *n = (*n / 4).max(4);
         }
@@ -78,7 +83,13 @@ impl Scenario {
     }
 }
 
-/// The standard four-scenario suite every `BENCH_*.json` records.
+/// Chunk size (tokens) of the chunked `long_prompt_interactive` row
+/// [`run_matrix`] records next to the whole-prompt baseline — fixed,
+/// like the 2-thread default, so recordings stay comparable across
+/// machines (DESIGN.md §12).
+pub const BENCH_PREFILL_CHUNK: usize = 16;
+
+/// The standard five-scenario suite every `BENCH_*.json` records.
 pub fn standard_suite() -> Vec<Scenario> {
     vec![
         // the paper's §3 headline shape: one stream, decode-dominated
@@ -93,6 +104,17 @@ pub fn standard_suite() -> Vec<Scenario> {
             "mixed", 4, 10,
             &[2, 8, PROMPT_FILL_BUCKET, 5],
             &[8, 32, 4, 16],
+        ),
+        // one long prefill injected over a decode steady state
+        // (DESIGN.md §12): the short-prompt streams staggered-retire so
+        // the bucket-filling prompt (request 2) is admitted while the
+        // other lane is still mid-decode — its prefill stalls that
+        // stream, and `decode_stall_p99_us` records by how much,
+        // with/without chunking
+        Scenario::new(
+            "long_prompt_interactive", 2, 5,
+            &[2, 2, PROMPT_FILL_BUCKET, 2, 2],
+            &[24, 40, 4, 16, 16],
         ),
     ]
 }
@@ -116,6 +138,8 @@ pub struct ScenarioRecord {
     pub weight_dtype: Dtype,
     /// KV-cache storage dtype of the run
     pub kv_dtype: Dtype,
+    /// prefill chunk size of the run (0 = whole-prompt) — DESIGN.md §12
+    pub prefill_chunk: usize,
     /// measured resident weight bytes, summed over ranks (0 = the
     /// backend doesn't measure)
     pub weight_bytes: u64,
@@ -140,6 +164,10 @@ pub struct ScenarioRecord {
     pub decode_p50_us: u64,
     /// decode wall p95, µs
     pub decode_p95_us: u64,
+    /// decode-stall p99: worst-case gap between consecutive decode
+    /// rounds while decode lanes stayed busy, µs (DESIGN.md §12 —
+    /// the figure chunked prefill bounds)
+    pub decode_stall_p99_us: u64,
     /// prefill wall p50, µs
     pub prefill_p50_us: u64,
     /// tokens emitted over the run
@@ -164,6 +192,7 @@ impl ScenarioRecord {
         put("backend", Json::Str(self.backend.to_string()));
         put("weight_dtype", Json::Str(self.weight_dtype.to_string()));
         put("kv_dtype", Json::Str(self.kv_dtype.to_string()));
+        put("prefill_chunk", Json::Num(self.prefill_chunk as f64));
         put("weight_bytes", Json::Num(self.weight_bytes as f64));
         put("kv_bytes", Json::Num(self.kv_bytes as f64));
         put("batch", Json::Num(self.batch as f64));
@@ -175,6 +204,8 @@ impl ScenarioRecord {
         put("tokens_per_s", Json::Num(self.tokens_per_s));
         put("decode_p50_us", Json::Num(self.decode_p50_us as f64));
         put("decode_p95_us", Json::Num(self.decode_p95_us as f64));
+        put("decode_stall_p99_us",
+            Json::Num(self.decode_stall_p99_us as f64));
         put("prefill_p50_us", Json::Num(self.prefill_p50_us as f64));
         put("tokens_out", Json::Num(self.tokens_out as f64));
         put("requests_done", Json::Num(self.requests_done as f64));
@@ -205,9 +236,15 @@ impl ScenarioRecord {
         } else {
             format!("{}+kv{}", self.weight_dtype, self.kv_dtype)
         };
+        // tag chunked rows so they never collide with whole-prompt rows
+        let chunk = if self.prefill_chunk == 0 {
+            String::new()
+        } else {
+            format!("_c{}", self.prefill_chunk)
+        };
         CaseResult {
-            name: format!("{}_w{}_{}x{}_{}", self.name, self.world,
-                          self.kernel, self.threads, dtype),
+            name: format!("{}_w{}_{}x{}_{}{}", self.name, self.world,
+                          self.kernel, self.threads, dtype, chunk),
             iters: self.tokens_out as usize,
             mean_us: self.ms_per_token * 1e3,
             p50_us: self.decode_p50_us,
@@ -217,6 +254,8 @@ impl ScenarioRecord {
         .with("ms_tok", format!("{:.2}", self.ms_per_token))
         .with("sim_ms", format!("{:.2}", self.ms_per_token_sim))
         .with("ttft_ms", format!("{:.2}", self.ttft_ms))
+        .with("stall_p99_ms",
+              format!("{:.2}", self.decode_stall_p99_us as f64 / 1e3))
         .with("tok_s", format!("{:.1}", self.tokens_per_s))
         .with("mem_mb", format!("{:.0}",
                                 (self.weight_bytes + self.kv_bytes)
@@ -290,6 +329,7 @@ pub fn run_scenario(cfg: &EngineConfig, sc: &Scenario)
         backend: cfg.backend,
         weight_dtype: cfg.weight_dtype,
         kv_dtype: cfg.kv_dtype,
+        prefill_chunk: cfg.prefill_chunk,
         weight_bytes: mem.weight_bytes,
         kv_bytes: mem.kv_bytes,
         batch: sc.batch,
@@ -301,6 +341,7 @@ pub fn run_scenario(cfg: &EngineConfig, sc: &Scenario)
         tokens_per_s,
         decode_p50_us: m.decode_wall.p50_us(),
         decode_p95_us: m.decode_wall.p95_us(),
+        decode_stall_p99_us: m.decode_gap.p99_us(),
         prefill_p50_us: m.prefill_wall.p50_us(),
         tokens_out: m.tokens_out,
         requests_done: m.requests_done,
@@ -337,6 +378,9 @@ pub fn run_matrix(base: &EngineConfig, worlds: &[usize], quick: bool,
             cfg.kernel = GemmKernel::Blocked;
             cfg.weight_dtype = Dtype::F32;
             cfg.kv_dtype = Dtype::F32;
+            // standard rows are always whole-prompt; the chunked
+            // comparison row below is the only one that chunks
+            cfg.prefill_chunk = 0;
             cfg.threads = if base.threads == 0 {
                 2
             } else {
@@ -345,6 +389,20 @@ pub fn run_matrix(base: &EngineConfig, worlds: &[usize], quick: bool,
             progress(&format!("{} w{world} blocked x{} f32", sc.name,
                               cfg.threads));
             out.push(run_scenario(&cfg, sc)?);
+            // the §12 decode-stall pair: the same interactive workload
+            // with chunked prefill, next to the whole-prompt baseline
+            // row just recorded (reference backend only — xla has no
+            // chunk segments)
+            if cfg.backend == BackendKind::Reference
+                && sc.name == "long_prompt_interactive"
+            {
+                let mut ck = cfg.clone();
+                ck.prefill_chunk = BENCH_PREFILL_CHUNK;
+                progress(&format!("{} w{world} blocked x{} f32 chunk{}",
+                                  sc.name, ck.threads,
+                                  ck.prefill_chunk));
+                out.push(run_scenario(&ck, sc)?);
+            }
             // int8 rows are a reference-backend feature; on an XLA
             // config the sweep stays f32-only instead of aborting on
             // the validate() dtype rejection
@@ -460,17 +518,65 @@ pub fn int8_speedup(j: &Json, world: usize) -> Option<f64> {
     }
 }
 
+/// `decode_stall_p99_us` of the first `long_prompt_interactive` row
+/// at `world` whose `prefill_chunk` matches `chunked` (any non-zero
+/// chunk when true, exactly 0 when false).  Pinned to the threaded
+/// blocked f32 rows, like [`find_batched_ms`], so a future sweep
+/// adding scalar or int8 interactive rows can never pair rows from
+/// different kernel/dtype contracts into one ratio.
+fn find_stall_p99(rows: &[Json], world: usize, chunked: bool)
+                  -> Option<f64> {
+    rows.iter().find_map(|r| {
+        let name = r.get("name")?.as_str()?;
+        let w = r.get("world")?.as_usize()?;
+        let kernel = r.get("kernel")?.as_str()?;
+        let threads = r.get("threads")?.as_usize()?;
+        let wd = r.get("weight_dtype").and_then(Json::as_str)
+            .unwrap_or("f32");
+        let kd = r.get("kv_dtype").and_then(Json::as_str)
+            .unwrap_or("f32");
+        let chunk = r.get("prefill_chunk")?.as_usize()?;
+        if name == "long_prompt_interactive" && w == world
+            && kernel == "blocked" && threads >= 2
+            && wd == "f32" && kd == "f32"
+            && (chunk > 0) == chunked
+        {
+            r.get("decode_stall_p99_us")?.as_f64()
+        } else {
+            None
+        }
+    })
+}
+
+/// Decode-stall reduction of chunked prefill at world `w`: whole-
+/// prompt `long_prompt_interactive` stall p99 over the chunked row's —
+/// the DESIGN.md §12 acceptance figure (`None` if either row is
+/// missing or the chunked stall is 0).
+pub fn chunked_stall_ratio(j: &Json, world: usize) -> Option<f64> {
+    let rows = j.get("scenarios")?.as_arr()?;
+    let whole = find_stall_p99(rows, world, false)?;
+    let chunked = find_stall_p99(rows, world, true)?;
+    if chunked > 0.0 {
+        Some(whole / chunked)
+    } else {
+        None
+    }
+}
+
 /// Structural + coverage validation of a `xeonserve-bench/v1`
 /// document (the CI bench-smoke gate).  Checks the schema tag, the
 /// per-row field types — including the dtype and memory-bytes fields
-/// every row must carry since DESIGN.md §11 — and that the rows cover
-/// every world the document's `worlds` field declares × ≥4 scenarios,
-/// including the threaded-vs-scalar batched-decode pair and the
-/// int8-vs-f32 batched-decode pair the acceptance gates read — so a
+/// every row must carry since DESIGN.md §11, and the `prefill_chunk`
+/// and `decode_stall_p99_us` fields since §12 — and that the rows
+/// cover every world the document's `worlds` field declares × ≥4
+/// scenarios, including the threaded-vs-scalar batched-decode pair,
+/// the int8-vs-f32 batched-decode pair, and the whole-vs-chunked
+/// `long_prompt_interactive` pair the acceptance gates read — so a
 /// `--worlds 2` recording validates against its own sweep, while the
 /// committed full recordings must actually contain what they claim.
-/// (Pre-§11 recordings without dtype fields no longer validate;
-/// regenerate them.)
+/// (Pre-§12 recordings without the chunking fields no longer
+/// validate; regenerate them — BENCH_pr4.json stays committed as
+/// trajectory history.)
 pub fn validate_bench(j: &Json) -> Result<()> {
     match j.get("schema").and_then(Json::as_str) {
         Some(s) if s == SCHEMA => {}
@@ -503,20 +609,27 @@ pub fn validate_bench(j: &Json) -> Result<()> {
     let mut batched_scalar = false;
     let mut batched_threaded = false;
     let mut batched_int8 = false;
+    let mut interactive_whole = false;
+    let mut interactive_chunked = false;
     let mut any_reference = false;
     for (i, r) in rows.iter().enumerate() {
         let ctx = || format!("scenario row {i}");
         let name = r.get("name").and_then(Json::as_str)
             .with_context(|| format!("{}: missing name", ctx()))?;
         for key in ["world", "threads", "batch", "requests",
-                    "decode_p50_us", "decode_p95_us", "prefill_p50_us",
+                    "decode_p50_us", "decode_p95_us",
+                    "decode_stall_p99_us", "prefill_p50_us",
                     "tokens_out", "requests_done", "weight_bytes",
-                    "kv_bytes"] {
+                    "kv_bytes", "prefill_chunk"] {
             let v = r.get(key).and_then(Json::as_f64).with_context(|| {
                 format!("{}: missing numeric field {key:?}", ctx())
             })?;
-            if !v.is_finite() || v < 0.0 {
-                bail!("{}: {key} = {v} must be a non-negative number",
+            // these are all count/size fields: fractional values
+            // would be silently truncated downstream (as_usize),
+            // misclassifying rows — reject them like the config
+            // parser rejects a fractional prefill_chunk
+            if !v.is_finite() || v < 0.0 || v.fract() != 0.0 {
+                bail!("{}: {key} = {v} must be a non-negative integer",
                       ctx());
             }
         }
@@ -570,6 +683,12 @@ pub fn validate_bench(j: &Json) -> Result<()> {
             batched_int8 |= kernel == "blocked" && threads >= 2
                 && dtypes == ["int8", "int8"];
         }
+        if name == "long_prompt_interactive" {
+            let chunk =
+                r.get("prefill_chunk").and_then(Json::as_usize).unwrap();
+            interactive_whole |= chunk == 0;
+            interactive_chunked |= chunk > 0;
+        }
     }
     if names.len() < 4 {
         bail!("only {} distinct scenarios, need >= 4: {names:?}",
@@ -595,6 +714,14 @@ pub fn validate_bench(j: &Json) -> Result<()> {
                quantization gate needs the int8-vs-f32 pair on \
                reference-backend recordings)");
     }
+    // the DESIGN.md §12 chunked-prefill gate: reference recordings
+    // must carry the whole-vs-chunked long_prompt_interactive pair so
+    // chunked_stall_ratio() always yields the acceptance figure
+    if any_reference && !(interactive_whole && interactive_chunked) {
+        bail!("missing long_prompt_interactive prefill_chunk pair \
+               (need a prefill_chunk = 0 row AND a chunked row on \
+               reference-backend recordings — DESIGN.md §12)");
+    }
     Ok(())
 }
 
@@ -614,11 +741,12 @@ mod tests {
     #[test]
     fn standard_suite_shape() {
         let s = standard_suite();
-        assert!(s.len() >= 4);
+        assert!(s.len() >= 5);
         let names: Vec<&str> =
             s.iter().map(|x| x.name.as_str()).collect();
         for required in ["single_stream_decode", "batched_decode",
-                         "prefill_heavy", "mixed"] {
+                         "prefill_heavy", "mixed",
+                         "long_prompt_interactive"] {
             assert!(names.contains(&required), "missing {required}");
         }
         for sc in &s {
@@ -638,6 +766,13 @@ mod tests {
             assert!(sc.new_tokens.iter().all(|&n| n >= 4));
             assert!(sc.requests >= 2);
         }
+        // the quick interactive workload must keep its injected long
+        // prompt (index batch..): requests > batch
+        let li = q.iter()
+            .find(|s| s.name == "long_prompt_interactive")
+            .unwrap();
+        assert!(li.requests > li.batch,
+                "quick mode dropped the injected long prompt");
     }
 
     #[test]
@@ -718,6 +853,12 @@ mod tests {
         validate_bench(&parsed).unwrap();
         assert!(batched_speedup(&parsed, 1).is_some());
         assert!(int8_speedup(&parsed, 1).is_some());
+        // the §12 pair is recorded, so the stall comparison resolves
+        // whenever the chunked row measured a non-zero stall
+        assert!(recs.iter().any(|r| r.name == "long_prompt_interactive"
+                                    && r.prefill_chunk == 0));
+        assert!(recs.iter().any(|r| r.name == "long_prompt_interactive"
+                                    && r.prefill_chunk > 0));
 
         // a narrower sweep validates against its own declared worlds
         let narrow = matrix_to_json("unit", "tiny", true, &[1], &recs);
@@ -731,9 +872,11 @@ mod tests {
             run_matrix(&tiny_cfg(), &[1], true, |_| {}).unwrap();
         let doc = matrix_to_json("unit", "tiny", true, &[1], &recs);
         let text = doc.to_string();
-        // strip each required §11 field in turn; validation must fail
+        // strip each required §11/§12 field in turn; validation must
+        // fail
         for field in ["weight_dtype", "kv_dtype", "weight_bytes",
-                      "kv_bytes", "backend"] {
+                      "kv_bytes", "backend", "prefill_chunk",
+                      "decode_stall_p99_us"] {
             let crippled =
                 text.replace(&format!("\"{field}\""),
                              &format!("\"x_{field}\""));

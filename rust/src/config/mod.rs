@@ -263,6 +263,14 @@ pub struct EngineConfig {
     /// KV-cache storage on the reference backend (f32 | int8) —
     /// DESIGN.md §11
     pub kv_dtype: Dtype,
+    /// Prefill chunk size in tokens (DESIGN.md §12): 0 = whole-prompt
+    /// prefill (one round per admitted request, the classic path);
+    /// N > 0 splits each prompt into N-token chunks that interleave
+    /// with batched decode steps, bounding how long any single prefill
+    /// round can stall in-flight decodes.  Chunking is reference-
+    /// backend-only (the AOT prefill segments are whole-frame) and
+    /// bit-identical to whole-prompt prefill at any chunk size.
+    pub prefill_chunk: usize,
 }
 
 impl Default for EngineConfig {
@@ -283,6 +291,7 @@ impl Default for EngineConfig {
             kernel: GemmKernel::Blocked,
             weight_dtype: Dtype::F32,
             kv_dtype: Dtype::F32,
+            prefill_chunk: 0,
         }
     }
 }
@@ -331,6 +340,18 @@ impl EngineConfig {
         }
         if let Some(v) = j.get("kv_dtype").and_then(Json::as_str) {
             cfg.kv_dtype = Dtype::parse(v)?;
+        }
+        if let Some(v) = j.get("prefill_chunk") {
+            // strict: present-but-invalid must error, never fall back
+            let n = v.as_f64().with_context(|| {
+                format!("prefill_chunk must be a non-negative integer \
+                         (0 = whole-prompt), got {v:?}")
+            })?;
+            if n.fract() != 0.0 || !(0.0..=1e9).contains(&n) {
+                bail!("prefill_chunk must be a non-negative integer \
+                       (0 = whole-prompt), got {n}");
+            }
+            cfg.prefill_chunk = n as usize;
         }
         if let Some(w) = j.get("weights") {
             match w.get("kind").and_then(Json::as_str) {
@@ -413,6 +434,7 @@ impl EngineConfig {
         let _ = writeln!(s, "kernel = \"{}\"", self.kernel);
         let _ = writeln!(s, "weight_dtype = \"{}\"", self.weight_dtype);
         let _ = writeln!(s, "kv_dtype = \"{}\"", self.kv_dtype);
+        let _ = writeln!(s, "prefill_chunk = {}", self.prefill_chunk);
         match &self.weights {
             WeightSource::Synthetic { seed } => {
                 let _ = writeln!(
@@ -476,6 +498,16 @@ impl EngineConfig {
                  weight_dtype={}, kv_dtype={}); int8 is a reference-\
                  backend feature (DESIGN.md §11)",
                 self.weight_dtype, self.kv_dtype
+            );
+        }
+        // the AOT prefill segments are lowered for whole-prompt frames
+        // at offset 0 — chunk rounds have no segment to run on
+        if self.backend == BackendKind::Xla && self.prefill_chunk != 0 {
+            bail!(
+                "backend \"xla\" does not support chunked prefill (got \
+                 prefill_chunk={}); chunking is a reference-backend \
+                 feature (DESIGN.md §12)",
+                self.prefill_chunk
             );
         }
         Ok(())
@@ -624,6 +656,7 @@ beta_gbps = 10.0
             kernel: GemmKernel::Scalar,
             weight_dtype: Dtype::Int8,
             kv_dtype: Dtype::Int8,
+            prefill_chunk: 16,
             ..Default::default()
         };
         cfg.opt.zero_copy = false;
@@ -646,6 +679,7 @@ beta_gbps = 10.0
         assert_eq!(back.kernel, GemmKernel::Scalar);
         assert_eq!(back.weight_dtype, Dtype::Int8);
         assert_eq!(back.kv_dtype, Dtype::Int8);
+        assert_eq!(back.prefill_chunk, 16);
         assert!(!back.opt.zero_copy);
         assert_eq!(back.opt.broadcast_ids, cfg.opt.broadcast_ids);
         assert_eq!(back.sampling.top_k, 13);
@@ -676,6 +710,35 @@ beta_gbps = 10.0
             "kv_dtype = \"fp16\"").is_err());
         assert!(EngineConfig::from_toml_str(
             "weight_dtype = \"INT8\"").is_err());
+        // prefill_chunk is strict-parsed: non-integers are clean
+        // config errors, never a silent fallback or truncation
+        assert!(EngineConfig::from_toml_str(
+            "prefill_chunk = \"whole\"").is_err());
+        assert!(EngineConfig::from_toml_str(
+            "prefill_chunk = 4.5").is_err());
+        assert!(EngineConfig::from_toml_str(
+            "prefill_chunk = -1").is_err());
+    }
+
+    #[test]
+    fn prefill_chunk_parse_and_defaults() {
+        assert_eq!(EngineConfig::default().prefill_chunk, 0);
+        let c = EngineConfig::from_toml_str("prefill_chunk = 16").unwrap();
+        assert_eq!(c.prefill_chunk, 16);
+        let whole = EngineConfig::from_toml_str("prefill_chunk = 0")
+            .unwrap();
+        assert_eq!(whole.prefill_chunk, 0);
+    }
+
+    #[test]
+    fn xla_backend_rejects_chunked_prefill() {
+        let cfg = EngineConfig {
+            backend: BackendKind::Xla,
+            prefill_chunk: 16,
+            ..Default::default()
+        };
+        // invalid regardless of whether the xla feature is compiled in
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -59,6 +59,7 @@ use crate::config::{EngineConfig, ModelPreset, ResolvedModel};
 use crate::kvcache::{LaneTable, PagedAllocator};
 use crate::metrics::{RunMetrics, StepTiming};
 use crate::sampling::{self, Candidate};
+use crate::scheduler::PrefillCursor;
 use crate::util::SplitMix64;
 
 use proto::{Cmd, Reply};
@@ -78,6 +79,22 @@ struct PendingReq {
     max_new: usize,
 }
 
+/// Where an admitted request is in its lifecycle (DESIGN.md §12).
+#[derive(Debug)]
+enum Phase {
+    /// Chunked prefill in progress: `cursor` tracks how much of
+    /// `prompt` has been fed; `admitted` anchors TTFT at admission, so
+    /// the decode rounds interleaved between chunks honestly count
+    /// against the chunked first-token latency.
+    Prefill {
+        prompt: Vec<i32>,
+        cursor: PrefillCursor,
+        admitted: Instant,
+    },
+    /// Decoding: feed `next_token` on the next batched decode step.
+    Decode { next_token: i32 },
+}
+
 #[derive(Debug)]
 struct ActiveReq {
     id: u64,
@@ -85,8 +102,13 @@ struct ActiveReq {
     prompt_len: usize,
     generated: Vec<i32>,
     max_new: usize,
-    /// token to feed on the next decode step
-    next_token: i32,
+    phase: Phase,
+}
+
+impl ActiveReq {
+    fn decoding(&self) -> bool {
+        matches!(self.phase, Phase::Decode { .. })
+    }
 }
 
 /// Tensor-parallel distributed inference engine.
@@ -107,6 +129,14 @@ pub struct Engine {
     eos: Option<i32>,
     /// per-deployment resident bytes, aggregated from rank Ready replies
     mem: MemUsage,
+    /// tokens sampled by the most recent step, in emission order —
+    /// the server's streaming feed ([`Engine::take_new_tokens`]);
+    /// cleared at the start of every step so non-draining drivers
+    /// never accumulate it
+    emitted: Vec<(u64, i32)>,
+    /// end of the previous decode round while decode lanes stay busy —
+    /// the anchor of the decode-stall (inter-decode gap) metric
+    last_decode_end: Option<Instant>,
 }
 
 impl Engine {
@@ -229,6 +259,8 @@ impl Engine {
             metrics: RunMetrics::default(),
             eos,
             mem,
+            emitted: Vec::new(),
+            last_decode_end: None,
             cfg,
         })
     }
@@ -269,8 +301,68 @@ impl Engine {
         self.active.len()
     }
 
+    /// Requests currently in the decode phase — the in-flight streams
+    /// the scheduler's prefill-burst guard actually protects (a
+    /// mid-chunked-prefill request occupies a lane but is not a
+    /// decode stream to shield).
+    pub fn decoding_count(&self) -> usize {
+        self.active.iter().filter(|a| a.decoding()).count()
+    }
+
     pub fn pending_count(&self) -> usize {
         self.pending.len()
+    }
+
+    /// Batch lanes not currently owned by a request (occupancy probe —
+    /// the cancellation tests assert leaks through this).
+    pub fn free_lanes(&self) -> usize {
+        self.lanes.free_lanes()
+    }
+
+    /// KV pages not currently reserved by any lane.
+    pub fn free_pages(&self) -> usize {
+        self.pages.free_pages()
+    }
+
+    /// Total KV page pool capacity.
+    pub fn total_pages(&self) -> usize {
+        self.pages.total_pages()
+    }
+
+    /// Drain the tokens sampled by the most recent [`Engine::step`],
+    /// in emission order: `(request_id, token)` per sampled token,
+    /// including each request's prefill-sampled first token.  The
+    /// server's streaming path calls this after every step to push
+    /// per-token frames (DESIGN.md §12).  The buffer only ever holds
+    /// one step's tokens — each step clears it first — so drivers
+    /// that never drain (benches, `generate`) don't accumulate it.
+    pub fn take_new_tokens(&mut self) -> Vec<(u64, i32)> {
+        std::mem::take(&mut self.emitted)
+    }
+
+    /// Cancel a request: drop it from the queue, or — if admitted —
+    /// free its lane and release its KV pages immediately, whether it
+    /// is mid-prefill or decoding.  Returns whether the id was found.
+    /// The lane's KV rows are left as-is: every position a future
+    /// owner attends over is rewritten (by its own prefill or decode)
+    /// before it is read, so a cancelled request can never leak state
+    /// *or* pages (DESIGN.md §12; pinned by the cancellation tests).
+    pub fn cancel(&mut self, request_id: u64) -> Result<bool> {
+        if let Some(i) =
+            self.pending.iter().position(|r| r.id == request_id)
+        {
+            let _ = self.pending.remove(i);
+            return Ok(true);
+        }
+        if let Some(i) =
+            self.active.iter().position(|a| a.id == request_id)
+        {
+            let a = self.active.swap_remove(i);
+            self.lanes.free(a.lane)?;
+            self.pages.release(a.lane);
+            return Ok(true);
+        }
+        Ok(false)
     }
 
     /// Smallest prefill bucket that fits `len`, or the largest bucket
@@ -283,13 +375,23 @@ impl Engine {
             .unwrap_or_else(|| self.prefill_buckets.last().unwrap())
     }
 
-    /// One scheduler iteration: admit+prefill new requests while lanes
-    /// are free, then run one batched decode step.  Returns requests that
-    /// finished during this iteration.
+    /// One scheduler iteration: admit new requests while lanes are
+    /// free (prefilling them whole at `prefill_chunk == 0`), advance
+    /// in-flight chunked prefills (oldest first), then run one batched
+    /// decode step.  While decode streams are in flight, at most ONE
+    /// chunk round runs per step — the Sarathi-style interleave that
+    /// bounds any prefill's stall on in-flight decodes to a single
+    /// chunk (DESIGN.md §12); with nothing decoding, chunk rounds
+    /// drain back-to-back since there is no stream to protect.
+    /// Returns requests that finished during this iteration.
     pub fn step(&mut self) -> Result<Vec<Completion>> {
         let mut done = Vec::new();
+        // the streaming feed holds one step's tokens: anything the
+        // caller didn't drain is stale, and clearing here bounds the
+        // buffer for drivers that never call take_new_tokens
+        self.emitted.clear();
 
-        // ---- admission + prefill (continuous batching) ----
+        // ---- admission (continuous batching) ----
         while !self.pending.is_empty() && self.lanes.free_lanes() > 0 {
             let req = self.pending.front().unwrap();
             let bucket = self.bucket_for(req.prompt.len());
@@ -299,16 +401,45 @@ impl Engine {
                 break; // wait for capacity
             }
             let req = self.pending.pop_front().unwrap();
-            let completion = self.admit_and_prefill(req, bucket, worst)?;
-            if let Some(c) = completion {
-                done.push(c); // 0-token request edge case
+            if self.cfg.prefill_chunk == 0 {
+                let completion =
+                    self.admit_and_prefill(req, bucket, worst)?;
+                if let Some(c) = completion {
+                    done.push(c); // 0-token request edge case
+                }
+            } else {
+                self.admit_chunked(req, bucket, worst)?;
+            }
+        }
+
+        // ---- chunked prefill: one chunk, oldest prefilling lane ----
+        if self.cfg.prefill_chunk > 0 {
+            loop {
+                if let Some(c) = self.prefill_chunk_step()? {
+                    done.push(c);
+                }
+                // pacing exists to protect in-flight decodes; with
+                // none to protect, drain chunk rounds back-to-back
+                // instead of paying one step-loop pass per chunk
+                // (bit-identical either way — DESIGN.md §12.2)
+                let any_decoding =
+                    self.active.iter().any(ActiveReq::decoding);
+                let any_prefilling =
+                    self.active.iter().any(|a| !a.decoding());
+                if any_decoding || !any_prefilling {
+                    break;
+                }
             }
         }
 
         // ---- batched decode ----
-        if !self.active.is_empty() {
+        if self.active.iter().any(ActiveReq::decoding) {
             let finished = self.decode_step()?;
             done.extend(finished);
+        } else {
+            // no decode lanes in flight: the stall clock has nothing
+            // to measure against
+            self.last_decode_end = None;
         }
         Ok(done)
     }
@@ -367,6 +498,8 @@ impl Engine {
             self.cfg.batch);
         self.pending.clear();
         self.active.clear();
+        self.emitted.clear();
+        self.last_decode_end = None;
         Ok(())
     }
 
@@ -395,36 +528,143 @@ impl Engine {
         let (cands, _timing) = self.collect_round(true)?;
         self.metrics.record_prefill(t0.elapsed());
 
+        self.active.push(ActiveReq {
+            id: req.id,
+            lane,
+            prompt_len: length,
+            generated: Vec::new(),
+            max_new: req.max_new,
+            phase: Phase::Decode { next_token: 0 },
+        });
+        self.finish_prefill(self.active.len() - 1, cands)
+    }
+
+    /// Shared tail of both prefill flavors (whole-prompt and final
+    /// chunk): sample the first token from rank 0's merged candidates,
+    /// move `active[idx]` to the decode phase, and retire it
+    /// immediately for 1-token generations / EOS — so the two paths
+    /// can never drift in their first-token bookkeeping.
+    fn finish_prefill(&mut self, idx: usize,
+                      cands: Option<Vec<Vec<Candidate>>>)
+                      -> Result<Option<Completion>> {
         let cands =
             cands.context("rank 0 returned no prefill candidates")?;
         let first = self.sample_one(&cands[0]);
         self.metrics.tokens_out += 1; // the prefill-sampled token
+        let a = &mut self.active[idx];
+        self.emitted.push((a.id, first));
+        a.generated.push(first);
+        a.phase = Phase::Decode { next_token: first };
+        if a.max_new <= 1 || Some(first) == self.eos {
+            let mut a = self.active.swap_remove(idx);
+            return Ok(Some(self.retire(&mut a)?));
+        }
+        Ok(None)
+    }
 
-        let mut active = ActiveReq {
+    /// Chunked admission (DESIGN.md §12): claim the lane and the
+    /// worst-case pages now — exactly like the whole-prompt path, so
+    /// decode can never run out of cache mid-flight — but feed no
+    /// tokens yet; [`Self::prefill_chunk_step`] trickles the prompt in.
+    fn admit_chunked(&mut self, req: PendingReq, bucket: usize,
+                     worst: usize) -> Result<()> {
+        let mut prompt = req.prompt;
+        prompt.truncate(bucket);
+        if prompt.is_empty() {
+            // same row the whole-prompt path runs for an empty prompt
+            // (its bucket padding token), so both modes stay
+            // bit-identical on the degenerate request
+            prompt.push(0);
+        }
+        let length = prompt.len();
+        let lane = self.lanes.alloc(req.id, length)?;
+        self.pages.admit(lane, worst)?;
+        let cursor = PrefillCursor::new(length, self.cfg.prefill_chunk);
+        self.active.push(ActiveReq {
             id: req.id,
             lane,
             prompt_len: length,
-            generated: vec![first],
+            generated: Vec::new(),
             max_new: req.max_new,
-            next_token: first,
+            phase: Phase::Prefill {
+                prompt,
+                cursor,
+                admitted: Instant::now(),
+            },
+        });
+        Ok(())
+    }
+
+    /// Advance the oldest in-flight chunked prefill by one chunk.  The
+    /// final chunk's round returns the first-token candidates; the
+    /// request then moves to the decode phase (or retires, for 1-token
+    /// generations).  Returns a completion only in that retire case.
+    fn prefill_chunk_step(&mut self) -> Result<Option<Completion>> {
+        // oldest = smallest request id: `active` is reordered by
+        // swap_remove at retire, so positional order is not FCFS
+        let Some(idx) = self
+            .active
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| !a.decoding())
+            .min_by_key(|(_, a)| a.id)
+            .map(|(i, _)| i)
+        else {
+            return Ok(None);
         };
-        if req.max_new <= 1 || Some(first) == self.eos {
-            let c = self.retire(&mut active)?;
-            return Ok(Some(c));
+        let (lane, offset, chunk, last, admitted) = {
+            let a = &mut self.active[idx];
+            let Phase::Prefill { prompt, cursor, admitted } =
+                &mut a.phase
+            else {
+                unreachable!("non-decoding request must be prefilling");
+            };
+            let span = cursor
+                .next_chunk()
+                .context("prefill cursor ran dry before its last chunk")?;
+            (a.lane, span.start,
+             prompt[span.start..span.start + span.len].to_vec(),
+             span.last, *admitted)
+        };
+        let len = chunk.len();
+
+        for host in &self.hosts {
+            let tokens = (host.rank() == 0).then(|| chunk.clone());
+            host.send(Cmd::PrefillChunk { lane, offset, tokens, len,
+                                          last })
+                .context("rank host unreachable")?;
         }
-        self.active.push(active);
-        Ok(None)
+        let (cands, _timing) = self.collect_round(true)?;
+        if !last {
+            return Ok(None);
+        }
+        // TTFT = admission → first token: the decode rounds
+        // interleaved between this request's chunks count against it
+        self.metrics.record_prefill(admitted.elapsed());
+        self.finish_prefill(idx, cands)
     }
 
     fn decode_step(&mut self) -> Result<Vec<Completion>> {
         let b = self.cfg.batch;
         let mut tokens = vec![0i32; b];
         for a in &self.active {
-            tokens[a.lane] = a.next_token;
+            // mid-prefill lanes ride along with token 0; their rows'
+            // outputs are discarded and their KV write at the parked
+            // position is overwritten by the first real decode
+            if let Phase::Decode { next_token } = a.phase {
+                tokens[a.lane] = next_token;
+            }
         }
         let positions = self.lanes.positions();
 
         let t0 = Instant::now();
+        // decode-stall: the gap since the previous decode round while
+        // decode lanes stayed busy — exactly the latency a whole-shot
+        // prefill injects into in-flight streams, the figure chunking
+        // bounds (DESIGN.md §12)
+        if let Some(prev) = self.last_decode_end {
+            self.metrics.record_decode_gap(t0.duration_since(prev));
+        }
         for host in &self.hosts {
             let toks = (host.rank() == 0).then(|| tokens.clone());
             host.send(Cmd::Decode {
@@ -445,13 +685,20 @@ impl Engine {
 
         let t_sample = Instant::now();
         let mut finished = Vec::new();
+        let mut decoded = 0u64;
         let mut idx = 0;
         while idx < self.active.len() {
+            if !self.active[idx].decoding() {
+                idx += 1; // mid-prefill lane: nothing sampled
+                continue;
+            }
             let lane = self.active[idx].lane;
             let tok = self.sample_one(&cands[lane]);
+            decoded += 1;
             let a = &mut self.active[idx];
             a.generated.push(tok);
-            a.next_token = tok;
+            a.phase = Phase::Decode { next_token: tok };
+            self.emitted.push((a.id, tok));
             self.lanes.advance(lane)?;
             let done = a.generated.len() >= a.max_new
                 || Some(tok) == self.eos
@@ -464,8 +711,13 @@ impl Engine {
             }
         }
         timing.sample_us = t_sample.elapsed().as_micros() as u64;
-        let new_tokens = (self.active.len() + finished.len()) as u64;
-        self.metrics.record_decode(&timing, new_tokens);
+        self.metrics.record_decode(&timing, decoded);
+        self.last_decode_end =
+            if self.active.iter().any(ActiveReq::decoding) {
+                Some(Instant::now())
+            } else {
+                None
+            };
         Ok(finished)
     }
 

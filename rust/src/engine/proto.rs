@@ -41,6 +41,24 @@ pub enum Cmd {
     /// Reset all KV caches + lane state (between bench iterations).
     Reset,
     Shutdown,
+    /// One chunk of a chunked prefill (DESIGN.md §12): `len` prompt
+    /// tokens continuing lane `lane`'s KV region at absolute position
+    /// `offset`.  Unlike [`Cmd::Prefill`] the chunk is unpadded —
+    /// exactly `len` activation rows run.  `tokens` is rank 0 only
+    /// (§2.1a broadcast, like the other rounds); `last` marks the
+    /// final chunk, whose reply carries the first-token candidates.
+    PrefillChunk {
+        /// batch lane being prefilled
+        lane: usize,
+        /// absolute position of the chunk's first token
+        offset: usize,
+        /// chunk tokens (rank 0 only; `len` of them)
+        tokens: Option<Vec<i32>>,
+        /// tokens in this chunk
+        len: usize,
+        /// final chunk of the prompt — sample first-token candidates
+        last: bool,
+    },
 }
 
 /// Replies from rank workers to the leader.
@@ -209,6 +227,14 @@ impl Cmd {
             }
             Cmd::Reset => out.push(2),
             Cmd::Shutdown => out.push(3),
+            Cmd::PrefillChunk { lane, offset, tokens, len, last } => {
+                out.push(4);
+                put_u32(out, *lane as u32);
+                put_u32(out, *offset as u32);
+                put_opt_vec_i32(out, tokens);
+                put_u32(out, *len as u32);
+                out.push(*last as u8);
+            }
         }
     }
 
@@ -228,6 +254,17 @@ impl Cmd {
             },
             2 => Cmd::Reset,
             3 => Cmd::Shutdown,
+            4 => Cmd::PrefillChunk {
+                lane: r.usize32()?,
+                offset: r.usize32()?,
+                tokens: r.opt_vec_i32()?,
+                len: r.usize32()?,
+                last: match r.u8()? {
+                    0 => false,
+                    1 => true,
+                    b => bail!("bad bool tag {b}"),
+                },
+            },
             d => bail!("unknown Cmd discriminant {d}"),
         };
         r.done()?;
@@ -370,6 +407,35 @@ mod tests {
         roundtrip_cmd(Cmd::Decode { tokens: None, positions: vec![] });
         roundtrip_cmd(Cmd::Reset);
         roundtrip_cmd(Cmd::Shutdown);
+        roundtrip_cmd(Cmd::PrefillChunk {
+            lane: 2,
+            offset: 16,
+            tokens: Some(vec![5, 6, 7]),
+            len: 3,
+            last: true,
+        });
+        roundtrip_cmd(Cmd::PrefillChunk {
+            lane: 0,
+            offset: 0,
+            tokens: None,
+            len: 7,
+            last: false,
+        });
+    }
+
+    #[test]
+    fn prefill_chunk_bool_tag_is_strict() {
+        let mut buf = Vec::new();
+        Cmd::PrefillChunk {
+            lane: 0,
+            offset: 0,
+            tokens: None,
+            len: 1,
+            last: false,
+        }
+        .encode(&mut buf);
+        *buf.last_mut().unwrap() = 7; // corrupt the `last` bool tag
+        assert!(Cmd::decode(&buf).is_err());
     }
 
     #[test]

@@ -147,6 +147,23 @@ impl RankWorker {
                         },
                     }
                 }
+                Cmd::PrefillChunk { lane, offset, tokens, len, last } => {
+                    self.compute_us = 0;
+                    self.comm_us = 0;
+                    match self.prefill_chunk(lane, offset, tokens, len,
+                                             last) {
+                        Ok(c) => Reply::PrefillDone {
+                            rank: self.rank,
+                            compute_us: self.compute_us,
+                            comm_us: self.comm_us,
+                            candidates: c,
+                        },
+                        Err(e) => Reply::Error {
+                            rank: self.rank,
+                            message: format!("prefill_chunk: {e:#}"),
+                        },
+                    }
+                }
                 Cmd::Reset => match self.backend.reset() {
                     Ok(()) => Reply::ResetDone { rank: self.rank },
                     Err(e) => Reply::Error {
@@ -280,33 +297,74 @@ impl RankWorker {
 
     // ---- prefill ---------------------------------------------------------
 
-    fn prefill(&mut self, lane: usize, bucket: usize,
-               tokens: Option<Vec<i32>>, length: usize)
-               -> Result<Option<Vec<Candidate>>> {
+    /// Shared body of both prefill flavors: embed `rows` activation
+    /// rows for `ctx`, run every layer segment, and — when `head_row`
+    /// is set — place that row into a zeroed `[B, 1, H]` head input
+    /// and return the lane's merged first-token candidates (rank 0;
+    /// None elsewhere, and None everywhere when `head_row` is None —
+    /// a non-final chunk).  One body means the whole-prompt and
+    /// chunked rounds can never drift in their per-row float chains.
+    fn prefill_rounds(&mut self, ctx: &StepCtx, tokens: Option<Vec<i32>>,
+                      rows: usize, head_row: Option<usize>)
+                      -> Result<Option<Vec<Candidate>>> {
+        let StepCtx::Prefill { lane, .. } = *ctx else {
+            unreachable!("prefill_rounds takes a prefill ctx");
+        };
         let h = self.hidden;
-        let n = bucket * h;
-        let ctx = StepCtx::Prefill { lane, bucket, length };
-        self.embed_round(&ctx, tokens, n)?;
+        let n = rows * h;
+        self.embed_round(ctx, tokens, n)?;
 
         let mut x = std::mem::take(&mut self.x_host);
         for li in 0..self.n_layers {
             for seg in 0..self.segs_per_layer {
-                if let Err(e) = self.layer_round(&ctx, li, seg, n, &mut x) {
+                if let Err(e) = self.layer_round(ctx, li, seg, n, &mut x) {
                     self.x_host = x;
                     return Err(e);
                 }
             }
         }
+        let Some(row_idx) = head_row else {
+            self.x_host = x;
+            return Ok(None);
+        };
 
         // first-token logits: place the lane's last valid row into a
         // zeroed [B,1,H] head input
         let b = self.cfg.batch;
         let mut head_in = vec![0.0f32; b * h];
-        let row = (length - 1) * h;
+        let row = row_idx * h;
         head_in[lane * h..(lane + 1) * h].copy_from_slice(&x[row..row + h]);
         self.x_host = x;
         let cands = self.lm_head_candidates(&head_in)?;
         Ok(cands.map(|per_lane| per_lane.into_iter().nth(lane).unwrap()))
+    }
+
+    fn prefill(&mut self, lane: usize, bucket: usize,
+               tokens: Option<Vec<i32>>, length: usize)
+               -> Result<Option<Vec<Candidate>>> {
+        let ctx = StepCtx::Prefill { lane, bucket, length, offset: 0 };
+        self.prefill_rounds(&ctx, tokens, bucket, Some(length - 1))
+    }
+
+    /// One chunk of a chunked prefill (DESIGN.md §12): `len` unpadded
+    /// rows continuing lane `lane`'s KV region at absolute position
+    /// `offset`.  Row `r` lives at position `offset + r` and attends
+    /// over `[0, offset + r + 1)`, so the appended KV and (on the
+    /// last chunk) the first-token candidates are bit-identical to
+    /// the unchunked round.  Non-final chunks skip the lm head
+    /// entirely and return no candidates.
+    fn prefill_chunk(&mut self, lane: usize, offset: usize,
+                     tokens: Option<Vec<i32>>, len: usize, last: bool)
+                     -> Result<Option<Vec<Candidate>>> {
+        anyhow::ensure!(len >= 1, "empty prefill chunk");
+        if let Some(t) = &tokens {
+            anyhow::ensure!(t.len() == len,
+                            "chunk carries {} tokens, header says {len}",
+                            t.len());
+        }
+        let ctx = StepCtx::Prefill { lane, bucket: len, length: len,
+                                     offset };
+        self.prefill_rounds(&ctx, tokens, len, last.then_some(len - 1))
     }
 
     // ---- decode -----------------------------------------------------------

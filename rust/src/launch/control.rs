@@ -33,7 +33,11 @@ use crate::engine::proto::{self, Cmd, Reply, WireReader};
 ///
 /// v2: `Reply::Ready` grew `weight_bytes`/`kv_bytes` (the §11 memory
 /// accounting) — a v1 worker's Ready frame no longer decodes.
-pub const PROTO_VERSION: u32 = 2;
+///
+/// v3: new `Cmd::PrefillChunk` (chunked prefill rounds, DESIGN.md
+/// §12) — a v2 worker cannot decode the chunk command, so mixed
+/// fleets are refused at registration.
+pub const PROTO_VERSION: u32 = 3;
 
 /// How often an idle worker proves liveness to the coordinator.
 pub const HEARTBEAT_PERIOD: Duration = Duration::from_secs(2);

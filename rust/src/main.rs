@@ -50,15 +50,19 @@ on --addr.  With --spawn-workers true the coordinator forks the
 workers itself (single-machine convenience; CI smoke path starts them
 explicitly).
 
-bench runs the recording suite (DESIGN.md \u{a7}10/\u{a7}11): the
+bench runs the recording suite (DESIGN.md \u{a7}10-\u{a7}12): the
 standard scenarios (single-stream / batched decode, prefill-heavy,
-mixed) per world size, on the blocked kernel plus the scalar
-batched-decode baseline and int8 weights+KV decode rows, and writes
-the xeonserve-bench/v1 JSON (--json) that BENCH_*.json files in the
-repo are recorded with — every row carries its weight/KV dtype and
-measured resident bytes.  --validate schema-checks such a file and
-exits.  Serving dtypes are config knobs: weight_dtype = \"int8\" and
-kv_dtype = \"int8\" in the TOML (reference backend only).
+mixed, long-prompt interactive) per world size, on the blocked kernel
+plus the scalar batched-decode baseline, int8 weights+KV decode rows,
+and the chunked-prefill decode-stall pair, and writes the
+xeonserve-bench/v1 JSON (--json) that BENCH_*.json files in the repo
+are recorded with — every row carries its weight/KV dtype, prefill
+chunk size, and measured resident bytes.  --validate schema-checks
+such a file and exits.  Serving knobs live in the TOML: weight_dtype /
+kv_dtype = \"int8\" (reference backend only) and prefill_chunk = N
+(0 = whole-prompt; chunked prefill, reference backend only).  The
+serve/launch JSON API streams per-token reply frames when a request
+carries \"stream\": true.
 
 Without --config the built-in default is used (tiny model, world=2,
 all paper optimizations ON).  See configs/*.toml for presets.";
@@ -229,6 +233,12 @@ fn run_bench(args: &Args) -> Result<()> {
             println!(
                 "batched_decode w{w}: int8 weights+KV is {s:.2}x the \
                  f32 blocked row"
+            );
+        }
+        if let Some(s) = suite::chunked_stall_ratio(&doc, w) {
+            println!(
+                "long_prompt_interactive w{w}: whole-prompt decode-\
+                 stall p99 is {s:.2}x the chunked row's (DESIGN.md §12)"
             );
         }
     }

@@ -145,6 +145,14 @@ pub struct RunMetrics {
     pub decode_sim: LatencyStats,
     /// wall-clock latency of each prefill round (≈ time to first token)
     pub prefill_wall: LatencyStats,
+    /// decode-stall distribution: the wall-clock gap between
+    /// consecutive batched decode rounds while decode lanes stayed
+    /// busy.  A whole-shot prefill injected between two decode rounds
+    /// shows up here as one large gap; chunked prefill (DESIGN.md §12)
+    /// bounds every gap to roughly one chunk's compute.  Recorded by
+    /// the engine only while at least one decode-phase request is in
+    /// flight, so idle periods never pollute the distribution.
+    pub decode_gap: LatencyStats,
     /// tokens emitted (prefill-sampled + decode)
     pub tokens_out: u64,
     /// requests fully retired
@@ -162,6 +170,11 @@ impl RunMetrics {
     /// Record one prefill round's wall time.
     pub fn record_prefill(&mut self, wall: Duration) {
         self.prefill_wall.record(wall);
+    }
+
+    /// Record one inter-decode-round gap (the decode-stall sample).
+    pub fn record_decode_gap(&mut self, gap: Duration) {
+        self.decode_gap.record(gap);
     }
 
     /// tokens/s over a measured span.
@@ -265,6 +278,16 @@ mod tests {
             sample_us: 10,
         };
         assert_eq!(t.sim_total_us(), 200 + 40 + 10);
+    }
+
+    #[test]
+    fn decode_gap_is_a_plain_latency_series() {
+        let mut m = RunMetrics::default();
+        assert!(m.decode_gap.is_empty());
+        m.record_decode_gap(Duration::from_micros(100));
+        m.record_decode_gap(Duration::from_micros(900));
+        assert_eq!(m.decode_gap.count(), 2);
+        assert_eq!(m.decode_gap.p99_us(), 900);
     }
 
     #[test]

@@ -3,20 +3,118 @@
 //! The engine itself batches continuously at lane granularity; this
 //! module is the policy layer above it: an FCFS admission queue with
 //! arrival bookkeeping (for TTFT accounting) and a prefill/decode
-//! interleave guard that bounds how many prefills may run back-to-back
-//! while decodes are pending (decode-starvation protection, the knob
-//! Sarathi-style schedulers turn).
+//! interleave guard that bounds how much prefill work may run
+//! back-to-back while decodes are pending (decode-starvation
+//! protection, the knob Sarathi-style schedulers turn).
+//!
+//! With chunked prefill (`EngineConfig::prefill_chunk`, DESIGN.md
+//! §12) the unit of prefill work is a *chunk*, not a request: the
+//! burst guard charges each admission `ceil(prompt / chunk)` chunks,
+//! so one long prompt consumes the same decode-interleave budget as
+//! that many short ones, and [`PrefillCursor`] tracks a request's
+//! chunk-by-chunk progress for the engine.
+
+#![warn(missing_docs)]
 
 use std::collections::VecDeque;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A queued request with arrival time.
 #[derive(Debug)]
 pub struct QueuedRequest {
+    /// scheduler-assigned id (monotonic per scheduler)
     pub id: u64,
+    /// prompt token ids
     pub prompt: Vec<i32>,
+    /// generation budget the client asked for
     pub max_new_tokens: usize,
+    /// submission time — the TTFT anchor
     pub arrived: Instant,
+}
+
+/// One chunk of a chunked prefill, as [`PrefillCursor`] hands them out.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ChunkSpan {
+    /// absolute position of the chunk's first token in the prompt
+    pub start: usize,
+    /// tokens in this chunk (`<= chunk size`; the tail may be short)
+    pub len: usize,
+    /// final chunk of the prompt
+    pub last: bool,
+}
+
+/// Per-request prefill progress in fixed-size chunks (DESIGN.md §12).
+///
+/// The cursor tiles `[0, total)` with spans of at most `chunk` tokens:
+/// every span starts where the previous one ended, only the final span
+/// may be short, and `chunk == 0` (whole-prompt mode) degenerates to a
+/// single span covering everything — so the engine can drive both
+/// modes through one code path.
+///
+/// # Example
+///
+/// ```
+/// use xeonserve::scheduler::PrefillCursor;
+///
+/// let mut c = PrefillCursor::new(10, 4);
+/// assert_eq!(c.chunks_total(), 3);
+/// let spans: Vec<_> = std::iter::from_fn(|| c.next_chunk()).collect();
+/// assert_eq!(spans.len(), 3);
+/// assert_eq!((spans[2].start, spans[2].len, spans[2].last),
+///            (8, 2, true));
+/// assert!(c.done());
+/// ```
+#[derive(Clone, Debug)]
+pub struct PrefillCursor {
+    total: usize,
+    chunk: usize,
+    cursor: usize,
+}
+
+impl PrefillCursor {
+    /// A cursor over a `total`-token prompt in `chunk`-token steps
+    /// (`chunk == 0` = whole-prompt: one span).  `total` is clamped to
+    /// at least 1 — the engine never prefills zero rows.
+    pub fn new(total: usize, chunk: usize) -> PrefillCursor {
+        PrefillCursor { total: total.max(1), chunk, cursor: 0 }
+    }
+
+    /// The effective chunk size (whole-prompt mode steps by `total`).
+    fn step(&self) -> usize {
+        if self.chunk == 0 {
+            self.total
+        } else {
+            self.chunk
+        }
+    }
+
+    /// Chunks this prompt costs in burst accounting:
+    /// `ceil(total / chunk)`, 1 in whole-prompt mode.
+    pub fn chunks_total(&self) -> usize {
+        self.total.div_ceil(self.step())
+    }
+
+    /// Tokens already handed out.
+    pub fn position(&self) -> usize {
+        self.cursor
+    }
+
+    /// Has every token been handed out?
+    pub fn done(&self) -> bool {
+        self.cursor >= self.total
+    }
+
+    /// The next chunk to prefill, advancing the cursor; `None` once
+    /// the prompt is fully covered.
+    pub fn next_chunk(&mut self) -> Option<ChunkSpan> {
+        if self.done() {
+            return None;
+        }
+        let start = self.cursor;
+        let len = self.step().min(self.total - start);
+        self.cursor = start + len;
+        Some(ChunkSpan { start, len, last: self.cursor == self.total })
+    }
 }
 
 /// FCFS queue + interleave policy.
@@ -40,22 +138,39 @@ pub struct QueuedRequest {
 #[derive(Debug)]
 pub struct FcfsScheduler {
     queue: VecDeque<QueuedRequest>,
-    /// max consecutive prefills while decodes wait
+    /// max prefill work (in chunks) taken while decodes wait
     max_prefill_burst: usize,
     burst: usize,
+    /// prefill chunk size in tokens (0 = whole-prompt): each
+    /// admission charges `ceil(prompt / chunk)` chunks to the burst
+    /// counter, 1 in whole-prompt mode
+    prefill_chunk: usize,
     next_id: u64,
 }
 
 impl FcfsScheduler {
+    /// Whole-prompt scheduler: the burst guard counts *requests*
+    /// (each admission charges one unit).
     pub fn new(max_prefill_burst: usize) -> Self {
+        Self::with_chunking(max_prefill_burst, 0)
+    }
+
+    /// Chunk-aware scheduler (DESIGN.md §12): the burst guard counts
+    /// *chunks*, so a long prompt charges `ceil(len / prefill_chunk)`
+    /// units against the decode-interleave budget.  `prefill_chunk ==
+    /// 0` is whole-prompt mode (identical to [`FcfsScheduler::new`]).
+    pub fn with_chunking(max_prefill_burst: usize, prefill_chunk: usize)
+                         -> Self {
         FcfsScheduler {
             queue: VecDeque::new(),
             max_prefill_burst: max_prefill_burst.max(1),
             burst: 0,
+            prefill_chunk,
             next_id: 0,
         }
     }
 
+    /// Queue a request; returns its scheduler id.
     pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
@@ -68,17 +183,39 @@ impl FcfsScheduler {
         id
     }
 
+    /// Queued (not yet admitted) requests.
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Is the admission queue empty?
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }
 
-    /// Next request to admit, honoring the prefill-burst bound:
-    /// once `max_prefill_burst` consecutive prefills have been taken
-    /// while decodes are pending, yield to decode (returns None).
+    /// How long the oldest queued request has been waiting (`None`
+    /// when the queue is empty) — the head-of-line TTFT bound: FCFS
+    /// pops in arrival order, so no queued request has waited longer.
+    pub fn oldest_wait(&self) -> Option<Duration> {
+        self.queue.front().map(|q| q.arrived.elapsed())
+    }
+
+    /// Burst units one admission of `prompt_len` tokens costs: chunks
+    /// under chunking, 1 whole-prompt.
+    fn chunk_cost(&self, prompt_len: usize) -> usize {
+        if self.prefill_chunk == 0 {
+            1
+        } else {
+            prompt_len.max(1).div_ceil(self.prefill_chunk)
+        }
+    }
+
+    /// Next request to admit, honoring the prefill-burst bound: once
+    /// `max_prefill_burst` chunks' worth of prefill has been taken
+    /// while decodes are pending, yield to decode (returns None).  A
+    /// request whose own cost exceeds the bound is still admitted when
+    /// the counter is fresh — it just exhausts the budget by itself —
+    /// so long prompts cannot starve.
     pub fn next_admission(&mut self, decodes_pending: bool)
                           -> Option<QueuedRequest> {
         if self.queue.is_empty() {
@@ -91,7 +228,8 @@ impl FcfsScheduler {
             self.burst = 0; // yield one decode round, then allow again
             return None;
         }
-        self.burst = if decodes_pending { self.burst + 1 } else { 0 };
+        let cost = self.chunk_cost(self.queue.front().unwrap().prompt.len());
+        self.burst = if decodes_pending { self.burst + cost } else { 0 };
         self.queue.pop_front()
     }
 
@@ -239,6 +377,135 @@ mod tests {
             prev_arrived = Some(q.arrived);
         }
         assert!(s.is_empty());
+    }
+
+    #[test]
+    fn cursor_spans_tile_the_prompt_exactly() {
+        // property: for any (total, chunk), the spans are contiguous,
+        // cover [0, total) exactly once, only the last may be short,
+        // and the span count matches chunks_total()
+        for total in 1..=65usize {
+            for chunk in 0..=17usize {
+                let mut c = PrefillCursor::new(total, chunk);
+                let expect = c.chunks_total();
+                let mut spans = Vec::new();
+                let mut next_start = 0;
+                while let Some(s) = c.next_chunk() {
+                    assert_eq!(s.start, next_start,
+                               "gap at {total}/{chunk}");
+                    assert!(s.len >= 1);
+                    if chunk > 0 {
+                        assert!(s.len <= chunk);
+                        if !s.last {
+                            assert_eq!(s.len, chunk,
+                                       "only the tail may be short");
+                        }
+                    }
+                    next_start = s.start + s.len;
+                    spans.push(s);
+                }
+                assert_eq!(next_start, total);
+                assert_eq!(spans.len(), expect);
+                assert!(spans.last().unwrap().last);
+                assert!(spans[..spans.len() - 1].iter()
+                            .all(|s| !s.last));
+                assert!(c.done());
+                assert!(c.next_chunk().is_none(), "cursor must stay done");
+            }
+        }
+    }
+
+    #[test]
+    fn whole_prompt_cursor_is_one_span() {
+        let mut c = PrefillCursor::new(37, 0);
+        assert_eq!(c.chunks_total(), 1);
+        assert_eq!(c.next_chunk(),
+                   Some(ChunkSpan { start: 0, len: 37, last: true }));
+        assert!(c.next_chunk().is_none());
+        // zero-token prompts clamp to one row, like the engine's pad
+        let mut z = PrefillCursor::new(0, 4);
+        assert_eq!(z.next_chunk(),
+                   Some(ChunkSpan { start: 0, len: 1, last: true }));
+    }
+
+    #[test]
+    fn burst_guard_counts_chunks_not_requests() {
+        // chunk 4, bound 4: a 16-token prompt costs 4 chunks and
+        // exhausts the whole budget by itself, where four 4-token
+        // prompts would each cost 1
+        let mut s = FcfsScheduler::with_chunking(4, 4);
+        s.submit(vec![0; 16], 1);
+        s.submit(vec![0; 4], 1);
+        assert!(s.next_admission(true).is_some()); // 4 chunks: budget gone
+        assert!(s.next_admission(true).is_none(), "must yield to decode");
+        s.on_decode_round();
+        assert!(s.next_admission(true).is_some());
+
+        // same prompts, whole-prompt mode: both cost 1, both admitted
+        let mut w = FcfsScheduler::new(4);
+        w.submit(vec![0; 16], 1);
+        w.submit(vec![0; 4], 1);
+        assert!(w.next_admission(true).is_some());
+        assert!(w.next_admission(true).is_some());
+    }
+
+    #[test]
+    fn oversized_request_still_admitted_on_fresh_budget() {
+        // a prompt costing more chunks than the whole bound must not
+        // starve: it is admitted when the counter is fresh
+        let mut s = FcfsScheduler::with_chunking(2, 4);
+        s.submit(vec![0; 64], 1); // 16 chunks >> bound 2
+        assert!(s.next_admission(true).is_some());
+        // ...but the budget is then exhausted for followers
+        s.submit(vec![0; 4], 1);
+        assert!(s.next_admission(true).is_none());
+    }
+
+    #[test]
+    fn chunked_starvation_bound_holds_under_sustained_pressure() {
+        // the decode-starvation invariant restated in chunks: with
+        // decodes always pending, at most max(k, cost(front)) chunks
+        // of prefill are admitted between two decode rounds, and the
+        // queue still drains (oldest_wait eventually clears)
+        for k in 1..=4usize {
+            let chunk = 4usize;
+            let mut s = FcfsScheduler::with_chunking(k, chunk);
+            let mut max_cost = 0usize;
+            for i in 0..40 {
+                let len = 1 + (i * 7) % 23; // mixed prompt lengths
+                max_cost = max_cost.max(len.div_ceil(chunk));
+                s.submit(vec![0; len], 1);
+            }
+            let mut decode_rounds = 0;
+            while !s.is_empty() {
+                assert!(s.oldest_wait().is_some());
+                let mut burst_chunks = 0;
+                while let Some(q) = s.next_admission(true) {
+                    burst_chunks +=
+                        q.prompt.len().div_ceil(chunk);
+                }
+                assert!(burst_chunks <= (k - 1) + max_cost,
+                        "burst of {burst_chunks} chunks exceeded \
+                         bound {k} + worst admission {max_cost}");
+                s.on_decode_round();
+                decode_rounds += 1;
+                assert!(decode_rounds <= 200, "no forward progress");
+            }
+            assert!(s.oldest_wait().is_none());
+            assert!(decode_rounds >= 1);
+        }
+    }
+
+    #[test]
+    fn oldest_wait_tracks_the_queue_head() {
+        let mut s = FcfsScheduler::new(2);
+        assert!(s.oldest_wait().is_none());
+        s.submit(vec![1], 1);
+        let w1 = s.oldest_wait().unwrap();
+        let w2 = s.oldest_wait().unwrap();
+        assert!(w2 >= w1, "head wait must be monotone");
+        s.next_admission(false).unwrap();
+        assert!(s.oldest_wait().is_none());
     }
 
     #[test]

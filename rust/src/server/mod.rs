@@ -7,11 +7,42 @@
 //! ← {"id": 3, "text": "...", "tokens": [..], "latency_ms": 12.3}
 //! ```
 //!
+//! With `"stream": true` the reply is one frame per generated token,
+//! terminated by a summary frame carrying the full result (DESIGN.md
+//! §12):
+//!
+//! ```text
+//! → {"prompt": "hello", "max_new_tokens": 3, "stream": true}
+//! ← {"id": 3, "token": 104}
+//! ← {"id": 3, "token": 105}
+//! ← {"id": 3, "token": 33}
+//! ← {"done": true, "id": 3, "text": "...", "tokens": [..],
+//!    "latency_ms": 12.3}
+//! ```
+//!
+//! A streaming client that disconnects mid-generation is detected at
+//! the next token frame: the engine cancels the request, freeing its
+//! lane and KV pages for waiting traffic (cancel-on-disconnect).
+//! Detection rides the token stream — a client that vanishes during
+//! prefill is reaped at its first token, and abandoned one-shot
+//! requests run to completion (bounded by `max_new`); the blocking-IO
+//! server has no out-of-band liveness probe.
+//!
+//! `{"stats": true}` answers one introspection line (lane/page
+//! occupancy + serving counters) without generating:
+//!
+//! ```text
+//! → {"stats": true}
+//! ← {"stats": {"active": 1, "pending": 0, "free_lanes": 1, ...}}
+//! ```
+//!
 //! Threading: the engine is not `Send` (PJRT buffers are thread-local),
 //! so it runs on a dedicated thread; connection threads submit jobs over
 //! a channel and block on per-job reply channels.  This mirrors the
 //! paper's topology — one leader process front-ending the rank workers.
 //! (std::net threads; the offline build environment has no tokio.)
+
+#![warn(missing_docs)]
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
@@ -30,15 +61,25 @@ use crate::util::Json;
 /// A parsed API request line.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ApiRequest {
+    /// prompt text (tokenized server-side)
     pub prompt: String,
+    /// generation budget; absent defaults to 16
     pub max_new_tokens: usize,
+    /// per-token streamed reply frames instead of one-shot (DESIGN.md
+    /// §12); absent defaults to false — the old one-shot protocol
+    pub stream: bool,
+    /// introspection request: answer one `{"stats": {...}}` line
+    /// (lane/page occupancy + serving counters) instead of generating;
+    /// `prompt` may be omitted
+    pub stats: bool,
 }
 
 impl ApiRequest {
+    /// Parse one request line.  Absent fields take their defaults;
+    /// present-but-invalid fields are rejected with an error (silently
+    /// coercing a malformed value to the default hid client bugs).
     pub fn parse(line: &str) -> Result<ApiRequest> {
         let j = Json::parse(line)?;
-        // absent => default; present-but-invalid => reject.  Silently
-        // coercing a malformed value to the default hid client bugs.
         let max_new_tokens = match j.get("max_new_tokens") {
             None => 16,
             Some(v) => {
@@ -52,28 +93,50 @@ impl ApiRequest {
                 n as usize
             }
         };
-        Ok(ApiRequest {
-            prompt: j
-                .req("prompt")?
+        // strict typing: "stream"/"stats" must be real JSON booleans —
+        // a "true" string or a number is a client bug, not an opt-in
+        let stream = match j.get("stream") {
+            None => false,
+            Some(v) => v
+                .as_bool()
+                .context("stream must be a boolean (true|false)")?,
+        };
+        let stats = match j.get("stats") {
+            None => false,
+            Some(v) => v
+                .as_bool()
+                .context("stats must be a boolean (true|false)")?,
+        };
+        let prompt = match j.get("prompt") {
+            Some(v) => v
                 .as_str()
                 .context("prompt must be a string")?
                 .to_string(),
-            max_new_tokens,
-        })
+            // a pure stats probe needs no prompt
+            None if stats => String::new(),
+            None => anyhow::bail!("missing JSON key \"prompt\""),
+        };
+        Ok(ApiRequest { prompt, max_new_tokens, stream, stats })
     }
 }
 
 /// A serialized API response line.
 #[derive(Debug, Clone)]
 pub struct ApiResponse {
+    /// engine request id
     pub id: u64,
+    /// decoded output text
     pub text: String,
+    /// generated token ids
     pub tokens: Vec<i32>,
+    /// end-to-end request latency, milliseconds
     pub latency_ms: f64,
 }
 
 impl ApiResponse {
-    pub fn to_json(&self) -> String {
+    /// Response fields shared by the one-shot and streamed-final
+    /// encodings.
+    fn fields(&self) -> BTreeMap<String, Json> {
         let mut m = BTreeMap::new();
         m.insert("id".to_string(), Json::Num(self.id as f64));
         m.insert("text".to_string(), Json::Str(self.text.clone()));
@@ -84,31 +147,101 @@ impl ApiResponse {
         );
         m.insert("latency_ms".to_string(),
                  Json::Num((self.latency_ms * 1e3).round() / 1e3));
+        m
+    }
+
+    /// The classic one-shot reply line.
+    pub fn to_json(&self) -> String {
+        Json::Obj(self.fields()).to_string()
+    }
+
+    /// The final frame of a streamed reply: the full one-shot summary
+    /// plus `"done": true`, so a client can treat the first line with
+    /// `done` as end-of-stream.
+    pub fn to_done_json(&self) -> String {
+        let mut m = self.fields();
+        m.insert("done".to_string(), Json::Bool(true));
         Json::Obj(m).to_string()
     }
 }
 
+/// One per-token frame of a streamed reply.
+pub fn token_json(id: u64, token: i32) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Num(id as f64));
+    m.insert("token".to_string(), Json::Num(token as f64));
+    Json::Obj(m).to_string()
+}
+
+/// An `{"error": ...}` reply line.
 pub fn error_json(msg: &str) -> String {
     let mut m = BTreeMap::new();
     m.insert("error".to_string(), Json::Str(msg.to_string()));
     Json::Obj(m).to_string()
 }
 
+/// One reply frame flowing from the engine thread to a connection
+/// thread; everything but `Token` terminates the request.
+enum Frame {
+    Token(u64, i32),
+    Done(ApiResponse),
+    /// a pre-serialized single-line reply (the stats probe)
+    Raw(String),
+    Error(String),
+}
+
+/// The `{"stats": {...}}` introspection reply: lane/page occupancy
+/// plus serving counters, read from the live engine.  `queued` is the
+/// scheduler-side backlog (submitted but not yet admitted — the
+/// burst guard can hold requests there), `pending` the engine-side
+/// one.  A cancelled request frees its lane and pages but never
+/// increments `requests_done` — which is how the disconnect tests
+/// distinguish cancellation from natural retirement.
+fn stats_json(engine: &Engine, queued: usize) -> String {
+    let mut s = BTreeMap::new();
+    let mut put = |k: &str, v: f64| {
+        s.insert(k.to_string(), Json::Num(v));
+    };
+    put("queued", queued as f64);
+    put("active", engine.active_count() as f64);
+    put("pending", engine.pending_count() as f64);
+    put("free_lanes", engine.free_lanes() as f64);
+    put("free_pages", engine.free_pages() as f64);
+    put("total_pages", engine.total_pages() as f64);
+    put("requests_done", engine.metrics.requests_done as f64);
+    put("tokens_out", engine.metrics.tokens_out as f64);
+    let mut m = BTreeMap::new();
+    m.insert("stats".to_string(), Json::Obj(s));
+    Json::Obj(m).to_string()
+}
+
 struct Job {
     req: ApiRequest,
-    respond: Sender<std::result::Result<ApiResponse, String>>,
+    respond: Sender<Frame>,
     submitted: Instant,
 }
 
+/// Engine-thread bookkeeping for one in-flight request.
+struct Waiter {
+    tx: Sender<Frame>,
+    submitted: Instant,
+    stream: bool,
+}
+
 /// Engine thread: admits jobs through the FCFS scheduler, steps the
-/// engine (continuous batching happens inside), and answers completions.
+/// engine (continuous batching happens inside), streams per-token
+/// frames to streaming clients, and answers completions.  A streaming
+/// client whose connection died (token frame undeliverable) gets its
+/// request cancelled in the same step — the lane and KV pages free
+/// immediately instead of decoding to max_new for nobody.
 fn engine_loop(mut engine: Engine, jobs: Receiver<Job>) -> Result<()> {
     let tok = Tokenizer::byte_level(engine.preset().vocab)?;
-    let mut sched = FcfsScheduler::new(engine.config().batch.max(1));
-    let mut waiting: std::collections::HashMap<
-        u64,
-        (Sender<std::result::Result<ApiResponse, String>>, Instant),
-    > = Default::default();
+    let mut sched = FcfsScheduler::with_chunking(
+        engine.config().batch.max(1),
+        engine.config().prefill_chunk,
+    );
+    let mut waiting: std::collections::HashMap<u64, Waiter> =
+        Default::default();
     // scheduler-id -> engine-id indirection
     let mut pending_jobs: std::collections::HashMap<u64, Job> =
         Default::default();
@@ -131,6 +264,11 @@ fn engine_loop(mut engine: Engine, jobs: Receiver<Job>) -> Result<()> {
                 }
             };
             match job {
+                Some(job) if job.req.stats => {
+                    // introspection: answer immediately, nothing queued
+                    let _ = job.respond.send(Frame::Raw(
+                        stats_json(&engine, sched.len())));
+                }
                 Some(job) => {
                     let sid = sched.submit(tok.encode(&job.req.prompt),
                                            job.req.max_new_tokens);
@@ -140,13 +278,19 @@ fn engine_loop(mut engine: Engine, jobs: Receiver<Job>) -> Result<()> {
             }
         }
 
-        // admit from the scheduler into the engine
+        // admit from the scheduler into the engine; the burst guard
+        // only throttles when there are actual decode streams to
+        // protect (mid-prefill lanes are not them)
         while let Some(q) =
-            sched.next_admission(engine.active_count() > 0)
+            sched.next_admission(engine.decoding_count() > 0)
         {
             let eid = engine.enqueue(q.prompt, q.max_new_tokens.max(1));
             if let Some(job) = pending_jobs.remove(&q.id) {
-                waiting.insert(eid, (job.respond, job.submitted));
+                waiting.insert(eid, Waiter {
+                    tx: job.respond,
+                    submitted: job.submitted,
+                    stream: job.req.stream,
+                });
             }
         }
 
@@ -154,29 +298,52 @@ fn engine_loop(mut engine: Engine, jobs: Receiver<Job>) -> Result<()> {
             sched.on_decode_round();
             match engine.step() {
                 Ok(completions) => {
+                    // per-token frames first, so every token of a
+                    // completing request precedes its Done frame
+                    for (eid, t) in engine.take_new_tokens() {
+                        let dead = match waiting.get(&eid) {
+                            Some(w) if w.stream => {
+                                w.tx.send(Frame::Token(eid, t)).is_err()
+                            }
+                            _ => false,
+                        };
+                        if dead {
+                            // cancel-on-disconnect: the client hung up
+                            engine.cancel(eid)?;
+                            waiting.remove(&eid);
+                        }
+                    }
                     for c in completions {
-                        if let Some((tx, t0)) = waiting.remove(&c.request_id)
-                        {
+                        if let Some(w) = waiting.remove(&c.request_id) {
                             let resp = ApiResponse {
                                 id: c.request_id,
                                 text: tok.decode(&c.tokens),
                                 tokens: c.tokens,
-                                latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                                latency_ms: w.submitted.elapsed()
+                                    .as_secs_f64() * 1e3,
                             };
-                            let _ = tx.send(Ok(resp));
+                            let _ = w.tx.send(Frame::Done(resp));
                         }
                     }
                 }
                 Err(e) => {
                     let msg = format!("engine: {e:#}");
-                    for (_, (tx, _)) in waiting.drain() {
-                        let _ = tx.send(Err(msg.clone()));
+                    for (_, w) in waiting.drain() {
+                        let _ = w.tx.send(Frame::Error(msg.clone()));
                     }
                     return Err(e);
                 }
             }
         }
     }
+}
+
+/// Write one reply line; an Err here means the client disconnected.
+fn write_line(writer: &mut TcpStream, line: &str) -> Result<()> {
+    writer.write_all(line.as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()?;
+    Ok(())
 }
 
 fn handle_conn(stream: TcpStream, job_tx: Sender<Job>) -> Result<()> {
@@ -188,27 +355,58 @@ fn handle_conn(stream: TcpStream, job_tx: Sender<Job>) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let out = match ApiRequest::parse(&line) {
-            Ok(req) => {
-                let (tx, rx) = channel();
-                if job_tx
-                    .send(Job { req, respond: tx, submitted: Instant::now() })
-                    .is_err()
-                {
-                    error_json("engine thread gone")
-                } else {
-                    match rx.recv() {
-                        Ok(Ok(resp)) => resp.to_json(),
-                        Ok(Err(e)) => error_json(&e),
-                        Err(_) => error_json("engine dropped request"),
-                    }
+        let req = match ApiRequest::parse(&line) {
+            Ok(req) => req,
+            Err(e) => {
+                write_line(&mut writer,
+                           &error_json(
+                               &format!("bad request from {peer}: {e}")))?;
+                continue;
+            }
+        };
+        let stream_mode = req.stream;
+        let (tx, rx) = channel();
+        if job_tx
+            .send(Job { req, respond: tx, submitted: Instant::now() })
+            .is_err()
+        {
+            write_line(&mut writer, &error_json("engine thread gone"))?;
+            continue;
+        }
+        loop {
+            match rx.recv() {
+                Ok(Frame::Token(id, t)) if stream_mode => {
+                    // a failed write means the client hung up:
+                    // dropping `rx` makes the engine's next token
+                    // frame undeliverable, which cancels the request
+                    // and frees its lane + KV pages
+                    write_line(&mut writer, &token_json(id, t))?;
+                }
+                Ok(Frame::Token(..)) => {} // one-shot: buffered in Done
+                Ok(Frame::Done(resp)) => {
+                    let out = if stream_mode {
+                        resp.to_done_json()
+                    } else {
+                        resp.to_json()
+                    };
+                    write_line(&mut writer, &out)?;
+                    break;
+                }
+                Ok(Frame::Raw(line)) => {
+                    write_line(&mut writer, &line)?;
+                    break;
+                }
+                Ok(Frame::Error(e)) => {
+                    write_line(&mut writer, &error_json(&e))?;
+                    break;
+                }
+                Err(_) => {
+                    write_line(&mut writer,
+                               &error_json("engine dropped request"))?;
+                    break;
                 }
             }
-            Err(e) => error_json(&format!("bad request from {peer}: {e}")),
-        };
-        writer.write_all(out.as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        }
     }
     Ok(())
 }
@@ -267,10 +465,71 @@ mod tests {
             r#"{"prompt": "hi", "max_new_tokens": 4}"#).unwrap();
         assert_eq!(r.prompt, "hi");
         assert_eq!(r.max_new_tokens, 4);
+        assert!(!r.stream, "stream must default off (one-shot replies)");
         let d = ApiRequest::parse(r#"{"prompt": "x"}"#).unwrap();
         assert_eq!(d.max_new_tokens, 16);
         assert!(ApiRequest::parse(r#"{"max_new_tokens": 4}"#).is_err());
         assert!(ApiRequest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn stream_flag_is_strictly_typed() {
+        // real booleans parse...
+        let s = ApiRequest::parse(
+            r#"{"prompt": "x", "stream": true}"#).unwrap();
+        assert!(s.stream);
+        let s = ApiRequest::parse(
+            r#"{"prompt": "x", "stream": false}"#).unwrap();
+        assert!(!s.stream);
+        // ...anything else is a clean JSON error, never a coercion
+        for bad in [
+            r#"{"prompt": "x", "stream": "true"}"#,
+            r#"{"prompt": "x", "stream": 1}"#,
+            r#"{"prompt": "x", "stream": null}"#,
+            r#"{"prompt": "x", "stream": [true]}"#,
+        ] {
+            let e = ApiRequest::parse(bad);
+            assert!(e.is_err(), "accepted {bad}");
+            assert!(format!("{:#}", e.unwrap_err()).contains("stream"),
+                    "error should name the bad field for {bad}");
+        }
+    }
+
+    #[test]
+    fn stats_flag_is_strictly_typed_and_needs_no_prompt() {
+        let s = ApiRequest::parse(r#"{"stats": true}"#).unwrap();
+        assert!(s.stats);
+        assert!(s.prompt.is_empty());
+        // a prompt alongside stats is tolerated (and ignored upstream)
+        let s = ApiRequest::parse(
+            r#"{"prompt": "x", "stats": false}"#).unwrap();
+        assert!(!s.stats);
+        // non-bools are clean errors; stats=false still needs a prompt
+        assert!(ApiRequest::parse(r#"{"stats": 1}"#).is_err());
+        assert!(ApiRequest::parse(r#"{"stats": "yes"}"#).is_err());
+        assert!(ApiRequest::parse(r#"{"stats": false}"#).is_err());
+    }
+
+    #[test]
+    fn stream_frames_are_valid_json() {
+        let t = Json::parse(&token_json(7, 104)).unwrap();
+        assert_eq!(t.get("id").unwrap().as_u64(), Some(7));
+        assert_eq!(t.get("token").unwrap().as_f64(), Some(104.0));
+        assert!(t.get("done").is_none());
+
+        let r = ApiResponse {
+            id: 7,
+            text: "hi".into(),
+            tokens: vec![104, 105],
+            latency_ms: 1.5,
+        };
+        let d = Json::parse(&r.to_done_json()).unwrap();
+        assert_eq!(d.get("done").unwrap().as_bool(), Some(true));
+        assert_eq!(d.get("id").unwrap().as_u64(), Some(7));
+        assert_eq!(d.get("text").unwrap().as_str(), Some("hi"));
+        assert_eq!(d.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        // the one-shot encoding never carries "done"
+        assert!(Json::parse(&r.to_json()).unwrap().get("done").is_none());
     }
 
     #[test]

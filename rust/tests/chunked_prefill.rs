@@ -1,0 +1,366 @@
+//! Chunk-invariance determinism suite (DESIGN.md §12): chunked
+//! prefill changes *when* work happens — a prompt trickles in as
+//! fixed-size chunks interleaved with batched decode — but never
+//! *what* is computed.  Because every output element keeps the same
+//! single-accumulator ascending-k chain and KV appends land at the
+//! same absolute positions, logits and greedy decodes must be
+//! BIT-IDENTICAL to whole-prompt prefill at any chunk size, world
+//! size, thread count, and dtype.  This file is that claim's pin.
+
+use xeonserve::backend::reference::ReferenceBackend;
+use xeonserve::backend::{ExecBackend, StepCtx};
+use xeonserve::config::{BackendKind, Dtype, EngineConfig, ModelPreset, WeightSource};
+use xeonserve::engine::Engine;
+use xeonserve::scheduler::PrefillCursor;
+
+fn cfg(world: usize, batch: usize, dtype: Dtype, chunk: usize)
+       -> EngineConfig {
+    EngineConfig {
+        model: "tiny".into(),
+        backend: BackendKind::Reference,
+        world,
+        batch,
+        weight_dtype: dtype,
+        kv_dtype: dtype,
+        prefill_chunk: chunk,
+        weights: WeightSource::Synthetic { seed: 0xC0FFEE },
+        ..Default::default()
+    }
+}
+
+// ---- backend-level logit invariance ------------------------------------
+
+/// Straight-line forward pass against one backend: prefill `prompt`
+/// (whole at `chunk == 0`, else in `chunk`-token pieces continuing the
+/// KV region), then greedy-decode `n_new` tokens, returning every
+/// step's full logit vector (world 1, lane 0).
+fn greedy_logits(c: &EngineConfig, prompt: &[i32], chunk: usize,
+                 n_new: usize) -> Vec<Vec<f32>> {
+    fn forward(be: &mut ReferenceBackend, ctx: &StepCtx, n_layers: usize,
+               segs: usize, x: &mut [f32], y: &mut [f32], n: usize) {
+        for li in 0..n_layers {
+            for seg in 0..segs {
+                be.layer_partial(ctx, li, seg, &x[..n], &mut y[..n])
+                    .unwrap();
+                for (xi, yi) in x[..n].iter_mut().zip(&y[..n]) {
+                    *xi += *yi;
+                }
+            }
+        }
+    }
+
+    let preset = ModelPreset::builtin(&c.model).unwrap();
+    let mut be = ReferenceBackend::new(c, 0, &preset).unwrap();
+    let (h, vocab) = (preset.hidden, preset.vocab);
+    let (layers, segs) = (preset.n_layers, c.variant.syncs_per_layer());
+    let length = prompt.len();
+
+    // prefill, whole (bucket-padded, like the engine's classic path)
+    // or chunked (unpadded spans, like Cmd::PrefillChunk rounds)
+    let mut last_row = vec![0.0f32; h];
+    if chunk == 0 {
+        let bucket = 16usize;
+        let mut padded = prompt.to_vec();
+        padded.resize(bucket, 0);
+        let ctx = StepCtx::Prefill { lane: 0, bucket, length, offset: 0 };
+        let mut x = vec![0.0f32; bucket * h];
+        let mut y = vec![0.0f32; bucket * h];
+        be.embed(&ctx, &padded, &mut x).unwrap();
+        forward(&mut be, &ctx, layers, segs, &mut x, &mut y, bucket * h);
+        last_row.copy_from_slice(&x[(length - 1) * h..length * h]);
+    } else {
+        let mut cursor = PrefillCursor::new(length, chunk);
+        let mut x = vec![0.0f32; length * h];
+        let mut y = vec![0.0f32; length * h];
+        while let Some(span) = cursor.next_chunk() {
+            let n = span.len * h;
+            let ctx = StepCtx::Prefill {
+                lane: 0,
+                bucket: span.len,
+                length: span.len,
+                offset: span.start,
+            };
+            be.embed(&ctx, &prompt[span.start..span.start + span.len],
+                     &mut x[..n])
+                .unwrap();
+            forward(&mut be, &ctx, layers, segs, &mut x, &mut y, n);
+            if span.last {
+                let row = (span.len - 1) * h;
+                last_row.copy_from_slice(&x[row..row + h]);
+            }
+        }
+    }
+    let mut logits = vec![0.0f32; vocab];
+    be.lm_head(&last_row, &mut logits).unwrap();
+
+    let argmax = |l: &[f32]| -> i32 {
+        let mut best = 0usize;
+        for (i, &v) in l.iter().enumerate() {
+            if v > l[best] {
+                best = i;
+            }
+        }
+        best as i32
+    };
+
+    let mut out = vec![logits.clone()];
+    let mut tok = argmax(&logits);
+    let mut pos = length;
+    let mut xd = vec![0.0f32; h];
+    let mut yd = vec![0.0f32; h];
+    for _ in 1..n_new {
+        let positions = [pos as i32];
+        let ctx = StepCtx::Decode { positions: &positions };
+        be.embed(&ctx, &[tok], &mut xd).unwrap();
+        forward(&mut be, &ctx, layers, segs, &mut xd, &mut yd, h);
+        be.lm_head(&xd, &mut logits).unwrap();
+        out.push(logits.clone());
+        tok = argmax(&logits);
+        pos += 1;
+    }
+    out
+}
+
+fn assert_logits_bits_eq(a: &[Vec<f32>], b: &[Vec<f32>], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: step counts differ");
+    for (step, (x, y)) in a.iter().zip(b).enumerate() {
+        for (j, (va, vb)) in x.iter().zip(y).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{what}: step {step} logit {j}: {va} vs {vb}"
+            );
+        }
+    }
+}
+
+/// The §12 logit gate: every chunk size reproduces the whole-prompt
+/// LOGITS — not just tokens — bit for bit, at both dtypes.  Chunk 1
+/// (one position per round) and a chunk larger than the prompt (one
+/// short span) are the edge cases folded into the matrix.
+#[test]
+fn chunked_logits_bit_identical_to_whole_prompt() {
+    let prompt = [3i32, 9, 27, 4, 15, 6, 7, 8, 2, 11, 5];
+    for dtype in [Dtype::F32, Dtype::Int8] {
+        let c = cfg(1, 1, dtype, 0);
+        let golden = greedy_logits(&c, &prompt, 0, 5);
+        for chunk in [1usize, 7, 16] {
+            let got = greedy_logits(&c, &prompt, chunk, 5);
+            assert_logits_bits_eq(
+                &golden,
+                &got,
+                &format!("{dtype:?} chunk={chunk} vs whole"),
+            );
+        }
+    }
+}
+
+// ---- engine-level greedy-decode invariance -----------------------------
+
+fn engine_tokens(world: usize, dtype: Dtype, chunk: usize)
+                 -> Vec<Vec<i32>> {
+    let mut engine = Engine::new(cfg(world, 2, dtype, chunk)).unwrap();
+    engine
+        .generate(
+            &[
+                vec![10, 20, 30, 40, 50, 60, 70, 80, 90, 100, 110],
+                vec![7, 7, 7], // shorter than chunks 7 and 16
+                vec![1, 2, 3, 4, 5, 6, 7, 8],
+            ],
+            8,
+        )
+        .unwrap()
+}
+
+/// The acceptance matrix: greedy decode bit-identical for chunk sizes
+/// {1, 7, 16, whole} × worlds {1, 2, 4} × dtypes {f32, int8} through
+/// the full distributed engine — continuous batching, ccl
+/// collectives, chunk rounds interleaved with live decode steps.
+#[test]
+fn chunk_invariance_matrix_worlds_and_dtypes() {
+    for dtype in [Dtype::F32, Dtype::Int8] {
+        let golden = engine_tokens(1, dtype, 0);
+        assert!(golden.iter().all(|t| !t.is_empty()));
+        for world in [1usize, 2, 4] {
+            for chunk in [0usize, 1, 7, 16] {
+                if world == 1 && chunk == 0 {
+                    continue; // that cell IS the golden run
+                }
+                let got = engine_tokens(world, dtype, chunk);
+                assert_eq!(
+                    got, golden,
+                    "{dtype:?} world={world} chunk={chunk} diverged \
+                     from the whole-prompt w1 reference"
+                );
+            }
+        }
+    }
+}
+
+/// Chunk-size-1 edge case, run deeper than the matrix: every prompt
+/// position is its own round, so the engine drives prompt_len chunk
+/// rounds per request against live decode traffic.
+#[test]
+fn chunk_size_one_matches_whole_prompt() {
+    let golden = engine_tokens(2, Dtype::F32, 0);
+    let got = engine_tokens(2, Dtype::F32, 1);
+    assert_eq!(got, golden, "chunk=1 must reproduce whole-prompt");
+}
+
+/// A prompt shorter than one chunk is a single (short) span — the
+/// degenerate chunking that must also match, including for the empty
+/// prompt the whole-prompt path pads to one token.
+#[test]
+fn prompt_shorter_than_chunk_matches_whole_prompt() {
+    for prompts in [vec![vec![5i32, 6, 7]], vec![vec![]]] {
+        let mut whole = Engine::new(cfg(1, 1, Dtype::F32, 0)).unwrap();
+        let golden = whole.generate(&prompts, 6).unwrap();
+        let mut chunked = Engine::new(cfg(1, 1, Dtype::F32, 16)).unwrap();
+        let got = chunked.generate(&prompts, 6).unwrap();
+        assert_eq!(got, golden, "short prompt {prompts:?}");
+    }
+}
+
+// ---- serving semantics around chunked prefill --------------------------
+
+/// TTFT accounting spans a request's WHOLE prefill: one prefill_wall
+/// sample per request, not one per chunk.
+#[test]
+fn ttft_counts_requests_not_chunks() {
+    let mut engine = Engine::new(cfg(1, 2, Dtype::F32, 2)).unwrap();
+    engine.enqueue(vec![1; 10], 4); // 5 chunks
+    engine.enqueue(vec![2; 6], 4); // 3 chunks
+    engine.run_to_completion().unwrap();
+    assert_eq!(engine.metrics.prefill_wall.count(), 2,
+               "one TTFT sample per request");
+    assert_eq!(engine.metrics.requests_done, 2);
+    // consecutive decode rounds ran with lanes busy, so the
+    // decode-stall series has samples
+    assert!(engine.metrics.decode_gap.count() > 0);
+}
+
+/// The engine's streaming feed: every generated token is emitted
+/// exactly once, in order, tagged with its request — chunked or not.
+#[test]
+fn emitted_tokens_match_completions() {
+    for chunk in [0usize, 4] {
+        let mut engine = Engine::new(cfg(1, 2, Dtype::F32, chunk)).unwrap();
+        let a = engine.enqueue(vec![1, 2, 3, 4, 5, 6, 7], 5);
+        let b = engine.enqueue(vec![9, 8, 7], 3);
+        let mut streamed: std::collections::HashMap<u64, Vec<i32>> =
+            Default::default();
+        let mut done = Vec::new();
+        while engine.has_work() {
+            done.extend(engine.step().unwrap());
+            for (id, tok) in engine.take_new_tokens() {
+                streamed.entry(id).or_default().push(tok);
+            }
+        }
+        done.sort_by_key(|c| c.request_id);
+        assert_eq!(done.len(), 2);
+        for c in &done {
+            assert_eq!(streamed.get(&c.request_id), Some(&c.tokens),
+                       "chunk={chunk}: stream of request {} must equal \
+                        its completion tokens", c.request_id);
+        }
+        assert!(streamed.contains_key(&a) && streamed.contains_key(&b));
+    }
+}
+
+/// Cancellation never leaks: whether a request is still queued,
+/// mid-chunked-prefill, or decoding, cancel() must return its lane
+/// and KV pages to the pool — asserted via the LaneTable /
+/// PagedAllocator occupancy probes.
+#[test]
+fn cancel_mid_prefill_frees_lane_and_pages() {
+    let mut engine = Engine::new(cfg(1, 2, Dtype::F32, 2)).unwrap();
+    let free_lanes0 = engine.free_lanes();
+    let free_pages0 = engine.free_pages();
+    assert_eq!(engine.total_pages(), free_pages0);
+
+    // a long prompt (6 chunks) plus a decode companion
+    let long = engine.enqueue(vec![1; 12], 8);
+    let short = engine.enqueue(vec![5, 5], 8);
+    // a few steps: both admitted, long still mid-prefill
+    for _ in 0..3 {
+        engine.step().unwrap();
+    }
+    assert_eq!(engine.free_lanes(), free_lanes0 - 2);
+    assert!(engine.free_pages() < free_pages0);
+
+    // cancel the mid-prefill request: lane + pages return immediately
+    assert!(engine.cancel(long).unwrap());
+    assert_eq!(engine.free_lanes(), free_lanes0 - 1,
+               "cancelled prefill must free its lane within one step");
+    assert!(!engine.cancel(long).unwrap(), "second cancel is a no-op");
+
+    // the survivor finishes; the pool is whole again
+    let done = engine.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].request_id, short);
+    assert_eq!(engine.free_lanes(), free_lanes0);
+    assert_eq!(engine.free_pages(), free_pages0,
+               "cancelled request leaked KV pages");
+}
+
+/// Property sweep: random interleavings of submit / step / cancel
+/// conserve lanes and pages — no schedule leaks.
+#[test]
+fn random_cancel_schedules_conserve_lanes_and_pages() {
+    use xeonserve::util::SplitMix64;
+    let mut rng = SplitMix64::new(0xD00D);
+    for case in 0..8u64 {
+        let chunk = [0usize, 1, 3][case as usize % 3];
+        let mut engine =
+            Engine::new(cfg(1, 2, Dtype::F32, chunk)).unwrap();
+        let lanes0 = engine.free_lanes();
+        let pages0 = engine.free_pages();
+        let mut live: Vec<u64> = Vec::new();
+        for step in 0..60 {
+            match rng.next_below(4) {
+                0 => {
+                    let len = 1 + rng.next_below(12);
+                    live.push(engine.enqueue(vec![1; len],
+                                             1 + rng.next_below(6)));
+                }
+                1 if !live.is_empty() => {
+                    let i = rng.next_below(live.len());
+                    let id = live.swap_remove(i);
+                    // may already have completed — either is fine,
+                    // but it must never error
+                    engine.cancel(id).unwrap();
+                }
+                _ => {
+                    if engine.has_work() {
+                        for c in engine.step().unwrap() {
+                            live.retain(|&id| id != c.request_id);
+                        }
+                    }
+                }
+            }
+            assert!(engine.free_pages() <= engine.total_pages(),
+                    "case {case} step {step}: page pool oversubscribed");
+        }
+        // cancel everything left and drain: full pool must return
+        for id in live {
+            engine.cancel(id).unwrap();
+        }
+        engine.run_to_completion().unwrap();
+        assert_eq!(engine.free_lanes(), lanes0, "case {case}: lane leak");
+        assert_eq!(engine.free_pages(), pages0, "case {case}: page leak");
+    }
+}
+
+/// The TOML knob reaches the engine via the same path the launch
+/// coordinator ships configs through.
+#[test]
+fn prefill_chunk_roundtrips_through_toml_and_serves() {
+    let c = cfg(1, 1, Dtype::F32, 3);
+    let back = EngineConfig::from_toml_str(&c.to_toml_string()).unwrap();
+    assert_eq!(back.prefill_chunk, 3);
+    let mut engine = Engine::new(back).unwrap();
+    let out = engine.generate(&[vec![1, 2, 3, 4, 5, 6, 7]], 4).unwrap();
+    let mut whole = Engine::new(cfg(1, 1, Dtype::F32, 0)).unwrap();
+    let golden = whole.generate(&[vec![1, 2, 3, 4, 5, 6, 7]], 4).unwrap();
+    assert_eq!(out, golden);
+}

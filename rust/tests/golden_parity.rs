@@ -70,7 +70,7 @@ fn manual_reference_greedy(variant: Variant, prompt: &[i32], n_new: usize)
     padded.resize(bucket, 0);
 
     // prefill: at world 1 the "allreduce" of a partial is the partial
-    let ctx = StepCtx::Prefill { lane: 0, bucket, length };
+    let ctx = StepCtx::Prefill { lane: 0, bucket, length, offset: 0 };
     let mut x = vec![0.0f32; bucket * h];
     let mut y = vec![0.0f32; bucket * h];
     be.embed(&ctx, &padded, &mut x).unwrap();

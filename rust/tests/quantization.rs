@@ -41,7 +41,7 @@ fn greedy_logits(c: &EngineConfig, preset: &ModelPreset, plen: usize,
     let prompt: Vec<i32> =
         (0..plen).map(|i| ((i * 31 + 7) % 150) as i32 + 1).collect();
 
-    let ctx = StepCtx::Prefill { lane: 0, bucket: plen, length: plen };
+    let ctx = StepCtx::Prefill { lane: 0, bucket: plen, length: plen, offset: 0 };
     let mut x = vec![0.0f32; plen * h];
     let mut y = vec![0.0f32; plen * h];
     be.embed(&ctx, &prompt, &mut x).unwrap();

@@ -126,6 +126,157 @@ fn multi_line_session_reuses_connection() {
     }
 }
 
+/// Streamed replies (DESIGN.md §12): one frame per token, in
+/// generation order, terminated by a `done` summary carrying the full
+/// text — served over chunked prefill so the streaming path and the
+/// chunk rounds compose.
+#[test]
+fn streamed_frames_ordered_and_final_carries_full_text() {
+    let addr = "127.0.0.1:47817";
+    let cfg = EngineConfig {
+        model: "tiny".into(),
+        backend: BackendKind::Reference,
+        world: 1,
+        batch: 2,
+        prefill_chunk: 2, // stream over chunked prefill
+        ..Default::default()
+    };
+    std::thread::spawn(move || {
+        let _ = xeonserve::server::serve(cfg, addr);
+    });
+    let mut s = wait_for_port(addr);
+    s.write_all(
+        b"{\"prompt\": \"stream me\", \"max_new_tokens\": 5, \
+          \"stream\": true}\n")
+        .unwrap();
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    let mut tokens = Vec::new();
+    let done = loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line)
+            .unwrap_or_else(|e| panic!("bad frame {line:?}: {e}"));
+        assert!(j.get("error").is_none(), "unexpected error: {j:?}");
+        if j.get("done").is_some() {
+            assert_eq!(j.get("done").unwrap().as_bool(), Some(true));
+            break j;
+        }
+        // a token frame: {"id": N, "token": T}
+        assert!(j.get("id").is_some(), "token frame missing id: {j:?}");
+        tokens.push(j.get("token").expect("frame without token or done")
+            .as_f64().unwrap() as i32);
+    };
+    // every token arrived before the summary, in order (≤ 5: the
+    // model may greedily emit EOS early; never 0, never more)
+    assert!(!tokens.is_empty() && tokens.len() <= 5, "{tokens:?}");
+    let final_tokens: Vec<i32> = done.get("tokens").unwrap().as_arr()
+        .unwrap().iter().map(|t| t.as_f64().unwrap() as i32).collect();
+    assert_eq!(tokens, final_tokens,
+               "streamed frames must match the final token list");
+    let text = done.get("text").unwrap().as_str().unwrap();
+    assert!(!text.is_empty(), "final frame must carry the full text");
+    assert!(done.get("latency_ms").unwrap().as_f64().unwrap() > 0.0);
+
+    // the same connection still serves one-shot requests afterwards
+    let j = request_line(&mut s, r#"{"prompt": "y", "max_new_tokens": 2}"#);
+    assert!(j.get("error").is_none(), "{j:?}");
+    assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+
+    // and "stream" is strictly typed at the wire: a non-bool is a
+    // clean JSON error naming the field, not a coercion
+    let j = request_line(
+        &mut s, r#"{"prompt": "x", "stream": "yes"}"#);
+    let err = j.get("error").expect("expected error").as_str().unwrap();
+    assert!(err.contains("stream"), "error should name the field: {err}");
+}
+
+/// Cancel-on-disconnect (DESIGN.md §12): a streaming client that
+/// hangs up mid-generation must not pin its batch lane — with batch 1
+/// the next client's request only runs once the lane frees, and the
+/// `stats` probe proves it freed by CANCELLATION, not by decoding to
+/// completion for nobody: a cancelled request never increments
+/// `requests_done`.  (The one-step-retirement precision is pinned at
+/// the engine level in chunked_prefill.rs; this is the end-to-end
+/// path through the dead-socket detection.)
+#[test]
+fn disconnect_mid_stream_frees_the_lane() {
+    let addr = "127.0.0.1:47819";
+    let cfg = EngineConfig {
+        model: "tiny".into(),
+        backend: BackendKind::Reference,
+        world: 1,
+        batch: 1, // a leaked lane would wedge every later request
+        ..Default::default()
+    };
+    std::thread::spawn(move || {
+        let _ = xeonserve::server::serve(cfg, addr);
+    });
+
+    // client A: start a long stream, read two frames, hang up.  The
+    // tiny preset has no EOS token, so A can only retire by reaching
+    // max_new (48 decode rounds) — far beyond the 1-2 rounds the
+    // dead-socket detection needs.
+    {
+        let mut a = wait_for_port(addr);
+        a.write_all(
+            b"{\"prompt\": \"abandoned\", \"max_new_tokens\": 48, \
+              \"stream\": true}\n")
+            .unwrap();
+        let mut reader = BufReader::new(a.try_clone().unwrap());
+        for _ in 0..2 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let j = Json::parse(&line).unwrap();
+            assert!(j.get("error").is_none(), "{j:?}");
+            assert!(j.get("token").is_some(), "expected a frame: {j:?}");
+        }
+        // drop both halves: the server's next frame write fails and
+        // the engine cancels the request
+    }
+
+    // client B: must be admitted onto the (freed) single lane and
+    // complete — and the server must keep serving streams after the
+    // cancellation
+    let mut b = wait_for_port(addr);
+    let j = request_line(&mut b,
+                         r#"{"prompt": "next", "max_new_tokens": 3}"#);
+    assert!(j.get("error").is_none(), "lane never freed? {j:?}");
+    assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 3);
+
+    // the probe that distinguishes cancellation from natural
+    // retirement: only B may count as done; if A had decoded to
+    // max_new instead of being cancelled, requests_done would be 2
+    let j = request_line(&mut b, r#"{"stats": true}"#);
+    let stats = j.get("stats").expect("stats reply");
+    assert_eq!(stats.get("requests_done").unwrap().as_u64(), Some(1),
+               "abandoned stream was retired, not cancelled: {j:?}");
+    assert_eq!(stats.get("free_lanes").unwrap().as_u64(), Some(1),
+               "cancelled stream leaked its lane: {j:?}");
+    assert_eq!(stats.get("free_pages").unwrap().as_u64(),
+               stats.get("total_pages").unwrap().as_u64(),
+               "cancelled stream leaked KV pages: {j:?}");
+
+    let mut c = wait_for_port(addr);
+    c.write_all(
+        b"{\"prompt\": \"again\", \"max_new_tokens\": 2, \
+          \"stream\": true}\n")
+        .unwrap();
+    let mut reader = BufReader::new(c.try_clone().unwrap());
+    let mut frames = 0;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert!(j.get("error").is_none(), "{j:?}");
+        frames += 1;
+        if j.get("done").is_some() {
+            break;
+        }
+    }
+    assert!((2..=3).contains(&frames),
+            "expected token frame(s) + done, got {frames}");
+}
+
 /// Artifact-gated variant: the same round-trip on the PJRT backend.
 #[cfg(feature = "xla")]
 mod xla_artifacts {

@@ -42,7 +42,7 @@ fn greedy_logits(c: &EngineConfig, n_new: usize, force_pool: bool)
     let mut padded = prompt.to_vec();
     padded.resize(bucket, 0);
 
-    let ctx = StepCtx::Prefill { lane: 0, bucket, length };
+    let ctx = StepCtx::Prefill { lane: 0, bucket, length, offset: 0 };
     let mut x = vec![0.0f32; bucket * h];
     let mut y = vec![0.0f32; bucket * h];
     be.embed(&ctx, &padded, &mut x).unwrap();
