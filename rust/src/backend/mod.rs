@@ -125,6 +125,44 @@ pub trait ExecBackend {
     /// Drop all KV-cache state (between bench iterations).
     fn reset(&mut self) -> Result<()>;
 
+    /// Snapshot lane `lane`'s first `len` KV rows (every layer, every
+    /// local head) into immutable shared segment `seg` (DESIGN.md §13).
+    /// `len` is page-aligned by the engine; the segment is read-only
+    /// until [`ExecBackend::drop_prefix`].  Default: unsupported —
+    /// continuous batching is rejected at config validation for
+    /// backends that do not override the prefix hooks, so the engine
+    /// never reaches these defaults.
+    fn publish_prefix(&mut self, seg: u32, lane: usize, len: usize)
+                      -> Result<()> {
+        let _ = (seg, lane, len);
+        anyhow::bail!("this backend does not support shared prefixes")
+    }
+
+    /// Attach lane `lane` to shared segment `seg`: positions
+    /// `[0, shared_len)` are read from the segment by reference, and
+    /// the `copy_len` rows past them are copied into the lane's private
+    /// storage (the copy-on-write of a partially matched page).
+    fn attach_prefix(&mut self, lane: usize, seg: u32, shared_len: usize,
+                     copy_len: usize) -> Result<()> {
+        let _ = (lane, seg, shared_len, copy_len);
+        anyhow::bail!("this backend does not support shared prefixes")
+    }
+
+    /// Detach lane `lane` from its shared segment (request retirement
+    /// or cancel).  Default: Ok — detaching is a no-op for backends
+    /// that never attached anything.
+    fn detach_prefix(&mut self, lane: usize) -> Result<()> {
+        let _ = lane;
+        Ok(())
+    }
+
+    /// Free shared segment `seg`'s storage (pool eviction at refcount
+    /// zero).
+    fn drop_prefix(&mut self, seg: u32) -> Result<()> {
+        let _ = seg;
+        anyhow::bail!("this backend does not support shared prefixes")
+    }
+
     /// Resident weight/KV bytes of this rank's state.  Default: zeros,
     /// meaning "not measured" (the XLA backend's buffers live on the
     /// PJRT device and are not tracked host-side).

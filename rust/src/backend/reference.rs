@@ -72,6 +72,8 @@
 //! the row.  Changing the dtype changes the logits — that is the
 //! accuracy/memory trade, pinned by the int8-vs-f32 tolerance tests.
 
+use std::collections::HashMap;
+
 use anyhow::{bail, ensure, Result};
 
 use crate::config::{Dtype, EngineConfig, GemmKernel, ModelPreset, Variant, WeightSource};
@@ -146,14 +148,52 @@ fn rope_head(v: &mut [f32], rope_inv: &[f32], pos: i32) {
     }
 }
 
+/// Read-only view of one query head's slice of a shared-prefix
+/// segment (DESIGN.md §13): attention positions `[0, len)` resolve to
+/// the segment's rows starting at float offset `base`; positions past
+/// `len` fall through to the lane's private cache rows.
+struct SharedF32<'a> {
+    k: &'a [f32],
+    v: &'a [f32],
+    base: usize,
+    len: usize,
+}
+
+/// [`SharedF32`] for an INT8 segment: `row0` indexes quantized rows
+/// (and their scale slots), mirroring [`attend_into_q8`]'s addressing.
+struct SharedQ8<'a> {
+    kq: &'a [i8],
+    ks: &'a [f32],
+    vq: &'a [i8],
+    vs: &'a [f32],
+    row0: usize,
+    len: usize,
+}
+
 /// Softmax-weighted value sum over cache entries `[0, scores.len())`
 /// at `base` for one query head; writes `hd` floats into `out`.
+/// With `shared`, positions below the attachment's shared length read
+/// the segment's rows instead of the lane's — those rows are
+/// bit-identical to what the lane's own prefill would have written
+/// (K/V rows are pure functions of token, position and weights), so
+/// redirecting the reads changes no score/value chain and no output
+/// bit — the invariant `tests/continuous_batching.rs` pins.
+#[allow(clippy::too_many_arguments)]
 fn attend_into(kc: &[f32], vc: &[f32], base: usize, hd: usize, q: &[f32],
-               scores: &mut [f32], out: &mut [f32]) {
+               scores: &mut [f32], out: &mut [f32],
+               shared: Option<&SharedF32<'_>>) {
+    let (s_len, sk, sv, s_base) = match shared {
+        Some(s) => (s.len, s.k, s.v, s.base),
+        None => (0, kc, vc, base),
+    };
     let scale = 1.0 / (hd as f32).sqrt();
     let mut m = f32::NEG_INFINITY;
     for (t, s) in scores.iter_mut().enumerate() {
-        let krow = &kc[base + t * hd..base + (t + 1) * hd];
+        let krow = if t < s_len {
+            &sk[s_base + t * hd..s_base + (t + 1) * hd]
+        } else {
+            &kc[base + t * hd..base + (t + 1) * hd]
+        };
         let mut dot = 0.0f32;
         for (qa, kb) in q[..hd].iter().zip(krow) {
             dot += qa * kb;
@@ -170,7 +210,11 @@ fn attend_into(kc: &[f32], vc: &[f32], base: usize, hd: usize, q: &[f32],
     out[..hd].fill(0.0);
     for (t, &p) in scores.iter().enumerate() {
         let w = p * inv;
-        let vrow = &vc[base + t * hd..base + (t + 1) * hd];
+        let vrow = if t < s_len {
+            &sv[s_base + t * hd..s_base + (t + 1) * hd]
+        } else {
+            &vc[base + t * hd..base + (t + 1) * hd]
+        };
         for (o, &vb) in out[..hd].iter_mut().zip(vrow) {
             *o += w * vb;
         }
@@ -181,16 +225,29 @@ fn attend_into(kc: &[f32], vc: &[f32], base: usize, hd: usize, q: &[f32],
 /// each cache element dequantized in the inner products (`q_i8·s` — the
 /// row's scale, one f32 per (lane, head, position) row).  `row0` is
 /// the cache ROW index of this (lane, head)'s position 0, i.e.
-/// `base / hd` of the f32 variant.
+/// `base / hd` of the f32 variant.  `shared` redirects positions below
+/// the attachment's shared length to the segment's rows — quantized
+/// bytes and scales transfer verbatim at publish/attach time, so the
+/// dequantized values (and the output bits) are unchanged.
 #[allow(clippy::too_many_arguments)]
 fn attend_into_q8(kq: &[i8], ks: &[f32], vq: &[i8], vs: &[f32],
                   row0: usize, hd: usize, q: &[f32],
-                  scores: &mut [f32], out: &mut [f32]) {
+                  scores: &mut [f32], out: &mut [f32],
+                  shared: Option<&SharedQ8<'_>>) {
+    let (s_len, skq, sks, svq, svs, s_row0) = match shared {
+        Some(s) => (s.len, s.kq, s.ks, s.vq, s.vs, s.row0),
+        None => (0, kq, ks, vq, vs, row0),
+    };
     let scale = 1.0 / (hd as f32).sqrt();
     let mut m = f32::NEG_INFINITY;
     for (t, s) in scores.iter_mut().enumerate() {
-        let ksc = ks[row0 + t];
-        let krow = &kq[(row0 + t) * hd..(row0 + t + 1) * hd];
+        let (kqr, ksr, r) = if t < s_len {
+            (skq, sks, s_row0 + t)
+        } else {
+            (kq, ks, row0 + t)
+        };
+        let ksc = ksr[r];
+        let krow = &kqr[r * hd..(r + 1) * hd];
         let mut dot = 0.0f32;
         for (qa, &kb) in q[..hd].iter().zip(krow) {
             dot += qa * (kb as f32 * ksc);
@@ -207,8 +264,13 @@ fn attend_into_q8(kq: &[i8], ks: &[f32], vq: &[i8], vs: &[f32],
     out[..hd].fill(0.0);
     for (t, &p) in scores.iter().enumerate() {
         let w = p * inv;
-        let vsc = vs[row0 + t];
-        let vrow = &vq[(row0 + t) * hd..(row0 + t + 1) * hd];
+        let (vqr, vsr, r) = if t < s_len {
+            (svq, svs, s_row0 + t)
+        } else {
+            (vq, vs, row0 + t)
+        };
+        let vsc = vsr[r];
+        let vrow = &vqr[r * hd..(r + 1) * hd];
         for (o, &vb) in out[..hd].iter_mut().zip(vrow) {
             *o += w * (vb as f32 * vsc);
         }
@@ -401,6 +463,18 @@ struct LayerWeights {
     wd: WeightMat,    // [f_l, h]   (row-parallel)
 }
 
+/// One published shared-prefix segment (DESIGN.md §13): an immutable
+/// snapshot of the first `len` KV rows of a prefilled lane, every
+/// layer and local kv head.  Per layer, row `kh·len + t` holds
+/// position `t` of local head `kh`.  Lanes attach by reference; the
+/// engine's refcounted page accounting
+/// ([`crate::kvcache::PagedAllocator`]) decides when a segment may be
+/// dropped, so the backend only checks structural invariants here.
+struct SharedSeg {
+    len: usize,
+    layers: Vec<KvLayer>,
+}
+
 /// One rank's deterministic in-memory model + KV caches.
 pub struct ReferenceBackend {
     batch: usize,
@@ -421,6 +495,11 @@ pub struct ReferenceBackend {
     /// per-layer KV planes, [batch, n_kv_heads_l, max_seq, hd] rows in
     /// the configured `kv_dtype`
     caches: Vec<KvLayer>,
+    /// published shared-prefix segments, by engine-assigned id
+    shared_segs: HashMap<u32, SharedSeg>,
+    /// per-lane attachment: `(segment id, shared_len)` when the lane
+    /// reads its KV prefix from a shared segment
+    attach: Vec<Option<(u32, usize)>>,
     /// precomputed NeoX RoPE inverse frequencies, [hd/2]
     rope_inv: Vec<f32>,
     scratch: Scratch,
@@ -555,6 +634,8 @@ impl ReferenceBackend {
             final_g,
             lm_head,
             caches,
+            shared_segs: HashMap::new(),
+            attach: vec![None; cfg.batch],
             rope_inv,
             scratch: Scratch::default(),
             blk: BlockScratch::default(),
@@ -633,6 +714,7 @@ impl ReferenceBackend {
         s.ctxv.clear();
         s.ctxv.resize(qd_l, 0.0);
         s.head.resize(hd, 0.0);
+        let att = self.attach[lane];
         for qh in 0..self.n_heads_l {
             let kh = qh / group;
             let row0 = (lane * self.n_kv_heads_l + kh) * t_max;
@@ -640,14 +722,54 @@ impl ReferenceBackend {
             s.scores.resize(attend_hi, 0.0);
             match &self.caches[li] {
                 KvLayer::F32 { k: kc, v: vc } => {
+                    let sh = match att {
+                        Some((seg, slen)) => {
+                            let g = &self.shared_segs[&seg];
+                            match &g.layers[li] {
+                                KvLayer::F32 { k, v } => Some(SharedF32 {
+                                    k,
+                                    v,
+                                    base: kh * g.len * hd,
+                                    len: slen,
+                                }),
+                                _ => unreachable!(
+                                    "shared segment dtype mismatch"
+                                ),
+                            }
+                        }
+                        None => None,
+                    };
                     attend_into(kc, vc, row0 * hd, hd,
                                 &s.q[qh * hd..(qh + 1) * hd],
-                                &mut s.scores, &mut s.head);
+                                &mut s.scores, &mut s.head,
+                                sh.as_ref());
                 }
                 KvLayer::Int8 { k: kc, v: vc, k_scale, v_scale } => {
+                    let sh = match att {
+                        Some((seg, slen)) => {
+                            let g = &self.shared_segs[&seg];
+                            match &g.layers[li] {
+                                KvLayer::Int8 {
+                                    k, v, k_scale: sks, v_scale: svs,
+                                } => Some(SharedQ8 {
+                                    kq: k,
+                                    ks: sks,
+                                    vq: v,
+                                    vs: svs,
+                                    row0: kh * g.len,
+                                    len: slen,
+                                }),
+                                _ => unreachable!(
+                                    "shared segment dtype mismatch"
+                                ),
+                            }
+                        }
+                        None => None,
+                    };
                     attend_into_q8(kc, k_scale, vc, v_scale, row0, hd,
                                    &s.q[qh * hd..(qh + 1) * hd],
-                                   &mut s.scores, &mut s.head);
+                                   &mut s.scores, &mut s.head,
+                                   sh.as_ref());
                 }
             }
             s.ctxv[qh * hd..(qh + 1) * hd].copy_from_slice(&s.head[..hd]);
@@ -741,10 +863,13 @@ impl ReferenceBackend {
         let hi_max =
             (0..rows).map(|r| row_meta(ctx, r).2).max().unwrap_or(1);
 
-        let ReferenceBackend { layers, caches, blk, pool, rope_inv, .. } =
-            self;
+        let ReferenceBackend {
+            layers, caches, blk, pool, rope_inv, shared_segs, attach, ..
+        } = self;
         let lw = &layers[li];
         let rope_inv = &rope_inv[..];
+        let shared_segs = &*shared_segs;
+        let attach = &attach[..];
 
         blk.h_n.resize(rows * h, 0.0);
         blk.q.resize(rows * qd_l, 0.0);
@@ -904,6 +1029,7 @@ impl ReferenceBackend {
                         let (kcr, vcr) = (&kc[..], &vc[..]);
                         pool.run_if_worth(rows, macs, thr, &|r| {
                             let (lane, _pos, hi) = row_meta(ctx, r);
+                            let att = attach[lane];
                             // SAFETY: one row per unit
                             let sc =
                                 unsafe { scs.slice(r * t_max, t_max) };
@@ -913,12 +1039,34 @@ impl ReferenceBackend {
                                 let kh = qh / group;
                                 let base = (lane * n_kv + kh) * t_max
                                     * hd;
+                                let sh = match att {
+                                    Some((seg, slen)) => {
+                                        let g = &shared_segs[&seg];
+                                        match &g.layers[li] {
+                                            KvLayer::F32 { k, v } => {
+                                                Some(SharedF32 {
+                                                    k,
+                                                    v,
+                                                    base: kh * g.len
+                                                        * hd,
+                                                    len: slen,
+                                                })
+                                            }
+                                            _ => unreachable!(
+                                                "shared segment dtype \
+                                                 mismatch"
+                                            ),
+                                        }
+                                    }
+                                    None => None,
+                                };
                                 attend_into(
                                     kcr, vcr, base, hd,
                                     &qr[r * qd_l + qh * hd
                                         ..r * qd_l + (qh + 1) * hd],
                                     &mut sc[..hi],
                                     &mut out[qh * hd..(qh + 1) * hd],
+                                    sh.as_ref(),
                                 );
                             }
                         });
@@ -928,6 +1076,7 @@ impl ReferenceBackend {
                         let (ksr, vsr) = (&k_scale[..], &v_scale[..]);
                         pool.run_if_worth(rows, macs, thr, &|r| {
                             let (lane, _pos, hi) = row_meta(ctx, r);
+                            let att = attach[lane];
                             // SAFETY: one row per unit
                             let sc =
                                 unsafe { scs.slice(r * t_max, t_max) };
@@ -936,12 +1085,38 @@ impl ReferenceBackend {
                             for qh in 0..n_h {
                                 let kh = qh / group;
                                 let row0 = (lane * n_kv + kh) * t_max;
+                                let sh = match att {
+                                    Some((seg, slen)) => {
+                                        let g = &shared_segs[&seg];
+                                        match &g.layers[li] {
+                                            KvLayer::Int8 {
+                                                k,
+                                                v,
+                                                k_scale: sks,
+                                                v_scale: svs,
+                                            } => Some(SharedQ8 {
+                                                kq: k,
+                                                ks: sks,
+                                                vq: v,
+                                                vs: svs,
+                                                row0: kh * g.len,
+                                                len: slen,
+                                            }),
+                                            _ => unreachable!(
+                                                "shared segment dtype \
+                                                 mismatch"
+                                            ),
+                                        }
+                                    }
+                                    None => None,
+                                };
                                 attend_into_q8(
                                     kcr, ksr, vcr, vsr, row0, hd,
                                     &qr[r * qd_l + qh * hd
                                         ..r * qd_l + (qh + 1) * hd],
                                     &mut sc[..hi],
                                     &mut out[qh * hd..(qh + 1) * hd],
+                                    sh.as_ref(),
                                 );
                             }
                         });
@@ -1131,6 +1306,98 @@ impl ExecBackend for ReferenceBackend {
         for layer in &mut self.caches {
             layer.reset();
         }
+        self.shared_segs.clear();
+        for a in &mut self.attach {
+            *a = None;
+        }
+        Ok(())
+    }
+
+    fn publish_prefix(&mut self, seg: u32, lane: usize, len: usize)
+                      -> Result<()> {
+        let hd = self.preset.head_dim;
+        let t_max = self.preset.max_seq;
+        let n_kv = self.n_kv_heads_l;
+        ensure!(lane < self.batch,
+                "publish_prefix lane {lane} out of range (batch {})",
+                self.batch);
+        ensure!(len >= 1 && len <= t_max,
+                "publish_prefix len {len} out of range (max_seq \
+                 {t_max})");
+        ensure!(!self.shared_segs.contains_key(&seg),
+                "shared segment {seg} already exists");
+        let dtype = self.caches[0].dtype();
+        let mut seg_layers = Vec::with_capacity(self.caches.len());
+        for cache in &self.caches {
+            let mut layer = KvLayer::new(dtype, n_kv * len, hd);
+            for kh in 0..n_kv {
+                for t in 0..len {
+                    // verbatim row transfer (bytes + scales at int8),
+                    // so attached readers see the publisher's bits
+                    layer.copy_row_from(
+                        kh * len + t, cache,
+                        (lane * n_kv + kh) * t_max + t, hd);
+                }
+            }
+            seg_layers.push(layer);
+        }
+        self.shared_segs
+            .insert(seg, SharedSeg { len, layers: seg_layers });
+        Ok(())
+    }
+
+    fn attach_prefix(&mut self, lane: usize, seg: u32, shared_len: usize,
+                     copy_len: usize) -> Result<()> {
+        let hd = self.preset.head_dim;
+        let t_max = self.preset.max_seq;
+        let n_kv = self.n_kv_heads_l;
+        ensure!(lane < self.batch,
+                "attach_prefix lane {lane} out of range (batch {})",
+                self.batch);
+        let ReferenceBackend { caches, shared_segs, attach, .. } = self;
+        let g = shared_segs.get(&seg).ok_or_else(|| {
+            anyhow::anyhow!("attach_prefix: unknown shared segment {seg}")
+        })?;
+        ensure!(shared_len >= 1 && shared_len <= g.len,
+                "attach_prefix shared_len {shared_len} out of segment \
+                 length {}", g.len);
+        ensure!(shared_len + copy_len <= g.len,
+                "attach_prefix copy range {shared_len}+{copy_len} past \
+                 segment length {}", g.len);
+        // copy-on-write of the partially matched page: the divergent
+        // tail rows become the lane's private copies
+        for (cache, src) in caches.iter_mut().zip(&g.layers) {
+            for kh in 0..n_kv {
+                for t in shared_len..shared_len + copy_len {
+                    cache.copy_row_from(
+                        (lane * n_kv + kh) * t_max + t, src,
+                        kh * g.len + t, hd);
+                }
+            }
+        }
+        attach[lane] = Some((seg, shared_len));
+        Ok(())
+    }
+
+    fn detach_prefix(&mut self, lane: usize) -> Result<()> {
+        ensure!(lane < self.batch,
+                "detach_prefix lane {lane} out of range (batch {})",
+                self.batch);
+        self.attach[lane] = None;
+        Ok(())
+    }
+
+    fn drop_prefix(&mut self, seg: u32) -> Result<()> {
+        ensure!(self.shared_segs.contains_key(&seg),
+                "drop_prefix: unknown shared segment {seg}");
+        for (lane, a) in self.attach.iter().enumerate() {
+            if let Some((s, _)) = a {
+                ensure!(*s != seg,
+                        "drop_prefix({seg}): lane {lane} is still \
+                         attached");
+            }
+        }
+        self.shared_segs.remove(&seg);
         Ok(())
     }
 
@@ -1147,7 +1414,11 @@ impl ExecBackend for ReferenceBackend {
                 weight_bytes += m.bytes();
             }
         }
-        let kv_bytes = self.caches.iter().map(KvLayer::bytes).sum();
+        let mut kv_bytes: u64 =
+            self.caches.iter().map(KvLayer::bytes).sum();
+        for g in self.shared_segs.values() {
+            kv_bytes += g.layers.iter().map(KvLayer::bytes).sum::<u64>();
+        }
         MemUsage { weight_bytes, kv_bytes }
     }
 }
@@ -1498,6 +1769,140 @@ mod tests {
             assert_eq!(p1, p2,
                        "reset must reproduce the first run at \
                         weight={wd:?} kv={kd:?}");
+        }
+    }
+
+    /// Push `tokens` through a prefill of `lane` starting at absolute
+    /// position `offset`, accumulating partials into the residual
+    /// stream exactly as the world-1 engine would.
+    fn prefill_at(be: &mut ReferenceBackend, lane: usize, tokens: &[i32],
+                  offset: usize) {
+        let h = be.preset.hidden;
+        let n_layers = be.preset.n_layers;
+        let segs = be.variant.syncs_per_layer();
+        let n = tokens.len();
+        let ctx = StepCtx::Prefill { lane, bucket: n, length: n, offset };
+        let mut x = vec![0.0f32; n * h];
+        be.embed(&ctx, tokens, &mut x).unwrap();
+        for li in 0..n_layers {
+            for seg in 0..segs {
+                let mut p = vec![0.0f32; n * h];
+                be.layer_partial(&ctx, li, seg, &x, &mut p).unwrap();
+                for (xi, pi) in x.iter_mut().zip(&p) {
+                    *xi += *pi;
+                }
+            }
+        }
+    }
+
+    /// One batched decode step at world 1, returning the full logits.
+    fn decode_logits(be: &mut ReferenceBackend, tokens: &[i32],
+                     positions: &[i32]) -> Vec<f32> {
+        let h = be.preset.hidden;
+        let n_layers = be.preset.n_layers;
+        let vocab_l = be.vocab_l;
+        let segs = be.variant.syncs_per_layer();
+        let b = tokens.len();
+        let ctx = StepCtx::Decode { positions };
+        let mut x = vec![0.0f32; b * h];
+        be.embed(&ctx, tokens, &mut x).unwrap();
+        for li in 0..n_layers {
+            for seg in 0..segs {
+                let mut p = vec![0.0f32; b * h];
+                be.layer_partial(&ctx, li, seg, &x, &mut p).unwrap();
+                for (xi, pi) in x.iter_mut().zip(&p) {
+                    *xi += *pi;
+                }
+            }
+        }
+        let mut logits = vec![0.0f32; b * vocab_l];
+        be.lm_head(&x, &mut logits).unwrap();
+        logits
+    }
+
+    /// DESIGN.md §13's bit-invariance: a lane that reads its prompt
+    /// prefix from a shared segment (plus the COW tail rows) must
+    /// produce logits bit-identical to a lane that prefilled the whole
+    /// prompt privately — at both KV dtypes, on both kernels.
+    #[test]
+    fn shared_prefix_reads_are_bit_identical_to_private_prefill() {
+        for kv in [Dtype::F32, Dtype::Int8] {
+            for kernel in [GemmKernel::Scalar, GemmKernel::Blocked] {
+                let mut c = cfg(1, 2);
+                c.kv_dtype = kv;
+                c.kernel = kernel;
+                let prompt: Vec<i32> =
+                    (0..20).map(|i| (i * 7 + 3) % 251).collect();
+                // baseline: both lanes prefill the prompt privately
+                let mut a = backend(&c, 0).unwrap();
+                prefill_at(&mut a, 0, &prompt, 0);
+                prefill_at(&mut a, 1, &prompt, 0);
+                let la = decode_logits(&mut a, &[11, 11], &[20, 20]);
+                let la2 = decode_logits(&mut a, &[23, 23], &[21, 21]);
+                // shared: lane 1 attaches to lane 0's published page
+                // (shared_len 16, COW rows 16..19) and only prefills
+                // its final prompt token
+                let mut b = backend(&c, 0).unwrap();
+                prefill_at(&mut b, 0, &prompt, 0);
+                b.publish_prefix(7, 0, 19).unwrap();
+                b.attach_prefix(1, 7, 16, 3).unwrap();
+                prefill_at(&mut b, 1, &prompt[19..], 19);
+                let lb = decode_logits(&mut b, &[11, 11], &[20, 20]);
+                let lb2 = decode_logits(&mut b, &[23, 23], &[21, 21]);
+                for (i, (x, y)) in la.iter().zip(&lb).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(),
+                               "logit {i} (kv={kv:?} {kernel:?})");
+                }
+                for (i, (x, y)) in la2.iter().zip(&lb2).enumerate() {
+                    assert_eq!(
+                        x.to_bits(), y.to_bits(),
+                        "step-2 logit {i} (kv={kv:?} {kernel:?})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_lifecycle_is_guarded() {
+        let mut be = backend(&cfg(1, 2), 0).unwrap();
+        let prompt: Vec<i32> = (0..16).collect();
+        prefill_at(&mut be, 0, &prompt, 0);
+        be.publish_prefix(1, 0, 16).unwrap();
+        assert!(be.publish_prefix(1, 0, 16).is_err(), "dup seg id");
+        assert!(be.attach_prefix(1, 9, 16, 0).is_err(), "unknown seg");
+        assert!(be.attach_prefix(1, 1, 17, 0).is_err(),
+                "shared_len past segment");
+        assert!(be.attach_prefix(1, 1, 16, 1).is_err(),
+                "copy range past segment");
+        be.attach_prefix(1, 1, 16, 0).unwrap();
+        assert!(be.drop_prefix(1).is_err(), "still attached");
+        be.detach_prefix(1).unwrap();
+        be.detach_prefix(1).unwrap(); // idempotent
+        be.drop_prefix(1).unwrap();
+        assert!(be.drop_prefix(1).is_err(), "already dropped");
+        // reset clears segments and attachments alike
+        be.publish_prefix(2, 0, 16).unwrap();
+        be.reset().unwrap();
+        assert!(be.attach_prefix(0, 2, 16, 0).is_err(),
+                "reset must drop the segment");
+        be.publish_prefix(2, 0, 16).unwrap(); // id reusable after reset
+    }
+
+    #[test]
+    fn mem_usage_counts_shared_segments() {
+        for kv in [Dtype::F32, Dtype::Int8] {
+            let mut c = cfg(1, 1);
+            c.kv_dtype = kv;
+            let mut be = backend(&c, 0).unwrap();
+            let base = be.mem_usage().kv_bytes;
+            let prompt: Vec<i32> = (0..16).collect();
+            prefill_at(&mut be, 0, &prompt, 0);
+            be.publish_prefix(3, 0, 16).unwrap();
+            let with_seg = be.mem_usage().kv_bytes;
+            assert!(with_seg > base,
+                    "segment bytes not counted ({with_seg} !> {base})");
+            be.drop_prefix(3).unwrap();
+            assert_eq!(be.mem_usage().kv_bytes, base);
         }
     }
 }

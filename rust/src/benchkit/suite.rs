@@ -26,7 +26,8 @@ use anyhow::{bail, Context, Result};
 use crate::backend::pool::auto_threads;
 use crate::benchkit::CaseResult;
 use crate::ccl::StatsSnapshot;
-use crate::config::{BackendKind, Dtype, EngineConfig, GemmKernel};
+use crate::config::{BackendKind, Dtype, EngineConfig, GemmKernel,
+                    SchedulerKind};
 use crate::engine::Engine;
 use crate::util::Json;
 
@@ -53,6 +54,10 @@ pub struct Scenario {
     pub prompt_lens: Vec<usize>,
     /// per-request `max_new_tokens`, cycled
     pub new_tokens: Vec<usize>,
+    /// first `shared_prefix_len` prompt tokens are identical across
+    /// every request (a system-prompt workload — DESIGN.md §13); 0
+    /// means fully independent prompts
+    pub shared_prefix_len: usize,
 }
 
 impl Scenario {
@@ -64,7 +69,13 @@ impl Scenario {
             requests,
             prompt_lens: prompt_lens.to_vec(),
             new_tokens: new_tokens.to_vec(),
+            shared_prefix_len: 0,
         }
+    }
+
+    fn with_shared_prefix(mut self, len: usize) -> Scenario {
+        self.shared_prefix_len = len;
+        self
     }
 
     /// Shrink the workload for CI smoke runs (`--quick`): fewer
@@ -116,6 +127,20 @@ pub fn standard_suite() -> Vec<Scenario> {
             &[2, 2, PROMPT_FILL_BUCKET, 2, 2],
             &[24, 40, 4, 16, 16],
         ),
+        // a system-prompt storm (DESIGN.md §13): every request opens
+        // with the same 32-token prefix; under the continuous
+        // scheduler the first prefill publishes it and later arrivals
+        // attach by reference, prefilling only their 8-token tails —
+        // the TTFT/throughput delta vs. the fcfs row is the §13
+        // acceptance figure.  prompt_lens repeats so quick mode keeps
+        // more requests than lanes: the reuse only kicks in for
+        // arrivals after the first full wave of misses
+        Scenario::new(
+            "shared_prefix_storm", 4, 16,
+            &[40, 40, 40, 40, 40, 40, 40, 40],
+            &[8],
+        )
+        .with_shared_prefix(32),
     ]
 }
 
@@ -140,6 +165,11 @@ pub struct ScenarioRecord {
     pub kv_dtype: Dtype,
     /// prefill chunk size of the run (0 = whole-prompt) — DESIGN.md §12
     pub prefill_chunk: usize,
+    /// admission policy the run served under (DESIGN.md §13)
+    pub scheduler: SchedulerKind,
+    /// fraction of admissions that attached to a shared prefix
+    /// (0.0 on fcfs rows and on workloads with nothing to share)
+    pub prefix_hit_rate: f64,
     /// measured resident weight bytes, summed over ranks (0 = the
     /// backend doesn't measure)
     pub weight_bytes: u64,
@@ -193,6 +223,8 @@ impl ScenarioRecord {
         put("weight_dtype", Json::Str(self.weight_dtype.to_string()));
         put("kv_dtype", Json::Str(self.kv_dtype.to_string()));
         put("prefill_chunk", Json::Num(self.prefill_chunk as f64));
+        put("scheduler", Json::Str(self.scheduler.to_string()));
+        put("prefix_hit_rate", Json::Num(self.prefix_hit_rate));
         put("weight_bytes", Json::Num(self.weight_bytes as f64));
         put("kv_bytes", Json::Num(self.kv_bytes as f64));
         put("batch", Json::Num(self.batch as f64));
@@ -242,9 +274,15 @@ impl ScenarioRecord {
         } else {
             format!("_c{}", self.prefill_chunk)
         };
+        // tag continuous rows likewise (fcfs is the unmarked default)
+        let sched = match self.scheduler {
+            SchedulerKind::Fcfs => "",
+            SchedulerKind::Continuous => "_cont",
+        };
         CaseResult {
-            name: format!("{}_w{}_{}x{}_{}{}", self.name, self.world,
-                          self.kernel, self.threads, dtype, chunk),
+            name: format!("{}_w{}_{}x{}_{}{}{}", self.name, self.world,
+                          self.kernel, self.threads, dtype, chunk,
+                          sched),
             iters: self.tokens_out as usize,
             mean_us: self.ms_per_token * 1e3,
             p50_us: self.decode_p50_us,
@@ -285,9 +323,18 @@ pub fn run_scenario(cfg: &EngineConfig, sc: &Scenario)
         };
         // leave decode headroom when the prompt fills the bucket
         let plen = plen.min(max_seq.saturating_sub(4)).max(1);
-        let prompt: Vec<i32> =
-            (0..plen).map(|t| ((t * 13 + i * 7) % 200) as i32 + 1)
-                     .collect();
+        // the first `shared_prefix_len` tokens are i-independent, so
+        // every request opens identically (request 0's stream
+        // coincides with the shared form by construction)
+        let prompt: Vec<i32> = (0..plen)
+            .map(|t| {
+                if t < sc.shared_prefix_len {
+                    ((t * 13) % 200) as i32 + 1
+                } else {
+                    ((t * 13 + i * 7) % 200) as i32 + 1
+                }
+            })
+            .collect();
         let n_new = sc.new_tokens[i % sc.new_tokens.len()];
         engine.enqueue(prompt, n_new);
     }
@@ -330,6 +377,8 @@ pub fn run_scenario(cfg: &EngineConfig, sc: &Scenario)
         weight_dtype: cfg.weight_dtype,
         kv_dtype: cfg.kv_dtype,
         prefill_chunk: cfg.prefill_chunk,
+        scheduler: cfg.scheduler,
+        prefix_hit_rate: m.prefix_hit_rate(),
         weight_bytes: mem.weight_bytes,
         kv_bytes: mem.kv_bytes,
         batch: sc.batch,
@@ -378,9 +427,11 @@ pub fn run_matrix(base: &EngineConfig, worlds: &[usize], quick: bool,
             cfg.kernel = GemmKernel::Blocked;
             cfg.weight_dtype = Dtype::F32;
             cfg.kv_dtype = Dtype::F32;
-            // standard rows are always whole-prompt; the chunked
-            // comparison row below is the only one that chunks
+            // standard rows are always whole-prompt fcfs; the chunked
+            // and continuous comparison rows below are the only ones
+            // that deviate
             cfg.prefill_chunk = 0;
+            cfg.scheduler = SchedulerKind::Fcfs;
             cfg.threads = if base.threads == 0 {
                 2
             } else {
@@ -402,6 +453,20 @@ pub fn run_matrix(base: &EngineConfig, worlds: &[usize], quick: bool,
                                   sc.name, ck.threads,
                                   ck.prefill_chunk));
                 out.push(run_scenario(&ck, sc)?);
+            }
+            // the §13 scheduler pair: the system-prompt storm under
+            // the continuous scheduler (shared-prefix reuse live),
+            // next to the fcfs baseline row just recorded (reference
+            // backend only — xla rejects continuous in validate())
+            if cfg.backend == BackendKind::Reference
+                && sc.name == "shared_prefix_storm"
+            {
+                let mut cont = cfg.clone();
+                cont.scheduler = SchedulerKind::Continuous;
+                progress(&format!("{} w{world} blocked x{} f32 \
+                                   continuous",
+                                  sc.name, cont.threads));
+                out.push(run_scenario(&cont, sc)?);
             }
             // int8 rows are a reference-backend feature; on an XLA
             // config the sweep stays f32-only instead of aborting on
@@ -563,46 +628,87 @@ pub fn chunked_stall_ratio(j: &Json, world: usize) -> Option<f64> {
     }
 }
 
+/// `(ttft_ms, tokens_per_s, prefix_hit_rate)` of the first
+/// `shared_prefix_storm` row at `world` under `scheduler`, pinned to
+/// the threaded blocked f32 rows like the other accessors — the
+/// DESIGN.md §13 acceptance pair reads the `"fcfs"` row against the
+/// `"continuous"` one (`None` if the row is missing).
+pub fn storm_row(j: &Json, world: usize, scheduler: &str)
+                 -> Option<(f64, f64, f64)> {
+    let rows = j.get("scenarios")?.as_arr()?;
+    rows.iter().find_map(|r| {
+        let name = r.get("name")?.as_str()?;
+        let w = r.get("world")?.as_usize()?;
+        let kernel = r.get("kernel")?.as_str()?;
+        let threads = r.get("threads")?.as_usize()?;
+        let wd = r.get("weight_dtype").and_then(Json::as_str)
+            .unwrap_or("f32");
+        let kd = r.get("kv_dtype").and_then(Json::as_str)
+            .unwrap_or("f32");
+        let sched = r.get("scheduler")?.as_str()?;
+        if name == "shared_prefix_storm" && w == world
+            && kernel == "blocked" && threads >= 2
+            && wd == "f32" && kd == "f32" && sched == scheduler
+        {
+            Some((r.get("ttft_ms")?.as_f64()?,
+                  r.get("tokens_per_s")?.as_f64()?,
+                  r.get("prefix_hit_rate")?.as_f64()?))
+        } else {
+            None
+        }
+    })
+}
+
 /// Structural + coverage validation of a `xeonserve-bench/v1`
 /// document (the CI bench-smoke gate).  Checks the schema tag, the
 /// per-row field types — including the dtype and memory-bytes fields
-/// every row must carry since DESIGN.md §11, and the `prefill_chunk`
-/// and `decode_stall_p99_us` fields since §12 — and that the rows
-/// cover every world the document's `worlds` field declares × ≥4
-/// scenarios, including the threaded-vs-scalar batched-decode pair,
-/// the int8-vs-f32 batched-decode pair, and the whole-vs-chunked
-/// `long_prompt_interactive` pair the acceptance gates read — so a
+/// every row must carry since DESIGN.md §11, the `prefill_chunk` and
+/// `decode_stall_p99_us` fields since §12, and the `scheduler` and
+/// `prefix_hit_rate` fields since §13 — and that the rows cover every
+/// world the document's `worlds` field declares × ≥4 scenarios,
+/// including the threaded-vs-scalar batched-decode pair, the
+/// int8-vs-f32 batched-decode pair, the whole-vs-chunked
+/// `long_prompt_interactive` pair, and the fcfs-vs-continuous
+/// `shared_prefix_storm` pair the acceptance gates read — so a
 /// `--worlds 2` recording validates against its own sweep, while the
 /// committed full recordings must actually contain what they claim.
-/// (Pre-§12 recordings without the chunking fields no longer
-/// validate; regenerate them — BENCH_pr4.json stays committed as
+/// (Pre-§13 recordings without the scheduler fields no longer
+/// validate; regenerate them — BENCH_pr4/pr5.json stay committed as
 /// trajectory history.)
+///
+/// Every failure message begins `rule {name}: ` and names the
+/// offending row, so a CI failure points at the exact check and datum
+/// that tripped it (the rules are unit-tested one by one below).
 pub fn validate_bench(j: &Json) -> Result<()> {
     match j.get("schema").and_then(Json::as_str) {
         Some(s) if s == SCHEMA => {}
-        other => bail!("schema is {other:?}, expected {SCHEMA:?}"),
+        other => bail!("rule schema-tag: schema is {other:?}, \
+                        expected {SCHEMA:?}"),
     }
     for key in ["bench", "model"] {
-        j.get(key)
-            .and_then(Json::as_str)
-            .with_context(|| format!("missing string field {key:?}"))?;
+        j.get(key).and_then(Json::as_str).with_context(|| {
+            format!("rule doc-strings: missing string field {key:?}")
+        })?;
     }
     let declared: Vec<usize> = j
         .get("worlds")
         .and_then(Json::as_arr)
-        .context("missing worlds array")?
+        .context("rule worlds-declared: missing worlds array")?
         .iter()
-        .map(|w| w.as_usize().context("worlds entries must be numbers"))
+        .map(|w| {
+            w.as_usize().context(
+                "rule worlds-declared: worlds entries must be numbers")
+        })
         .collect::<Result<_>>()?;
     if declared.is_empty() {
-        bail!("worlds array is empty");
+        bail!("rule worlds-declared: worlds array is empty");
     }
     let rows = j
         .get("scenarios")
         .and_then(Json::as_arr)
-        .context("missing scenarios array")?;
+        .context("rule rows-present: missing scenarios array")?;
     if rows.is_empty() {
-        bail!("scenarios array is empty");
+        bail!("rule rows-present: scenarios array is empty");
     }
     let mut names = std::collections::BTreeSet::new();
     let mut worlds = std::collections::BTreeSet::new();
@@ -611,46 +717,62 @@ pub fn validate_bench(j: &Json) -> Result<()> {
     let mut batched_int8 = false;
     let mut interactive_whole = false;
     let mut interactive_chunked = false;
+    let mut storm_fcfs = false;
+    let mut storm_continuous = false;
     let mut any_reference = false;
     for (i, r) in rows.iter().enumerate() {
         let ctx = || format!("scenario row {i}");
         let name = r.get("name").and_then(Json::as_str)
-            .with_context(|| format!("{}: missing name", ctx()))?;
+            .with_context(|| {
+                format!("rule row-name: {}: missing name", ctx())
+            })?;
         for key in ["world", "threads", "batch", "requests",
                     "decode_p50_us", "decode_p95_us",
                     "decode_stall_p99_us", "prefill_p50_us",
                     "tokens_out", "requests_done", "weight_bytes",
                     "kv_bytes", "prefill_chunk"] {
             let v = r.get(key).and_then(Json::as_f64).with_context(|| {
-                format!("{}: missing numeric field {key:?}", ctx())
+                format!("rule row-counter-fields: {} ({name}): \
+                         missing numeric field {key:?}", ctx())
             })?;
             // these are all count/size fields: fractional values
             // would be silently truncated downstream (as_usize),
             // misclassifying rows — reject them like the config
             // parser rejects a fractional prefill_chunk
             if !v.is_finite() || v < 0.0 || v.fract() != 0.0 {
-                bail!("{}: {key} = {v} must be a non-negative integer",
+                bail!("rule row-counter-fields: {} ({name}): \
+                       {key} = {v} must be a non-negative integer",
                       ctx());
             }
         }
         for key in ["ms_per_token", "ms_per_step", "ms_per_token_sim",
                     "ttft_ms", "tokens_per_s"] {
             let v = r.get(key).and_then(Json::as_f64).with_context(|| {
-                format!("{}: missing numeric field {key:?}", ctx())
+                format!("rule row-latency-fields: {} ({name}): \
+                         missing numeric field {key:?}", ctx())
             })?;
             if !v.is_finite() || v < 0.0 {
-                bail!("{}: {key} = {v} is not a sane latency", ctx());
+                bail!("rule row-latency-fields: {} ({name}): \
+                       {key} = {v} is not a sane latency", ctx());
             }
         }
         let kernel = r.get("kernel").and_then(Json::as_str)
-            .with_context(|| format!("{}: missing kernel", ctx()))?;
+            .with_context(|| {
+                format!("rule row-kernel: {} ({name}): missing kernel",
+                        ctx())
+            })?;
         if kernel != "blocked" && kernel != "scalar" {
-            bail!("{}: unknown kernel {kernel:?}", ctx());
+            bail!("rule row-kernel: {} ({name}): \
+                   unknown kernel {kernel:?}", ctx());
         }
         let backend = r.get("backend").and_then(Json::as_str)
-            .with_context(|| format!("{}: missing backend", ctx()))?;
+            .with_context(|| {
+                format!("rule row-backend: {} ({name}): \
+                         missing backend", ctx())
+            })?;
         if backend != "reference" && backend != "xla" {
-            bail!("{}: unknown backend {backend:?}", ctx());
+            bail!("rule row-backend: {} ({name}): \
+                   unknown backend {backend:?}", ctx());
         }
         // every row must say what numeric contract it measured —
         // cross-dtype comparisons are meaningless without it
@@ -659,14 +781,39 @@ pub fn validate_bench(j: &Json) -> Result<()> {
             dtypes.iter_mut().zip(["weight_dtype", "kv_dtype"])
         {
             let d = r.get(key).and_then(Json::as_str).with_context(
-                || format!("{}: missing dtype field {key:?}", ctx()))?;
+                || format!("rule row-dtype: {} ({name}): \
+                            missing dtype field {key:?}", ctx()))?;
             if d != "f32" && d != "int8" {
-                bail!("{}: unknown {key} {d:?}", ctx());
+                bail!("rule row-dtype: {} ({name}): \
+                       unknown {key} {d:?}", ctx());
             }
             *slot = d;
         }
-        r.get("comm").and_then(Json::as_obj)
-            .with_context(|| format!("{}: missing comm object", ctx()))?;
+        r.get("comm").and_then(Json::as_obj).with_context(|| {
+            format!("rule row-comm: {} ({name}): missing comm object",
+                    ctx())
+        })?;
+        // every row must say what admission policy served it — the
+        // §13 scheduler pair is meaningless without it
+        let sched = r.get("scheduler").and_then(Json::as_str)
+            .with_context(|| {
+                format!("rule row-scheduler: {} ({name}): \
+                         missing scheduler", ctx())
+            })?;
+        if sched != "fcfs" && sched != "continuous" {
+            bail!("rule row-scheduler: {} ({name}): \
+                   unknown scheduler {sched:?}", ctx());
+        }
+        let hit = r.get("prefix_hit_rate").and_then(Json::as_f64)
+            .with_context(|| {
+                format!("rule row-prefix-hit-rate: {} ({name}): \
+                         missing numeric field \"prefix_hit_rate\"",
+                        ctx())
+            })?;
+        if !hit.is_finite() || !(0.0..=1.0).contains(&hit) {
+            bail!("rule row-prefix-hit-rate: {} ({name}): \
+                   prefix_hit_rate = {hit} must lie in [0, 1]", ctx());
+        }
         let world = r.get("world").and_then(Json::as_usize).unwrap();
         let threads = r.get("threads").and_then(Json::as_usize).unwrap();
         names.insert(name.to_string());
@@ -689,38 +836,56 @@ pub fn validate_bench(j: &Json) -> Result<()> {
             interactive_whole |= chunk == 0;
             interactive_chunked |= chunk > 0;
         }
+        if name == "shared_prefix_storm" {
+            storm_fcfs |= sched == "fcfs";
+            storm_continuous |= sched == "continuous";
+        }
     }
     if names.len() < 4 {
-        bail!("only {} distinct scenarios, need >= 4: {names:?}",
-              names.len());
+        bail!("rule coverage-scenarios: only {} distinct scenarios, \
+               need >= 4: {names:?}", names.len());
     }
     for &w in &declared {
         if !worlds.contains(&w) {
-            bail!("declared world={w} has no rows (rows cover {worlds:?})");
+            bail!("rule coverage-worlds: declared world={w} has no \
+                   rows (rows cover {worlds:?})");
         }
     }
     // the kernel/threads/dtype acceptance pairs are reference-backend
     // semantics (the XLA backend ignores the GEMM knobs and has no
-    // int8 path — run_matrix skips those rows there), so an XLA-only
-    // recording is exempt from the pair gates
+    // int8 or continuous path — run_matrix skips those rows there),
+    // so an XLA-only recording is exempt from the pair gates
     if any_reference && !batched_scalar {
-        bail!("no scalar-kernel f32 batched_decode baseline row");
+        bail!("rule pair-batched-scalar: no scalar-kernel f32 \
+               batched_decode baseline row");
     }
     if any_reference && !batched_threaded {
-        bail!("no blocked f32 batched_decode row with threads >= 2");
+        bail!("rule pair-batched-threaded: no blocked f32 \
+               batched_decode row with threads >= 2");
     }
     if any_reference && !batched_int8 {
-        bail!("no int8 batched_decode row (the DESIGN.md §11 \
-               quantization gate needs the int8-vs-f32 pair on \
-               reference-backend recordings)");
+        bail!("rule pair-batched-int8: no int8 batched_decode row \
+               (the DESIGN.md §11 quantization gate needs the \
+               int8-vs-f32 pair on reference-backend recordings)");
     }
     // the DESIGN.md §12 chunked-prefill gate: reference recordings
     // must carry the whole-vs-chunked long_prompt_interactive pair so
     // chunked_stall_ratio() always yields the acceptance figure
     if any_reference && !(interactive_whole && interactive_chunked) {
-        bail!("missing long_prompt_interactive prefill_chunk pair \
-               (need a prefill_chunk = 0 row AND a chunked row on \
+        bail!("rule pair-interactive-chunked: missing \
+               long_prompt_interactive prefill_chunk pair (need a \
+               prefill_chunk = 0 row AND a chunked row on \
                reference-backend recordings — DESIGN.md §12)");
+    }
+    // the DESIGN.md §13 continuous-batching gate: reference
+    // recordings must carry the fcfs-vs-continuous
+    // shared_prefix_storm pair so storm_row() always yields the
+    // acceptance comparison
+    if any_reference && !(storm_fcfs && storm_continuous) {
+        bail!("rule pair-storm-scheduler: missing shared_prefix_storm \
+               scheduler pair (need a scheduler = \"fcfs\" row AND a \
+               \"continuous\" row on reference-backend recordings — \
+               DESIGN.md §13)");
     }
     Ok(())
 }
@@ -746,7 +911,8 @@ mod tests {
             s.iter().map(|x| x.name.as_str()).collect();
         for required in ["single_stream_decode", "batched_decode",
                          "prefill_heavy", "mixed",
-                         "long_prompt_interactive"] {
+                         "long_prompt_interactive",
+                         "shared_prefix_storm"] {
             assert!(names.contains(&required), "missing {required}");
         }
         for sc in &s {
@@ -754,6 +920,19 @@ mod tests {
             assert!(!sc.new_tokens.is_empty());
             assert!(sc.requests >= sc.batch);
         }
+        // the storm's shared prefix must be shorter than its prompts
+        // (a tail always remains to prefill) and page-aligned enough
+        // to actually publish (>= one 16-token KV page)
+        let storm = s.iter()
+            .find(|x| x.name == "shared_prefix_storm")
+            .unwrap();
+        assert!(storm.shared_prefix_len >= 16);
+        assert!(storm.prompt_lens.iter()
+                     .all(|&p| p > storm.shared_prefix_len));
+        // quick mode must keep more requests than lanes, so the reuse
+        // wave (arrivals after the first misses publish) survives
+        let q = storm.clone().quicken();
+        assert!(q.requests > q.batch);
     }
 
     #[test]
@@ -853,6 +1032,14 @@ mod tests {
         validate_bench(&parsed).unwrap();
         assert!(batched_speedup(&parsed, 1).is_some());
         assert!(int8_speedup(&parsed, 1).is_some());
+        // the §13 scheduler pair is recorded, and the continuous row
+        // actually exercised the reuse path (hits > 0 once the first
+        // wave of misses published the prefix)
+        let fcfs = storm_row(&parsed, 1, "fcfs").unwrap();
+        let cont = storm_row(&parsed, 1, "continuous").unwrap();
+        assert_eq!(fcfs.2, 0.0, "fcfs rows never attach prefixes");
+        assert!(cont.2 > 0.0,
+                "continuous storm row recorded no prefix hits");
         // the §12 pair is recorded, so the stall comparison resolves
         // whenever the chunked row measured a non-zero stall
         assert!(recs.iter().any(|r| r.name == "long_prompt_interactive"
@@ -872,11 +1059,12 @@ mod tests {
             run_matrix(&tiny_cfg(), &[1], true, |_| {}).unwrap();
         let doc = matrix_to_json("unit", "tiny", true, &[1], &recs);
         let text = doc.to_string();
-        // strip each required §11/§12 field in turn; validation must
-        // fail
+        // strip each required §11/§12/§13 field in turn; validation
+        // must fail
         for field in ["weight_dtype", "kv_dtype", "weight_bytes",
                       "kv_bytes", "backend", "prefill_chunk",
-                      "decode_stall_p99_us"] {
+                      "decode_stall_p99_us", "scheduler",
+                      "prefix_hit_rate"] {
             let crippled =
                 text.replace(&format!("\"{field}\""),
                              &format!("\"x_{field}\""));
@@ -898,5 +1086,89 @@ mod tests {
         let parsed = Json::parse(&doc.to_string()).unwrap();
         assert!(validate_bench(&parsed).is_err());
         assert!(validate_bench(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    /// Satellite: every validator rule, when tripped alone on an
+    /// otherwise-valid document, must fail with a message naming that
+    /// rule and the offending row — the CI failure output contract.
+    #[test]
+    fn validator_failures_name_their_rule() {
+        let recs =
+            run_matrix(&tiny_cfg(), &[1], true, |_| {}).unwrap();
+        let doc = |rows: &[ScenarioRecord], worlds: &[usize]| {
+            let d = matrix_to_json("unit", "tiny", true, worlds, rows);
+            Json::parse(&d.to_string()).unwrap()
+        };
+        let err_of = |j: &Json| {
+            format!("{:#}", validate_bench(j).unwrap_err())
+        };
+
+        // text-level corruptions: strip or mangle one token of the
+        // serialized document
+        let text = doc(&recs, &[1]).to_string();
+        for (rule, from, to) in [
+            ("rule schema-tag:", "xeonserve-bench/v1", "bogus/v0"),
+            ("rule doc-strings:", "\"bench\"", "\"x_bench\""),
+            ("rule worlds-declared:", "\"worlds\"", "\"x_worlds\""),
+            ("rule rows-present:", "\"scenarios\"", "\"x_scenarios\""),
+            ("rule row-name:", "\"name\"", "\"x_name\""),
+            ("rule row-counter-fields:",
+             "\"tokens_out\"", "\"x_tokens_out\""),
+            ("rule row-latency-fields:", "\"ttft_ms\"", "\"x_ttft_ms\""),
+            ("rule row-kernel:", "\"blocked\"", "\"warped\""),
+            ("rule row-backend:", "\"reference\"", "\"refurbished\""),
+            ("rule row-dtype:", "\"f32\"", "\"f16\""),
+            ("rule row-comm:", "\"comm\"", "\"x_comm\""),
+            ("rule row-scheduler:", "\"continuous\"", "\"lottery\""),
+            ("rule row-prefix-hit-rate:",
+             "\"prefix_hit_rate\"", "\"x_prefix_hit_rate\""),
+        ] {
+            let parsed = Json::parse(&text.replace(from, to)).unwrap();
+            let e = err_of(&parsed);
+            assert!(e.contains(rule),
+                    "{from} -> {to}: expected {rule:?} in {e:?}");
+        }
+
+        // value-level corruption: a hit rate outside [0, 1]
+        let mut bad = recs.clone();
+        bad[0].prefix_hit_rate = 1.5;
+        assert!(err_of(&doc(&bad, &[1]))
+                    .contains("rule row-prefix-hit-rate:"));
+
+        // coverage rules
+        let one_name: Vec<ScenarioRecord> = recs.iter()
+            .filter(|r| r.name == "batched_decode")
+            .cloned()
+            .collect();
+        assert!(err_of(&doc(&one_name, &[1]))
+                    .contains("rule coverage-scenarios:"));
+        assert!(err_of(&doc(&recs, &[1, 2]))
+                    .contains("rule coverage-worlds:"));
+
+        // pair rules: drop one half of each acceptance pair
+        let without = |pred: &dyn Fn(&ScenarioRecord) -> bool| {
+            recs.iter()
+                .filter(|r| !pred(r))
+                .cloned()
+                .collect::<Vec<ScenarioRecord>>()
+        };
+        for (rule, gone) in [
+            ("rule pair-batched-scalar:",
+             without(&|r| r.kernel == GemmKernel::Scalar)),
+            ("rule pair-batched-threaded:",
+             without(&|r| r.name == "batched_decode"
+                 && r.kernel == GemmKernel::Blocked
+                 && r.threads >= 2
+                 && r.weight_dtype == Dtype::F32)),
+            ("rule pair-batched-int8:",
+             without(&|r| r.weight_dtype == Dtype::Int8)),
+            ("rule pair-interactive-chunked:",
+             without(&|r| r.prefill_chunk > 0)),
+            ("rule pair-storm-scheduler:",
+             without(&|r| r.scheduler == SchedulerKind::Continuous)),
+        ] {
+            let e = err_of(&doc(&gone, &[1]));
+            assert!(e.contains(rule), "expected {rule:?} in {e:?}");
+        }
     }
 }

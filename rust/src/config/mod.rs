@@ -174,6 +174,50 @@ impl std::fmt::Display for Dtype {
     }
 }
 
+/// Admission policy in front of the engine (DESIGN.md §13).
+///
+/// * `Fcfs` — the classic queue: prefill bursts bounded by the
+///   decode-interleave guard, no cross-request KV reuse.  The default,
+///   and byte-for-byte the pre-§13 behavior.
+/// * `Continuous` — continuous batching: lanes join and leave the
+///   decode batch every step, prompts are admitted through the chunk
+///   machinery capped at `max_seq` (no bucket truncation), and the KV
+///   allocator shares page-aligned prompt prefixes across requests via
+///   refcounted copy-on-write attach (DESIGN.md §13).
+///
+/// Greedy outputs are bit-identical under both policies — scheduling
+/// changes *when* a request runs, never *what* it computes — which is
+/// what `rust/tests/continuous_batching.rs` pins.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SchedulerKind {
+    /// FCFS bucket admission (the classic path).
+    #[default]
+    Fcfs,
+    /// Continuous per-step admission with shared-prefix KV reuse.
+    Continuous,
+}
+
+impl SchedulerKind {
+    /// Strict parse of the TOML/CLI spelling; unknown strings are a
+    /// clean config error, never a silent fallback.
+    pub fn parse(s: &str) -> Result<SchedulerKind> {
+        match s {
+            "fcfs" => Ok(SchedulerKind::Fcfs),
+            "continuous" => Ok(SchedulerKind::Continuous),
+            _ => bail!("unknown scheduler {s:?} (fcfs|continuous)"),
+        }
+    }
+}
+
+impl std::fmt::Display for SchedulerKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SchedulerKind::Fcfs => write!(f, "fcfs"),
+            SchedulerKind::Continuous => write!(f, "continuous"),
+        }
+    }
+}
+
 /// The paper's three optimizations as independent switches, so every
 /// bench can ablate them one at a time.
 #[derive(Clone, Copy, Debug)]
@@ -271,6 +315,11 @@ pub struct EngineConfig {
     /// backend-only (the AOT prefill segments are whole-frame) and
     /// bit-identical to whole-prompt prefill at any chunk size.
     pub prefill_chunk: usize,
+    /// Admission policy (DESIGN.md §13): `fcfs` = classic bounded-burst
+    /// queue; `continuous` = per-step admission with shared-prefix KV
+    /// reuse.  Continuous batching is reference-backend-only (the AOT
+    /// segments have no shared-segment attention reads).
+    pub scheduler: SchedulerKind,
 }
 
 impl Default for EngineConfig {
@@ -292,6 +341,7 @@ impl Default for EngineConfig {
             weight_dtype: Dtype::F32,
             kv_dtype: Dtype::F32,
             prefill_chunk: 0,
+            scheduler: SchedulerKind::Fcfs,
         }
     }
 }
@@ -352,6 +402,14 @@ impl EngineConfig {
                        (0 = whole-prompt), got {n}");
             }
             cfg.prefill_chunk = n as usize;
+        }
+        if let Some(v) = j.get("scheduler") {
+            // strict: present-but-invalid must error, never fall back
+            let s = v.as_str().with_context(|| {
+                format!("scheduler must be a string (fcfs|continuous), \
+                         got {v:?}")
+            })?;
+            cfg.scheduler = SchedulerKind::parse(s)?;
         }
         if let Some(w) = j.get("weights") {
             match w.get("kind").and_then(Json::as_str) {
@@ -435,6 +493,7 @@ impl EngineConfig {
         let _ = writeln!(s, "weight_dtype = \"{}\"", self.weight_dtype);
         let _ = writeln!(s, "kv_dtype = \"{}\"", self.kv_dtype);
         let _ = writeln!(s, "prefill_chunk = {}", self.prefill_chunk);
+        let _ = writeln!(s, "scheduler = \"{}\"", self.scheduler);
         match &self.weights {
             WeightSource::Synthetic { seed } => {
                 let _ = writeln!(
@@ -508,6 +567,18 @@ impl EngineConfig {
                  prefill_chunk={}); chunking is a reference-backend \
                  feature (DESIGN.md §12)",
                 self.prefill_chunk
+            );
+        }
+        // shared-prefix attach reads KV across segment + lane storage;
+        // the AOT attention segments only address the dense lane planes
+        if self.backend == BackendKind::Xla
+            && self.scheduler != SchedulerKind::Fcfs
+        {
+            bail!(
+                "backend \"xla\" only supports the fcfs scheduler (got \
+                 scheduler={}); continuous batching is a reference-\
+                 backend feature (DESIGN.md §13)",
+                self.scheduler
             );
         }
         Ok(())
@@ -657,6 +728,7 @@ beta_gbps = 10.0
             weight_dtype: Dtype::Int8,
             kv_dtype: Dtype::Int8,
             prefill_chunk: 16,
+            scheduler: SchedulerKind::Continuous,
             ..Default::default()
         };
         cfg.opt.zero_copy = false;
@@ -680,6 +752,7 @@ beta_gbps = 10.0
         assert_eq!(back.weight_dtype, Dtype::Int8);
         assert_eq!(back.kv_dtype, Dtype::Int8);
         assert_eq!(back.prefill_chunk, 16);
+        assert_eq!(back.scheduler, SchedulerKind::Continuous);
         assert!(!back.opt.zero_copy);
         assert_eq!(back.opt.broadcast_ids, cfg.opt.broadcast_ids);
         assert_eq!(back.sampling.top_k, 13);
@@ -718,6 +791,37 @@ beta_gbps = 10.0
             "prefill_chunk = 4.5").is_err());
         assert!(EngineConfig::from_toml_str(
             "prefill_chunk = -1").is_err());
+        // scheduler is strict-parsed: unknown names and non-strings
+        // are clean config errors, never a silent fcfs fallback
+        assert!(EngineConfig::from_toml_str(
+            "scheduler = \"weird\"").is_err());
+        assert!(EngineConfig::from_toml_str(
+            "scheduler = \"FCFS\"").is_err());
+        assert!(EngineConfig::from_toml_str(
+            "scheduler = 3").is_err());
+    }
+
+    #[test]
+    fn scheduler_parse_and_defaults() {
+        assert_eq!(EngineConfig::default().scheduler, SchedulerKind::Fcfs);
+        let c = EngineConfig::from_toml_str("scheduler = \"continuous\"")
+            .unwrap();
+        assert_eq!(c.scheduler, SchedulerKind::Continuous);
+        let f = EngineConfig::from_toml_str("scheduler = \"fcfs\"").unwrap();
+        assert_eq!(f.scheduler, SchedulerKind::Fcfs);
+        assert_eq!(SchedulerKind::Fcfs.to_string(), "fcfs");
+        assert_eq!(SchedulerKind::Continuous.to_string(), "continuous");
+    }
+
+    #[test]
+    fn xla_backend_rejects_continuous_scheduler() {
+        let cfg = EngineConfig {
+            backend: BackendKind::Xla,
+            scheduler: SchedulerKind::Continuous,
+            ..Default::default()
+        };
+        // invalid regardless of whether the xla feature is compiled in
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -26,8 +26,13 @@ use super::proto::Cmd;
 ///
 /// Contract: `send` delivers commands in order; the worker answers every
 /// `Prefill`/`Decode`/`Reset` with exactly one reply on the engine's
-/// reply channel; `shutdown` is idempotent and best-effort (the worker
-/// may already be gone).
+/// reply channel.  The shared-prefix delta commands
+/// (`AttachPrefix`/`DetachPrefix`/`PublishPrefix`/`DropPrefix`,
+/// DESIGN.md §13) are *reply-less*: workers apply them silently and
+/// surface a failure as a `Reply::Error` at the next replied round, so
+/// the leader's reply accounting stays one-reply-per-compute-round.
+/// `shutdown` is idempotent and best-effort (the worker may already be
+/// gone).
 pub trait RankHost: Send {
     /// The tensor-parallel rank this host drives.
     fn rank(&self) -> usize;
@@ -48,6 +53,8 @@ pub struct ThreadRankHost {
 }
 
 impl ThreadRankHost {
+    /// Wrap an already-spawned rank thread: `cmd_tx` feeds its command
+    /// loop, `handle` is joined at shutdown.
     pub fn new(rank: usize, cmd_tx: Sender<Cmd>, handle: JoinHandle<()>)
                -> Self {
         ThreadRankHost { rank, cmd_tx, handle: Some(handle) }

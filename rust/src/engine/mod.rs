@@ -23,6 +23,20 @@
 //! core and measured wall-clock adds their compute up instead of
 //! overlapping it.
 //!
+//! Two admission policies are served behind
+//! [`EngineConfig::scheduler`](crate::config::EngineConfig):
+//!
+//! * [`SchedulerKind::Fcfs`] — the classic path: prompts round up to a
+//!   prefill bucket and truncate to the ladder's largest bucket.
+//! * [`SchedulerKind::Continuous`] — per-step admission with no bucket
+//!   rounding (prompts run at exact length through the chunk machinery,
+//!   capped only by the context window) plus copy-on-write shared-prefix
+//!   KV reuse: a finished prefill publishes its page-aligned prompt
+//!   prefix as a refcounted read-only segment, and later prompts with a
+//!   matching prefix attach by reference, prefilling only their suffix
+//!   (DESIGN.md §13).  Greedy outputs stay bit-identical across the two
+//!   policies — pinned by `rust/tests/continuous_batching.rs`.
+//!
 //! # Example
 //!
 //! ```no_run
@@ -41,6 +55,8 @@
 //! # }
 //! ```
 
+#![warn(missing_docs)]
+
 mod host;
 pub mod proto;
 pub(crate) mod rank;
@@ -55,8 +71,8 @@ pub use host::{RankHost, ThreadRankHost};
 
 use crate::backend::MemUsage;
 use crate::ccl::{CommGroup, StatsSnapshot};
-use crate::config::{EngineConfig, ModelPreset, ResolvedModel};
-use crate::kvcache::{LaneTable, PagedAllocator};
+use crate::config::{EngineConfig, ModelPreset, ResolvedModel, SchedulerKind};
+use crate::kvcache::{LaneTable, PagedAllocator, PrefixCache, PrefixMatch};
 use crate::metrics::{RunMetrics, StepTiming};
 use crate::sampling::{self, Candidate};
 use crate::scheduler::PrefillCursor;
@@ -64,11 +80,19 @@ use crate::util::SplitMix64;
 
 use proto::{Cmd, Reply};
 
+/// KV page granularity (tokens per page) of the leader's page
+/// accounting — must match the allocator geometry built in
+/// [`Engine::new`] and the page alignment of published prefixes.
+const KV_PAGE: usize = 16;
+
 /// A finished request.
 #[derive(Clone, Debug)]
 pub struct Completion {
+    /// Id assigned by [`Engine::enqueue`].
     pub request_id: u64,
+    /// Prompt length actually served (after any truncation policy).
     pub prompt_len: usize,
+    /// Generated tokens, in emission order.
     pub tokens: Vec<i32>,
 }
 
@@ -102,6 +126,13 @@ struct ActiveReq {
     prompt_len: usize,
     generated: Vec<i32>,
     max_new: usize,
+    /// Shared segment this lane rides on (continuous scheduler,
+    /// DESIGN.md §13) — its refcount must drop at retire/cancel.
+    attached: Option<u32>,
+    /// Publish plan recorded at admission (prefix-cache miss): the
+    /// page-aligned prompt prefix to publish as a shared segment once
+    /// prefill has written those KV rows.
+    publish_tokens: Option<Vec<i32>>,
     phase: Phase,
 }
 
@@ -125,7 +156,13 @@ pub struct Engine {
     active: Vec<ActiveReq>,
     next_id: u64,
     rng: SplitMix64,
+    /// Serving-run counters and latency aggregates (public so drivers
+    /// like the bench harness can read and reset them between phases).
     pub metrics: RunMetrics,
+    /// token-prefix → published shared segment (continuous scheduler)
+    prefix: PrefixCache,
+    /// next shared-segment id to mint — monotonic per engine lifetime
+    next_seg: u32,
     eos: Option<i32>,
     /// per-deployment resident bytes, aggregated from rank Ready replies
     mem: MemUsage,
@@ -236,10 +273,8 @@ impl Engine {
 
         let lanes = LaneTable::new(cfg.batch, preset.max_seq);
         // page accounting over the physical per-lane cache capacity
-        let page = 16;
-        let pages =
-            PagedAllocator::new(page, cfg.batch * preset.max_seq / page,
-                                cfg.batch);
+        let pages = PagedAllocator::new(
+            KV_PAGE, cfg.batch * preset.max_seq / KV_PAGE, cfg.batch);
         let seed = cfg.sampling.seed;
         let eos = crate::tokenizer::Tokenizer::byte_level(preset.vocab)
             .ok()
@@ -257,6 +292,8 @@ impl Engine {
             next_id: 0,
             rng: SplitMix64::new(seed),
             metrics: RunMetrics::default(),
+            prefix: PrefixCache::new(),
+            next_seg: 0,
             eos,
             mem,
             emitted: Vec::new(),
@@ -265,10 +302,12 @@ impl Engine {
         })
     }
 
+    /// The configuration this engine was built with.
     pub fn config(&self) -> &EngineConfig {
         &self.cfg
     }
 
+    /// The resolved model geometry.
     pub fn preset(&self) -> &ModelPreset {
         &self.preset
     }
@@ -281,6 +320,7 @@ impl Engine {
         self.mem
     }
 
+    /// Leader-visible collective traffic counters.
     pub fn comm_stats(&self) -> StatsSnapshot {
         self.stats.snapshot()
     }
@@ -293,10 +333,12 @@ impl Engine {
         id
     }
 
+    /// Whether any request is still queued or in flight.
     pub fn has_work(&self) -> bool {
         !self.pending.is_empty() || !self.active.is_empty()
     }
 
+    /// Requests currently occupying a lane (prefilling or decoding).
     pub fn active_count(&self) -> usize {
         self.active.len()
     }
@@ -309,6 +351,7 @@ impl Engine {
         self.active.iter().filter(|a| a.decoding()).count()
     }
 
+    /// Requests queued but not yet admitted to a lane.
     pub fn pending_count(&self) -> usize {
         self.pending.len()
     }
@@ -327,6 +370,23 @@ impl Engine {
     /// Total KV page pool capacity.
     pub fn total_pages(&self) -> usize {
         self.pages.total_pages()
+    }
+
+    /// KV pages currently pinned by published shared-prefix segments
+    /// (continuous scheduler; the conservation law the refcount tests
+    /// assert is `free + Σ lane-held + shared == total`).
+    pub fn shared_pages(&self) -> usize {
+        self.pages.shared_pages_total()
+    }
+
+    /// Published shared-prefix segments resident in the page pool.
+    pub fn shared_groups(&self) -> usize {
+        self.pages.shared_groups()
+    }
+
+    /// Prefix-cache entries currently eligible for attachment.
+    pub fn prefix_entries(&self) -> usize {
+        self.prefix.len()
     }
 
     /// Drain the tokens sampled by the most recent [`Engine::step`],
@@ -358,8 +418,7 @@ impl Engine {
             self.active.iter().position(|a| a.id == request_id)
         {
             let a = self.active.swap_remove(i);
-            self.lanes.free(a.lane)?;
-            self.pages.release(a.lane);
+            self.release_lane(a.lane, a.attached)?;
             return Ok(true);
         }
         Ok(false)
@@ -391,29 +450,71 @@ impl Engine {
         // buffer for drivers that never call take_new_tokens
         self.emitted.clear();
 
-        // ---- admission (continuous batching) ----
+        // ---- admission (lane-granular, every step) ----
+        let continuous = self.cfg.scheduler == SchedulerKind::Continuous;
         while !self.pending.is_empty() && self.lanes.free_lanes() > 0 {
             let req = self.pending.front().unwrap();
-            let bucket = self.bucket_for(req.prompt.len());
-            let worst = (req.prompt.len().min(bucket) + req.max_new)
-                .min(self.preset.max_seq);
-            if !self.pages.can_admit(worst) {
-                break; // wait for capacity
-            }
-            let req = self.pending.pop_front().unwrap();
-            if self.cfg.prefill_chunk == 0 {
-                let completion =
-                    self.admit_and_prefill(req, bucket, worst)?;
-                if let Some(c) = completion {
-                    done.push(c); // 0-token request edge case
+            if continuous {
+                // non-truncating admission (DESIGN.md §13): no bucket
+                // rounding — the chunk machinery feeds exact token
+                // counts — capped at max_seq - 1 so the first decode
+                // append always has a row to land in
+                let cap = self.preset.max_seq.saturating_sub(1).max(1);
+                let plen = req.prompt.len().min(cap).max(1);
+                let worst =
+                    (plen + req.max_new).min(self.preset.max_seq);
+                let hit = self
+                    .prefix
+                    .lookup(&req.prompt[..req.prompt.len().min(cap)],
+                            KV_PAGE);
+                let fits = match hit {
+                    Some(m) => self.pages.can_admit_attached(
+                        worst, m.shared_len / KV_PAGE),
+                    None => self.pages.can_admit(worst),
+                };
+                if !fits {
+                    // reclaim idle (refcount-zero) prefix segments
+                    // before shedding — but never the segment this
+                    // request wants to join
+                    let evicted = self
+                        .evict_idle_prefixes(hit.map(|m| m.seg))?;
+                    let fits_now = evicted
+                        && match hit {
+                            Some(m) => self.pages.can_admit_attached(
+                                worst, m.shared_len / KV_PAGE),
+                            None => self.pages.can_admit(worst),
+                        };
+                    if !fits_now {
+                        break; // shed: wait for lanes/pages to free
+                    }
                 }
+                let req = self.pending.pop_front().unwrap();
+                self.admit_continuous(req, worst, hit)?;
             } else {
-                self.admit_chunked(req, bucket, worst)?;
+                let bucket = self.bucket_for(req.prompt.len());
+                let worst = (req.prompt.len().min(bucket) + req.max_new)
+                    .min(self.preset.max_seq);
+                if !self.pages.can_admit(worst) {
+                    break; // wait for capacity
+                }
+                let req = self.pending.pop_front().unwrap();
+                if self.cfg.prefill_chunk == 0 {
+                    let completion =
+                        self.admit_and_prefill(req, bucket, worst)?;
+                    if let Some(c) = completion {
+                        done.push(c); // 0-token request edge case
+                    }
+                } else {
+                    self.admit_chunked(req, bucket, worst)?;
+                }
             }
         }
 
         // ---- chunked prefill: one chunk, oldest prefilling lane ----
-        if self.cfg.prefill_chunk > 0 {
+        // (the continuous scheduler always admits through the chunk
+        // state machine, even in whole-prompt mode where each "chunk"
+        // is the full remaining span)
+        if self.cfg.prefill_chunk > 0 || continuous {
             loop {
                 if let Some(c) = self.prefill_chunk_step()? {
                     done.push(c);
@@ -492,10 +593,13 @@ impl Engine {
             }
         }
         self.lanes = LaneTable::new(self.cfg.batch, self.preset.max_seq);
-        let page = 16;
         self.pages = PagedAllocator::new(
-            page, self.cfg.batch * self.preset.max_seq / page,
+            KV_PAGE, self.cfg.batch * self.preset.max_seq / KV_PAGE,
             self.cfg.batch);
+        // backends drop their shared segments on Cmd::Reset, so the
+        // leader-side prefix cache must forget them too (next_seg stays
+        // monotonic: segment ids are never reused within a lifetime)
+        self.prefix = PrefixCache::new();
         self.pending.clear();
         self.active.clear();
         self.emitted.clear();
@@ -534,6 +638,8 @@ impl Engine {
             prompt_len: length,
             generated: Vec::new(),
             max_new: req.max_new,
+            attached: None,
+            publish_tokens: None,
             phase: Phase::Decode { next_token: 0 },
         });
         self.finish_prefill(self.active.len() - 1, cands)
@@ -549,6 +655,13 @@ impl Engine {
                       -> Result<Option<Completion>> {
         let cands =
             cands.context("rank 0 returned no prefill candidates")?;
+        // execute the publish plan recorded at admission: the lane's KV
+        // rows for the page-aligned prefix are fully written now that
+        // prefill is done (a failed publish just skips sharing)
+        if let Some(tokens) = self.active[idx].publish_tokens.take() {
+            let lane = self.active[idx].lane;
+            self.publish_prefix(lane, tokens)?;
+        }
         let first = self.sample_one(&cands[0]);
         self.metrics.tokens_out += 1; // the prefill-sampled token
         let a = &mut self.active[idx];
@@ -586,12 +699,156 @@ impl Engine {
             prompt_len: length,
             generated: Vec::new(),
             max_new: req.max_new,
+            attached: None,
+            publish_tokens: None,
             phase: Phase::Prefill {
                 prompt,
                 cursor,
                 admitted: Instant::now(),
             },
         });
+        Ok(())
+    }
+
+    /// Continuous admission (DESIGN.md §13): claim the lane and the
+    /// worst-case *private* pages now, exactly like the chunked path,
+    /// but with no bucket rounding — and, on a prefix-cache hit, attach
+    /// the lane to the published segment so prefill starts at the first
+    /// unshared token.  On a miss, record the page-aligned prefix as a
+    /// publish plan to execute when this prefill completes.
+    fn admit_continuous(&mut self, req: PendingReq, worst: usize,
+                        hit: Option<PrefixMatch>) -> Result<()> {
+        let mut prompt = req.prompt;
+        // keep one row of headroom so the first decode append fits
+        prompt.truncate(self.preset.max_seq.saturating_sub(1).max(1));
+        if prompt.is_empty() {
+            // same degenerate-request row the classic paths run
+            prompt.push(0);
+        }
+        let length = prompt.len();
+        let lane = self.lanes.alloc(req.id, length)?;
+        let (cursor, attached, publish_tokens) = match hit {
+            Some(m) => {
+                self.pages
+                    .admit_attached(lane, worst, m.shared_len / KV_PAGE)?;
+                self.pages.attach_shared(m.seg)?;
+                // reply-less delta: workers set the lane's attachment
+                // and COW-copy the partial-page rows before the next
+                // compute round (command channels are ordered)
+                for host in &self.hosts {
+                    host.send(Cmd::AttachPrefix {
+                        lane,
+                        seg: m.seg,
+                        shared_len: m.shared_len,
+                        copy_len: m.copy_len,
+                    })
+                    .context("rank host unreachable")?;
+                }
+                self.metrics.prefix_hits += 1;
+                // prefill only the unshared suffix; new_at clamps so the
+                // final prompt token always runs (first-token logits)
+                let cursor = PrefillCursor::new_at(
+                    length, self.cfg.prefill_chunk,
+                    m.shared_len + m.copy_len);
+                (cursor, Some(m.seg), None)
+            }
+            None => {
+                self.pages.admit(lane, worst)?;
+                self.metrics.prefix_misses += 1;
+                let aligned = length / KV_PAGE * KV_PAGE;
+                // plan to publish the page-aligned prefix unless an
+                // identical prefix is already cached (two misses on the
+                // same prompt can race within one admission burst)
+                let plan = (aligned >= KV_PAGE
+                    && !self.prefix.contains_prefix(&prompt[..aligned]))
+                    .then(|| prompt[..aligned].to_vec());
+                (PrefillCursor::new(length, self.cfg.prefill_chunk),
+                 None, plan)
+            }
+        };
+        self.active.push(ActiveReq {
+            id: req.id,
+            lane,
+            prompt_len: length,
+            generated: Vec::new(),
+            max_new: req.max_new,
+            attached,
+            publish_tokens,
+            phase: Phase::Prefill {
+                prompt,
+                cursor,
+                admitted: Instant::now(),
+            },
+        });
+        Ok(())
+    }
+
+    /// Publish lane `lane`'s prefilled `tokens`-prefix KV as a shared
+    /// segment: reserve its pages, ship the reply-less
+    /// [`Cmd::PublishPrefix`] to every rank, and index it in the prefix
+    /// cache.  A pool too tight to pin the copy skips sharing silently —
+    /// serving correctness never depends on a publish landing.
+    fn publish_prefix(&mut self, lane: usize, tokens: Vec<i32>)
+                      -> Result<()> {
+        // two identical prompts admitted in one burst both plan a
+        // publish (the cache was empty when each missed); only the
+        // first to finish prefill actually lands it
+        if self.prefix.contains_prefix(&tokens) {
+            return Ok(());
+        }
+        let seg = self.next_seg;
+        if self.pages.publish_shared(seg, tokens.len() / KV_PAGE).is_err()
+        {
+            return Ok(());
+        }
+        self.next_seg += 1;
+        for host in &self.hosts {
+            host.send(Cmd::PublishPrefix { seg, lane, len: tokens.len() })
+                .context("rank host unreachable")?;
+        }
+        self.prefix.insert(seg, tokens, KV_PAGE)
+    }
+
+    /// Evict every refcount-zero shared segment except `keep`,
+    /// returning whether anything was reclaimed.  Runs when continuous
+    /// admission can't fit a request: idle prefix copies are a cache,
+    /// not a reservation, so memory pressure shreds them first
+    /// (attached segments are pinned by their refcounts and survive).
+    fn evict_idle_prefixes(&mut self, keep: Option<u32>) -> Result<bool> {
+        let mut any = false;
+        for seg in self.prefix.segs() {
+            if Some(seg) == keep || self.pages.shared_refs(seg) != Some(0)
+            {
+                continue;
+            }
+            self.pages.evict_shared(seg)?;
+            self.prefix.remove(seg);
+            for host in &self.hosts {
+                host.send(Cmd::DropPrefix { seg })
+                    .context("rank host unreachable")?;
+            }
+            any = true;
+        }
+        Ok(any)
+    }
+
+    /// Shared tail of retire and cancel: free the lane, release its
+    /// private pages, and — for a lane riding a shared prefix — drop
+    /// the segment refcount and detach on every rank.  The segment's
+    /// pages are never freed here: other lanes (or the prefix cache
+    /// itself) may still hold it; idle segments fall to
+    /// [`Self::evict_idle_prefixes`] under memory pressure.
+    fn release_lane(&mut self, lane: usize, attached: Option<u32>)
+                    -> Result<()> {
+        self.lanes.free(lane)?;
+        self.pages.release(lane);
+        if let Some(seg) = attached {
+            self.pages.release_shared(seg)?;
+            for host in &self.hosts {
+                host.send(Cmd::DetachPrefix { lane })
+                    .context("rank host unreachable")?;
+            }
+        }
         Ok(())
     }
 
@@ -805,8 +1062,7 @@ impl Engine {
     }
 
     fn retire(&mut self, a: &mut ActiveReq) -> Result<Completion> {
-        self.lanes.free(a.lane)?;
-        self.pages.release(a.lane);
+        self.release_lane(a.lane, a.attached.take())?;
         self.metrics.requests_done += 1;
         Ok(Completion {
             request_id: a.id,

@@ -25,21 +25,27 @@ pub enum Cmd {
     /// `tokens` is only populated for rank 0 (ids flow §2.1a-style
     /// through the ccl broadcast to the other ranks).
     Prefill {
+        /// batch lane being prefilled
         lane: usize,
+        /// padded prompt length (a ladder bucket)
         bucket: usize,
         /// prompt padded to `bucket` length; rank 0 only
         tokens: Option<Vec<i32>>,
+        /// real prompt length before padding
         length: usize,
     },
     /// One batched decode step over all lanes.
     /// `tokens[b]` is the token to feed lane `b` (0 for inactive lanes);
     /// rank 0 only, others receive via broadcast.
     Decode {
+        /// per-lane tokens to feed (rank 0 only)
         tokens: Option<Vec<i32>>,
+        /// per-lane append positions
         positions: Vec<i32>,
     },
     /// Reset all KV caches + lane state (between bench iterations).
     Reset,
+    /// Exit the serve loop (engine teardown).
     Shutdown,
     /// One chunk of a chunked prefill (DESIGN.md §12): `len` prompt
     /// tokens continuing lane `lane`'s KV region at absolute position
@@ -59,19 +65,61 @@ pub enum Cmd {
         /// final chunk of the prompt — sample first-token candidates
         last: bool,
     },
+    /// Attach lane `lane` to shared-prefix segment `seg` (DESIGN.md
+    /// §13): positions `[0, shared_len)` read the segment by
+    /// reference, the `copy_len` rows past them are copied into the
+    /// lane's private KV (COW).  Reply-less delta command: workers are
+    /// silent on success and surface failures as [`Reply::Error`] at
+    /// the next replied round.
+    AttachPrefix {
+        /// batch lane attaching
+        lane: usize,
+        /// shared segment id
+        seg: u32,
+        /// page-aligned length read by reference
+        shared_len: usize,
+        /// divergent tail rows copied into private storage
+        copy_len: usize,
+    },
+    /// Detach lane `lane` from its shared segment (retire/cancel).
+    /// Reply-less, idempotent.
+    DetachPrefix {
+        /// batch lane detaching
+        lane: usize,
+    },
+    /// Snapshot lane `lane`'s first `len` KV rows as immutable shared
+    /// segment `seg`.  Reply-less.
+    PublishPrefix {
+        /// new shared segment id (engine-assigned, unique)
+        seg: u32,
+        /// freshly prefilled source lane
+        lane: usize,
+        /// page-aligned prefix length to snapshot
+        len: usize,
+    },
+    /// Free shared segment `seg`'s storage (engine-side refcount hit
+    /// zero and the pool evicted it).  Reply-less.
+    DropPrefix {
+        /// shared segment id to free
+        seg: u32,
+    },
 }
 
 /// Replies from rank workers to the leader.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Reply {
+    /// Backend brought up; weights materialized and caches sized.
     Ready {
+        /// replying rank
         rank: usize,
         /// resident weight bytes of this rank's backend (0 = unknown)
         weight_bytes: u64,
         /// resident KV-cache bytes of this rank's backend (0 = unknown)
         kv_bytes: u64,
     },
+    /// One prefill round (whole-prompt or chunk) finished.
     PrefillDone {
+        /// replying rank
         rank: usize,
         /// µs spent in segment execution on this rank
         compute_us: u64,
@@ -80,18 +128,27 @@ pub enum Reply {
         /// merged top-k for the prefilled lane (rank 0 only)
         candidates: Option<Vec<Candidate>>,
     },
+    /// One batched decode round finished.
     StepDone {
+        /// replying rank
         rank: usize,
+        /// µs spent in segment execution on this rank
         compute_us: u64,
+        /// µs spent inside collectives on this rank
         comm_us: u64,
         /// merged per-lane top-k (rank 0 only)
         candidates: Option<Vec<Vec<Candidate>>>,
     },
+    /// KV caches and lane state cleared.
     ResetDone {
+        /// replying rank
         rank: usize,
     },
+    /// The round (or a reply-less delta command before it) failed.
     Error {
+        /// failing rank
         rank: usize,
+        /// human-readable failure chain
         message: String,
     },
 }
@@ -235,6 +292,27 @@ impl Cmd {
                 put_u32(out, *len as u32);
                 out.push(*last as u8);
             }
+            Cmd::AttachPrefix { lane, seg, shared_len, copy_len } => {
+                out.push(5);
+                put_u32(out, *lane as u32);
+                put_u32(out, *seg);
+                put_u32(out, *shared_len as u32);
+                put_u32(out, *copy_len as u32);
+            }
+            Cmd::DetachPrefix { lane } => {
+                out.push(6);
+                put_u32(out, *lane as u32);
+            }
+            Cmd::PublishPrefix { seg, lane, len } => {
+                out.push(7);
+                put_u32(out, *seg);
+                put_u32(out, *lane as u32);
+                put_u32(out, *len as u32);
+            }
+            Cmd::DropPrefix { seg } => {
+                out.push(8);
+                put_u32(out, *seg);
+            }
         }
     }
 
@@ -265,6 +343,19 @@ impl Cmd {
                     b => bail!("bad bool tag {b}"),
                 },
             },
+            5 => Cmd::AttachPrefix {
+                lane: r.usize32()?,
+                seg: r.u32()?,
+                shared_len: r.usize32()?,
+                copy_len: r.usize32()?,
+            },
+            6 => Cmd::DetachPrefix { lane: r.usize32()? },
+            7 => Cmd::PublishPrefix {
+                seg: r.u32()?,
+                lane: r.usize32()?,
+                len: r.usize32()?,
+            },
+            8 => Cmd::DropPrefix { seg: r.u32()? },
             d => bail!("unknown Cmd discriminant {d}"),
         };
         r.done()?;
@@ -421,6 +512,39 @@ mod tests {
             len: 7,
             last: false,
         });
+        roundtrip_cmd(Cmd::AttachPrefix {
+            lane: 3,
+            seg: u32::MAX,
+            shared_len: 32,
+            copy_len: 15,
+        });
+        roundtrip_cmd(Cmd::DetachPrefix { lane: 0 });
+        roundtrip_cmd(Cmd::PublishPrefix { seg: 1, lane: 2, len: 16 });
+        roundtrip_cmd(Cmd::DropPrefix { seg: 7 });
+    }
+
+    #[test]
+    fn prefix_cmds_reject_truncation_and_trailing_bytes() {
+        for cmd in [
+            Cmd::AttachPrefix {
+                lane: 1,
+                seg: 2,
+                shared_len: 16,
+                copy_len: 3,
+            },
+            Cmd::DetachPrefix { lane: 1 },
+            Cmd::PublishPrefix { seg: 2, lane: 1, len: 16 },
+            Cmd::DropPrefix { seg: 2 },
+        ] {
+            let mut buf = Vec::new();
+            cmd.encode(&mut buf);
+            for cut in 0..buf.len() {
+                assert!(Cmd::decode(&buf[..cut]).is_err(),
+                        "{cmd:?} cut at {cut}");
+            }
+            buf.push(0);
+            assert!(Cmd::decode(&buf).is_err(), "{cmd:?} trailing byte");
+        }
     }
 
     #[test]

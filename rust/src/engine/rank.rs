@@ -171,6 +171,48 @@ impl RankWorker {
                         message: format!("reset: {e:#}"),
                     },
                 },
+                // shared-prefix delta commands (DESIGN.md §13) are
+                // reply-less: silent on success, a Reply::Error on
+                // failure that the leader picks up at its next reply
+                // collection
+                Cmd::AttachPrefix { lane, seg, shared_len, copy_len } => {
+                    match self.backend.attach_prefix(lane, seg,
+                                                     shared_len,
+                                                     copy_len) {
+                        Ok(()) => continue,
+                        Err(e) => Reply::Error {
+                            rank: self.rank,
+                            message: format!("attach_prefix: {e:#}"),
+                        },
+                    }
+                }
+                Cmd::DetachPrefix { lane } => {
+                    match self.backend.detach_prefix(lane) {
+                        Ok(()) => continue,
+                        Err(e) => Reply::Error {
+                            rank: self.rank,
+                            message: format!("detach_prefix: {e:#}"),
+                        },
+                    }
+                }
+                Cmd::PublishPrefix { seg, lane, len } => {
+                    match self.backend.publish_prefix(seg, lane, len) {
+                        Ok(()) => continue,
+                        Err(e) => Reply::Error {
+                            rank: self.rank,
+                            message: format!("publish_prefix: {e:#}"),
+                        },
+                    }
+                }
+                Cmd::DropPrefix { seg } => {
+                    match self.backend.drop_prefix(seg) {
+                        Ok(()) => continue,
+                        Err(e) => Reply::Error {
+                            rank: self.rank,
+                            message: format!("drop_prefix: {e:#}"),
+                        },
+                    }
+                }
                 Cmd::Shutdown => break,
             };
             if reply_tx.send(reply).is_err() {

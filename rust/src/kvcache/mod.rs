@@ -108,6 +108,40 @@ impl KvLayer {
         }
     }
 
+    /// Copy one row (values *and* scales) from `src` — the
+    /// copy-on-write primitive of shared-prefix attach (DESIGN.md §13).
+    /// A bitwise move of already-stored content: at int8 the quantized
+    /// bytes and the row scale transfer verbatim, so a copied row is
+    /// indistinguishable from one the destination appended itself.
+    /// Panics on dtype mismatch — segments are always allocated in the
+    /// lane cache's dtype.
+    pub fn copy_row_from(&mut self, dst_row: usize, src: &KvLayer,
+                         src_row: usize, head_dim: usize) {
+        let (d, s, hd) = (dst_row, src_row, head_dim);
+        match (self, src) {
+            (KvLayer::F32 { k, v }, KvLayer::F32 { k: sk, v: sv }) => {
+                k[d * hd..(d + 1) * hd]
+                    .copy_from_slice(&sk[s * hd..(s + 1) * hd]);
+                v[d * hd..(d + 1) * hd]
+                    .copy_from_slice(&sv[s * hd..(s + 1) * hd]);
+            }
+            (
+                KvLayer::Int8 { k, v, k_scale, v_scale },
+                KvLayer::Int8 {
+                    k: sk, v: sv, k_scale: sks, v_scale: svs,
+                },
+            ) => {
+                k[d * hd..(d + 1) * hd]
+                    .copy_from_slice(&sk[s * hd..(s + 1) * hd]);
+                v[d * hd..(d + 1) * hd]
+                    .copy_from_slice(&sv[s * hd..(s + 1) * hd]);
+                k_scale[d] = sks[s];
+                v_scale[d] = svs[s];
+            }
+            _ => panic!("copy_row_from across dtypes"),
+        }
+    }
+
     /// Zero all rows (and scales) — the backend `reset` path.
     pub fn reset(&mut self) {
         match self {
@@ -273,6 +307,14 @@ impl LaneTable {
 /// Pages are *logical* here — the physical cache is dense per lane — but
 /// the accounting is exactly vLLM's: a request holding `ceil(len/page)`
 /// pages, admitted only if its worst-case need fits the pool.
+///
+/// Shared-prefix groups (DESIGN.md §13) extend the model: a *group* is
+/// a page-aligned run of prompt KV published once and attached by many
+/// lanes.  Its pages are reserved out of the same pool, refcounted by
+/// attach/release, and only return to the pool through an explicit
+/// evict at refcount zero — retirement of an attached lane can never
+/// free shared pages early.  The conservation invariant becomes
+/// `free + Σ held + Σ group pages == total`.
 #[derive(Debug)]
 pub struct PagedAllocator {
     page_size: usize,
@@ -280,6 +322,15 @@ pub struct PagedAllocator {
     free_pages: usize,
     /// pages held per lane
     held: Vec<usize>,
+    /// shared-prefix groups: id → (pages reserved, attached lanes)
+    shared: std::collections::HashMap<u32, SharedGroup>,
+}
+
+/// One shared-prefix page group's accounting record.
+#[derive(Clone, Copy, Debug)]
+struct SharedGroup {
+    pages: usize,
+    refs: usize,
 }
 
 impl PagedAllocator {
@@ -291,6 +342,7 @@ impl PagedAllocator {
             n_pages,
             free_pages: n_pages,
             held: vec![0; n_lanes],
+            shared: std::collections::HashMap::new(),
         }
     }
 
@@ -340,6 +392,233 @@ impl PagedAllocator {
     /// Pages currently reserved by `lane`.
     pub fn held_by(&self, lane: usize) -> usize {
         self.held[lane]
+    }
+
+    /// Can a request with worst-case length `max_len` be admitted when
+    /// `shared_pages` of its prefix are already resident in a shared
+    /// group?  Only the private remainder must fit.
+    pub fn can_admit_attached(&self, max_len: usize, shared_pages: usize)
+                              -> bool {
+        self.pages_for(max_len).saturating_sub(shared_pages)
+            <= self.free_pages
+    }
+
+    /// Reserve only the private remainder of a lane's worst case: the
+    /// first `shared_pages` pages ride on a shared group the caller
+    /// has attached via [`PagedAllocator::attach_shared`].
+    pub fn admit_attached(&mut self, lane: usize, max_len: usize,
+                          shared_pages: usize) -> Result<()> {
+        if lane >= self.held.len() {
+            bail!("lane {lane} out of range ({} lanes)", self.held.len());
+        }
+        let need =
+            self.pages_for(max_len).saturating_sub(shared_pages);
+        if need > self.free_pages {
+            bail!("paged allocator: need {need} private pages, have {}",
+                  self.free_pages);
+        }
+        self.free_pages -= need;
+        self.held[lane] += need;
+        Ok(())
+    }
+
+    /// Reserve `pages` pool pages as shared-prefix group `seg`,
+    /// starting at refcount zero (the prefix cache entry pins the
+    /// group's existence; lanes pin it via attach).  Errors — never
+    /// partial effects — on a duplicate id, zero pages, or a pool too
+    /// empty to hold the group.
+    pub fn publish_shared(&mut self, seg: u32, pages: usize) -> Result<()> {
+        if self.shared.contains_key(&seg) {
+            bail!("shared group {seg} already published");
+        }
+        if pages == 0 {
+            bail!("shared group {seg} must hold at least one page");
+        }
+        if pages > self.free_pages {
+            bail!("paged allocator: shared group needs {pages} pages, \
+                   have {}", self.free_pages);
+        }
+        self.free_pages -= pages;
+        self.shared.insert(seg, SharedGroup { pages, refs: 0 });
+        Ok(())
+    }
+
+    /// Attach a lane to shared group `seg` (refcount +1); returns the
+    /// group's page count so admission can size the private remainder.
+    pub fn attach_shared(&mut self, seg: u32) -> Result<usize> {
+        match self.shared.get_mut(&seg) {
+            None => bail!("attach to unknown shared group {seg}"),
+            Some(g) => {
+                g.refs += 1;
+                Ok(g.pages)
+            }
+        }
+    }
+
+    /// Detach a lane from shared group `seg` (refcount −1).  Releasing
+    /// below zero is an error — it means the engine's attach
+    /// bookkeeping double-freed a shared page, which must never pass
+    /// silently.  The group's pages stay reserved either way.
+    pub fn release_shared(&mut self, seg: u32) -> Result<()> {
+        match self.shared.get_mut(&seg) {
+            None => bail!("release of unknown shared group {seg}"),
+            Some(g) if g.refs == 0 => {
+                bail!("double free of shared group {seg}")
+            }
+            Some(g) => {
+                g.refs -= 1;
+                Ok(())
+            }
+        }
+    }
+
+    /// Return an *unreferenced* shared group's pages to the pool.
+    /// Refuses while any lane is attached — eviction must never yank
+    /// pages out from under a live reader.
+    pub fn evict_shared(&mut self, seg: u32) -> Result<()> {
+        match self.shared.get(&seg) {
+            None => bail!("evict of unknown shared group {seg}"),
+            Some(g) if g.refs > 0 => {
+                bail!("shared group {seg} still has {} attached lane(s)",
+                      g.refs)
+            }
+            Some(g) => {
+                self.free_pages += g.pages;
+                self.shared.remove(&seg);
+                debug_assert!(self.free_pages <= self.n_pages);
+                Ok(())
+            }
+        }
+    }
+
+    /// Current refcount of a shared group (`None` if unknown).
+    pub fn shared_refs(&self, seg: u32) -> Option<usize> {
+        self.shared.get(&seg).map(|g| g.refs)
+    }
+
+    /// Pages reserved by a shared group (`None` if unknown).
+    pub fn shared_pages(&self, seg: u32) -> Option<usize> {
+        self.shared.get(&seg).map(|g| g.pages)
+    }
+
+    /// Total pages reserved across all shared groups.
+    pub fn shared_pages_total(&self) -> usize {
+        self.shared.values().map(|g| g.pages).sum()
+    }
+
+    /// Number of live shared groups.
+    pub fn shared_groups(&self) -> usize {
+        self.shared.len()
+    }
+}
+
+/// A prefix-sharing match: how much of a prompt rides on segment `seg`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrefixMatch {
+    /// shared-segment id to attach to
+    pub seg: u32,
+    /// page-aligned token count read from the segment by reference
+    pub shared_len: usize,
+    /// tokens copied out of the segment into the lane's private pages
+    /// (the partial page past `shared_len` — copy-on-write up front,
+    /// so the first divergent append never lands in shared storage)
+    pub copy_len: usize,
+}
+
+/// The prefix-hash table of DESIGN.md §13: published prompt prefixes
+/// (page-aligned token runs) keyed by their token content, looked up
+/// by longest usable match.
+///
+/// The cap at `prompt_len − 1` is load-bearing: the final prompt token
+/// must always run through the model so the request produces its
+/// first-token logits — a prompt fully contained in a published prefix
+/// still prefills (at least) that last row.
+#[derive(Debug, Default)]
+pub struct PrefixCache {
+    entries: Vec<(u32, Vec<i32>)>,
+}
+
+impl PrefixCache {
+    /// An empty cache.
+    pub fn new() -> Self {
+        PrefixCache { entries: Vec::new() }
+    }
+
+    /// Register segment `seg` as holding the KV of `tokens` (must be a
+    /// non-empty multiple of `page_size` — groups are page-granular).
+    pub fn insert(&mut self, seg: u32, tokens: Vec<i32>,
+                  page_size: usize) -> Result<()> {
+        if tokens.is_empty() || tokens.len() % page_size != 0 {
+            bail!("prefix of {} tokens is not a positive multiple of \
+                   the {page_size}-token page", tokens.len());
+        }
+        if self.entries.iter().any(|(s, _)| *s == seg) {
+            bail!("segment {seg} already in the prefix cache");
+        }
+        self.entries.push((seg, tokens));
+        Ok(())
+    }
+
+    /// Longest usable match for `prompt`: over all entries, maximize
+    /// the raw common prefix `M = min(lcp, prompt_len − 1)`, and
+    /// return it split into a page-aligned by-reference part and a
+    /// copied remainder.  `None` unless at least one full page is
+    /// reusable (attaching for less costs more bookkeeping than it
+    /// saves).
+    pub fn lookup(&self, prompt: &[i32], page_size: usize)
+                  -> Option<PrefixMatch> {
+        let mut best: Option<PrefixMatch> = None;
+        for (seg, tokens) in &self.entries {
+            let lcp = tokens
+                .iter()
+                .zip(prompt.iter())
+                .take_while(|(a, b)| a == b)
+                .count();
+            let m = lcp.min(prompt.len().saturating_sub(1));
+            let shared_len = (m / page_size) * page_size;
+            if shared_len < page_size {
+                continue;
+            }
+            let cand = PrefixMatch {
+                seg: *seg,
+                shared_len,
+                copy_len: m - shared_len,
+            };
+            let better = match best {
+                None => true,
+                Some(b) => cand.shared_len + cand.copy_len
+                    > b.shared_len + b.copy_len,
+            };
+            if better {
+                best = Some(cand);
+            }
+        }
+        best
+    }
+
+    /// Would publishing `tokens` duplicate an existing entry?
+    pub fn contains_prefix(&self, tokens: &[i32]) -> bool {
+        self.entries.iter().any(|(_, t)| t == tokens)
+    }
+
+    /// Drop segment `seg` from the cache (a pool eviction).
+    pub fn remove(&mut self, seg: u32) {
+        self.entries.retain(|(s, _)| *s != seg);
+    }
+
+    /// Ids of all cached segments, in insertion (publish) order.
+    pub fn segs(&self) -> Vec<u32> {
+        self.entries.iter().map(|(s, _)| *s).collect()
+    }
+
+    /// Number of cached prefixes.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Is the cache empty?
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
     }
 }
 
@@ -597,6 +876,353 @@ mod tests {
         assert!(q.bytes() * 3 < f.bytes());
         assert_eq!(f.dtype(), Dtype::F32);
         assert_eq!(q.dtype(), Dtype::Int8);
+    }
+
+    #[test]
+    fn shared_group_publish_attach_release_cycle() {
+        let mut p = PagedAllocator::new(16, 8, 4);
+        p.publish_shared(7, 2).unwrap();
+        assert_eq!(p.free_pages(), 6);
+        assert_eq!(p.shared_refs(7), Some(0));
+        assert_eq!(p.shared_pages(7), Some(2));
+        assert_eq!(p.shared_pages_total(), 2);
+        // duplicate ids, empty groups, oversized groups: clean errors
+        assert!(p.publish_shared(7, 1).is_err());
+        assert!(p.publish_shared(8, 0).is_err());
+        assert!(p.publish_shared(9, 7).is_err());
+        // two lanes attach; each reserves only its private remainder
+        assert_eq!(p.attach_shared(7).unwrap(), 2);
+        assert!(p.can_admit_attached(64, 2)); // 4 pages − 2 shared
+        p.admit_attached(0, 64, 2).unwrap();
+        assert_eq!(p.held_by(0), 2);
+        assert_eq!(p.attach_shared(7).unwrap(), 2);
+        p.admit_attached(1, 64, 2).unwrap();
+        assert_eq!(p.free_pages(), 2);
+        // conservation with a shared group in play
+        let held: usize = (0..4).map(|l| p.held_by(l)).sum();
+        assert_eq!(held + p.free_pages() + p.shared_pages_total(),
+                   p.total_pages());
+        // retiring an attached lane releases private pages + one ref —
+        // never the shared pages themselves
+        p.release(0);
+        p.release_shared(7).unwrap();
+        assert_eq!(p.free_pages(), 4);
+        assert_eq!(p.shared_refs(7), Some(1));
+        assert!(p.evict_shared(7).is_err(), "pinned group must not evict");
+        p.release(1);
+        p.release_shared(7).unwrap();
+        p.evict_shared(7).unwrap();
+        assert_eq!(p.free_pages(), 8);
+        assert_eq!(p.shared_groups(), 0);
+    }
+
+    #[test]
+    fn shared_group_double_free_is_an_error() {
+        // satellite: double-free of a shared page group must be loud —
+        // a silently negative refcount would let eviction free pages a
+        // live lane still reads
+        let mut p = PagedAllocator::new(16, 4, 2);
+        p.publish_shared(1, 1).unwrap();
+        p.attach_shared(1).unwrap();
+        p.release_shared(1).unwrap();
+        assert!(p.release_shared(1).is_err(),
+                "refcount must not go below zero");
+        assert!(p.release_shared(99).is_err(), "unknown group");
+        // the failed releases left the group intact and evictable
+        assert_eq!(p.shared_refs(1), Some(0));
+        p.evict_shared(1).unwrap();
+        assert!(p.evict_shared(1).is_err(), "double evict");
+        assert_eq!(p.free_pages(), 4);
+    }
+
+    #[test]
+    fn exhaustion_while_prefix_pinned_sheds_cleanly() {
+        // satellite: when the pool runs dry while prefix pages are
+        // pinned, admission must shed (can_admit* false, admit* Err)
+        // without corrupting any accounting
+        let mut p = PagedAllocator::new(16, 6, 4);
+        p.publish_shared(1, 2).unwrap(); // pinned by the cache
+        p.attach_shared(1).unwrap();
+        p.admit_attached(0, 64, 2).unwrap(); // 2 private pages
+        p.admit(1, 32).unwrap(); // 2 pages → pool dry
+        assert_eq!(p.free_pages(), 0);
+        assert!(!p.can_admit(1));
+        assert!(!p.can_admit_attached(64, 2));
+        assert!(p.admit(2, 1).is_err());
+        assert!(p.admit_attached(2, 64, 2).is_err());
+        // ...and attach itself still works: it costs no new pages
+        assert_eq!(p.attach_shared(1).unwrap(), 2);
+        p.release_shared(1).unwrap();
+        // conservation held throughout
+        let held: usize = (0..4).map(|l| p.held_by(l)).sum();
+        assert_eq!(held + p.free_pages() + p.shared_pages_total(),
+                   p.total_pages());
+        // eviction is the shed path once the last reader detaches
+        p.release(0);
+        p.release_shared(1).unwrap();
+        p.evict_shared(1).unwrap();
+        assert!(p.can_admit(32));
+    }
+
+    #[test]
+    fn randomized_shared_groups_conserve_pages_property() {
+        // property: any interleaving of publish/attach/release/evict
+        // with plain admits keeps free + Σheld + Σshared == total and
+        // refcounts exact
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(0x5EED);
+        for _case in 0..40 {
+            let n_lanes = 1 + rng.next_below(4);
+            let n_pages = 6 + rng.next_below(10);
+            let mut p = PagedAllocator::new(4, n_pages, n_lanes);
+            let mut live: Vec<(usize, Option<u32>)> = Vec::new();
+            let mut free_lanes: Vec<usize> = (0..n_lanes).collect();
+            let mut refs: std::collections::HashMap<u32, usize> =
+                std::collections::HashMap::new();
+            let mut next_seg = 0u32;
+            for _ in 0..200 {
+                match rng.next_below(5) {
+                    0 if refs.len() < 3 => {
+                        let pages = 1 + rng.next_below(2);
+                        if p.publish_shared(next_seg, pages).is_ok() {
+                            refs.insert(next_seg, 0);
+                            next_seg += 1;
+                        }
+                    }
+                    1 if !live.is_empty() => {
+                        let i = rng.next_below(live.len());
+                        let (lane, seg) = live.swap_remove(i);
+                        p.release(lane);
+                        free_lanes.push(lane);
+                        if let Some(seg) = seg {
+                            p.release_shared(seg).unwrap();
+                            *refs.get_mut(&seg).unwrap() -= 1;
+                        }
+                    }
+                    2 => {
+                        // evict: must succeed iff known and unreferenced
+                        let seg = rng.next_below(next_seg as usize + 1)
+                            as u32;
+                        let ok = refs.get(&seg) == Some(&0);
+                        assert_eq!(p.evict_shared(seg).is_ok(), ok);
+                        if ok {
+                            refs.remove(&seg);
+                        }
+                    }
+                    _ if !free_lanes.is_empty() => {
+                        let lane = *free_lanes.last().unwrap();
+                        let attach = (!refs.is_empty()
+                            && rng.next_f32() < 0.5)
+                            .then(|| {
+                                let keys: Vec<u32> =
+                                    refs.keys().copied().collect();
+                                keys[rng.next_below(keys.len())]
+                            });
+                        let len = 1 + rng.next_below(n_pages * 4);
+                        match attach {
+                            Some(seg) => {
+                                let shared =
+                                    p.attach_shared(seg).unwrap();
+                                if p.admit_attached(lane, len, shared)
+                                    .is_ok()
+                                {
+                                    *refs.get_mut(&seg).unwrap() += 1;
+                                    live.push((lane, Some(seg)));
+                                    free_lanes.pop();
+                                } else {
+                                    p.release_shared(seg).unwrap();
+                                }
+                            }
+                            None => {
+                                if p.admit(lane, len).is_ok() {
+                                    live.push((lane, None));
+                                    free_lanes.pop();
+                                }
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+                let held: usize =
+                    (0..n_lanes).map(|l| p.held_by(l)).sum();
+                assert_eq!(
+                    held + p.free_pages() + p.shared_pages_total(),
+                    p.total_pages(),
+                    "page conservation violated"
+                );
+                for (seg, r) in &refs {
+                    assert_eq!(p.shared_refs(*seg), Some(*r));
+                }
+                assert_eq!(p.shared_groups(), refs.len());
+            }
+        }
+    }
+
+    #[test]
+    fn prefix_cache_longest_usable_match() {
+        let page = 16;
+        let mut c = PrefixCache::new();
+        assert!(c.is_empty());
+        let sys: Vec<i32> = (0..32).collect();
+        c.insert(1, sys.clone(), page).unwrap();
+        // shorter entry sharing the first page
+        c.insert(2, (0..16).collect(), page).unwrap();
+        assert_eq!(c.len(), 2);
+        // misaligned or empty prefixes are rejected
+        assert!(c.insert(3, vec![1; 17], page).is_err());
+        assert!(c.insert(3, vec![], page).is_err());
+        // duplicate segment ids are rejected
+        assert!(c.insert(1, vec![0; 16], page).is_err());
+
+        // a prompt extending the 32-token entry: M = 32, one partial
+        // token beyond would copy — here prompt diverges at 40
+        let mut prompt: Vec<i32> = (0..40).collect();
+        prompt[35] = -7;
+        let m = c.lookup(&prompt, page).unwrap();
+        assert_eq!(m, PrefixMatch { seg: 1, shared_len: 32, copy_len: 0 });
+
+        // divergence mid-page: lcp 20 → 16 by reference + 4 copied
+        let mut d: Vec<i32> = (0..40).collect();
+        d[20] = -1;
+        assert_eq!(c.lookup(&d, page).unwrap(),
+                   PrefixMatch { seg: 1, shared_len: 16, copy_len: 4 });
+
+        // the last prompt token never attaches: an exactly-matching
+        // 32-token prompt caps at M = 31 → 16 shared + 15 copied
+        assert_eq!(c.lookup(&sys, page).unwrap(),
+                   PrefixMatch { seg: 1, shared_len: 16, copy_len: 15 });
+
+        // under one page of match → None
+        assert!(c.lookup(&sys[..10], page).is_none());
+        let unrelated: Vec<i32> = (100..140).collect();
+        assert!(c.lookup(&unrelated, page).is_none());
+
+        // removal (pool eviction) drops the entry
+        assert!(c.contains_prefix(&sys));
+        c.remove(1);
+        assert!(!c.contains_prefix(&sys));
+        assert_eq!(c.segs(), vec![2]);
+    }
+
+    /// Canonical byte image of a layer, for bit-level comparisons.
+    fn layer_image(l: &KvLayer) -> Vec<u8> {
+        let mut img = Vec::new();
+        match l {
+            KvLayer::F32 { k, v } => {
+                for x in k.iter().chain(v.iter()) {
+                    img.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+            KvLayer::Int8 { k, v, k_scale, v_scale } => {
+                img.extend(k.iter().map(|b| *b as u8));
+                img.extend(v.iter().map(|b| *b as u8));
+                for x in k_scale.iter().chain(v_scale.iter()) {
+                    img.extend_from_slice(&x.to_bits().to_le_bytes());
+                }
+            }
+        }
+        img
+    }
+
+    #[test]
+    fn cow_copy_under_concurrent_lane_appends_via_disjoint_slices() {
+        // satellite: copy-on-write must compose with the blocked
+        // kernel's concurrency model — pool workers appending to
+        // *different* rows of the same planes through DisjointSlices
+        // while copied shared rows keep their exact bytes.  The
+        // threaded run must match the serial run bit-for-bit at both
+        // dtypes.
+        use crate::backend::pool::DisjointSlices;
+        use crate::backend::quant::quant_row_into;
+        let hd = 8;
+        let rows = 32;
+        let krow_for = |row: usize| -> Vec<f32> {
+            (0..hd).map(|i| ((row * 31 + i) % 17) as f32 * 0.1).collect()
+        };
+        let vrow_for = |row: usize| -> Vec<f32> {
+            (0..hd).map(|i| ((row * 13 + i) % 11) as f32 * -0.2).collect()
+        };
+        for dtype in [Dtype::F32, Dtype::Int8] {
+            // a 16-row shared segment (one page of prompt KV)
+            let mut shared = KvLayer::new(dtype, 16, hd);
+            for r in 0..16 {
+                shared.append_row(r, (&krow_for(r), &vrow_for(r)));
+            }
+            // the copied rows must be bit-identical to rows the lane
+            // would have appended itself (quantize-once property)
+            let mut direct = KvLayer::new(dtype, 16, hd);
+            for r in 0..16 {
+                direct.append_row(r, (&krow_for(r), &vrow_for(r)));
+            }
+            assert_eq!(layer_image(&shared), layer_image(&direct));
+
+            // serial reference: COW copy + appends past the page
+            let mut serial = KvLayer::new(dtype, rows, hd);
+            for r in 0..16 {
+                serial.copy_row_from(r, &shared, r, hd);
+            }
+            for r in 16..rows {
+                serial.append_row(r, (&krow_for(r), &vrow_for(r)));
+            }
+
+            // threaded: same copies, then 4 threads append disjoint
+            // row spans through DisjointSlices
+            let mut lane = KvLayer::new(dtype, rows, hd);
+            for r in 0..16 {
+                lane.copy_row_from(r, &shared, r, hd);
+            }
+            match &mut lane {
+                KvLayer::F32 { k, v } => {
+                    let ks = DisjointSlices::new(k);
+                    let vs = DisjointSlices::new(v);
+                    std::thread::scope(|scope| {
+                        for t in 0..4 {
+                            let (ks, vs) = (&ks, &vs);
+                            let (kf, vf) = (&krow_for, &vrow_for);
+                            scope.spawn(move || {
+                                for r in
+                                    (16 + t * 4)..(16 + (t + 1) * 4)
+                                {
+                                    unsafe { ks.slice(r * hd, hd) }
+                                        .copy_from_slice(&kf(r));
+                                    unsafe { vs.slice(r * hd, hd) }
+                                        .copy_from_slice(&vf(r));
+                                }
+                            });
+                        }
+                    });
+                }
+                KvLayer::Int8 { k, v, k_scale, v_scale } => {
+                    let ks = DisjointSlices::new(k);
+                    let vs = DisjointSlices::new(v);
+                    let kss = DisjointSlices::new(k_scale);
+                    let vss = DisjointSlices::new(v_scale);
+                    std::thread::scope(|scope| {
+                        for t in 0..4 {
+                            let (ks, vs) = (&ks, &vs);
+                            let (kss, vss) = (&kss, &vss);
+                            let (kf, vf) = (&krow_for, &vrow_for);
+                            scope.spawn(move || {
+                                for r in
+                                    (16 + t * 4)..(16 + (t + 1) * 4)
+                                {
+                                    let kd =
+                                        unsafe { ks.slice(r * hd, hd) };
+                                    let vd =
+                                        unsafe { vs.slice(r * hd, hd) };
+                                    unsafe { kss.slice(r, 1) }[0] =
+                                        quant_row_into(&kf(r), kd);
+                                    unsafe { vss.slice(r, 1) }[0] =
+                                        quant_row_into(&vf(r), vd);
+                                }
+                            });
+                        }
+                    });
+                }
+            }
+            assert_eq!(layer_image(&serial), layer_image(&lane),
+                       "COW + concurrent appends diverged at {dtype}");
+        }
     }
 
     #[test]

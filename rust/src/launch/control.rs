@@ -37,7 +37,12 @@ use crate::engine::proto::{self, Cmd, Reply, WireReader};
 /// v3: new `Cmd::PrefillChunk` (chunked prefill rounds, DESIGN.md
 /// §12) — a v2 worker cannot decode the chunk command, so mixed
 /// fleets are refused at registration.
-pub const PROTO_VERSION: u32 = 3;
+///
+/// v4: new reply-less shared-prefix delta commands
+/// (`Cmd::AttachPrefix`/`DetachPrefix`/`PublishPrefix`/`DropPrefix`,
+/// DESIGN.md §13) and the `scheduler` config key — a v3 worker can
+/// decode neither, so mixed fleets are refused at registration.
+pub const PROTO_VERSION: u32 = 4;
 
 /// How often an idle worker proves liveness to the coordinator.
 pub const HEARTBEAT_PERIOD: Duration = Duration::from_secs(2);

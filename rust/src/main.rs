@@ -50,19 +50,24 @@ on --addr.  With --spawn-workers true the coordinator forks the
 workers itself (single-machine convenience; CI smoke path starts them
 explicitly).
 
-bench runs the recording suite (DESIGN.md \u{a7}10-\u{a7}12): the
+bench runs the recording suite (DESIGN.md \u{a7}10-\u{a7}13): the
 standard scenarios (single-stream / batched decode, prefill-heavy,
-mixed, long-prompt interactive) per world size, on the blocked kernel
-plus the scalar batched-decode baseline, int8 weights+KV decode rows,
-and the chunked-prefill decode-stall pair, and writes the
+mixed, long-prompt interactive, shared-prefix storm) per world size,
+on the blocked kernel plus the scalar batched-decode baseline, int8
+weights+KV decode rows, the chunked-prefill decode-stall pair, and
+the fcfs-vs-continuous shared_prefix_storm pair, and writes the
 xeonserve-bench/v1 JSON (--json) that BENCH_*.json files in the repo
 are recorded with — every row carries its weight/KV dtype, prefill
-chunk size, and measured resident bytes.  --validate schema-checks
-such a file and exits.  Serving knobs live in the TOML: weight_dtype /
-kv_dtype = \"int8\" (reference backend only) and prefill_chunk = N
-(0 = whole-prompt; chunked prefill, reference backend only).  The
-serve/launch JSON API streams per-token reply frames when a request
-carries \"stream\": true.
+chunk size, scheduler, prefix hit rate, and measured resident bytes.
+--validate schema-checks such a file and exits; every failure names
+the validator rule and row that tripped it.  Serving knobs live in
+the TOML: weight_dtype / kv_dtype = \"int8\" (reference backend
+only), prefill_chunk = N (0 = whole-prompt; chunked prefill,
+reference backend only), and scheduler = \"fcfs\" | \"continuous\"
+(continuous batching + copy-on-write shared-prefix KV reuse,
+reference backend only).  The serve/launch JSON API streams per-token
+reply frames when a request carries \"stream\": true, and
+{\"cancel\": id} aborts an in-flight request idempotently.
 
 Without --config the built-in default is used (tiny model, world=2,
 all paper optimizations ON).  See configs/*.toml for presets.";
@@ -239,6 +244,17 @@ fn run_bench(args: &Args) -> Result<()> {
             println!(
                 "long_prompt_interactive w{w}: whole-prompt decode-\
                  stall p99 is {s:.2}x the chunked row's (DESIGN.md §12)"
+            );
+        }
+        if let (Some(f), Some(c)) = (suite::storm_row(&doc, w, "fcfs"),
+                                     suite::storm_row(&doc, w,
+                                                      "continuous"))
+        {
+            println!(
+                "shared_prefix_storm w{w}: continuous ttft {:.2} ms \
+                 vs fcfs {:.2} ms, prefix hit rate {:.2} \
+                 (DESIGN.md §13)",
+                c.0, f.0, c.2
             );
         }
     }

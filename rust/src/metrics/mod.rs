@@ -157,6 +157,11 @@ pub struct RunMetrics {
     pub tokens_out: u64,
     /// requests fully retired
     pub requests_done: u64,
+    /// admissions that attached to a shared KV prefix (DESIGN.md §13)
+    pub prefix_hits: u64,
+    /// admissions that found no reusable prefix (includes every
+    /// admission under the fcfs scheduler, which never shares)
+    pub prefix_misses: u64,
 }
 
 impl RunMetrics {
@@ -175,6 +180,17 @@ impl RunMetrics {
     /// Record one inter-decode-round gap (the decode-stall sample).
     pub fn record_decode_gap(&mut self, gap: Duration) {
         self.decode_gap.record(gap);
+    }
+
+    /// Fraction of admissions that reused a shared prefix, in `[0, 1]`
+    /// (0.0 when nothing was admitted — the documented sentinel the
+    /// bench schema carries for non-sharing rows).
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.prefix_hits as f64 / total as f64
     }
 
     /// tokens/s over a measured span.
@@ -288,6 +304,17 @@ mod tests {
         m.record_decode_gap(Duration::from_micros(900));
         assert_eq!(m.decode_gap.count(), 2);
         assert_eq!(m.decode_gap.p99_us(), 900);
+    }
+
+    #[test]
+    fn prefix_hit_rate_is_a_safe_ratio() {
+        let mut m = RunMetrics::default();
+        assert_eq!(m.prefix_hit_rate(), 0.0, "no admissions → 0.0");
+        m.prefix_misses = 3;
+        m.prefix_hits = 1;
+        assert!((m.prefix_hit_rate() - 0.25).abs() < 1e-12);
+        m.prefix_hits = 0;
+        assert_eq!(m.prefix_hit_rate(), 0.0);
     }
 
     #[test]

@@ -79,6 +79,18 @@ impl PrefillCursor {
         PrefillCursor { total: total.max(1), chunk, cursor: 0 }
     }
 
+    /// A cursor that starts mid-prompt: spans tile `[start, total)`
+    /// (DESIGN.md §13 — a request attached to a shared prefix only
+    /// prefills its suffix past the reused positions).  `start` is
+    /// clamped into `[0, total)` so at least one row always runs: the
+    /// final prompt token must pass through the model to produce the
+    /// first-token logits even when the whole prompt matched a prefix.
+    pub fn new_at(total: usize, chunk: usize, start: usize)
+                  -> PrefillCursor {
+        let total = total.max(1);
+        PrefillCursor { total, chunk, cursor: start.min(total - 1) }
+    }
+
     /// The effective chunk size (whole-prompt mode steps by `total`).
     fn step(&self) -> usize {
         if self.chunk == 0 {
@@ -236,6 +248,154 @@ impl FcfsScheduler {
     /// Note that a decode round ran (resets the burst counter).
     pub fn on_decode_round(&mut self) {
         self.burst = 0;
+    }
+}
+
+/// Continuous-batching admission (DESIGN.md §13): a plain FCFS queue
+/// with **no** prefill-burst guard — every probe hands out the next
+/// queued request, so a lane freed by retirement is refilled on the
+/// very next engine step instead of waiting for a bucket to drain.
+///
+/// Decode-starvation protection moves down a level: with chunked
+/// prefill the engine interleaves chunk rounds with decode rounds
+/// anyway, and with whole-prompt prefill a single admission stalls
+/// decodes for exactly one round — the same bound `FcfsScheduler::new
+/// (1)` enforces.
+#[derive(Debug)]
+pub struct ContinuousScheduler {
+    queue: VecDeque<QueuedRequest>,
+    next_id: u64,
+}
+
+impl ContinuousScheduler {
+    /// An empty continuous admission queue.
+    pub fn new() -> Self {
+        ContinuousScheduler { queue: VecDeque::new(), next_id: 0 }
+    }
+
+    /// Queue a request; returns its scheduler id.
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(QueuedRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            arrived: Instant::now(),
+        });
+        id
+    }
+
+    /// Queued (not yet admitted) requests.
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Is the admission queue empty?
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// How long the oldest queued request has been waiting.
+    pub fn oldest_wait(&self) -> Option<Duration> {
+        self.queue.front().map(|q| q.arrived.elapsed())
+    }
+
+    /// Next request to admit — always the queue head, decodes pending
+    /// or not: continuous admission never yields while capacity exists
+    /// (capacity itself is the engine's lane/page check).
+    pub fn next_admission(&mut self, _decodes_pending: bool)
+                          -> Option<QueuedRequest> {
+        self.queue.pop_front()
+    }
+
+    /// Decode-round notification — a no-op (there is no burst counter).
+    pub fn on_decode_round(&mut self) {}
+}
+
+impl Default for ContinuousScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Policy-selected admission queue: the [`FcfsScheduler`] /
+/// [`ContinuousScheduler`] pair behind one surface, so the server can
+/// switch on [`crate::config::SchedulerKind`] without duplicating its
+/// event loop.
+#[derive(Debug)]
+pub enum AdmissionQueue {
+    /// Bounded-burst FCFS (the classic path).
+    Fcfs(FcfsScheduler),
+    /// Per-step continuous admission.
+    Continuous(ContinuousScheduler),
+}
+
+impl AdmissionQueue {
+    /// Build the queue a config asks for.  `max_prefill_burst` and
+    /// `prefill_chunk` parameterize the FCFS burst guard; continuous
+    /// admission ignores both.
+    pub fn for_kind(kind: crate::config::SchedulerKind,
+                    max_prefill_burst: usize, prefill_chunk: usize)
+                    -> AdmissionQueue {
+        match kind {
+            crate::config::SchedulerKind::Fcfs => AdmissionQueue::Fcfs(
+                FcfsScheduler::with_chunking(max_prefill_burst,
+                                             prefill_chunk)),
+            crate::config::SchedulerKind::Continuous => {
+                AdmissionQueue::Continuous(ContinuousScheduler::new())
+            }
+        }
+    }
+
+    /// Queue a request; returns its scheduler id.
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new_tokens: usize) -> u64 {
+        match self {
+            AdmissionQueue::Fcfs(s) => s.submit(prompt, max_new_tokens),
+            AdmissionQueue::Continuous(s) => {
+                s.submit(prompt, max_new_tokens)
+            }
+        }
+    }
+
+    /// Queued (not yet admitted) requests.
+    pub fn len(&self) -> usize {
+        match self {
+            AdmissionQueue::Fcfs(s) => s.len(),
+            AdmissionQueue::Continuous(s) => s.len(),
+        }
+    }
+
+    /// Is the admission queue empty?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// How long the oldest queued request has been waiting.
+    pub fn oldest_wait(&self) -> Option<Duration> {
+        match self {
+            AdmissionQueue::Fcfs(s) => s.oldest_wait(),
+            AdmissionQueue::Continuous(s) => s.oldest_wait(),
+        }
+    }
+
+    /// Next request to admit under the selected policy.
+    pub fn next_admission(&mut self, decodes_pending: bool)
+                          -> Option<QueuedRequest> {
+        match self {
+            AdmissionQueue::Fcfs(s) => s.next_admission(decodes_pending),
+            AdmissionQueue::Continuous(s) => {
+                s.next_admission(decodes_pending)
+            }
+        }
+    }
+
+    /// Note that a decode round ran.
+    pub fn on_decode_round(&mut self) {
+        match self {
+            AdmissionQueue::Fcfs(s) => s.on_decode_round(),
+            AdmissionQueue::Continuous(s) => s.on_decode_round(),
+        }
     }
 }
 
@@ -506,6 +666,86 @@ mod tests {
         assert!(w2 >= w1, "head wait must be monotone");
         s.next_admission(false).unwrap();
         assert!(s.oldest_wait().is_none());
+    }
+
+    #[test]
+    fn continuous_never_yields_to_decode_pressure() {
+        // the defining difference from FCFS: with decodes pending, the
+        // continuous queue hands out every request back-to-back — the
+        // engine's lane/page capacity is the only admission gate
+        let mut s = ContinuousScheduler::new();
+        for i in 0..8 {
+            s.submit(vec![i], 1);
+        }
+        assert_eq!(s.len(), 8);
+        assert!(s.oldest_wait().is_some());
+        let mut prev = None;
+        for _ in 0..8 {
+            let q = s.next_admission(true).expect("must never yield");
+            if let Some(p) = prev {
+                assert!(q.id > p, "FCFS order must be preserved");
+            }
+            prev = Some(q.id);
+        }
+        assert!(s.is_empty());
+        assert!(s.next_admission(true).is_none());
+        assert!(s.oldest_wait().is_none());
+        s.on_decode_round(); // no-op, must not panic
+    }
+
+    #[test]
+    fn admission_queue_dispatches_by_kind() {
+        use crate::config::SchedulerKind;
+        // fcfs: burst bound 1 forces a yield under decode pressure
+        let mut f = AdmissionQueue::for_kind(SchedulerKind::Fcfs, 1, 0);
+        f.submit(vec![1], 1);
+        f.submit(vec![2], 1);
+        assert_eq!(f.len(), 2);
+        assert!(f.next_admission(true).is_some());
+        assert!(f.next_admission(true).is_none(), "fcfs must yield");
+        f.on_decode_round();
+        assert!(f.next_admission(true).is_some());
+        assert!(f.is_empty());
+        // continuous: same bound parameter is ignored — no yield
+        let mut c =
+            AdmissionQueue::for_kind(SchedulerKind::Continuous, 1, 0);
+        c.submit(vec![1], 1);
+        c.submit(vec![2], 1);
+        assert!(c.oldest_wait().is_some());
+        assert!(c.next_admission(true).is_some());
+        assert!(c.next_admission(true).is_some(),
+                "continuous must not yield");
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn cursor_new_at_tiles_the_suffix() {
+        // spans of a suffix cursor tile [start, total) exactly
+        for total in 1..=40usize {
+            for chunk in 0..=9usize {
+                for start in 0..=total {
+                    let mut c = PrefillCursor::new_at(total, chunk, start);
+                    let mut next = start.min(total - 1);
+                    assert_eq!(c.position(), next);
+                    while let Some(s) = c.next_chunk() {
+                        assert_eq!(s.start, next);
+                        assert!(s.len >= 1);
+                        if chunk > 0 {
+                            assert!(s.len <= chunk);
+                        }
+                        next = s.start + s.len;
+                        assert_eq!(s.last, next == total);
+                    }
+                    assert_eq!(next, total);
+                    assert!(c.done());
+                }
+            }
+        }
+        // start == total clamps so the final token still runs: a fully
+        // matched prompt must still produce first-token logits
+        let mut c = PrefillCursor::new_at(8, 4, 8);
+        assert_eq!(c.next_chunk(),
+                   Some(ChunkSpan { start: 7, len: 1, last: true }));
     }
 
     #[test]

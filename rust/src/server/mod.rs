@@ -36,6 +36,19 @@
 //! ← {"stats": {"active": 1, "pending": 0, "free_lanes": 1, ...}}
 //! ```
 //!
+//! `{"cancel": id}` cancels a request by the id its frames carry.  The
+//! surface is idempotent: cancelling an id that is unknown, already
+//! finished, or already cancelled answers a clean `{"error": ...}` line
+//! — never a protocol wedge — and a successful cancel answers
+//! `{"cancelled": id}`:
+//!
+//! ```text
+//! → {"cancel": 3}
+//! ← {"cancelled": 3}
+//! → {"cancel": 3}
+//! ← {"error": "cancel: unknown or already finished request id 3"}
+//! ```
+//!
 //! Threading: the engine is not `Send` (PJRT buffers are thread-local),
 //! so it runs on a dedicated thread; connection threads submit jobs over
 //! a channel and block on per-job reply channels.  This mirrors the
@@ -54,7 +67,7 @@ use anyhow::{Context, Result};
 
 use crate::config::EngineConfig;
 use crate::engine::Engine;
-use crate::scheduler::FcfsScheduler;
+use crate::scheduler::AdmissionQueue;
 use crate::tokenizer::Tokenizer;
 use crate::util::Json;
 
@@ -72,6 +85,10 @@ pub struct ApiRequest {
     /// (lane/page occupancy + serving counters) instead of generating;
     /// `prompt` may be omitted
     pub stats: bool,
+    /// cancel the request with this engine id instead of generating;
+    /// `prompt` may be omitted.  Idempotent at the API surface: an
+    /// unknown/finished id answers a clean error line
+    pub cancel: Option<u64>,
 }
 
 impl ApiRequest {
@@ -107,16 +124,29 @@ impl ApiRequest {
                 .as_bool()
                 .context("stats must be a boolean (true|false)")?,
         };
+        let cancel = match j.get("cancel") {
+            None => None,
+            Some(v) => {
+                let n = v.as_f64().context(
+                    "cancel must be a non-negative integer request id")?;
+                anyhow::ensure!(
+                    n.fract() == 0.0 && (0.0..=1e18).contains(&n),
+                    "cancel must be a non-negative integer request id, \
+                     got {n}"
+                );
+                Some(n as u64)
+            }
+        };
         let prompt = match j.get("prompt") {
             Some(v) => v
                 .as_str()
                 .context("prompt must be a string")?
                 .to_string(),
-            // a pure stats probe needs no prompt
-            None if stats => String::new(),
+            // pure stats/cancel probes need no prompt
+            None if stats || cancel.is_some() => String::new(),
             None => anyhow::bail!("missing JSON key \"prompt\""),
         };
-        Ok(ApiRequest { prompt, max_new_tokens, stream, stats })
+        Ok(ApiRequest { prompt, max_new_tokens, stream, stats, cancel })
     }
 }
 
@@ -180,6 +210,13 @@ pub fn error_json(msg: &str) -> String {
     Json::Obj(m).to_string()
 }
 
+/// The `{"cancelled": id}` acknowledgement of a successful cancel.
+pub fn cancelled_json(id: u64) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("cancelled".to_string(), Json::Num(id as f64));
+    Json::Obj(m).to_string()
+}
+
 /// One reply frame flowing from the engine thread to a connection
 /// thread; everything but `Token` terminates the request.
 enum Frame {
@@ -208,8 +245,12 @@ fn stats_json(engine: &Engine, queued: usize) -> String {
     put("free_lanes", engine.free_lanes() as f64);
     put("free_pages", engine.free_pages() as f64);
     put("total_pages", engine.total_pages() as f64);
+    put("shared_pages", engine.shared_pages() as f64);
+    put("shared_groups", engine.shared_groups() as f64);
     put("requests_done", engine.metrics.requests_done as f64);
     put("tokens_out", engine.metrics.tokens_out as f64);
+    put("prefix_hits", engine.metrics.prefix_hits as f64);
+    put("prefix_misses", engine.metrics.prefix_misses as f64);
     let mut m = BTreeMap::new();
     m.insert("stats".to_string(), Json::Obj(s));
     Json::Obj(m).to_string()
@@ -228,15 +269,17 @@ struct Waiter {
     stream: bool,
 }
 
-/// Engine thread: admits jobs through the FCFS scheduler, steps the
-/// engine (continuous batching happens inside), streams per-token
+/// Engine thread: admits jobs through the config-selected admission
+/// queue (FCFS burst guard or continuous — DESIGN.md §13), steps the
+/// engine (lane-granular batching happens inside), streams per-token
 /// frames to streaming clients, and answers completions.  A streaming
 /// client whose connection died (token frame undeliverable) gets its
 /// request cancelled in the same step — the lane and KV pages free
 /// immediately instead of decoding to max_new for nobody.
 fn engine_loop(mut engine: Engine, jobs: Receiver<Job>) -> Result<()> {
     let tok = Tokenizer::byte_level(engine.preset().vocab)?;
-    let mut sched = FcfsScheduler::with_chunking(
+    let mut sched = AdmissionQueue::for_kind(
+        engine.config().scheduler,
         engine.config().batch.max(1),
         engine.config().prefill_chunk,
     );
@@ -268,6 +311,26 @@ fn engine_loop(mut engine: Engine, jobs: Receiver<Job>) -> Result<()> {
                     // introspection: answer immediately, nothing queued
                     let _ = job.respond.send(Frame::Raw(
                         stats_json(&engine, sched.len())));
+                }
+                Some(job) if job.req.cancel.is_some() => {
+                    // idempotent control surface: a cancel can never
+                    // wedge the connection — unknown/finished ids are a
+                    // clean error line, found ids an acknowledgement
+                    let id = job.req.cancel.unwrap();
+                    let line = match engine.cancel(id) {
+                        Ok(true) => {
+                            if let Some(w) = waiting.remove(&id) {
+                                let _ = w.tx.send(
+                                    Frame::Error("cancelled".into()));
+                            }
+                            cancelled_json(id)
+                        }
+                        Ok(false) => error_json(&format!(
+                            "cancel: unknown or already finished \
+                             request id {id}")),
+                        Err(e) => error_json(&format!("cancel: {e:#}")),
+                    };
+                    let _ = job.respond.send(Frame::Raw(line));
                 }
                 Some(job) => {
                     let sid = sched.submit(tok.encode(&job.req.prompt),
@@ -571,5 +634,100 @@ mod tests {
     fn error_json_is_valid() {
         let j = Json::parse(&error_json("boom \"quoted\"")).unwrap();
         assert!(j.get("error").unwrap().as_str().unwrap().contains("boom"));
+    }
+
+    #[test]
+    fn cancel_field_is_strictly_typed_and_needs_no_prompt() {
+        let c = ApiRequest::parse(r#"{"cancel": 3}"#).unwrap();
+        assert_eq!(c.cancel, Some(3));
+        assert!(c.prompt.is_empty());
+        let c = ApiRequest::parse(r#"{"cancel": 0}"#).unwrap();
+        assert_eq!(c.cancel, Some(0));
+        // absent on ordinary requests
+        let r = ApiRequest::parse(r#"{"prompt": "x"}"#).unwrap();
+        assert_eq!(r.cancel, None);
+        // non-integers and negatives are clean errors, never coercions
+        for bad in [
+            r#"{"cancel": "3"}"#,
+            r#"{"cancel": 3.5}"#,
+            r#"{"cancel": -1}"#,
+            r#"{"cancel": true}"#,
+            r#"{"cancel": null}"#,
+            r#"{"cancel": [3]}"#,
+        ] {
+            let e = ApiRequest::parse(bad);
+            assert!(e.is_err(), "accepted {bad}");
+            assert!(format!("{:#}", e.unwrap_err()).contains("cancel"),
+                    "error should name the bad field for {bad}");
+        }
+        let j = Json::parse(&cancelled_json(7)).unwrap();
+        assert_eq!(j.get("cancelled").unwrap().as_u64(), Some(7));
+    }
+
+    /// Satellite: seeded random-JSON fuzz of [`ApiRequest::parse`].
+    /// Every input must yield either a valid request or a clean JSON
+    /// error — never a panic (the `#[test]` harness turns any panic
+    /// into a failure) — and accepted requests must satisfy the field
+    /// invariants the parser promises.
+    #[test]
+    fn parse_never_panics_on_seeded_random_json() {
+        use crate::util::SplitMix64;
+
+        let mut rng = SplitMix64::new(0x5EED_F00D);
+        // weighted token soup: structural JSON fragments, the real
+        // field names, junk identifiers, numbers (incl. extremes),
+        // strings with escapes, and raw garbage bytes
+        let atoms: &[&str] = &[
+            "{", "}", "[", "]", ":", ",", "\"", "\\",
+            "\"prompt\"", "\"max_new_tokens\"", "\"stream\"",
+            "\"stats\"", "\"cancel\"", "\"bogus\"",
+            "true", "false", "null",
+            "0", "1", "-1", "4.5", "1e99", "-1e99", "1e400", "NaN",
+            "\"hi\"", "\"\\u0041\"", "\"\\q\"", "\"unterminated",
+            "\u{7f}", "\u{e9}", " ", "\t",
+        ];
+        let mut checked = 0usize;
+        for _ in 0..4000 {
+            let n = (rng.next_u64() % 12) as usize;
+            let mut line = String::new();
+            for _ in 0..n {
+                line.push_str(
+                    atoms[(rng.next_u64() as usize) % atoms.len()]);
+            }
+            if let Ok(req) = ApiRequest::parse(&line) {
+                // parser contract: accepted requests are internally
+                // consistent — a prompt-less accept must be a
+                // stats/cancel probe, budgets are bounded
+                assert!(req.max_new_tokens <= 1_000_000_000,
+                        "unbounded budget from {line:?}");
+                if req.prompt.is_empty() {
+                    // empty prompt is fine only via the probe paths or
+                    // an explicit "" prompt
+                    assert!(req.stats
+                                || req.cancel.is_some()
+                                || line.contains("\"prompt\""),
+                            "prompt-less accept from {line:?}");
+                }
+                checked += 1;
+            }
+        }
+        // structured inputs too: every field set to every atom type
+        for field in
+            ["prompt", "max_new_tokens", "stream", "stats", "cancel"]
+        {
+            for val in [
+                "0", "16", "-3", "2.5", "true", "false", "null",
+                "\"x\"", "[1]", "{\"a\":1}", "1e99",
+            ] {
+                let line = format!("{{\"{field}\": {val}}}");
+                let _ = ApiRequest::parse(&line); // must not panic
+                let line = format!(
+                    "{{\"prompt\": \"p\", \"{field}\": {val}}}");
+                let _ = ApiRequest::parse(&line); // must not panic
+            }
+        }
+        // the soup should occasionally assemble something valid — if
+        // not, the generator rotted and the fuzz is vacuous
+        let _ = checked;
     }
 }

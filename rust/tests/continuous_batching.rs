@@ -1,0 +1,386 @@
+//! Batch-composition invariance suite (DESIGN.md §13): continuous
+//! batching changes *which lanes share a step* — requests join and
+//! retire every step instead of waiting for a fixed bucket — and
+//! copy-on-write shared-prefix reuse changes *where KV rows live*,
+//! but neither may change what is computed.  Every lane's logits
+//! depend only on its own token stream, so greedy decodes must be
+//! BIT-IDENTICAL whether a request runs alone, inside a full batch,
+//! or joins mid-flight; whether its prefix KV is private or attached
+//! to a shared segment; and across world sizes, dtypes, and both
+//! admission schedulers.  This file is that claim's pin, plus the
+//! resource-conservation properties (lanes, pages, refcounts) under
+//! random join/leave/cancel schedules.
+
+use xeonserve::config::{BackendKind, Dtype, EngineConfig, SchedulerKind,
+                        WeightSource};
+use xeonserve::engine::Engine;
+use xeonserve::util::SplitMix64;
+
+fn cfg(world: usize, batch: usize, dtype: Dtype, sched: SchedulerKind)
+       -> EngineConfig {
+    EngineConfig {
+        model: "tiny".into(),
+        backend: BackendKind::Reference,
+        world,
+        batch,
+        weight_dtype: dtype,
+        kv_dtype: dtype,
+        scheduler: sched,
+        weights: WeightSource::Synthetic { seed: 0xC0FFEE },
+        ..Default::default()
+    }
+}
+
+/// Prompts short enough that the fcfs bucket path (tiny's single
+/// 16-token bucket) never truncates — the cross-scheduler cells of
+/// the matrix compare exact equals.
+fn short_prompts() -> Vec<Vec<i32>> {
+    vec![
+        vec![10, 20, 30, 40, 50, 60, 70, 80, 90, 100, 110],
+        vec![7, 7, 7],
+        vec![1, 2, 3, 4, 5, 6, 7, 8],
+        vec![99, 3, 55, 4, 120, 6, 31, 8, 2, 11, 5, 44, 9, 14],
+    ]
+}
+
+/// Run each prompt ALONE (batch 1, world 1, fcfs) — the composition-
+/// free reference every matrix cell must reproduce.
+fn alone_tokens(dtype: Dtype, prompts: &[Vec<i32>], n_new: usize)
+                -> Vec<Vec<i32>> {
+    prompts
+        .iter()
+        .map(|p| {
+            let mut e = Engine::new(cfg(1, 1, dtype,
+                                        SchedulerKind::Fcfs))
+                .unwrap();
+            e.generate(std::slice::from_ref(p), n_new).unwrap()
+                .pop()
+                .unwrap()
+        })
+        .collect()
+}
+
+// ---- the acceptance matrix ---------------------------------------------
+
+/// Headline gate: greedy decode bit-identical alone vs. full batch,
+/// across worlds {1, 2, 4} × dtypes {f32, int8} × both schedulers.
+/// The batch runs at 2 lanes over 4 requests, so the scheduler
+/// retires and refills lanes mid-run — every composition the engine
+/// can produce must match the alone reference token for token.
+#[test]
+fn batch_composition_invariance_matrix() {
+    let prompts = short_prompts();
+    for dtype in [Dtype::F32, Dtype::Int8] {
+        let golden = alone_tokens(dtype, &prompts, 8);
+        assert!(golden.iter().all(|t| !t.is_empty()));
+        for world in [1usize, 2, 4] {
+            for sched in [SchedulerKind::Fcfs,
+                          SchedulerKind::Continuous] {
+                let mut e =
+                    Engine::new(cfg(world, 2, dtype, sched)).unwrap();
+                let got = e.generate(&prompts, 8).unwrap();
+                assert_eq!(
+                    got, golden,
+                    "{dtype:?} world={world} {sched}: batched run \
+                     diverged from the alone reference"
+                );
+            }
+        }
+    }
+}
+
+/// A request joining MID-FLIGHT — while another stream is already
+/// decoding — must emit the same tokens as when it has the engine to
+/// itself, and must not perturb the stream it joined.
+#[test]
+fn mid_flight_join_is_bit_invariant() {
+    let a = vec![10i32, 20, 30, 40, 50, 60, 70];
+    let b = vec![5i32, 4, 3, 2, 1];
+    for dtype in [Dtype::F32, Dtype::Int8] {
+        let golden = alone_tokens(dtype, &[a.clone(), b.clone()], 8);
+        for world in [1usize, 2] {
+            for sched in [SchedulerKind::Fcfs,
+                          SchedulerKind::Continuous] {
+                let mut e =
+                    Engine::new(cfg(world, 2, dtype, sched)).unwrap();
+                let ida = e.enqueue(a.clone(), 8);
+                // a few steps: A is admitted, prefilled, and decoding
+                for _ in 0..3 {
+                    e.step().unwrap();
+                }
+                let idb = e.enqueue(b.clone(), 8);
+                let mut done = e.run_to_completion().unwrap();
+                done.sort_by_key(|c| c.request_id);
+                assert_eq!(done.len(), 2);
+                assert_eq!(done[0].request_id, ida);
+                assert_eq!(done[1].request_id, idb);
+                assert_eq!(done[0].tokens, golden[0],
+                           "{dtype:?} w{world} {sched}: joined-into \
+                            stream perturbed");
+                assert_eq!(done[1].tokens, golden[1],
+                           "{dtype:?} w{world} {sched}: mid-flight \
+                            joiner diverged");
+            }
+        }
+    }
+}
+
+// ---- shared-prefix equivalence -----------------------------------------
+
+/// A 33-token system prompt: its 32-token page-aligned prefix
+/// publishes as a two-page shared segment after the first (donor)
+/// request prefills it.
+fn system_prefix() -> Vec<i32> {
+    (0..33).map(|t| ((t * 13) % 200) as i32 + 1).collect()
+}
+
+/// Follower prompt `i`: same first 20 tokens as the donor, private
+/// tail — the partial-page shape (shared_len 16, copy_len 4) whose
+/// divergence row sits mid-page, so attaching COW-copies rows 16..20
+/// before prefilling the tail.
+fn follower(i: usize) -> Vec<i32> {
+    let mut p = system_prefix();
+    p.truncate(20);
+    for t in 0..6 {
+        p.push(((t * 13 + i * 7 + 90) % 200) as i32 + 1);
+    }
+    p
+}
+
+/// A follower sharing the donor's WHOLE published segment (both
+/// pages, shared_len 32, copy_len 0) with a private tail beyond it.
+fn deep_follower() -> Vec<i32> {
+    let mut p = system_prefix();
+    for t in 0..6 {
+        p.push(((t * 11 + 170) % 200) as i32 + 1);
+    }
+    p
+}
+
+/// The §13 equivalence gate: a request served off a shared prefix
+/// segment (COW attach, prefill from the divergence point) emits
+/// tokens bit-identical to the same request served with fully
+/// private KV — across worlds and dtypes — and the engine really did
+/// take the sharing path (hits > 0, a live segment).
+#[test]
+fn shared_prefix_reuse_is_bit_identical() {
+    for dtype in [Dtype::F32, Dtype::Int8] {
+        // private reference: each follower alone in a fresh engine —
+        // its prefix cache is empty, so KV is fully private
+        let prompts =
+            vec![follower(0), follower(1), deep_follower()];
+        let golden: Vec<Vec<i32>> = prompts
+            .iter()
+            .map(|p| {
+                let mut e = Engine::new(cfg(1, 2, dtype,
+                                            SchedulerKind::Continuous))
+                    .unwrap();
+                e.generate(std::slice::from_ref(p), 6).unwrap()
+                    .pop()
+                    .unwrap()
+            })
+            .collect();
+        for world in [1usize, 2, 4] {
+            let mut e = Engine::new(cfg(world, 2, dtype,
+                                        SchedulerKind::Continuous))
+                .unwrap();
+            // donor run publishes the 32-token shared segment
+            let donor = e.generate(&[system_prefix()], 4).unwrap();
+            assert!(!donor[0].is_empty());
+            assert_eq!(e.prefix_entries(), 1, "donor must publish");
+            assert_eq!(e.shared_groups(), 1);
+            assert_eq!(e.shared_pages(), 2,
+                       "a 32-token segment spans two KV pages");
+            // followers attach to it: two partial-page COW attaches
+            // and one whole-segment attach
+            let got = e.generate(&prompts, 6).unwrap();
+            assert_eq!(e.metrics.prefix_hits, 3,
+                       "all followers must attach, not re-prefill");
+            for (i, (g, want)) in
+                got.iter().zip(&golden).enumerate()
+            {
+                assert_eq!(g, want,
+                           "{dtype:?} w{world}: shared-prefix \
+                            follower {i} diverged from the \
+                            private-KV reference");
+            }
+            // retired followers dropped their refs; the idle segment
+            // stays cached, everything else returned to the pool
+            assert_eq!(e.free_pages() + e.shared_pages(),
+                       e.total_pages(),
+                       "idle engine must account every page");
+            assert_eq!(e.free_lanes(), 2);
+        }
+    }
+}
+
+/// Sharing survives memory pressure without corruption: more
+/// prefix-sharing requests than the pool can hold at once are shed
+/// (admission waits), never corrupted — everyone completes with the
+/// right tokens and the pool balances.
+#[test]
+fn exhaustion_with_pinned_prefix_sheds_cleanly() {
+    let golden: Vec<Vec<i32>> = (0..6)
+        .map(|i| {
+            let mut e = Engine::new(cfg(1, 2, Dtype::F32,
+                                        SchedulerKind::Continuous))
+                .unwrap();
+            e.generate(&[follower(i)], 25).unwrap().pop().unwrap()
+        })
+        .collect();
+    // batch 2 → an 8-page pool; each follower's worst case (26 prompt
+    // + 25 decode → 4 pages, 3 private next to the shared page) plus
+    // the two pinned segment pages saturate the pool, so admissions
+    // beyond the first wave must wait for retires
+    let mut e = Engine::new(cfg(1, 2, Dtype::F32,
+                                SchedulerKind::Continuous))
+        .unwrap();
+    e.generate(&[system_prefix()], 4).unwrap();
+    let prompts: Vec<Vec<i32>> = (0..6).map(follower).collect();
+    let got = e.generate(&prompts, 25).unwrap();
+    assert_eq!(got, golden, "shedding under pressure changed tokens");
+    assert_eq!(e.metrics.requests_done, 7);
+    assert!(e.metrics.prefix_hits >= 6);
+    assert_eq!(e.free_pages() + e.shared_pages(), e.total_pages());
+    assert_eq!(e.free_lanes(), 2);
+}
+
+// ---- random join/leave/cancel schedules --------------------------------
+
+/// Drive one random schedule of submit / step / cancel against a
+/// continuous-batching engine, checking page accounting every step
+/// and full conservation (lanes, pages, shared segments) at drain.
+fn run_schedule(seed: u64, ops: usize, chunk: usize) {
+    let mut rng = SplitMix64::new(seed);
+    let mut c = cfg(1, 2, Dtype::F32, SchedulerKind::Continuous);
+    c.prefill_chunk = chunk;
+    let mut engine = Engine::new(c).unwrap();
+    let lanes0 = engine.free_lanes();
+    let pages0 = engine.free_pages();
+    let mut live: Vec<u64> = Vec::new();
+    for op in 0..ops {
+        match rng.next_below(4) {
+            0 => {
+                // half the arrivals open with the shared system
+                // prompt (publish/attach traffic), half are private
+                let len = 1 + rng.next_below(20);
+                let prompt: Vec<i32> = if rng.next_below(2) == 0 {
+                    let mut p = system_prefix();
+                    p.truncate(len.max(4));
+                    p
+                } else {
+                    (0..len)
+                        .map(|_| rng.next_below(200) as i32 + 1)
+                        .collect()
+                };
+                live.push(engine.enqueue(prompt,
+                                         1 + rng.next_below(6)));
+            }
+            1 if !live.is_empty() => {
+                let i = rng.next_below(live.len());
+                let id = live.swap_remove(i);
+                // may already have completed — either is fine, but
+                // it must never error or double-free
+                engine.cancel(id).unwrap();
+            }
+            _ => {
+                if engine.has_work() {
+                    for c in engine.step().unwrap() {
+                        live.retain(|&id| id != c.request_id);
+                    }
+                }
+            }
+        }
+        assert!(engine.free_pages() + engine.shared_pages()
+                    <= engine.total_pages(),
+                "seed {seed:#x} op {op}: page pool oversubscribed");
+        assert_eq!(engine.shared_groups(), engine.prefix_entries(),
+                   "seed {seed:#x} op {op}: allocator and prefix \
+                    cache disagree on live segments");
+    }
+    // cancel everything left and drain: all private pages return;
+    // only idle cached segments still hold pages, and exactly them
+    for id in live {
+        engine.cancel(id).unwrap();
+    }
+    engine.run_to_completion().unwrap();
+    assert_eq!(engine.free_lanes(), lanes0,
+               "seed {seed:#x}: lane leak");
+    assert_eq!(engine.free_pages() + engine.shared_pages(), pages0,
+               "seed {seed:#x}: page leak");
+}
+
+/// Property sweep: random interleavings of submit / step / cancel —
+/// with and without shared prefixes, whole-prompt and chunked —
+/// conserve lanes, pages, and segment refcounts.  No schedule leaks.
+#[test]
+fn random_join_leave_cancel_conserves_resources() {
+    for case in 0..8u64 {
+        let chunk = [0usize, 1, 3][case as usize % 3];
+        run_schedule(0x1057 + case, 60, chunk);
+    }
+}
+
+/// The CI soak (longer schedules, seed overridable so the nightly
+/// matrix can roll it): same conservation claims, deeper
+/// interleavings.  `XEONSERVE_SOAK_SEED` sets the base seed.
+#[test]
+fn seeded_soak_join_leave_cancel() {
+    let base = std::env::var("XEONSERVE_SOAK_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0x5EED_50A4);
+    for case in 0..4u64 {
+        let seed = base ^ (case.wrapping_mul(0x9E37_79B9));
+        println!("soak case {case}: seed {seed:#x} \
+                  (XEONSERVE_SOAK_SEED={base})");
+        run_schedule(seed, 200, [0usize, 2][case as usize % 2]);
+    }
+}
+
+// ---- serving semantics -------------------------------------------------
+
+/// Cancelling a lane attached to a shared segment releases its ref
+/// but never frees the segment out from under other attached lanes.
+#[test]
+fn cancel_attached_lane_keeps_segment_for_others() {
+    let mut e = Engine::new(cfg(1, 2, Dtype::F32,
+                                SchedulerKind::Continuous))
+        .unwrap();
+    e.generate(&[system_prefix()], 4).unwrap();
+    let golden = {
+        let mut solo = Engine::new(cfg(1, 2, Dtype::F32,
+                                       SchedulerKind::Continuous))
+            .unwrap();
+        solo.generate(&[follower(1)], 8).unwrap().pop().unwrap()
+    };
+    let f0 = e.enqueue(follower(0), 8);
+    let _f1 = e.enqueue(follower(1), 8);
+    for _ in 0..3 {
+        e.step().unwrap();
+    }
+    assert_eq!(e.metrics.prefix_hits, 2);
+    assert!(e.cancel(f0).unwrap());
+    assert_eq!(e.shared_groups(), 1,
+               "cancel of one attached lane must not drop the segment");
+    let done = e.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].tokens, golden,
+               "survivor's stream perturbed by sibling cancel");
+    assert_eq!(e.free_pages() + e.shared_pages(), e.total_pages());
+}
+
+/// The TOML knob reaches the engine via the same path the launch
+/// coordinator ships configs through, and the serving behavior
+/// (publish + attach) actually engages from a parsed config.
+#[test]
+fn scheduler_roundtrips_through_toml_and_serves() {
+    let c = cfg(1, 2, Dtype::F32, SchedulerKind::Continuous);
+    let back = EngineConfig::from_toml_str(&c.to_toml_string()).unwrap();
+    assert_eq!(back.scheduler, SchedulerKind::Continuous);
+    let mut e = Engine::new(back).unwrap();
+    e.generate(&[system_prefix()], 4).unwrap();
+    e.generate(&[follower(0)], 6).unwrap();
+    assert_eq!(e.metrics.prefix_hits, 1);
+    assert_eq!(e.metrics.prefix_misses, 1);
+}

@@ -277,6 +277,92 @@ fn disconnect_mid_stream_frees_the_lane() {
             "expected token frame(s) + done, got {frames}");
 }
 
+/// Explicit `{"cancel": id}` control surface (DESIGN.md §13): a
+/// second connection cancels a live stream by the id its frames
+/// carry; the stream gets a clean error frame; and the surface is
+/// IDEMPOTENT — re-cancelling the same id (or a never-issued one)
+/// answers a JSON error line naming the id, never a wedge, and the
+/// connection keeps serving.
+#[test]
+fn explicit_cancel_is_idempotent() {
+    let addr = "127.0.0.1:47821";
+    let cfg = EngineConfig {
+        model: "tiny".into(),
+        backend: BackendKind::Reference,
+        world: 1,
+        batch: 1,
+        ..Default::default()
+    };
+    std::thread::spawn(move || {
+        let _ = xeonserve::server::serve(cfg, addr);
+    });
+
+    // client A: a stream far too long to finish on its own (no EOS in
+    // the tiny preset); its first frame reveals the engine id
+    let mut a = wait_for_port(addr);
+    a.write_all(
+        b"{\"prompt\": \"cancel me\", \"max_new_tokens\": 48, \
+          \"stream\": true}\n")
+        .unwrap();
+    let mut a_reader = BufReader::new(a.try_clone().unwrap());
+    let mut line = String::new();
+    a_reader.read_line(&mut line).unwrap();
+    let frame = Json::parse(&line).unwrap();
+    let id = frame.get("id").expect("frame carries the request id")
+        .as_u64().unwrap();
+
+    // client B cancels it
+    let mut b = wait_for_port(addr);
+    let j = request_line(&mut b, &format!("{{\"cancel\": {id}}}"));
+    assert_eq!(j.get("cancelled").and_then(Json::as_u64), Some(id),
+               "first cancel must ack: {j:?}");
+
+    // the stream is told, rather than silently starved (token frames
+    // already in flight when the cancel landed may arrive first)
+    let mut saw_cancel_frame = false;
+    for _ in 0..60 {
+        let mut line = String::new();
+        a_reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert!(j.get("done").is_none(),
+                "cancelled stream must not complete: {j:?}");
+        if j.get("error").is_some() {
+            assert_eq!(j.get("error").and_then(Json::as_str),
+                       Some("cancelled"), "{j:?}");
+            saw_cancel_frame = true;
+            break;
+        }
+        assert!(j.get("token").is_some(), "unexpected frame: {j:?}");
+    }
+    assert!(saw_cancel_frame,
+            "stream should see the cancellation error frame");
+
+    // double-cancel: a clean error naming the id, not a wedge
+    let j = request_line(&mut b, &format!("{{\"cancel\": {id}}}"));
+    let err = j.get("error").expect("second cancel must error")
+        .as_str().unwrap();
+    assert!(err.contains("cancel") && err.contains(&id.to_string()),
+            "error should name the operation and id: {err}");
+
+    // cancelling an id that never existed is the same clean shape
+    let j = request_line(&mut b, r#"{"cancel": 999999}"#);
+    assert!(j.get("error").is_some(), "{j:?}");
+
+    // the lane freed by the cancel, and the connection still serves
+    let j = request_line(&mut b,
+                         r#"{"prompt": "after", "max_new_tokens": 2}"#);
+    assert!(j.get("error").is_none(), "lane never freed? {j:?}");
+    assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+
+    // the stats probe confirms cancellation, not retirement
+    let j = request_line(&mut b, r#"{"stats": true}"#);
+    let stats = j.get("stats").expect("stats reply");
+    assert_eq!(stats.get("requests_done").unwrap().as_u64(), Some(1),
+               "cancelled request must not count as done: {j:?}");
+    assert_eq!(stats.get("free_lanes").unwrap().as_u64(), Some(1),
+               "cancelled request leaked its lane: {j:?}");
+}
+
 /// Artifact-gated variant: the same round-trip on the PJRT backend.
 #[cfg(feature = "xla")]
 mod xla_artifacts {
