@@ -27,15 +27,18 @@
 //!
 //! The reference backend's weight and KV storage is dtype-selectable
 //! (`EngineConfig::weight_dtype` / `kv_dtype`): dense f32 or per-block
-//! symmetric INT8 ([`quant`], DESIGN.md §11).  Backends report their
-//! resident footprint through [`ExecBackend::mem_usage`] so the bench
-//! suite can record measured bytes next to latency.
+//! symmetric INT8 ([`quant`], DESIGN.md §11).  Its GEMM inner loops
+//! dispatch over a runtime-detected instruction tier
+//! (`EngineConfig::isa`, [`simd`], DESIGN.md §14).  Backends report
+//! their resident footprint through [`ExecBackend::mem_usage`] so the
+//! bench suite can record measured bytes next to latency.
 
 #![warn(missing_docs)]
 
 pub mod pool;
 pub mod quant;
 pub mod reference;
+pub mod simd;
 #[cfg(feature = "xla")]
 pub mod xla;
 

@@ -286,6 +286,47 @@ impl<'a, T> DisjointSlices<'a, T> {
     }
 }
 
+/// First-error capture for fallible pool tasks.  `run`'s task closures
+/// return `()` (units must be independent), so a unit that *can* fail
+/// — e.g. KV quantization rejecting a non-finite activation — records
+/// its error here and returns; after the barrier the dispatching code
+/// [`take`](Self::take)s the earliest-recorded error and bails.  Which
+/// unit's error wins under concurrency is scheduling-dependent, but
+/// whether *any* error is reported is not, which is all the
+/// determinism contract needs from a failure path.
+#[derive(Default)]
+pub struct FirstError {
+    slot: Mutex<Option<anyhow::Error>>,
+}
+
+impl FirstError {
+    /// An empty capture slot.
+    pub fn new() -> FirstError {
+        FirstError::default()
+    }
+
+    /// Record `err` if no earlier unit already recorded one.
+    pub fn record(&self, err: anyhow::Error) {
+        let mut slot = self.slot.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(err);
+        }
+    }
+
+    /// Run `f` and record its error, keeping the unit's control flow a
+    /// plain statement at the call site.
+    pub fn capture(&self, f: impl FnOnce() -> Result<()>) {
+        if let Err(e) = f() {
+            self.record(e);
+        }
+    }
+
+    /// Take the recorded error, leaving the slot empty for reuse.
+    pub fn take(&self) -> Option<anyhow::Error> {
+        self.slot.lock().unwrap().take()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -369,6 +410,27 @@ mod tests {
             n.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(n.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn first_error_keeps_the_earliest_and_resets_on_take() {
+        let fe = FirstError::new();
+        assert!(fe.take().is_none());
+        fe.capture(|| Ok(()));
+        assert!(fe.take().is_none());
+        fe.record(anyhow::anyhow!("first"));
+        fe.record(anyhow::anyhow!("second"));
+        assert_eq!(fe.take().unwrap().to_string(), "first");
+        assert!(fe.take().is_none(), "take must drain the slot");
+        // usable from pool tasks
+        let mut pool = WorkerPool::new(2).unwrap();
+        pool.run(8, &|u| {
+            fe.capture(|| {
+                anyhow::ensure!(u % 2 == 0, "odd unit {u}");
+                Ok(())
+            });
+        });
+        assert!(fe.take().unwrap().to_string().starts_with("odd unit"));
     }
 
     #[test]

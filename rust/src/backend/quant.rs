@@ -38,6 +38,8 @@
 
 use anyhow::{ensure, Result};
 
+use super::simd::{self, Isa};
+
 /// Quantization group width (rows of the contraction axis per scale)
 /// used for column-parallel weights and the lm head.  Row-parallel
 /// weights use the reduction-chunk width instead (module docs).
@@ -85,6 +87,13 @@ pub struct QuantMat {
     /// `[k/group, cols]` scales; `scales[(k/group)*cols + j]` covers
     /// element `(k, j)`
     pub(crate) scales: Vec<f32>,
+    /// `[k/group, cols]` per-(group, column) sums of `q` — the
+    /// zero-point correction term of the vnni W8A8 scheme
+    /// (DESIGN.md §14); always materialized alongside the scales
+    pub(crate) colsums: Vec<i32>,
+    /// 4-k packed weight panels for the hardware `vpdpbusd` path,
+    /// built on demand by [`QuantMat::ensure_vnni_pack`]
+    pub(crate) vnni_pack: Option<Vec<i8>>,
     pub(crate) cols: usize,
     pub(crate) group: usize,
 }
@@ -92,6 +101,11 @@ pub struct QuantMat {
 impl QuantMat {
     /// Quantize a row-major `[k, cols]` f32 matrix with `group`-row
     /// blocks along the contraction axis.  `group` must divide `k`.
+    ///
+    /// Non-finite input is rejected with a descriptive error:
+    /// `f32::max` silently discards NaN operands, so a NaN or ±inf
+    /// weight would otherwise produce a finite scale and a silently
+    /// corrupted element instead of a diagnosis.
     pub fn from_f32(w: &[f32], k: usize, cols: usize, group: usize)
                     -> Result<QuantMat> {
         ensure!(cols > 0 && w.len() == k * cols,
@@ -104,14 +118,23 @@ impl QuantMat {
         for kk in 0..k {
             let row = &w[kk * cols..(kk + 1) * cols];
             let arow = &mut amax[(kk / group) * cols..][..cols];
-            for (a, &v) in arow.iter_mut().zip(row) {
+            for (j, (a, &v)) in
+                arow.iter_mut().zip(row).enumerate()
+            {
+                ensure!(v.is_finite(),
+                        "non-finite weight {v} at ({kk}, {j}): \
+                         refusing to quantize (the amax scan would \
+                         drop it and the element would round-trip \
+                         as garbage)");
                 *a = a.max(v.abs());
             }
         }
         let scales: Vec<f32> =
             amax.iter().map(|&a| a / 127.0).collect();
-        // pass 2: snap to the grid
+        // pass 2: snap to the grid, accumulating the per-(group,
+        // column) value sums the vnni zero-point correction needs
         let mut q = vec![0i8; k * cols];
+        let mut colsums = vec![0i32; n_groups * cols];
         for kk in 0..k {
             let srow = &scales[(kk / group) * cols..][..cols];
             let wrow = &w[kk * cols..(kk + 1) * cols];
@@ -125,8 +148,13 @@ impl QuantMat {
                     0
                 };
             }
+            let crow = &mut colsums[(kk / group) * cols..][..cols];
+            for (c, &qe) in crow.iter_mut().zip(qrow.iter()) {
+                *c += qe as i32;
+            }
         }
-        Ok(QuantMat { q, scales, cols, group })
+        Ok(QuantMat { q, scales, colsums, vnni_pack: None, cols,
+                      group })
     }
 
     /// Number of `k` rows stored.
@@ -155,11 +183,15 @@ impl QuantMat {
         }
         let n_groups = k / self.group;
         let mut scales = Vec::with_capacity(n_groups * bw);
+        let mut colsums = Vec::with_capacity(n_groups * bw);
         for g in 0..n_groups {
             scales.extend_from_slice(&self.scales[g * self.cols + j0
                 ..g * self.cols + j1]);
+            colsums.extend_from_slice(&self.colsums[g * self.cols + j0
+                ..g * self.cols + j1]);
         }
-        Ok(QuantMat { q, scales, cols: bw, group: self.group })
+        Ok(QuantMat { q, scales, colsums, vnni_pack: None, cols: bw,
+                      group: self.group })
     }
 
     /// Slice rows `[k0, k1)` (row-parallel sharding).  Both bounds
@@ -174,19 +206,175 @@ impl QuantMat {
         let scales = self.scales[(k0 / self.group) * self.cols
             ..(k1 / self.group) * self.cols]
             .to_vec();
-        Ok(QuantMat { q, scales, cols: self.cols, group: self.group })
+        let colsums = self.colsums[(k0 / self.group) * self.cols
+            ..(k1 / self.group) * self.cols]
+            .to_vec();
+        Ok(QuantMat { q, scales, colsums, vnni_pack: None,
+                      cols: self.cols, group: self.group })
     }
+
+    /// Build the 4-k packed weight panels the hardware `vpdpbusd`
+    /// kernel reads (DESIGN.md §14): panel `p` of group `g` holds,
+    /// for every column `j`, the 4 weight bytes of rows
+    /// `g·group + 4p .. g·group + 4p + 4` contiguously at byte offset
+    /// `((g·panels + p)·cols + j)·4`, zero-padded past the group tail
+    /// (zero weights contribute nothing to the integer dot, so
+    /// padding never changes a sum).  Idempotent, and a no-op on CPUs
+    /// without the VNNI fast path — the pack's only reader is the
+    /// `dpbusd` kernel, and leaving it unbuilt keeps that unsafe call
+    /// unreachable ([`WeightMat::mac_panel`] then uses the exact
+    /// integer emulation, which computes identical sums).
+    pub fn ensure_vnni_pack(&mut self) {
+        if !simd::vnni_hw() || self.vnni_pack.is_some() {
+            return;
+        }
+        let k = self.k_rows();
+        let ppg = self.group.div_ceil(4); // panels per group
+        let n_groups = k / self.group;
+        let mut pack = vec![0i8; n_groups * ppg * self.cols * 4];
+        for kk in 0..k {
+            let g = kk / self.group;
+            let p = (kk % self.group) / 4;
+            let lane = kk % 4;
+            let base = (g * ppg + p) * self.cols * 4;
+            let row = &self.q[kk * self.cols..(kk + 1) * self.cols];
+            for (j, &v) in row.iter().enumerate() {
+                pack[base + j * 4 + lane] = v;
+            }
+        }
+        self.vnni_pack = Some(pack);
+    }
+
+    /// Hardware `vpdpbusd` prefix of one group's integer dot: fills
+    /// `idot[..ret]` for the leading 16-column blocks of `[j0, j1)`
+    /// and returns how many columns it covered (0 when the pack is
+    /// absent — no VNNI hardware — and the emulation does everything).
+    #[cfg(target_arch = "x86_64")]
+    fn dpbusd_prefix(&self, g: usize, j0: usize, j1: usize, u: &[u8],
+                     idot: &mut [i32]) -> usize {
+        match &self.vnni_pack {
+            None => 0,
+            Some(pack) => {
+                let ppg = self.group.div_ceil(4);
+                let region = &pack[g * ppg * self.cols * 4
+                    ..(g + 1) * ppg * self.cols * 4];
+                // SAFETY: the pack is only built when simd::vnni_hw()
+                // holds (ensure_vnni_pack), so the required CPU
+                // features are present.
+                unsafe {
+                    simd::dot_pack_dpbusd(u, region, self.cols, j0,
+                                          j1, idot)
+                }
+            }
+        }
+    }
+
+    /// Non-x86 hosts never build a pack; the emulation covers all
+    /// columns.
+    #[cfg(not(target_arch = "x86_64"))]
+    fn dpbusd_prefix(&self, _g: usize, _j0: usize, _j1: usize,
+                     _u: &[u8], _idot: &mut [i32]) -> usize {
+        0
+    }
+
+    /// The W8A8 integer panel MAC (DESIGN.md §14): per quant group,
+    /// quantize the activation sub-row to asymmetric u8, integer-dot
+    /// it against the int8 weight columns (hardware `vpdpbusd` over
+    /// the 4-k pack when built, exact scalar emulation otherwise —
+    /// identical sums either way), then apply the combined scale and
+    /// zero-point correction once per (group, column):
+    ///
+    /// `acc[j] += f32(idot − zp·colsum[g][j]) · (sx · sw[g][j])`
+    ///
+    /// accumulated over ascending groups.  Everything between the
+    /// activation quantization and the final two f32 multiplies is
+    /// exact integer arithmetic, so a group's contribution is a pure
+    /// function of its activation values and weight block — invariant
+    /// under threading, column blocking, and (because groups align
+    /// with the §9.1 reduction-chunk grid) world size.
+    fn mac_panel_vnni(&self, k0: usize, k1: usize, j0: usize,
+                      j1: usize, x: &[f32], acc: &mut [f32]) {
+        debug_assert!(k0 % self.group == 0 && k1 % self.group == 0,
+                      "vnni panel [{k0}, {k1}) must align to group {}",
+                      self.group);
+        let bw = j1 - j0;
+        // group widths vary by matrix (64 or the reduction-chunk
+        // width), so per-call heap scratch keeps this correct for
+        // every preset; both rows are reused across the groups
+        let mut u = vec![0u8; self.group];
+        let mut idot = vec![0i32; bw];
+        for g in (k0 / self.group)..(k1 / self.group) {
+            let ks = g * self.group;
+            let (sx, zp) = quant_activation_row(
+                &x[ks..ks + self.group], &mut u);
+            if sx == 0.0 {
+                continue; // all-zero activation group contributes 0
+            }
+            idot.fill(0);
+            let done = self.dpbusd_prefix(g, j0, j1, &u, &mut idot);
+            // exact integer emulation: the scheme's defining sums —
+            // the whole block without hardware, the ragged column
+            // tail with it
+            for (i, &uk) in u.iter().enumerate() {
+                if uk == 0 {
+                    continue;
+                }
+                let row = &self.q[(ks + i) * self.cols + j0 + done
+                    ..(ks + i) * self.cols + j1];
+                for (d, &qv) in idot[done..].iter_mut().zip(row) {
+                    *d += uk as i32 * qv as i32;
+                }
+            }
+            let srow =
+                &self.scales[g * self.cols + j0..g * self.cols + j1];
+            let crow =
+                &self.colsums[g * self.cols + j0..g * self.cols + j1];
+            for (((a, &d), &sw), &cs) in
+                acc.iter_mut().zip(&idot).zip(srow).zip(crow)
+            {
+                *a += (d - zp * cs) as f32 * (sx * sw);
+            }
+        }
+    }
+}
+
+/// Quantize one activation sub-row to asymmetric u8 for the vnni
+/// W8A8 scheme: `x ≈ (u − zp)·scale` with `u ∈ [0, 255]`,
+/// `lo = min(0, min x)`, `hi = max(0, max x)` — zero is always
+/// exactly representable, so sparse activations cost no error.
+/// Returns `(scale, zp)`; a zero scale means the whole sub-row is
+/// zero and contributes nothing.  A pure ascending scan of `x`:
+/// identical bytes at any thread count, blocking, or world size.
+pub fn quant_activation_row(x: &[f32], u: &mut [u8]) -> (f32, i32) {
+    debug_assert_eq!(x.len(), u.len());
+    let (mut lo, mut hi) = (0.0f32, 0.0f32);
+    for &v in x {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if hi <= lo {
+        u.fill(0);
+        return (0.0, 0);
+    }
+    let scale = (hi - lo) / 255.0;
+    let zp = (-lo / scale).round().clamp(0.0, 255.0) as i32;
+    for (ue, &v) in u.iter_mut().zip(x) {
+        *ue = (v / scale + zp as f32).round().clamp(0.0, 255.0) as u8;
+    }
+    (scale, zp)
 }
 
 /// One weight matrix of the reference backend, in whichever storage
 /// `EngineConfig::weight_dtype` selects.  The GEMM kernels are written
-/// against [`WeightMat::mac_row`], so both storages run the identical
+/// against [`WeightMat::mac_panel`] (an ISA-dispatched loop over the
+/// [`WeightMat::mac_row`] chain), so both storages run the identical
 /// single-accumulator, ascending-`k` chains — the property every
 /// determinism guarantee rests on (module docs).
 pub enum WeightMat {
     /// Dense f32 (4 bytes/weight).
     F32(F32Mat),
-    /// Per-block symmetric INT8 (1 byte/weight + 4/`group` of scales).
+    /// Per-block symmetric INT8 (1 byte/weight + 8/`group` of scales
+    /// and vnni column sums).
     Int8(QuantMat),
 }
 
@@ -227,12 +415,103 @@ impl WeightMat {
         }
     }
 
-    /// Resident bytes of this matrix (values + scales).
+    /// Multiply-accumulate a whole k-panel into one column block:
+    /// `acc[j − j0] += Σ_{k ∈ [k0, k1)} x[k] · w[k, j]`, dispatching
+    /// on the resolved instruction tier (DESIGN.md §14).  This is the
+    /// single hook every GEMM inner loop funnels through; blocking,
+    /// threading, and sharding only change which (row, column-block,
+    /// k-panel) triples are combined, never a per-element chain.
+    ///
+    /// * `scalar` runs the per-k [`WeightMat::mac_row`] chain — the
+    ///   pinned baseline.
+    /// * `avx2` / `avx512` run the same ascending-k chain with each
+    ///   row vectorized across columns by unfused per-lane mul+add
+    ///   ([`crate::backend::simd`]) — bit-identical to scalar.
+    /// * `vnni` (int8 storage only) runs the W8A8 integer scheme per
+    ///   quant group ([`QuantMat`]'s `mac_panel_vnni`); `k0`/`k1`
+    ///   must land on group boundaries, which the §9.1 reduction-
+    ///   chunk grid guarantees at every kernel call site.  On f32
+    ///   storage `vnni` degrades to the scalar chain — the tier only
+    ///   governs int8 weight matmuls.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mac_panel(&self, isa: Isa, k0: usize, k1: usize, j0: usize,
+                     j1: usize, x: &[f32], acc: &mut [f32]) {
+        match self {
+            WeightMat::F32(m) => match isa {
+                Isa::Avx2 => {
+                    for k in k0..k1 {
+                        let row =
+                            &m.w[k * m.cols + j0..k * m.cols + j1];
+                        simd::mac_row_f32_avx2(x[k], row, acc);
+                    }
+                }
+                Isa::Avx512 => {
+                    for k in k0..k1 {
+                        let row =
+                            &m.w[k * m.cols + j0..k * m.cols + j1];
+                        simd::mac_row_f32_avx512(x[k], row, acc);
+                    }
+                }
+                Isa::Scalar | Isa::Vnni => {
+                    for k in k0..k1 {
+                        self.mac_row(k, j0, j1, x[k], acc);
+                    }
+                }
+            },
+            WeightMat::Int8(m) => match isa {
+                Isa::Avx2 => {
+                    for k in k0..k1 {
+                        let g = k / m.group;
+                        let qrow =
+                            &m.q[k * m.cols + j0..k * m.cols + j1];
+                        let srow = &m.scales[g * m.cols + j0
+                            ..g * m.cols + j1];
+                        simd::mac_row_i8_avx2(x[k], qrow, srow, acc);
+                    }
+                }
+                Isa::Avx512 => {
+                    for k in k0..k1 {
+                        let g = k / m.group;
+                        let qrow =
+                            &m.q[k * m.cols + j0..k * m.cols + j1];
+                        let srow = &m.scales[g * m.cols + j0
+                            ..g * m.cols + j1];
+                        simd::mac_row_i8_avx512(x[k], qrow, srow,
+                                                acc);
+                    }
+                }
+                Isa::Vnni => {
+                    m.mac_panel_vnni(k0, k1, j0, j1, x, acc);
+                }
+                Isa::Scalar => {
+                    for k in k0..k1 {
+                        self.mac_row(k, j0, j1, x[k], acc);
+                    }
+                }
+            },
+        }
+    }
+
+    /// Build the `vpdpbusd` weight pack on int8 storage (no-op on f32
+    /// and on CPUs without the VNNI fast path) — the backend calls
+    /// this once per matrix at construction when the vnni tier is
+    /// selected.
+    pub fn ensure_vnni_pack(&mut self) {
+        if let WeightMat::Int8(m) = self {
+            m.ensure_vnni_pack();
+        }
+    }
+
+    /// Resident bytes of this matrix (values + scales, plus the vnni
+    /// colsums and — when built — the `vpdpbusd` pack).
     pub fn bytes(&self) -> u64 {
         match self {
             WeightMat::F32(m) => (m.w.len() * 4) as u64,
             WeightMat::Int8(m) => {
-                (m.q.len() + m.scales.len() * 4) as u64
+                let pack =
+                    m.vnni_pack.as_ref().map_or(0, |p| p.len());
+                (m.q.len() + m.scales.len() * 4
+                    + m.colsums.len() * 4 + pack) as u64
             }
         }
     }
@@ -242,11 +521,19 @@ impl WeightMat {
 /// one scale) into `q`, returning the scale.  The amax scan and the
 /// rounding both run ascending over the row, so the stored bytes are a
 /// pure function of the row's f32 content — identical at any thread
-/// count or world size.
-pub fn quant_row_into(vals: &[f32], q: &mut [i8]) -> f32 {
+/// count or world size.  Non-finite input is rejected: `f32::max`
+/// discards NaN operands, so a NaN value would otherwise yield a
+/// finite scale and a silently-zeroed element.
+pub fn quant_row_into(vals: &[f32], q: &mut [i8]) -> Result<f32> {
     debug_assert_eq!(vals.len(), q.len());
     let mut amax = 0.0f32;
-    for &v in vals {
+    for (i, &v) in vals.iter().enumerate() {
+        ensure!(
+            v.is_finite(),
+            "non-finite value {v} at index {i}: refusing to \
+             quantize (the amax scan would drop it and the element \
+             would round-trip as garbage)"
+        );
         amax = amax.max(v.abs());
     }
     let scale = amax / 127.0;
@@ -257,7 +544,7 @@ pub fn quant_row_into(vals: &[f32], q: &mut [i8]) -> f32 {
     } else {
         q.fill(0);
     }
-    scale
+    Ok(scale)
 }
 
 #[cfg(test)]
@@ -389,7 +676,9 @@ mod tests {
         let q = WeightMat::Int8(
             QuantMat::from_f32(&w, k, cols, group).unwrap());
         assert_eq!(f.bytes(), (k * cols * 4) as u64);
-        assert_eq!(q.bytes(), (k * cols + (k / group) * cols * 4) as u64);
+        // q + scales (4B) + colsums (4B) per (group, column)
+        assert_eq!(q.bytes(),
+                   (k * cols + (k / group) * cols * 8) as u64);
         assert!(q.bytes() * 3 < f.bytes(),
                 "int8 must be well under a third of f32");
     }
@@ -398,7 +687,7 @@ mod tests {
     fn quant_row_roundtrip_bound() {
         let vals = ramp(96);
         let mut q = vec![0i8; 96];
-        let s = quant_row_into(&vals, &mut q);
+        let s = quant_row_into(&vals, &mut q).unwrap();
         let amax = vals.iter().fold(0.0f32, |a, x| a.max(x.abs()));
         assert!((s - amax / 127.0).abs() < 1e-9);
         for (&qe, &v) in q.iter().zip(&vals) {
@@ -407,7 +696,202 @@ mod tests {
         // all-zero row
         let z = vec![0.0f32; 8];
         let mut qz = vec![1i8; 8];
-        assert_eq!(quant_row_into(&z, &mut qz), 0.0);
+        assert_eq!(quant_row_into(&z, &mut qz).unwrap(), 0.0);
         assert!(qz.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn non_finite_weights_are_rejected() {
+        let mut w = ramp(8 * 4);
+        w[13] = f32::NAN;
+        let err = QuantMat::from_f32(&w, 8, 4, 4).unwrap_err();
+        assert!(err.to_string().contains("non-finite"),
+                "unexpected message: {err}");
+        w[13] = f32::INFINITY;
+        assert!(QuantMat::from_f32(&w, 8, 4, 4).is_err());
+
+        let mut row = ramp(16);
+        row[5] = f32::NAN;
+        let mut q = vec![0i8; 16];
+        let err = quant_row_into(&row, &mut q).unwrap_err();
+        assert!(err.to_string().contains("index 5"),
+                "unexpected message: {err}");
+        row[5] = f32::NEG_INFINITY;
+        assert!(quant_row_into(&row, &mut q).is_err());
+    }
+
+    #[test]
+    fn mac_panel_matches_mac_row_chain_per_tier() {
+        let (k, cols, group) = (16, 20, 4);
+        let w = ramp(k * cols);
+        let x = ramp(k);
+        let mats = [
+            WeightMat::f32(w.clone(), cols),
+            WeightMat::Int8(
+                QuantMat::from_f32(&w, k, cols, group).unwrap()),
+        ];
+        for wm in &mats {
+            for (j0, j1) in [(0usize, cols), (4, 15)] {
+                let bw = j1 - j0;
+                let mut want = vec![0.0f32; bw];
+                for (kk, &xk) in x.iter().enumerate() {
+                    wm.mac_row(kk, j0, j1, xk, &mut want);
+                }
+                for isa in [Isa::Scalar, Isa::Avx2, Isa::Avx512] {
+                    if !simd::available(isa) {
+                        continue;
+                    }
+                    let mut acc = vec![0.0f32; bw];
+                    wm.mac_panel(isa, 0, k, j0, j1, &x, &mut acc);
+                    for (a, b) in acc.iter().zip(&want) {
+                        assert_eq!(a.to_bits(), b.to_bits(),
+                                   "{isa} diverged from scalar");
+                    }
+                }
+                // vnni over f32 storage must be the scalar chain
+                if matches!(wm, WeightMat::F32(_)) {
+                    let mut acc = vec![0.0f32; bw];
+                    wm.mac_panel(Isa::Vnni, 0, k, j0, j1, &x,
+                                 &mut acc);
+                    for (a, b) in acc.iter().zip(&want) {
+                        assert_eq!(a.to_bits(), b.to_bits());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn activation_row_quantization_roundtrips() {
+        let x = ramp(64);
+        let mut u = vec![0u8; 64];
+        let (s, zp) = quant_activation_row(&x, &mut u);
+        assert!(s > 0.0);
+        for (&ue, &v) in u.iter().zip(&x) {
+            let back = (ue as i32 - zp) as f32 * s;
+            assert!((back - v).abs() <= s / 2.0 + 1e-6,
+                    "{v} -> {ue} -> {back} (scale {s}, zp {zp})");
+        }
+        // all-zero row maps to (0.0, 0) and zeroed codes
+        let z = vec![0.0f32; 8];
+        let mut uz = vec![9u8; 8];
+        assert_eq!(quant_activation_row(&z, &mut uz), (0.0, 0));
+        assert!(uz.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn vnni_panel_is_invariant_under_slicing() {
+        // vnni results must not depend on how the output columns or
+        // the k-panels are blocked — only on which (group, column)
+        // pairs are combined — or world-size invariance breaks.
+        let (k, cols, group) = (16, 24, 4);
+        let w = ramp(k * cols);
+        let x = ramp(k);
+        let full = QuantMat::from_f32(&w, k, cols, group).unwrap();
+        let mut whole = vec![0.0f32; cols];
+        full.mac_panel_vnni(0, k, 0, cols, &x, &mut whole);
+
+        // column blocking + col slices
+        for (j0, j1) in [(0usize, 8usize), (8, 17), (17, 24)] {
+            let mut blk = vec![0.0f32; j1 - j0];
+            full.mac_panel_vnni(0, k, j0, j1, &x, &mut blk);
+            for (a, b) in blk.iter().zip(&whole[j0..j1]) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            let sliced =
+                WeightMat::Int8(full.slice_cols(j0, j1).unwrap());
+            let mut s_acc = vec![0.0f32; j1 - j0];
+            sliced.mac_panel(Isa::Vnni, 0, k, 0, j1 - j0, &x,
+                             &mut s_acc);
+            for (a, b) in s_acc.iter().zip(&whole[j0..j1]) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+
+        // k-panel blocking at group boundaries sums the same values
+        let mut panels = vec![0.0f32; cols];
+        for (k0, k1) in [(0usize, 8usize), (8, 12), (12, 16)] {
+            full.mac_panel_vnni(k0, k1, 0, cols, &x, &mut panels);
+        }
+        for (a, b) in panels.iter().zip(&whole) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        // a row slice fed the tail of the activation row (as the
+        // §9.1 chunk grid does on row-parallel shards)
+        let half = full.slice_rows(8, 16).unwrap();
+        let mut tail = vec![0.0f32; cols];
+        half.mac_panel_vnni(0, 8, 0, cols, &x[8..], &mut tail);
+        let mut want_tail = vec![0.0f32; cols];
+        full.mac_panel_vnni(8, 16, 0, cols, &x, &mut want_tail);
+        for (a, b) in tail.iter().zip(&want_tail) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn vnni_panel_is_accurate_and_distinct_from_dequant() {
+        let (k, cols, group) = (128, 16, 64);
+        let w = ramp(k * cols);
+        let x: Vec<f32> =
+            (0..k).map(|i| ((i * 13 % 31) as f32 - 15.0) * 0.07)
+                  .collect();
+        let qm = QuantMat::from_f32(&w, k, cols, group).unwrap();
+        let wm = WeightMat::Int8(
+            QuantMat::from_f32(&w, k, cols, group).unwrap());
+
+        let mut vnni = vec![0.0f32; cols];
+        qm.mac_panel_vnni(0, k, 0, cols, &x, &mut vnni);
+
+        // accuracy: close to the exact f32 chain in relative l2
+        let mut exact = vec![0.0f32; cols];
+        for (kk, &xk) in x.iter().enumerate() {
+            for j in 0..cols {
+                exact[j] += xk * w[kk * cols + j];
+            }
+        }
+        let (mut num, mut den) = (0.0f64, 0.0f64);
+        for (a, b) in vnni.iter().zip(&exact) {
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+        let rel = (num / den.max(1e-30)).sqrt();
+        assert!(rel < 0.15, "vnni rel-l2 {rel} too far from f32");
+
+        // engagement: the W8A8 scheme quantizes activations, so it
+        // must NOT be bit-identical to the dequantized-scalar chain
+        let mut dequant = vec![0.0f32; cols];
+        wm.mac_panel(Isa::Scalar, 0, k, 0, cols, &x, &mut dequant);
+        assert!(vnni.iter().zip(&dequant)
+                    .any(|(a, b)| a.to_bits() != b.to_bits()),
+                "vnni path produced the dequant chain bit-for-bit — \
+                 the integer scheme is not engaged");
+    }
+
+    #[test]
+    fn vnni_pack_is_gated_on_hardware() {
+        let (k, cols, group) = (8, 4, 4);
+        let w = ramp(k * cols);
+        let mut wm = WeightMat::Int8(
+            QuantMat::from_f32(&w, k, cols, group).unwrap());
+        let before = wm.bytes();
+        wm.ensure_vnni_pack();
+        if simd::vnni_hw() {
+            // pack holds ppg = group/4 panels × 4 lanes per column
+            assert_eq!(wm.bytes(), before + (k * cols) as u64);
+        } else {
+            assert_eq!(wm.bytes(), before);
+        }
+        // packing must never change results
+        let x = ramp(k);
+        let mut with_pack = vec![0.0f32; cols];
+        wm.mac_panel(Isa::Vnni, 0, k, 0, cols, &x, &mut with_pack);
+        let plain = WeightMat::Int8(
+            QuantMat::from_f32(&w, k, cols, group).unwrap());
+        let mut without = vec![0.0f32; cols];
+        plain.mac_panel(Isa::Vnni, 0, k, 0, cols, &x, &mut without);
+        for (a, b) in with_pack.iter().zip(&without) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }

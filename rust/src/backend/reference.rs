@@ -71,6 +71,18 @@
 //! and KV rows are quantized once at append time by a pure function of
 //! the row.  Changing the dtype changes the logits — that is the
 //! accuracy/memory trade, pinned by the int8-vs-f32 tolerance tests.
+//!
+//! # ISA dispatch (DESIGN.md §14)
+//!
+//! Every GEMM inner loop funnels through [`WeightMat::mac_panel`],
+//! dispatched once at construction over the tier
+//! [`crate::backend::simd::resolve`] picks from `EngineConfig::isa`
+//! (and the `XEONSERVE_FORCE_ISA` override).  The `avx2`/`avx512`
+//! tiers vectorize the scalar chains with unfused per-lane ops —
+//! bit-identical to `scalar` at both dtypes — while the opt-in `vnni`
+//! tier swaps int8 weight matmuls for the W8A8 integer scheme, its own
+//! deterministic numerics.  `rust/tests/simd_parity.rs` pins both
+//! claims.
 
 use std::collections::HashMap;
 
@@ -80,8 +92,9 @@ use crate::config::{Dtype, EngineConfig, GemmKernel, ModelPreset, Variant, Weigh
 use crate::kvcache::KvLayer;
 use crate::model::{synth_quant_shard, synth_shard, tensor_seed};
 
-use super::pool::{auto_threads, DisjointSlices, WorkerPool};
+use super::pool::{auto_threads, DisjointSlices, FirstError, WorkerPool};
 use super::quant::{quant_row_into, WeightMat, WEIGHT_QUANT_GROUP};
+use super::simd::{self, Isa};
 use super::{ExecBackend, MemUsage, StepCtx};
 
 /// Fixed reduction granularity of the row-parallel matmuls: the full
@@ -290,25 +303,25 @@ fn block_range(b: usize, cols: usize) -> (usize, usize) {
 
 /// Columns `[j0, j1)` of `xn[rows, kdim] @ w[kdim, cols]` for every
 /// row, OVERWRITING `out[r·out_stride + j]`.  Row-fused: the column
-/// block of `w` is streamed once for all rows.  Bit-compatible with
-/// [`col_matmul`]: each output element is one ascending-`k` chain
-/// (through [`WeightMat::mac_row`], which dequantizes INT8 storage
-/// inside the MAC — same chain, fewer bytes streamed).
+/// block of `w` is streamed once per row tile, not once per row.
+/// Bit-compatible with [`col_matmul`]: each output element is one
+/// ascending-`k` chain (through [`WeightMat::mac_panel`], which
+/// dequantizes INT8 storage inside the MAC — same chain, fewer bytes
+/// streamed — and vectorizes it per the resolved ISA tier).
 #[allow(clippy::too_many_arguments)]
-fn colpar_block(xn: &[f32], kdim: usize, rows: usize, w: &WeightMat,
-                cols: usize, j0: usize, j1: usize,
+fn colpar_block(isa: Isa, xn: &[f32], kdim: usize, rows: usize,
+                w: &WeightMat, cols: usize, j0: usize, j1: usize,
                 out: &DisjointSlices<'_>, out_stride: usize) {
     let bw = j1 - j0;
     let mut r0 = 0;
     while r0 < rows {
         let rt = ROW_TILE.min(rows - r0);
         let mut tile = [0.0f32; ROW_TILE * COL_BLOCK];
-        for k in 0..kdim {
-            for ri in 0..rt {
-                let xk = xn[(r0 + ri) * kdim + k];
-                w.mac_row(k, j0, j1, xk,
-                          &mut tile[ri * bw..ri * bw + bw]);
-            }
+        for ri in 0..rt {
+            let xrow =
+                &xn[(r0 + ri) * kdim..(r0 + ri + 1) * kdim];
+            w.mac_panel(isa, 0, kdim, j0, j1, xrow,
+                        &mut tile[ri * bw..ri * bw + bw]);
         }
         for ri in 0..rt {
             // SAFETY: this unit owns columns [j0, j1) of every row;
@@ -326,21 +339,22 @@ fn colpar_block(xn: &[f32], kdim: usize, rows: usize, w: &WeightMat,
 /// overwriting `out[r·cols + j]`.  Same per-element chains as running
 /// [`col_matmul`] for `wg` and `wu` separately, then fusing.
 #[allow(clippy::too_many_arguments)]
-fn gateup_block(xn: &[f32], kdim: usize, rows: usize, wg: &WeightMat,
-                wu: &WeightMat, cols: usize, j0: usize, j1: usize,
-                out: &DisjointSlices<'_>) {
+fn gateup_block(isa: Isa, xn: &[f32], kdim: usize, rows: usize,
+                wg: &WeightMat, wu: &WeightMat, cols: usize, j0: usize,
+                j1: usize, out: &DisjointSlices<'_>) {
     let bw = j1 - j0;
     let mut r0 = 0;
     while r0 < rows {
         let rt = ROW_TILE.min(rows - r0);
         let mut gt = [0.0f32; ROW_TILE * COL_BLOCK];
         let mut ut = [0.0f32; ROW_TILE * COL_BLOCK];
-        for k in 0..kdim {
-            for ri in 0..rt {
-                let xk = xn[(r0 + ri) * kdim + k];
-                wg.mac_row(k, j0, j1, xk, &mut gt[ri * bw..ri * bw + bw]);
-                wu.mac_row(k, j0, j1, xk, &mut ut[ri * bw..ri * bw + bw]);
-            }
+        for ri in 0..rt {
+            let xrow =
+                &xn[(r0 + ri) * kdim..(r0 + ri + 1) * kdim];
+            wg.mac_panel(isa, 0, kdim, j0, j1, xrow,
+                         &mut gt[ri * bw..ri * bw + bw]);
+            wu.mac_panel(isa, 0, kdim, j0, j1, xrow,
+                         &mut ut[ri * bw..ri * bw + bw]);
         }
         for ri in 0..rt {
             // SAFETY: disjoint column ranges per unit (see colpar_block)
@@ -362,9 +376,9 @@ fn gateup_block(xn: &[f32], kdim: usize, rows: usize, wg: &WeightMat,
 /// `out[r·h + j]`.  Bit-compatible with [`rowpar_scalar`]: identical
 /// per-chunk chains, and quantized partials sum exactly in any order.
 #[allow(clippy::too_many_arguments)]
-fn rowpar_block(act: &[f32], k_local: usize, rows: usize, w: &WeightMat,
-                h: usize, cs: usize, j0: usize, j1: usize,
-                out: &DisjointSlices<'_>) {
+fn rowpar_block(isa: Isa, act: &[f32], k_local: usize, rows: usize,
+                w: &WeightMat, h: usize, cs: usize, j0: usize,
+                j1: usize, out: &DisjointSlices<'_>) {
     let bw = j1 - j0;
     let n_chunks = k_local / cs;
     let mut r0 = 0;
@@ -373,12 +387,11 @@ fn rowpar_block(act: &[f32], k_local: usize, rows: usize, w: &WeightMat,
         let mut acc = [0.0f32; ROW_TILE * COL_BLOCK];
         for c in 0..n_chunks {
             let mut part = [0.0f32; ROW_TILE * COL_BLOCK];
-            for k in c * cs..(c + 1) * cs {
-                for ri in 0..rt {
-                    let ak = act[(r0 + ri) * k_local + k];
-                    w.mac_row(k, j0, j1, ak,
-                              &mut part[ri * bw..ri * bw + bw]);
-                }
+            for ri in 0..rt {
+                let arow = &act[(r0 + ri) * k_local
+                    ..(r0 + ri + 1) * k_local];
+                w.mac_panel(isa, c * cs, (c + 1) * cs, j0, j1, arow,
+                            &mut part[ri * bw..ri * bw + bw]);
             }
             for (a, &p) in
                 acc[..rt * bw].iter_mut().zip(&part[..rt * bw])
@@ -405,16 +418,17 @@ fn rowpar_block(act: &[f32], k_local: usize, rows: usize, w: &WeightMat,
 /// adds this rank's quantized partial into `out[..h]`.  `k_full` is
 /// the FULL contraction width; `a`/`w` cover this rank's contiguous
 /// `k_local` slice of it.  `tmp` is caller-provided scratch.
-fn rowpar_scalar(a: &[f32], w: &WeightMat, k_local: usize, k_full: usize,
-                 h: usize, tmp: &mut Vec<f32>, out: &mut [f32]) {
+#[allow(clippy::too_many_arguments)]
+fn rowpar_scalar(isa: Isa, a: &[f32], w: &WeightMat, k_local: usize,
+                 k_full: usize, h: usize, tmp: &mut Vec<f32>,
+                 out: &mut [f32]) {
     let cs = k_full / REDUCE_CHUNKS;
     debug_assert_eq!(k_local % cs, 0);
     tmp.resize(h, 0.0);
     for c in 0..k_local / cs {
         tmp.fill(0.0);
-        for k in c * cs..(c + 1) * cs {
-            w.mac_row(k, 0, h, a[k], &mut tmp[..h]);
-        }
+        w.mac_panel(isa, c * cs, (c + 1) * cs, 0, h, a,
+                    &mut tmp[..h]);
         for (o, &t) in out[..h].iter_mut().zip(&tmp[..h]) {
             *o += quantize_partial(t);
         }
@@ -481,6 +495,9 @@ pub struct ReferenceBackend {
     preset: ModelPreset,
     variant: Variant,
     kernel: GemmKernel,
+    /// resolved instruction tier every [`WeightMat::mac_panel`] call
+    /// dispatches on (DESIGN.md §14)
+    isa: Isa,
     // local shard dims
     n_heads_l: usize,
     n_kv_heads_l: usize,
@@ -580,6 +597,11 @@ impl ReferenceBackend {
                 )?)),
             }
         };
+        // resolve the instruction tier once; every mac_panel call in
+        // this backend dispatches on it (a forced-but-unavailable tier
+        // fails loudly here, before any weights are built)
+        let isa = simd::resolve(cfg.isa)?;
+
         let mut layers = Vec::with_capacity(preset.n_layers);
         for li in 0..preset.n_layers as i64 {
             layers.push(LayerWeights {
@@ -600,7 +622,22 @@ impl ReferenceBackend {
                                     rank, t(-1, "embedding"));
         let final_g =
             synth_shard("final_g", &[h], world, rank, t(-1, "final_g"));
-        let lm_head = wm("lm_head", &[h, vocab_l], t(-1, "lm_head"))?;
+        let mut lm_head = wm("lm_head", &[h, vocab_l], t(-1, "lm_head"))?;
+
+        if isa == Isa::Vnni {
+            // build the dpbusd weight packs once, up front (a no-op on
+            // f32 matrices and on CPUs without the VNNI fast path —
+            // the exact integer emulation then serves every group)
+            for lw in &mut layers {
+                for m in [&mut lw.wq, &mut lw.wk, &mut lw.wv,
+                          &mut lw.wo, &mut lw.wg, &mut lw.wu,
+                          &mut lw.wd]
+                {
+                    m.ensure_vnni_pack();
+                }
+            }
+            lm_head.ensure_vnni_pack();
+        }
 
         let cache_rows = cfg.batch * n_kv_heads_l * preset.max_seq;
         let caches = (0..preset.n_layers)
@@ -625,6 +662,7 @@ impl ReferenceBackend {
             batch: cfg.batch,
             variant: cfg.variant,
             kernel: cfg.kernel,
+            isa,
             n_heads_l,
             n_kv_heads_l,
             ffn_l,
@@ -661,10 +699,9 @@ impl ReferenceBackend {
 
     /// Column-parallel matmul: `out[j] += Σ_k a[k]·w[k, j]` over the
     /// full (replicated) contraction axis.  `out` must be zeroed.
-    fn col_matmul(a: &[f32], w: &WeightMat, cols: usize, out: &mut [f32]) {
-        for (k, &ak) in a.iter().enumerate() {
-            w.mac_row(k, 0, cols, ak, &mut out[..cols]);
-        }
+    fn col_matmul(isa: Isa, a: &[f32], w: &WeightMat, cols: usize,
+                  out: &mut [f32]) {
+        w.mac_panel(isa, 0, a.len(), 0, cols, a, &mut out[..cols]);
     }
 
     /// Attention partial for one activation row (already normed into
@@ -672,7 +709,9 @@ impl ReferenceBackend {
     /// (lane `lane`), attend over `[0, attend_hi)`, and add the
     /// quantized `context @ wo` partial into `out`.
     fn attn_row(&mut self, li: usize, lane: usize, pos: i32,
-                attend_hi: usize, s: &mut Scratch, out: &mut [f32]) {
+                attend_hi: usize, s: &mut Scratch, out: &mut [f32])
+                -> Result<()> {
+        let isa = self.isa;
         let hd = self.preset.head_dim;
         let (qd_l, kvd_l) =
             (self.n_heads_l * hd, self.n_kv_heads_l * hd);
@@ -687,9 +726,9 @@ impl ReferenceBackend {
         s.v.resize(kvd_l, 0.0);
         {
             let lw = &self.layers[li];
-            Self::col_matmul(&s.h_n, &lw.wq, qd_l, &mut s.q);
-            Self::col_matmul(&s.h_n, &lw.wk, kvd_l, &mut s.k);
-            Self::col_matmul(&s.h_n, &lw.wv, kvd_l, &mut s.v);
+            Self::col_matmul(isa, &s.h_n, &lw.wq, qd_l, &mut s.q);
+            Self::col_matmul(isa, &s.h_n, &lw.wk, kvd_l, &mut s.k);
+            Self::col_matmul(isa, &s.h_n, &lw.wv, kvd_l, &mut s.v);
         }
         for qh in 0..self.n_heads_l {
             rope_head(&mut s.q[qh * hd..(qh + 1) * hd], &self.rope_inv,
@@ -707,7 +746,7 @@ impl ReferenceBackend {
             for kh in 0..self.n_kv_heads_l {
                 let row = (lane * self.n_kv_heads_l + kh) * t_max + t;
                 cache.append_row(row, (&s.k[kh * hd..(kh + 1) * hd],
-                                       &s.v[kh * hd..(kh + 1) * hd]));
+                                       &s.v[kh * hd..(kh + 1) * hd]))?;
             }
         }
 
@@ -775,66 +814,74 @@ impl ReferenceBackend {
             s.ctxv[qh * hd..(qh + 1) * hd].copy_from_slice(&s.head[..hd]);
         }
         let qd_full = self.preset.n_heads * hd;
-        rowpar_scalar(&s.ctxv, &self.layers[li].wo, qd_l, qd_full,
+        rowpar_scalar(isa, &s.ctxv, &self.layers[li].wo, qd_l, qd_full,
                       self.preset.hidden, &mut s.tmp, out);
+        Ok(())
     }
 
     /// FFN partial for one normed row (`s.h_n`): adds the quantized
     /// `(silu(h@wg) ⊙ (h@wu)) @ wd` partial into `out`.
     fn ffn_row(&self, li: usize, s: &mut Scratch, out: &mut [f32]) {
+        let isa = self.isa;
         let lw = &self.layers[li];
         let f_l = self.ffn_l;
         s.g.clear();
         s.g.resize(f_l, 0.0);
         s.u.clear();
         s.u.resize(f_l, 0.0);
-        Self::col_matmul(&s.h_n, &lw.wg, f_l, &mut s.g);
-        Self::col_matmul(&s.h_n, &lw.wu, f_l, &mut s.u);
+        Self::col_matmul(isa, &s.h_n, &lw.wg, f_l, &mut s.g);
+        Self::col_matmul(isa, &s.h_n, &lw.wu, f_l, &mut s.u);
         for (gi, &ui) in s.g.iter_mut().zip(&s.u) {
             let sig = *gi / (1.0 + (-*gi).exp()); // SiLU
             *gi = sig * ui;
         }
-        rowpar_scalar(&s.g, &lw.wd, f_l, self.preset.ffn,
+        rowpar_scalar(isa, &s.g, &lw.wd, f_l, self.preset.ffn,
                       self.preset.hidden, &mut s.tmp, out);
     }
 
     /// The scalar layer body: one row at a time through norm →
     /// attention → FFN, exactly the pre-blocking loop structure.
     fn layer_scalar(&mut self, ctx: &StepCtx, li: usize, seg: usize,
-                    rows: usize, x: &[f32], partial: &mut [f32]) {
+                    rows: usize, x: &[f32], partial: &mut [f32])
+                    -> Result<()> {
         let h = self.preset.hidden;
         let eps = self.preset.norm_eps as f32;
         let mut s = std::mem::take(&mut self.scratch);
         s.h_n.resize(h, 0.0);
-        for r in 0..rows {
-            let x_row = &x[r * h..(r + 1) * h];
-            let out = r * h..(r + 1) * h;
-            let (lane, pos, hi) = row_meta(ctx, r);
-            match (self.variant, seg) {
-                (Variant::Parallel, _) => {
-                    // fused block: ONE partial sum (the paper's §2.2);
-                    // attention and FFN share the ln1 norm, as in
-                    // python's build_parallel_block_*
-                    rmsnorm_into(x_row, &self.layers[li].ln1_g, eps,
-                                 &mut s.h_n);
-                    self.attn_row(li, lane, pos, hi, &mut s,
-                                  &mut partial[out.clone()]);
-                    self.ffn_row(li, &mut s, &mut partial[out]);
-                }
-                (Variant::Serial, 0) => {
-                    rmsnorm_into(x_row, &self.layers[li].ln1_g, eps,
-                                 &mut s.h_n);
-                    self.attn_row(li, lane, pos, hi, &mut s,
-                                  &mut partial[out]);
-                }
-                (Variant::Serial, _) => {
-                    rmsnorm_into(x_row, &self.layers[li].ln2_g, eps,
-                                 &mut s.h_n);
-                    self.ffn_row(li, &mut s, &mut partial[out]);
+        let mut body = || -> Result<()> {
+            for r in 0..rows {
+                let x_row = &x[r * h..(r + 1) * h];
+                let out = r * h..(r + 1) * h;
+                let (lane, pos, hi) = row_meta(ctx, r);
+                match (self.variant, seg) {
+                    (Variant::Parallel, _) => {
+                        // fused block: ONE partial sum (the paper's
+                        // §2.2); attention and FFN share the ln1 norm,
+                        // as in python's build_parallel_block_*
+                        rmsnorm_into(x_row, &self.layers[li].ln1_g,
+                                     eps, &mut s.h_n);
+                        self.attn_row(li, lane, pos, hi, &mut s,
+                                      &mut partial[out.clone()])?;
+                        self.ffn_row(li, &mut s, &mut partial[out]);
+                    }
+                    (Variant::Serial, 0) => {
+                        rmsnorm_into(x_row, &self.layers[li].ln1_g,
+                                     eps, &mut s.h_n);
+                        self.attn_row(li, lane, pos, hi, &mut s,
+                                      &mut partial[out])?;
+                    }
+                    (Variant::Serial, _) => {
+                        rmsnorm_into(x_row, &self.layers[li].ln2_g,
+                                     eps, &mut s.h_n);
+                        self.ffn_row(li, &mut s, &mut partial[out]);
+                    }
                 }
             }
-        }
+            Ok(())
+        };
+        let r = body();
         self.scratch = s;
+        r
     }
 
     // ---- blocked kernel path -------------------------------------------
@@ -844,7 +891,9 @@ impl ReferenceBackend {
     /// the pool with fixed output-block units.  Bit-identical to
     /// [`Self::layer_scalar`] — see the module docs.
     fn layer_blocked(&mut self, ctx: &StepCtx, li: usize, seg: usize,
-                     rows: usize, x: &[f32], partial: &mut [f32]) {
+                     rows: usize, x: &[f32], partial: &mut [f32])
+                     -> Result<()> {
+        let isa = self.isa;
         let h = self.preset.hidden;
         let hd = self.preset.head_dim;
         let (n_h, n_kv) = (self.n_heads_l, self.n_kv_heads_l);
@@ -908,16 +957,16 @@ impl ReferenceBackend {
                 pool.run_if_worth(nq + 2 * nk, macs, thr, &|u| {
                     if u < nq {
                         let (j0, j1) = block_range(u, qd_l);
-                        colpar_block(xn, h, rows, &lw.wq, qd_l, j0, j1,
-                                     &qs, qd_l);
+                        colpar_block(isa, xn, h, rows, &lw.wq, qd_l,
+                                     j0, j1, &qs, qd_l);
                     } else if u < nq + nk {
                         let (j0, j1) = block_range(u - nq, kvd_l);
-                        colpar_block(xn, h, rows, &lw.wk, kvd_l, j0, j1,
-                                     &ks, kvd_l);
+                        colpar_block(isa, xn, h, rows, &lw.wk, kvd_l,
+                                     j0, j1, &ks, kvd_l);
                     } else {
                         let (j0, j1) = block_range(u - nq - nk, kvd_l);
-                        colpar_block(xn, h, rows, &lw.wv, kvd_l, j0, j1,
-                                     &vs, kvd_l);
+                        colpar_block(isa, xn, h, rows, &lw.wv, kvd_l,
+                                     j0, j1, &vs, kvd_l);
                     }
                 });
             }
@@ -974,6 +1023,10 @@ impl ReferenceBackend {
                         let vcs = DisjointSlices::new(&mut vc[..]);
                         let kss = DisjointSlices::new(&mut k_scale[..]);
                         let vss = DisjointSlices::new(&mut v_scale[..]);
+                        // quantization can refuse non-finite rows;
+                        // units record the failure and the dispatch
+                        // bails after the barrier
+                        let qerr = FirstError::new();
                         pool.run_if_worth(rows, macs, thr, &|r| {
                             let (lane, pos, _hi) = row_meta(ctx, r);
                             // SAFETY: one row per unit; cache rows and
@@ -988,30 +1041,39 @@ impl ReferenceBackend {
                             }
                             let krow =
                                 unsafe { ks.slice(r * kvd_l, kvd_l) };
-                            for kh in 0..n_kv {
-                                rope_head(
-                                    &mut krow[kh * hd..(kh + 1) * hd],
-                                    rope_inv, pos);
-                                let row = (lane * n_kv + kh) * t_max
-                                    + pos as usize;
-                                let kq = unsafe {
-                                    kcs.slice(row * hd, hd)
-                                };
-                                unsafe { kss.slice(row, 1) }[0] =
-                                    quant_row_into(
-                                        &krow[kh * hd..(kh + 1) * hd],
-                                        kq);
-                                let vq = unsafe {
-                                    vcs.slice(row * hd, hd)
-                                };
-                                unsafe { vss.slice(row, 1) }[0] =
-                                    quant_row_into(
-                                        &vr[r * kvd_l + kh * hd
-                                            ..r * kvd_l
-                                                + (kh + 1) * hd],
-                                        vq);
-                            }
+                            qerr.capture(|| {
+                                for kh in 0..n_kv {
+                                    rope_head(
+                                        &mut krow[kh * hd
+                                            ..(kh + 1) * hd],
+                                        rope_inv, pos);
+                                    let row = (lane * n_kv + kh)
+                                        * t_max
+                                        + pos as usize;
+                                    let kq = unsafe {
+                                        kcs.slice(row * hd, hd)
+                                    };
+                                    unsafe { kss.slice(row, 1) }[0] =
+                                        quant_row_into(
+                                            &krow[kh * hd
+                                                ..(kh + 1) * hd],
+                                            kq)?;
+                                    let vq = unsafe {
+                                        vcs.slice(row * hd, hd)
+                                    };
+                                    unsafe { vss.slice(row, 1) }[0] =
+                                        quant_row_into(
+                                            &vr[r * kvd_l + kh * hd
+                                                ..r * kvd_l
+                                                    + (kh + 1) * hd],
+                                            vq)?;
+                                }
+                                Ok(())
+                            });
                         });
+                        if let Some(e) = qerr.take() {
+                            return Err(e);
+                        }
                     }
                 }
             }
@@ -1133,8 +1195,8 @@ impl ReferenceBackend {
                 pool.run_if_worth(
                     col_blocks(h), rows * qd_l * h, thr, &|u| {
                         let (j0, j1) = block_range(u, h);
-                        rowpar_block(cr, qd_l, rows, &lw.wo, h, cs, j0,
-                                     j1, &outs);
+                        rowpar_block(isa, cr, qd_l, rows, &lw.wo, h,
+                                     cs, j0, j1, &outs);
                     });
             }
         }
@@ -1147,8 +1209,8 @@ impl ReferenceBackend {
                 pool.run_if_worth(
                     col_blocks(f_l), rows * h * 2 * f_l, thr, &|u| {
                         let (j0, j1) = block_range(u, f_l);
-                        gateup_block(xn, h, rows, &lw.wg, &lw.wu, f_l,
-                                     j0, j1, &acts);
+                        gateup_block(isa, xn, h, rows, &lw.wg, &lw.wu,
+                                     f_l, j0, j1, &acts);
                     });
             }
             // Phase D: act @ wd row-parallel partial
@@ -1160,11 +1222,12 @@ impl ReferenceBackend {
                 pool.run_if_worth(
                     col_blocks(h), rows * f_l * h, thr, &|u| {
                         let (j0, j1) = block_range(u, h);
-                        rowpar_block(ar, f_l, rows, &lw.wd, h, cs, j0,
-                                     j1, &outs);
+                        rowpar_block(isa, ar, f_l, rows, &lw.wd, h,
+                                     cs, j0, j1, &outs);
                     });
             }
         }
+        Ok(())
     }
 }
 
@@ -1245,7 +1308,6 @@ impl ExecBackend for ReferenceBackend {
                 self.layer_blocked(ctx, li, seg, rows, x, partial)
             }
         }
-        Ok(())
     }
 
     fn lm_head(&mut self, x: &[f32], logits: &mut [f32]) -> Result<()> {
@@ -1257,6 +1319,7 @@ impl ExecBackend for ReferenceBackend {
                 "lm_head buffers too small");
         match self.kernel {
             GemmKernel::Scalar => {
+                let isa = self.isa;
                 let mut s = std::mem::take(&mut self.scratch);
                 s.h_n.resize(h, 0.0);
                 for r in 0..b {
@@ -1264,12 +1327,14 @@ impl ExecBackend for ReferenceBackend {
                                  eps, &mut s.h_n);
                     let out = &mut logits[r * v_l..(r + 1) * v_l];
                     out.fill(0.0);
-                    Self::col_matmul(&s.h_n, &self.lm_head, v_l, out);
+                    Self::col_matmul(isa, &s.h_n, &self.lm_head, v_l,
+                                     out);
                 }
                 self.scratch = s;
             }
             GemmKernel::Blocked => {
                 let thr = self.par_threshold;
+                let isa = self.isa;
                 let ReferenceBackend {
                     blk, pool, final_g, lm_head, ..
                 } = self;
@@ -1293,8 +1358,8 @@ impl ExecBackend for ReferenceBackend {
                     pool.run_if_worth(
                         col_blocks(v_l), b * h * v_l, thr, &|u| {
                             let (j0, j1) = block_range(u, v_l);
-                            colpar_block(xn, h, b, lm_w, v_l, j0,
-                                         j1, &outs, v_l);
+                            colpar_block(isa, xn, h, b, lm_w, v_l,
+                                         j0, j1, &outs, v_l);
                         });
                 }
             }
@@ -1744,6 +1809,60 @@ mod tests {
         assert!(!identical,
                 "int8 logits bit-identical to f32 — quantized path \
                  not engaged");
+    }
+
+    /// The f32 SIMD tiers must reproduce the scalar chains bit-for-bit
+    /// at both dtypes (DESIGN.md §14).  Skipped silently per-tier on
+    /// hosts without the instructions, and entirely when a force-ISA
+    /// env override is active (it would pin every config to one tier
+    /// and make the cross-tier comparison vacuous).
+    #[test]
+    fn simd_tiers_reproduce_scalar_bits() {
+        if std::env::var_os(simd::FORCE_ISA_ENV).is_some() {
+            return;
+        }
+        for int8 in [false, true] {
+            let mut base = if int8 { int8_cfg(1, 1) } else { cfg(1, 1) };
+            base.isa = crate::config::IsaKind::Scalar;
+            let golden = forward_fingerprint(&base, false);
+            for (kind, isa) in
+                [(crate::config::IsaKind::Avx2, Isa::Avx2),
+                 (crate::config::IsaKind::Avx512, Isa::Avx512)]
+            {
+                if !simd::available(isa) {
+                    continue;
+                }
+                let mut c = base.clone();
+                c.isa = kind;
+                let got = forward_fingerprint(&c, false);
+                assert_bits_eq(&golden, &got,
+                               &format!("{isa} vs scalar (int8={int8})"));
+            }
+        }
+    }
+
+    /// The vnni tier is its own (deterministic) numeric scheme: two
+    /// runs agree bit-for-bit, and the logits differ from the
+    /// dequantized-scalar chain — proof the integer path is engaged.
+    #[test]
+    fn vnni_tier_is_deterministic_and_engaged() {
+        if std::env::var_os(simd::FORCE_ISA_ENV).is_some() {
+            return;
+        }
+        let mut c = int8_cfg(1, 1);
+        c.isa = crate::config::IsaKind::Vnni;
+        let a = forward_fingerprint(&c, false);
+        let b = forward_fingerprint(&c, false);
+        assert_bits_eq(&a, &b, "vnni reruns");
+        let mut s = int8_cfg(1, 1);
+        s.isa = crate::config::IsaKind::Scalar;
+        let scalar = forward_fingerprint(&s, false);
+        let identical = a.iter().zip(&scalar).all(|(x, y)| {
+            x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        });
+        assert!(!identical,
+                "vnni fingerprint bit-identical to the dequant scalar \
+                 chain — the W8A8 scheme is not engaged");
     }
 
     /// Mixed dtypes are legal: each knob works independently.

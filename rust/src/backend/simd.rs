@@ -1,0 +1,635 @@
+//! Runtime CPU-feature detection and the SIMD row kernels behind the
+//! reference backend's GEMMs (DESIGN.md §14).
+//!
+//! Detect-then-dispatch: the backend resolves an [`Isa`] tier once at
+//! construction ([`resolve`]) and every GEMM inner loop funnels
+//! through [`crate::backend::quant::WeightMat::mac_panel`], which
+//! selects the matching row kernel here.  Three rules keep the repo's
+//! bit-identity contract intact:
+//!
+//! * The f32 tiers (`avx2`, `avx512`) vectorize **across output
+//!   columns** with *unfused* per-lane multiply-then-add — the exact
+//!   two IEEE-754 operations of the scalar chain
+//!   `acc[j] += x[k] * w[k][j]`, in the same ascending-k order, just
+//!   8/16 columns per instruction.  No FMA (which rounds once instead
+//!   of twice) and no horizontal re-association ever touches an
+//!   accumulator, so every output bit matches the scalar kernel, and
+//!   auto-detection is safe even on heterogeneous fleets: ranks may
+//!   resolve different f32 tiers and still bit-agree.
+//! * `vnni` is not an f32 tier: it is the W8A8 integer *scheme* —
+//!   activations quantized to u8 per weight-quant-group, weights kept
+//!   i8, dot products accumulated in exact i32 arithmetic.  Hardware
+//!   `vpdpbusd` runs when the CPU has AVX-512 VNNI ([`vnni_hw`]) and
+//!   an exact scalar integer emulation otherwise, so the tier is
+//!   selectable (and CI-testable) on any host with identical results.
+//!   Because its numerics differ from the f32 chain it is never
+//!   auto-selected: `isa = "vnni"` is an explicit opt-in, and it only
+//!   governs int8 weight matmuls (f32 matrices under a forced vnni
+//!   run the scalar chain).
+//! * Forcing a tier the CPU lacks is a hard error, never a silent
+//!   fallback — a bench row or parity run must execute the tier its
+//!   label claims.  (`scalar` and `vnni` are runnable everywhere.)
+
+#![warn(missing_docs)]
+
+use anyhow::{bail, Result};
+
+use crate::config::IsaKind;
+
+/// Environment override consumed by [`resolve`]: CI's ISA axis sets
+/// `XEONSERVE_FORCE_ISA=scalar|avx2|avx512|vnni` per process so the
+/// whole test suite and launch smokes run under one forced tier
+/// without touching any config file.
+pub const FORCE_ISA_ENV: &str = "XEONSERVE_FORCE_ISA";
+
+/// A concrete instruction tier the backend executes with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Portable scalar Rust — the pinned baseline every other tier is
+    /// gated against.
+    Scalar,
+    /// 8-lane AVX2 f32 rows (unfused mul+add; bit-identical to
+    /// scalar).
+    Avx2,
+    /// 16-lane AVX-512F f32 rows (unfused mul+add; bit-identical).
+    Avx512,
+    /// W8A8 integer scheme for int8 weights: hardware `vpdpbusd` when
+    /// the CPU has AVX-512 VNNI, exact scalar emulation otherwise.
+    Vnni,
+}
+
+impl Isa {
+    /// Every tier, in escalation order (listings and CI loops).
+    pub const ALL: [Isa; 4] =
+        [Isa::Scalar, Isa::Avx2, Isa::Avx512, Isa::Vnni];
+
+    /// Strict parse of the CLI/env spelling; unknown strings are a
+    /// clean error, never a silent fallback.
+    pub fn parse(s: &str) -> Result<Isa> {
+        match s {
+            "scalar" => Ok(Isa::Scalar),
+            "avx2" => Ok(Isa::Avx2),
+            "avx512" => Ok(Isa::Avx512),
+            "vnni" => Ok(Isa::Vnni),
+            _ => bail!("unknown isa {s:?} (scalar|avx2|avx512|vnni)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Isa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Isa::Scalar => write!(f, "scalar"),
+            Isa::Avx2 => write!(f, "avx2"),
+            Isa::Avx512 => write!(f, "avx512"),
+            Isa::Vnni => write!(f, "vnni"),
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn have_avx2() -> bool {
+    std::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn have_avx2() -> bool {
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+fn have_avx512() -> bool {
+    std::is_x86_feature_detected!("avx512f")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn have_avx512() -> bool {
+    false
+}
+
+/// Does the CPU have the `vpdpbusd` fast path for the vnni tier?
+/// Purely a speed question: the emulation computes the identical
+/// integer sums when this is false.
+#[cfg(target_arch = "x86_64")]
+pub fn vnni_hw() -> bool {
+    std::is_x86_feature_detected!("avx512f")
+        && std::is_x86_feature_detected!("avx512bw")
+        && std::is_x86_feature_detected!("avx512vnni")
+}
+
+/// Non-x86 hosts never have the hardware path.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn vnni_hw() -> bool {
+    false
+}
+
+/// Can this CPU run `isa`?  `Scalar` always; `Vnni` always (the
+/// scheme has an exact integer emulation — [`vnni_hw`] only gates the
+/// fast path); the f32 tiers need their CPUID feature bits.
+pub fn available(isa: Isa) -> bool {
+    match isa {
+        Isa::Scalar | Isa::Vnni => true,
+        Isa::Avx2 => have_avx2(),
+        Isa::Avx512 => have_avx512(),
+    }
+}
+
+/// The widest *bit-identical* f32 tier this CPU has — what
+/// `isa = "auto"` resolves to.  Never [`Isa::Vnni`]: its numerics
+/// differ from the scalar chain, so it must be asked for by name.
+pub fn detect_best() -> Isa {
+    if available(Isa::Avx512) {
+        Isa::Avx512
+    } else if available(Isa::Avx2) {
+        Isa::Avx2
+    } else {
+        Isa::Scalar
+    }
+}
+
+/// Map the config knob to a concrete tier, honoring the
+/// [`FORCE_ISA_ENV`] override (highest precedence — CI's ISA axis).
+/// Forcing a tier the CPU lacks is a hard error.
+pub fn resolve(kind: IsaKind) -> Result<Isa> {
+    let forced = std::env::var(FORCE_ISA_ENV).ok();
+    resolve_with(forced.as_deref(), kind)
+}
+
+/// [`resolve`] with the env override passed explicitly, so the
+/// precedence rules are testable without mutating process-global
+/// state (env mutation would race the rest of the parallel test
+/// binary through every backend construction).
+pub fn resolve_with(env_force: Option<&str>, kind: IsaKind)
+                    -> Result<Isa> {
+    let want = match env_force {
+        Some(s) => Some(Isa::parse(s).map_err(|e| {
+            e.context(format!("parsing {FORCE_ISA_ENV}"))
+        })?),
+        None => match kind {
+            IsaKind::Auto => None,
+            IsaKind::Scalar => Some(Isa::Scalar),
+            IsaKind::Avx2 => Some(Isa::Avx2),
+            IsaKind::Avx512 => Some(Isa::Avx512),
+            IsaKind::Vnni => Some(Isa::Vnni),
+        },
+    };
+    match want {
+        None => Ok(detect_best()),
+        Some(isa) => {
+            if !available(isa) {
+                bail!(
+                    "isa \"{isa}\" was forced but this CPU does not \
+                     support it (auto would pick \"{}\"); a silent \
+                     fallback would mislabel parity runs and bench \
+                     rows, so this is a hard error",
+                    detect_best()
+                );
+            }
+            Ok(isa)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// f32 row kernels: acc[j] += xk * w[j]
+//
+// Each wrapper is safe to call only through a resolved Isa (resolve
+// checked the feature bits); the non-x86 bodies are unreachable in
+// practice but keep the crate portable.
+// ---------------------------------------------------------------------
+
+/// `acc[j] += xk * w[j]` over 8-lane AVX2 with a scalar tail — the
+/// unfused per-lane twin of the scalar chain.
+pub fn mac_row_f32_avx2(xk: f32, w: &[f32], acc: &mut [f32]) {
+    debug_assert_eq!(w.len(), acc.len());
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: Isa::Avx2 only resolves when the avx2 feature bit was
+    // detected at runtime (resolve/available).
+    unsafe {
+        mac_row_f32_avx2_impl(xk, w, acc)
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    for (a, &wj) in acc.iter_mut().zip(w) {
+        *a += xk * wj;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mac_row_f32_avx2_impl(xk: f32, w: &[f32], acc: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let xs = _mm256_set1_ps(xk);
+    let mut j = 0;
+    while j + 8 <= n {
+        let wv = _mm256_loadu_ps(w.as_ptr().add(j));
+        let av = _mm256_loadu_ps(acc.as_ptr().add(j));
+        // unfused mul then add: the exact scalar op pair per lane
+        let prod = _mm256_mul_ps(xs, wv);
+        _mm256_storeu_ps(acc.as_mut_ptr().add(j),
+                         _mm256_add_ps(av, prod));
+        j += 8;
+    }
+    while j < n {
+        acc[j] += xk * w[j];
+        j += 1;
+    }
+}
+
+/// `acc[j] += xk * w[j]` over 16-lane AVX-512F with a scalar tail.
+pub fn mac_row_f32_avx512(xk: f32, w: &[f32], acc: &mut [f32]) {
+    debug_assert_eq!(w.len(), acc.len());
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: Isa::Avx512 only resolves when the avx512f feature bit
+    // was detected at runtime (resolve/available).
+    unsafe {
+        mac_row_f32_avx512_impl(xk, w, acc)
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    for (a, &wj) in acc.iter_mut().zip(w) {
+        *a += xk * wj;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn mac_row_f32_avx512_impl(xk: f32, w: &[f32],
+                                  acc: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let xs = _mm512_set1_ps(xk);
+    let mut j = 0;
+    while j + 16 <= n {
+        let wv = _mm512_loadu_ps(w.as_ptr().add(j));
+        let av = _mm512_loadu_ps(acc.as_ptr().add(j));
+        let prod = _mm512_mul_ps(xs, wv);
+        _mm512_storeu_ps(acc.as_mut_ptr().add(j),
+                         _mm512_add_ps(av, prod));
+        j += 16;
+    }
+    while j < n {
+        acc[j] += xk * w[j];
+        j += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// int8-dequant row kernels: acc[j] += xk * (q[j] as f32 * s[j])
+//
+// i8 -> i32 -> f32 conversion is exact (|q| <= 127), and the three
+// f32 ops replicate the scalar dequant chain in order, so these are
+// bit-identical to WeightMat::mac_row on Int8 just like the f32
+// kernels are on F32.
+// ---------------------------------------------------------------------
+
+/// int8-dequant row MAC over 8-lane AVX2 with a scalar tail.
+pub fn mac_row_i8_avx2(xk: f32, q: &[i8], s: &[f32],
+                       acc: &mut [f32]) {
+    debug_assert_eq!(q.len(), acc.len());
+    debug_assert_eq!(s.len(), acc.len());
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: Isa::Avx2 only resolves when the avx2 feature bit was
+    // detected at runtime (resolve/available).
+    unsafe {
+        mac_row_i8_avx2_impl(xk, q, s, acc)
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    for ((a, &qj), &sj) in acc.iter_mut().zip(q).zip(s) {
+        *a += xk * (qj as f32 * sj);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn mac_row_i8_avx2_impl(xk: f32, q: &[i8], s: &[f32],
+                               acc: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let xs = _mm256_set1_ps(xk);
+    let mut j = 0;
+    while j + 8 <= n {
+        // 8 bytes -> 8 exact f32 lanes
+        let qb = _mm_loadl_epi64(q.as_ptr().add(j) as *const _);
+        let qf = _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(qb));
+        let sv = _mm256_loadu_ps(s.as_ptr().add(j));
+        // dequant then scale then add: the scalar chain's op order
+        let deq = _mm256_mul_ps(qf, sv);
+        let prod = _mm256_mul_ps(xs, deq);
+        let av = _mm256_loadu_ps(acc.as_ptr().add(j));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(j),
+                         _mm256_add_ps(av, prod));
+        j += 8;
+    }
+    while j < n {
+        acc[j] += xk * (q[j] as f32 * s[j]);
+        j += 1;
+    }
+}
+
+/// int8-dequant row MAC over 16-lane AVX-512F with a scalar tail.
+pub fn mac_row_i8_avx512(xk: f32, q: &[i8], s: &[f32],
+                         acc: &mut [f32]) {
+    debug_assert_eq!(q.len(), acc.len());
+    debug_assert_eq!(s.len(), acc.len());
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: Isa::Avx512 only resolves when the avx512f feature bit
+    // was detected at runtime (resolve/available).
+    unsafe {
+        mac_row_i8_avx512_impl(xk, q, s, acc)
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    for ((a, &qj), &sj) in acc.iter_mut().zip(q).zip(s) {
+        *a += xk * (qj as f32 * sj);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f")]
+unsafe fn mac_row_i8_avx512_impl(xk: f32, q: &[i8], s: &[f32],
+                                 acc: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = acc.len();
+    let xs = _mm512_set1_ps(xk);
+    let mut j = 0;
+    while j + 16 <= n {
+        let qb = _mm_loadu_si128(q.as_ptr().add(j) as *const _);
+        let qf = _mm512_cvtepi32_ps(_mm512_cvtepi8_epi32(qb));
+        let sv = _mm512_loadu_ps(s.as_ptr().add(j));
+        let deq = _mm512_mul_ps(qf, sv);
+        let prod = _mm512_mul_ps(xs, deq);
+        let av = _mm512_loadu_ps(acc.as_ptr().add(j));
+        _mm512_storeu_ps(acc.as_mut_ptr().add(j),
+                         _mm512_add_ps(av, prod));
+        j += 16;
+    }
+    while j < n {
+        acc[j] += xk * (q[j] as f32 * s[j]);
+        j += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// vnni: the hardware vpdpbusd group dot over the QuantMat 4-k pack
+// ---------------------------------------------------------------------
+
+/// Hardware `vpdpbusd` group dot over a 4-k weight pack:
+/// `idot[j - j0] += sum_k u[k] * q[k][j]` for 16-column blocks of
+/// `[j0, j1)`.
+///
+/// `pack` is one quant group's panel region in the
+/// [`crate::backend::quant::QuantMat`] pack layout: panel `p` holds,
+/// for every column `j`, the 4 weight bytes of rows `4p..4p+4` at
+/// byte offset `(p * cols + j) * 4` (zero-padded past the group
+/// tail).  `u` is the group's quantized activation bytes; its tail
+/// pad is zeroed here, and 0·0 contributes nothing, so ragged groups
+/// sum exactly like the emulation.
+///
+/// Returns the number of columns processed — the largest multiple of
+/// 16 `<= j1 - j0`; the caller finishes the ragged column tail with
+/// the scalar emulation.
+///
+/// # Safety
+///
+/// Caller must have verified [`vnni_hw`] (the pack is only ever built
+/// when it holds).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx512f,avx512bw,avx512vnni")]
+pub unsafe fn dot_pack_dpbusd(u: &[u8], pack: &[i8], cols: usize,
+                              j0: usize, j1: usize,
+                              idot: &mut [i32]) -> usize {
+    use std::arch::x86_64::*;
+    let panels = u.len().div_ceil(4);
+    debug_assert!(pack.len() >= panels * cols * 4);
+    debug_assert!(idot.len() >= j1 - j0);
+    // per-panel broadcast words: the same 4 activation bytes feed
+    // every column lane of a vpdpbusd
+    let words: Vec<i32> = (0..panels)
+        .map(|p| {
+            let mut b = [0u8; 4];
+            for (i, dst) in b.iter_mut().enumerate() {
+                if let Some(&v) = u.get(4 * p + i) {
+                    *dst = v;
+                }
+            }
+            i32::from_le_bytes(b)
+        })
+        .collect();
+    let full = (j1 - j0) / 16 * 16;
+    let mut jb = 0;
+    while jb < full {
+        let j = j0 + jb;
+        let mut acc =
+            _mm512_loadu_si512(idot.as_ptr().add(jb) as *const _);
+        for (p, &word) in words.iter().enumerate() {
+            let a = _mm512_set1_epi32(word);
+            let w = _mm512_loadu_si512(
+                pack.as_ptr().add((p * cols + j) * 4) as *const _);
+            acc = _mm512_dpbusd_epi32(acc, a, w);
+        }
+        _mm512_storeu_si512(idot.as_mut_ptr().add(jb) as *mut _, acc);
+        jb += 16;
+    }
+    full
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lcg_f32(state: &mut u64) -> f32 {
+        *state = state
+            .wrapping_mul(6364136223846793005)
+            .wrapping_add(1442695040888963407);
+        // modest magnitudes so sums stay well inside f32 range
+        ((*state >> 40) as i32 % 1000) as f32 / 257.0
+    }
+
+    fn scalar_f32(xk: f32, w: &[f32], acc: &mut [f32]) {
+        for (a, &wj) in acc.iter_mut().zip(w) {
+            *a += xk * wj;
+        }
+    }
+
+    fn scalar_i8(xk: f32, q: &[i8], s: &[f32], acc: &mut [f32]) {
+        for ((a, &qj), &sj) in acc.iter_mut().zip(q).zip(s) {
+            *a += xk * (qj as f32 * sj);
+        }
+    }
+
+    #[test]
+    fn parse_display_roundtrip() {
+        for isa in Isa::ALL {
+            assert_eq!(Isa::parse(&isa.to_string()).unwrap(), isa);
+        }
+        assert!(Isa::parse("sse").is_err());
+        assert!(Isa::parse("AVX2").is_err());
+        assert!(Isa::parse("auto").is_err(), "auto is a config kind, \
+                 not a concrete tier");
+    }
+
+    #[test]
+    fn resolve_precedence_and_availability() {
+        // auto picks the detected best, never vnni
+        let best = resolve_with(None, IsaKind::Auto).unwrap();
+        assert_eq!(best, detect_best());
+        assert_ne!(best, Isa::Vnni);
+        // scalar and vnni resolve on every host
+        assert_eq!(resolve_with(None, IsaKind::Scalar).unwrap(),
+                   Isa::Scalar);
+        assert_eq!(resolve_with(None, IsaKind::Vnni).unwrap(),
+                   Isa::Vnni);
+        // the env override wins over the config knob
+        assert_eq!(resolve_with(Some("scalar"), IsaKind::Avx512)
+                       .unwrap(),
+                   Isa::Scalar);
+        assert_eq!(resolve_with(Some("vnni"), IsaKind::Scalar)
+                       .unwrap(),
+                   Isa::Vnni);
+        // garbage in the env is a clean error
+        assert!(resolve_with(Some("amx"), IsaKind::Auto).is_err());
+        // forcing an unavailable f32 tier is a hard error
+        for isa in [Isa::Avx2, Isa::Avx512] {
+            let kind = match isa {
+                Isa::Avx2 => IsaKind::Avx2,
+                _ => IsaKind::Avx512,
+            };
+            let r = resolve_with(None, kind);
+            if available(isa) {
+                assert_eq!(r.unwrap(), isa);
+            } else {
+                assert!(r.is_err());
+            }
+        }
+    }
+
+    #[test]
+    fn detection_is_consistent() {
+        assert!(available(Isa::Scalar));
+        assert!(available(Isa::Vnni));
+        assert!(available(detect_best()));
+        if vnni_hw() {
+            // the hardware fast path implies the avx512 f32 tier
+            assert!(available(Isa::Avx512));
+        }
+    }
+
+    #[test]
+    fn f32_rows_match_scalar_bitwise() {
+        // silently a no-op on hosts without the tiers (CI's ISA axis
+        // covers them on capable runners)
+        let mut st = 0x5eed_0001u64;
+        for n in [1usize, 7, 8, 9, 15, 16, 17, 31, 64, 100] {
+            let w: Vec<f32> =
+                (0..n).map(|_| lcg_f32(&mut st)).collect();
+            let xk = lcg_f32(&mut st);
+            let base: Vec<f32> =
+                (0..n).map(|_| lcg_f32(&mut st)).collect();
+            let mut want = base.clone();
+            scalar_f32(xk, &w, &mut want);
+            if available(Isa::Avx2) {
+                let mut got = base.clone();
+                mac_row_f32_avx2(xk, &w, &mut got);
+                assert_eq!(got.iter().map(|v| v.to_bits())
+                               .collect::<Vec<_>>(),
+                           want.iter().map(|v| v.to_bits())
+                               .collect::<Vec<_>>(),
+                           "avx2 f32 row diverged at n={n}");
+            }
+            if available(Isa::Avx512) {
+                let mut got = base.clone();
+                mac_row_f32_avx512(xk, &w, &mut got);
+                assert_eq!(got.iter().map(|v| v.to_bits())
+                               .collect::<Vec<_>>(),
+                           want.iter().map(|v| v.to_bits())
+                               .collect::<Vec<_>>(),
+                           "avx512 f32 row diverged at n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_rows_match_scalar_bitwise() {
+        let mut st = 0x5eed_0002u64;
+        for n in [1usize, 7, 8, 9, 15, 16, 17, 31, 64, 100] {
+            let q: Vec<i8> = (0..n)
+                .map(|_| (lcg_f32(&mut st) * 64.0) as i8)
+                .collect();
+            let s: Vec<f32> = (0..n)
+                .map(|_| lcg_f32(&mut st).abs() / 100.0 + 1e-3)
+                .collect();
+            let xk = lcg_f32(&mut st);
+            let base: Vec<f32> =
+                (0..n).map(|_| lcg_f32(&mut st)).collect();
+            let mut want = base.clone();
+            scalar_i8(xk, &q, &s, &mut want);
+            if available(Isa::Avx2) {
+                let mut got = base.clone();
+                mac_row_i8_avx2(xk, &q, &s, &mut got);
+                assert_eq!(got.iter().map(|v| v.to_bits())
+                               .collect::<Vec<_>>(),
+                           want.iter().map(|v| v.to_bits())
+                               .collect::<Vec<_>>(),
+                           "avx2 i8 row diverged at n={n}");
+            }
+            if available(Isa::Avx512) {
+                let mut got = base.clone();
+                mac_row_i8_avx512(xk, &q, &s, &mut got);
+                assert_eq!(got.iter().map(|v| v.to_bits())
+                               .collect::<Vec<_>>(),
+                           want.iter().map(|v| v.to_bits())
+                               .collect::<Vec<_>>(),
+                           "avx512 i8 row diverged at n={n}");
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn dpbusd_pack_matches_integer_emulation() {
+        if !vnni_hw() {
+            return; // hardware-only check; emulation is the referee
+        }
+        let mut st = 0x5eed_0003u64;
+        for (group, cols) in
+            [(4usize, 16usize), (8, 32), (6, 40), (64, 48)]
+        {
+            let q: Vec<i8> = (0..group * cols)
+                .map(|_| (lcg_f32(&mut st) * 64.0) as i8)
+                .collect();
+            let u: Vec<u8> = (0..group)
+                .map(|_| (lcg_f32(&mut st).abs() * 100.0) as u8)
+                .collect();
+            // build the 4-k pack for this one group
+            let panels = group.div_ceil(4);
+            let mut pack = vec![0i8; panels * cols * 4];
+            for (k, row) in q.chunks(cols).enumerate() {
+                for (j, &v) in row.iter().enumerate() {
+                    pack[((k / 4) * cols + j) * 4 + k % 4] = v;
+                }
+            }
+            let mut want = vec![0i32; cols];
+            for (k, row) in q.chunks(cols).enumerate() {
+                for (d, &v) in want.iter_mut().zip(row) {
+                    *d += u[k] as i32 * v as i32;
+                }
+            }
+            let mut got = vec![0i32; cols];
+            // SAFETY: vnni_hw() checked above
+            let done = unsafe {
+                dot_pack_dpbusd(&u, &pack, cols, 0, cols, &mut got)
+            };
+            // finish the ragged column tail like mac_panel does
+            for (j, slot) in
+                got.iter_mut().enumerate().skip(done)
+            {
+                let mut acc = 0i32;
+                for (k, &uk) in u.iter().enumerate() {
+                    acc += uk as i32 * q[k * cols + j] as i32;
+                }
+                *slot = acc;
+            }
+            assert_eq!(got, want,
+                       "dpbusd diverged at group={group} cols={cols}");
+        }
+    }
+}

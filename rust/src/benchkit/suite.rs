@@ -24,10 +24,11 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::backend::pool::auto_threads;
+use crate::backend::simd::{self, Isa};
 use crate::benchkit::CaseResult;
 use crate::ccl::StatsSnapshot;
 use crate::config::{BackendKind, Dtype, EngineConfig, GemmKernel,
-                    SchedulerKind};
+                    IsaKind, SchedulerKind};
 use crate::engine::Engine;
 use crate::util::Json;
 
@@ -156,6 +157,11 @@ pub struct ScenarioRecord {
     pub threads: usize,
     /// GEMM kernel the reference backend ran
     pub kernel: GemmKernel,
+    /// instruction tier the reference backend's GEMM dispatched to
+    /// (DESIGN.md §14) — the *resolved* tier, after auto-detection
+    /// and any `XEONSERVE_FORCE_ISA` override; `"scalar"` on
+    /// backends that ignore the ISA knob
+    pub isa: String,
     /// execution backend that measured this row (int8 rows only exist
     /// for `reference` — DESIGN.md §11)
     pub backend: BackendKind,
@@ -219,6 +225,7 @@ impl ScenarioRecord {
         put("world", Json::Num(self.world as f64));
         put("threads", Json::Num(self.threads as f64));
         put("kernel", Json::Str(self.kernel.to_string()));
+        put("isa", Json::Str(self.isa.clone()));
         put("backend", Json::Str(self.backend.to_string()));
         put("weight_dtype", Json::Str(self.weight_dtype.to_string()));
         put("kv_dtype", Json::Str(self.kv_dtype.to_string()));
@@ -280,9 +287,11 @@ impl ScenarioRecord {
             SchedulerKind::Continuous => "_cont",
         };
         CaseResult {
-            name: format!("{}_w{}_{}x{}_{}{}{}", self.name, self.world,
-                          self.kernel, self.threads, dtype, chunk,
-                          sched),
+            // the isa tag keeps the per-ISA batched_decode rows from
+            // colliding with the auto-resolved standard rows
+            name: format!("{}_w{}_{}x{}_{}_{}{}{}", self.name,
+                          self.world, self.kernel, self.threads,
+                          self.isa, dtype, chunk, sched),
             iters: self.tokens_out as usize,
             mean_us: self.ms_per_token * 1e3,
             p50_us: self.decode_p50_us,
@@ -353,6 +362,14 @@ pub fn run_scenario(cfg: &EngineConfig, sc: &Scenario)
         }
         _ => 0,
     };
+    // record the tier the GEMM actually dispatched to — resolve()
+    // applies the same auto-detect + env-override chain the backend
+    // ran under (DESIGN.md §14); non-reference backends ignore the
+    // knob entirely, so their rows pin the neutral "scalar"
+    let isa = match cfg.backend {
+        BackendKind::Reference => simd::resolve(cfg.isa)?.to_string(),
+        _ => Isa::Scalar.to_string(),
+    };
     let mem = engine.mem_usage();
     let m = &mut engine.metrics;
     let tokens_per_s = m.throughput(span);
@@ -373,6 +390,7 @@ pub fn run_scenario(cfg: &EngineConfig, sc: &Scenario)
         world: cfg.world,
         threads,
         kernel: cfg.kernel,
+        isa,
         backend: cfg.backend,
         weight_dtype: cfg.weight_dtype,
         kv_dtype: cfg.kv_dtype,
@@ -405,6 +423,10 @@ pub fn run_scenario(cfg: &EngineConfig, sc: &Scenario)
 /// (`single_stream_decode`, `batched_decode`) additionally record an
 /// `int8` weights+KV row next to the `f32` row, so every recording
 /// carries its own quantization comparison (DESIGN.md §11).
+/// `batched_decode` further records one row per instruction tier the
+/// host can run (pinned `isa = scalar/avx2/avx512` at f32, plus the
+/// `vnni` int8 row, which every host can run via the exact integer
+/// emulation) — the DESIGN.md §14 per-ISA comparison.
 ///
 /// Blocked rows run at a FIXED 2 threads when `base.threads` is 0
 /// (auto): a host-independent thread count keeps `BENCH_*.json`
@@ -486,6 +508,10 @@ pub fn run_matrix(base: &EngineConfig, worlds: &[usize], quick: bool,
                 let mut scalar = cfg.clone();
                 scalar.kernel = GemmKernel::Scalar;
                 scalar.threads = 1;
+                // the pinned baseline stays the scalar *chain*: the
+                // ≥2× acceptance ratio must not silently become a
+                // SIMD-vs-SIMD comparison on a capable host
+                scalar.isa = IsaKind::Scalar;
                 progress(&format!("{} w{world} scalar baseline",
                                   sc.name));
                 out.push(run_scenario(&scalar, sc)?);
@@ -494,6 +520,37 @@ pub fn run_matrix(base: &EngineConfig, worlds: &[usize], quick: bool,
                 one.threads = 1;
                 progress(&format!("{} w{world} blocked x1", sc.name));
                 out.push(run_scenario(&one, sc)?);
+            }
+            // the §14 per-ISA batched_decode sweep: the same blocked
+            // threaded workload pinned to each instruction tier the
+            // host can run, plus the vnni int8 row (always runnable —
+            // its integer kernel has an exact scalar emulation).
+            // Appended AFTER the standard rows so the first-match
+            // accessors above keep reading the auto-resolved rows.
+            if cfg.backend == BackendKind::Reference
+                && sc.name == "batched_decode"
+            {
+                for (kind, isa) in [(IsaKind::Scalar, Isa::Scalar),
+                                    (IsaKind::Avx2, Isa::Avx2),
+                                    (IsaKind::Avx512, Isa::Avx512)] {
+                    if !simd::available(isa) {
+                        continue;
+                    }
+                    let mut row = cfg.clone();
+                    row.isa = kind;
+                    progress(&format!("{} w{world} blocked x{} f32 \
+                                       isa={kind}",
+                                      sc.name, row.threads));
+                    out.push(run_scenario(&row, sc)?);
+                }
+                let mut vn = cfg.clone();
+                vn.isa = IsaKind::Vnni;
+                vn.weight_dtype = Dtype::Int8;
+                vn.kv_dtype = Dtype::Int8;
+                progress(&format!("{} w{world} blocked x{} int8 \
+                                   isa=vnni",
+                                  sc.name, vn.threads));
+                out.push(run_scenario(&vn, sc)?);
             }
         }
     }
@@ -520,6 +577,10 @@ pub fn matrix_to_json(bench: &str, model: &str, quick: bool,
         "available_parallelism".into(),
         Json::Num(std::thread::available_parallelism()
                       .map(|n| n.get()).unwrap_or(1) as f64),
+    );
+    host.insert(
+        "best_isa".into(),
+        Json::Str(simd::detect_best().to_string()),
     );
     o.insert("host".into(), Json::Obj(host));
     o.insert(
@@ -669,11 +730,12 @@ pub fn storm_row(j: &Json, world: usize, scheduler: &str)
 /// including the threaded-vs-scalar batched-decode pair, the
 /// int8-vs-f32 batched-decode pair, the whole-vs-chunked
 /// `long_prompt_interactive` pair, and the fcfs-vs-continuous
-/// `shared_prefix_storm` pair the acceptance gates read — so a
+/// `shared_prefix_storm` pair the acceptance gates read, and ≥ 2
+/// distinct `isa` tiers among the `batched_decode` rows (§14) — so a
 /// `--worlds 2` recording validates against its own sweep, while the
 /// committed full recordings must actually contain what they claim.
-/// (Pre-§13 recordings without the scheduler fields no longer
-/// validate; regenerate them — BENCH_pr4/pr5.json stay committed as
+/// (Recordings predating a required field no longer validate;
+/// regenerate them — BENCH_pr4/pr5/pr6.json stay committed as
 /// trajectory history.)
 ///
 /// Every failure message begins `rule {name}: ` and names the
@@ -720,6 +782,7 @@ pub fn validate_bench(j: &Json) -> Result<()> {
     let mut storm_fcfs = false;
     let mut storm_continuous = false;
     let mut any_reference = false;
+    let mut batched_isas = std::collections::BTreeSet::new();
     for (i, r) in rows.iter().enumerate() {
         let ctx = || format!("scenario row {i}");
         let name = r.get("name").and_then(Json::as_str)
@@ -764,6 +827,17 @@ pub fn validate_bench(j: &Json) -> Result<()> {
         if kernel != "blocked" && kernel != "scalar" {
             bail!("rule row-kernel: {} ({name}): \
                    unknown kernel {kernel:?}", ctx());
+        }
+        // every row must say what instruction tier computed it — the
+        // §14 per-ISA comparison is meaningless without it
+        let isa = r.get("isa").and_then(Json::as_str)
+            .with_context(|| {
+                format!("rule row-isa: {} ({name}): missing isa",
+                        ctx())
+            })?;
+        if !matches!(isa, "scalar" | "avx2" | "avx512" | "vnni") {
+            bail!("rule row-isa: {} ({name}): unknown isa {isa:?}",
+                  ctx());
         }
         let backend = r.get("backend").and_then(Json::as_str)
             .with_context(|| {
@@ -820,6 +894,9 @@ pub fn validate_bench(j: &Json) -> Result<()> {
         worlds.insert(world);
         any_reference |= backend == "reference";
         if name == "batched_decode" {
+            if backend == "reference" {
+                batched_isas.insert(isa.to_string());
+            }
             let f32_row = dtypes == ["f32", "f32"];
             batched_scalar |= kernel == "scalar" && f32_row;
             batched_threaded |=
@@ -886,6 +963,14 @@ pub fn validate_bench(j: &Json) -> Result<()> {
                scheduler pair (need a scheduler = \"fcfs\" row AND a \
                \"continuous\" row on reference-backend recordings — \
                DESIGN.md §13)");
+    }
+    // the DESIGN.md §14 ISA gate: reference recordings must compare
+    // at least two instruction tiers on batched_decode — every host
+    // can supply {scalar, vnni}, so availability is no excuse
+    if any_reference && batched_isas.len() < 2 {
+        bail!("rule isa-coverage: batched_decode rows cover only \
+               {batched_isas:?}, need >= 2 distinct isa tiers on \
+               reference-backend recordings (DESIGN.md §14)");
     }
     Ok(())
 }
@@ -976,6 +1061,14 @@ mod tests {
                    Some("batched_decode"));
         assert_eq!(j.get("kernel").and_then(Json::as_str),
                    Some("blocked"));
+        // auto-resolved, so host-dependent — but always a known tier,
+        // and never vnni (vnni is opt-in only) unless the env
+        // override forced it
+        let isa = j.get("isa").and_then(Json::as_str).unwrap();
+        if std::env::var_os(simd::FORCE_ISA_ENV).is_none() {
+            assert!(matches!(isa, "scalar" | "avx2" | "avx512"),
+                    "unexpected auto-resolved isa {isa:?}");
+        }
         assert_eq!(j.get("backend").and_then(Json::as_str),
                    Some("reference"));
         assert_eq!(j.get("weight_dtype").and_then(Json::as_str),
@@ -1013,6 +1106,11 @@ mod tests {
 
     #[test]
     fn matrix_document_passes_validation() {
+        // a forced ISA pins every row to one tier, so the matrix
+        // can't cover the §14 comparison it normally records
+        if std::env::var_os(simd::FORCE_ISA_ENV).is_some() {
+            return;
+        }
         // world=1-only matrix is fast; splice the same rows into
         // worlds 2 and 4 to exercise the full validator offline
         let recs =
@@ -1032,6 +1130,13 @@ mod tests {
         validate_bench(&parsed).unwrap();
         assert!(batched_speedup(&parsed, 1).is_some());
         assert!(int8_speedup(&parsed, 1).is_some());
+        // the §14 per-ISA rows: scalar and vnni are host-independent,
+        // so every matrix carries at least this comparison pair
+        for isa in ["scalar", "vnni"] {
+            assert!(recs.iter().any(|r| r.name == "batched_decode"
+                                        && r.isa == isa),
+                    "no batched_decode row at isa={isa}");
+        }
         // the §13 scheduler pair is recorded, and the continuous row
         // actually exercised the reuse path (hits > 0 once the first
         // wave of misses published the prefix)
@@ -1064,7 +1169,7 @@ mod tests {
         for field in ["weight_dtype", "kv_dtype", "weight_bytes",
                       "kv_bytes", "backend", "prefill_chunk",
                       "decode_stall_p99_us", "scheduler",
-                      "prefix_hit_rate"] {
+                      "prefix_hit_rate", "isa"] {
             let crippled =
                 text.replace(&format!("\"{field}\""),
                              &format!("\"x_{field}\""));
@@ -1093,6 +1198,11 @@ mod tests {
     /// rule and the offending row — the CI failure output contract.
     #[test]
     fn validator_failures_name_their_rule() {
+        // the corruptions below assume the matrix's normal per-ISA
+        // row coverage, which a forced ISA collapses to one tier
+        if std::env::var_os(simd::FORCE_ISA_ENV).is_some() {
+            return;
+        }
         let recs =
             run_matrix(&tiny_cfg(), &[1], true, |_| {}).unwrap();
         let doc = |rows: &[ScenarioRecord], worlds: &[usize]| {
@@ -1116,6 +1226,9 @@ mod tests {
              "\"tokens_out\"", "\"x_tokens_out\""),
             ("rule row-latency-fields:", "\"ttft_ms\"", "\"x_ttft_ms\""),
             ("rule row-kernel:", "\"blocked\"", "\"warped\""),
+            // "vnni" appears only as an isa value (never a kernel),
+            // so this trips row-isa and nothing upstream of it
+            ("rule row-isa:", "\"vnni\"", "\"mmx\""),
             ("rule row-backend:", "\"reference\"", "\"refurbished\""),
             ("rule row-dtype:", "\"f32\"", "\"f16\""),
             ("rule row-comm:", "\"comm\"", "\"x_comm\""),
@@ -1134,6 +1247,15 @@ mod tests {
         bad[0].prefix_hit_rate = 1.5;
         assert!(err_of(&doc(&bad, &[1]))
                     .contains("rule row-prefix-hit-rate:"));
+
+        // every batched_decode row on the same tier: each row is
+        // individually fine, but the §14 comparison is gone
+        let mut mono = recs.clone();
+        for r in &mut mono {
+            r.isa = "scalar".into();
+        }
+        assert!(err_of(&doc(&mono, &[1]))
+                    .contains("rule isa-coverage:"));
 
         // coverage rules
         let one_name: Vec<ScenarioRecord> = recs.iter()

@@ -218,6 +218,69 @@ impl std::fmt::Display for SchedulerKind {
     }
 }
 
+/// Instruction-set tier for the reference backend's GEMM inner loops
+/// (DESIGN.md §14).
+///
+/// * `Auto` — detect at startup and pick the widest *bit-identical*
+///   f32 tier the CPU has (avx512 → avx2 → scalar).  The default:
+///   every auto-selectable tier reproduces the scalar chain exactly,
+///   so mixed fleets resolving different tiers still bit-agree.
+/// * `Scalar` / `Avx2` / `Avx512` — force one tier.  Forcing a tier
+///   the CPU lacks is a hard error at backend construction, never a
+///   silent fallback.
+/// * `Vnni` — the W8A8 integer scheme: activations quantized to u8
+///   per weight-quant-group and multiplied against the int8 weights
+///   in exact integer arithmetic (`vpdpbusd` on VNNI silicon, a
+///   bit-identical integer emulation elsewhere, so the tier runs on
+///   any host).  Different numerics from the f32 chain — never
+///   auto-selected, and requires `weight_dtype = "int8"`.
+///
+/// The `XEONSERVE_FORCE_ISA` environment variable overrides this knob
+/// per process (CI's ISA axis).  The XLA backend owns its own kernels
+/// and only accepts `auto`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum IsaKind {
+    /// Runtime detection (widest bit-identical f32 tier).
+    #[default]
+    Auto,
+    /// Force the pinned scalar baseline.
+    Scalar,
+    /// Force 8-lane AVX2 f32 rows.
+    Avx2,
+    /// Force 16-lane AVX-512F f32 rows.
+    Avx512,
+    /// Opt in to the W8A8 integer scheme (int8 weights only).
+    Vnni,
+}
+
+impl IsaKind {
+    /// Strict parse of the TOML/CLI spelling; unknown strings are a
+    /// clean config error, never a silent fallback.
+    pub fn parse(s: &str) -> Result<IsaKind> {
+        match s {
+            "auto" => Ok(IsaKind::Auto),
+            "scalar" => Ok(IsaKind::Scalar),
+            "avx2" => Ok(IsaKind::Avx2),
+            "avx512" => Ok(IsaKind::Avx512),
+            "vnni" => Ok(IsaKind::Vnni),
+            _ => bail!(
+                "unknown isa {s:?} (auto|scalar|avx2|avx512|vnni)"),
+        }
+    }
+}
+
+impl std::fmt::Display for IsaKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            IsaKind::Auto => write!(f, "auto"),
+            IsaKind::Scalar => write!(f, "scalar"),
+            IsaKind::Avx2 => write!(f, "avx2"),
+            IsaKind::Avx512 => write!(f, "avx512"),
+            IsaKind::Vnni => write!(f, "vnni"),
+        }
+    }
+}
+
 /// The paper's three optimizations as independent switches, so every
 /// bench can ablate them one at a time.
 #[derive(Clone, Copy, Debug)]
@@ -301,6 +364,9 @@ pub struct EngineConfig {
     pub threads: usize,
     /// reference-backend GEMM implementation (blocked | scalar)
     pub kernel: GemmKernel,
+    /// instruction-set tier for the reference backend's GEMM inner
+    /// loops (auto | scalar | avx2 | avx512 | vnni) — DESIGN.md §14
+    pub isa: IsaKind,
     /// weight storage on the reference backend (f32 | int8) —
     /// DESIGN.md §11
     pub weight_dtype: Dtype,
@@ -338,6 +404,7 @@ impl Default for EngineConfig {
             max_new_tokens: 16,
             threads: 0,
             kernel: GemmKernel::Blocked,
+            isa: IsaKind::Auto,
             weight_dtype: Dtype::F32,
             kv_dtype: Dtype::F32,
             prefill_chunk: 0,
@@ -384,6 +451,14 @@ impl EngineConfig {
         }
         if let Some(v) = j.get("kernel").and_then(Json::as_str) {
             cfg.kernel = GemmKernel::parse(v)?;
+        }
+        if let Some(v) = j.get("isa") {
+            // strict: present-but-invalid must error, never fall back
+            let s = v.as_str().with_context(|| {
+                format!("isa must be a string \
+                         (auto|scalar|avx2|avx512|vnni), got {v:?}")
+            })?;
+            cfg.isa = IsaKind::parse(s)?;
         }
         if let Some(v) = j.get("weight_dtype").and_then(Json::as_str) {
             cfg.weight_dtype = Dtype::parse(v)?;
@@ -490,6 +565,7 @@ impl EngineConfig {
         let _ = writeln!(s, "max_new_tokens = {}", self.max_new_tokens);
         let _ = writeln!(s, "threads = {}", self.threads);
         let _ = writeln!(s, "kernel = \"{}\"", self.kernel);
+        let _ = writeln!(s, "isa = \"{}\"", self.isa);
         let _ = writeln!(s, "weight_dtype = \"{}\"", self.weight_dtype);
         let _ = writeln!(s, "kv_dtype = \"{}\"", self.kv_dtype);
         let _ = writeln!(s, "prefill_chunk = {}", self.prefill_chunk);
@@ -567,6 +643,29 @@ impl EngineConfig {
                  prefill_chunk={}); chunking is a reference-backend \
                  feature (DESIGN.md §12)",
                 self.prefill_chunk
+            );
+        }
+        // the ISA knob steers the reference backend's in-tree GEMM
+        // loops; PJRT owns its own kernels, so forcing a tier there
+        // would silently do nothing
+        if self.backend == BackendKind::Xla && self.isa != IsaKind::Auto
+        {
+            bail!(
+                "backend \"xla\" only supports isa = \"auto\" (got \
+                 isa={}); the ISA tiers steer the reference backend's \
+                 kernels (DESIGN.md §14)",
+                self.isa
+            );
+        }
+        // vnni computes weight matmuls in int8 — it has nothing to run
+        // on when the weights are stored dense f32
+        if self.isa == IsaKind::Vnni && self.weight_dtype != Dtype::Int8
+        {
+            bail!(
+                "isa = \"vnni\" requires weight_dtype = \"int8\" (got \
+                 weight_dtype={}); the W8A8 scheme computes int8 \
+                 weight matmuls in integer arithmetic (DESIGN.md §14)",
+                self.weight_dtype
             );
         }
         // shared-prefix attach reads KV across segment + lane storage;
@@ -725,6 +824,7 @@ beta_gbps = 10.0
             max_new_tokens: 9,
             threads: 3,
             kernel: GemmKernel::Scalar,
+            isa: IsaKind::Vnni,
             weight_dtype: Dtype::Int8,
             kv_dtype: Dtype::Int8,
             prefill_chunk: 16,
@@ -749,6 +849,7 @@ beta_gbps = 10.0
         assert_eq!(back.max_new_tokens, cfg.max_new_tokens);
         assert_eq!(back.threads, 3);
         assert_eq!(back.kernel, GemmKernel::Scalar);
+        assert_eq!(back.isa, IsaKind::Vnni);
         assert_eq!(back.weight_dtype, Dtype::Int8);
         assert_eq!(back.kv_dtype, Dtype::Int8);
         assert_eq!(back.prefill_chunk, 16);
@@ -776,6 +877,13 @@ beta_gbps = 10.0
             "[sampling]\ntop_p = 1.5").is_err());
         assert!(EngineConfig::from_toml_str("threads = 10000").is_err());
         assert!(EngineConfig::from_toml_str("kernel = \"simd\"").is_err());
+        // isa is strict-parsed: unknown tiers, wrong case, and
+        // non-strings are clean config errors, never an auto fallback
+        assert!(EngineConfig::from_toml_str("isa = \"sse\"").is_err());
+        assert!(EngineConfig::from_toml_str("isa = \"AVX2\"").is_err());
+        assert!(EngineConfig::from_toml_str("isa = 512").is_err());
+        // vnni without int8 weights has nothing to compute in int8
+        assert!(EngineConfig::from_toml_str("isa = \"vnni\"").is_err());
         // unknown dtype strings are clean errors, never a fallback
         assert!(EngineConfig::from_toml_str(
             "weight_dtype = \"int4\"").is_err());
@@ -811,6 +919,57 @@ beta_gbps = 10.0
         assert_eq!(f.scheduler, SchedulerKind::Fcfs);
         assert_eq!(SchedulerKind::Fcfs.to_string(), "fcfs");
         assert_eq!(SchedulerKind::Continuous.to_string(), "continuous");
+    }
+
+    #[test]
+    fn isa_parse_and_defaults() {
+        assert_eq!(EngineConfig::default().isa, IsaKind::Auto);
+        for (text, want) in [
+            ("isa = \"auto\"", IsaKind::Auto),
+            ("isa = \"scalar\"", IsaKind::Scalar),
+            ("isa = \"avx2\"", IsaKind::Avx2),
+            ("isa = \"avx512\"", IsaKind::Avx512),
+        ] {
+            let c = EngineConfig::from_toml_str(text).unwrap();
+            assert_eq!(c.isa, want);
+        }
+        // vnni parses, but only together with int8 weights
+        let v = EngineConfig::from_toml_str(
+            "isa = \"vnni\"\nweight_dtype = \"int8\"")
+            .unwrap();
+        assert_eq!(v.isa, IsaKind::Vnni);
+        for k in [IsaKind::Auto, IsaKind::Scalar, IsaKind::Avx2,
+                  IsaKind::Avx512, IsaKind::Vnni]
+        {
+            assert_eq!(IsaKind::parse(&k.to_string()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn vnni_isa_requires_int8_weights() {
+        let cfg = EngineConfig {
+            isa: IsaKind::Vnni,
+            weight_dtype: Dtype::Int8,
+            ..Default::default()
+        };
+        cfg.validate().unwrap();
+        let bad = EngineConfig {
+            isa: IsaKind::Vnni,
+            ..Default::default()
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn xla_backend_rejects_forced_isa() {
+        // forcing a reference-backend kernel tier on the PJRT backend
+        // would silently do nothing — reject it at validation
+        let cfg = EngineConfig {
+            backend: BackendKind::Xla,
+            isa: IsaKind::Scalar,
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

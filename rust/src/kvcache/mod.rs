@@ -89,8 +89,10 @@ impl KvLayer {
 
     /// Write one (lane, head, position) row: copy at f32, quantize
     /// (ascending scan) at int8.  `kv` are the roped key row and the
-    /// value row, each `head_dim` long.
-    pub fn append_row(&mut self, row: usize, kv: (&[f32], &[f32])) {
+    /// value row, each `head_dim` long.  Errs at int8 when a row value
+    /// is non-finite (quantizing it would silently corrupt the cache).
+    pub fn append_row(&mut self, row: usize, kv: (&[f32], &[f32]))
+                      -> Result<()> {
         let (krow, vrow) = kv;
         debug_assert_eq!(krow.len(), vrow.len());
         let hd = krow.len();
@@ -100,12 +102,13 @@ impl KvLayer {
                 v[row * hd..(row + 1) * hd].copy_from_slice(vrow);
             }
             KvLayer::Int8 { k, v, k_scale, v_scale } => {
-                k_scale[row] =
-                    quant_row_into(krow, &mut k[row * hd..(row + 1) * hd]);
-                v_scale[row] =
-                    quant_row_into(vrow, &mut v[row * hd..(row + 1) * hd]);
+                k_scale[row] = quant_row_into(
+                    krow, &mut k[row * hd..(row + 1) * hd])?;
+                v_scale[row] = quant_row_into(
+                    vrow, &mut v[row * hd..(row + 1) * hd])?;
             }
         }
+        Ok(())
     }
 
     /// Copy one row (values *and* scales) from `src` — the
@@ -824,7 +827,7 @@ mod tests {
         let mut layer = KvLayer::new(Dtype::F32, 4, hd);
         let krow: Vec<f32> = (0..hd).map(|i| i as f32 * 0.5).collect();
         let vrow: Vec<f32> = (0..hd).map(|i| -(i as f32)).collect();
-        layer.append_row(2, (&krow, &vrow));
+        layer.append_row(2, (&krow, &vrow)).unwrap();
         match &layer {
             KvLayer::F32 { k, v } => {
                 assert_eq!(&k[2 * hd..3 * hd], &krow[..]);
@@ -847,7 +850,7 @@ mod tests {
             (0..hd).map(|i| ((i * 7 % 5) as f32 - 2.0) * 0.33).collect();
         let vrow: Vec<f32> =
             (0..hd).map(|i| ((i * 3 % 11) as f32 - 5.0) * 0.21).collect();
-        layer.append_row(1, (&krow, &vrow));
+        layer.append_row(1, (&krow, &vrow)).unwrap();
         match &layer {
             KvLayer::Int8 { k, v, k_scale, v_scale } => {
                 for (i, &orig) in krow.iter().enumerate() {
@@ -1146,13 +1149,15 @@ mod tests {
             // a 16-row shared segment (one page of prompt KV)
             let mut shared = KvLayer::new(dtype, 16, hd);
             for r in 0..16 {
-                shared.append_row(r, (&krow_for(r), &vrow_for(r)));
+                shared.append_row(r, (&krow_for(r), &vrow_for(r)))
+                      .unwrap();
             }
             // the copied rows must be bit-identical to rows the lane
             // would have appended itself (quantize-once property)
             let mut direct = KvLayer::new(dtype, 16, hd);
             for r in 0..16 {
-                direct.append_row(r, (&krow_for(r), &vrow_for(r)));
+                direct.append_row(r, (&krow_for(r), &vrow_for(r)))
+                      .unwrap();
             }
             assert_eq!(layer_image(&shared), layer_image(&direct));
 
@@ -1162,7 +1167,8 @@ mod tests {
                 serial.copy_row_from(r, &shared, r, hd);
             }
             for r in 16..rows {
-                serial.append_row(r, (&krow_for(r), &vrow_for(r)));
+                serial.append_row(r, (&krow_for(r), &vrow_for(r)))
+                      .unwrap();
             }
 
             // threaded: same copies, then 4 threads append disjoint
@@ -1211,9 +1217,11 @@ mod tests {
                                     let vd =
                                         unsafe { vs.slice(r * hd, hd) };
                                     unsafe { kss.slice(r, 1) }[0] =
-                                        quant_row_into(&kf(r), kd);
+                                        quant_row_into(&kf(r), kd)
+                                            .unwrap();
                                     unsafe { vss.slice(r, 1) }[0] =
-                                        quant_row_into(&vf(r), vd);
+                                        quant_row_into(&vf(r), vd)
+                                            .unwrap();
                                 }
                             });
                         }

@@ -11,6 +11,7 @@
 //!                    [--json BENCH.json] [--quick true]
 //! xeonserve bench    --validate BENCH.json
 //! xeonserve bench    [--steps 32] [--prompt-len 8]   (legacy one-shot)
+//! xeonserve isa      [--check scalar|avx2|avx512|vnni]
 //! xeonserve info     [--artifacts artifacts]
 //! ```
 
@@ -40,6 +41,7 @@ USAGE:
                      [--label NAME]
   xeonserve bench    --validate FILE
   xeonserve bench    [--steps N] [--prompt-len N]   (legacy one-shot)
+  xeonserve isa      [--check scalar|avx2|avx512|vnni]
   xeonserve info     [--artifacts DIR]
 
 serve runs every rank as an in-process thread.  launch/worker is the
@@ -58,14 +60,18 @@ weights+KV decode rows, the chunked-prefill decode-stall pair, and
 the fcfs-vs-continuous shared_prefix_storm pair, and writes the
 xeonserve-bench/v1 JSON (--json) that BENCH_*.json files in the repo
 are recorded with — every row carries its weight/KV dtype, prefill
-chunk size, scheduler, prefix hit rate, and measured resident bytes.
+chunk size, scheduler, prefix hit rate, instruction tier (isa), and
+measured resident bytes; batched_decode additionally records one row
+per instruction tier the host can run (DESIGN.md \u{a7}14).
 --validate schema-checks such a file and exits; every failure names
 the validator rule and row that tripped it.  Serving knobs live in
 the TOML: weight_dtype / kv_dtype = \"int8\" (reference backend
 only), prefill_chunk = N (0 = whole-prompt; chunked prefill,
-reference backend only), and scheduler = \"fcfs\" | \"continuous\"
+reference backend only), scheduler = \"fcfs\" | \"continuous\"
 (continuous batching + copy-on-write shared-prefix KV reuse,
-reference backend only).  The serve/launch JSON API streams per-token
+reference backend only), and isa = \"auto\" | \"scalar\" | \"avx2\"
+| \"avx512\" | \"vnni\" (GEMM instruction tier, reference backend
+only; vnni requires weight_dtype = \"int8\" — DESIGN.md \u{a7}14).  The serve/launch JSON API streams per-token
 reply frames when a request carries \"stream\": true, and
 {\"cancel\": id} aborts an in-flight request idempotently.
 
@@ -148,6 +154,36 @@ fn run_launch(cfg: EngineConfig, opts: &LaunchOptions, args: &Args)
             )
         }
     }
+}
+
+/// `xeonserve isa`: report the host's instruction tiers (DESIGN.md
+/// §14).  Bare, it lists every tier with availability and how vnni
+/// would run (hardware dpbusd vs. exact emulation); `--check TIER`
+/// answers via the exit code — the CI per-ISA test loop gates each
+/// `XEONSERVE_FORCE_ISA` leg on it.
+fn run_isa(args: &Args) -> Result<()> {
+    use xeonserve::backend::simd::{self, Isa};
+    if let Some(t) = args.get("check") {
+        let isa = Isa::parse(t)?;
+        if !simd::available(isa) {
+            bail!("isa {isa}: not available on this host");
+        }
+        println!("isa {isa}: available");
+        return Ok(());
+    }
+    println!("detected best tier: {} (vnni is opt-in — DESIGN.md §14)",
+             simd::detect_best());
+    for isa in Isa::ALL {
+        let note = match isa {
+            Isa::Vnni if simd::vnni_hw() => " (hardware dpbusd)",
+            Isa::Vnni => " (exact integer emulation)",
+            _ => "",
+        };
+        println!("  {isa}: {}{note}",
+                 if simd::available(isa) { "available" }
+                 else { "unavailable" });
+    }
+    Ok(())
 }
 
 /// `xeonserve bench`: the recording suite (default), the schema
@@ -343,6 +379,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "bench" => run_bench(&args),
+        "isa" => run_isa(&args),
         "info" => {
             let dir =
                 PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));

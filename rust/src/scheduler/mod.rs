@@ -237,7 +237,12 @@ impl FcfsScheduler {
             return None;
         }
         if decodes_pending && self.burst >= self.max_prefill_burst {
-            self.burst = 0; // yield one decode round, then allow again
+            // yield to decode.  The counter must NOT reset here: only
+            // an actual decode round (on_decode_round) or an idle
+            // queue earns a fresh budget.  Resetting on refusal let a
+            // second probe in the same engine step admit another full
+            // burst — up to 2× max_prefill_burst chunks between decode
+            // rounds (the PR 7 double-admission bug).
             return None;
         }
         let cost = self.chunk_cost(self.queue.front().unwrap().prompt.len());
@@ -424,8 +429,42 @@ mod tests {
         assert!(s.next_admission(true).is_some());
         assert!(s.next_admission(true).is_some());
         assert!(s.next_admission(true).is_none());
-        // after the yield the burst counter restarts
+        // only an actual decode round restarts the burst counter
+        s.on_decode_round();
         assert!(s.next_admission(true).is_some());
+    }
+
+    #[test]
+    fn repeated_probes_at_the_bound_do_not_reopen_the_budget() {
+        // regression (PR 7): refusing at the bound used to reset the
+        // burst counter, so the engine's real calling pattern — several
+        // next_admission probes within one step — could admit up to
+        // 2× max_prefill_burst chunks between decode rounds
+        for k in 1..=3 {
+            let mut s = FcfsScheduler::new(k);
+            for _ in 0..(4 * k + 2) {
+                s.submit(vec![0], 1);
+            }
+            let mut admitted = 0;
+            while s.next_admission(true).is_some() {
+                admitted += 1;
+            }
+            assert_eq!(admitted, k, "first burst must stop at {k}");
+            // every further probe without a decode round must refuse —
+            // including probes right after a refusal
+            for probe in 0..5 {
+                assert!(s.next_admission(true).is_none(),
+                        "probe {probe} after refusal re-admitted \
+                         (k={k})");
+            }
+            // a decode round restores exactly one more burst
+            s.on_decode_round();
+            let mut second = 0;
+            while s.next_admission(true).is_some() {
+                second += 1;
+            }
+            assert_eq!(second, k, "post-decode burst must be {k}");
+        }
     }
 
     #[test]
@@ -460,6 +499,16 @@ mod tests {
                 assert!(burst <= k,
                         "burst of {burst} exceeded bound {k}");
                 admitted_total += burst;
+                // the engine probes more than once per step: repeated
+                // probes before the decode round must stay refused
+                // (the PR 7 regression admitted a second full burst)
+                for _ in 0..2 {
+                    if !s.is_empty() {
+                        assert!(s.next_admission(true).is_none(),
+                                "re-probe before the decode round \
+                                 admitted a request (k={k})");
+                    }
+                }
                 // the scheduler forced a yield: a decode round runs
                 s.on_decode_round();
                 decode_rounds += 1;
@@ -626,7 +675,11 @@ mod tests {
         // the decode-starvation invariant restated in chunks: with
         // decodes always pending, at most max(k, cost(front)) chunks
         // of prefill are admitted between two decode rounds, and the
-        // queue still drains (oldest_wait eventually clears)
+        // queue still drains (oldest_wait eventually clears).  The
+        // engine probes the scheduler several times per step (serving
+        // loop + refill paths), so each "step" here interleaves extra
+        // probes after the drain — under the old refusal-side reset
+        // those probes re-opened the budget and this bound broke.
         for k in 1..=4usize {
             let chunk = 4usize;
             let mut s = FcfsScheduler::with_chunking(k, chunk);
@@ -637,12 +690,26 @@ mod tests {
                 s.submit(vec![0; len], 1);
             }
             let mut decode_rounds = 0;
+            let mut rng = 0x2545F49_14F6CDD1u64 ^ k as u64;
             while !s.is_empty() {
                 assert!(s.oldest_wait().is_some());
                 let mut burst_chunks = 0;
                 while let Some(q) = s.next_admission(true) {
                     burst_chunks +=
                         q.prompt.len().div_ceil(chunk);
+                }
+                // the engine's real calling pattern: more probes land
+                // between the refusal and the decode round — every one
+                // must keep refusing, admitting nothing
+                rng = rng.wrapping_mul(6364136223846793005)
+                         .wrapping_add(1442695040888963407);
+                let extra = (rng >> 33) % 4;
+                for _ in 0..extra {
+                    if !s.is_empty() {
+                        assert!(s.next_admission(true).is_none(),
+                                "probe between refusal and decode \
+                                 round admitted a request (k={k})");
+                    }
                 }
                 assert!(burst_chunks <= (k - 1) + max_cost,
                         "burst of {burst_chunks} chunks exceeded \
