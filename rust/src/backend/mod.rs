@@ -65,15 +65,30 @@ pub enum StepCtx<'a> {
     /// lane `b` appends its KV at `positions[b]` and attends over
     /// `[0, positions[b]]`.
     Decode { positions: &'a [i32] },
+    /// One speculative verify step (DESIGN.md §15): row `r` belongs to
+    /// batch lane `lanes[r]`, appends its KV at `positions[r]` and
+    /// attends over `[0, positions[r]]`.  Unlike `Decode`, rows are a
+    /// *subset* of lanes and a lane may own several consecutive rows
+    /// (its k+1 draft positions, strictly ascending) — the causal
+    /// semantics per row are exactly one-at-a-time decode, which is
+    /// the bit-identity argument for greedy-prefix acceptance.
+    Verify {
+        /// owning batch lane per activation row
+        lanes: &'a [u32],
+        /// KV append position per activation row (strictly ascending
+        /// within a lane)
+        positions: &'a [i32],
+    },
 }
 
 impl StepCtx<'_> {
     /// Number of activation rows (`bucket` for prefill, `batch` rows
-    /// for decode).
+    /// for decode, one per verified position for verify).
     pub fn rows(&self, batch: usize) -> usize {
         match self {
             StepCtx::Prefill { bucket, .. } => *bucket,
             StepCtx::Decode { .. } => batch,
+            StepCtx::Verify { lanes, .. } => lanes.len(),
         }
     }
 }
@@ -164,6 +179,18 @@ pub trait ExecBackend {
     fn drop_prefix(&mut self, seg: u32) -> Result<()> {
         let _ = seg;
         anyhow::bail!("this backend does not support shared prefixes")
+    }
+
+    /// Discard lane `lane`'s KV rows at positions `[new_len, max_seq)`
+    /// — the speculative-decode rejection rollback (DESIGN.md §15).
+    /// After this call the lane's cache must be indistinguishable from
+    /// one that only ever appended `new_len` rows.  Default:
+    /// unsupported — speculation is rejected at config validation for
+    /// backends that do not override it.
+    fn truncate_lane(&mut self, lane: usize, new_len: usize)
+                     -> Result<()> {
+        let _ = (lane, new_len);
+        anyhow::bail!("this backend does not support KV truncation")
     }
 
     /// Resident weight/KV bytes of this rank's state.  Default: zeros,

@@ -1247,6 +1247,16 @@ fn row_meta(ctx: &StepCtx, r: usize) -> (usize, i32, usize) {
             let pos = positions[r];
             (r, pos, pos as usize + 1)
         }
+        StepCtx::Verify { lanes, positions } => {
+            // verify rows carry their owning lane explicitly; each row
+            // appends at its own position and attends over the same
+            // causal window one-at-a-time decode would see (rows are
+            // distinct (lane, pos) pairs — positions are strictly
+            // ascending within a lane — so the blocked kernel's
+            // per-row cache writes stay disjoint)
+            let pos = positions[r];
+            (lanes[r] as usize, pos, pos as usize + 1)
+        }
     }
 }
 
@@ -1296,6 +1306,30 @@ impl ExecBackend for ReferenceBackend {
                     ensure!(p >= 0 && (p as usize) < max_seq,
                             "lane {b} position {p} out of range \
                              (max_seq {max_seq})");
+                }
+            }
+            StepCtx::Verify { lanes, positions } => {
+                ensure!(!lanes.is_empty(),
+                        "verify step carries no rows");
+                ensure!(lanes.len() == positions.len(),
+                        "verify got {} lanes but {} positions",
+                        lanes.len(), positions.len());
+                let mut last = vec![i32::MIN; self.batch];
+                for (r, (&l, &p)) in
+                    lanes.iter().zip(positions.iter()).enumerate()
+                {
+                    ensure!((l as usize) < self.batch,
+                            "verify row {r} lane {l} out of range \
+                             (batch {})", self.batch);
+                    ensure!(p >= 0 && (p as usize) < max_seq,
+                            "verify row {r} position {p} out of range \
+                             (max_seq {max_seq})");
+                    // strictly ascending per lane: guarantees distinct
+                    // (lane, pos) cache rows across this step's writes
+                    ensure!(p > last[l as usize],
+                            "verify positions for lane {l} must be \
+                             strictly ascending (row {r}: {p})");
+                    last[l as usize] = p;
                 }
             }
         }
@@ -1463,6 +1497,35 @@ impl ExecBackend for ReferenceBackend {
             }
         }
         self.shared_segs.remove(&seg);
+        Ok(())
+    }
+
+    fn truncate_lane(&mut self, lane: usize, new_len: usize)
+                     -> Result<()> {
+        let t_max = self.preset.max_seq;
+        let hd = self.preset.head_dim;
+        let n_kv = self.n_kv_heads_l;
+        ensure!(lane < self.batch,
+                "truncate_lane lane {lane} out of range (batch {})",
+                self.batch);
+        ensure!(new_len >= 1 && new_len <= t_max,
+                "truncate_lane len {new_len} out of range (max_seq \
+                 {t_max})");
+        if let Some((seg, slen)) = self.attach[lane] {
+            ensure!(new_len >= slen,
+                    "truncate_lane({lane}, {new_len}) reaches into \
+                     shared segment {seg} ({slen} rows by reference)");
+        }
+        // scrub the dead rows so the lane's cache is bit-identical to
+        // one that only ever appended new_len rows — rollback leaves
+        // no residue for tests (or a future snapshot path) to trip on
+        for cache in &mut self.caches {
+            for kh in 0..n_kv {
+                for t in new_len..t_max {
+                    cache.zero_row((lane * n_kv + kh) * t_max + t, hd);
+                }
+            }
+        }
         Ok(())
     }
 
@@ -2005,6 +2068,187 @@ mod tests {
         assert!(be.attach_prefix(0, 2, 16, 0).is_err(),
                 "reset must drop the segment");
         be.publish_prefix(2, 0, 16).unwrap(); // id reusable after reset
+    }
+
+    /// One speculative verify step at world 1: run `tokens` through
+    /// embed + all layers under `StepCtx::Verify`, then chunk the R
+    /// rows through the fixed-batch `lm_head` (zero-padded, exactly as
+    /// the rank worker does) and return the R per-row logit vectors.
+    fn verify_logits(be: &mut ReferenceBackend, lanes: &[u32],
+                     positions: &[i32], tokens: &[i32]) -> Vec<Vec<f32>> {
+        let h = be.preset.hidden;
+        let n_layers = be.preset.n_layers;
+        let vocab_l = be.vocab_l;
+        let b = be.batch;
+        let segs = be.variant.syncs_per_layer();
+        let r_rows = lanes.len();
+        let ctx = StepCtx::Verify { lanes, positions };
+        let mut x = vec![0.0f32; r_rows * h];
+        be.embed(&ctx, tokens, &mut x).unwrap();
+        for li in 0..n_layers {
+            for seg in 0..segs {
+                let mut p = vec![0.0f32; r_rows * h];
+                be.layer_partial(&ctx, li, seg, &x, &mut p).unwrap();
+                for (xi, pi) in x.iter_mut().zip(&p) {
+                    *xi += *pi;
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(r_rows);
+        for chunk in x.chunks(b * h) {
+            let rows = chunk.len() / h;
+            let mut head_in = vec![0.0f32; b * h];
+            head_in[..chunk.len()].copy_from_slice(chunk);
+            let mut logits = vec![0.0f32; b * vocab_l];
+            be.lm_head(&head_in, &mut logits).unwrap();
+            for r in 0..rows {
+                out.push(logits[r * vocab_l..(r + 1) * vocab_l].to_vec());
+            }
+        }
+        out
+    }
+
+    /// DESIGN.md §15's core claim: a multi-row verify step computes,
+    /// per row, exactly the bits one-at-a-time batched decode computes
+    /// — including rows that attend over KV appended by *earlier rows
+    /// of the same verify step* — at both KV dtypes, on both kernels,
+    /// with several rows per lane and multiple speculating lanes.
+    #[test]
+    fn verify_rows_bit_identical_to_sequential_decode() {
+        for kv in [Dtype::F32, Dtype::Int8] {
+            for kernel in [GemmKernel::Scalar, GemmKernel::Blocked] {
+                let mut c = cfg(1, 4);
+                c.kv_dtype = kv;
+                c.kernel = kernel;
+                let pa: Vec<i32> = (0..8).map(|i| (i * 5 + 2) % 251).collect();
+                let pc: Vec<i32> = (0..5).map(|i| (i * 11 + 1) % 251).collect();
+                let (a_toks, c_toks) = ([21i32, 22, 23], [31i32, 32, 33]);
+
+                // baseline: three batched decode steps (lanes 1/3 free,
+                // parked at position 0 as the engine does)
+                let mut a = backend(&c, 0).unwrap();
+                prefill_at(&mut a, 0, &pa, 0);
+                prefill_at(&mut a, 2, &pc, 0);
+                let mut base_logits = Vec::new();
+                for i in 0..3 {
+                    let l = decode_logits(
+                        &mut a, &[a_toks[i], 0, c_toks[i], 0],
+                        &[8 + i as i32, 0, 5 + i as i32, 0]);
+                    let v = l.len() / 4;
+                    base_logits.push((l[..v].to_vec(),
+                                      l[2 * v..3 * v].to_vec()));
+                }
+
+                // speculative: ONE verify step carrying all six rows
+                let mut b = backend(&c, 0).unwrap();
+                prefill_at(&mut b, 0, &pa, 0);
+                prefill_at(&mut b, 2, &pc, 0);
+                let got = verify_logits(
+                    &mut b, &[0, 0, 0, 2, 2, 2], &[8, 9, 10, 5, 6, 7],
+                    &[a_toks[0], a_toks[1], a_toks[2],
+                      c_toks[0], c_toks[1], c_toks[2]]);
+
+                for i in 0..3 {
+                    let (ref la, ref lc) = base_logits[i];
+                    for (j, (x, y)) in la.iter().zip(&got[i]).enumerate() {
+                        assert_eq!(x.to_bits(), y.to_bits(),
+                                   "lane0 step {i} logit {j} \
+                                    (kv={kv:?} {kernel:?})");
+                    }
+                    for (j, (x, y)) in
+                        lc.iter().zip(&got[3 + i]).enumerate()
+                    {
+                        assert_eq!(x.to_bits(), y.to_bits(),
+                                   "lane2 step {i} logit {j} \
+                                    (kv={kv:?} {kernel:?})");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Rollback invariance: speculate, truncate the rejected rows,
+    /// and the lane must continue decoding bit-identically to a lane
+    /// that never speculated past the accepted prefix.
+    #[test]
+    fn truncate_lane_restores_never_speculated_state() {
+        for kv in [Dtype::F32, Dtype::Int8] {
+            for kernel in [GemmKernel::Scalar, GemmKernel::Blocked] {
+                let mut c = cfg(1, 1);
+                c.kv_dtype = kv;
+                c.kernel = kernel;
+                let prompt: Vec<i32> =
+                    (0..8).map(|i| (i * 7 + 3) % 251).collect();
+
+                // speculated: verify 3 rows, then reject rows 9 and 10
+                let mut s = backend(&c, 0).unwrap();
+                prefill_at(&mut s, 0, &prompt, 0);
+                verify_logits(&mut s, &[0, 0, 0], &[8, 9, 10],
+                              &[40, 91, 17]);
+                s.truncate_lane(0, 9).unwrap();
+
+                // clean: only ever appended the accepted row
+                let mut n = backend(&c, 0).unwrap();
+                prefill_at(&mut n, 0, &prompt, 0);
+                verify_logits(&mut n, &[0], &[8], &[40]);
+
+                // both continue with the same tokens: bit-identical
+                for (step, tok) in [(9, 55i32), (10, 66), (11, 77)] {
+                    let ls = decode_logits(&mut s, &[tok], &[step]);
+                    let ln = decode_logits(&mut n, &[tok], &[step]);
+                    for (j, (x, y)) in ls.iter().zip(&ln).enumerate() {
+                        assert_eq!(x.to_bits(), y.to_bits(),
+                                   "post-rollback step {step} logit {j} \
+                                    (kv={kv:?} {kernel:?})");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn verify_and_truncate_are_guarded() {
+        let mut be = backend(&cfg(1, 2), 0).unwrap();
+        let prompt: Vec<i32> = (0..16).collect();
+        prefill_at(&mut be, 0, &prompt, 0);
+        let h = 64;
+        let x = vec![0.0f32; 4 * h];
+        let mut p = vec![0.0f32; 4 * h];
+        let bad = |lanes: &[u32], positions: &[i32],
+                   be: &mut ReferenceBackend,
+                   x: &[f32], p: &mut [f32]| {
+            let ctx = StepCtx::Verify { lanes, positions };
+            be.layer_partial(&ctx, 0, 0, x, p)
+        };
+        assert!(bad(&[], &[], &mut be, &x, &mut p).is_err(),
+                "empty verify");
+        assert!(bad(&[0, 0], &[16], &mut be, &x, &mut p).is_err(),
+                "length mismatch");
+        assert!(bad(&[5], &[16], &mut be, &x, &mut p).is_err(),
+                "lane out of range");
+        assert!(bad(&[0], &[-1], &mut be, &x, &mut p).is_err(),
+                "negative position");
+        assert!(bad(&[0], &[64], &mut be, &x, &mut p).is_err(),
+                "position past max_seq");
+        assert!(bad(&[0, 0], &[17, 16], &mut be, &x, &mut p).is_err(),
+                "descending positions within a lane");
+        assert!(bad(&[0, 0], &[16, 16], &mut be, &x, &mut p).is_err(),
+                "duplicate position within a lane");
+        // ascending per lane, interleaved across lanes: fine
+        assert!(bad(&[0, 1, 0, 1], &[16, 3, 17, 4], &mut be, &x, &mut p)
+                    .is_ok());
+
+        assert!(be.truncate_lane(5, 4).is_err(), "lane out of range");
+        assert!(be.truncate_lane(0, 0).is_err(), "zero length");
+        assert!(be.truncate_lane(0, 65).is_err(), "past max_seq");
+        // attached lanes refuse to truncate into the shared prefix
+        be.publish_prefix(9, 0, 16).unwrap();
+        be.attach_prefix(1, 9, 16, 0).unwrap();
+        assert!(be.truncate_lane(1, 15).is_err(),
+                "must not truncate into the attached shared prefix");
+        be.truncate_lane(1, 16).unwrap(); // at the boundary: ok
+        be.detach_prefix(1).unwrap();
+        be.truncate_lane(1, 1).unwrap(); // detached: floor gone
     }
 
     #[test]

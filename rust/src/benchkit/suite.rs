@@ -101,7 +101,7 @@ impl Scenario {
 /// machines (DESIGN.md §12).
 pub const BENCH_PREFILL_CHUNK: usize = 16;
 
-/// The standard five-scenario suite every `BENCH_*.json` records.
+/// The standard scenario suite every `BENCH_*.json` records.
 pub fn standard_suite() -> Vec<Scenario> {
     vec![
         // the paper's §3 headline shape: one stream, decode-dominated
@@ -142,6 +142,12 @@ pub fn standard_suite() -> Vec<Scenario> {
             &[8],
         )
         .with_shared_prefix(32),
+        // decode-dominated workload for the speculative pair
+        // (DESIGN.md §15): run_matrix records it spec-off like every
+        // scenario, then once more with the nano draft speculating —
+        // the ms/token delta at the measured accept_rate is the §15
+        // acceptance comparison
+        Scenario::new("speculative_decode", 4, 8, &[8], &[32]),
     ]
 }
 
@@ -176,6 +182,12 @@ pub struct ScenarioRecord {
     /// fraction of admissions that attached to a shared prefix
     /// (0.0 on fcfs rows and on workloads with nothing to share)
     pub prefix_hit_rate: f64,
+    /// draft tokens proposed per speculative step (DESIGN.md §15);
+    /// 0 = speculation off for this row
+    pub spec_k: usize,
+    /// fraction of proposed draft tokens the verify rounds accepted
+    /// (0.0 when speculation is off)
+    pub accept_rate: f64,
     /// measured resident weight bytes, summed over ranks (0 = the
     /// backend doesn't measure)
     pub weight_bytes: u64,
@@ -232,6 +244,8 @@ impl ScenarioRecord {
         put("prefill_chunk", Json::Num(self.prefill_chunk as f64));
         put("scheduler", Json::Str(self.scheduler.to_string()));
         put("prefix_hit_rate", Json::Num(self.prefix_hit_rate));
+        put("spec_k", Json::Num(self.spec_k as f64));
+        put("accept_rate", Json::Num(self.accept_rate));
         put("weight_bytes", Json::Num(self.weight_bytes as f64));
         put("kv_bytes", Json::Num(self.kv_bytes as f64));
         put("batch", Json::Num(self.batch as f64));
@@ -286,12 +300,18 @@ impl ScenarioRecord {
             SchedulerKind::Fcfs => "",
             SchedulerKind::Continuous => "_cont",
         };
+        // tag speculating rows (spec-off is the unmarked default)
+        let spec = if self.spec_k == 0 {
+            String::new()
+        } else {
+            format!("_spec{}", self.spec_k)
+        };
         CaseResult {
             // the isa tag keeps the per-ISA batched_decode rows from
             // colliding with the auto-resolved standard rows
-            name: format!("{}_w{}_{}x{}_{}_{}{}{}", self.name,
+            name: format!("{}_w{}_{}x{}_{}_{}{}{}{}", self.name,
                           self.world, self.kernel, self.threads,
-                          self.isa, dtype, chunk, sched),
+                          self.isa, dtype, chunk, sched, spec),
             iters: self.tokens_out as usize,
             mean_us: self.ms_per_token * 1e3,
             p50_us: self.decode_p50_us,
@@ -397,6 +417,8 @@ pub fn run_scenario(cfg: &EngineConfig, sc: &Scenario)
         prefill_chunk: cfg.prefill_chunk,
         scheduler: cfg.scheduler,
         prefix_hit_rate: m.prefix_hit_rate(),
+        spec_k: if cfg.spec_enabled() { cfg.spec_k } else { 0 },
+        accept_rate: m.accept_rate(),
         weight_bytes: mem.weight_bytes,
         kv_bytes: mem.kv_bytes,
         batch: sc.batch,
@@ -489,6 +511,23 @@ pub fn run_matrix(base: &EngineConfig, worlds: &[usize], quick: bool,
                                    continuous",
                                   sc.name, cont.threads));
                 out.push(run_scenario(&cont, sc)?);
+            }
+            // the §15 speculative pair: the same decode-dominated
+            // workload with the nano draft speculating k=4, next to
+            // the spec-off baseline row just recorded (reference
+            // backend only — xla rejects spec_draft in validate()).
+            // The pair shares every other knob, so the ms/token delta
+            // is purely the draft+verify overhead vs. the tokens the
+            // measured accept_rate recovered
+            if cfg.backend == BackendKind::Reference
+                && sc.name == "speculative_decode"
+            {
+                let mut sp = cfg.clone();
+                sp.spec_draft = "nano".into();
+                sp.spec_k = 4;
+                progress(&format!("{} w{world} blocked x{} f32 spec4",
+                                  sc.name, sp.threads));
+                out.push(run_scenario(&sp, sc)?);
             }
             // int8 rows are a reference-backend feature; on an XLA
             // config the sweep stays f32-only instead of aborting on
@@ -720,6 +759,39 @@ pub fn storm_row(j: &Json, world: usize, scheduler: &str)
     })
 }
 
+/// `(ms_per_token, tokens_per_s, accept_rate)` of the first
+/// `speculative_decode` row at `world` with speculation on (`spec_k >
+/// 0`) or off (`spec_k == 0`), pinned to the threaded blocked f32
+/// rows like the other accessors — the DESIGN.md §15 acceptance pair
+/// reads the spec-off row against the spec-on one (`None` if the row
+/// is missing).
+pub fn spec_row(j: &Json, world: usize, speculating: bool)
+                -> Option<(f64, f64, f64)> {
+    let rows = j.get("scenarios")?.as_arr()?;
+    rows.iter().find_map(|r| {
+        let name = r.get("name")?.as_str()?;
+        let w = r.get("world")?.as_usize()?;
+        let kernel = r.get("kernel")?.as_str()?;
+        let threads = r.get("threads")?.as_usize()?;
+        let wd = r.get("weight_dtype").and_then(Json::as_str)
+            .unwrap_or("f32");
+        let kd = r.get("kv_dtype").and_then(Json::as_str)
+            .unwrap_or("f32");
+        let k = r.get("spec_k")?.as_usize()?;
+        if name == "speculative_decode" && w == world
+            && kernel == "blocked" && threads >= 2
+            && wd == "f32" && kd == "f32"
+            && (k > 0) == speculating
+        {
+            Some((r.get("ms_per_token")?.as_f64()?,
+                  r.get("tokens_per_s")?.as_f64()?,
+                  r.get("accept_rate")?.as_f64()?))
+        } else {
+            None
+        }
+    })
+}
+
 /// Structural + coverage validation of a `xeonserve-bench/v1`
 /// document (the CI bench-smoke gate).  Checks the schema tag, the
 /// per-row field types — including the dtype and memory-bytes fields
@@ -729,8 +801,9 @@ pub fn storm_row(j: &Json, world: usize, scheduler: &str)
 /// world the document's `worlds` field declares × ≥4 scenarios,
 /// including the threaded-vs-scalar batched-decode pair, the
 /// int8-vs-f32 batched-decode pair, the whole-vs-chunked
-/// `long_prompt_interactive` pair, and the fcfs-vs-continuous
-/// `shared_prefix_storm` pair the acceptance gates read, and ≥ 2
+/// `long_prompt_interactive` pair, the fcfs-vs-continuous
+/// `shared_prefix_storm` pair, and the spec-off-vs-spec-on
+/// `speculative_decode` pair (§15) the acceptance gates read, and ≥ 2
 /// distinct `isa` tiers among the `batched_decode` rows (§14) — so a
 /// `--worlds 2` recording validates against its own sweep, while the
 /// committed full recordings must actually contain what they claim.
@@ -781,6 +854,8 @@ pub fn validate_bench(j: &Json) -> Result<()> {
     let mut interactive_chunked = false;
     let mut storm_fcfs = false;
     let mut storm_continuous = false;
+    let mut spec_off = false;
+    let mut spec_on = false;
     let mut any_reference = false;
     let mut batched_isas = std::collections::BTreeSet::new();
     for (i, r) in rows.iter().enumerate() {
@@ -888,6 +963,33 @@ pub fn validate_bench(j: &Json) -> Result<()> {
             bail!("rule row-prefix-hit-rate: {} ({name}): \
                    prefix_hit_rate = {hit} must lie in [0, 1]", ctx());
         }
+        // every row must say whether (and how deep) it speculated —
+        // the §15 pair is meaningless without it
+        let spec_k = r.get("spec_k").and_then(Json::as_f64)
+            .with_context(|| {
+                format!("rule spec-fields: {} ({name}): missing \
+                         numeric field \"spec_k\"", ctx())
+            })?;
+        if !spec_k.is_finite() || spec_k.fract() != 0.0
+            || !(0.0..=8.0).contains(&spec_k)
+        {
+            bail!("rule spec-fields: {} ({name}): spec_k = {spec_k} \
+                   must be an integer in 0..=8", ctx());
+        }
+        let acc = r.get("accept_rate").and_then(Json::as_f64)
+            .with_context(|| {
+                format!("rule spec-fields: {} ({name}): missing \
+                         numeric field \"accept_rate\"", ctx())
+            })?;
+        if !acc.is_finite() || !(0.0..=1.0).contains(&acc) {
+            bail!("rule spec-fields: {} ({name}): accept_rate = {acc} \
+                   must lie in [0, 1]", ctx());
+        }
+        if spec_k == 0.0 && acc != 0.0 {
+            bail!("rule spec-fields: {} ({name}): a spec-off row \
+                   (spec_k = 0) cannot have accept_rate = {acc}",
+                  ctx());
+        }
         let world = r.get("world").and_then(Json::as_usize).unwrap();
         let threads = r.get("threads").and_then(Json::as_usize).unwrap();
         names.insert(name.to_string());
@@ -916,6 +1018,10 @@ pub fn validate_bench(j: &Json) -> Result<()> {
         if name == "shared_prefix_storm" {
             storm_fcfs |= sched == "fcfs";
             storm_continuous |= sched == "continuous";
+        }
+        if name == "speculative_decode" {
+            spec_off |= spec_k == 0.0;
+            spec_on |= spec_k > 0.0;
         }
     }
     if names.len() < 4 {
@@ -964,6 +1070,14 @@ pub fn validate_bench(j: &Json) -> Result<()> {
                \"continuous\" row on reference-backend recordings — \
                DESIGN.md §13)");
     }
+    // the DESIGN.md §15 speculative gate: reference recordings must
+    // carry the spec-off/spec-on speculative_decode pair so
+    // spec_row() always yields the acceptance comparison
+    if any_reference && !(spec_off && spec_on) {
+        bail!("rule pair-speculative: missing speculative_decode \
+               spec_k pair (need a spec_k = 0 row AND a spec_k > 0 \
+               row on reference-backend recordings — DESIGN.md §15)");
+    }
     // the DESIGN.md §14 ISA gate: reference recordings must compare
     // at least two instruction tiers on batched_decode — every host
     // can supply {scalar, vnni}, so availability is no excuse
@@ -997,7 +1111,8 @@ mod tests {
         for required in ["single_stream_decode", "batched_decode",
                          "prefill_heavy", "mixed",
                          "long_prompt_interactive",
-                         "shared_prefix_storm"] {
+                         "shared_prefix_storm",
+                         "speculative_decode"] {
             assert!(names.contains(&required), "missing {required}");
         }
         for sc in &s {
@@ -1151,6 +1266,20 @@ mod tests {
                                     && r.prefill_chunk == 0));
         assert!(recs.iter().any(|r| r.name == "long_prompt_interactive"
                                     && r.prefill_chunk > 0));
+        // the §15 speculative pair is recorded: the spec-off row never
+        // accepts anything, the spec-on row ran the nano draft at k=4
+        // through the full draft/verify/rollback path
+        let off = spec_row(&parsed, 1, false).unwrap();
+        let on = spec_row(&parsed, 1, true).unwrap();
+        assert_eq!(off.2, 0.0, "spec-off rows cannot accept drafts");
+        assert!((0.0..=1.0).contains(&on.2),
+                "accept_rate out of range: {}", on.2);
+        let on_rec = recs.iter()
+            .find(|r| r.name == "speculative_decode" && r.spec_k > 0)
+            .unwrap();
+        assert_eq!(on_rec.spec_k, 4);
+        assert_eq!(on_rec.requests_done as usize, on_rec.requests,
+                   "speculating run must retire every request");
 
         // a narrower sweep validates against its own declared worlds
         let narrow = matrix_to_json("unit", "tiny", true, &[1], &recs);
@@ -1169,7 +1298,8 @@ mod tests {
         for field in ["weight_dtype", "kv_dtype", "weight_bytes",
                       "kv_bytes", "backend", "prefill_chunk",
                       "decode_stall_p99_us", "scheduler",
-                      "prefix_hit_rate", "isa"] {
+                      "prefix_hit_rate", "isa", "spec_k",
+                      "accept_rate"] {
             let crippled =
                 text.replace(&format!("\"{field}\""),
                              &format!("\"x_{field}\""));
@@ -1248,6 +1378,20 @@ mod tests {
         assert!(err_of(&doc(&bad, &[1]))
                     .contains("rule row-prefix-hit-rate:"));
 
+        // spec-field value corruptions: an out-of-range accept rate,
+        // an out-of-range depth, and a spec-off row claiming accepts
+        let mut bad = recs.clone();
+        bad[0].accept_rate = 1.5;
+        bad[0].spec_k = 2;
+        assert!(err_of(&doc(&bad, &[1])).contains("rule spec-fields:"));
+        let mut bad = recs.clone();
+        bad[0].spec_k = 9;
+        assert!(err_of(&doc(&bad, &[1])).contains("rule spec-fields:"));
+        let mut bad = recs.clone();
+        bad[0].spec_k = 0;
+        bad[0].accept_rate = 0.5;
+        assert!(err_of(&doc(&bad, &[1])).contains("rule spec-fields:"));
+
         // every batched_decode row on the same tier: each row is
         // individually fine, but the §14 comparison is gone
         let mut mono = recs.clone();
@@ -1288,6 +1432,7 @@ mod tests {
              without(&|r| r.prefill_chunk > 0)),
             ("rule pair-storm-scheduler:",
              without(&|r| r.scheduler == SchedulerKind::Continuous)),
+            ("rule pair-speculative:", without(&|r| r.spec_k > 0)),
         ] {
             let e = err_of(&doc(&gone, &[1]));
             assert!(e.contains(rule), "expected {rule:?} in {e:?}");

@@ -55,11 +55,17 @@ impl ModelPreset {
         // (n_layers, hidden, n_heads, n_kv_heads, head_dim, ffn, vocab,
         //  max_seq)
         let dims = match name {
+            // `nano` exists to draft for `tiny` (DESIGN.md §15): small
+            // enough that k draft rounds cost less than one target
+            // step, same vocab as tiny so proposals are always valid
+            // target ids, and 4-way divisible everywhere so it shards
+            // to every world the test matrix runs.
+            "nano" => (1, 32, 4, 4, 8, 64, 256, 64),
             "tiny" => (2, 64, 8, 8, 8, 128, 256, 64),
             "small" => (12, 768, 8, 8, 96, 3072, 32000, 1024),
             "medium" => (24, 1024, 16, 8, 64, 4096, 32000, 1024),
             _ => bail!(
-                "unknown built-in model {name:?} (tiny|small|medium)"
+                "unknown built-in model {name:?} (nano|tiny|small|medium)"
             ),
         };
         let (n_layers, hidden, n_heads, n_kv_heads, head_dim, ffn, vocab,
@@ -95,6 +101,7 @@ impl ModelPreset {
     /// backends see the same admission/bucketing behavior.
     pub fn builtin_prefill_buckets(&self) -> Vec<usize> {
         match self.name.as_str() {
+            "nano" => vec![16],
             "tiny" => vec![16],
             "small" => vec![128, 512],
             "medium" => vec![512],

@@ -386,6 +386,18 @@ pub struct EngineConfig {
     /// reuse.  Continuous batching is reference-backend-only (the AOT
     /// segments have no shared-segment attention reads).
     pub scheduler: SchedulerKind,
+    /// Speculative-decoding draft model (DESIGN.md §15): "off" (the
+    /// default) disables speculation; any other value names a built-in
+    /// preset each rank hosts as a draft `ExecBackend` beside the
+    /// target.  The draft proposes `spec_k` greedy tokens per step and
+    /// one batched target step verifies them; the greedy-matching
+    /// prefix is accepted, so outputs stay bit-identical to
+    /// non-speculative decode.  Reference-backend-only, greedy-only,
+    /// and the draft must differ from the target model.
+    pub spec_draft: String,
+    /// Draft tokens proposed per speculative step (1..=8); ignored
+    /// while `spec_draft = "off"` — DESIGN.md §15.
+    pub spec_k: usize,
 }
 
 impl Default for EngineConfig {
@@ -409,6 +421,8 @@ impl Default for EngineConfig {
             kv_dtype: Dtype::F32,
             prefill_chunk: 0,
             scheduler: SchedulerKind::Fcfs,
+            spec_draft: "off".into(),
+            spec_k: 4,
         }
     }
 }
@@ -485,6 +499,24 @@ impl EngineConfig {
                          got {v:?}")
             })?;
             cfg.scheduler = SchedulerKind::parse(s)?;
+        }
+        if let Some(v) = j.get("spec_draft") {
+            // strict: present-but-invalid must error, never fall back
+            let s = v.as_str().with_context(|| {
+                format!("spec_draft must be a string (\"off\" or a \
+                         built-in preset name), got {v:?}")
+            })?;
+            cfg.spec_draft = s.to_string();
+        }
+        if let Some(v) = j.get("spec_k") {
+            // strict: present-but-invalid must error, never fall back
+            let n = v.as_f64().with_context(|| {
+                format!("spec_k must be an integer in 1..=8, got {v:?}")
+            })?;
+            if n.fract() != 0.0 || !(1.0..=8.0).contains(&n) {
+                bail!("spec_k must be an integer in 1..=8, got {n}");
+            }
+            cfg.spec_k = n as usize;
         }
         if let Some(w) = j.get("weights") {
             match w.get("kind").and_then(Json::as_str) {
@@ -570,6 +602,8 @@ impl EngineConfig {
         let _ = writeln!(s, "kv_dtype = \"{}\"", self.kv_dtype);
         let _ = writeln!(s, "prefill_chunk = {}", self.prefill_chunk);
         let _ = writeln!(s, "scheduler = \"{}\"", self.scheduler);
+        let _ = writeln!(s, "spec_draft = \"{}\"", esc(&self.spec_draft));
+        let _ = writeln!(s, "spec_k = {}", self.spec_k);
         match &self.weights {
             WeightSource::Synthetic { seed } => {
                 let _ = writeln!(
@@ -680,7 +714,86 @@ impl EngineConfig {
                 self.scheduler
             );
         }
+        if !(1..=8).contains(&self.spec_k) {
+            bail!("spec_k must be in 1..=8, got {}", self.spec_k);
+        }
+        if self.spec_enabled() {
+            // the draft backend is a second in-tree reference
+            // transformer; the AOT segments have no draft counterpart
+            // and no multi-position verify rows
+            if self.backend == BackendKind::Xla {
+                bail!(
+                    "backend \"xla\" does not support speculative \
+                     decoding (got spec_draft={:?}); it is a reference-\
+                     backend feature (DESIGN.md §15)",
+                    self.spec_draft
+                );
+            }
+            // drafting with the target itself doubles every step's
+            // cost for zero saved steps — always a config mistake
+            if self.spec_draft == self.model {
+                bail!(
+                    "spec_draft must differ from the target model \
+                     (both are {:?}); drafting with the target itself \
+                     cannot save steps (DESIGN.md §15)",
+                    self.model
+                );
+            }
+            // greedy-prefix acceptance is only equivalent to plain
+            // decode when the target samples its argmax; stochastic
+            // sampling would need the rejection-resampling scheme
+            if self.sampling.temperature > 0.0 {
+                bail!(
+                    "speculative decoding requires greedy sampling \
+                     (got sampling.temperature = {}); greedy-prefix \
+                     acceptance is only exact at temperature 0 \
+                     (DESIGN.md §15)",
+                    self.sampling.temperature
+                );
+            }
+        }
         Ok(())
+    }
+
+    /// Is speculative decoding switched on (DESIGN.md §15)?
+    pub fn spec_enabled(&self) -> bool {
+        self.spec_draft != "off"
+    }
+
+    /// Resolve the draft model `spec_draft` names, checking it is
+    /// compatible with the (already resolved) target: the draft must
+    /// shard over the same world, and its vocab must not exceed the
+    /// target's (every proposed id must be a valid target token).
+    /// The draft preset's `max_seq` is widened to the target's so the
+    /// draft KV can mirror the target KV row-for-row.
+    pub fn resolve_draft_model(&self, target: &ModelPreset)
+                               -> Result<ModelPreset> {
+        if !self.spec_enabled() {
+            bail!("spec_draft is \"off\" — no draft model to resolve");
+        }
+        let mut draft = ModelPreset::builtin(&self.spec_draft)
+            .with_context(|| {
+                format!("resolving spec_draft {:?}", self.spec_draft)
+            })?;
+        if !draft.supports_world(self.world) {
+            bail!(
+                "draft model {} does not shard over world={} \
+                 (heads/ffn/vocab must divide evenly)",
+                self.spec_draft, self.world
+            );
+        }
+        // prompt tokens are folded into the draft vocab by `tok %
+        // draft_vocab`, but draft *proposals* feed the target verbatim
+        // — they must all be valid target ids
+        if draft.vocab > target.vocab {
+            bail!(
+                "draft model {} (vocab {}) cannot draft for target {} \
+                 (vocab {}): draft proposals must be valid target ids",
+                self.spec_draft, draft.vocab, target.name, target.vocab
+            );
+        }
+        draft.max_seq = target.max_seq;
+        Ok(draft)
     }
 
     /// Load the manifest this config points at.
@@ -829,6 +942,8 @@ beta_gbps = 10.0
             kv_dtype: Dtype::Int8,
             prefill_chunk: 16,
             scheduler: SchedulerKind::Continuous,
+            spec_draft: "nano".into(),
+            spec_k: 2,
             ..Default::default()
         };
         cfg.opt.zero_copy = false;
@@ -854,6 +969,8 @@ beta_gbps = 10.0
         assert_eq!(back.kv_dtype, Dtype::Int8);
         assert_eq!(back.prefill_chunk, 16);
         assert_eq!(back.scheduler, SchedulerKind::Continuous);
+        assert_eq!(back.spec_draft, "nano");
+        assert_eq!(back.spec_k, 2);
         assert!(!back.opt.zero_copy);
         assert_eq!(back.opt.broadcast_ids, cfg.opt.broadcast_ids);
         assert_eq!(back.sampling.top_k, 13);
@@ -907,6 +1024,185 @@ beta_gbps = 10.0
             "scheduler = \"FCFS\"").is_err());
         assert!(EngineConfig::from_toml_str(
             "scheduler = 3").is_err());
+        // spec knobs are strict-parsed: non-strings / non-integers /
+        // out-of-range k are clean config errors, never a fallback
+        assert!(EngineConfig::from_toml_str("spec_draft = 3").is_err());
+        assert!(EngineConfig::from_toml_str("spec_k = 0").is_err());
+        assert!(EngineConfig::from_toml_str("spec_k = 9").is_err());
+        assert!(EngineConfig::from_toml_str("spec_k = 2.5").is_err());
+        assert!(EngineConfig::from_toml_str("spec_k = \"four\"").is_err());
+        // drafting with the target itself is rejected
+        assert!(EngineConfig::from_toml_str(
+            "spec_draft = \"tiny\"").is_err());
+        // speculation is greedy-only (DESIGN.md §15)
+        assert!(EngineConfig::from_toml_str(
+            "spec_draft = \"nano\"\n[sampling]\ntemperature = 0.5")
+            .is_err());
+    }
+
+    #[test]
+    fn spec_parse_and_defaults() {
+        let d = EngineConfig::default();
+        assert_eq!(d.spec_draft, "off");
+        assert_eq!(d.spec_k, 4);
+        assert!(!d.spec_enabled());
+        let c = EngineConfig::from_toml_str(
+            "spec_draft = \"nano\"\nspec_k = 2").unwrap();
+        assert_eq!(c.spec_draft, "nano");
+        assert_eq!(c.spec_k, 2);
+        assert!(c.spec_enabled());
+        // spec_k alone (speculation off) still parses and validates
+        let k = EngineConfig::from_toml_str("spec_k = 8").unwrap();
+        assert_eq!(k.spec_k, 8);
+        assert!(!k.spec_enabled());
+    }
+
+    #[test]
+    fn xla_backend_rejects_speculation() {
+        let cfg = EngineConfig {
+            backend: BackendKind::Xla,
+            spec_draft: "nano".into(),
+            ..Default::default()
+        };
+        // invalid regardless of whether the xla feature is compiled in
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn draft_model_resolution() {
+        // nano drafts for tiny at every matrix world
+        let cfg = EngineConfig {
+            backend: BackendKind::Reference,
+            spec_draft: "nano".into(),
+            ..Default::default()
+        };
+        let target = cfg.resolve_model().unwrap().preset;
+        for world in [1usize, 2, 4] {
+            let mut c = cfg.clone();
+            c.world = world;
+            let draft = c.resolve_draft_model(&target).unwrap();
+            assert_eq!(draft.name, "nano");
+            assert!(draft.supports_world(world));
+            // the draft KV must mirror the target's row range
+            assert_eq!(draft.max_seq, target.max_seq);
+            assert!(draft.vocab <= target.vocab);
+        }
+        // tiny (vocab 256 ≤ 32000, max_seq widened 64 → 1024) drafts
+        // for small
+        let cfg = EngineConfig {
+            backend: BackendKind::Reference,
+            model: "small".into(),
+            spec_draft: "tiny".into(),
+            ..Default::default()
+        };
+        let target = cfg.resolve_model().unwrap().preset;
+        let draft = cfg.resolve_draft_model(&target).unwrap();
+        assert_eq!(draft.max_seq, 1024);
+        assert_eq!(draft.vocab, 256);
+        // a draft with a *larger* vocab than its target is rejected:
+        // its proposals would not all be valid target ids
+        let back = EngineConfig {
+            backend: BackendKind::Reference,
+            model: "nano".into(),
+            spec_draft: "small".into(),
+            ..Default::default()
+        };
+        let nano = back.resolve_model().unwrap().preset;
+        assert!(back.resolve_draft_model(&nano).is_err());
+        // unknown draft preset and spec-off are clean errors
+        let unk = EngineConfig {
+            spec_draft: "huge".into(),
+            ..Default::default()
+        };
+        assert!(unk.resolve_draft_model(&target).is_err());
+        let off = EngineConfig::default();
+        assert!(off.resolve_draft_model(&target).is_err());
+    }
+
+    #[test]
+    fn toml_roundtrip_fuzz_seeded() {
+        // every emitted config must survive serialize → parse exactly
+        // (the launch coordinator round-trips configs through TOML on
+        // every deployment) — walk a seeded grid of randomized configs
+        // instead of one hand-picked sample
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            // splitmix64
+            state = state.wrapping_add(0x9e3779b97f4a7c15);
+            let mut z = state;
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+            z ^ (z >> 31)
+        };
+        for _ in 0..200 {
+            let mut cfg = EngineConfig {
+                backend: BackendKind::Reference,
+                ..Default::default()
+            };
+            cfg.model = ["tiny", "small", "medium"][next() as usize % 3]
+                .to_string();
+            cfg.world = 1 << (next() % 3);
+            cfg.batch = 1 + (next() as usize % 8);
+            cfg.max_new_tokens = 1 + (next() as usize % 64);
+            cfg.threads = next() as usize % 9;
+            cfg.kernel = if next() % 2 == 0 {
+                GemmKernel::Blocked
+            } else {
+                GemmKernel::Scalar
+            };
+            cfg.weight_dtype =
+                if next() % 2 == 0 { Dtype::F32 } else { Dtype::Int8 };
+            cfg.kv_dtype =
+                if next() % 2 == 0 { Dtype::F32 } else { Dtype::Int8 };
+            cfg.isa = [IsaKind::Auto, IsaKind::Scalar, IsaKind::Avx2,
+                       IsaKind::Avx512][next() as usize % 4];
+            cfg.prefill_chunk = [0, 3, 16, 64][next() as usize % 4];
+            cfg.scheduler = if next() % 2 == 0 {
+                SchedulerKind::Fcfs
+            } else {
+                SchedulerKind::Continuous
+            };
+            cfg.spec_k = 1 + (next() as usize % 8);
+            cfg.spec_draft = match next() % 3 {
+                0 => "off".to_string(),
+                1 => "nano".to_string(),
+                // names with TOML-hostile bytes must survive escaping
+                _ => "dr\\af\"t".to_string(),
+            };
+            if cfg.spec_draft == cfg.model {
+                cfg.spec_draft = "off".into();
+            }
+            cfg.sampling.top_k = 1 + (next() as usize % 64);
+            cfg.sampling.seed = next();
+            cfg.opt.zero_copy = next() % 2 == 0;
+            cfg.opt.local_topk = next() % 2 == 0;
+            cfg.opt.broadcast_ids = next() % 2 == 0;
+            cfg.validate().unwrap();
+
+            let text = cfg.to_toml_string();
+            let back = EngineConfig::from_toml_str(&text)
+                .unwrap_or_else(|e| {
+                    panic!("roundtrip parse failed: {e:#}\n---\n{text}")
+                });
+            assert_eq!(back.model, cfg.model, "{text}");
+            assert_eq!(back.world, cfg.world);
+            assert_eq!(back.batch, cfg.batch);
+            assert_eq!(back.max_new_tokens, cfg.max_new_tokens);
+            assert_eq!(back.threads, cfg.threads);
+            assert_eq!(back.kernel, cfg.kernel);
+            assert_eq!(back.weight_dtype, cfg.weight_dtype);
+            assert_eq!(back.kv_dtype, cfg.kv_dtype);
+            assert_eq!(back.isa, cfg.isa);
+            assert_eq!(back.prefill_chunk, cfg.prefill_chunk);
+            assert_eq!(back.scheduler, cfg.scheduler);
+            assert_eq!(back.spec_draft, cfg.spec_draft, "{text}");
+            assert_eq!(back.spec_k, cfg.spec_k);
+            assert_eq!(back.sampling.top_k, cfg.sampling.top_k);
+            assert_eq!(back.sampling.seed, cfg.sampling.seed);
+            assert_eq!(back.opt.zero_copy, cfg.opt.zero_copy);
+            assert_eq!(back.opt.local_topk, cfg.opt.local_topk);
+            assert_eq!(back.opt.broadcast_ids, cfg.opt.broadcast_ids);
+        }
     }
 
     #[test]

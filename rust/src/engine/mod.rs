@@ -174,6 +174,15 @@ pub struct Engine {
     /// end of the previous decode round while decode lanes stay busy —
     /// the anchor of the decode-stall (inter-decode gap) metric
     last_decode_end: Option<Instant>,
+    /// resolved draft-model geometry when speculation is enabled
+    /// (`spec_draft != "off"`), cached once for step planning and the
+    /// simulated-cluster comm model (DESIGN.md §15)
+    draft_preset: Option<ModelPreset>,
+    /// activation rows of the most recent speculative verify round (0
+    /// after a plain decode step) — the server reads this to charge
+    /// the scheduler's burst budget for the extra decode-equivalents a
+    /// speculating batch consumes
+    last_verify_rows: usize,
 }
 
 impl Engine {
@@ -184,10 +193,18 @@ impl Engine {
         cfg.validate()?;
         let rm = cfg.resolve_model()?;
 
-        // arena must hold the largest per-sync payload
+        // arena must hold the largest per-sync payload; with
+        // speculation on, a verify round carries up to
+        // batch · (spec_k + 1) activation rows (DESIGN.md §15)
         let max_bucket = *rm.prefill_buckets.iter().max().unwrap();
+        let spec_rows = if cfg.spec_enabled() {
+            cfg.batch * (cfg.spec_k + 1)
+        } else {
+            0
+        };
         let arena_elems = (cfg.batch * rm.preset.hidden)
-            .max(max_bucket * rm.preset.hidden);
+            .max(max_bucket * rm.preset.hidden)
+            .max(spec_rows * rm.preset.hidden);
         let group = CommGroup::new_inproc(cfg.world, arena_elems);
         let stats = group.stats.clone();
 
@@ -275,6 +292,13 @@ impl Engine {
         // page accounting over the physical per-lane cache capacity
         let pages = PagedAllocator::new(
             KV_PAGE, cfg.batch * preset.max_seq / KV_PAGE, cfg.batch);
+        // resolve the draft geometry once; the same resolution already
+        // ran inside every rank worker, so this cannot newly fail
+        let draft_preset = if cfg.spec_enabled() {
+            Some(cfg.resolve_draft_model(&preset)?)
+        } else {
+            None
+        };
         let seed = cfg.sampling.seed;
         let eos = crate::tokenizer::Tokenizer::byte_level(preset.vocab)
             .ok()
@@ -298,6 +322,8 @@ impl Engine {
             mem,
             emitted: Vec::new(),
             last_decode_end: None,
+            draft_preset,
+            last_verify_rows: 0,
             cfg,
         })
     }
@@ -389,6 +415,15 @@ impl Engine {
         self.prefix.len()
     }
 
+    /// Activation rows of the most recent speculative verify round, or
+    /// 0 if the last decode round ran plain.  A speculating lane owns
+    /// `spec_k + 1` rows, so the server charges the scheduler's burst
+    /// budget with the `rows - decode_lanes` extra decode-equivalents
+    /// this step consumed (DESIGN.md §15).
+    pub fn last_verify_rows(&self) -> usize {
+        self.last_verify_rows
+    }
+
     /// Drain the tokens sampled by the most recent [`Engine::step`],
     /// in emission order: `(request_id, token)` per sampled token,
     /// including each request's prefill-sampled first token.  The
@@ -449,6 +484,9 @@ impl Engine {
         // caller didn't drain is stale, and clearing here bounds the
         // buffer for drivers that never call take_new_tokens
         self.emitted.clear();
+        // ditto the verify-row probe: a prefill-only step must not
+        // replay the previous speculative step's burst charge
+        self.last_verify_rows = 0;
 
         // ---- admission (lane-granular, every step) ----
         let continuous = self.cfg.scheduler == SchedulerKind::Continuous;
@@ -535,7 +573,11 @@ impl Engine {
 
         // ---- batched decode ----
         if self.active.iter().any(ActiveReq::decoding) {
-            let finished = self.decode_step()?;
+            let finished = if self.cfg.spec_enabled() {
+                self.spec_decode_step()?
+            } else {
+                self.decode_step()?
+            };
             done.extend(finished);
         } else {
             // no decode lanes in flight: the stall clock has nothing
@@ -902,6 +944,7 @@ impl Engine {
     }
 
     fn decode_step(&mut self) -> Result<Vec<Completion>> {
+        self.last_verify_rows = 0;
         let b = self.cfg.batch;
         let mut tokens = vec![0i32; b];
         for a in &self.active {
@@ -976,6 +1019,346 @@ impl Engine {
                 None
             };
         Ok(finished)
+    }
+
+    /// One speculative decode step (DESIGN.md §15).  Per speculating
+    /// lane with current length `len0` and pending token `c0`:
+    ///
+    /// 1. `k` cheap draft rounds — round `j` feeds `c_j` at position
+    ///    `len0 + j` (full batch, like a plain decode round); the
+    ///    draft's greedy pick becomes the next chain token `c_{j+1}`.
+    /// 2. one target verify round carrying `k + 1` rows per
+    ///    speculating lane (`c_0..c_k` at `len0..len0+k`) and 1 row
+    ///    per plain decode lane — each row's candidates bit-identical
+    ///    to the sequential decode it replaces.
+    /// 3. greedy emission: accept the longest prefix where the draft's
+    ///    proposal matches the target's pick; rejected positions roll
+    ///    back via `LaneTable::truncate` + the reply-less
+    ///    [`Cmd::TruncateLane`] on every rank (both models' KV).
+    /// 4. fully accepted lanes owe the draft one catch-up row (`c_k`
+    ///    at `len0 + k`) so its cache stays in lock-step.
+    ///
+    /// Falls back to [`Self::decode_step`] when no decode lane is
+    /// eligible to speculate (too close to its token budget or the
+    /// context window) — eligibility is monotone per request, so a
+    /// lane that went plain never needs its draft KV again.
+    fn spec_decode_step(&mut self) -> Result<Vec<Completion>> {
+        let k = self.cfg.spec_k;
+        let b = self.cfg.batch;
+        let max_seq = self.preset.max_seq;
+
+        // eligibility: at least 2 tokens still wanted (else the k
+        // draft rounds cannot pay for themselves) and room for all
+        // k + 1 verify appends inside the context window
+        let mut is_spec = vec![false; self.active.len()];
+        let mut any_spec = false;
+        for (i, a) in self.active.iter().enumerate() {
+            if !a.decoding() {
+                continue;
+            }
+            let len = self
+                .lanes
+                .len_of(a.lane)
+                .context("decoding request on a dead lane")?;
+            if a.max_new - a.generated.len() >= 2 && len + k + 1 <= max_seq
+            {
+                is_spec[i] = true;
+                any_spec = true;
+            }
+        }
+        if !any_spec {
+            return self.decode_step();
+        }
+
+        let positions_base = self.lanes.positions();
+        let t0 = Instant::now();
+        if let Some(prev) = self.last_decode_end {
+            self.metrics.record_decode_gap(t0.duration_since(prev));
+        }
+        let mut timing = StepTiming::default();
+
+        // chain[i][j] = c_j for active[i]: c_0 is the pending token,
+        // c_{j>=1} the draft proposal from round j-1
+        let mut chain: Vec<Vec<i32>> = self
+            .active
+            .iter()
+            .map(|a| match a.phase {
+                Phase::Decode { next_token } => vec![next_token],
+                Phase::Prefill { .. } => Vec::new(),
+            })
+            .collect();
+
+        // ---- k draft rounds ----
+        for j in 0..k {
+            let mut tokens = vec![0i32; b];
+            let mut positions = positions_base.clone();
+            for (i, a) in self.active.iter().enumerate() {
+                if is_spec[i] {
+                    tokens[a.lane] = chain[i][j];
+                    positions[a.lane] = positions_base[a.lane] + j as i32;
+                }
+                // every other lane (plain decode, mid-prefill, free)
+                // parks at its base position with token 0 — the same
+                // ride-along convention as a plain decode round; the
+                // draft row written there is rewritten before any
+                // attention reads it
+            }
+            for host in &self.hosts {
+                let toks = (host.rank() == 0).then(|| tokens.clone());
+                host.send(Cmd::DraftDecode {
+                    tokens: toks,
+                    positions: positions.clone(),
+                })
+                .context("rank host unreachable")?;
+            }
+            let (cands, t) = self.collect_round(false)?;
+            timing.accumulate_round(&t);
+            let cands =
+                cands.context("rank 0 returned no draft candidates")?;
+            for i in 0..self.active.len() {
+                if is_spec[i] {
+                    let lane = self.active[i].lane;
+                    let d = self.sample_one(&cands[lane]);
+                    chain[i].push(d);
+                }
+            }
+        }
+
+        // ---- one verify round: k+1 rows per speculating lane, 1 per
+        // plain decode lane, in ascending lane order ----
+        let mut v_lanes: Vec<u32> = Vec::new();
+        let mut v_positions: Vec<i32> = Vec::new();
+        let mut v_tokens: Vec<i32> = Vec::new();
+        let mut row_base = vec![usize::MAX; self.active.len()];
+        for lane in 0..b {
+            let Some(i) = self
+                .active
+                .iter()
+                .position(|a| a.lane == lane && a.decoding())
+            else {
+                continue;
+            };
+            let rows = if is_spec[i] { k + 1 } else { 1 };
+            row_base[i] = v_lanes.len();
+            for j in 0..rows {
+                v_lanes.push(lane as u32);
+                v_positions.push(positions_base[lane] + j as i32);
+                v_tokens.push(chain[i][j]);
+            }
+        }
+        let rows_total = v_lanes.len();
+        self.last_verify_rows = rows_total;
+
+        for host in &self.hosts {
+            let toks = (host.rank() == 0).then(|| v_tokens.clone());
+            host.send(Cmd::Verify {
+                tokens: toks,
+                lanes: v_lanes.clone(),
+                positions: v_positions.clone(),
+            })
+            .context("rank host unreachable")?;
+        }
+        let (vc, t) = self.collect_verify_round()?;
+        timing.accumulate_round(&t);
+        let vc = vc.context("rank 0 returned no verify candidates")?;
+        anyhow::ensure!(vc.len() == rows_total,
+                        "rank 0 returned {} verify rows, expected \
+                         {rows_total}", vc.len());
+
+        // ---- greedy-prefix acceptance ----
+        let t_sample = Instant::now();
+        let mut decoded = 0u64;
+        let mut retire_idx: Vec<usize> = Vec::new();
+        let mut truncations: Vec<(usize, usize)> = Vec::new();
+        let mut catchup: Vec<(usize, i32, i32)> = Vec::new();
+        for i in 0..self.active.len() {
+            if row_base[i] == usize::MAX {
+                continue; // mid-prefill lane: nothing sampled
+            }
+            let lane = self.active[i].lane;
+            let len0 = positions_base[lane] as usize;
+            let rows = if is_spec[i] { k + 1 } else { 1 };
+            // optimistic advance over every appended row; rejections
+            // truncate back below
+            for _ in 0..rows {
+                self.lanes.advance(lane)?;
+            }
+            let mut e = 0usize;
+            let mut retired = false;
+            for j in 0..rows {
+                let tok = self.sample_one(&vc[row_base[i] + j]);
+                decoded += 1;
+                e += 1;
+                let a = &mut self.active[i];
+                a.generated.push(tok);
+                a.phase = Phase::Decode { next_token: tok };
+                self.emitted.push((a.id, tok));
+                if a.generated.len() >= a.max_new
+                    || Some(tok) == self.eos
+                    || len0 + j + 1 == max_seq
+                {
+                    retired = true;
+                    break;
+                }
+                // accept row j+1 only if its fed token — the draft's
+                // proposal c_{j+1} — is exactly what the target just
+                // picked
+                if j < rows - 1 && chain[i][j + 1] != tok {
+                    break;
+                }
+            }
+            if is_spec[i] {
+                self.metrics.spec_proposed += k as u64;
+                self.metrics.spec_accepted += (e - 1) as u64;
+            }
+            if retired {
+                retire_idx.push(i);
+                continue;
+            }
+            if e < rows {
+                let new_len = len0 + e;
+                self.lanes.truncate(lane, new_len)?;
+                self.pages.truncate_lane(lane, new_len)?;
+                truncations.push((lane, new_len));
+            } else if is_spec[i] {
+                // fully accepted: the draft KV is one row short
+                catchup.push((lane, chain[i][k], (len0 + k) as i32));
+            }
+        }
+        timing.sample_us = t_sample.elapsed().as_micros() as u64;
+
+        // reply-less rollback on every rank (both models' KV)
+        for &(lane, new_len) in &truncations {
+            for host in &self.hosts {
+                host.send(Cmd::TruncateLane { lane, new_len })
+                    .context("rank host unreachable")?;
+            }
+        }
+
+        // retire highest index first so swap_remove can't shift an
+        // index still in the list
+        retire_idx.sort_unstable_by(|a, b| b.cmp(a));
+        let mut finished = Vec::new();
+        for i in retire_idx {
+            let mut a = self.active.swap_remove(i);
+            finished.push(self.retire(&mut a)?);
+        }
+
+        // ---- draft catch-up round for fully accepted lanes ----
+        if !catchup.is_empty() {
+            let mut tokens = vec![0i32; b];
+            let mut positions = self.lanes.positions();
+            for &(lane, tok, pos) in &catchup {
+                tokens[lane] = tok;
+                positions[lane] = pos;
+            }
+            for host in &self.hosts {
+                let toks = (host.rank() == 0).then(|| tokens.clone());
+                host.send(Cmd::DraftDecode {
+                    tokens: toks,
+                    positions: positions.clone(),
+                })
+                .context("rank host unreachable")?;
+            }
+            // candidates are discarded: this round only lands KV
+            let (_, t) = self.collect_round(false)?;
+            timing.accumulate_round(&t);
+        }
+
+        timing.wall_us = t0.elapsed().as_micros() as u64;
+        timing.world = self.cfg.world as u64;
+        timing.comm_sim_us = self.sim_comm_spec_us(rows_total);
+        self.metrics.record_decode(&timing, decoded);
+        self.last_decode_end =
+            if self.active.iter().any(ActiveReq::decoding) {
+                Some(Instant::now())
+            } else {
+                None
+            };
+        Ok(finished)
+    }
+
+    /// Gather one [`Reply::VerifyDone`] from every rank; return rank-0
+    /// per-row candidates and the compute-timing aggregate (the verify
+    /// twin of [`Self::collect_round`]).
+    fn collect_verify_round(&mut self)
+                            -> Result<(Option<Vec<Vec<Candidate>>>,
+                                       StepTiming)> {
+        let mut timing = StepTiming::default();
+        let mut cands = None;
+        let mut seen = vec![false; self.cfg.world];
+        for _ in 0..self.cfg.world {
+            let (rank, compute_us, comm_us) =
+                match self.reply_rx.recv().context("rank worker died")? {
+                    Reply::VerifyDone {
+                        rank, compute_us, comm_us, candidates,
+                    } => {
+                        if let Some(c) = candidates {
+                            cands = Some(c);
+                        }
+                        (rank, compute_us, comm_us)
+                    }
+                    Reply::Error { rank, message } => {
+                        bail!("rank {rank}: {message}")
+                    }
+                    other => bail!("unexpected verify reply {other:?}"),
+                };
+            anyhow::ensure!(rank < self.cfg.world,
+                            "reply from out-of-range rank {rank}");
+            anyhow::ensure!(!std::mem::replace(&mut seen[rank], true),
+                            "rank {rank} replied twice in one round");
+            timing.compute_total_us += compute_us;
+            timing.compute_max_us = timing.compute_max_us.max(compute_us);
+            timing.comm_wall_us = timing.comm_wall_us.max(comm_us);
+        }
+        Ok((cands, timing))
+    }
+
+    /// Analytic cross-socket cost of one speculative step (µs): `k`
+    /// draft decode rounds at the draft's geometry plus one `rows`-row
+    /// verify round at the target's (DESIGN.md §15's step-cost model).
+    fn sim_comm_spec_us(&self, rows: usize) -> u64 {
+        let w = self.cfg.world;
+        let m = &self.cfg.wire;
+        let b = self.cfg.batch;
+        let k_pairs = (self.cfg.sampling.top_k * 8 * b) as u64;
+        let mut us = 0f64;
+        if let Some(dp) = &self.draft_preset {
+            let payload = (b * dp.hidden * 4) as u64;
+            let syncs = dp.n_layers * self.cfg.variant.syncs_per_layer();
+            let mut round = syncs as f64 * m.allreduce_us(payload, w);
+            round += if self.cfg.opt.broadcast_ids {
+                m.broadcast_us((b * 4) as u64, w)
+            } else {
+                m.broadcast_us(payload, w)
+            };
+            round += if self.cfg.opt.local_topk {
+                m.gather_us(k_pairs, w)
+            } else {
+                m.allgather_us((b * dp.vocab_local(w) * 4) as u64, w)
+            };
+            us += self.cfg.spec_k as f64 * round;
+        }
+        let h = self.preset.hidden;
+        let payload = (rows.max(1) * h * 4) as u64;
+        let syncs =
+            self.preset.n_layers * self.cfg.variant.syncs_per_layer();
+        us += syncs as f64 * m.allreduce_us(payload, w);
+        us += if self.cfg.opt.broadcast_ids {
+            m.broadcast_us((rows.max(1) * 4) as u64, w)
+        } else {
+            m.broadcast_us(payload, w)
+        };
+        // the verify lm head runs ceil(rows / b) fixed-width gathers
+        let head_rounds = (rows.max(1) + b - 1) / b;
+        us += head_rounds as f64
+            * if self.cfg.opt.local_topk {
+                m.gather_us(k_pairs, w)
+            } else {
+                m.allgather_us(
+                    (b * self.preset.vocab_local(w) * 4) as u64, w)
+            };
+        us as u64
     }
 
     /// Gather one Reply from every rank; return rank-0 candidates and the

@@ -103,6 +103,41 @@ pub enum Cmd {
         /// shared segment id to free
         seg: u32,
     },
+    /// One batched decode round on the *draft* model (DESIGN.md §15) —
+    /// the same shape as [`Cmd::Decode`], executed against the rank's
+    /// draft backend.  Draft proposals come back as the usual
+    /// [`Reply::StepDone`] candidates; the engine keeps them
+    /// engine-side (drafts never enter the emitted stream directly).
+    DraftDecode {
+        /// per-lane tokens to feed (rank 0 only), already mapped into
+        /// the draft vocab
+        tokens: Option<Vec<i32>>,
+        /// per-lane append positions (draft KV mirrors target KV)
+        positions: Vec<i32>,
+    },
+    /// One speculative verify round on the target model: `lanes[r]` /
+    /// `positions[r]` / `tokens[r]` describe activation row `r`
+    /// (parallel arrays; positions strictly ascending within a lane).
+    /// A speculating lane contributes k+1 consecutive rows; the reply
+    /// is [`Reply::VerifyDone`] with one candidate list per row, in
+    /// row order.
+    Verify {
+        /// per-row tokens to feed (rank 0 only)
+        tokens: Option<Vec<i32>>,
+        /// owning batch lane per row
+        lanes: Vec<u32>,
+        /// KV append position per row
+        positions: Vec<i32>,
+    },
+    /// Roll lane `lane`'s KV back to `new_len` valid rows on BOTH the
+    /// target and draft backends — the speculative rejection path.
+    /// Reply-less delta command, like the prefix family.
+    TruncateLane {
+        /// batch lane to roll back
+        lane: usize,
+        /// accepted KV length after rollback
+        new_len: usize,
+    },
 }
 
 /// Replies from rank workers to the leader.
@@ -150,6 +185,18 @@ pub enum Reply {
         rank: usize,
         /// human-readable failure chain
         message: String,
+    },
+    /// One speculative verify round finished ([`Cmd::Verify`]).
+    VerifyDone {
+        /// replying rank
+        rank: usize,
+        /// µs spent in segment execution on this rank
+        compute_us: u64,
+        /// µs spent inside collectives on this rank
+        comm_us: u64,
+        /// merged top-k per verify row, in command row order (rank 0
+        /// only)
+        candidates: Option<Vec<Vec<Candidate>>>,
     },
 }
 
@@ -210,6 +257,15 @@ impl<'a> WireReader<'a> {
             .collect())
     }
 
+    pub(crate) fn vec_u32(&mut self) -> Result<Vec<u32>> {
+        let n = self.usize32()?;
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
     pub(crate) fn opt_vec_i32(&mut self) -> Result<Option<Vec<i32>>> {
         match self.u8()? {
             0 => Ok(None),
@@ -245,6 +301,13 @@ pub(crate) fn put_str(out: &mut Vec<u8>, s: &str) {
 }
 
 pub(crate) fn put_vec_i32(out: &mut Vec<u8>, v: &[i32]) {
+    put_u32(out, v.len() as u32);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+pub(crate) fn put_vec_u32(out: &mut Vec<u8>, v: &[u32]) {
     put_u32(out, v.len() as u32);
     for x in v {
         out.extend_from_slice(&x.to_le_bytes());
@@ -313,6 +376,22 @@ impl Cmd {
                 out.push(8);
                 put_u32(out, *seg);
             }
+            Cmd::DraftDecode { tokens, positions } => {
+                out.push(9);
+                put_opt_vec_i32(out, tokens);
+                put_vec_i32(out, positions);
+            }
+            Cmd::Verify { tokens, lanes, positions } => {
+                out.push(10);
+                put_opt_vec_i32(out, tokens);
+                put_vec_u32(out, lanes);
+                put_vec_i32(out, positions);
+            }
+            Cmd::TruncateLane { lane, new_len } => {
+                out.push(11);
+                put_u32(out, *lane as u32);
+                put_u32(out, *new_len as u32);
+            }
         }
     }
 
@@ -356,6 +435,19 @@ impl Cmd {
                 len: r.usize32()?,
             },
             8 => Cmd::DropPrefix { seg: r.u32()? },
+            9 => Cmd::DraftDecode {
+                tokens: r.opt_vec_i32()?,
+                positions: r.vec_i32()?,
+            },
+            10 => Cmd::Verify {
+                tokens: r.opt_vec_i32()?,
+                lanes: r.vec_u32()?,
+                positions: r.vec_i32()?,
+            },
+            11 => Cmd::TruncateLane {
+                lane: r.usize32()?,
+                new_len: r.usize32()?,
+            },
             d => bail!("unknown Cmd discriminant {d}"),
         };
         r.done()?;
@@ -411,6 +503,22 @@ impl Reply {
                 put_u32(out, *rank as u32);
                 put_str(out, message);
             }
+            Reply::VerifyDone { rank, compute_us, comm_us, candidates } => {
+                out.push(5);
+                put_u32(out, *rank as u32);
+                put_u64(out, *compute_us);
+                put_u64(out, *comm_us);
+                match candidates {
+                    None => out.push(0),
+                    Some(rows) => {
+                        out.push(1);
+                        put_u32(out, rows.len() as u32);
+                        for row in rows {
+                            put_candidates(out, row);
+                        }
+                    }
+                }
+            }
         }
     }
 
@@ -454,6 +562,24 @@ impl Reply {
             }
             3 => Reply::ResetDone { rank: r.usize32()? },
             4 => Reply::Error { rank: r.usize32()?, message: r.str()? },
+            5 => {
+                let rank = r.usize32()?;
+                let compute_us = r.u64()?;
+                let comm_us = r.u64()?;
+                let candidates = match r.u8()? {
+                    0 => None,
+                    1 => {
+                        let n = r.usize32()?;
+                        let mut rows = Vec::with_capacity(n);
+                        for _ in 0..n {
+                            rows.push(r.candidates()?);
+                        }
+                        Some(rows)
+                    }
+                    b => bail!("bad option tag {b}"),
+                };
+                Reply::VerifyDone { rank, compute_us, comm_us, candidates }
+            }
             d => bail!("unknown Reply discriminant {d}"),
         };
         r.done()?;
@@ -521,6 +647,47 @@ mod tests {
         roundtrip_cmd(Cmd::DetachPrefix { lane: 0 });
         roundtrip_cmd(Cmd::PublishPrefix { seg: 1, lane: 2, len: 16 });
         roundtrip_cmd(Cmd::DropPrefix { seg: 7 });
+        roundtrip_cmd(Cmd::DraftDecode {
+            tokens: Some(vec![3, 0, 9]),
+            positions: vec![5, 0, 2],
+        });
+        roundtrip_cmd(Cmd::DraftDecode { tokens: None, positions: vec![1] });
+        roundtrip_cmd(Cmd::Verify {
+            tokens: Some(vec![7, 8, 9, 1]),
+            lanes: vec![0, 0, 0, 2],
+            positions: vec![10, 11, 12, 4],
+        });
+        roundtrip_cmd(Cmd::Verify {
+            tokens: None,
+            lanes: vec![u32::MAX],
+            positions: vec![0],
+        });
+        roundtrip_cmd(Cmd::TruncateLane { lane: 3, new_len: 17 });
+    }
+
+    #[test]
+    fn spec_cmds_reject_truncation_and_trailing_bytes() {
+        for cmd in [
+            Cmd::DraftDecode {
+                tokens: Some(vec![1, 2]),
+                positions: vec![3, 4],
+            },
+            Cmd::Verify {
+                tokens: Some(vec![5]),
+                lanes: vec![1],
+                positions: vec![6],
+            },
+            Cmd::TruncateLane { lane: 0, new_len: 9 },
+        ] {
+            let mut buf = Vec::new();
+            cmd.encode(&mut buf);
+            for cut in 0..buf.len() {
+                assert!(Cmd::decode(&buf[..cut]).is_err(),
+                        "{cmd:?} cut at {cut}");
+            }
+            buf.push(0);
+            assert!(Cmd::decode(&buf).is_err(), "{cmd:?} trailing byte");
+        }
     }
 
     #[test]
@@ -603,6 +770,22 @@ mod tests {
         roundtrip_reply(Reply::Error {
             rank: 5,
             message: "prefill: boom — §2.1".into(),
+        });
+        roundtrip_reply(Reply::VerifyDone {
+            rank: 0,
+            compute_us: 99,
+            comm_us: 3,
+            candidates: Some(vec![
+                vec![cand(4, 2.5), cand(1, 0.5)],
+                vec![cand(8, -1.0)],
+                vec![],
+            ]),
+        });
+        roundtrip_reply(Reply::VerifyDone {
+            rank: 1,
+            compute_us: 0,
+            comm_us: 0,
+            candidates: None,
         });
     }
 

@@ -20,12 +20,21 @@
 //! Every baseline the benches ablate against flips exactly one of those
 //! arrows (embedding-value broadcast, two-sync serial layers, staged-copy
 //! ring, full-logit allgather).
+//!
+//! With speculative decoding enabled (DESIGN.md §15) each rank hosts a
+//! second, cheaper *draft* model beside the target.  Both live behind
+//! the same [`ModelSlot`] shape and run the identical collective
+//! choreography; the draft's KV is kept in lock-step by mirroring every
+//! prefill / reset / shared-prefix delta onto it (with token ids
+//! remapped into the draft vocab), so a `Cmd::DraftDecode` round always
+//! sees a cache consistent with the target's.
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::backend::reference::ReferenceBackend;
 use crate::backend::{make_backend, ExecBackend, StepCtx};
 use crate::ccl::{bytes_to_f32, f32_to_bytes, Communicator, ReduceOp};
 use crate::config::EngineConfig;
@@ -33,18 +42,51 @@ use crate::sampling::{self, Candidate};
 
 use super::proto::{Cmd, Reply};
 
+/// Which of the rank's resident models a round runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Which {
+    Target,
+    Draft,
+}
+
+/// One resident model: its backend plus the dims the round plumbing
+/// needs.  The target always exists; the draft only when
+/// `spec_draft != "off"`.
+struct ModelSlot {
+    backend: Box<dyn ExecBackend>,
+    hidden: usize,
+    n_layers: usize,
+    vocab_local: usize,
+}
+
+/// Select a slot as a *disjoint field borrow* of the worker, so the
+/// `&mut ModelSlot` can coexist with simultaneous borrows of `comm`
+/// and the scratch buffers (a method returning `&mut ModelSlot` would
+/// lock the whole worker).
+macro_rules! slot {
+    ($w:expr, $which:expr) => {
+        match $which {
+            Which::Target => &mut $w.target,
+            Which::Draft => $w
+                .draft
+                .as_mut()
+                .expect("draft round without speculation enabled"),
+        }
+    };
+}
+
 pub(crate) struct RankWorker {
     rank: usize,
     world: usize,
     cfg: EngineConfig,
-    backend: Box<dyn ExecBackend>,
+    target: ModelSlot,
+    draft: Option<ModelSlot>,
+    /// draft vocab size, for remapping target token ids (`id % vocab`)
+    /// before they enter the draft embedding table
+    draft_vocab: i32,
     comm: Communicator,
-    // model dims resolved once at init
-    hidden: usize,
-    n_layers: usize,
     segs_per_layer: usize,
-    vocab_local: usize,
-    // reusable host scratch
+    // reusable host scratch (shared by both slots; grown lazily)
     x_host: Vec<f32>,
     y_host: Vec<f32>,
     logits_host: Vec<f32>,
@@ -67,8 +109,13 @@ impl RankWorker {
             Ok(mut w) => {
                 // report this rank's measured resident footprint with
                 // readiness — the leader aggregates it for the bench
-                // suite's memory accounting (DESIGN.md §11)
-                let mem = w.backend.mem_usage();
+                // suite's memory accounting (DESIGN.md §11).  The
+                // draft model's weights and KV count too: they are
+                // resident for the whole deployment.
+                let mut mem = w.target.backend.mem_usage();
+                if let Some(d) = &w.draft {
+                    mem = mem.add(&d.backend.mem_usage());
+                }
                 let _ = reply_tx.send(Reply::Ready {
                     rank,
                     weight_bytes: mem.weight_bytes,
@@ -94,15 +141,38 @@ impl RankWorker {
             rm.prefill_buckets.iter().copied().max().unwrap_or(1).max(1);
         let hidden = preset.hidden;
         let batch = cfg.batch;
+        let target = ModelSlot {
+            backend,
+            hidden,
+            n_layers: preset.n_layers,
+            vocab_local: preset.vocab_local(cfg.world),
+        };
+        // the draft slot is always a reference backend: speculation is
+        // rejected at config validation for xla, and draft presets
+        // carry no AOT artifacts
+        let (draft, draft_vocab) = if cfg.spec_enabled() {
+            let dp = cfg.resolve_draft_model(preset)?;
+            let dbe = ReferenceBackend::new(&cfg, rank, &dp)
+                .context("building draft backend")?;
+            let vocab = (dp.vocab_local(cfg.world) * cfg.world) as i32;
+            let slot = ModelSlot {
+                backend: Box::new(dbe) as Box<dyn ExecBackend>,
+                hidden: dp.hidden,
+                n_layers: dp.n_layers,
+                vocab_local: dp.vocab_local(cfg.world),
+            };
+            (Some(slot), vocab)
+        } else {
+            (None, 1)
+        };
         Ok(RankWorker {
             rank,
             world: cfg.world,
-            backend,
+            target,
+            draft,
+            draft_vocab,
             comm,
-            hidden,
-            n_layers: preset.n_layers,
             segs_per_layer: cfg.variant.syncs_per_layer(),
-            vocab_local: preset.vocab_local(cfg.world),
             x_host: vec![0.0; batch.max(1) * hidden * max_bucket],
             y_host: vec![0.0; batch.max(1) * hidden * max_bucket],
             logits_host: vec![0.0; batch * preset.vocab_local(cfg.world)],
@@ -110,6 +180,19 @@ impl RankWorker {
             comm_us: 0,
             cfg,
         })
+    }
+
+    /// Run `f` on the target backend, then — when a draft is resident —
+    /// mirror it onto the draft backend, keeping the two KV caches in
+    /// lock-step for the reset / shared-prefix / truncate deltas.
+    fn on_both(&mut self,
+               f: impl Fn(&mut dyn ExecBackend) -> Result<()>)
+               -> Result<()> {
+        f(self.target.backend.as_mut())?;
+        if let Some(d) = &mut self.draft {
+            f(d.backend.as_mut()).context("draft mirror")?;
+        }
+        Ok(())
     }
 
     fn serve(&mut self, cmd_rx: Receiver<Cmd>, reply_tx: Sender<Reply>) {
@@ -134,7 +217,7 @@ impl RankWorker {
                 Cmd::Decode { tokens, positions } => {
                     self.compute_us = 0;
                     self.comm_us = 0;
-                    match self.decode(tokens, &positions) {
+                    match self.decode(Which::Target, tokens, &positions) {
                         Ok(c) => Reply::StepDone {
                             rank: self.rank,
                             compute_us: self.compute_us,
@@ -144,6 +227,38 @@ impl RankWorker {
                         Err(e) => Reply::Error {
                             rank: self.rank,
                             message: format!("decode: {e:#}"),
+                        },
+                    }
+                }
+                Cmd::DraftDecode { tokens, positions } => {
+                    self.compute_us = 0;
+                    self.comm_us = 0;
+                    match self.decode(Which::Draft, tokens, &positions) {
+                        Ok(c) => Reply::StepDone {
+                            rank: self.rank,
+                            compute_us: self.compute_us,
+                            comm_us: self.comm_us,
+                            candidates: c,
+                        },
+                        Err(e) => Reply::Error {
+                            rank: self.rank,
+                            message: format!("draft_decode: {e:#}"),
+                        },
+                    }
+                }
+                Cmd::Verify { tokens, lanes, positions } => {
+                    self.compute_us = 0;
+                    self.comm_us = 0;
+                    match self.verify(tokens, &lanes, &positions) {
+                        Ok(c) => Reply::VerifyDone {
+                            rank: self.rank,
+                            compute_us: self.compute_us,
+                            comm_us: self.comm_us,
+                            candidates: c,
+                        },
+                        Err(e) => Reply::Error {
+                            rank: self.rank,
+                            message: format!("verify: {e:#}"),
                         },
                     }
                 }
@@ -164,7 +279,7 @@ impl RankWorker {
                         },
                     }
                 }
-                Cmd::Reset => match self.backend.reset() {
+                Cmd::Reset => match self.on_both(|b| b.reset()) {
                     Ok(()) => Reply::ResetDone { rank: self.rank },
                     Err(e) => Reply::Error {
                         rank: self.rank,
@@ -176,9 +291,9 @@ impl RankWorker {
                 // failure that the leader picks up at its next reply
                 // collection
                 Cmd::AttachPrefix { lane, seg, shared_len, copy_len } => {
-                    match self.backend.attach_prefix(lane, seg,
-                                                     shared_len,
-                                                     copy_len) {
+                    match self.on_both(|b| {
+                        b.attach_prefix(lane, seg, shared_len, copy_len)
+                    }) {
                         Ok(()) => continue,
                         Err(e) => Reply::Error {
                             rank: self.rank,
@@ -187,7 +302,7 @@ impl RankWorker {
                     }
                 }
                 Cmd::DetachPrefix { lane } => {
-                    match self.backend.detach_prefix(lane) {
+                    match self.on_both(|b| b.detach_prefix(lane)) {
                         Ok(()) => continue,
                         Err(e) => Reply::Error {
                             rank: self.rank,
@@ -196,7 +311,9 @@ impl RankWorker {
                     }
                 }
                 Cmd::PublishPrefix { seg, lane, len } => {
-                    match self.backend.publish_prefix(seg, lane, len) {
+                    match self.on_both(|b| {
+                        b.publish_prefix(seg, lane, len)
+                    }) {
                         Ok(()) => continue,
                         Err(e) => Reply::Error {
                             rank: self.rank,
@@ -205,11 +322,24 @@ impl RankWorker {
                     }
                 }
                 Cmd::DropPrefix { seg } => {
-                    match self.backend.drop_prefix(seg) {
+                    match self.on_both(|b| b.drop_prefix(seg)) {
                         Ok(()) => continue,
                         Err(e) => Reply::Error {
                             rank: self.rank,
                             message: format!("drop_prefix: {e:#}"),
+                        },
+                    }
+                }
+                // the §15 rejection rollback is reply-less like the
+                // other KV delta commands
+                Cmd::TruncateLane { lane, new_len } => {
+                    match self.on_both(|b| {
+                        b.truncate_lane(lane, new_len)
+                    }) {
+                        Ok(()) => continue,
+                        Err(e) => Reply::Error {
+                            rank: self.rank,
+                            message: format!("truncate_lane: {e:#}"),
                         },
                     }
                 }
@@ -246,26 +376,42 @@ impl RankWorker {
             .collect())
     }
 
+    /// Remap target-vocab token ids into the draft vocab.  Every rank
+    /// applies the identical fold, so draft rounds stay bit-identical
+    /// across world sizes and transports.
+    fn map_draft_tokens(&self, toks: &mut [i32]) {
+        let dv = self.draft_vocab;
+        for t in toks.iter_mut() {
+            *t = t.rem_euclid(dv);
+        }
+    }
+
     /// Fill `x` with the embedded activations for this round, via one of
     /// the two §2.1a strategies: broadcast token *ids* and embed locally
     /// (optimized), or rank 0 embeds and broadcasts the activation
     /// *values* (baseline, B·S·H·4 bytes on the wire).
-    fn embed_round(&mut self, ctx: &StepCtx, tokens: Option<Vec<i32>>,
-                   n: usize) -> Result<()> {
+    fn embed_round(&mut self, which: Which, ctx: &StepCtx,
+                   tokens: Option<Vec<i32>>, n: usize) -> Result<()> {
         let mut x = std::mem::take(&mut self.x_host);
         if x.len() < n {
             x.resize(n, 0.0);
         }
         let result = (|| -> Result<()> {
             if self.cfg.opt.broadcast_ids {
-                let toks = self.distribute_tokens(tokens)?;
+                let mut toks = self.distribute_tokens(tokens)?;
+                if which == Which::Draft {
+                    self.map_draft_tokens(&mut toks);
+                }
                 let t0 = Instant::now();
-                self.backend.embed(ctx, &toks, &mut x[..n])?;
+                slot!(self, which).backend.embed(ctx, &toks, &mut x[..n])?;
                 self.compute_us += t0.elapsed().as_micros() as u64;
             } else if self.rank == 0 {
-                let toks = tokens.context("rank 0 needs tokens")?;
+                let mut toks = tokens.context("rank 0 needs tokens")?;
+                if which == Which::Draft {
+                    self.map_draft_tokens(&mut toks);
+                }
                 let t0 = Instant::now();
-                self.backend.embed(ctx, &toks, &mut x[..n])?;
+                slot!(self, which).backend.embed(ctx, &toks, &mut x[..n])?;
                 self.compute_us += t0.elapsed().as_micros() as u64;
                 let t1 = Instant::now();
                 self.comm.stats().record_staging((n * 4) as u64);
@@ -296,19 +442,20 @@ impl RankWorker {
     /// into this rank's arena slot and the allreduce runs in place.
     /// Staged (OFF / TCP): partial lands in a scratch vec and rides the
     /// copy-per-hop ring.
-    fn layer_round(&mut self, ctx: &StepCtx, li: usize, seg: usize,
-                   n: usize, x: &mut [f32]) -> Result<()> {
+    fn layer_round(&mut self, which: Which, ctx: &StepCtx, li: usize,
+                   seg: usize, n: usize, x: &mut [f32]) -> Result<()> {
         if self.cfg.opt.zero_copy && self.comm.has_arena() {
             let t0 = Instant::now();
             {
-                let slot = self.comm.arena_mut(n)?;
-                self.backend.layer_partial(ctx, li, seg, &x[..n], slot)?;
+                let buf = self.comm.arena_mut(n)?;
+                slot!(self, which).backend
+                    .layer_partial(ctx, li, seg, &x[..n], buf)?;
             }
             self.compute_us += t0.elapsed().as_micros() as u64;
             let t1 = Instant::now();
             self.comm.allreduce_arena(n, ReduceOp::Sum)?;
-            let slot = self.comm.arena(n)?;
-            for (xi, yi) in x[..n].iter_mut().zip(slot) {
+            let buf = self.comm.arena(n)?;
+            for (xi, yi) in x[..n].iter_mut().zip(buf) {
                 *xi += *yi;
             }
             self.comm_us += t1.elapsed().as_micros() as u64;
@@ -318,8 +465,8 @@ impl RankWorker {
                 y.resize(n, 0.0);
             }
             let t0 = Instant::now();
-            let r = self.backend.layer_partial(ctx, li, seg, &x[..n],
-                                               &mut y[..n]);
+            let r = slot!(self, which).backend
+                .layer_partial(ctx, li, seg, &x[..n], &mut y[..n]);
             self.compute_us += t0.elapsed().as_micros() as u64;
             let result = r.and_then(|()| {
                 let t1 = Instant::now();
@@ -344,22 +491,28 @@ impl RankWorker {
     /// is set — place that row into a zeroed `[B, 1, H]` head input
     /// and return the lane's merged first-token candidates (rank 0;
     /// None elsewhere, and None everywhere when `head_row` is None —
-    /// a non-final chunk).  One body means the whole-prompt and
-    /// chunked rounds can never drift in their per-row float chains.
-    fn prefill_rounds(&mut self, ctx: &StepCtx, tokens: Option<Vec<i32>>,
-                      rows: usize, head_row: Option<usize>)
+    /// a non-final chunk, or a draft KV mirror).  One body means the
+    /// whole-prompt and chunked rounds can never drift in their
+    /// per-row float chains.
+    fn prefill_rounds(&mut self, which: Which, ctx: &StepCtx,
+                      tokens: Option<Vec<i32>>, rows: usize,
+                      head_row: Option<usize>)
                       -> Result<Option<Vec<Candidate>>> {
         let StepCtx::Prefill { lane, .. } = *ctx else {
             unreachable!("prefill_rounds takes a prefill ctx");
         };
-        let h = self.hidden;
+        let (h, n_layers) = {
+            let s = slot!(self, which);
+            (s.hidden, s.n_layers)
+        };
         let n = rows * h;
-        self.embed_round(ctx, tokens, n)?;
+        self.embed_round(which, ctx, tokens, n)?;
 
         let mut x = std::mem::take(&mut self.x_host);
-        for li in 0..self.n_layers {
+        for li in 0..n_layers {
             for seg in 0..self.segs_per_layer {
-                if let Err(e) = self.layer_round(ctx, li, seg, n, &mut x) {
+                if let Err(e) = self.layer_round(which, ctx, li, seg, n,
+                                                 &mut x) {
                     self.x_host = x;
                     return Err(e);
                 }
@@ -377,15 +530,27 @@ impl RankWorker {
         let row = row_idx * h;
         head_in[lane * h..(lane + 1) * h].copy_from_slice(&x[row..row + h]);
         self.x_host = x;
-        let cands = self.lm_head_candidates(&head_in)?;
+        let cands = self.lm_head_candidates(which, &head_in)?;
         Ok(cands.map(|per_lane| per_lane.into_iter().nth(lane).unwrap()))
     }
 
     fn prefill(&mut self, lane: usize, bucket: usize,
                tokens: Option<Vec<i32>>, length: usize)
                -> Result<Option<Vec<Candidate>>> {
+        let dtokens =
+            if self.draft.is_some() { tokens.clone() } else { None };
         let ctx = StepCtx::Prefill { lane, bucket, length, offset: 0 };
-        self.prefill_rounds(&ctx, tokens, bucket, Some(length - 1))
+        let cands = self.prefill_rounds(Which::Target, &ctx, tokens,
+                                        bucket, Some(length - 1))?;
+        if self.draft.is_some() {
+            // mirror the prompt into the draft KV (ids remapped in
+            // embed_round).  head_row None skips the lm head — and its
+            // gather — on *every* rank, so the collective schedule
+            // stays symmetric.
+            self.prefill_rounds(Which::Draft, &ctx, dtokens, bucket, None)
+                .context("draft prefill mirror")?;
+        }
+        Ok(cands)
     }
 
     /// One chunk of a chunked prefill (DESIGN.md §12): `len` unpadded
@@ -404,31 +569,111 @@ impl RankWorker {
                             "chunk carries {} tokens, header says {len}",
                             t.len());
         }
+        let dtokens =
+            if self.draft.is_some() { tokens.clone() } else { None };
         let ctx = StepCtx::Prefill { lane, bucket: len, length: len,
                                      offset };
-        self.prefill_rounds(&ctx, tokens, len, last.then_some(len - 1))
+        let cands = self.prefill_rounds(Which::Target, &ctx, tokens, len,
+                                        last.then_some(len - 1))?;
+        if self.draft.is_some() {
+            self.prefill_rounds(Which::Draft, &ctx, dtokens, len, None)
+                .context("draft prefill mirror")?;
+        }
+        Ok(cands)
     }
 
     // ---- decode -----------------------------------------------------------
 
-    fn decode(&mut self, tokens: Option<Vec<i32>>, positions: &[i32])
+    fn decode(&mut self, which: Which, tokens: Option<Vec<i32>>,
+              positions: &[i32])
               -> Result<Option<Vec<Vec<Candidate>>>> {
         let b = self.cfg.batch;
-        let h = self.hidden;
+        let (h, n_layers) = {
+            let s = slot!(self, which);
+            (s.hidden, s.n_layers)
+        };
         let n = b * h;
         let ctx = StepCtx::Decode { positions };
-        self.embed_round(&ctx, tokens, n)?;
+        self.embed_round(which, &ctx, tokens, n)?;
 
         let mut x = std::mem::take(&mut self.x_host);
-        for li in 0..self.n_layers {
+        for li in 0..n_layers {
             for seg in 0..self.segs_per_layer {
-                if let Err(e) = self.layer_round(&ctx, li, seg, n, &mut x) {
+                if let Err(e) = self.layer_round(which, &ctx, li, seg, n,
+                                                 &mut x) {
                     self.x_host = x;
                     return Err(e);
                 }
             }
         }
-        let result = self.lm_head_candidates(&x[..n]);
+        let result = self.lm_head_candidates(which, &x[..n]);
+        self.x_host = x;
+        result
+    }
+
+    /// One speculative verify round (DESIGN.md §15) on the target
+    /// model: `R = lanes.len()` activation rows, row `r` feeding its
+    /// token at `positions[r]` of lane `lanes[r]`.  Per-row causal
+    /// semantics are exactly one-at-a-time decode, so the returned
+    /// per-row candidates are bit-identical to what `R` sequential
+    /// decode steps would have produced — the acceptance rule's whole
+    /// correctness argument.
+    ///
+    /// The lm head is a fixed-`[B, H]` entry point, so the `R` rows
+    /// are chunked into `ceil(R / B)` zero-padded head inputs.  Every
+    /// rank derives the same chunk count from the broadcast row list,
+    /// which keeps the §2.1b gather schedule symmetric across ranks.
+    fn verify(&mut self, tokens: Option<Vec<i32>>, lanes: &[u32],
+              positions: &[i32])
+              -> Result<Option<Vec<Vec<Candidate>>>> {
+        let rows = lanes.len();
+        anyhow::ensure!(rows >= 1, "empty verify step");
+        anyhow::ensure!(positions.len() == rows,
+                        "verify carries {} positions for {rows} rows",
+                        positions.len());
+        if let Some(t) = &tokens {
+            anyhow::ensure!(t.len() == rows,
+                            "verify carries {} tokens for {rows} rows",
+                            t.len());
+        }
+        let h = self.target.hidden;
+        let n_layers = self.target.n_layers;
+        let n = rows * h;
+        let ctx = StepCtx::Verify { lanes, positions };
+        self.embed_round(Which::Target, &ctx, tokens, n)?;
+
+        let mut x = std::mem::take(&mut self.x_host);
+        for li in 0..n_layers {
+            for seg in 0..self.segs_per_layer {
+                if let Err(e) = self.layer_round(Which::Target, &ctx, li,
+                                                 seg, n, &mut x) {
+                    self.x_host = x;
+                    return Err(e);
+                }
+            }
+        }
+
+        let b = self.cfg.batch;
+        let result = (|| -> Result<Option<Vec<Vec<Candidate>>>> {
+            let chunks = (rows + b - 1) / b;
+            let mut per_row: Vec<Vec<Candidate>> =
+                Vec::with_capacity(rows);
+            let mut merged_here = false;
+            for c in 0..chunks {
+                let start = c * b;
+                let cnt = b.min(rows - start);
+                let mut head_in = vec![0.0f32; b * h];
+                head_in[..cnt * h]
+                    .copy_from_slice(&x[start * h..(start + cnt) * h]);
+                if let Some(per_lane) =
+                    self.lm_head_candidates(Which::Target, &head_in)?
+                {
+                    merged_here = true;
+                    per_row.extend(per_lane.into_iter().take(cnt));
+                }
+            }
+            Ok(if merged_here { Some(per_row) } else { None })
+        })();
         self.x_host = x;
         result
     }
@@ -436,15 +681,18 @@ impl RankWorker {
     /// lm-head + the §2.1b ending: local top-k then k-pair gather
     /// (optimized) or full-logit allgather (baseline).  Returns merged
     /// per-lane candidates on rank 0, None elsewhere.
-    fn lm_head_candidates(&mut self, x: &[f32])
+    fn lm_head_candidates(&mut self, which: Which, x: &[f32])
                           -> Result<Option<Vec<Vec<Candidate>>>> {
         let b = self.cfg.batch;
-        let v_l = self.vocab_local;
+        let v_l = slot!(self, which).vocab_local;
         let k = self.cfg.sampling.top_k.min(v_l);
         let mut logits = std::mem::take(&mut self.logits_host);
-        logits.resize(b * v_l, 0.0);
+        if logits.len() < b * v_l {
+            logits.resize(b * v_l, 0.0);
+        }
         let t0 = Instant::now();
-        let r = self.backend.lm_head(x, &mut logits[..b * v_l]);
+        let r = slot!(self, which).backend
+            .lm_head(x, &mut logits[..b * v_l]);
         self.compute_us += t0.elapsed().as_micros() as u64;
         if let Err(e) = r {
             self.logits_host = logits;

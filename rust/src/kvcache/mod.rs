@@ -145,6 +145,25 @@ impl KvLayer {
         }
     }
 
+    /// Zero one row (values and scales) — the speculative-decode
+    /// rollback path: a truncated lane's dead rows are scrubbed so its
+    /// cache is bit-identical to one that never appended them.
+    pub fn zero_row(&mut self, row: usize, head_dim: usize) {
+        let hd = head_dim;
+        match self {
+            KvLayer::F32 { k, v } => {
+                k[row * hd..(row + 1) * hd].fill(0.0);
+                v[row * hd..(row + 1) * hd].fill(0.0);
+            }
+            KvLayer::Int8 { k, v, k_scale, v_scale } => {
+                k[row * hd..(row + 1) * hd].fill(0);
+                v[row * hd..(row + 1) * hd].fill(0);
+                k_scale[row] = 0.0;
+                v_scale[row] = 0.0;
+            }
+        }
+    }
+
     /// Zero all rows (and scales) — the backend `reset` path.
     pub fn reset(&mut self) {
         match self {
@@ -283,6 +302,30 @@ impl LaneTable {
         }
     }
 
+    /// Roll an active lane back to `new_len` valid positions — the
+    /// speculative-decode rejection path (DESIGN.md §15).  Truncating
+    /// to zero would leave an active lane with no KV to attend over
+    /// (even a fresh prefill holds ≥ 1 row), and growing a lane is
+    /// [`LaneTable::advance`]'s job, so both are errors.
+    pub fn truncate(&mut self, lane: usize, new_len: usize) -> Result<()> {
+        let n = self.lanes.len();
+        match self.lanes.get_mut(lane) {
+            None => bail!("lane {lane} out of range ({n} lanes)"),
+            Some(Lane::Active { len, .. }) => {
+                if new_len == 0 {
+                    bail!("cannot truncate lane {lane} to zero length");
+                }
+                if new_len > *len {
+                    bail!("truncate of lane {lane} to {new_len} would \
+                           grow it (len {len})");
+                }
+                *len = new_len;
+                Ok(())
+            }
+            Some(Lane::Free) => bail!("lane {lane} is free"),
+        }
+    }
+
     /// Per-lane `pos` vector for the decode segment: active lanes insert
     /// at their current length; free lanes park at position 0 (their
     /// output is discarded and row 0 is rewritten by the next prefill).
@@ -325,6 +368,12 @@ pub struct PagedAllocator {
     free_pages: usize,
     /// pages held per lane
     held: Vec<usize>,
+    /// per-lane truncate floor in *tokens*: the page-aligned shared
+    /// prefix length an attached lane reads by reference.  Rollback
+    /// (speculative-decode rejection) must never truncate below this —
+    /// those positions live in a refcounted shared group, not in the
+    /// lane's private pages.
+    floor: Vec<usize>,
     /// shared-prefix groups: id → (pages reserved, attached lanes)
     shared: std::collections::HashMap<u32, SharedGroup>,
 }
@@ -345,6 +394,7 @@ impl PagedAllocator {
             n_pages,
             free_pages: n_pages,
             held: vec![0; n_lanes],
+            floor: vec![0; n_lanes],
             shared: std::collections::HashMap::new(),
         }
     }
@@ -382,6 +432,7 @@ impl PagedAllocator {
         }
         self.free_pages -= need;
         self.held[lane] += need;
+        self.floor[lane] = 0;
         Ok(())
     }
 
@@ -389,6 +440,7 @@ impl PagedAllocator {
     pub fn release(&mut self, lane: usize) {
         self.free_pages += self.held[lane];
         self.held[lane] = 0;
+        self.floor[lane] = 0;
         debug_assert!(self.free_pages <= self.n_pages);
     }
 
@@ -422,7 +474,48 @@ impl PagedAllocator {
         }
         self.free_pages -= need;
         self.held[lane] += need;
+        self.floor[lane] = shared_pages * self.page_size;
         Ok(())
+    }
+
+    /// Roll a lane's page accounting back to `new_len` tokens — the
+    /// speculative-decode rejection path.
+    ///
+    /// Deliberately does NOT release pages: `held` is the lane's
+    /// *worst-case* reservation (`max_len` at admission), which is what
+    /// keeps decode from running out of cache mid-flight.  Returning
+    /// rolled-back pages to the pool would let a new admission claim
+    /// them, and the truncated lane — which may still decode up to its
+    /// `max_len` — could then oversubscribe the pool.  So this method
+    /// only *validates* the rollback: the lane must be admitted, the
+    /// target length non-zero, and — refcount safety — at or above the
+    /// lane's shared-prefix floor (those positions belong to a
+    /// refcounted group; rewriting them would corrupt every other
+    /// attached lane).  Conservation `free + Σheld + Σshared == total`
+    /// is untouched by construction.
+    pub fn truncate_lane(&mut self, lane: usize, new_len: usize)
+                         -> Result<()> {
+        if lane >= self.held.len() {
+            bail!("lane {lane} out of range ({} lanes)", self.held.len());
+        }
+        if self.held[lane] == 0 && self.floor[lane] == 0 {
+            bail!("truncate of unadmitted lane {lane}");
+        }
+        if new_len == 0 {
+            bail!("cannot truncate lane {lane} to zero length");
+        }
+        if new_len < self.floor[lane] {
+            bail!("truncate of lane {lane} to {new_len} reaches into \
+                   its shared prefix ({} tokens by reference)",
+                  self.floor[lane]);
+        }
+        Ok(())
+    }
+
+    /// The lane's truncate floor in tokens (its by-reference shared
+    /// prefix length; 0 for plain admissions).
+    pub fn floor_of(&self, lane: usize) -> usize {
+        self.floor[lane]
     }
 
     /// Reserve `pages` pool pages as shared-prefix group `seg`,
@@ -1230,6 +1323,180 @@ mod tests {
             }
             assert_eq!(layer_image(&serial), layer_image(&lane),
                        "COW + concurrent appends diverged at {dtype}");
+        }
+    }
+
+    #[test]
+    fn lane_truncate_rolls_back_length() {
+        let mut t = LaneTable::new(2, 16);
+        let a = t.alloc(1, 4).unwrap();
+        t.advance(a).unwrap();
+        t.advance(a).unwrap();
+        assert_eq!(t.len_of(a), Some(6));
+        t.truncate(a, 4).unwrap();
+        assert_eq!(t.len_of(a), Some(4));
+        // no-op truncate to the current length is fine
+        t.truncate(a, 4).unwrap();
+        // growing, zeroing, free lanes, out-of-range: errors
+        assert!(t.truncate(a, 5).is_err(), "truncate must not grow");
+        assert!(t.truncate(a, 0).is_err());
+        assert!(t.truncate(1, 3).is_err(), "free lane");
+        assert!(t.truncate(99, 3).is_err());
+        // the lane is still usable after a rollback
+        assert_eq!(t.advance(a).unwrap(), 5);
+        assert_eq!(t.positions()[a], 5);
+    }
+
+    #[test]
+    fn truncate_lane_validates_without_releasing_pages() {
+        let mut p = PagedAllocator::new(16, 8, 4);
+        p.admit(0, 64).unwrap(); // 4 pages
+        assert_eq!(p.held_by(0), 4);
+        // rollback keeps the worst-case reservation: pages unchanged
+        p.truncate_lane(0, 10).unwrap();
+        assert_eq!(p.held_by(0), 4);
+        assert_eq!(p.free_pages(), 4);
+        // zero target, unadmitted lane, out-of-range lane: errors
+        assert!(p.truncate_lane(0, 0).is_err());
+        assert!(p.truncate_lane(1, 4).is_err(), "unadmitted lane");
+        assert!(p.truncate_lane(99, 4).is_err());
+        // attached lanes carry a floor at their shared prefix length
+        p.publish_shared(7, 2).unwrap(); // 32 tokens by reference
+        p.attach_shared(7).unwrap();
+        p.admit_attached(1, 64, 2).unwrap();
+        assert_eq!(p.floor_of(1), 32);
+        p.truncate_lane(1, 33).unwrap();
+        p.truncate_lane(1, 32).unwrap(); // exactly at the floor: ok
+        assert!(p.truncate_lane(1, 31).is_err(),
+                "must not truncate into a still-referenced shared seg");
+        // retiring clears the floor
+        p.release(1);
+        p.release_shared(7).unwrap();
+        assert_eq!(p.floor_of(1), 0);
+        // a later plain admission of the same lane has no floor
+        p.admit(1, 16).unwrap();
+        p.truncate_lane(1, 1).unwrap();
+    }
+
+    #[test]
+    fn randomized_truncate_schedules_conserve_pages_property() {
+        // satellite: randomized truncate/append(advance)/cancel(free)
+        // schedules — with shared-prefix attaches in the mix — keep
+        // free + Σheld + Σshared == total, and truncation never
+        // reaches into a still-referenced shared segment
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(0x7B0C);
+        let page = 4;
+        let max_seq = 64;
+        for _case in 0..40 {
+            let n_lanes = 1 + rng.next_below(4);
+            let n_pages = 8 + rng.next_below(24);
+            let mut lanes = LaneTable::new(n_lanes, max_seq);
+            let mut pages = PagedAllocator::new(page, n_pages, n_lanes);
+            // one shared group, published up front when it fits
+            let seg = 1u32;
+            let shared_pages = 1 + rng.next_below(2);
+            let published =
+                pages.publish_shared(seg, shared_pages).is_ok();
+            let floor_tokens = shared_pages * page;
+            // live: (lane, len, attached)
+            let mut live: Vec<(usize, usize, bool)> = Vec::new();
+            for step in 0..300u64 {
+                match rng.next_below(5) {
+                    // admit (plain or attached)
+                    0 if lanes.free_lanes() > 0 => {
+                        let attach = published && rng.next_f32() < 0.5;
+                        if attach {
+                            let len =
+                                floor_tokens + 1 + rng.next_below(8);
+                            let max_len =
+                                (len + 8).min(max_seq);
+                            let sp = pages.attach_shared(seg).unwrap();
+                            if pages.can_admit_attached(max_len, sp) {
+                                let lane =
+                                    lanes.alloc(step, len).unwrap();
+                                pages
+                                    .admit_attached(lane, max_len, sp)
+                                    .unwrap();
+                                assert_eq!(pages.floor_of(lane),
+                                           floor_tokens);
+                                live.push((lane, len, true));
+                            } else {
+                                pages.release_shared(seg).unwrap();
+                            }
+                        } else {
+                            let len = 1 + rng.next_below(16);
+                            let max_len = (len + 8).min(max_seq);
+                            if pages.can_admit(max_len) {
+                                let lane =
+                                    lanes.alloc(step, len).unwrap();
+                                pages.admit(lane, max_len).unwrap();
+                                assert_eq!(pages.floor_of(lane), 0);
+                                live.push((lane, len, false));
+                            }
+                        }
+                    }
+                    // append: advance a live lane a few tokens
+                    1 if !live.is_empty() => {
+                        let i = rng.next_below(live.len());
+                        let (lane, len, _) = &mut live[i];
+                        for _ in 0..(1 + rng.next_below(4)) {
+                            if *len < max_seq {
+                                *len = lanes.advance(*lane).unwrap();
+                            }
+                        }
+                    }
+                    // truncate: roll a live lane back; must succeed
+                    // iff the target respects the lane's shared floor
+                    2 if !live.is_empty() => {
+                        let i = rng.next_below(live.len());
+                        let (lane, len, attached) = &mut live[i];
+                        let new_len = 1 + rng.next_below(*len);
+                        let floor =
+                            if *attached { floor_tokens } else { 0 };
+                        let ok = new_len >= floor;
+                        assert_eq!(
+                            pages.truncate_lane(*lane, new_len).is_ok(),
+                            ok,
+                            "truncate_lane must succeed iff at or \
+                             above the shared floor"
+                        );
+                        if ok {
+                            lanes.truncate(*lane, new_len).unwrap();
+                            *len = new_len;
+                        }
+                    }
+                    // cancel: retire a live lane mid-flight
+                    3 if !live.is_empty() => {
+                        let i = rng.next_below(live.len());
+                        let (lane, _, attached) = live.swap_remove(i);
+                        lanes.free(lane).unwrap();
+                        pages.release(lane);
+                        if attached {
+                            pages.release_shared(seg).unwrap();
+                        }
+                        assert_eq!(pages.floor_of(lane), 0);
+                    }
+                    _ => {}
+                }
+                // invariants after every step
+                let held: usize =
+                    (0..n_lanes).map(|l| pages.held_by(l)).sum();
+                assert_eq!(
+                    held + pages.free_pages()
+                        + pages.shared_pages_total(),
+                    pages.total_pages(),
+                    "page conservation violated"
+                );
+                for (lane, len, _) in &live {
+                    assert_eq!(lanes.len_of(*lane), Some(*len));
+                }
+                if published {
+                    let refs =
+                        live.iter().filter(|(_, _, a)| *a).count();
+                    assert_eq!(pages.shared_refs(seg), Some(refs));
+                }
+            }
         }
     }
 

@@ -42,7 +42,12 @@ use crate::engine::proto::{self, Cmd, Reply, WireReader};
 /// (`Cmd::AttachPrefix`/`DetachPrefix`/`PublishPrefix`/`DropPrefix`,
 /// DESIGN.md §13) and the `scheduler` config key — a v3 worker can
 /// decode neither, so mixed fleets are refused at registration.
-pub const PROTO_VERSION: u32 = 4;
+///
+/// v5: speculative decoding (DESIGN.md §15): new
+/// `Cmd::DraftDecode`/`Verify`/`TruncateLane`, the `Reply::VerifyDone`
+/// frame, and the `spec_draft`/`spec_k` config keys — a v4 worker can
+/// decode none of them, so mixed fleets are refused at registration.
+pub const PROTO_VERSION: u32 = 5;
 
 /// How often an idle worker proves liveness to the coordinator.
 pub const HEARTBEAT_PERIOD: Duration = Duration::from_secs(2);

@@ -52,17 +52,20 @@ on --addr.  With --spawn-workers true the coordinator forks the
 workers itself (single-machine convenience; CI smoke path starts them
 explicitly).
 
-bench runs the recording suite (DESIGN.md \u{a7}10-\u{a7}13): the
+bench runs the recording suite (DESIGN.md \u{a7}10-\u{a7}15): the
 standard scenarios (single-stream / batched decode, prefill-heavy,
-mixed, long-prompt interactive, shared-prefix storm) per world size,
-on the blocked kernel plus the scalar batched-decode baseline, int8
-weights+KV decode rows, the chunked-prefill decode-stall pair, and
-the fcfs-vs-continuous shared_prefix_storm pair, and writes the
+mixed, long-prompt interactive, shared-prefix storm, speculative
+decode) per world size, on the blocked kernel plus the scalar
+batched-decode baseline, int8 weights+KV decode rows, the
+chunked-prefill decode-stall pair, the fcfs-vs-continuous
+shared_prefix_storm pair, and the spec-off-vs-spec-on
+speculative_decode pair (nano draft, spec_k = 4), and writes the
 xeonserve-bench/v1 JSON (--json) that BENCH_*.json files in the repo
 are recorded with — every row carries its weight/KV dtype, prefill
-chunk size, scheduler, prefix hit rate, instruction tier (isa), and
-measured resident bytes; batched_decode additionally records one row
-per instruction tier the host can run (DESIGN.md \u{a7}14).
+chunk size, scheduler, prefix hit rate, spec_k / accept_rate,
+instruction tier (isa), and measured resident bytes; batched_decode
+additionally records one row per instruction tier the host can run
+(DESIGN.md \u{a7}14).
 --validate schema-checks such a file and exits; every failure names
 the validator rule and row that tripped it.  Serving knobs live in
 the TOML: weight_dtype / kv_dtype = \"int8\" (reference backend
@@ -71,7 +74,11 @@ reference backend only), scheduler = \"fcfs\" | \"continuous\"
 (continuous batching + copy-on-write shared-prefix KV reuse,
 reference backend only), and isa = \"auto\" | \"scalar\" | \"avx2\"
 | \"avx512\" | \"vnni\" (GEMM instruction tier, reference backend
-only; vnni requires weight_dtype = \"int8\" — DESIGN.md \u{a7}14).  The serve/launch JSON API streams per-token
+only; vnni requires weight_dtype = \"int8\" — DESIGN.md \u{a7}14),
+and spec_draft = \"off\" | PRESET with spec_k = 1..8 (greedy
+speculative decoding with a smaller draft model, reference backend
+only, greedy sampling only — DESIGN.md \u{a7}15).  The
+serve/launch JSON API streams per-token
 reply frames when a request carries \"stream\": true, and
 {\"cancel\": id} aborts an in-flight request idempotently.
 
@@ -291,6 +298,17 @@ fn run_bench(args: &Args) -> Result<()> {
                  vs fcfs {:.2} ms, prefix hit rate {:.2} \
                  (DESIGN.md §13)",
                 c.0, f.0, c.2
+            );
+        }
+        if let (Some(off), Some(on)) =
+            (suite::spec_row(&doc, w, false),
+             suite::spec_row(&doc, w, true))
+        {
+            println!(
+                "speculative_decode w{w}: spec-on {:.2} ms/token at \
+                 accept rate {:.2} vs spec-off {:.2} ms/token \
+                 (DESIGN.md §15)",
+                on.0, on.2, off.0
             );
         }
     }

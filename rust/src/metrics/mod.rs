@@ -133,6 +133,17 @@ impl StepTiming {
         let per_rank = self.compute_total_us / self.world.max(1);
         per_rank + self.comm_sim_us + self.sample_us
     }
+
+    /// Fold one collective round's timing into a multi-round step (a
+    /// speculative step runs k draft rounds + one verify + an optional
+    /// catch-up — DESIGN.md §15).  Sums are additive; the per-round
+    /// maxima add too, because the rounds run sequentially: the step's
+    /// critical path is the sum of each round's slowest rank.
+    pub fn accumulate_round(&mut self, round: &StepTiming) {
+        self.compute_total_us += round.compute_total_us;
+        self.compute_max_us += round.compute_max_us;
+        self.comm_wall_us += round.comm_wall_us;
+    }
 }
 
 /// Aggregates step timings for a run; feeds the bench tables and the
@@ -162,6 +173,11 @@ pub struct RunMetrics {
     /// admissions that found no reusable prefix (includes every
     /// admission under the fcfs scheduler, which never shares)
     pub prefix_misses: u64,
+    /// draft tokens proposed by speculative decoding (`spec_k` per
+    /// speculating lane per step — DESIGN.md §15)
+    pub spec_proposed: u64,
+    /// draft proposals the target verified and accepted
+    pub spec_accepted: u64,
 }
 
 impl RunMetrics {
@@ -191,6 +207,17 @@ impl RunMetrics {
             return 0.0;
         }
         self.prefix_hits as f64 / total as f64
+    }
+
+    /// Fraction of draft proposals the target accepted, in `[0, 1]`
+    /// (0.0 when nothing was proposed — the documented sentinel the
+    /// bench schema carries for spec-off rows, mirroring
+    /// [`Self::prefix_hit_rate`]).
+    pub fn accept_rate(&self) -> f64 {
+        if self.spec_proposed == 0 {
+            return 0.0;
+        }
+        self.spec_accepted as f64 / self.spec_proposed as f64
     }
 
     /// tokens/s over a measured span.
@@ -315,6 +342,34 @@ mod tests {
         assert!((m.prefix_hit_rate() - 0.25).abs() < 1e-12);
         m.prefix_hits = 0;
         assert_eq!(m.prefix_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn accept_rate_is_a_safe_ratio() {
+        let mut m = RunMetrics::default();
+        assert_eq!(m.accept_rate(), 0.0, "no proposals → 0.0");
+        m.spec_proposed = 8;
+        m.spec_accepted = 2;
+        assert!((m.accept_rate() - 0.25).abs() < 1e-12);
+        m.spec_accepted = 8;
+        assert!((m.accept_rate() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accumulate_round_sums_the_critical_path() {
+        let mut step = StepTiming::default();
+        let round = StepTiming {
+            compute_total_us: 100,
+            compute_max_us: 60,
+            comm_wall_us: 10,
+            ..StepTiming::default()
+        };
+        step.accumulate_round(&round);
+        step.accumulate_round(&round);
+        assert_eq!(step.compute_total_us, 200);
+        assert_eq!(step.compute_max_us, 120);
+        assert_eq!(step.comm_wall_us, 20);
+        assert_eq!(step.wall_us, 0, "wall is measured by the caller");
     }
 
     #[test]

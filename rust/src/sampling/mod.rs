@@ -44,11 +44,26 @@ pub fn local_topk(logits: &[f32], k: usize, offset: usize) -> Vec<Candidate> {
         .collect()
 }
 
+/// Descending-by-logit, then ascending-by-token total order.
+///
+/// NaN logits sort deterministically *last* (after every finite and
+/// infinite value, tie-broken by token id).  Mapping the incomparable
+/// case to `Ordering::Equal` — the old behavior — is not a total
+/// order, and `sort_unstable_by`/`select_nth_unstable_by` scramble
+/// the result input-order-dependently under a non-total comparator,
+/// which broke cross-world determinism the moment a NaN logit
+/// appeared in any shard.
 #[inline]
 fn cmp_desc(la: f32, ia: u32, lb: f32, ib: u32) -> std::cmp::Ordering {
-    lb.partial_cmp(&la)
-        .unwrap_or(std::cmp::Ordering::Equal)
-        .then(ia.cmp(&ib))
+    use std::cmp::Ordering;
+    match (la.is_nan(), lb.is_nan()) {
+        (true, true) => ia.cmp(&ib),
+        (true, false) => Ordering::Greater, // NaN after everything
+        (false, true) => Ordering::Less,
+        (false, false) => {
+            lb.partial_cmp(&la).unwrap().then(ia.cmp(&ib))
+        }
+    }
 }
 
 /// Merge per-rank candidate lists into the global top-k (the "reduction"
@@ -228,5 +243,51 @@ mod tests {
         let a = local_topk(&logits, 4, 0);
         let tokens: Vec<u32> = a.iter().map(|c| c.token).collect();
         assert_eq!(tokens, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn local_topk_orders_nan_deterministically_last() {
+        // NaN must lose to every real logit — including -inf — and
+        // the result must not depend on where the NaN sits
+        let logits = vec![f32::NAN, 2.0, f32::NEG_INFINITY, 1.0];
+        let top = local_topk(&logits, 4, 0);
+        let tokens: Vec<u32> = top.iter().map(|c| c.token).collect();
+        assert_eq!(tokens, vec![1, 3, 2, 0]);
+        assert!(top[3].logit.is_nan());
+
+        // permute the NaN through every slot: the selected top-2 set
+        // is always the two finite logits, in the same order
+        for nan_at in 0..4 {
+            let mut l = vec![3.0, 2.0, 1.0];
+            l.insert(nan_at, f32::NAN);
+            let top = local_topk(&l, 2, 0);
+            let logits: Vec<f32> =
+                top.iter().map(|c| c.logit).collect();
+            assert_eq!(logits, vec![3.0, 2.0], "nan at {nan_at}");
+        }
+
+        // all-NaN shard: pure token-id order, still deterministic
+        let top = local_topk(&[f32::NAN, f32::NAN, f32::NAN], 2, 10);
+        let tokens: Vec<u32> = top.iter().map(|c| c.token).collect();
+        assert_eq!(tokens, vec![10, 11]);
+    }
+
+    #[test]
+    fn merge_topk_orders_nan_deterministically_last() {
+        let nan = Candidate { token: 5, logit: f32::NAN };
+        let hi = Candidate { token: 9, logit: 4.0 };
+        let lo = Candidate { token: 2, logit: -1.0 };
+        // NaN in either rank list, in any slot: merged order is
+        // identical and the NaN ranks strictly last
+        let a = merge_topk(&[vec![nan, hi], vec![lo]], 3);
+        let b = merge_topk(&[vec![hi], vec![lo, nan]], 3);
+        let ta: Vec<u32> = a.iter().map(|c| c.token).collect();
+        let tb: Vec<u32> = b.iter().map(|c| c.token).collect();
+        assert_eq!(ta, vec![9, 2, 5]);
+        assert_eq!(ta, tb);
+        // with k = 2 the NaN is truncated away entirely
+        let c = merge_topk(&[vec![nan], vec![hi, lo]], 2);
+        let tc: Vec<u32> = c.iter().map(|c| c.token).collect();
+        assert_eq!(tc, vec![9, 2]);
     }
 }

@@ -254,6 +254,21 @@ impl FcfsScheduler {
     pub fn on_decode_round(&mut self) {
         self.burst = 0;
     }
+
+    /// Charge `units` extra burst units without admitting anything.
+    ///
+    /// Speculative decoding (DESIGN.md §15) makes one engine step
+    /// consume more than one decode-equivalent of compute per lane: a
+    /// speculating lane runs `spec_k` draft rounds plus a `spec_k + 1`
+    /// row verify round.  The server charges those extra rows here so
+    /// the prefill-burst guard sees the true compute taken between
+    /// decode rounds and prefills cannot ride a speculation-inflated
+    /// budget.  Saturating: an oversized charge pins the counter at
+    /// the bound rather than wrapping.
+    pub fn charge(&mut self, units: usize) {
+        self.burst = self.burst.saturating_add(units)
+                               .min(self.max_prefill_burst);
+    }
 }
 
 /// Continuous-batching admission (DESIGN.md §13): a plain FCFS queue
@@ -316,6 +331,10 @@ impl ContinuousScheduler {
 
     /// Decode-round notification — a no-op (there is no burst counter).
     pub fn on_decode_round(&mut self) {}
+
+    /// Burst charge — a no-op: continuous admission has no burst
+    /// counter, so speculative verify rows cost it nothing.
+    pub fn charge(&mut self, _units: usize) {}
 }
 
 impl Default for ContinuousScheduler {
@@ -400,6 +419,15 @@ impl AdmissionQueue {
         match self {
             AdmissionQueue::Fcfs(s) => s.on_decode_round(),
             AdmissionQueue::Continuous(s) => s.on_decode_round(),
+        }
+    }
+
+    /// Charge extra burst units a speculative step consumed (DESIGN.md
+    /// §15); a no-op under continuous admission.
+    pub fn charge(&mut self, units: usize) {
+        match self {
+            AdmissionQueue::Fcfs(s) => s.charge(units),
+            AdmissionQueue::Continuous(s) => s.charge(units),
         }
     }
 }
@@ -813,6 +841,49 @@ mod tests {
         let mut c = PrefillCursor::new_at(8, 4, 8);
         assert_eq!(c.next_chunk(),
                    Some(ChunkSpan { start: 7, len: 1, last: true }));
+    }
+
+    #[test]
+    fn speculative_charge_consumes_the_prefill_burst_budget() {
+        // a speculating lane's extra verify rows count against the
+        // burst bound exactly like admitted prefill chunks would
+        let mut s = FcfsScheduler::new(3);
+        for _ in 0..4 {
+            s.submit(vec![0], 1);
+        }
+        assert!(s.next_admission(true).is_some()); // burst = 1
+        s.charge(2); //                               burst = 3 = bound
+        assert!(s.next_admission(true).is_none(),
+                "charged budget must force a yield to decode");
+        // only a decode round restores the budget — same rule as
+        // admission-side exhaustion
+        s.charge(0);
+        assert!(s.next_admission(true).is_none());
+        s.on_decode_round();
+        assert!(s.next_admission(true).is_some());
+
+        // saturating: an oversized charge pins at the bound and one
+        // decode round still fully restores the budget
+        s.charge(usize::MAX);
+        assert!(s.next_admission(true).is_none());
+        s.on_decode_round();
+        assert!(s.next_admission(true).is_some());
+
+        // continuous admission ignores charges entirely
+        let mut c = ContinuousScheduler::new();
+        c.submit(vec![0], 1);
+        c.charge(usize::MAX);
+        assert!(c.next_admission(true).is_some());
+
+        // and the enum passes through by kind
+        use crate::config::SchedulerKind;
+        let mut q = AdmissionQueue::for_kind(SchedulerKind::Fcfs, 1, 0);
+        q.submit(vec![0], 1);
+        q.charge(1);
+        assert!(q.next_admission(true).is_none(),
+                "fcfs charge must apply through the enum");
+        q.on_decode_round();
+        assert!(q.next_admission(true).is_some());
     }
 
     #[test]

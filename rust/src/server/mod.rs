@@ -359,8 +359,17 @@ fn engine_loop(mut engine: Engine, jobs: Receiver<Job>) -> Result<()> {
 
         if engine.has_work() {
             sched.on_decode_round();
+            let decode_lanes = engine.decoding_count();
             match engine.step() {
                 Ok(completions) => {
+                    // speculative steps (DESIGN.md §15) run spec_k
+                    // draft rounds plus a multi-row verify: charge the
+                    // rows beyond one-per-decode-lane against the
+                    // prefill-burst budget so prefills cannot ride a
+                    // speculation-inflated step as if it were one
+                    // decode round (0 on plain/prefill steps)
+                    sched.charge(engine.last_verify_rows()
+                                     .saturating_sub(decode_lanes));
                     // per-token frames first, so every token of a
                     // completing request precedes its Done frame
                     for (eid, t) in engine.take_new_tokens() {

@@ -235,4 +235,62 @@ alpha_us = 1.1
         assert!(parse_toml("[unclosed").is_err());
         assert!(parse_toml("a = \"unterminated").is_err());
     }
+
+    /// Satellite: seeded byte-soup fuzz of [`parse_toml`].  Every
+    /// input — structural TOML fragments glued at random, and raw
+    /// random bytes run through a lossy UTF-8 decode — must yield
+    /// either a parsed tree or a clean `Err`, never a panic (the
+    /// `#[test]` harness turns any panic into a failure).  This is
+    /// the other half of the config-roundtrip fuzz in
+    /// `config::tests`: that one proves well-formed configs survive
+    /// serialize→parse, this one proves arbitrary garbage cannot
+    /// crash the parser a remote worker runs on coordinator-supplied
+    /// text (launch ships configs over TCP).
+    #[test]
+    fn parse_never_panics_on_seeded_byte_soup() {
+        use crate::util::SplitMix64;
+
+        let mut rng = SplitMix64::new(0x70_11_5EED);
+        // structural fragments: headers, assignments, escapes,
+        // comments, arrays, and the edge characters the parser
+        // special-cases ('"', '\\', '#', '[', ']', '=', '.')
+        let atoms: &[&str] = &[
+            "[", "]", "=", ".", ",", "\"", "\\", "#", "\n",
+            "[t]", "[a.b]", "[ ]", "[.]", "[a..b]",
+            "k = 1", "k = \"v\"", "k = [1, 2]", "k = [",
+            "k = true", "k = 1e99", "k = -0.5", "k = nan",
+            "\"quoted key\" = 1", "= 3", "k =", "k",
+            "\\n", "\\q", "\\", "\"unterminated",
+            "# comment", "x # y", " ", "\t", "é", "\u{7f}",
+        ];
+        let mut parsed_ok = 0usize;
+        for _ in 0..4000 {
+            let n = (rng.next_u64() % 14) as usize;
+            let mut text = String::new();
+            for _ in 0..n {
+                text.push_str(
+                    atoms[(rng.next_u64() as usize) % atoms.len()]);
+                if rng.next_u64() % 3 == 0 {
+                    text.push('\n');
+                }
+            }
+            if parse_toml(&text).is_ok() {
+                parsed_ok += 1;
+            }
+        }
+        // raw byte soup: arbitrary bytes lossy-decoded, so the parser
+        // also sees replacement chars, control bytes, and long
+        // unbroken lines
+        for _ in 0..2000 {
+            let n = (rng.next_u64() % 64) as usize;
+            let bytes: Vec<u8> =
+                (0..n).map(|_| rng.next_u64() as u8).collect();
+            let text = String::from_utf8_lossy(&bytes);
+            let _ = parse_toml(&text); // must not panic
+        }
+        // the soup should assemble something valid now and then — if
+        // nothing ever parses, the generator rotted and the fuzz is
+        // vacuous (empty strings alone parse to an empty tree)
+        assert!(parsed_ok > 0, "fuzz generator never built valid TOML");
+    }
 }

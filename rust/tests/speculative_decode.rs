@@ -1,0 +1,384 @@
+//! Greedy-acceptance equivalence suite for speculative decoding
+//! (DESIGN.md §15): a draft model may only ever *propose* tokens —
+//! the target's verify rounds accept exactly the prefix that greedy
+//! target-only decode would have produced, so spec-on greedy output
+//! must be BIT-IDENTICAL to spec-off output for every request, across
+//! draft depths, world sizes, dtypes, and both admission schedulers.
+//! This file is that claim's pin, plus the serving-side invariants:
+//! mixed speculating/plain batches, lanes that age out of
+//! eligibility, rejection-heavy and acceptance-heavy schedules, and
+//! lane/page/refcount conservation under random join/leave/cancel
+//! traffic with speculation live.
+
+use xeonserve::config::{BackendKind, Dtype, EngineConfig, SchedulerKind,
+                        WeightSource};
+use xeonserve::engine::Engine;
+use xeonserve::util::SplitMix64;
+
+/// Spec-off baseline config (the reference semantics).
+fn cfg(world: usize, batch: usize, dtype: Dtype, sched: SchedulerKind)
+       -> EngineConfig {
+    EngineConfig {
+        model: "tiny".into(),
+        backend: BackendKind::Reference,
+        world,
+        batch,
+        weight_dtype: dtype,
+        kv_dtype: dtype,
+        scheduler: sched,
+        weights: WeightSource::Synthetic { seed: 0xC0FFEE },
+        ..Default::default()
+    }
+}
+
+/// The same config with the nano draft speculating `k` tokens/step.
+fn spec_cfg(world: usize, batch: usize, dtype: Dtype,
+            sched: SchedulerKind, k: usize) -> EngineConfig {
+    let mut c = cfg(world, batch, dtype, sched);
+    c.spec_draft = "nano".into();
+    c.spec_k = k;
+    c
+}
+
+/// Prompts short enough that the fcfs bucket path (tiny's single
+/// 16-token bucket) never truncates, so every matrix cell compares
+/// exact equals.
+fn prompts() -> Vec<Vec<i32>> {
+    vec![
+        vec![10, 20, 30, 40, 50, 60, 70, 80, 90, 100, 110],
+        vec![7, 7, 7],
+        vec![1, 2, 3, 4, 5, 6, 7, 8],
+        vec![99, 3, 55, 4, 120, 6, 31, 8, 2, 11, 5, 44, 9, 14],
+    ]
+}
+
+/// Spec-off reference: each prompt decoded greedily without any
+/// draft, the tokens every speculative cell must reproduce.
+fn baseline_tokens(dtype: Dtype, ps: &[Vec<i32>], n_new: usize)
+                   -> Vec<Vec<i32>> {
+    let mut e =
+        Engine::new(cfg(1, 2, dtype, SchedulerKind::Fcfs)).unwrap();
+    e.generate(ps, n_new).unwrap()
+}
+
+// ---- the acceptance matrix ---------------------------------------------
+
+/// Headline gate: greedy decode bit-identical spec-on vs spec-off
+/// across k ∈ {1, 2, 4} × worlds {1, 2, 4} × dtypes {f32, int8} ×
+/// both schedulers.  Batch 2 over 4 requests, so lanes retire and
+/// refill mid-run and speculation restarts on fresh lanes.  Every
+/// cell must also actually speculate (proposals > 0) — a cell that
+/// silently fell back to plain decode would pass vacuously.
+#[test]
+fn speculative_equivalence_matrix() {
+    let ps = prompts();
+    for dtype in [Dtype::F32, Dtype::Int8] {
+        let golden = baseline_tokens(dtype, &ps, 8);
+        assert!(golden.iter().all(|t| !t.is_empty()));
+        for k in [1usize, 2, 4] {
+            for world in [1usize, 2, 4] {
+                for sched in [SchedulerKind::Fcfs,
+                              SchedulerKind::Continuous] {
+                    let mut e = Engine::new(
+                        spec_cfg(world, 2, dtype, sched, k)).unwrap();
+                    let got = e.generate(&ps, 8).unwrap();
+                    assert_eq!(
+                        got, golden,
+                        "{dtype:?} k={k} world={world} {sched}: \
+                         speculative run diverged from the spec-off \
+                         reference"
+                    );
+                    assert!(e.metrics.spec_proposed > 0,
+                            "{dtype:?} k={k} world={world} {sched}: \
+                             no draft proposals — cell never \
+                             speculated");
+                    assert!(e.metrics.spec_accepted
+                                <= e.metrics.spec_proposed);
+                    let acc = e.metrics.accept_rate();
+                    assert!((0.0..=1.0).contains(&acc));
+                }
+            }
+        }
+    }
+}
+
+/// Volume run: whatever accept/reject pattern the random nano draft
+/// produces against the random tiny target — rejection at position 0
+/// (the common case, full rollback), mid-chain rejection, or full
+/// acceptance (the draft catch-up round) — long greedy streams stay
+/// bit-identical to the spec-off reference, and the proposal
+/// accounting stays consistent.  The pattern itself is a fixed
+/// deterministic function of the synthetic seed, so this test is
+/// stable; the bit-identity claim is what pins every branch that
+/// fires.
+#[test]
+fn long_runs_stay_bit_identical_whatever_the_accept_pattern() {
+    let ps = prompts();
+    let golden = baseline_tokens(Dtype::F32, &ps, 40);
+    for k in [1usize, 4] {
+        let mut e = Engine::new(spec_cfg(1, 2, Dtype::F32,
+                                         SchedulerKind::Continuous, k))
+            .unwrap();
+        let got = e.generate(&ps, 40).unwrap();
+        assert_eq!(got, golden, "k={k}: long run diverged");
+        let m = &e.metrics;
+        // every decode round of an eligible lane must have proposed:
+        // 4 requests × ≥ (39 decode tokens / (k+1) rows per round − 1
+        // possibly-plain final round) spec rounds × k proposals each
+        let floor = 4 * (39 / (k + 1)).saturating_sub(1) * k;
+        assert!(m.spec_proposed as usize >= floor,
+                "k={k}: {} proposals under the {floor} floor — lanes \
+                 silently stopped speculating", m.spec_proposed);
+        assert!(m.spec_accepted <= m.spec_proposed,
+                "k={k}: accounting inversion");
+        let acc = m.accept_rate();
+        assert!((0.0..=1.0).contains(&acc), "k={k}: bad rate {acc}");
+        println!("k={k}: {} proposed, {} accepted (rate {acc:.3})",
+                 m.spec_proposed, m.spec_accepted);
+    }
+}
+
+// ---- mixed speculating / plain batches ---------------------------------
+
+/// A batch mixing speculating lanes with lanes that must decode plain
+/// — one with `max_new = 1` (remaining < 2 never speculates) and one
+/// near `max_seq` (no KV headroom for k+1 rows) — stays bit-identical
+/// per lane, and the plain lanes really were served.
+#[test]
+fn mixed_speculating_and_plain_lanes_are_bit_identical() {
+    // near-max_seq: tiny's max_seq is 64; a 61-token prompt at k=4
+    // fails the len + k + 1 <= max_seq eligibility check for its
+    // whole (short) generation, so the lane decodes plain throughout
+    let long: Vec<i32> =
+        (0..61).map(|t| ((t * 13) % 200) as i32 + 1).collect();
+    let short = vec![10i32, 20, 30];
+    let normal = vec![1i32, 2, 3, 4, 5, 6, 7, 8];
+    let budgets = [2usize, 1, 12];
+    let reqs: Vec<(Vec<i32>, usize)> = vec![
+        (long.clone(), budgets[0]),
+        (short.clone(), budgets[1]),
+        (normal.clone(), budgets[2]),
+    ];
+    // per-request spec-off reference (continuous admission: the long
+    // prompt must not be bucket-truncated)
+    let golden: Vec<Vec<i32>> = reqs
+        .iter()
+        .map(|(p, n)| {
+            let mut e = Engine::new(cfg(1, 2, Dtype::F32,
+                                        SchedulerKind::Continuous))
+                .unwrap();
+            e.generate(std::slice::from_ref(p), *n).unwrap()
+                .pop().unwrap()
+        })
+        .collect();
+    for world in [1usize, 2] {
+        let mut e = Engine::new(spec_cfg(world, 3, Dtype::F32,
+                                         SchedulerKind::Continuous, 4))
+            .unwrap();
+        let ids: Vec<u64> = reqs
+            .iter()
+            .map(|(p, n)| e.enqueue(p.clone(), *n))
+            .collect();
+        let mut done = e.run_to_completion().unwrap();
+        done.sort_by_key(|c| c.request_id);
+        assert_eq!(done.len(), 3);
+        for ((c, id), want) in done.iter().zip(&ids).zip(&golden) {
+            assert_eq!(c.request_id, *id);
+            assert_eq!(&c.tokens, want,
+                       "w{world}: lane in a mixed spec/plain batch \
+                        diverged (request {id})");
+        }
+        // the normal lane speculated; the constrained lanes' plain
+        // service shows up as verify rows smaller than a full
+        // 3-lane × (k+1) speculative batch would be
+        assert!(e.metrics.spec_proposed > 0,
+                "w{world}: mixed batch never speculated");
+        assert_eq!(e.free_lanes(), 3, "w{world}: lane leak");
+        assert_eq!(e.free_pages() + e.shared_pages(), e.total_pages(),
+                   "w{world}: page leak");
+    }
+}
+
+/// A lane ages OUT of eligibility mid-request: generation carries it
+/// from plenty of KV headroom to `len + k + 1 > max_seq`, so the
+/// engine must switch that lane from speculating to plain decode
+/// mid-stream without perturbing its tokens.
+#[test]
+fn lane_aging_out_of_headroom_switches_to_plain_mid_request() {
+    let p: Vec<i32> =
+        (0..40).map(|t| ((t * 7) % 200) as i32 + 1).collect();
+    let golden = {
+        let mut e = Engine::new(cfg(1, 1, Dtype::F32,
+                                    SchedulerKind::Continuous))
+            .unwrap();
+        e.generate(std::slice::from_ref(&p), 23).unwrap().pop().unwrap()
+    };
+    // len walks 40 → 62; at k=4 eligibility (len + 5 <= 64) dies at
+    // len 60, three tokens before the cap ends the request
+    let mut e = Engine::new(spec_cfg(1, 1, Dtype::F32,
+                                     SchedulerKind::Continuous, 4))
+        .unwrap();
+    let got = e.generate(std::slice::from_ref(&p), 23).unwrap()
+        .pop().unwrap();
+    assert_eq!(got, golden, "aging out of eligibility changed tokens");
+    assert!(e.metrics.spec_proposed > 0);
+}
+
+// ---- probes ------------------------------------------------------------
+
+/// `last_verify_rows` reports the speculative row count of the most
+/// recent step — the number the server charges the scheduler's burst
+/// budget with.  A step that runs a speculative decode round reports
+/// `spec_lanes·(k+1) + plain_lanes`; a step that doesn't (prefill
+/// only, or plain decode) reports 0.  One `step()` may do both a
+/// lane's prefill and its first decode round, so this probes the
+/// *set* of values a run produces rather than pinning phases to step
+/// indices.
+#[test]
+fn verify_row_probe_tracks_step_shape() {
+    let k = 3usize;
+    let mut e = Engine::new(spec_cfg(1, 2, Dtype::F32,
+                                     SchedulerKind::Continuous, k))
+        .unwrap();
+    assert_eq!(e.last_verify_rows(), 0, "fresh engine must report 0");
+    e.enqueue(vec![1, 2, 3, 4], 8);
+    e.enqueue(vec![9, 8, 7], 8);
+    let (mut saw_one_lane, mut saw_two_lanes) = (false, false);
+    while e.has_work() {
+        e.step().unwrap();
+        let rows = e.last_verify_rows();
+        // batch 2: a speculative step is spec_lanes·(k+1) +
+        // plain_lanes rows — a lane on its final token (remaining
+        // < 2) rides along plain, giving the k+2 shape
+        assert!(rows == 0 || rows == k + 1 || rows == k + 2
+                    || rows == 2 * (k + 1),
+                "unexpected verify row count {rows}");
+        saw_one_lane |= rows == k + 1;
+        saw_two_lanes |= rows == 2 * (k + 1);
+    }
+    // one lane retires before the other (different prompt lengths
+    // stagger prefill), so both shapes must occur
+    assert!(saw_one_lane,
+            "no step ever verified a single speculating lane");
+    assert!(saw_two_lanes,
+            "two concurrent speculating lanes never produced a \
+             2·(k+1)-row verify step");
+    // spec-off engines always report 0
+    let mut plain =
+        Engine::new(cfg(1, 1, Dtype::F32, SchedulerKind::Fcfs)).unwrap();
+    plain.enqueue(vec![1, 2, 3], 4);
+    while plain.has_work() {
+        plain.step().unwrap();
+        assert_eq!(plain.last_verify_rows(), 0);
+    }
+}
+
+// ---- random join/leave/cancel schedules --------------------------------
+
+/// A 33-token system prompt whose 32-token page-aligned prefix
+/// publishes as a shared segment — speculation must coexist with
+/// copy-on-write prefix reuse (the draft cache mirrors every
+/// attach/publish/drop).
+fn system_prefix() -> Vec<i32> {
+    (0..33).map(|t| ((t * 13) % 200) as i32 + 1).collect()
+}
+
+/// Drive one random schedule of submit / step / cancel against a
+/// speculating continuous-batching engine, checking page accounting
+/// every op and full conservation (lanes, pages, shared segments) at
+/// drain.  Rollback truncation, retire-mid-verify, cancel-mid-spec,
+/// and draft-KV mirroring all fire under this traffic.
+fn run_spec_schedule(seed: u64, ops: usize, k: usize) {
+    let mut rng = SplitMix64::new(seed);
+    let mut engine = Engine::new(spec_cfg(1, 2, Dtype::F32,
+                                          SchedulerKind::Continuous, k))
+        .unwrap();
+    let lanes0 = engine.free_lanes();
+    let pages0 = engine.free_pages();
+    let mut live: Vec<u64> = Vec::new();
+    for op in 0..ops {
+        match rng.next_below(4) {
+            0 => {
+                // half the arrivals open with the shared system
+                // prompt (publish/attach traffic), half are private
+                let len = 1 + rng.next_below(20);
+                let prompt: Vec<i32> = if rng.next_below(2) == 0 {
+                    let mut p = system_prefix();
+                    p.truncate(len.max(4));
+                    p
+                } else {
+                    (0..len)
+                        .map(|_| rng.next_below(200) as i32 + 1)
+                        .collect()
+                };
+                live.push(engine.enqueue(prompt,
+                                         1 + rng.next_below(8)));
+            }
+            1 if !live.is_empty() => {
+                let i = rng.next_below(live.len());
+                let id = live.swap_remove(i);
+                // may already have completed — either is fine, but
+                // it must never error or double-free
+                engine.cancel(id).unwrap();
+            }
+            _ => {
+                if engine.has_work() {
+                    for c in engine.step().unwrap() {
+                        live.retain(|&id| id != c.request_id);
+                    }
+                }
+            }
+        }
+        assert!(engine.free_pages() + engine.shared_pages()
+                    <= engine.total_pages(),
+                "seed {seed:#x} op {op}: page pool oversubscribed");
+        assert_eq!(engine.shared_groups(), engine.prefix_entries(),
+                   "seed {seed:#x} op {op}: allocator and prefix \
+                    cache disagree on live segments");
+        assert!(engine.last_verify_rows() <= 2 * (k + 1),
+                "seed {seed:#x} op {op}: verify rows exceed the \
+                 2-lane × (k+1) ceiling");
+    }
+    for id in live {
+        engine.cancel(id).unwrap();
+    }
+    engine.run_to_completion().unwrap();
+    assert_eq!(engine.free_lanes(), lanes0,
+               "seed {seed:#x}: lane leak");
+    assert_eq!(engine.free_pages() + engine.shared_pages(), pages0,
+               "seed {seed:#x}: page leak");
+    let m = &engine.metrics;
+    assert!(m.spec_accepted <= m.spec_proposed,
+            "seed {seed:#x}: accounting inversion");
+}
+
+/// Property sweep: random interleavings of submit / step / cancel
+/// with speculation live — across draft depths, with shared-prefix
+/// traffic mixed in — conserve lanes, pages, and segment refcounts.
+/// No accept/reject schedule leaks.
+#[test]
+fn random_schedules_with_speculation_conserve_resources() {
+    for case in 0..8u64 {
+        let k = [1usize, 2, 4, 8][case as usize % 4];
+        run_spec_schedule(0x5BEC + case, 60, k);
+    }
+}
+
+// ---- config plumbing ---------------------------------------------------
+
+/// The TOML knobs reach the engine via the same path the launch
+/// coordinator ships configs through, and a parsed config actually
+/// speculates — with output still pinned to the spec-off reference.
+#[test]
+fn spec_config_roundtrips_through_toml_and_serves() {
+    let c = spec_cfg(1, 2, Dtype::F32, SchedulerKind::Continuous, 2);
+    let back = EngineConfig::from_toml_str(&c.to_toml_string()).unwrap();
+    assert_eq!(back.spec_draft, "nano");
+    assert_eq!(back.spec_k, 2);
+    assert!(back.spec_enabled());
+    let ps = prompts();
+    let golden = baseline_tokens(Dtype::F32, &ps, 8);
+    let mut e = Engine::new(back).unwrap();
+    assert_eq!(e.generate(&ps, 8).unwrap(), golden);
+    assert!(e.metrics.spec_proposed > 0);
+}
