@@ -19,7 +19,7 @@
 //! `mixed` a serving mix of all three.
 
 use std::collections::BTreeMap;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -30,6 +30,8 @@ use crate::ccl::StatsSnapshot;
 use crate::config::{BackendKind, Dtype, EngineConfig, GemmKernel,
                     IsaKind, SchedulerKind};
 use crate::engine::Engine;
+use crate::server::conn::OutQ;
+use crate::server::Front;
 use crate::util::Json;
 
 /// Identifier of the scenario-suite JSON schema this module emits and
@@ -222,6 +224,13 @@ pub struct ScenarioRecord {
     pub tokens_out: u64,
     /// requests retired over the run
     pub requests_done: u64,
+    /// fraction of submitted requests refused by load-shedding
+    /// admission (DESIGN.md §16) — 0.0 on engine-direct scenarios,
+    /// which bypass the serving front entirely
+    pub shed_rate: f64,
+    /// p99 outbound-frame queue residence, µs (DESIGN.md §16) — 0 on
+    /// engine-direct scenarios
+    pub frame_p99_us: u64,
     /// ccl counters accumulated over the run
     pub comm: StatsSnapshot,
 }
@@ -262,6 +271,8 @@ impl ScenarioRecord {
         put("prefill_p50_us", Json::Num(self.prefill_p50_us as f64));
         put("tokens_out", Json::Num(self.tokens_out as f64));
         put("requests_done", Json::Num(self.requests_done as f64));
+        put("shed_rate", Json::Num(self.shed_rate));
+        put("frame_p99_us", Json::Num(self.frame_p99_us as f64));
         let c = &self.comm;
         let mut comm = BTreeMap::new();
         for (k, v) in [
@@ -370,7 +381,20 @@ pub fn run_scenario(cfg: &EngineConfig, sc: &Scenario)
     let t0 = Instant::now();
     engine.run_to_completion()?;
     let span = t0.elapsed();
-    let comm = engine.comm_stats().since(&before);
+    finish_record(&sc.name, &cfg, &mut engine, span, &before,
+                  sc.batch, sc.requests, 0.0, 0)
+}
+
+/// Assemble one [`ScenarioRecord`] from a finished engine run — the
+/// shared tail of [`run_scenario`] and [`run_storm`], so the
+/// front-driven rows report every field through the same formulas as
+/// the engine-direct ones.
+#[allow(clippy::too_many_arguments)]
+fn finish_record(name: &str, cfg: &EngineConfig, engine: &mut Engine,
+                 span: Duration, before: &StatsSnapshot, batch: usize,
+                 requests: usize, shed_rate: f64, frame_p99_us: u64)
+                 -> Result<ScenarioRecord> {
+    let comm = engine.comm_stats().since(before);
 
     // the kernel/threads knobs are reference-backend GEMM settings;
     // other backends (xla) ignore them, so report 0 = not applicable
@@ -406,7 +430,7 @@ pub fn run_scenario(cfg: &EngineConfig, sc: &Scenario)
         }
     };
     Ok(ScenarioRecord {
-        name: sc.name.clone(),
+        name: name.to_string(),
         world: cfg.world,
         threads,
         kernel: cfg.kernel,
@@ -421,8 +445,8 @@ pub fn run_scenario(cfg: &EngineConfig, sc: &Scenario)
         accept_rate: m.accept_rate(),
         weight_bytes: mem.weight_bytes,
         kv_bytes: mem.kv_bytes,
-        batch: sc.batch,
-        requests: sc.requests,
+        batch,
+        requests,
         ms_per_token: per_token(m.decode_wall.mean_us()),
         ms_per_step: m.decode_wall.mean_us() / 1e3,
         ms_per_token_sim: per_token(m.decode_sim.mean_us()),
@@ -434,8 +458,117 @@ pub fn run_scenario(cfg: &EngineConfig, sc: &Scenario)
         prefill_p50_us: m.prefill_wall.p50_us(),
         tokens_out: m.tokens_out,
         requests_done: m.requests_done,
+        shed_rate,
+        frame_p99_us,
         comm,
     })
+}
+
+/// Admission-queue bound the `connection_storm` rows pin
+/// (`shed_queue`), fixed like [`BENCH_PREFILL_CHUNK`] so recordings
+/// stay comparable across machines (DESIGN.md §16).
+pub const STORM_SHED_QUEUE: usize = 64;
+
+/// The `connection_storm` serving-front scenario (DESIGN.md §16): a
+/// storm of idle-to-active streaming clients — 10 000 full, 96 quick —
+/// arriving in waves over a steady decode state, driven through the
+/// full [`Front`] (admission, load shedding, per-connection bounded
+/// frame queues) as in-process virtual connections.  Real sockets
+/// would hit fd limits at this scale and add nothing: the reactor's
+/// socket handling is pinned by the server tests, and everything above
+/// it is exactly this code path.
+///
+/// Clients "read" their frame queues once per wave, so
+/// `frame_p99_us` measures queue residence across a full engine step —
+/// the serving-side latency a slow-but-alive reader sees.  `shed_rate`
+/// is the fraction of the storm refused at admission under the pinned
+/// [`STORM_SHED_QUEUE`] depth bound (wait-based shedding stays off:
+/// depth-only decisions don't depend on host speed).
+pub fn run_storm(cfg: &EngineConfig, quick: bool)
+                 -> Result<ScenarioRecord> {
+    let mut cfg = cfg.clone();
+    cfg.batch = 4;
+    cfg.shed_queue = STORM_SHED_QUEUE;
+    cfg.shed_wait_ms = 0;
+    cfg.validate()?;
+    let clients: usize = if quick { 96 } else { 10_000 };
+    // waves are wider than STORM_SHED_QUEUE, so the opening wave —
+    // submitted from idle, before any engine step can drain the queue
+    // — always sheds its tail: the quick smoke exercises the shed
+    // path deterministically, independent of engine retirement timing
+    let wave: usize = if quick { 80 } else { 100 };
+
+    let engine = Engine::new(cfg.clone())
+        .with_context(|| format!("bringing up connection_storm w{}",
+                                 cfg.world))?;
+    let before = engine.comm_stats();
+    let mut front = Front::new(engine)?;
+    // virtual connections: same bounded OutQ the reactor gives a
+    // socket, drained by the driver instead of a TCP stream
+    let mut queues: BTreeMap<u64, OutQ> = BTreeMap::new();
+    let mut submitted = 0usize;
+    let mut finished = 0usize; // done frames + shed/error replies
+    let t0 = Instant::now();
+    // generous bound so a routing bug fails loudly instead of hanging
+    let max_iters = clients * 64 + 1024;
+    for _ in 0..max_iters {
+        // clients catch up on their streams first: frames produced by
+        // the previous tick have sat one wave — that residence is the
+        // frame latency
+        for q in queues.values_mut() {
+            while let Some((line, enqueued)) = q.pop_frame() {
+                front.stats.record_frame(enqueued.elapsed());
+                let j = Json::parse(&line).with_context(
+                    || format!("storm client got non-JSON {line:?}"))?;
+                if j.get("done").is_some() || j.get("error").is_some() {
+                    finished += 1;
+                }
+            }
+        }
+        // a wave of new arrivals goes idle-to-active
+        for _ in 0..wave {
+            if submitted >= clients {
+                break;
+            }
+            let id = submitted as u64 + 1;
+            queues.insert(id, OutQ::new(
+                crate::server::conn::MAX_OUT_FRAMES,
+                crate::server::conn::MAX_OUT_BYTES));
+            front.on_line(id, &format!(
+                "{{\"prompt\": \"storm client {submitted}\", \
+                 \"max_new_tokens\": 4, \"stream\": true}}"));
+            submitted += 1;
+        }
+        if front.has_work() {
+            front.tick()?;
+        }
+        // route replies into the virtual connections' bounded queues
+        for (cid, line) in front.take_outbox() {
+            if let Some(q) = queues.get_mut(&cid) {
+                q.push(&line, Instant::now()).map_err(|_| {
+                    anyhow::anyhow!("storm frame queue overflowed \
+                                     (conn {cid})")
+                })?;
+                front.stats.note_queue_depth(q.len());
+            }
+        }
+        if submitted >= clients && !front.has_work()
+            && queues.values().all(OutQ::is_empty)
+        {
+            break;
+        }
+    }
+    let span = t0.elapsed();
+    anyhow::ensure!(
+        finished == clients,
+        "connection_storm lost replies: {finished} terminal lines for \
+         {clients} clients");
+    anyhow::ensure!(front.inflight() == 0 && front.queued() == 0,
+                    "connection_storm leaked front bookkeeping");
+    let shed_rate = front.stats.shed as f64 / clients as f64;
+    let frame_p99_us = front.stats.frame_lat.p99_us();
+    finish_record("connection_storm", &cfg, front.engine_mut(), span,
+                  &before, cfg.batch, clients, shed_rate, frame_p99_us)
 }
 
 /// Sweep the scenario suite over `worlds`, recording every scenario on
@@ -590,6 +723,33 @@ pub fn run_matrix(base: &EngineConfig, worlds: &[usize], quick: bool,
                                    isa=vnni",
                                   sc.name, vn.threads));
                 out.push(run_scenario(&vn, sc)?);
+            }
+        }
+        // the §16 serving-front pair: connection_storm drives the
+        // event front (admission, load shedding, bounded frame
+        // queues) over the same engine, once per scheduler — the p99
+        // frame latency + shed rate rows the storm-pair gate reads
+        // (reference backend only: xla rejects continuous in
+        // validate(), and the front pair must share every other knob)
+        if base.backend == BackendKind::Reference {
+            for kind in [SchedulerKind::Fcfs, SchedulerKind::Continuous]
+            {
+                let mut st = base.clone();
+                st.world = world;
+                st.kernel = GemmKernel::Blocked;
+                st.weight_dtype = Dtype::F32;
+                st.kv_dtype = Dtype::F32;
+                st.prefill_chunk = 0;
+                st.scheduler = kind;
+                st.threads = if base.threads == 0 {
+                    2
+                } else {
+                    auto_threads(base.threads, world).max(2)
+                };
+                progress(&format!(
+                    "connection_storm w{world} blocked x{} f32 {kind}",
+                    st.threads));
+                out.push(run_storm(&st, quick)?);
             }
         }
     }
@@ -759,6 +919,37 @@ pub fn storm_row(j: &Json, world: usize, scheduler: &str)
     })
 }
 
+/// `(frame_p99_us, shed_rate, tokens_per_s)` of the first
+/// `connection_storm` row at `world` under `scheduler`, pinned to the
+/// threaded blocked f32 rows like the other accessors — the DESIGN.md
+/// §16 serving-front pair reads the `"fcfs"` row against the
+/// `"continuous"` one (`None` if the row is missing).
+pub fn conn_storm_row(j: &Json, world: usize, scheduler: &str)
+                      -> Option<(f64, f64, f64)> {
+    let rows = j.get("scenarios")?.as_arr()?;
+    rows.iter().find_map(|r| {
+        let name = r.get("name")?.as_str()?;
+        let w = r.get("world")?.as_usize()?;
+        let kernel = r.get("kernel")?.as_str()?;
+        let threads = r.get("threads")?.as_usize()?;
+        let wd = r.get("weight_dtype").and_then(Json::as_str)
+            .unwrap_or("f32");
+        let kd = r.get("kv_dtype").and_then(Json::as_str)
+            .unwrap_or("f32");
+        let sched = r.get("scheduler")?.as_str()?;
+        if name == "connection_storm" && w == world
+            && kernel == "blocked" && threads >= 2
+            && wd == "f32" && kd == "f32" && sched == scheduler
+        {
+            Some((r.get("frame_p99_us")?.as_f64()?,
+                  r.get("shed_rate")?.as_f64()?,
+                  r.get("tokens_per_s")?.as_f64()?))
+        } else {
+            None
+        }
+    })
+}
+
 /// `(ms_per_token, tokens_per_s, accept_rate)` of the first
 /// `speculative_decode` row at `world` with speculation on (`spec_k >
 /// 0`) or off (`spec_k == 0`), pinned to the threaded blocked f32
@@ -802,8 +993,9 @@ pub fn spec_row(j: &Json, world: usize, speculating: bool)
 /// including the threaded-vs-scalar batched-decode pair, the
 /// int8-vs-f32 batched-decode pair, the whole-vs-chunked
 /// `long_prompt_interactive` pair, the fcfs-vs-continuous
-/// `shared_prefix_storm` pair, and the spec-off-vs-spec-on
-/// `speculative_decode` pair (§15) the acceptance gates read, and ≥ 2
+/// `shared_prefix_storm` pair, the spec-off-vs-spec-on
+/// `speculative_decode` pair (§15), and the fcfs-vs-continuous
+/// `connection_storm` pair (§16) the acceptance gates read, and ≥ 2
 /// distinct `isa` tiers among the `batched_decode` rows (§14) — so a
 /// `--worlds 2` recording validates against its own sweep, while the
 /// committed full recordings must actually contain what they claim.
@@ -854,6 +1046,8 @@ pub fn validate_bench(j: &Json) -> Result<()> {
     let mut interactive_chunked = false;
     let mut storm_fcfs = false;
     let mut storm_continuous = false;
+    let mut cstorm_fcfs = false;
+    let mut cstorm_continuous = false;
     let mut spec_off = false;
     let mut spec_on = false;
     let mut any_reference = false;
@@ -868,7 +1062,7 @@ pub fn validate_bench(j: &Json) -> Result<()> {
                     "decode_p50_us", "decode_p95_us",
                     "decode_stall_p99_us", "prefill_p50_us",
                     "tokens_out", "requests_done", "weight_bytes",
-                    "kv_bytes", "prefill_chunk"] {
+                    "kv_bytes", "prefill_chunk", "frame_p99_us"] {
             let v = r.get(key).and_then(Json::as_f64).with_context(|| {
                 format!("rule row-counter-fields: {} ({name}): \
                          missing numeric field {key:?}", ctx())
@@ -963,6 +1157,18 @@ pub fn validate_bench(j: &Json) -> Result<()> {
             bail!("rule row-prefix-hit-rate: {} ({name}): \
                    prefix_hit_rate = {hit} must lie in [0, 1]", ctx());
         }
+        // every row must say what fraction of its offered load the
+        // admission gate refused — the §16 storm pair is meaningless
+        // without it (engine-direct rows record 0.0)
+        let shed = r.get("shed_rate").and_then(Json::as_f64)
+            .with_context(|| {
+                format!("rule row-shed-rate: {} ({name}): missing \
+                         numeric field \"shed_rate\"", ctx())
+            })?;
+        if !shed.is_finite() || !(0.0..=1.0).contains(&shed) {
+            bail!("rule row-shed-rate: {} ({name}): \
+                   shed_rate = {shed} must lie in [0, 1]", ctx());
+        }
         // every row must say whether (and how deep) it speculated —
         // the §15 pair is meaningless without it
         let spec_k = r.get("spec_k").and_then(Json::as_f64)
@@ -1018,6 +1224,10 @@ pub fn validate_bench(j: &Json) -> Result<()> {
         if name == "shared_prefix_storm" {
             storm_fcfs |= sched == "fcfs";
             storm_continuous |= sched == "continuous";
+        }
+        if name == "connection_storm" {
+            cstorm_fcfs |= sched == "fcfs";
+            cstorm_continuous |= sched == "continuous";
         }
         if name == "speculative_decode" {
             spec_off |= spec_k == 0.0;
@@ -1077,6 +1287,16 @@ pub fn validate_bench(j: &Json) -> Result<()> {
         bail!("rule pair-speculative: missing speculative_decode \
                spec_k pair (need a spec_k = 0 row AND a spec_k > 0 \
                row on reference-backend recordings — DESIGN.md §15)");
+    }
+    // the DESIGN.md §16 serving-front gate: reference recordings must
+    // carry the fcfs-vs-continuous connection_storm pair so
+    // conn_storm_row() always yields the frame-latency + shed-rate
+    // comparison
+    if any_reference && !(cstorm_fcfs && cstorm_continuous) {
+        bail!("rule storm-pair: missing connection_storm scheduler \
+               pair (need a scheduler = \"fcfs\" row AND a \
+               \"continuous\" row on reference-backend recordings — \
+               DESIGN.md §16)");
     }
     // the DESIGN.md §14 ISA gate: reference recordings must compare
     // at least two instruction tiers on batched_decode — every host
@@ -1269,6 +1489,24 @@ mod tests {
         // the §15 speculative pair is recorded: the spec-off row never
         // accepts anything, the spec-on row ran the nano draft at k=4
         // through the full draft/verify/rollback path
+        // the §16 serving-front pair is recorded: both scheduler rows
+        // exist, rates are sane, and the quick fcfs storm actually
+        // shed (the wave size outruns its 4-admissions-per-tick
+        // drain, so the 64-deep queue must fill)
+        let cs_fcfs = conn_storm_row(&parsed, 1, "fcfs").unwrap();
+        let cs_cont = conn_storm_row(&parsed, 1, "continuous").unwrap();
+        for row in [&cs_fcfs, &cs_cont] {
+            // the opening wave outruns STORM_SHED_QUEUE before any
+            // tick, so both scheduler rows must have shed something
+            assert!(row.1 > 0.0 && row.1 <= 1.0,
+                    "storm shed_rate out of (0, 1]: {}", row.1);
+            assert!(row.0 >= 0.0);
+        }
+        // engine-direct rows never touch the serving front
+        assert!(recs.iter()
+                    .filter(|r| r.name != "connection_storm")
+                    .all(|r| r.shed_rate == 0.0
+                        && r.frame_p99_us == 0));
         let off = spec_row(&parsed, 1, false).unwrap();
         let on = spec_row(&parsed, 1, true).unwrap();
         assert_eq!(off.2, 0.0, "spec-off rows cannot accept drafts");
@@ -1299,7 +1537,7 @@ mod tests {
                       "kv_bytes", "backend", "prefill_chunk",
                       "decode_stall_p99_us", "scheduler",
                       "prefix_hit_rate", "isa", "spec_k",
-                      "accept_rate"] {
+                      "accept_rate", "shed_rate", "frame_p99_us"] {
             let crippled =
                 text.replace(&format!("\"{field}\""),
                              &format!("\"x_{field}\""));
@@ -1365,6 +1603,7 @@ mod tests {
             ("rule row-scheduler:", "\"continuous\"", "\"lottery\""),
             ("rule row-prefix-hit-rate:",
              "\"prefix_hit_rate\"", "\"x_prefix_hit_rate\""),
+            ("rule row-shed-rate:", "\"shed_rate\"", "\"x_shed_rate\""),
         ] {
             let parsed = Json::parse(&text.replace(from, to)).unwrap();
             let e = err_of(&parsed);
@@ -1377,6 +1616,12 @@ mod tests {
         bad[0].prefix_hit_rate = 1.5;
         assert!(err_of(&doc(&bad, &[1]))
                     .contains("rule row-prefix-hit-rate:"));
+
+        // a shed rate outside [0, 1] likewise
+        let mut bad = recs.clone();
+        bad[0].shed_rate = 1.5;
+        assert!(err_of(&doc(&bad, &[1]))
+                    .contains("rule row-shed-rate:"));
 
         // spec-field value corruptions: an out-of-range accept rate,
         // an out-of-range depth, and a spec-off row claiming accepts
@@ -1433,6 +1678,12 @@ mod tests {
             ("rule pair-storm-scheduler:",
              without(&|r| r.scheduler == SchedulerKind::Continuous)),
             ("rule pair-speculative:", without(&|r| r.spec_k > 0)),
+            // drop only the connection_storm continuous row, so the
+            // shared_prefix_storm pair stays intact and storm-pair is
+            // the first rule to trip
+            ("rule storm-pair:",
+             without(&|r| r.name == "connection_storm"
+                 && r.scheduler == SchedulerKind::Continuous)),
         ] {
             let e = err_of(&doc(&gone, &[1]));
             assert!(e.contains(rule), "expected {rule:?} in {e:?}");

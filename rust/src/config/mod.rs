@@ -398,6 +398,15 @@ pub struct EngineConfig {
     /// Draft tokens proposed per speculative step (1..=8); ignored
     /// while `spec_draft = "off"` — DESIGN.md §15.
     pub spec_k: usize,
+    /// Load-shedding admission bound (DESIGN.md §16): refuse new API
+    /// requests with `{"error": "shed"}` once this many are already
+    /// queued ahead of the engine.  0 (the default) queues unboundedly
+    /// — the pre-shed behavior.
+    pub shed_queue: usize,
+    /// Load-shedding wait SLO in milliseconds (DESIGN.md §16): refuse
+    /// new API requests while the queue head has already waited at
+    /// least this long.  0 (the default) disables the check.
+    pub shed_wait_ms: u64,
 }
 
 impl Default for EngineConfig {
@@ -423,6 +432,8 @@ impl Default for EngineConfig {
             scheduler: SchedulerKind::Fcfs,
             spec_draft: "off".into(),
             spec_k: 4,
+            shed_queue: 0,
+            shed_wait_ms: 0,
         }
     }
 }
@@ -518,6 +529,30 @@ impl EngineConfig {
             }
             cfg.spec_k = n as usize;
         }
+        if let Some(v) = j.get("shed_queue") {
+            // strict: present-but-invalid must error, never fall back
+            let n = v.as_f64().with_context(|| {
+                format!("shed_queue must be a non-negative integer \
+                         (0 = unbounded), got {v:?}")
+            })?;
+            if n.fract() != 0.0 || !(0.0..=1e9).contains(&n) {
+                bail!("shed_queue must be a non-negative integer \
+                       (0 = unbounded), got {n}");
+            }
+            cfg.shed_queue = n as usize;
+        }
+        if let Some(v) = j.get("shed_wait_ms") {
+            // strict: present-but-invalid must error, never fall back
+            let n = v.as_f64().with_context(|| {
+                format!("shed_wait_ms must be a non-negative integer \
+                         (0 = disabled), got {v:?}")
+            })?;
+            if n.fract() != 0.0 || !(0.0..=1e9).contains(&n) {
+                bail!("shed_wait_ms must be a non-negative integer \
+                       (0 = disabled), got {n}");
+            }
+            cfg.shed_wait_ms = n as u64;
+        }
         if let Some(w) = j.get("weights") {
             match w.get("kind").and_then(Json::as_str) {
                 Some("synthetic") | None => {
@@ -604,6 +639,8 @@ impl EngineConfig {
         let _ = writeln!(s, "scheduler = \"{}\"", self.scheduler);
         let _ = writeln!(s, "spec_draft = \"{}\"", esc(&self.spec_draft));
         let _ = writeln!(s, "spec_k = {}", self.spec_k);
+        let _ = writeln!(s, "shed_queue = {}", self.shed_queue);
+        let _ = writeln!(s, "shed_wait_ms = {}", self.shed_wait_ms);
         match &self.weights {
             WeightSource::Synthetic { seed } => {
                 let _ = writeln!(
@@ -944,6 +981,8 @@ beta_gbps = 10.0
             scheduler: SchedulerKind::Continuous,
             spec_draft: "nano".into(),
             spec_k: 2,
+            shed_queue: 7,
+            shed_wait_ms: 250,
             ..Default::default()
         };
         cfg.opt.zero_copy = false;
@@ -971,6 +1010,8 @@ beta_gbps = 10.0
         assert_eq!(back.scheduler, SchedulerKind::Continuous);
         assert_eq!(back.spec_draft, "nano");
         assert_eq!(back.spec_k, 2);
+        assert_eq!(back.shed_queue, 7);
+        assert_eq!(back.shed_wait_ms, 250);
         assert!(!back.opt.zero_copy);
         assert_eq!(back.opt.broadcast_ids, cfg.opt.broadcast_ids);
         assert_eq!(back.sampling.top_k, 13);
@@ -1031,6 +1072,20 @@ beta_gbps = 10.0
         assert!(EngineConfig::from_toml_str("spec_k = 9").is_err());
         assert!(EngineConfig::from_toml_str("spec_k = 2.5").is_err());
         assert!(EngineConfig::from_toml_str("spec_k = \"four\"").is_err());
+        // shed knobs are strict-parsed: non-integers and negatives are
+        // clean config errors, never a silent never-shed fallback
+        assert!(EngineConfig::from_toml_str(
+            "shed_queue = -1").is_err());
+        assert!(EngineConfig::from_toml_str(
+            "shed_queue = 2.5").is_err());
+        assert!(EngineConfig::from_toml_str(
+            "shed_queue = \"none\"").is_err());
+        assert!(EngineConfig::from_toml_str(
+            "shed_wait_ms = -5").is_err());
+        assert!(EngineConfig::from_toml_str(
+            "shed_wait_ms = 0.5").is_err());
+        assert!(EngineConfig::from_toml_str(
+            "shed_wait_ms = \"1s\"").is_err());
         // drafting with the target itself is rejected
         assert!(EngineConfig::from_toml_str(
             "spec_draft = \"tiny\"").is_err());
@@ -1172,6 +1227,8 @@ beta_gbps = 10.0
             if cfg.spec_draft == cfg.model {
                 cfg.spec_draft = "off".into();
             }
+            cfg.shed_queue = [0, 1, 8, 4096][next() as usize % 4];
+            cfg.shed_wait_ms = [0, 5, 250, 60_000][next() as usize % 4];
             cfg.sampling.top_k = 1 + (next() as usize % 64);
             cfg.sampling.seed = next();
             cfg.opt.zero_copy = next() % 2 == 0;
@@ -1197,6 +1254,8 @@ beta_gbps = 10.0
             assert_eq!(back.scheduler, cfg.scheduler);
             assert_eq!(back.spec_draft, cfg.spec_draft, "{text}");
             assert_eq!(back.spec_k, cfg.spec_k);
+            assert_eq!(back.shed_queue, cfg.shed_queue);
+            assert_eq!(back.shed_wait_ms, cfg.shed_wait_ms);
             assert_eq!(back.sampling.top_k, cfg.sampling.top_k);
             assert_eq!(back.sampling.seed, cfg.sampling.seed);
             assert_eq!(back.opt.zero_copy, cfg.opt.zero_copy);

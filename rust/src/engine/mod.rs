@@ -353,10 +353,30 @@ impl Engine {
 
     /// Queue a request; returns its id.
     pub fn enqueue(&mut self, prompt: Vec<i32>, max_new: usize) -> u64 {
+        let id = self.allocate_id();
+        self.enqueue_reserved(id, prompt, max_new);
+        id
+    }
+
+    /// Reserve the next request id without queueing anything.  The
+    /// server front allocates ids at line-read time so a request is
+    /// addressable by `{"cancel": id}` while it still sits in the
+    /// admission queue, ahead of the engine (DESIGN.md §16); the id is
+    /// later redeemed with [`Engine::enqueue_reserved`].  Ids are
+    /// monotonic in allocation order.
+    pub fn allocate_id(&mut self) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        self.pending.push_back(PendingReq { id, prompt, max_new });
         id
+    }
+
+    /// Queue a request under a previously [`Engine::allocate_id`]-
+    /// reserved id.  The counter advances past `id` defensively, so a
+    /// mixed `enqueue`/`enqueue_reserved` call pattern never collides.
+    pub fn enqueue_reserved(&mut self, id: u64, prompt: Vec<i32>,
+                            max_new: usize) {
+        self.next_id = self.next_id.max(id.saturating_add(1));
+        self.pending.push_back(PendingReq { id, prompt, max_new });
     }
 
     /// Whether any request is still queued or in flight.

@@ -11,6 +11,7 @@
 //!                    [--json BENCH.json] [--quick true]
 //! xeonserve bench    --validate BENCH.json
 //! xeonserve bench    [--steps 32] [--prompt-len 8]   (legacy one-shot)
+//! xeonserve storm    --addr HOST:PORT [--clients N] [-n N]
 //! xeonserve isa      [--check scalar|avx2|avx512|vnni]
 //! xeonserve info     [--artifacts artifacts]
 //! ```
@@ -41,6 +42,7 @@ USAGE:
                      [--label NAME]
   xeonserve bench    --validate FILE
   xeonserve bench    [--steps N] [--prompt-len N]   (legacy one-shot)
+  xeonserve storm    --addr HOST:PORT [--clients N] [-n N]
   xeonserve isa      [--check scalar|avx2|avx512|vnni]
   xeonserve info     [--artifacts DIR]
 
@@ -80,7 +82,19 @@ speculative decoding with a smaller draft model, reference backend
 only, greedy sampling only — DESIGN.md \u{a7}15).  The
 serve/launch JSON API streams per-token
 reply frames when a request carries \"stream\": true, and
-{\"cancel\": id} aborts an in-flight request idempotently.
+{\"cancel\": id} aborts an in-flight request idempotently.  The
+server runs a single-threaded readiness-polling event loop with
+load-shedding admission (shed_queue / shed_wait_ms in the TOML —
+DESIGN.md \u{a7}16); bench additionally records the
+connection_storm serving-front pair (p99 frame latency + shed rate
+per scheduler).
+
+storm is the matching external load driver: it opens --clients
+concurrent streaming connections (default 256) against a running
+serve/launch --addr deployment and prints one JSON summary line —
+{\"clients\":N,\"ok\":A,\"shed\":B,\"errors\":C} — where every
+client must end in a clean done frame or a shed line for the CI
+smoke to pass.
 
 Without --config the built-in default is used (tiny model, world=2,
 all paper optimizations ON).  See configs/*.toml for presets.";
@@ -190,6 +204,83 @@ fn run_isa(args: &Args) -> Result<()> {
                  if simd::available(isa) { "available" }
                  else { "unavailable" });
     }
+    Ok(())
+}
+
+/// `xeonserve storm`: the external connection-storm driver (DESIGN.md
+/// §16).  Opens `--clients` concurrent streaming connections against a
+/// running deployment, one request each, and prints a single JSON
+/// summary line.  A client counts `ok` on a clean done frame, `shed`
+/// on a `{"error": "shed", ...}` refusal, and `errors` otherwise
+/// (protocol garbage, premature EOF, timeouts) — the CI smoke greps
+/// for `"errors":0`.
+fn run_storm_cli(args: &Args) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::time::Duration;
+
+    let addr = args
+        .get("addr")
+        .context("storm requires --addr HOST:PORT")?
+        .to_string();
+    let clients = args.get_usize("clients", 256)?;
+    let n = args.get_usize("n", 4)?;
+    let (tx, rx) = std::sync::mpsc::channel::<&'static str>();
+    let mut handles = Vec::with_capacity(clients);
+    for i in 0..clients {
+        let tx = tx.clone();
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let outcome = (|| -> Result<&'static str> {
+                let mut sock = TcpStream::connect(&addr)?;
+                // a wedged stream must fail the client, not hang the
+                // driver: the reaper tests pin liveness server-side,
+                // this guards the CI smoke end-to-end
+                sock.set_read_timeout(Some(Duration::from_secs(120)))?;
+                writeln!(
+                    sock,
+                    "{{\"prompt\": \"storm client {i}\", \
+                     \"max_new_tokens\": {n}, \"stream\": true}}"
+                )?;
+                let mut rd = BufReader::new(sock);
+                let mut line = String::new();
+                loop {
+                    line.clear();
+                    if rd.read_line(&mut line)? == 0 {
+                        bail!("eof before a terminal frame");
+                    }
+                    let j = Json::parse(line.trim())?;
+                    if let Some(e) = j.get("error").and_then(Json::as_str)
+                    {
+                        return Ok(if e == "shed" { "shed" }
+                                  else { "error" });
+                    }
+                    if j.get("done").is_some() {
+                        return Ok("ok");
+                    }
+                    // anything else must be a token frame
+                    if j.get("token").is_none() {
+                        bail!("unexpected frame {line:?}");
+                    }
+                }
+            })();
+            let _ = tx.send(outcome.unwrap_or("error"));
+        }));
+    }
+    drop(tx);
+    let (mut ok, mut shed, mut errors) = (0u64, 0u64, 0u64);
+    for outcome in rx {
+        match outcome {
+            "ok" => ok += 1,
+            "shed" => shed += 1,
+            _ => errors += 1,
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    println!("{{\"clients\":{clients},\"ok\":{ok},\"shed\":{shed},\
+              \"errors\":{errors}}}");
     Ok(())
 }
 
@@ -311,6 +402,17 @@ fn run_bench(args: &Args) -> Result<()> {
                 on.0, on.2, off.0
             );
         }
+        if let (Some(f), Some(c)) =
+            (suite::conn_storm_row(&doc, w, "fcfs"),
+             suite::conn_storm_row(&doc, w, "continuous"))
+        {
+            println!(
+                "connection_storm w{w}: fcfs frame p99 {:.0} us at \
+                 shed rate {:.2} vs continuous {:.0} us at {:.2} \
+                 (DESIGN.md §16)",
+                f.0, f.1, c.0, c.1
+            );
+        }
     }
     if let Some(path) = args.get("json") {
         std::fs::write(path, doc.to_string())
@@ -397,6 +499,7 @@ fn main() -> Result<()> {
             Ok(())
         }
         "bench" => run_bench(&args),
+        "storm" => run_storm_cli(&args),
         "isa" => run_isa(&args),
         "info" => {
             let dir =

@@ -244,6 +244,41 @@ impl RunMetrics {
     }
 }
 
+/// Serving-layer counters for the event-driven front end (DESIGN.md
+/// §16), kept beside the engine's [`RunMetrics`]: admission sheds,
+/// frames written to clients, the deepest any per-connection outbound
+/// queue ever got, and the frame-latency distribution (enqueue into a
+/// connection's outbound queue → fully written to the socket).  Owned
+/// by the single-threaded server front, so plain counters suffice.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    /// requests refused by the load-shedding admission guard
+    pub shed: u64,
+    /// reply frames fully written to client sockets
+    pub frames_sent: u64,
+    /// connections reaped because their outbound queue overflowed
+    /// (slow readers — backpressure-then-cancel)
+    pub overflow_cancels: u64,
+    /// deepest outbound frame queue observed on any connection
+    pub frame_queue_peak: usize,
+    /// frame delivery latency: outbound-queue enqueue → last byte
+    /// written (p99 is the bench headline)
+    pub frame_lat: LatencyStats,
+}
+
+impl ServeStats {
+    /// Note a connection's outbound queue depth after an enqueue.
+    pub fn note_queue_depth(&mut self, depth: usize) {
+        self.frame_queue_peak = self.frame_queue_peak.max(depth);
+    }
+
+    /// Record one fully-written frame and its delivery latency.
+    pub fn record_frame(&mut self, lat: Duration) {
+        self.frames_sent += 1;
+        self.frame_lat.record(lat);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -380,5 +415,21 @@ mod tests {
         m.record_decode(&t, 4);
         let tput = m.throughput(Duration::from_secs(2));
         assert!((tput - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serve_stats_track_peaks_and_frame_latency() {
+        let mut s = ServeStats::default();
+        assert_eq!(s.frame_queue_peak, 0);
+        assert_eq!(s.frame_lat.p99_us(), 0, "empty recorder reads 0");
+        s.note_queue_depth(3);
+        s.note_queue_depth(1); // peak is sticky
+        assert_eq!(s.frame_queue_peak, 3);
+        s.record_frame(Duration::from_micros(10));
+        s.record_frame(Duration::from_micros(90));
+        assert_eq!(s.frames_sent, 2);
+        assert_eq!(s.frame_lat.p99_us(), 90);
+        assert_eq!(s.shed, 0);
+        assert_eq!(s.overflow_cancels, 0);
     }
 }

@@ -129,6 +129,82 @@ impl PrefillCursor {
     }
 }
 
+/// Why the admission layer refused to queue a request (DESIGN.md §16).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedReason {
+    /// the admission queue already holds `shed_queue` requests
+    QueueDepth,
+    /// the queue head has already waited past the `shed_wait_ms` SLO,
+    /// so a new arrival would wait even longer
+    OldestWait,
+}
+
+impl ShedReason {
+    /// Wire spelling used in `{"error": "shed", "reason": ...}` lines.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShedReason::QueueDepth => "queue-depth",
+            ShedReason::OldestWait => "oldest-wait",
+        }
+    }
+}
+
+/// Load-shedding admission guard (DESIGN.md §16): instead of queueing
+/// unboundedly, the server refuses new requests once the backlog is
+/// deep (`max_queue`) or the queue head has already blown its wait SLO
+/// (`max_wait`) — at which point a new arrival is guaranteed to wait
+/// even longer, so an immediate `{"error": "shed"}` is kinder than a
+/// doomed queue slot.  Either bound set to zero disables that check;
+/// the all-zero policy (the config default) never sheds, preserving
+/// the pre-shed serving behavior.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShedPolicy {
+    /// refuse once this many requests are queued (0 = unbounded)
+    pub max_queue: usize,
+    /// refuse while the queue head has waited at least this long
+    /// (zero = disabled)
+    pub max_wait: Duration,
+}
+
+impl ShedPolicy {
+    /// Build from the `shed_queue` / `shed_wait_ms` config knobs.
+    pub fn from_config(shed_queue: usize, shed_wait_ms: u64) -> ShedPolicy {
+        ShedPolicy {
+            max_queue: shed_queue,
+            max_wait: Duration::from_millis(shed_wait_ms),
+        }
+    }
+
+    /// The never-shed policy (both bounds disabled).
+    pub fn disabled() -> ShedPolicy {
+        ShedPolicy::default()
+    }
+
+    /// Does this policy ever shed?
+    pub fn is_enabled(&self) -> bool {
+        self.max_queue > 0 || !self.max_wait.is_zero()
+    }
+
+    /// Should a new arrival be shed, given the queue's occupancy
+    /// (`depth` queued requests, head waiting `oldest_wait`)?  Returns
+    /// the reason to report, or `None` to admit.  Depth is checked
+    /// first: it is the cheaper, deterministic bound.
+    pub fn decision(&self, depth: usize, oldest_wait: Option<Duration>)
+                    -> Option<ShedReason> {
+        if self.max_queue > 0 && depth >= self.max_queue {
+            return Some(ShedReason::QueueDepth);
+        }
+        if !self.max_wait.is_zero() {
+            if let Some(w) = oldest_wait {
+                if w >= self.max_wait {
+                    return Some(ShedReason::OldestWait);
+                }
+            }
+        }
+        None
+    }
+}
+
 /// FCFS queue + interleave policy.
 ///
 /// # Example
@@ -193,6 +269,34 @@ impl FcfsScheduler {
             arrived: Instant::now(),
         });
         id
+    }
+
+    /// Queue a request under a caller-chosen id (the server pre-
+    /// allocates engine ids so a request is addressable by `{"cancel":
+    /// id}` from the moment its line is read, even before admission —
+    /// DESIGN.md §16).  The internal counter advances past `id`, so
+    /// mixed `submit`/`submit_with_id` use keeps ids unique.
+    pub fn submit_with_id(&mut self, id: u64, prompt: Vec<i32>,
+                          max_new_tokens: usize) {
+        self.next_id = self.next_id.max(id.saturating_add(1));
+        self.queue.push_back(QueuedRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            arrived: Instant::now(),
+        });
+    }
+
+    /// Remove a still-queued request by id; `true` if it was found.
+    /// The burst counter is untouched — a cancelled entry never ran.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        match self.queue.iter().position(|q| q.id == id) {
+            Some(i) => {
+                self.queue.remove(i);
+                true
+            }
+            None => false,
+        }
     }
 
     /// Queued (not yet admitted) requests.
@@ -306,6 +410,30 @@ impl ContinuousScheduler {
         id
     }
 
+    /// Queue a request under a caller-chosen id (see
+    /// [`FcfsScheduler::submit_with_id`]).
+    pub fn submit_with_id(&mut self, id: u64, prompt: Vec<i32>,
+                          max_new_tokens: usize) {
+        self.next_id = self.next_id.max(id.saturating_add(1));
+        self.queue.push_back(QueuedRequest {
+            id,
+            prompt,
+            max_new_tokens,
+            arrived: Instant::now(),
+        });
+    }
+
+    /// Remove a still-queued request by id; `true` if it was found.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        match self.queue.iter().position(|q| q.id == id) {
+            Some(i) => {
+                self.queue.remove(i);
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Queued (not yet admitted) requests.
     pub fn len(&self) -> usize {
         self.queue.len()
@@ -380,6 +508,36 @@ impl AdmissionQueue {
                 s.submit(prompt, max_new_tokens)
             }
         }
+    }
+
+    /// Queue a request under a caller-chosen id (see
+    /// [`FcfsScheduler::submit_with_id`]).
+    pub fn submit_with_id(&mut self, id: u64, prompt: Vec<i32>,
+                          max_new_tokens: usize) {
+        match self {
+            AdmissionQueue::Fcfs(s) => {
+                s.submit_with_id(id, prompt, max_new_tokens)
+            }
+            AdmissionQueue::Continuous(s) => {
+                s.submit_with_id(id, prompt, max_new_tokens)
+            }
+        }
+    }
+
+    /// Remove a still-queued request by id; `true` if it was found.
+    /// This is the queued-side half of `{"cancel": id}` — ids already
+    /// handed to the engine are the engine's to cancel.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        match self {
+            AdmissionQueue::Fcfs(s) => s.cancel(id),
+            AdmissionQueue::Continuous(s) => s.cancel(id),
+        }
+    }
+
+    /// Occupancy probe for the shed policy: queued depth + head wait,
+    /// read together so one admission decision sees one snapshot.
+    pub fn occupancy(&self) -> (usize, Option<Duration>) {
+        (self.len(), self.oldest_wait())
     }
 
     /// Queued (not yet admitted) requests.
@@ -884,6 +1042,98 @@ mod tests {
                 "fcfs charge must apply through the enum");
         q.on_decode_round();
         assert!(q.next_admission(true).is_some());
+    }
+
+    #[test]
+    fn cancel_removes_queued_entries_and_preserves_order() {
+        // regression (PR 9 satellite): `{"cancel": id}` must reach
+        // requests still sitting in the admission queue, not only ids
+        // the engine already knows about
+        let mut s = FcfsScheduler::new(8);
+        let a = s.submit(vec![1], 4);
+        let b = s.submit(vec![2], 4);
+        let c = s.submit(vec![3], 4);
+        assert!(s.cancel(b), "queued id must be cancellable");
+        assert!(!s.cancel(b), "second cancel of the same id is a miss");
+        assert!(!s.cancel(999), "unknown id is a miss");
+        assert_eq!(s.len(), 2);
+        // FCFS order of the survivors is untouched
+        assert_eq!(s.next_admission(false).unwrap().id, a);
+        assert_eq!(s.next_admission(false).unwrap().id, c);
+        assert!(s.is_empty());
+
+        // head cancel clears oldest_wait too
+        let mut h = ContinuousScheduler::new();
+        let x = h.submit(vec![1], 1);
+        assert!(h.oldest_wait().is_some());
+        assert!(h.cancel(x));
+        assert!(h.oldest_wait().is_none());
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn submit_with_id_keeps_ids_unique_and_cancellable() {
+        // the server pre-allocates engine ids; mixing them with the
+        // scheduler's own counter must never collide
+        let mut s = FcfsScheduler::new(8);
+        s.submit_with_id(7, vec![1], 1);
+        let next = s.submit(vec![2], 1);
+        assert!(next > 7, "counter must advance past reserved ids");
+        assert!(s.cancel(7));
+        assert_eq!(s.next_admission(false).unwrap().id, next);
+
+        // and through the enum, for both kinds
+        use crate::config::SchedulerKind;
+        for kind in [SchedulerKind::Fcfs, SchedulerKind::Continuous] {
+            let mut q = AdmissionQueue::for_kind(kind, 1, 0);
+            q.submit_with_id(3, vec![1], 1);
+            q.submit_with_id(4, vec![2], 1);
+            assert_eq!(q.occupancy().0, 2);
+            assert!(q.cancel(4));
+            assert!(!q.cancel(4));
+            assert_eq!(q.next_admission(false).unwrap().id, 3);
+            assert!(q.is_empty());
+            assert_eq!(q.occupancy(), (0, None));
+        }
+    }
+
+    #[test]
+    fn shed_policy_bounds_queue_depth_and_head_wait() {
+        use std::time::Duration;
+        // disabled policy never sheds, whatever the occupancy
+        let off = ShedPolicy::disabled();
+        assert!(!off.is_enabled());
+        assert_eq!(off.decision(usize::MAX,
+                                Some(Duration::from_secs(3600))), None);
+
+        // depth bound: refuse at >= max_queue (the arrival would be
+        // slot max_queue + 1)
+        let p = ShedPolicy::from_config(4, 0);
+        assert!(p.is_enabled());
+        assert_eq!(p.decision(3, None), None);
+        assert_eq!(p.decision(4, None), Some(ShedReason::QueueDepth));
+        assert_eq!(p.decision(40, None), Some(ShedReason::QueueDepth));
+
+        // wait bound: refuse while the head has blown the SLO; an
+        // empty queue (no head) never triggers it
+        let w = ShedPolicy::from_config(0, 50);
+        assert_eq!(w.decision(10, None), None);
+        assert_eq!(w.decision(1, Some(Duration::from_millis(10))), None);
+        assert_eq!(w.decision(1, Some(Duration::from_millis(50))),
+                   Some(ShedReason::OldestWait));
+
+        // both set: depth is checked first (deterministic bound wins)
+        let b = ShedPolicy::from_config(2, 50);
+        assert_eq!(b.decision(2, Some(Duration::from_secs(1))),
+                   Some(ShedReason::QueueDepth));
+        assert_eq!(b.decision(1, Some(Duration::from_secs(1))),
+                   Some(ShedReason::OldestWait));
+        assert_eq!(b.decision(1, Some(Duration::from_millis(1))), None);
+
+        // wire spellings are stable — the shed reply and the bench
+        // tables key on them
+        assert_eq!(ShedReason::QueueDepth.as_str(), "queue-depth");
+        assert_eq!(ShedReason::OldestWait.as_str(), "oldest-wait");
     }
 
     #[test]

@@ -1,0 +1,399 @@
+//! Per-connection nonblocking I/O primitives for the event-driven
+//! server (DESIGN.md §16): bounded line assembly on the read side and
+//! a bounded outbound frame queue with partial-write resume on the
+//! write side.  Both are plain byte-level state machines with no
+//! socket dependency, so the reactor ([`super::event_loop`]), the
+//! in-process storm driver (`benchkit`), and the unit tests below all
+//! drive the exact same code.
+
+use std::collections::VecDeque;
+use std::io::{self, Write};
+use std::time::Instant;
+
+use crate::metrics::ServeStats;
+
+/// Longest accepted request line, in bytes.  A line that grows past
+/// this bound is discarded up to its terminating newline and reported
+/// as [`LineEvent::Oversized`] — the connection survives, memory does
+/// not grow with hostile input (slowloris / log-bomb clients).
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// Most frames a connection's outbound queue may hold before the
+/// backpressure policy gives up on the reader (DESIGN.md §16):
+/// a slow reader's frames queue up to here, then its work is
+/// cancelled — the engine never blocks on one socket.
+pub const MAX_OUT_FRAMES: usize = 1024;
+
+/// Most queued outbound bytes per connection (same overflow policy as
+/// [`MAX_OUT_FRAMES`], catching few-but-huge frames).
+pub const MAX_OUT_BYTES: usize = 1 << 20;
+
+/// One read-side event from [`LineReader::push`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum LineEvent {
+    /// a complete newline-terminated line (terminator stripped,
+    /// invalid UTF-8 replaced)
+    Line(String),
+    /// a line exceeded [`LineReader`]'s bound and was discarded;
+    /// reported once per oversized line, when the bound is crossed
+    Oversized,
+}
+
+/// Bounded incremental line assembler over nonblocking reads.
+///
+/// Feed it whatever `read(2)` returned; it hands back complete lines.
+/// A line longer than `max_line` bytes flips the reader into discard
+/// mode until the next newline: the partial bytes are dropped, one
+/// [`LineEvent::Oversized`] is reported, and the following line
+/// parses normally — a hostile writer can never grow the buffer past
+/// the bound.
+#[derive(Debug)]
+pub struct LineReader {
+    buf: Vec<u8>,
+    discarding: bool,
+    max_line: usize,
+}
+
+impl LineReader {
+    /// A reader that accepts lines up to `max_line` bytes.
+    pub fn new(max_line: usize) -> LineReader {
+        LineReader { buf: Vec::new(), discarding: false, max_line }
+    }
+
+    /// Bytes currently buffered toward an incomplete line (bounded by
+    /// `max_line` — the overflow test pins this).
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Feed freshly read bytes; returns the events they complete, in
+    /// order.
+    pub fn push(&mut self, data: &[u8]) -> Vec<LineEvent> {
+        let mut out = Vec::new();
+        for &b in data {
+            if b == b'\n' {
+                if self.discarding {
+                    // the oversized line just ended; resume normally
+                    self.discarding = false;
+                } else {
+                    let line = std::mem::take(&mut self.buf);
+                    out.push(LineEvent::Line(
+                        String::from_utf8_lossy(&line).into_owned()));
+                }
+                continue;
+            }
+            if self.discarding {
+                continue;
+            }
+            self.buf.push(b);
+            if self.buf.len() > self.max_line {
+                self.buf.clear();
+                self.buf.shrink_to_fit();
+                self.discarding = true;
+                out.push(LineEvent::Oversized);
+            }
+        }
+        out
+    }
+}
+
+/// The error [`OutQ::push`] reports when a connection's outbound
+/// queue is full: the reader is too slow, and per the backpressure
+/// policy its work gets cancelled rather than the engine blocked.
+#[derive(Debug, PartialEq, Eq)]
+pub struct Overflow;
+
+/// Bounded per-connection outbound frame queue with partial-write
+/// resume.
+///
+/// Frames (reply lines) enter via [`OutQ::push`], stamped with their
+/// enqueue time; [`OutQ::flush`] writes as much as the socket accepts
+/// — `WouldBlock` mid-frame leaves a cursor so the next flush resumes
+/// at the exact byte — and records each fully-written frame's
+/// delivery latency into [`ServeStats`].  [`OutQ::pop_frame`] is the
+/// socketless drain the virtual-connection drivers use.
+#[derive(Debug)]
+pub struct OutQ {
+    frames: VecDeque<(Vec<u8>, Instant)>,
+    /// bytes of the front frame already written
+    cursor: usize,
+    queued_bytes: usize,
+    max_frames: usize,
+    max_bytes: usize,
+}
+
+impl OutQ {
+    /// A queue bounded to `max_frames` frames / `max_bytes` bytes.
+    pub fn new(max_frames: usize, max_bytes: usize) -> OutQ {
+        OutQ {
+            frames: VecDeque::new(),
+            cursor: 0,
+            queued_bytes: 0,
+            max_frames: max_frames.max(1),
+            max_bytes: max_bytes.max(1),
+        }
+    }
+
+    /// Queued frames.
+    pub fn len(&self) -> usize {
+        self.frames.len()
+    }
+
+    /// Is the queue fully drained?
+    pub fn is_empty(&self) -> bool {
+        self.frames.is_empty()
+    }
+
+    /// Queued bytes not yet written.
+    pub fn queued_bytes(&self) -> usize {
+        self.queued_bytes - self.cursor
+    }
+
+    /// Enqueue one reply line (newline appended here).  `Err` means
+    /// the bound is blown: the caller cancels this connection's work.
+    pub fn push(&mut self, line: &str, now: Instant)
+                -> Result<(), Overflow> {
+        let frame_bytes = line.len() + 1;
+        if self.frames.len() >= self.max_frames
+            || self.queued_bytes + frame_bytes > self.max_bytes
+        {
+            return Err(Overflow);
+        }
+        let mut frame = Vec::with_capacity(frame_bytes);
+        frame.extend_from_slice(line.as_bytes());
+        frame.push(b'\n');
+        self.queued_bytes += frame_bytes;
+        self.frames.push_back((frame, now));
+        Ok(())
+    }
+
+    /// Write queued frames until the sink stops accepting bytes
+    /// (`WouldBlock`, reported as `Ok`) or the queue drains.  Real
+    /// socket errors surface as `Err` — the connection is dead.
+    pub fn flush(&mut self, w: &mut dyn Write, stats: &mut ServeStats)
+                 -> io::Result<()> {
+        while let Some((frame, enqueued)) = self.frames.front() {
+            match w.write(&frame[self.cursor..]) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WriteZero,
+                        "socket accepted zero bytes"));
+                }
+                Ok(n) => {
+                    self.cursor += n;
+                    if self.cursor == frame.len() {
+                        stats.record_frame(enqueued.elapsed());
+                        self.queued_bytes -= frame.len();
+                        self.cursor = 0;
+                        self.frames.pop_front();
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    return Ok(());
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+
+    /// Dequeue the front frame whole (newline stripped) with its
+    /// enqueue time — the virtual-connection drain used by the
+    /// in-process storm driver and tests.  Partial socket writes never
+    /// mix with this path on one queue.
+    pub fn pop_frame(&mut self) -> Option<(String, Instant)> {
+        let (mut frame, enqueued) = self.frames.pop_front()?;
+        self.queued_bytes -= frame.len();
+        if frame.last() == Some(&b'\n') {
+            frame.pop();
+        }
+        Some((String::from_utf8_lossy(&frame).into_owned(), enqueued))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_reader_assembles_split_lines_in_order() {
+        let mut r = LineReader::new(64);
+        assert!(r.push(b"{\"a\":").is_empty());
+        assert_eq!(r.buffered(), 6);
+        let evs = r.push(b"1}\nsecond\nthi");
+        assert_eq!(evs, vec![
+            LineEvent::Line("{\"a\":1}".into()),
+            LineEvent::Line("second".into()),
+        ]);
+        assert_eq!(r.push(b"rd\n"),
+                   vec![LineEvent::Line("third".into())]);
+        assert_eq!(r.buffered(), 0);
+        // empty lines are real (the server skips them upstream)
+        assert_eq!(r.push(b"\n\n"),
+                   vec![LineEvent::Line(String::new()),
+                        LineEvent::Line(String::new())]);
+    }
+
+    #[test]
+    fn oversized_line_is_discarded_once_and_reader_recovers() {
+        let mut r = LineReader::new(8);
+        // 9 bytes crosses the bound mid-line: one Oversized event, and
+        // the buffer must not keep growing with further bytes
+        let evs = r.push(b"012345678");
+        assert_eq!(evs, vec![LineEvent::Oversized]);
+        assert!(r.push(b"_more_garbage_no_second_event").is_empty(),
+                "discard mode must report the oversized line once");
+        assert_eq!(r.buffered(), 0, "discarded bytes must not buffer");
+        // the newline ends the bad line; the next one parses normally
+        let evs = r.push(b"tail\nok\n");
+        assert_eq!(evs, vec![LineEvent::Line("ok".into())]);
+    }
+
+    #[test]
+    fn line_reader_buffer_stays_bounded_under_slowloris_drip() {
+        // a hostile writer dripping one byte at a time, never sending
+        // a newline: memory must stay at the bound, forever
+        let mut r = LineReader::new(16);
+        let mut oversized = 0;
+        for _ in 0..10_000 {
+            for ev in r.push(b"x") {
+                assert_eq!(ev, LineEvent::Oversized);
+                oversized += 1;
+            }
+            assert!(r.buffered() <= 16);
+        }
+        assert_eq!(oversized, 1, "one event per oversized line");
+    }
+
+    #[test]
+    fn invalid_utf8_is_replaced_not_fatal() {
+        let mut r = LineReader::new(64);
+        let evs = r.push(b"ab\xff\xfecd\n");
+        assert_eq!(evs.len(), 1);
+        match &evs[0] {
+            LineEvent::Line(l) => {
+                assert!(l.starts_with("ab") && l.ends_with("cd"));
+            }
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+
+    /// A sink that accepts at most `cap` bytes per write call and can
+    /// be switched to refuse with `WouldBlock` — a deterministic model
+    /// of a nonblocking socket with a tiny send buffer.
+    struct ThrottledSink {
+        written: Vec<u8>,
+        cap: usize,
+        blocked: bool,
+    }
+
+    impl Write for ThrottledSink {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if self.blocked {
+                return Err(io::Error::new(
+                    io::ErrorKind::WouldBlock, "full"));
+            }
+            let n = buf.len().min(self.cap);
+            self.written.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn outq_resumes_partial_writes_at_the_exact_byte() {
+        let mut q = OutQ::new(8, 1024);
+        let now = Instant::now();
+        q.push("hello", now).unwrap();
+        q.push("world!", now).unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.queued_bytes(), 13); // 2 newlines included
+
+        let mut sink =
+            ThrottledSink { written: Vec::new(), cap: 4, blocked: false };
+        let mut stats = ServeStats::default();
+        q.flush(&mut sink, &mut stats).unwrap();
+        // 4-byte write calls, drained to completion within one flush
+        assert_eq!(sink.written, b"hello\nworld!\n");
+        assert!(q.is_empty());
+        assert_eq!(q.queued_bytes(), 0);
+        assert_eq!(stats.frames_sent, 2);
+        assert_eq!(stats.frame_lat.count(), 2);
+
+        // WouldBlock mid-frame: cursor holds, nothing is lost or
+        // duplicated when the socket opens up again
+        q.push("abcdefgh", Instant::now()).unwrap();
+        let mut sink =
+            ThrottledSink { written: Vec::new(), cap: 3, blocked: false };
+        // accept one 3-byte write, then block
+        let n = {
+            let (frame, _) = q.frames.front().unwrap();
+            sink.write(&frame[..]).unwrap()
+        };
+        q.cursor = n; // simulate the partial write the flush path does
+        sink.blocked = true;
+        q.flush(&mut sink, &mut stats).unwrap(); // WouldBlock == Ok
+        assert_eq!(q.len(), 1, "partially written frame must stay");
+        sink.blocked = false;
+        q.flush(&mut sink, &mut stats).unwrap();
+        assert_eq!(sink.written, b"abcdefgh\n");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn outq_overflow_at_frame_and_byte_bounds() {
+        // frame-count bound
+        let mut q = OutQ::new(2, 1024);
+        let now = Instant::now();
+        q.push("a", now).unwrap();
+        q.push("b", now).unwrap();
+        assert_eq!(q.push("c", now), Err(Overflow));
+        assert_eq!(q.len(), 2, "overflowing push must not enqueue");
+
+        // byte bound: 10 bytes max, "12345678" + newline = 9 fits,
+        // one more byte does not
+        let mut q = OutQ::new(64, 10);
+        q.push("12345678", now).unwrap();
+        assert_eq!(q.push("", now), Err(Overflow));
+        // draining reopens capacity
+        let mut stats = ServeStats::default();
+        let mut sink = ThrottledSink {
+            written: Vec::new(), cap: 1024, blocked: false };
+        q.flush(&mut sink, &mut stats).unwrap();
+        q.push("ok", now).unwrap();
+    }
+
+    #[test]
+    fn outq_pop_frame_strips_newline_and_tracks_bytes() {
+        let mut q = OutQ::new(8, 1024);
+        q.push("{\"id\":1}", Instant::now()).unwrap();
+        q.push("{\"id\":2}", Instant::now()).unwrap();
+        let (l1, t1) = q.pop_frame().unwrap();
+        assert_eq!(l1, "{\"id\":1}");
+        assert!(t1.elapsed().as_secs() < 3600);
+        assert_eq!(q.pop_frame().unwrap().0, "{\"id\":2}");
+        assert!(q.pop_frame().is_none());
+        assert_eq!(q.queued_bytes(), 0);
+    }
+
+    #[test]
+    fn outq_write_error_is_fatal_not_silent() {
+        struct BrokenPipe;
+        impl Write for BrokenPipe {
+            fn write(&mut self, _: &[u8]) -> io::Result<usize> {
+                Err(io::Error::new(io::ErrorKind::BrokenPipe, "gone"))
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut q = OutQ::new(8, 1024);
+        q.push("x", Instant::now()).unwrap();
+        let mut stats = ServeStats::default();
+        assert!(q.flush(&mut BrokenPipe, &mut stats).is_err());
+        assert_eq!(stats.frames_sent, 0);
+    }
+}

@@ -1,0 +1,254 @@
+//! Readiness-polling reactor: the event-driven replacement for the
+//! thread-per-connection accept loop (DESIGN.md §16).
+//!
+//! One thread runs everything — `poll(2)` over the listener and every
+//! client socket, nonblocking line-buffered reads, the engine step
+//! (via [`super::Front::tick`]), and nonblocking bounded writes.  The
+//! engine is not `Send` (PJRT buffers are thread-local); building it
+//! on the reactor thread means it never has to cross one, and the
+//! single-threaded loop needs no channels, locks, or wakeup pipes:
+//! when the engine has work the poll timeout is zero, when it is idle
+//! the loop blocks in `poll` until a socket turns readable.
+//!
+//! The `poll(2)` wrapper is a ~20-line hand-rolled FFI declaration —
+//! the repo's no-heavy-deps stance (no tokio, no mio, no libc crate;
+//! std already links libc on every supported target).
+
+use std::collections::BTreeMap;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::fd::AsRawFd;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::conn::{
+    LineEvent, LineReader, OutQ, MAX_LINE_BYTES, MAX_OUT_BYTES,
+    MAX_OUT_FRAMES,
+};
+use super::{error_json, ConnId, Front};
+
+/// `struct pollfd` from `poll(2)` — identical layout on every libc
+/// the crate targets.
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct PollFd {
+    fd: std::os::raw::c_int,
+    events: i16,
+    revents: i16,
+}
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+const POLLNVAL: i16 = 0x020;
+
+#[cfg(target_os = "linux")]
+type NfdsT = u64;
+#[cfg(not(target_os = "linux"))]
+type NfdsT = u32;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: i32) -> i32;
+}
+
+/// `poll(2)` with EINTR retry.  `timeout_ms < 0` blocks indefinitely.
+fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> io::Result<usize> {
+    loop {
+        let rc = unsafe {
+            poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms)
+        };
+        if rc >= 0 {
+            return Ok(rc as usize);
+        }
+        let e = io::Error::last_os_error();
+        if e.kind() != io::ErrorKind::Interrupted {
+            return Err(e);
+        }
+    }
+}
+
+/// Reactor-side state for one client connection.
+struct Conn {
+    sock: TcpStream,
+    reader: LineReader,
+    outq: OutQ,
+}
+
+/// Run the serving loop forever: accept, read lines into
+/// [`Front::on_line`], tick the engine, route reply frames into
+/// bounded per-connection queues, and flush them as sockets accept
+/// bytes.  Returns only on listener failure or an engine error (after
+/// best-effort error delivery to every connected client).
+pub(crate) fn run_reactor(listener: TcpListener, mut front: Front)
+                          -> Result<()> {
+    listener
+        .set_nonblocking(true)
+        .context("setting the listener nonblocking")?;
+    let mut conns: BTreeMap<ConnId, Conn> = BTreeMap::new();
+    let mut next_conn_id: ConnId = 1;
+    let mut buf = [0u8; 16 * 1024];
+
+    loop {
+        // (re)build the poll set: listener first, then connections in
+        // id order.  Write interest only while frames are queued —
+        // otherwise an idle socket's permanent writability would turn
+        // the blocking poll into a busy loop.
+        let order: Vec<ConnId> = conns.keys().copied().collect();
+        let mut fds = Vec::with_capacity(order.len() + 1);
+        fds.push(PollFd {
+            fd: listener.as_raw_fd(),
+            events: POLLIN,
+            revents: 0,
+        });
+        for id in &order {
+            let c = &conns[id];
+            let mut events = POLLIN;
+            if !c.outq.is_empty() {
+                events |= POLLOUT;
+            }
+            fds.push(PollFd { fd: c.sock.as_raw_fd(), events, revents: 0 });
+        }
+        // engine work pending → don't sleep, just sample readiness;
+        // fully idle → block until a socket (or the listener) wakes us
+        let timeout = if front.has_work() { 0 } else { -1 };
+        poll_fds(&mut fds, timeout).context("poll")?;
+
+        // accept every pending connection (edge-free: loop to
+        // WouldBlock so a burst of SYNs lands in one iteration)
+        if fds[0].revents & POLLIN != 0 {
+            loop {
+                match listener.accept() {
+                    Ok((sock, _peer)) => {
+                        if sock.set_nonblocking(true).is_err() {
+                            continue; // stillborn socket: drop it
+                        }
+                        let id = next_conn_id;
+                        next_conn_id += 1;
+                        conns.insert(id, Conn {
+                            sock,
+                            reader: LineReader::new(MAX_LINE_BYTES),
+                            outq: OutQ::new(MAX_OUT_FRAMES,
+                                            MAX_OUT_BYTES),
+                        });
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        break;
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(e) => return Err(e).context("accept"),
+                }
+            }
+        }
+
+        // read side: drain every readable socket into the line
+        // assembler; EOF / error / bare HUP is a disconnect.  The HUP
+        // path is the out-of-band liveness probe the blocking server
+        // lacked — a client that vanishes during prefill is reaped
+        // here, before any token is produced.
+        let mut dead: Vec<ConnId> = Vec::new();
+        for (i, &id) in order.iter().enumerate() {
+            let revents = fds[i + 1].revents;
+            if revents == 0 {
+                continue;
+            }
+            if revents & (POLLERR | POLLNVAL) != 0 {
+                dead.push(id);
+                continue;
+            }
+            if revents & POLLIN != 0 {
+                let Some(c) = conns.get_mut(&id) else { continue };
+                loop {
+                    match c.sock.read(&mut buf) {
+                        Ok(0) => {
+                            dead.push(id);
+                            break;
+                        }
+                        Ok(n) => {
+                            for ev in c.reader.push(&buf[..n]) {
+                                match ev {
+                                    LineEvent::Line(l) => {
+                                        if !l.trim().is_empty() {
+                                            front.on_line(id, &l);
+                                        }
+                                    }
+                                    LineEvent::Oversized => {
+                                        front.reply_raw(id, error_json(
+                                            &format!(
+                                                "request line exceeds \
+                                                 {MAX_LINE_BYTES} bytes")));
+                                    }
+                                }
+                            }
+                        }
+                        Err(e)
+                            if e.kind()
+                                == io::ErrorKind::WouldBlock =>
+                        {
+                            break;
+                        }
+                        Err(e)
+                            if e.kind()
+                                == io::ErrorKind::Interrupted => {}
+                        Err(_) => {
+                            dead.push(id);
+                            break;
+                        }
+                    }
+                }
+            } else if revents & POLLHUP != 0 {
+                dead.push(id);
+            }
+        }
+
+        // engine side: admissions + one step, producing reply frames
+        if front.has_work() {
+            if let Err(e) = front.tick() {
+                // engine failure is fatal; deliver the error lines the
+                // tick queued (best effort, blocking) before bailing
+                for (cid, line) in front.take_outbox() {
+                    if let Some(c) = conns.get_mut(&cid) {
+                        let _ = c.sock.set_nonblocking(false);
+                        let _ = c.sock.write_all(line.as_bytes());
+                        let _ = c.sock.write_all(b"\n");
+                    }
+                }
+                return Err(e);
+            }
+        }
+
+        // route frames into per-connection bounded queues.  Overflow
+        // means the reader is too slow for its own stream: cancel its
+        // work (backpressure-then-cancel) instead of blocking the
+        // engine or growing without bound.  Frames for connections
+        // that vanished are dropped silently.
+        for (cid, line) in front.take_outbox() {
+            let Some(c) = conns.get_mut(&cid) else { continue };
+            if c.outq.push(&line, Instant::now()).is_err() {
+                front.stats.overflow_cancels += 1;
+                dead.push(cid);
+                continue;
+            }
+            front.stats.note_queue_depth(c.outq.len());
+        }
+
+        // write side: flush whatever each socket will take now
+        for (&id, c) in conns.iter_mut() {
+            if c.outq.is_empty() {
+                continue;
+            }
+            if c.outq.flush(&mut c.sock, &mut front.stats).is_err() {
+                dead.push(id);
+            }
+        }
+
+        // reap: close the socket, cancel the connection's queued and
+        // in-flight work so lanes/pages free immediately
+        for id in dead {
+            if conns.remove(&id).is_some() {
+                front.on_disconnect(id);
+            }
+        }
+    }
+}

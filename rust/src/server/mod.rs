@@ -20,13 +20,24 @@
 //!    "latency_ms": 12.3}
 //! ```
 //!
-//! A streaming client that disconnects mid-generation is detected at
-//! the next token frame: the engine cancels the request, freeing its
-//! lane and KV pages for waiting traffic (cancel-on-disconnect).
-//! Detection rides the token stream — a client that vanishes during
-//! prefill is reaped at its first token, and abandoned one-shot
-//! requests run to completion (bounded by `max_new`); the blocking-IO
-//! server has no out-of-band liveness probe.
+//! Disconnects are detected out-of-band by the readiness poller
+//! (DESIGN.md §16): a client that hangs up — even mid-prefill, even
+//! on a one-shot request still decoding — has its request cancelled
+//! immediately, freeing the lane and KV pages for waiting traffic.
+//! The protocol therefore requires keeping the connection open until
+//! the reply arrives: half-closing the write side counts as hanging
+//! up.
+//!
+//! When the admission backlog is deep (`shed_queue`) or its head has
+//! already waited past the SLO (`shed_wait_ms`), new generation
+//! requests are refused with a load-shed line instead of queueing
+//! unboundedly:
+//!
+//! ```text
+//! → {"prompt": "hello"}
+//! ← {"error": "shed", "reason": "queue-depth", "queued": 64,
+//!    "oldest_wait_ms": 12}
+//! ```
 //!
 //! `{"stats": true}` answers one introspection line (lane/page
 //! occupancy + serving counters) without generating:
@@ -36,11 +47,12 @@
 //! ← {"stats": {"active": 1, "pending": 0, "free_lanes": 1, ...}}
 //! ```
 //!
-//! `{"cancel": id}` cancels a request by the id its frames carry.  The
-//! surface is idempotent: cancelling an id that is unknown, already
-//! finished, or already cancelled answers a clean `{"error": ...}` line
-//! — never a protocol wedge — and a successful cancel answers
-//! `{"cancelled": id}`:
+//! `{"cancel": id}` cancels a request by the id its frames carry —
+//! whether it is still queued ahead of the engine, engine-pending, or
+//! decoding.  The surface is idempotent: cancelling an id that is
+//! unknown, already finished, or already cancelled answers a clean
+//! `{"error": ...}` line — never a protocol wedge — and a successful
+//! cancel answers `{"cancelled": id}`:
 //!
 //! ```text
 //! → {"cancel": 3}
@@ -49,27 +61,37 @@
 //! ← {"error": "cancel: unknown or already finished request id 3"}
 //! ```
 //!
-//! Threading: the engine is not `Send` (PJRT buffers are thread-local),
-//! so it runs on a dedicated thread; connection threads submit jobs over
-//! a channel and block on per-job reply channels.  This mirrors the
-//! paper's topology — one leader process front-ending the rank workers.
-//! (std::net threads; the offline build environment has no tokio.)
+//! Threading: there is none.  The engine is not `Send` (PJRT buffers
+//! are thread-local), and the event-driven design (DESIGN.md §16)
+//! makes that a non-issue: one thread runs the readiness poller, the
+//! protocol state machine ([`Front`]), and the engine itself, so the
+//! engine never crosses a thread and no channel or lock exists to
+//! contend on.  Slow readers cannot stall the token loop either —
+//! their frames queue in a bounded per-connection [`conn::OutQ`] and
+//! the connection is cancelled at overflow.
 
 #![warn(missing_docs)]
 
-use std::collections::BTreeMap;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::{channel, Receiver, Sender};
+pub mod conn;
+mod event_loop;
+
+use std::collections::{BTreeMap, HashMap};
+use std::net::TcpListener;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::config::EngineConfig;
 use crate::engine::Engine;
-use crate::scheduler::AdmissionQueue;
+use crate::metrics::ServeStats;
+use crate::scheduler::{AdmissionQueue, ShedPolicy};
 use crate::tokenizer::Tokenizer;
 use crate::util::Json;
+
+/// Identifies one client connection for the [`Front`]: the reactor
+/// numbers real sockets, the in-process drivers (benchkit storm, the
+/// connection-storm tests) number virtual connections.
+pub type ConnId = u64;
 
 /// A parsed API request line.
 #[derive(Debug, Clone, PartialEq)]
@@ -217,314 +239,336 @@ pub fn cancelled_json(id: u64) -> String {
     Json::Obj(m).to_string()
 }
 
-/// One reply frame flowing from the engine thread to a connection
-/// thread; everything but `Token` terminates the request.
-enum Frame {
-    Token(u64, i32),
-    Done(ApiResponse),
-    /// a pre-serialized single-line reply (the stats probe)
-    Raw(String),
-    Error(String),
-}
-
-/// The `{"stats": {...}}` introspection reply: lane/page occupancy
-/// plus serving counters, read from the live engine.  `queued` is the
-/// scheduler-side backlog (submitted but not yet admitted — the
-/// burst guard can hold requests there), `pending` the engine-side
-/// one.  A cancelled request frees its lane and pages but never
-/// increments `requests_done` — which is how the disconnect tests
-/// distinguish cancellation from natural retirement.
-fn stats_json(engine: &Engine, queued: usize) -> String {
-    let mut s = BTreeMap::new();
-    let mut put = |k: &str, v: f64| {
-        s.insert(k.to_string(), Json::Num(v));
-    };
-    put("queued", queued as f64);
-    put("active", engine.active_count() as f64);
-    put("pending", engine.pending_count() as f64);
-    put("free_lanes", engine.free_lanes() as f64);
-    put("free_pages", engine.free_pages() as f64);
-    put("total_pages", engine.total_pages() as f64);
-    put("shared_pages", engine.shared_pages() as f64);
-    put("shared_groups", engine.shared_groups() as f64);
-    put("requests_done", engine.metrics.requests_done as f64);
-    put("tokens_out", engine.metrics.tokens_out as f64);
-    put("prefix_hits", engine.metrics.prefix_hits as f64);
-    put("prefix_misses", engine.metrics.prefix_misses as f64);
+/// The `{"error": "shed", ...}` admission-refusal line (DESIGN.md
+/// §16): carries the reason (`queue-depth` or `oldest-wait`) and the
+/// occupancy snapshot that triggered it, so a client can implement
+/// informed backoff.
+pub fn shed_json(reason: &str, queued: usize, oldest_wait_ms: u64)
+                 -> String {
     let mut m = BTreeMap::new();
-    m.insert("stats".to_string(), Json::Obj(s));
+    m.insert("error".to_string(), Json::Str("shed".to_string()));
+    m.insert("reason".to_string(), Json::Str(reason.to_string()));
+    m.insert("queued".to_string(), Json::Num(queued as f64));
+    m.insert("oldest_wait_ms".to_string(),
+             Json::Num(oldest_wait_ms as f64));
     Json::Obj(m).to_string()
 }
 
-struct Job {
-    req: ApiRequest,
-    respond: Sender<Frame>,
-    submitted: Instant,
-}
-
-/// Engine-thread bookkeeping for one in-flight request.
-struct Waiter {
-    tx: Sender<Frame>,
-    submitted: Instant,
+/// [`Front`]-side bookkeeping for one live request: who to answer,
+/// how, and since when.
+struct Owner {
+    conn: ConnId,
     stream: bool,
+    submitted: Instant,
 }
 
-/// Engine thread: admits jobs through the config-selected admission
-/// queue (FCFS burst guard or continuous — DESIGN.md §13), steps the
-/// engine (lane-granular batching happens inside), streams per-token
-/// frames to streaming clients, and answers completions.  A streaming
-/// client whose connection died (token frame undeliverable) gets its
-/// request cancelled in the same step — the lane and KV pages free
-/// immediately instead of decoding to max_new for nobody.
-fn engine_loop(mut engine: Engine, jobs: Receiver<Job>) -> Result<()> {
-    let tok = Tokenizer::byte_level(engine.preset().vocab)?;
-    let mut sched = AdmissionQueue::for_kind(
-        engine.config().scheduler,
-        engine.config().batch.max(1),
-        engine.config().prefill_chunk,
-    );
-    let mut waiting: std::collections::HashMap<u64, Waiter> =
-        Default::default();
-    // scheduler-id -> engine-id indirection
-    let mut pending_jobs: std::collections::HashMap<u64, Job> =
-        Default::default();
+/// The transport-agnostic serving state machine (DESIGN.md §16): the
+/// engine, its admission queue, the shed policy, and per-request
+/// routing, driven by whoever owns the connections — the TCP reactor
+/// ([`event_loop`]) in production, virtual-connection drivers in the
+/// `connection_storm` bench scenario and test suite.
+///
+/// The contract is push-in / pull-out: [`Front::on_line`] ingests one
+/// request line from a connection, [`Front::on_disconnect`] cancels a
+/// connection's outstanding work, [`Front::tick`] advances admission
+/// plus one engine step, and every reply line produced along the way
+/// accumulates in an outbox drained with [`Front::take_outbox`].
+/// Single-threaded by construction — the engine never crosses a
+/// thread.
+pub struct Front {
+    engine: Engine,
+    tok: Tokenizer,
+    sched: AdmissionQueue,
+    shed: ShedPolicy,
+    owners: HashMap<u64, Owner>,
+    outbox: Vec<(ConnId, String)>,
+    /// serving-layer counters (sheds, frames, frame latency); the
+    /// driver records write-side samples here so one struct reports
+    /// the whole front
+    pub stats: ServeStats,
+}
 
-    loop {
-        // ingest every queued job without blocking; block when idle
-        loop {
-            let job = if engine.has_work() || !sched.is_empty() {
-                match jobs.try_recv() {
-                    Ok(j) => Some(j),
-                    Err(std::sync::mpsc::TryRecvError::Empty) => None,
-                    Err(std::sync::mpsc::TryRecvError::Disconnected) => {
-                        return Ok(());
-                    }
-                }
-            } else {
-                match jobs.recv() {
-                    Ok(j) => Some(j),
-                    Err(_) => return Ok(()),
-                }
-            };
-            match job {
-                Some(job) if job.req.stats => {
-                    // introspection: answer immediately, nothing queued
-                    let _ = job.respond.send(Frame::Raw(
-                        stats_json(&engine, sched.len())));
-                }
-                Some(job) if job.req.cancel.is_some() => {
-                    // idempotent control surface: a cancel can never
-                    // wedge the connection — unknown/finished ids are a
-                    // clean error line, found ids an acknowledgement
-                    let id = job.req.cancel.unwrap();
-                    let line = match engine.cancel(id) {
-                        Ok(true) => {
-                            if let Some(w) = waiting.remove(&id) {
-                                let _ = w.tx.send(
-                                    Frame::Error("cancelled".into()));
-                            }
-                            cancelled_json(id)
-                        }
-                        Ok(false) => error_json(&format!(
-                            "cancel: unknown or already finished \
-                             request id {id}")),
-                        Err(e) => error_json(&format!("cancel: {e:#}")),
-                    };
-                    let _ = job.respond.send(Frame::Raw(line));
-                }
-                Some(job) => {
-                    let sid = sched.submit(tok.encode(&job.req.prompt),
-                                           job.req.max_new_tokens);
-                    pending_jobs.insert(sid, job);
-                }
-                None => break,
+impl Front {
+    /// Wrap an engine in the serving state machine; admission policy
+    /// and shed bounds come from the engine's own config.
+    pub fn new(engine: Engine) -> Result<Front> {
+        let tok = Tokenizer::byte_level(engine.preset().vocab)?;
+        let cfg = engine.config();
+        let sched = AdmissionQueue::for_kind(
+            cfg.scheduler, cfg.batch.max(1), cfg.prefill_chunk);
+        let shed = ShedPolicy::from_config(cfg.shed_queue,
+                                           cfg.shed_wait_ms);
+        Ok(Front {
+            engine,
+            tok,
+            sched,
+            shed,
+            owners: HashMap::new(),
+            outbox: Vec::new(),
+            stats: ServeStats::default(),
+        })
+    }
+
+    /// The engine, for occupancy assertions in tests.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Mutable engine access, for metrics readout after a drive (the
+    /// latency quantiles sort lazily and need `&mut`).
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+
+    /// Requests currently owned by some connection (queued, pending,
+    /// or decoding) — the bookkeeping-leak probe the randomized storm
+    /// test checks against lane/page conservation.
+    pub fn inflight(&self) -> usize {
+        self.owners.len()
+    }
+
+    /// Requests still queued ahead of the engine.
+    pub fn queued(&self) -> usize {
+        self.sched.len()
+    }
+
+    /// Is there any engine or admission work outstanding?  The reactor
+    /// polls with a zero timeout while this holds.
+    pub fn has_work(&self) -> bool {
+        self.engine.has_work() || !self.sched.is_empty()
+    }
+
+    /// Queue a pre-serialized reply line to a connection (also used by
+    /// the reactor for read-side protocol errors).
+    pub fn reply_raw(&mut self, conn: ConnId, line: String) {
+        self.outbox.push((conn, line));
+    }
+
+    /// Drain every reply line produced since the last call, in
+    /// production order.
+    pub fn take_outbox(&mut self) -> Vec<(ConnId, String)> {
+        std::mem::take(&mut self.outbox)
+    }
+
+    /// Ingest one request line from `conn`.  Control probes (stats,
+    /// cancel) answer immediately; generation requests pass the shed
+    /// gate and join the admission queue under a pre-allocated engine
+    /// id — which makes them cancellable and conserves the id order
+    /// the threaded server had (ids monotonic in line-arrival order).
+    pub fn on_line(&mut self, conn: ConnId, line: &str) {
+        let req = match ApiRequest::parse(line) {
+            Ok(req) => req,
+            Err(e) => {
+                self.reply_raw(conn,
+                               error_json(&format!("bad request: {e:#}")));
+                return;
             }
+        };
+        if req.stats {
+            let line = self.stats_line();
+            self.reply_raw(conn, line);
+            return;
         }
+        if let Some(id) = req.cancel {
+            self.handle_cancel(conn, id);
+            return;
+        }
+        let (depth, oldest) = self.sched.occupancy();
+        if let Some(reason) = self.shed.decision(depth, oldest) {
+            self.stats.shed += 1;
+            let wait_ms =
+                oldest.map(|d| d.as_millis() as u64).unwrap_or(0);
+            self.reply_raw(conn, shed_json(reason.as_str(), depth,
+                                           wait_ms));
+            return;
+        }
+        let id = self.engine.allocate_id();
+        self.sched.submit_with_id(id, self.tok.encode(&req.prompt),
+                                  req.max_new_tokens);
+        self.owners.insert(id, Owner {
+            conn,
+            stream: req.stream,
+            submitted: Instant::now(),
+        });
+    }
 
+    /// `{"cancel": id}`: reach the request wherever it lives — still
+    /// queued ahead of the engine (the PR 9 satellite bugfix: those
+    /// ids were previously uncancellable), engine-pending, or
+    /// decoding.  The owning stream gets an `{"error": "cancelled"}`
+    /// terminator; the canceller gets the acknowledgement.
+    fn handle_cancel(&mut self, conn: ConnId, id: u64) {
+        let line = match self.engine.cancel(id) {
+            Ok(true) => {
+                self.notify_cancelled(id);
+                cancelled_json(id)
+            }
+            Ok(false) if self.sched.cancel(id) => {
+                self.notify_cancelled(id);
+                cancelled_json(id)
+            }
+            Ok(false) => error_json(&format!(
+                "cancel: unknown or already finished request id {id}")),
+            Err(e) => error_json(&format!("cancel: {e:#}")),
+        };
+        self.reply_raw(conn, line);
+    }
+
+    /// Terminate a cancelled request's reply stream.
+    fn notify_cancelled(&mut self, id: u64) {
+        if let Some(o) = self.owners.remove(&id) {
+            self.outbox.push((o.conn, error_json("cancelled")));
+        }
+    }
+
+    /// A connection closed (EOF, HUP, write failure, or outbound-queue
+    /// overflow): cancel everything it still owns, wherever each
+    /// request lives.  Lanes and KV pages free immediately — this is
+    /// the out-of-band reaping the blocking server could only do at
+    /// the next token frame.
+    pub fn on_disconnect(&mut self, conn: ConnId) {
+        let ids: Vec<u64> = self
+            .owners
+            .iter()
+            .filter(|(_, o)| o.conn == conn)
+            .map(|(&id, _)| id)
+            .collect();
+        for id in ids {
+            self.owners.remove(&id);
+            if self.sched.cancel(id) {
+                continue;
+            }
+            // the client is gone — nobody to report an engine
+            // inconsistency to; the error would also surface on the
+            // next step
+            let _ = self.engine.cancel(id);
+        }
+    }
+
+    /// Advance the serving side once: admit from the queue under the
+    /// configured policy, then run one engine step, routing token
+    /// frames and completions into the outbox.  The frame order the
+    /// threaded server guaranteed is preserved: every token frame of
+    /// a completing request precedes its Done frame.
+    pub fn tick(&mut self) -> Result<()> {
         // admit from the scheduler into the engine; the burst guard
         // only throttles when there are actual decode streams to
         // protect (mid-prefill lanes are not them)
         while let Some(q) =
-            sched.next_admission(engine.decoding_count() > 0)
+            self.sched.next_admission(self.engine.decoding_count() > 0)
         {
-            let eid = engine.enqueue(q.prompt, q.max_new_tokens.max(1));
-            if let Some(job) = pending_jobs.remove(&q.id) {
-                waiting.insert(eid, Waiter {
-                    tx: job.respond,
-                    submitted: job.submitted,
-                    stream: job.req.stream,
-                });
-            }
+            self.engine.enqueue_reserved(q.id, q.prompt,
+                                         q.max_new_tokens.max(1));
         }
-
-        if engine.has_work() {
-            sched.on_decode_round();
-            let decode_lanes = engine.decoding_count();
-            match engine.step() {
-                Ok(completions) => {
-                    // speculative steps (DESIGN.md §15) run spec_k
-                    // draft rounds plus a multi-row verify: charge the
-                    // rows beyond one-per-decode-lane against the
-                    // prefill-burst budget so prefills cannot ride a
-                    // speculation-inflated step as if it were one
-                    // decode round (0 on plain/prefill steps)
-                    sched.charge(engine.last_verify_rows()
-                                     .saturating_sub(decode_lanes));
-                    // per-token frames first, so every token of a
-                    // completing request precedes its Done frame
-                    for (eid, t) in engine.take_new_tokens() {
-                        let dead = match waiting.get(&eid) {
-                            Some(w) if w.stream => {
-                                w.tx.send(Frame::Token(eid, t)).is_err()
-                            }
-                            _ => false,
+        if !self.engine.has_work() {
+            return Ok(());
+        }
+        self.sched.on_decode_round();
+        let decode_lanes = self.engine.decoding_count();
+        match self.engine.step() {
+            Ok(completions) => {
+                // speculative steps (DESIGN.md §15) run spec_k draft
+                // rounds plus a multi-row verify: charge the rows
+                // beyond one-per-decode-lane against the prefill-burst
+                // budget so prefills cannot ride a speculation-
+                // inflated step as if it were one decode round
+                self.sched.charge(self.engine.last_verify_rows()
+                                      .saturating_sub(decode_lanes));
+                for (eid, t) in self.engine.take_new_tokens() {
+                    if let Some(o) = self.owners.get(&eid) {
+                        if o.stream {
+                            self.outbox.push((o.conn,
+                                              token_json(eid, t)));
+                        }
+                    }
+                }
+                for c in completions {
+                    if let Some(o) = self.owners.remove(&c.request_id) {
+                        let resp = ApiResponse {
+                            id: c.request_id,
+                            text: self.tok.decode(&c.tokens),
+                            tokens: c.tokens,
+                            latency_ms: o.submitted.elapsed()
+                                .as_secs_f64() * 1e3,
                         };
-                        if dead {
-                            // cancel-on-disconnect: the client hung up
-                            engine.cancel(eid)?;
-                            waiting.remove(&eid);
-                        }
-                    }
-                    for c in completions {
-                        if let Some(w) = waiting.remove(&c.request_id) {
-                            let resp = ApiResponse {
-                                id: c.request_id,
-                                text: tok.decode(&c.tokens),
-                                tokens: c.tokens,
-                                latency_ms: w.submitted.elapsed()
-                                    .as_secs_f64() * 1e3,
-                            };
-                            let _ = w.tx.send(Frame::Done(resp));
-                        }
+                        let line = if o.stream {
+                            resp.to_done_json()
+                        } else {
+                            resp.to_json()
+                        };
+                        self.outbox.push((o.conn, line));
                     }
                 }
-                Err(e) => {
-                    let msg = format!("engine: {e:#}");
-                    for (_, w) in waiting.drain() {
-                        let _ = w.tx.send(Frame::Error(msg.clone()));
-                    }
-                    return Err(e);
-                }
+                Ok(())
             }
-        }
-    }
-}
-
-/// Write one reply line; an Err here means the client disconnected.
-fn write_line(writer: &mut TcpStream, line: &str) -> Result<()> {
-    writer.write_all(line.as_bytes())?;
-    writer.write_all(b"\n")?;
-    writer.flush()?;
-    Ok(())
-}
-
-fn handle_conn(stream: TcpStream, job_tx: Sender<Job>) -> Result<()> {
-    let peer = stream.peer_addr()?;
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let req = match ApiRequest::parse(&line) {
-            Ok(req) => req,
             Err(e) => {
-                write_line(&mut writer,
-                           &error_json(
-                               &format!("bad request from {peer}: {e}")))?;
-                continue;
-            }
-        };
-        let stream_mode = req.stream;
-        let (tx, rx) = channel();
-        if job_tx
-            .send(Job { req, respond: tx, submitted: Instant::now() })
-            .is_err()
-        {
-            write_line(&mut writer, &error_json("engine thread gone"))?;
-            continue;
-        }
-        loop {
-            match rx.recv() {
-                Ok(Frame::Token(id, t)) if stream_mode => {
-                    // a failed write means the client hung up:
-                    // dropping `rx` makes the engine's next token
-                    // frame undeliverable, which cancels the request
-                    // and frees its lane + KV pages
-                    write_line(&mut writer, &token_json(id, t))?;
+                let msg = error_json(&format!("engine: {e:#}"));
+                for (_, o) in self.owners.drain() {
+                    self.outbox.push((o.conn, msg.clone()));
                 }
-                Ok(Frame::Token(..)) => {} // one-shot: buffered in Done
-                Ok(Frame::Done(resp)) => {
-                    let out = if stream_mode {
-                        resp.to_done_json()
-                    } else {
-                        resp.to_json()
-                    };
-                    write_line(&mut writer, &out)?;
-                    break;
-                }
-                Ok(Frame::Raw(line)) => {
-                    write_line(&mut writer, &line)?;
-                    break;
-                }
-                Ok(Frame::Error(e)) => {
-                    write_line(&mut writer, &error_json(&e))?;
-                    break;
-                }
-                Err(_) => {
-                    write_line(&mut writer,
-                               &error_json("engine dropped request"))?;
-                    break;
-                }
+                Err(e)
             }
         }
     }
-    Ok(())
+
+    /// The `{"stats": {...}}` introspection reply: lane/page occupancy
+    /// plus serving counters, read from the live engine and front.
+    /// `queued` is the scheduler-side backlog (submitted but not yet
+    /// admitted — the burst guard can hold requests there), `pending`
+    /// the engine-side one.  A cancelled request frees its lane and
+    /// pages but never increments `requests_done` — which is how the
+    /// disconnect tests distinguish cancellation from natural
+    /// retirement.
+    fn stats_line(&mut self) -> String {
+        let mut s = BTreeMap::new();
+        let mut put = |k: &str, v: f64| {
+            s.insert(k.to_string(), Json::Num(v));
+        };
+        put("queued", self.sched.len() as f64);
+        put("active", self.engine.active_count() as f64);
+        put("pending", self.engine.pending_count() as f64);
+        put("free_lanes", self.engine.free_lanes() as f64);
+        put("free_pages", self.engine.free_pages() as f64);
+        put("total_pages", self.engine.total_pages() as f64);
+        put("shared_pages", self.engine.shared_pages() as f64);
+        put("shared_groups", self.engine.shared_groups() as f64);
+        put("requests_done", self.engine.metrics.requests_done as f64);
+        put("tokens_out", self.engine.metrics.tokens_out as f64);
+        put("prefix_hits", self.engine.metrics.prefix_hits as f64);
+        put("prefix_misses", self.engine.metrics.prefix_misses as f64);
+        // serving-layer counters (DESIGN.md §16)
+        put("shed", self.stats.shed as f64);
+        put("frames_sent", self.stats.frames_sent as f64);
+        put("frame_queue_peak", self.stats.frame_queue_peak as f64);
+        put("frame_p99_us", self.stats.frame_lat.p99_us() as f64);
+        put("overflow_cancels", self.stats.overflow_cancels as f64);
+        let mut m = BTreeMap::new();
+        m.insert("stats".to_string(), Json::Obj(s));
+        Json::Obj(m).to_string()
+    }
 }
 
 /// Serve `cfg` on `addr` (e.g. "127.0.0.1:7070") with in-process rank
-/// threads.  Runs until the process exits; one thread per connection.
+/// threads.  Runs until the process exits; one reactor thread serves
+/// every connection (DESIGN.md §16).
 pub fn serve(cfg: EngineConfig, addr: &str) -> Result<()> {
     serve_with(move || Engine::new(cfg), addr)
 }
 
 /// Serve on `addr` with an engine produced by `build` — the hook the
 /// launch coordinator uses to front a fleet of remote rank workers
-/// (see `crate::launch`).  `build` runs on the dedicated engine thread,
-/// so the engine never has to cross threads.
+/// (see `crate::launch`).  `build` runs on the calling thread, which
+/// becomes the reactor thread: the engine never crosses a thread.
 pub fn serve_with<F>(build: F, addr: &str) -> Result<()>
 where
-    F: FnOnce() -> Result<Engine> + Send + 'static,
+    F: FnOnce() -> Result<Engine>,
 {
-    let (job_tx, job_rx) = channel::<Job>();
-    std::thread::Builder::new()
-        .name("engine".into())
-        .spawn(move || {
-            let engine = match build() {
-                Ok(e) => e,
-                Err(e) => {
-                    eprintln!("engine bring-up failed: {e:#}");
-                    return;
-                }
-            };
-            if let Err(e) = engine_loop(engine, job_rx) {
-                eprintln!("engine loop failed: {e:#}");
-            }
-        })?;
-
+    let engine = build()?;
+    let front = Front::new(engine)?;
     let listener =
         TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     eprintln!("xeonserve listening on {addr}");
-    loop {
-        let (socket, peer) = listener.accept()?;
-        let job_tx = job_tx.clone();
-        std::thread::spawn(move || {
-            if let Err(e) = handle_conn(socket, job_tx) {
-                eprintln!("conn {peer}: {e:#}");
-            }
-        });
-    }
+    event_loop::run_reactor(listener, front)
 }
 
 #[cfg(test)]
@@ -643,6 +687,18 @@ mod tests {
     fn error_json_is_valid() {
         let j = Json::parse(&error_json("boom \"quoted\"")).unwrap();
         assert!(j.get("error").unwrap().as_str().unwrap().contains("boom"));
+    }
+
+    #[test]
+    fn shed_json_carries_reason_and_occupancy() {
+        let j = Json::parse(&shed_json("queue-depth", 64, 12)).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str(), Some("shed"));
+        assert_eq!(j.get("reason").unwrap().as_str(), Some("queue-depth"));
+        assert_eq!(j.get("queued").unwrap().as_u64(), Some(64));
+        assert_eq!(j.get("oldest_wait_ms").unwrap().as_u64(), Some(12));
+        // shed lines must never be mistaken for a generation reply
+        assert!(j.get("done").is_none());
+        assert!(j.get("token").is_none());
     }
 
     #[test]

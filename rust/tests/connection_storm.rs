@@ -1,0 +1,630 @@
+//! Connection-storm suite (DESIGN.md §16): the event-driven server
+//! front — readiness-polled admission, bounded per-connection frame
+//! queues, load-shedding — changes *how* replies reach clients, never
+//! *what* the engine computes.  Token streams served through the
+//! [`Front`] state machine must be bit-identical to a single-request
+//! engine run across schedulers × worlds; a slow reader's frames
+//! queue up to the bound and then its lane is cancelled (the engine
+//! never blocks on one socket); deep backlogs answer `{"error":
+//! "shed"}` instead of queueing unboundedly; a client that vanishes
+//! mid-prefill is reaped before its first token; and randomized
+//! connect / stream / stall / disconnect schedules conserve lanes,
+//! KV pages, and connection bookkeeping exactly.
+//!
+//! The tests drive [`Front`] through the same push-in / pull-out
+//! contract the TCP reactor uses — virtual connections backed by the
+//! reactor's own bounded [`OutQ`] — so every code path under test is
+//! the production path minus the socket syscalls.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use xeonserve::benchkit::suite::run_storm;
+use xeonserve::config::{BackendKind, EngineConfig, SchedulerKind,
+                        WeightSource};
+use xeonserve::engine::Engine;
+use xeonserve::server::conn::OutQ;
+use xeonserve::server::Front;
+use xeonserve::tokenizer::Tokenizer;
+use xeonserve::util::{Json, SplitMix64};
+
+fn cfg(world: usize, batch: usize, sched: SchedulerKind)
+       -> EngineConfig {
+    EngineConfig {
+        model: "tiny".into(),
+        backend: BackendKind::Reference,
+        world,
+        batch,
+        scheduler: sched,
+        weights: WeightSource::Synthetic { seed: 0xC0FFEE },
+        ..Default::default()
+    }
+}
+
+fn front_for(cfg: EngineConfig) -> Front {
+    Front::new(Engine::new(cfg).unwrap()).unwrap()
+}
+
+/// Route every outbox line into its connection's bounded queue —
+/// exactly what the reactor's routing pass does, minus the overflow
+/// policy (tests that exercise overflow replicate it inline).
+fn route(front: &mut Front, queues: &mut BTreeMap<u64, OutQ>) {
+    for (cid, line) in front.take_outbox() {
+        if let Some(q) = queues.get_mut(&cid) {
+            q.push(&line, Instant::now())
+                .expect("frame queue overflowed in a non-overflow test");
+        }
+    }
+}
+
+/// The reference stream: the prompt decoded alone on a fresh
+/// single-lane engine — the tokens every served stream must
+/// reproduce bit for bit, whatever the storm around it did.
+fn golden_tokens(prompt: &str, max_new: usize) -> Vec<i32> {
+    let mut e = Engine::new(cfg(1, 1, SchedulerKind::Fcfs)).unwrap();
+    let tok = Tokenizer::byte_level(e.preset().vocab).unwrap();
+    e.generate(&[tok.encode(prompt)], max_new).unwrap().pop().unwrap()
+}
+
+fn tokens_of(j: &Json) -> Vec<i32> {
+    j.get("tokens")
+        .expect("done frame without tokens")
+        .as_arr()
+        .expect("tokens not an array")
+        .iter()
+        .map(|t| t.as_f64().unwrap() as i32)
+        .collect()
+}
+
+// ---- bit-identity under concurrency ------------------------------------
+
+/// Headline gate: streams served through the event-driven front are
+/// bit-identical to the single-request baseline across both admission
+/// schedulers × worlds {1, 2}.  12 streaming clients over 6 distinct
+/// prompts share 2 lanes, so lanes retire and refill mid-storm and
+/// every composition the front can produce is compared token for
+/// token — including the per-frame tokens, which must concatenate to
+/// exactly the summary frame's array.
+#[test]
+fn storm_streams_bit_identical_across_schedulers_and_worlds() {
+    let prompts: Vec<String> =
+        (0..6).map(|i| format!("storm prompt {i}")).collect();
+    let golden: Vec<Vec<i32>> =
+        prompts.iter().map(|p| golden_tokens(p, 6)).collect();
+    for world in [1usize, 2] {
+        for sched in [SchedulerKind::Fcfs, SchedulerKind::Continuous] {
+            let mut front = front_for(cfg(world, 2, sched));
+            let mut queues: BTreeMap<u64, OutQ> = BTreeMap::new();
+            for c in 0..12u64 {
+                queues.insert(c + 1, OutQ::new(64, 1 << 20));
+                front.on_line(c + 1, &format!(
+                    "{{\"prompt\": \"{}\", \"max_new_tokens\": 6, \
+                     \"stream\": true}}",
+                    prompts[c as usize % prompts.len()]));
+            }
+            let mut streamed: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+            let mut done = 0usize;
+            for _ in 0..2000 {
+                if front.has_work() {
+                    front.tick().unwrap();
+                }
+                route(&mut front, &mut queues);
+                for (&cid, q) in queues.iter_mut() {
+                    while let Some((line, _)) = q.pop_frame() {
+                        let j = Json::parse(&line).unwrap();
+                        if j.get("done").is_some() {
+                            let want =
+                                &golden[(cid as usize - 1)
+                                        % prompts.len()];
+                            assert_eq!(
+                                &tokens_of(&j), want,
+                                "w{world} {sched:?} conn {cid}: \
+                                 summary diverged from baseline");
+                            assert_eq!(
+                                streamed.get(&cid).unwrap(), want,
+                                "w{world} {sched:?} conn {cid}: \
+                                 frames diverged from baseline");
+                            done += 1;
+                        } else {
+                            assert!(j.get("error").is_none(),
+                                    "unexpected error line {line}");
+                            let t = j.get("token").unwrap()
+                                .as_f64().unwrap() as i32;
+                            streamed.entry(cid).or_default().push(t);
+                        }
+                    }
+                }
+                if done == 12 && !front.has_work() {
+                    break;
+                }
+            }
+            assert_eq!(done, 12,
+                       "w{world} {sched:?}: streams did not finish");
+            assert_eq!(front.inflight(), 0);
+            assert_eq!(front.queued(), 0);
+        }
+    }
+}
+
+/// The acceptance-scale storm: 10 000 streaming clients go
+/// idle-to-active against an 8-lane engine, and every one of the
+/// 10 000 streams stays bit-identical to its single-request
+/// baseline.  Clients arrive in waves, drain eagerly, and leave —
+/// bounded memory, bounded queues, zero lost replies.
+#[test]
+fn ten_thousand_client_storm_stays_bit_identical() {
+    let prompts: Vec<String> =
+        (0..8).map(|i| format!("wave {i}")).collect();
+    let golden: Vec<Vec<i32>> =
+        prompts.iter().map(|p| golden_tokens(p, 2)).collect();
+    let clients = 10_000usize;
+    let wave = 64usize;
+    let mut front = front_for(cfg(1, 8, SchedulerKind::Continuous));
+    let mut queues: BTreeMap<u64, OutQ> = BTreeMap::new();
+    let mut streamed: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+    let mut submitted = 0usize;
+    let mut finished = 0usize;
+    for _ in 0..clients * 64 {
+        for _ in 0..wave {
+            if submitted >= clients {
+                break;
+            }
+            let cid = submitted as u64 + 1;
+            queues.insert(cid, OutQ::new(64, 1 << 20));
+            front.on_line(cid, &format!(
+                "{{\"prompt\": \"{}\", \"max_new_tokens\": 2, \
+                 \"stream\": true}}",
+                prompts[submitted % prompts.len()]));
+            submitted += 1;
+        }
+        if front.has_work() {
+            front.tick().unwrap();
+        }
+        route(&mut front, &mut queues);
+        let mut closed: Vec<u64> = Vec::new();
+        for (&cid, q) in queues.iter_mut() {
+            while let Some((line, _)) = q.pop_frame() {
+                let j = Json::parse(&line).unwrap();
+                if j.get("done").is_some() {
+                    let want = &golden[(cid as usize - 1)
+                                       % prompts.len()];
+                    assert_eq!(&tokens_of(&j), want,
+                               "conn {cid}: stream diverged under \
+                                the 10k-client storm");
+                    assert_eq!(streamed.remove(&cid)
+                                   .as_deref().unwrap_or(&[]),
+                               want.as_slice(),
+                               "conn {cid}: frames diverged");
+                    finished += 1;
+                    closed.push(cid);
+                } else {
+                    assert!(j.get("error").is_none(),
+                            "unexpected error line {line}");
+                    let t = j.get("token").unwrap()
+                        .as_f64().unwrap() as i32;
+                    streamed.entry(cid).or_default().push(t);
+                }
+            }
+        }
+        for cid in closed {
+            queues.remove(&cid);
+        }
+        if finished == clients && !front.has_work() {
+            break;
+        }
+    }
+    assert_eq!(finished, clients, "storm lost replies");
+    assert_eq!(front.inflight(), 0, "front bookkeeping leak");
+    assert_eq!(front.queued(), 0);
+    assert!(queues.is_empty(), "connection leak");
+    let e = front.engine_mut();
+    assert_eq!(e.metrics.requests_done as usize, clients);
+    assert_eq!(e.free_lanes(), 8, "lane leak after the storm");
+    assert_eq!(e.free_pages() + e.shared_pages(), e.total_pages(),
+               "page leak after the storm");
+}
+
+/// The benchkit storm scenario (the row `BENCH_pr9.json` records)
+/// agrees with the suite: its quick profile drives waves wider than
+/// the shed bound, so the recorded row must show a real shed rate in
+/// (0, 1) and clean accounting on both schedulers.
+#[test]
+fn quick_storm_scenario_records_shed_rate_and_frame_latency() {
+    for sched in [SchedulerKind::Fcfs, SchedulerKind::Continuous] {
+        let rec = run_storm(&cfg(1, 4, sched), true).unwrap();
+        assert_eq!(rec.name, "connection_storm");
+        assert_eq!(rec.scheduler, sched);
+        assert_eq!(rec.requests, 96);
+        assert!(rec.shed_rate > 0.0 && rec.shed_rate < 1.0,
+                "{sched:?}: opening wave must shed its tail \
+                 (got rate {})", rec.shed_rate);
+        let shed = (rec.shed_rate * rec.requests as f64).round() as usize;
+        assert_eq!(rec.requests_done as usize + shed, rec.requests,
+                   "{sched:?}: served + shed must cover every client");
+        assert!(rec.tokens_out > 0);
+    }
+}
+
+// ---- load shedding -----------------------------------------------------
+
+/// Queue-depth shedding is deterministic: with `shed_queue = 2`, a
+/// burst of 10 arrivals from idle admits exactly 2 and answers the
+/// other 8 with `{"error": "shed", "reason": "queue-depth"}` — and
+/// the shed clients' lines carry the occupancy that refused them.
+#[test]
+fn queue_depth_bound_sheds_the_burst_tail() {
+    let mut c = cfg(1, 1, SchedulerKind::Fcfs);
+    c.shed_queue = 2;
+    let mut front = front_for(c);
+    for conn in 1..=10u64 {
+        front.on_line(conn, r#"{"prompt": "burst", "max_new_tokens": 2}"#);
+    }
+    assert_eq!(front.queued(), 2);
+    let shed: Vec<(u64, Json)> = front
+        .take_outbox()
+        .into_iter()
+        .map(|(c, l)| (c, Json::parse(&l).unwrap()))
+        .collect();
+    assert_eq!(shed.len(), 8, "exactly the tail past the bound sheds");
+    for (conn, j) in &shed {
+        assert!(*conn >= 3, "an admitted client was shed");
+        assert_eq!(j.get("error").unwrap().as_str(), Some("shed"));
+        assert_eq!(j.get("reason").unwrap().as_str(),
+                   Some("queue-depth"));
+        assert_eq!(j.get("queued").unwrap().as_u64(), Some(2));
+        assert!(j.get("oldest_wait_ms").unwrap().as_u64().is_some());
+    }
+    assert_eq!(front.stats.shed, 8);
+    // the admitted two still complete normally
+    let mut served = 0usize;
+    for _ in 0..200 {
+        if !front.has_work() {
+            break;
+        }
+        front.tick().unwrap();
+        for (conn, line) in front.take_outbox() {
+            let j = Json::parse(&line).unwrap();
+            assert!(conn <= 2);
+            assert!(j.get("text").is_some(), "unexpected line {line}");
+            served += 1;
+        }
+    }
+    assert_eq!(served, 2);
+    assert_eq!(front.engine_mut().metrics.requests_done, 2);
+}
+
+/// Wait-SLO shedding: once the queue head has waited past
+/// `shed_wait_ms`, a new arrival is refused with reason
+/// `oldest-wait` — and admission reopens as soon as the backlog
+/// drains.
+#[test]
+fn oldest_wait_slo_sheds_new_arrivals_until_the_queue_drains() {
+    let mut c = cfg(1, 1, SchedulerKind::Fcfs);
+    c.shed_wait_ms = 1;
+    let mut front = front_for(c);
+    front.on_line(1, r#"{"prompt": "head", "max_new_tokens": 2}"#);
+    assert!(front.take_outbox().is_empty(), "head must be admitted");
+    std::thread::sleep(std::time::Duration::from_millis(10));
+    front.on_line(2, r#"{"prompt": "late", "max_new_tokens": 2}"#);
+    let lines = front.take_outbox();
+    assert_eq!(lines.len(), 1);
+    let (conn, j) = (lines[0].0, Json::parse(&lines[0].1).unwrap());
+    assert_eq!(conn, 2);
+    assert_eq!(j.get("error").unwrap().as_str(), Some("shed"));
+    assert_eq!(j.get("reason").unwrap().as_str(), Some("oldest-wait"));
+    assert!(j.get("oldest_wait_ms").unwrap().as_u64().unwrap() >= 1);
+    // drain the backlog; the policy must admit again from idle
+    for _ in 0..200 {
+        if !front.has_work() {
+            break;
+        }
+        front.tick().unwrap();
+        front.take_outbox();
+    }
+    front.on_line(3, r#"{"prompt": "after drain", "max_new_tokens": 2}"#);
+    assert!(front.take_outbox().is_empty(),
+            "an empty queue must never wait-shed");
+    assert_eq!(front.stats.shed, 1);
+}
+
+// ---- backpressure ------------------------------------------------------
+
+/// A slow reader's frames queue up to the bound, then its lane is
+/// cancelled — backpressure-then-cancel (DESIGN.md §16).  The engine
+/// keeps running throughout, the already-queued frames survive for
+/// whenever the reader returns, and the cancelled request never
+/// counts as done.
+#[test]
+fn slow_reader_queues_to_the_bound_then_cancels() {
+    let mut front = front_for(cfg(1, 1, SchedulerKind::Fcfs));
+    // a 4-frame bound against a 16-token stream: overflow at frame 5
+    let mut q = OutQ::new(4, 1 << 20);
+    front.on_line(1, r#"{"prompt": "slow reader",
+                         "max_new_tokens": 16, "stream": true}"#);
+    let mut overflowed = false;
+    for _ in 0..400 {
+        if front.has_work() {
+            front.tick().unwrap();
+        }
+        for (cid, line) in front.take_outbox() {
+            assert_eq!(cid, 1);
+            assert!(!overflowed,
+                    "no frame may be produced after the cancel");
+            if q.push(&line, Instant::now()).is_err() {
+                // the reactor's overflow policy, verbatim
+                front.stats.overflow_cancels += 1;
+                front.on_disconnect(1);
+                overflowed = true;
+            }
+        }
+        if overflowed && !front.has_work() {
+            break;
+        }
+    }
+    assert!(overflowed, "the bounded queue never overflowed");
+    assert!(!front.has_work());
+    assert_eq!(front.stats.overflow_cancels, 1);
+    assert_eq!(q.len(), 4, "queued frames must survive the cancel");
+    assert_eq!(front.inflight(), 0);
+    let e = front.engine_mut();
+    assert_eq!(e.metrics.requests_done, 0,
+               "a cancelled stream must not count as done");
+    assert_eq!(e.free_lanes(), 1, "cancel must free the lane");
+    assert_eq!(e.free_pages() + e.shared_pages(), e.total_pages(),
+               "cancel must free the pages");
+}
+
+// ---- out-of-band disconnects -------------------------------------------
+
+/// Drive one request to mid-prefill (chunked, so prefill spans
+/// several ticks), then hang up.  The reap must be immediate — lane
+/// and pages free before any token exists — and nothing may surface
+/// later: no frames, no completion, no `requests_done` tick.
+fn disconnect_mid_prefill(stream: bool) {
+    let mut c = cfg(1, 1, SchedulerKind::Fcfs);
+    c.prefill_chunk = 2;
+    let mut front = front_for(c);
+    // 14 prompt tokens / 2-token chunks = 7 prefill ticks; one tick
+    // leaves the lane mid-prefill, guaranteed pre-token
+    front.on_line(1, &format!(
+        "{{\"prompt\": \"abcdefghijklmn\", \"max_new_tokens\": 8, \
+         \"stream\": {stream}}}"));
+    front.tick().unwrap();
+    assert!(front.take_outbox().is_empty(),
+            "no frame may exist mid-prefill");
+    assert_eq!(front.engine().free_lanes(), 0,
+               "request should hold its lane mid-prefill");
+    front.on_disconnect(1); // the poller saw HUP
+    assert_eq!(front.engine().free_lanes(), 1,
+               "disconnect must free the lane immediately");
+    assert_eq!(front.inflight(), 0);
+    for _ in 0..100 {
+        if !front.has_work() {
+            break;
+        }
+        front.tick().unwrap();
+        assert!(front.take_outbox().is_empty(),
+                "a reaped request may not produce output");
+    }
+    let e = front.engine_mut();
+    assert_eq!(e.metrics.requests_done, 0,
+               "an abandoned request must not run to completion");
+    assert_eq!(e.metrics.tokens_out, 0);
+    assert_eq!(e.free_pages() + e.shared_pages(), e.total_pages());
+}
+
+/// Satellite regression: HUP during prefill reaps a *streaming*
+/// request before its first token.
+#[test]
+fn disconnect_during_prefill_reaps_before_first_token() {
+    disconnect_mid_prefill(true);
+}
+
+/// Satellite regression: an abandoned *one-shot* request — no frame
+/// ever due until completion — is cancelled too, instead of running
+/// to completion for a client that already left.
+#[test]
+fn abandoned_one_shot_request_is_cancelled_not_completed() {
+    disconnect_mid_prefill(false);
+}
+
+// ---- cancel of still-queued requests -----------------------------------
+
+/// Satellite regression: `{"cancel": id}` reaches a request still
+/// sitting in the AdmissionQueue — before the fix the front only
+/// asked the engine, so a queued id answered "unknown" and ran to
+/// completion anyway.  fcfs at batch 1 pins the scenario: the burst
+/// guard admits one queued request per tick while a stream decodes,
+/// so the third arrival is reliably still queued when the cancel
+/// lands.
+#[test]
+fn cancel_reaches_requests_still_queued_for_admission() {
+    let mut front = front_for(cfg(1, 1, SchedulerKind::Fcfs));
+    front.on_line(1, r#"{"prompt": "stream a",
+                         "max_new_tokens": 8, "stream": true}"#);
+    // A's first token frame reveals its engine id; B and C follow as
+    // id_a + 1 and id_a + 2 (ids are monotonic in line order)
+    let mut id_a = None;
+    for _ in 0..50 {
+        if front.has_work() {
+            front.tick().unwrap();
+        }
+        for (cid, line) in front.take_outbox() {
+            let j = Json::parse(&line).unwrap();
+            if cid == 1 && j.get("token").is_some() && id_a.is_none() {
+                id_a = j.get("id").unwrap().as_u64();
+            }
+        }
+        if id_a.is_some() {
+            break;
+        }
+    }
+    let id_a = id_a.expect("stream never produced a token frame");
+    front.on_line(2, r#"{"prompt": "b", "max_new_tokens": 2}"#);
+    front.on_line(3, r#"{"prompt": "c", "max_new_tokens": 2}"#);
+    assert_eq!(front.queued(), 2);
+    front.tick().unwrap();
+    assert_eq!(front.queued(), 1,
+               "burst guard should hold C in the admission queue");
+    front.on_line(4, &format!("{{\"cancel\": {}}}", id_a + 2));
+    assert_eq!(front.queued(), 0, "cancel missed the queued request");
+    let mut acked = false;
+    let mut c_terminated = false;
+    for (cid, line) in front.take_outbox() {
+        let j = Json::parse(&line).unwrap();
+        if cid == 4 {
+            assert_eq!(j.get("cancelled").unwrap().as_u64(),
+                       Some(id_a + 2));
+            acked = true;
+        }
+        if cid == 3 {
+            assert_eq!(j.get("error").unwrap().as_str(),
+                       Some("cancelled"));
+            c_terminated = true;
+        }
+    }
+    assert!(acked, "canceller got no acknowledgement");
+    assert!(c_terminated, "C's stream was not terminated");
+    // cancelling the same id again is a clean error, not a wedge
+    front.on_line(4, &format!("{{\"cancel\": {}}}", id_a + 2));
+    let lines = front.take_outbox();
+    assert_eq!(lines.len(), 1);
+    assert!(lines[0].1.contains("unknown or already finished"));
+    // A and B still complete; C never does
+    let mut done = Vec::new();
+    for _ in 0..200 {
+        if !front.has_work() {
+            break;
+        }
+        front.tick().unwrap();
+        for (cid, line) in front.take_outbox() {
+            let j = Json::parse(&line).unwrap();
+            if j.get("done").is_some() || j.get("text").is_some() {
+                done.push(cid);
+            }
+        }
+    }
+    done.sort_unstable();
+    assert_eq!(done, vec![1, 2], "exactly A and B may complete");
+    assert_eq!(front.engine_mut().metrics.requests_done, 2,
+               "the cancelled request must not retire as done");
+}
+
+// ---- randomized schedules ----------------------------------------------
+
+/// One seeded random schedule of connect / submit / drain / stall /
+/// disconnect / tick ops, with the bookkeeping identity
+/// `inflight == queued + engine-pending + engine-active` checked at
+/// every step and full conservation (lanes, pages, connections) at
+/// drain.
+fn run_random_schedule(seed: u64, sched: SchedulerKind) {
+    let mut rng = SplitMix64::new(seed);
+    let mut c = cfg(1, 2, sched);
+    c.shed_queue = 4; // shallow bound so shed paths fire mid-schedule
+    let mut front = front_for(c);
+    let lanes0 = front.engine().free_lanes();
+    let pages0 = front.engine().free_pages();
+    let mut queues: BTreeMap<u64, OutQ> = BTreeMap::new();
+    let mut next_conn: u64 = 1;
+    for op in 0..400usize {
+        match rng.next_below(6) {
+            0 | 1 => {
+                // connect and submit (half the arrivals stream); an
+                // undrained queue doubles as a stalled reader
+                let cid = next_conn;
+                next_conn += 1;
+                queues.insert(cid, OutQ::new(1024, 1 << 20));
+                let stream = rng.next_below(2) == 0;
+                let n = 1 + rng.next_below(6);
+                front.on_line(cid, &format!(
+                    "{{\"prompt\": \"conn {cid}\", \
+                     \"max_new_tokens\": {n}, \"stream\": {stream}}}"));
+            }
+            2 => {
+                // a random reader catches up on its stream
+                let pick = queues
+                    .keys()
+                    .nth(rng.next_below(queues.len().max(1)))
+                    .copied();
+                if let Some(cid) = pick {
+                    let q = queues.get_mut(&cid).unwrap();
+                    while let Some((line, _)) = q.pop_frame() {
+                        Json::parse(&line).expect("non-JSON frame");
+                    }
+                }
+            }
+            3 => {
+                // a random client hangs up mid-whatever
+                let pick = queues
+                    .keys()
+                    .nth(rng.next_below(queues.len().max(1)))
+                    .copied();
+                if let Some(cid) = pick {
+                    queues.remove(&cid);
+                    front.on_disconnect(cid);
+                }
+            }
+            _ => {
+                if front.has_work() {
+                    front.tick().unwrap();
+                }
+            }
+        }
+        // the reactor's routing pass: frames for vanished connections
+        // are dropped
+        for (cid, line) in front.take_outbox() {
+            if let Some(q) = queues.get_mut(&cid) {
+                q.push(&line, Instant::now()).unwrap();
+            }
+        }
+        let e = front.engine();
+        assert!(e.free_pages() + e.shared_pages() <= e.total_pages(),
+                "seed {seed:#x} op {op}: page pool oversubscribed");
+        assert_eq!(
+            front.inflight(),
+            front.queued() + e.pending_count() + e.active_count(),
+            "seed {seed:#x} op {op}: owner map out of sync with the \
+             queue and engine");
+    }
+    // quiesce: serve out everything still live
+    for _ in 0..10_000 {
+        if !front.has_work() {
+            break;
+        }
+        front.tick().unwrap();
+        for (cid, line) in front.take_outbox() {
+            if let Some(q) = queues.get_mut(&cid) {
+                q.push(&line, Instant::now()).unwrap();
+            }
+        }
+    }
+    assert!(!front.has_work(), "seed {seed:#x}: front never drained");
+    assert_eq!(front.inflight(), 0, "seed {seed:#x}: owner leak");
+    assert_eq!(front.queued(), 0);
+    // every surviving connection hangs up; its queue must drain fully
+    for (cid, mut q) in std::mem::take(&mut queues) {
+        while q.pop_frame().is_some() {}
+        assert!(q.is_empty());
+        front.on_disconnect(cid);
+    }
+    let e = front.engine();
+    assert_eq!(e.free_lanes(), lanes0, "seed {seed:#x}: lane leak");
+    assert_eq!(e.free_pages() + e.shared_pages(), pages0,
+               "seed {seed:#x}: page leak");
+}
+
+/// Property sweep: randomized connect / stream / stall / disconnect
+/// schedules against both schedulers conserve lanes, pages, and
+/// connection bookkeeping — no interleaving of arrivals, sheds,
+/// hangups, and ticks leaks anything.
+#[test]
+fn random_storm_schedules_conserve_lanes_pages_and_connections() {
+    for case in 0..4u64 {
+        let sched = if case % 2 == 0 {
+            SchedulerKind::Fcfs
+        } else {
+            SchedulerKind::Continuous
+        };
+        run_random_schedule(0x5704_0000 + case, sched);
+    }
+}

@@ -363,6 +363,204 @@ fn explicit_cancel_is_idempotent() {
                "cancelled request leaked its lane: {j:?}");
 }
 
+/// Hostile client #1 (DESIGN.md §16): a slowloris writer dripping a
+/// request one fragment at a time, never finishing its line.  The
+/// event loop must keep serving everyone else while the fragments
+/// trickle in — the partial line just buffers — and when the dripper
+/// finally sends its newline, the request parses and serves normally.
+/// A dripper that hangs up mid-line costs nothing.
+#[test]
+fn slowloris_partial_lines_never_wedge_the_server() {
+    let addr = "127.0.0.1:47823";
+    let cfg = EngineConfig {
+        model: "tiny".into(),
+        backend: BackendKind::Reference,
+        world: 1,
+        batch: 1, // one lane: a wedge would starve every later client
+        ..Default::default()
+    };
+    std::thread::spawn(move || {
+        let _ = xeonserve::server::serve(cfg, addr);
+    });
+
+    let mut dripper = wait_for_port(addr);
+    let fragments: &[&[u8]] =
+        &[b"{\"prompt\"", b": \"drip\", ", b"\"max_new", b"_tokens\": 2"];
+    for frag in fragments {
+        dripper.write_all(frag).unwrap();
+        dripper.flush().unwrap();
+        // while the fragment sits unterminated, a well-behaved client
+        // must be served end to end — the slow writer holds no lock,
+        // no thread, and no lane
+        let mut fast = wait_for_port(addr);
+        let j = request_line(&mut fast,
+                             r#"{"prompt": "fast", "max_new_tokens": 2}"#);
+        assert!(j.get("error").is_none(),
+                "slowloris wedged the server: {j:?}");
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+    }
+    // the dripper completes its line: a normal, valid request
+    let j = request_line(&mut dripper, "}");
+    assert!(j.get("error").is_none(), "{j:?}");
+    assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+
+    // a second dripper abandons mid-line; the server shrugs it off
+    {
+        let mut quitter = wait_for_port(addr);
+        quitter.write_all(b"{\"prompt\": \"never finis").unwrap();
+        quitter.flush().unwrap();
+    }
+    let mut after = wait_for_port(addr);
+    let j = request_line(&mut after,
+                         r#"{"prompt": "after", "max_new_tokens": 2}"#);
+    assert!(j.get("error").is_none(), "{j:?}");
+}
+
+/// Hostile client #2 (DESIGN.md §16): a single line far past the
+/// 64 KiB bound.  The reader discards it at the bound — memory never
+/// grows with the line — answers one clean `{"error": ...}` naming
+/// the limit, and the connection keeps serving; a second oversized
+/// line behaves identically (the discard state machine resets).
+#[test]
+fn oversized_line_gets_clean_error_and_connection_survives() {
+    let addr = "127.0.0.1:47825";
+    let cfg = EngineConfig {
+        model: "tiny".into(),
+        backend: BackendKind::Reference,
+        world: 1,
+        batch: 1,
+        ..Default::default()
+    };
+    std::thread::spawn(move || {
+        let _ = xeonserve::server::serve(cfg, addr);
+    });
+
+    let mut s = wait_for_port(addr);
+    let mut reader = BufReader::new(s.try_clone().unwrap());
+    for round in 0..2 {
+        // 80 000 junk bytes, one line: crosses the 65 536-byte bound
+        let mut big = vec![b'x'; 80_000];
+        big.push(b'\n');
+        s.write_all(&big).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line)
+            .unwrap_or_else(|e| panic!("round {round}: non-JSON reply \
+                                        {line:?}: {e}"));
+        let err = j.get("error").expect("expected an error line")
+            .as_str().unwrap();
+        assert!(err.contains("exceeds") && err.contains("bytes"),
+                "round {round}: error should name the bound: {err}");
+
+        // the same connection still serves real requests
+        s.write_all(b"{\"prompt\": \"ok\", \"max_new_tokens\": 2}\n")
+            .unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert!(j.get("error").is_none(), "round {round}: {j:?}");
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+    }
+}
+
+/// Hostile client #3 (DESIGN.md §16): stats probes and cancels —
+/// valid, unknown, and repeated — hammered from a control connection
+/// while a storm of streams is in flight.  Every probe answers one
+/// clean JSON line of the right shape, every stream still finishes
+/// bit-normally, and a mid-storm cancel of a live stream lands.
+#[test]
+fn interleaved_stats_and_cancel_during_a_storm_stay_clean() {
+    let addr = "127.0.0.1:47827";
+    let cfg = EngineConfig {
+        model: "tiny".into(),
+        backend: BackendKind::Reference,
+        world: 1,
+        batch: 2,
+        ..Default::default()
+    };
+    std::thread::spawn(move || {
+        let _ = xeonserve::server::serve(cfg, addr);
+    });
+    wait_for_port(addr);
+
+    // the storm: 6 streaming clients decode concurrently
+    let streams: Vec<_> = (0..6)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut s = wait_for_port("127.0.0.1:47827");
+                s.write_all(format!(
+                    "{{\"prompt\": \"storm {i}\", \"max_new_tokens\": 6, \
+                     \"stream\": true}}\n").as_bytes()).unwrap();
+                let mut reader = BufReader::new(s.try_clone().unwrap());
+                let mut tokens = 0usize;
+                loop {
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                    let j = Json::parse(&line).unwrap_or_else(
+                        |e| panic!("client {i}: bad frame {line:?}: {e}"));
+                    assert!(j.get("error").is_none(),
+                            "client {i}: {line}");
+                    if j.get("done").is_some() {
+                        break;
+                    }
+                    tokens += 1;
+                }
+                tokens
+            })
+        })
+        .collect();
+
+    // the hostile control connection: stats and junk cancels, rapid
+    // fire, while the storm decodes
+    let mut ctl = wait_for_port(addr);
+    for i in 0..20 {
+        let j = request_line(&mut ctl, r#"{"stats": true}"#);
+        let stats = j.get("stats")
+            .unwrap_or_else(|| panic!("probe {i}: not a stats reply: \
+                                       {j:?}"));
+        assert!(stats.get("free_lanes").unwrap().as_u64().is_some());
+        assert!(stats.get("frames_sent").unwrap().as_u64().is_some(),
+                "stats must carry the serving counters: {j:?}");
+        // a cancel of a never-issued id: clean error, never a wedge
+        let j = request_line(&mut ctl, r#"{"cancel": 999999}"#);
+        let err = j.get("error").expect("junk cancel must error")
+            .as_str().unwrap();
+        assert!(err.contains("cancel"), "{err}");
+    }
+
+    // every stream survived the probe barrage
+    for (i, h) in streams.into_iter().enumerate() {
+        let tokens = h.join().unwrap();
+        assert!((1..=6).contains(&tokens),
+                "client {i}: {tokens} token frames");
+    }
+
+    // a cancel aimed at a live stream still lands mid-storm: start
+    // one more long stream, cancel it by id from the control conn
+    let mut v = wait_for_port(addr);
+    v.write_all(b"{\"prompt\": \"victim\", \"max_new_tokens\": 48, \
+                   \"stream\": true}\n").unwrap();
+    let mut v_reader = BufReader::new(v.try_clone().unwrap());
+    let mut line = String::new();
+    v_reader.read_line(&mut line).unwrap();
+    let id = Json::parse(&line).unwrap().get("id").unwrap()
+        .as_u64().unwrap();
+    let j = request_line(&mut ctl, &format!("{{\"cancel\": {id}}}"));
+    assert_eq!(j.get("cancelled").and_then(Json::as_u64), Some(id));
+    loop {
+        let mut line = String::new();
+        v_reader.read_line(&mut line).unwrap();
+        let j = Json::parse(&line).unwrap();
+        assert!(j.get("done").is_none(),
+                "cancelled stream must not complete");
+        if j.get("error").is_some() {
+            assert_eq!(j.get("error").and_then(Json::as_str),
+                       Some("cancelled"));
+            break;
+        }
+    }
+}
+
 /// Artifact-gated variant: the same round-trip on the PJRT backend.
 #[cfg(feature = "xla")]
 mod xla_artifacts {
