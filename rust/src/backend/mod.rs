@@ -193,6 +193,31 @@ pub trait ExecBackend {
         anyhow::bail!("this backend does not support KV truncation")
     }
 
+    /// Serialize lane `lane`'s first `len` KV rows (every layer, every
+    /// local head) as this rank's opaque shard of the lane image —
+    /// layer-major `[layer][local_head][pos]` rows in
+    /// `kvcache::KvLayer::export_row` format (DESIGN.md §17).  Rows an
+    /// attached lane reads from a shared segment are exported from the
+    /// segment, so the shard is always the lane's *logical* cache
+    /// content.  Default: unsupported — elastic recovery is only wired
+    /// to backends that override the snapshot hooks.
+    fn snapshot_lane(&mut self, lane: usize, len: usize)
+                     -> Result<Vec<u8>> {
+        let _ = (lane, len);
+        anyhow::bail!("this backend does not support KV snapshots")
+    }
+
+    /// Import a shard previously produced by
+    /// [`ExecBackend::snapshot_lane`] (re-split for this world size),
+    /// making lane `lane` hold `len` valid *private* rows — any shared
+    /// attachment is cleared first, since segment ids do not survive a
+    /// reshard.
+    fn restore_lane(&mut self, lane: usize, len: usize, bytes: &[u8])
+                    -> Result<()> {
+        let _ = (lane, len, bytes);
+        anyhow::bail!("this backend does not support KV snapshots")
+    }
+
     /// Resident weight/KV bytes of this rank's state.  Default: zeros,
     /// meaning "not measured" (the XLA backend's buffers live on the
     /// PJRT device and are not tracked host-side).

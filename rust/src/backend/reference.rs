@@ -89,7 +89,7 @@ use std::collections::HashMap;
 use anyhow::{bail, ensure, Result};
 
 use crate::config::{Dtype, EngineConfig, GemmKernel, ModelPreset, Variant, WeightSource};
-use crate::kvcache::KvLayer;
+use crate::kvcache::{row_bytes, KvLayer};
 use crate::model::{synth_quant_shard, synth_shard, tensor_seed};
 
 use super::pool::{auto_threads, DisjointSlices, FirstError, WorkerPool};
@@ -1522,6 +1522,87 @@ impl ExecBackend for ReferenceBackend {
         for cache in &mut self.caches {
             for kh in 0..n_kv {
                 for t in new_len..t_max {
+                    cache.zero_row((lane * n_kv + kh) * t_max + t, hd);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn snapshot_lane(&mut self, lane: usize, len: usize)
+                     -> Result<Vec<u8>> {
+        let t_max = self.preset.max_seq;
+        let hd = self.preset.head_dim;
+        let n_kv = self.n_kv_heads_l;
+        ensure!(lane < self.batch,
+                "snapshot_lane lane {lane} out of range (batch {})",
+                self.batch);
+        ensure!(len >= 1 && len <= t_max,
+                "snapshot_lane len {len} out of range (max_seq {t_max})");
+        // the lane's *logical* prefix: rows below an attachment's
+        // shared_len live in the segment, everything else is private —
+        // exporting resolves the indirection so the shard restores as
+        // plain private rows on any future fleet
+        let seg = match self.attach[lane] {
+            Some((seg, slen)) => {
+                let g = self.shared_segs.get(&seg).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "snapshot_lane: lane {lane} attached to unknown \
+                         shared segment {seg}")
+                })?;
+                Some((g, slen))
+            }
+            None => None,
+        };
+        let mut out = Vec::with_capacity(
+            self.caches.len() * n_kv * len
+                * row_bytes(self.caches[0].dtype(), hd));
+        for (li, cache) in self.caches.iter().enumerate() {
+            for kh in 0..n_kv {
+                for t in 0..len {
+                    match seg {
+                        Some((g, slen)) if t < slen => g.layers[li]
+                            .export_row(kh * g.len + t, hd, &mut out),
+                        _ => cache.export_row(
+                            (lane * n_kv + kh) * t_max + t, hd, &mut out),
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn restore_lane(&mut self, lane: usize, len: usize, bytes: &[u8])
+                    -> Result<()> {
+        let t_max = self.preset.max_seq;
+        let hd = self.preset.head_dim;
+        let n_kv = self.n_kv_heads_l;
+        ensure!(lane < self.batch,
+                "restore_lane lane {lane} out of range (batch {})",
+                self.batch);
+        ensure!(len >= 1 && len <= t_max,
+                "restore_lane len {len} out of range (max_seq {t_max})");
+        let rb = row_bytes(self.caches[0].dtype(), hd);
+        let expect = self.caches.len() * n_kv * len * rb;
+        ensure!(bytes.len() == expect,
+                "restore_lane({lane}) shard is {} bytes, expected \
+                 {expect} ({} layers × {n_kv} heads × {len} rows)",
+                bytes.len(), self.caches.len());
+        // restored rows are fully private — segment ids don't survive
+        // a reshard, so any stale attachment is cleared first
+        self.attach[lane] = None;
+        let mut off = 0;
+        for cache in &mut self.caches {
+            for kh in 0..n_kv {
+                for t in 0..len {
+                    cache.import_row(
+                        (lane * n_kv + kh) * t_max + t, hd,
+                        &bytes[off..off + rb])?;
+                    off += rb;
+                }
+                // scrub the tail so the lane is bit-identical to one
+                // that only ever appended `len` rows
+                for t in len..t_max {
                     cache.zero_row((lane * n_kv + kh) * t_max + t, hd);
                 }
             }

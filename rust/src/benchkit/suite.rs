@@ -29,7 +29,8 @@ use crate::benchkit::CaseResult;
 use crate::ccl::StatsSnapshot;
 use crate::config::{BackendKind, Dtype, EngineConfig, GemmKernel,
                     IsaKind, SchedulerKind};
-use crate::engine::Engine;
+use crate::engine::elastic::{ChaosFactory, ElasticEngine};
+use crate::engine::{Completion, Engine};
 use crate::server::conn::OutQ;
 use crate::server::Front;
 use crate::util::Json;
@@ -231,6 +232,14 @@ pub struct ScenarioRecord {
     /// p99 outbound-frame queue residence, µs (DESIGN.md §16) — 0 on
     /// engine-direct scenarios
     pub frame_p99_us: u64,
+    /// rank-failure recoveries the run absorbed (DESIGN.md §17) —
+    /// non-zero only on `failover` rows, which sever one rank
+    /// mid-decode on purpose
+    pub recoveries: u64,
+    /// wall-clock stall of the most recent fleet rebuild, ms — the
+    /// gap a streaming client rode out while survivors re-sharded and
+    /// in-flight lanes replayed (0 when nothing was recovered)
+    pub recovery_stall_ms: u64,
     /// ccl counters accumulated over the run
     pub comm: StatsSnapshot,
 }
@@ -273,6 +282,9 @@ impl ScenarioRecord {
         put("requests_done", Json::Num(self.requests_done as f64));
         put("shed_rate", Json::Num(self.shed_rate));
         put("frame_p99_us", Json::Num(self.frame_p99_us as f64));
+        put("recoveries", Json::Num(self.recoveries as f64));
+        put("recovery_stall_ms",
+            Json::Num(self.recovery_stall_ms as f64));
         let c = &self.comm;
         let mut comm = BTreeMap::new();
         for (k, v) in [
@@ -460,6 +472,8 @@ fn finish_record(name: &str, cfg: &EngineConfig, engine: &mut Engine,
         requests_done: m.requests_done,
         shed_rate,
         frame_p99_us,
+        recoveries: 0,
+        recovery_stall_ms: 0,
         comm,
     })
 }
@@ -569,6 +583,86 @@ pub fn run_storm(cfg: &EngineConfig, quick: bool)
     let frame_p99_us = front.stats.frame_lat.p99_us();
     finish_record("connection_storm", &cfg, front.engine_mut(), span,
                   &before, cfg.batch, clients, shed_rate, frame_p99_us)
+}
+
+/// Chaos fuse of the `failover` row: control commands delivered to
+/// the victim rank before it "dies".  Deep enough that the blow lands
+/// mid-decode (after the opening prefill wave has filled the lanes),
+/// shallow enough that every workload size reaches it.
+pub const FAILOVER_FUSE: usize = 9;
+
+/// The `failover` elastic-serving scenario (DESIGN.md §17): the
+/// batched decode workload with one rank host wrapped in a chaos fuse
+/// that severs it mid-decode.  The [`ElasticEngine`] must absorb the
+/// loss — tear the fleet down, bring up replacement ranks, re-shard
+/// the weights, replay every in-flight lane — and the row records
+/// `recovery_stall_ms`, the gap a streaming client rode out.  The
+/// recovered streams are pinned bit-identical to an undisturbed
+/// plain-engine run of the same workload, and the run fails loudly if
+/// the fuse never blew or any token was lost.
+pub fn run_failover(cfg: &EngineConfig, quick: bool)
+                    -> Result<ScenarioRecord> {
+    let mut cfg = cfg.clone();
+    cfg.batch = 4;
+    cfg.validate()?;
+    let requests: usize = if quick { 6 } else { 16 };
+    let new_tokens: usize = if quick { 8 } else { 32 };
+    let prompt = |i: usize| -> Vec<i32> {
+        (0..8).map(|t| ((t * 13 + i * 7) % 200) as i32 + 1).collect()
+    };
+
+    // undisturbed reference run: the recovered streams must match
+    // this bit for bit (greedy decode — DESIGN.md §17)
+    let mut plain = Engine::new(cfg.clone())
+        .with_context(|| format!("bringing up failover reference w{}",
+                                 cfg.world))?;
+    for i in 0..requests {
+        plain.enqueue(prompt(i), new_tokens);
+    }
+    let mut expected: Vec<Completion> = plain.run_to_completion()?;
+    expected.sort_by_key(|c| c.request_id);
+    drop(plain);
+
+    let factory = ChaosFactory {
+        victim: cfg.world.saturating_sub(1),
+        fuse: FAILOVER_FUSE,
+        kills: 1,
+    };
+    let mut eng = ElasticEngine::new(cfg.clone(), Box::new(factory))
+        .with_context(|| format!("bringing up failover w{}",
+                                 cfg.world))?;
+    for i in 0..requests {
+        eng.enqueue(prompt(i), new_tokens);
+    }
+    let t0 = Instant::now();
+    let mut done = eng.run_to_completion()?;
+    let span = t0.elapsed();
+    done.sort_by_key(|c| c.request_id);
+
+    anyhow::ensure!(eng.recoveries() >= 1,
+                    "failover fuse never blew: the workload finished \
+                     in under {FAILOVER_FUSE} victim commands");
+    anyhow::ensure!(eng.tokens_lost() == 0,
+                    "failover lost {} tokens across recovery",
+                    eng.tokens_lost());
+    anyhow::ensure!(
+        done.len() == expected.len()
+            && done.iter().zip(&expected).all(
+                |(d, e)| d.request_id == e.request_id
+                    && d.tokens == e.tokens),
+        "failover streams diverged from the undisturbed run");
+
+    let recoveries = eng.recoveries();
+    let stall = eng.last_recovery_stall_ms();
+    // the rebuilt fleet's counters restart from zero, so the delta
+    // base is the zero snapshot — `since` against a pre-kill baseline
+    // from the discarded fleet would underflow
+    let before = StatsSnapshot::default();
+    let mut rec = finish_record("failover", &cfg, &mut eng, span,
+                                &before, cfg.batch, requests, 0.0, 0)?;
+    rec.recoveries = recoveries;
+    rec.recovery_stall_ms = stall;
+    Ok(rec)
 }
 
 /// Sweep the scenario suite over `worlds`, recording every scenario on
@@ -751,6 +845,27 @@ pub fn run_matrix(base: &EngineConfig, worlds: &[usize], quick: bool,
                     st.threads));
                 out.push(run_storm(&st, quick)?);
             }
+        }
+        // the §17 elastic row: the batched workload with a chaos fuse
+        // severing one rank mid-decode — records the recovery stall
+        // and pins zero lost tokens against an undisturbed reference
+        // run (reference backend only, like the other serving rows)
+        if base.backend == BackendKind::Reference {
+            let mut fo = base.clone();
+            fo.world = world;
+            fo.kernel = GemmKernel::Blocked;
+            fo.weight_dtype = Dtype::F32;
+            fo.kv_dtype = Dtype::F32;
+            fo.prefill_chunk = 0;
+            fo.scheduler = SchedulerKind::Fcfs;
+            fo.threads = if base.threads == 0 {
+                2
+            } else {
+                auto_threads(base.threads, world).max(2)
+            };
+            progress(&format!("failover w{world} blocked x{} f32",
+                              fo.threads));
+            out.push(run_failover(&fo, quick)?);
         }
     }
     Ok(out)
@@ -950,6 +1065,34 @@ pub fn conn_storm_row(j: &Json, world: usize, scheduler: &str)
     })
 }
 
+/// `(recoveries, recovery_stall_ms, tokens_per_s)` of the first
+/// `failover` row at `world`, pinned to the threaded blocked f32 rows
+/// like the other accessors — the DESIGN.md §17 elastic gate reads
+/// the recorded kill-and-recover (`None` if the row is missing).
+pub fn failover_row(j: &Json, world: usize)
+                    -> Option<(u64, u64, f64)> {
+    let rows = j.get("scenarios")?.as_arr()?;
+    rows.iter().find_map(|r| {
+        let name = r.get("name")?.as_str()?;
+        let w = r.get("world")?.as_usize()?;
+        let kernel = r.get("kernel")?.as_str()?;
+        let threads = r.get("threads")?.as_usize()?;
+        let wd = r.get("weight_dtype").and_then(Json::as_str)
+            .unwrap_or("f32");
+        let kd = r.get("kv_dtype").and_then(Json::as_str)
+            .unwrap_or("f32");
+        if name == "failover" && w == world && kernel == "blocked"
+            && threads >= 2 && wd == "f32" && kd == "f32"
+        {
+            Some((r.get("recoveries")?.as_u64()?,
+                  r.get("recovery_stall_ms")?.as_u64()?,
+                  r.get("tokens_per_s")?.as_f64()?))
+        } else {
+            None
+        }
+    })
+}
+
 /// `(ms_per_token, tokens_per_s, accept_rate)` of the first
 /// `speculative_decode` row at `world` with speculation on (`spec_k >
 /// 0`) or off (`spec_k == 0`), pinned to the threaded blocked f32
@@ -994,8 +1137,10 @@ pub fn spec_row(j: &Json, world: usize, speculating: bool)
 /// int8-vs-f32 batched-decode pair, the whole-vs-chunked
 /// `long_prompt_interactive` pair, the fcfs-vs-continuous
 /// `shared_prefix_storm` pair, the spec-off-vs-spec-on
-/// `speculative_decode` pair (§15), and the fcfs-vs-continuous
-/// `connection_storm` pair (§16) the acceptance gates read, and ≥ 2
+/// `speculative_decode` pair (§15), the fcfs-vs-continuous
+/// `connection_storm` pair (§16), and the `failover` kill-and-recover
+/// row with its `recoveries`/`recovery_stall_ms` fields (§17) the
+/// acceptance gates read, and ≥ 2
 /// distinct `isa` tiers among the `batched_decode` rows (§14) — so a
 /// `--worlds 2` recording validates against its own sweep, while the
 /// committed full recordings must actually contain what they claim.
@@ -1050,6 +1195,7 @@ pub fn validate_bench(j: &Json) -> Result<()> {
     let mut cstorm_continuous = false;
     let mut spec_off = false;
     let mut spec_on = false;
+    let mut failover_recovered = false;
     let mut any_reference = false;
     let mut batched_isas = std::collections::BTreeSet::new();
     for (i, r) in rows.iter().enumerate() {
@@ -1196,6 +1342,31 @@ pub fn validate_bench(j: &Json) -> Result<()> {
                    (spec_k = 0) cannot have accept_rate = {acc}",
                   ctx());
         }
+        // every row must say how many rank failures it absorbed and
+        // the worst stall a recovery imposed (§17) — 0/0 everywhere
+        // except the failover rows, which sever a rank on purpose
+        let mut recovery = [0.0f64; 2];
+        for (slot, key) in recovery.iter_mut()
+            .zip(["recoveries", "recovery_stall_ms"])
+        {
+            let v = r.get(key).and_then(Json::as_f64).with_context(
+                || format!("rule row-recovery: {} ({name}): missing \
+                            numeric field {key:?}", ctx()))?;
+            if !v.is_finite() || v < 0.0 || v.fract() != 0.0 {
+                bail!("rule row-recovery: {} ({name}): {key} = {v} \
+                       must be a non-negative integer", ctx());
+            }
+            *slot = v;
+        }
+        if recovery[0] == 0.0 && recovery[1] != 0.0 {
+            bail!("rule row-recovery: {} ({name}): recovery_stall_ms \
+                   = {} on a row that absorbed zero recoveries",
+                  ctx(), recovery[1]);
+        }
+        if name == "failover" && recovery[0] == 0.0 {
+            bail!("rule row-recovery: {} ({name}): a failover row \
+                   must absorb at least one recovery", ctx());
+        }
         let world = r.get("world").and_then(Json::as_usize).unwrap();
         let threads = r.get("threads").and_then(Json::as_usize).unwrap();
         names.insert(name.to_string());
@@ -1233,6 +1404,7 @@ pub fn validate_bench(j: &Json) -> Result<()> {
             spec_off |= spec_k == 0.0;
             spec_on |= spec_k > 0.0;
         }
+        failover_recovered |= name == "failover" && recovery[0] >= 1.0;
     }
     if names.len() < 4 {
         bail!("rule coverage-scenarios: only {} distinct scenarios, \
@@ -1297,6 +1469,15 @@ pub fn validate_bench(j: &Json) -> Result<()> {
                pair (need a scheduler = \"fcfs\" row AND a \
                \"continuous\" row on reference-backend recordings — \
                DESIGN.md §16)");
+    }
+    // the DESIGN.md §17 elastic gate: reference recordings must carry
+    // a failover row that actually absorbed a kill, so the recorded
+    // recovery_stall_ms always measures a real fleet rebuild
+    if any_reference && !failover_recovered {
+        bail!("rule failover-coverage: no failover row with \
+               recoveries >= 1 (the DESIGN.md §17 elastic gate needs \
+               a recorded kill-and-recover on reference-backend \
+               recordings)");
     }
     // the DESIGN.md §14 ISA gate: reference recordings must compare
     // at least two instruction tiers on batched_decode — every host
@@ -1440,6 +1621,25 @@ mod tests {
     }
 
     #[test]
+    fn failover_scenario_recovers_bit_identically() {
+        let mut cfg = tiny_cfg();
+        cfg.world = 2;
+        cfg.threads = 2;
+        // run_failover pins the recovered streams against an
+        // undisturbed plain-engine run internally; reaching Ok means
+        // the fuse blew, the fleet rebuilt, and the streams matched
+        let rec = run_failover(&cfg, true).unwrap();
+        assert_eq!(rec.name, "failover");
+        assert!(rec.recoveries >= 1);
+        assert_eq!(rec.requests_done as usize, rec.requests);
+        let j = Json::parse(&rec.to_json().to_string()).unwrap();
+        assert!(j.get("recoveries").and_then(Json::as_u64).unwrap()
+                    >= 1);
+        assert!(j.get("recovery_stall_ms").and_then(Json::as_u64)
+                    .is_some());
+    }
+
+    #[test]
     fn matrix_document_passes_validation() {
         // a forced ISA pins every row to one tier, so the matrix
         // can't cover the §14 comparison it normally records
@@ -1507,6 +1707,15 @@ mod tests {
                     .filter(|r| r.name != "connection_storm")
                     .all(|r| r.shed_rate == 0.0
                         && r.frame_p99_us == 0));
+        // the §17 elastic row is recorded: the chaos fuse blew, the
+        // fleet rebuilt, and the stall was measured
+        let fo = failover_row(&parsed, 1).unwrap();
+        assert!(fo.0 >= 1, "failover row absorbed no recovery");
+        assert!(recs.iter()
+                    .filter(|r| r.name != "failover")
+                    .all(|r| r.recoveries == 0
+                        && r.recovery_stall_ms == 0),
+                "only failover rows may record recoveries");
         let off = spec_row(&parsed, 1, false).unwrap();
         let on = spec_row(&parsed, 1, true).unwrap();
         assert_eq!(off.2, 0.0, "spec-off rows cannot accept drafts");
@@ -1537,7 +1746,8 @@ mod tests {
                       "kv_bytes", "backend", "prefill_chunk",
                       "decode_stall_p99_us", "scheduler",
                       "prefix_hit_rate", "isa", "spec_k",
-                      "accept_rate", "shed_rate", "frame_p99_us"] {
+                      "accept_rate", "shed_rate", "frame_p99_us",
+                      "recoveries", "recovery_stall_ms"] {
             let crippled =
                 text.replace(&format!("\"{field}\""),
                              &format!("\"x_{field}\""));
@@ -1604,6 +1814,8 @@ mod tests {
             ("rule row-prefix-hit-rate:",
              "\"prefix_hit_rate\"", "\"x_prefix_hit_rate\""),
             ("rule row-shed-rate:", "\"shed_rate\"", "\"x_shed_rate\""),
+            ("rule row-recovery:",
+             "\"recovery_stall_ms\"", "\"x_recovery_stall_ms\""),
         ] {
             let parsed = Json::parse(&text.replace(from, to)).unwrap();
             let e = err_of(&parsed);
@@ -1636,6 +1848,20 @@ mod tests {
         bad[0].spec_k = 0;
         bad[0].accept_rate = 0.5;
         assert!(err_of(&doc(&bad, &[1])).contains("rule spec-fields:"));
+
+        // recovery-field value corruptions: a stall on a row that
+        // recovered nothing, and a failover row that never recovered
+        let mut bad = recs.clone();
+        bad[0].recovery_stall_ms = 250;
+        assert!(err_of(&doc(&bad, &[1])).contains("rule row-recovery:"));
+        let mut bad = recs.clone();
+        for r in &mut bad {
+            if r.name == "failover" {
+                r.recoveries = 0;
+                r.recovery_stall_ms = 0;
+            }
+        }
+        assert!(err_of(&doc(&bad, &[1])).contains("rule row-recovery:"));
 
         // every batched_decode row on the same tier: each row is
         // individually fine, but the §14 comparison is gone
@@ -1684,6 +1910,8 @@ mod tests {
             ("rule storm-pair:",
              without(&|r| r.name == "connection_storm"
                  && r.scheduler == SchedulerKind::Continuous)),
+            ("rule failover-coverage:",
+             without(&|r| r.name == "failover")),
         ] {
             let e = err_of(&doc(&gone, &[1]));
             assert!(e.contains(rule), "expected {rule:?} in {e:?}");

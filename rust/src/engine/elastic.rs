@@ -1,0 +1,713 @@
+//! Elastic worlds (DESIGN.md §17): make a dead worker a non-event.
+//!
+//! [`ElasticEngine`] wraps an [`Engine`] and turns the two fatal
+//! conditions of the fixed-world design into recoverable stalls:
+//!
+//! * **unplanned rank failure** — a worker process dies (heartbeat
+//!   loss, socket reset, thread panic).  The engine's step errors out;
+//!   instead of propagating, the wrapper quiesces, drops the broken
+//!   fleet, asks its [`HostFactory`] for a fresh one at the same world
+//!   size, re-shards weights from the world-invariant quantization
+//!   grid (that happens for free: every rank re-materializes its shard
+//!   from the full-tensor grid, DESIGN.md §11), and *replays* every
+//!   in-flight request — prompt plus everything already emitted —
+//!   through prefill.  Chunk-invariance (§12) makes the replayed KV
+//!   and every subsequent token bit-identical to the uninterrupted
+//!   run, so the client sees a stall, never an error and never a
+//!   changed or repeated token.
+//! * **planned resharding** — [`ElasticEngine::resize`] drives the
+//!   same quiesce → rebuild → restore path deliberately, to a
+//!   *different* world size.  Because a dead rank can't be asked for
+//!   its KV shard but live ranks can, the planned path short-circuits
+//!   the replay: each decode lane's KV is serialized shard-by-shard
+//!   ([`Engine::snapshot_lane_image`]), merged into a world-invariant
+//!   image, re-split for the new world, and loaded back — only the
+//!   pending token's row re-runs through the model.
+//!
+//! Both paths preserve the serving invariants the failover tests pin:
+//! zero tokens lost, zero tokens repeated, lane/page accounting
+//! conserved, and post-recovery greedy output bit-identical to a fresh
+//! launch at the same (new) world size.
+//!
+//! The wrapper [`Deref`]s to [`Engine`], so drivers (server front,
+//! bench harness) keep their existing probe surface; only `step` /
+//! `run_to_completion` / `generate` are shadowed with the recovering
+//! flavors.
+
+use std::collections::HashMap;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::ccl::CommStats;
+use crate::config::EngineConfig;
+use crate::metrics::RunMetrics;
+
+use super::proto::{Cmd, Reply};
+use super::{spawn_inproc_fleet, Completion, Engine, RankHost,
+            RestorableReq};
+
+/// How many rank failures an [`ElasticEngine`] absorbs before it gives
+/// up and propagates the error — a circuit breaker against a fleet
+/// that dies faster than it recovers.
+pub const DEFAULT_MAX_RECOVERIES: usize = 8;
+
+/// Everything a freshly built rank fleet hands the leader: one host
+/// per rank (rank order), the funnel the workers' replies arrive on,
+/// a clone of its sending side (for reply-stream instrumentation like
+/// [`ChaosHost`]), and the comm-stats handle.
+pub struct Fleet {
+    /// rank hosts, index == rank
+    pub hosts: Vec<Box<dyn RankHost>>,
+    /// the leader's reply funnel
+    pub reply_rx: Receiver<Reply>,
+    /// sending side of `reply_rx` — lets wrappers inject replies
+    pub reply_tx: Sender<Reply>,
+    /// collective-traffic counters shared with the transport
+    pub stats: std::sync::Arc<CommStats>,
+}
+
+/// Builds rank fleets on demand.  The elastic wrapper calls this once
+/// at startup and once per recovery/reshard; implementations decide
+/// where workers live (in-process threads, re-admitted remote
+/// processes, a chaos-wrapped testbed).
+pub trait HostFactory: Send {
+    /// Bring up one worker per `cfg.world` rank and return the wired
+    /// fleet.  Called with a validated config; blocking until the
+    /// workers can accept commands is the implementation's business
+    /// (readiness replies are collected by the engine).
+    fn build(&mut self, cfg: &EngineConfig) -> Result<Fleet>;
+}
+
+/// The default factory: in-process rank threads, exactly what
+/// [`Engine::new`] spawns.
+pub struct InprocFactory;
+
+impl HostFactory for InprocFactory {
+    fn build(&mut self, cfg: &EngineConfig) -> Result<Fleet> {
+        cfg.validate()?;
+        let rm = cfg.resolve_model()?;
+        spawn_inproc_fleet(cfg, &rm)
+    }
+}
+
+/// A [`RankHost`] wrapper that simulates a worker death without
+/// actually wedging one (test/bench utility).
+///
+/// Commands are always delivered, so the underlying worker stays in
+/// collective lockstep with its peers and the whole fleet tears down
+/// cleanly when the leader drops it.  After `fuse` delivered commands,
+/// the wrapper injects a single `worker rank N lost` error into the
+/// reply stream — byte-for-byte the frame the launch runtime's reader
+/// thread emits when a real worker's socket dies — and the leader's
+/// next reply collection trips elastic recovery.
+pub struct ChaosHost {
+    inner: Box<dyn RankHost>,
+    reply_tx: Sender<Reply>,
+    fuse: AtomicUsize,
+    blown: AtomicBool,
+}
+
+impl ChaosHost {
+    /// Wrap `inner`, blowing after `fuse` delivered commands.
+    pub fn new(inner: Box<dyn RankHost>, reply_tx: Sender<Reply>,
+               fuse: usize) -> ChaosHost {
+        ChaosHost {
+            inner,
+            reply_tx,
+            fuse: AtomicUsize::new(fuse),
+            blown: AtomicBool::new(false),
+        }
+    }
+}
+
+impl RankHost for ChaosHost {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn send(&self, cmd: Cmd) -> Result<()> {
+        self.inner.send(cmd)?;
+        let exhausted = self
+            .fuse
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| {
+                n.checked_sub(1)
+            })
+            .is_err();
+        if exhausted && !self.blown.swap(true, Ordering::Relaxed) {
+            let rank = self.inner.rank();
+            // ignore a closed funnel: the engine may already be gone
+            let _ = self.reply_tx.send(Reply::Error {
+                rank,
+                message: format!("worker rank {rank} lost: chaos fuse \
+                                  blown"),
+            });
+        }
+        Ok(())
+    }
+
+    fn shutdown(&mut self) {
+        self.inner.shutdown()
+    }
+}
+
+/// An [`InprocFactory`] that sabotages the first `kills` fleets it
+/// builds by chaos-wrapping one rank (failover tests and the
+/// `failover` bench scenario).  Fleets built after the budget is spent
+/// are healthy, so recovery converges.
+pub struct ChaosFactory {
+    /// rank to wrap (clamped into the world)
+    pub victim: usize,
+    /// commands delivered before the wrapped rank "dies"
+    pub fuse: usize,
+    /// fleets left to sabotage
+    pub kills: usize,
+}
+
+impl HostFactory for ChaosFactory {
+    fn build(&mut self, cfg: &EngineConfig) -> Result<Fleet> {
+        cfg.validate()?;
+        let rm = cfg.resolve_model()?;
+        let mut fleet = spawn_inproc_fleet(cfg, &rm)?;
+        if self.kills > 0 {
+            self.kills -= 1;
+            let victim = self.victim.min(cfg.world - 1);
+            let reply_tx = fleet.reply_tx.clone();
+            let fuse = self.fuse;
+            fleet.hosts = fleet
+                .hosts
+                .into_iter()
+                .map(|h| -> Box<dyn RankHost> {
+                    if h.rank() == victim {
+                        Box::new(ChaosHost::new(h, reply_tx.clone(),
+                                                fuse))
+                    } else {
+                        h
+                    }
+                })
+                .collect();
+        }
+        Ok(fleet)
+    }
+}
+
+/// State lifted out of a quiesced engine, ready to restore into a
+/// fresh one.
+struct SavedState {
+    /// in-flight requests in replay form, oldest first
+    actives: Vec<RestorableReq>,
+    /// queued-but-unadmitted requests, arrival order
+    pending: Vec<(u64, Vec<i32>, usize)>,
+    next_id: u64,
+    metrics: RunMetrics,
+    /// the streaming feed of the step that died — already-sampled
+    /// tokens the server has not drained yet (they are committed bits:
+    /// sampling only ever runs on fully collected rounds)
+    emitted: Vec<(u64, i32)>,
+}
+
+/// A self-healing engine: [`Engine`] plus the recover/reshard state
+/// machine.  See the module docs for the full story.
+pub struct ElasticEngine {
+    /// `None` only transiently inside a rebuild, or permanently after
+    /// an unrecoverable failure (every entry point errors out first)
+    engine: Option<Engine>,
+    factory: Box<dyn HostFactory>,
+    max_recoveries: usize,
+    recoveries: u64,
+    resizes: u64,
+    last_stall_ms: u64,
+    tokens_lost: u64,
+}
+
+impl ElasticEngine {
+    /// Build over `factory`'s first fleet.
+    pub fn new(cfg: EngineConfig, mut factory: Box<dyn HostFactory>)
+               -> Result<ElasticEngine> {
+        cfg.validate()?;
+        let fleet = factory.build(&cfg)?;
+        let engine = Engine::from_rank_hosts(cfg, fleet.hosts,
+                                             fleet.reply_rx, fleet.stats)?;
+        Ok(ElasticEngine {
+            engine: Some(engine),
+            factory,
+            max_recoveries: DEFAULT_MAX_RECOVERIES,
+            recoveries: 0,
+            resizes: 0,
+            last_stall_ms: 0,
+            tokens_lost: 0,
+        })
+    }
+
+    /// Build over in-process rank threads (the elastic twin of
+    /// [`Engine::new`]).
+    pub fn new_inproc(cfg: EngineConfig) -> Result<ElasticEngine> {
+        Self::new(cfg, Box::new(InprocFactory))
+    }
+
+    /// Wrap an engine that already exists; `factory` supplies the
+    /// *replacement* fleets when this one fails or reshards.  This is
+    /// how the server front adopts an engine built elsewhere — the
+    /// launch coordinator hands it a fleet of remote workers plus a
+    /// `RelaunchFactory`, hermetic drivers pair [`Engine::new`] with
+    /// [`InprocFactory`].
+    pub fn from_engine(engine: Engine, factory: Box<dyn HostFactory>)
+                       -> ElasticEngine {
+        ElasticEngine {
+            engine: Some(engine),
+            factory,
+            max_recoveries: DEFAULT_MAX_RECOVERIES,
+            recoveries: 0,
+            resizes: 0,
+            last_stall_ms: 0,
+            tokens_lost: 0,
+        }
+    }
+
+    /// Rank failures absorbed so far.
+    pub fn recoveries(&self) -> u64 {
+        self.recoveries
+    }
+
+    /// Planned reshards completed so far.
+    pub fn resizes(&self) -> u64 {
+        self.resizes
+    }
+
+    /// Wall-clock stall of the most recent recovery or reshard, in
+    /// milliseconds — the figure the `failover` bench scenario reports
+    /// as `recovery_stall_ms`.
+    pub fn last_recovery_stall_ms(&self) -> u64 {
+        self.last_stall_ms
+    }
+
+    /// Tokens dropped across all recoveries.  Zero by construction —
+    /// emitted tokens ride the replay and the carried streaming feed —
+    /// and pinned at zero by the failover tests; the counter exists so
+    /// the stats surface states the invariant instead of implying it.
+    pub fn tokens_lost(&self) -> u64 {
+        self.tokens_lost
+    }
+
+    fn engine_mut(&mut self) -> Result<&mut Engine> {
+        self.engine
+            .as_mut()
+            .context("engine lost and not rebuilt (previous recovery \
+                      failed)")
+    }
+
+    /// Does this error mean "a rank is gone" (recoverable by fleet
+    /// replacement) as opposed to a genuine compute/config error
+    /// (propagate)?  Matches the three shapes every transport produces:
+    /// the launch reader thread's `worker rank N lost: ...` frame, a
+    /// closed reply funnel, and a send to a departed host.
+    fn is_rank_failure(e: &anyhow::Error) -> bool {
+        let s = format!("{e:#}");
+        s.contains("lost:")
+            || s.contains("rank worker died")
+            || s.contains("rank host unreachable")
+            || s.contains("thread gone")
+    }
+
+    /// One scheduler iteration with failure absorption: a rank-failure
+    /// error quiesces and rebuilds instead of propagating.  The failed
+    /// step's already-sampled tokens survive in the streaming feed
+    /// ([`Engine::take_new_tokens`]); completions resume on the next
+    /// step.
+    pub fn step(&mut self) -> Result<Vec<Completion>> {
+        match self.engine_mut()?.step() {
+            Ok(done) => Ok(done),
+            Err(e) if Self::is_rank_failure(&e) => {
+                self.recover(e)?;
+                Ok(Vec::new())
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Run until all queued requests complete, absorbing rank failures
+    /// along the way.
+    pub fn run_to_completion(&mut self) -> Result<Vec<Completion>> {
+        let mut all = Vec::new();
+        while self.has_work() {
+            all.extend(self.step()?);
+        }
+        Ok(all)
+    }
+
+    /// Elastic twin of [`Engine::generate`].
+    pub fn generate(&mut self, prompts: &[Vec<i32>], max_new: usize)
+                    -> Result<Vec<Vec<i32>>> {
+        let ids: Vec<u64> = prompts
+            .iter()
+            .map(|p| self.engine_mut().map(|e| e.enqueue(p.clone(),
+                                                         max_new)))
+            .collect::<Result<_>>()?;
+        let mut done = self.run_to_completion()?;
+        done.sort_by_key(|c| c.request_id);
+        Ok(ids
+            .iter()
+            .map(|id| {
+                done.iter()
+                    .find(|c| c.request_id == *id)
+                    .map(|c| c.tokens.clone())
+                    .unwrap_or_default()
+            })
+            .collect())
+    }
+
+    /// Planned live reshard to `world` ranks: snapshot every decode
+    /// lane's KV into world-invariant images, quiesce, rebuild the
+    /// fleet at the new world size, and restore — in-flight streams
+    /// stall for the rebuild and then continue bit-identically to a
+    /// fresh launch at the new world (pinned by the failover tests).
+    /// A no-op when `world` already matches.
+    pub fn resize(&mut self, world: usize) -> Result<()> {
+        let t0 = Instant::now();
+        let eng = self.engine_mut()?;
+        if world == eng.cfg.world {
+            return Ok(());
+        }
+        let mut cfg = eng.cfg.clone();
+        cfg.world = world;
+        // refuse cleanly (old fleet untouched) before any quiesce work
+        cfg.validate().with_context(|| {
+            format!("resize to world {world} rejected")
+        })?;
+        // snapshot decode lanes while the old fleet is still whole; a
+        // mid-prefill lane has no tokens out yet and simply replays
+        let targets: Vec<(u64, usize, usize)> = eng
+            .active
+            .iter()
+            .filter(|a| a.decoding() && !a.generated.is_empty())
+            .map(|a| {
+                let len = eng
+                    .lanes
+                    .len_of(a.lane)
+                    .context("decoding request on a dead lane")?;
+                Ok((a.id, a.lane, len))
+            })
+            .collect::<Result<_>>()?;
+        let mut images = HashMap::new();
+        for (id, lane, len) in targets {
+            images.insert(id, (eng.snapshot_lane_image(lane, len)?, len));
+        }
+        self.rebuild(cfg, images)?;
+        self.resizes += 1;
+        self.last_stall_ms = t0.elapsed().as_millis() as u64;
+        Ok(())
+    }
+
+    /// Absorb a rank failure: rebuild at the same world size with no
+    /// lane images (the dead rank's shard is unrecoverable — every
+    /// in-flight request replays instead).
+    fn recover(&mut self, cause: anyhow::Error) -> Result<()> {
+        if self.recoveries as usize >= self.max_recoveries {
+            return Err(cause.context(format!(
+                "rank failure after {} recoveries (limit {})",
+                self.recoveries, self.max_recoveries)));
+        }
+        let t0 = Instant::now();
+        let cfg = self
+            .engine
+            .as_ref()
+            .context("engine lost and not rebuilt")?
+            .cfg
+            .clone();
+        self.rebuild(cfg, HashMap::new()).with_context(|| {
+            format!("recovering from rank failure ({cause:#})")
+        })?;
+        self.recoveries += 1;
+        self.last_stall_ms = t0.elapsed().as_millis() as u64;
+        Ok(())
+    }
+
+    /// The shared quiesce → rebuild → restore tail of both paths.
+    fn rebuild(&mut self, cfg: EngineConfig,
+               images: HashMap<u64, (Vec<u8>, usize)>) -> Result<()> {
+        let mut old = self
+            .engine
+            .take()
+            .context("engine lost and not rebuilt")?;
+        let state = Self::extract(&mut old, images);
+        // dropping the old engine shuts down every surviving host —
+        // workers exit their serve loops and the fleet quiesces
+        drop(old);
+        let fleet = self.factory.build(&cfg)?;
+        let mut eng = Engine::from_rank_hosts(cfg, fleet.hosts,
+                                              fleet.reply_rx,
+                                              fleet.stats)?;
+        // counters and the undrained streaming feed carry across; the
+        // prefix cache does not (segment ids die with their fleet —
+        // restored lanes are fully private, re-sharing rebuilds
+        // organically from new admissions)
+        eng.metrics = state.metrics;
+        eng.emitted = state.emitted;
+        eng.next_id = state.next_id;
+        for r in state.actives {
+            eng.restore_request(r)?;
+        }
+        for (id, prompt, max_new) in state.pending {
+            eng.enqueue_reserved(id, prompt, max_new);
+        }
+        self.engine = Some(eng);
+        Ok(())
+    }
+
+    /// Lift all request state out of a quiesced engine.  Every token in
+    /// every request's `generated` survives (that is the tokens-lost ≡
+    /// 0 invariant); `images` short-circuits replay where a snapshot
+    /// was taken.
+    fn extract(old: &mut Engine,
+               mut images: HashMap<u64, (Vec<u8>, usize)>) -> SavedState {
+        let mut actives: Vec<RestorableReq> = old
+            .active
+            .drain(..)
+            .map(|a| RestorableReq {
+                id: a.id,
+                image: images.remove(&a.id),
+                prompt: a.prompt,
+                generated: a.generated,
+                max_new: a.max_new,
+            })
+            .collect();
+        // oldest first, so replay prefills run in the same fcfs order
+        // the chunk scheduler would have used
+        actives.sort_by_key(|r| r.id);
+        let pending = old
+            .pending
+            .drain(..)
+            .map(|p| (p.id, p.prompt, p.max_new))
+            .collect();
+        SavedState {
+            actives,
+            pending,
+            next_id: old.next_id,
+            metrics: std::mem::take(&mut old.metrics),
+            emitted: std::mem::take(&mut old.emitted),
+        }
+    }
+}
+
+impl Deref for ElasticEngine {
+    type Target = Engine;
+
+    fn deref(&self) -> &Engine {
+        self.engine
+            .as_ref()
+            .expect("engine lost and not rebuilt (previous recovery \
+                     failed)")
+    }
+}
+
+impl DerefMut for ElasticEngine {
+    fn deref_mut(&mut self) -> &mut Engine {
+        self.engine
+            .as_mut()
+            .expect("engine lost and not rebuilt (previous recovery \
+                     failed)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchedulerKind;
+
+    fn cfg(world: usize) -> EngineConfig {
+        EngineConfig {
+            model: "tiny".into(),
+            world,
+            batch: 2,
+            ..Default::default()
+        }
+    }
+
+    fn prompts() -> Vec<Vec<i32>> {
+        vec![vec![11, 23, 5, 42, 7], vec![3, 1, 4, 1, 5, 9, 2]]
+    }
+
+    /// Kill a rank mid-decode; the full streams must come out
+    /// bit-identical to an uninterrupted run, with nothing lost,
+    /// repeated, or reordered within a request.
+    #[test]
+    fn chaos_kill_mid_stream_is_bit_identical() {
+        let expected = Engine::new(cfg(2))
+            .unwrap()
+            .generate(&prompts(), 8)
+            .unwrap();
+
+        // fuse 7: past both prefills, into the decode phase
+        let factory = ChaosFactory { victim: 1, fuse: 7, kills: 1 };
+        let mut eng =
+            ElasticEngine::new(cfg(2), Box::new(factory)).unwrap();
+        let ids: Vec<u64> = prompts()
+            .iter()
+            .map(|p| eng.enqueue(p.clone(), 8))
+            .collect();
+
+        // drive manually, draining the streaming feed every step, to
+        // check the per-token stream as the server would see it
+        let mut streams: std::collections::HashMap<u64, Vec<i32>> =
+            std::collections::HashMap::new();
+        let mut done = Vec::new();
+        while eng.has_work() {
+            done.extend(eng.step().unwrap());
+            for (id, tok) in eng.take_new_tokens() {
+                streams.entry(id).or_default().push(tok);
+            }
+        }
+        assert_eq!(eng.recoveries(), 1, "the chaos fuse must blow");
+        assert_eq!(eng.tokens_lost(), 0);
+        assert!(eng.last_recovery_stall_ms() < 60_000);
+
+        done.sort_by_key(|c| c.request_id);
+        for (i, id) in ids.iter().enumerate() {
+            let c = done.iter().find(|c| c.request_id == *id).unwrap();
+            assert_eq!(c.tokens, expected[i],
+                       "completion for request {id} diverged");
+            assert_eq!(streams[id], expected[i],
+                       "stream for request {id} diverged");
+        }
+
+        // conservation after recovery: nothing leaked
+        assert_eq!(eng.free_lanes(), 2);
+        assert_eq!(eng.free_pages(), eng.total_pages());
+        assert_eq!(eng.shared_pages(), 0);
+    }
+
+    /// The same kill under the continuous scheduler with chunked
+    /// prefill and shared prefixes in play.
+    #[test]
+    fn chaos_kill_recovers_under_continuous_scheduler() {
+        let mut c = cfg(2);
+        c.scheduler = SchedulerKind::Continuous;
+        c.prefill_chunk = 4;
+        let shared: Vec<Vec<i32>> = vec![
+            (0..20).collect::<Vec<i32>>(),
+            (0..20).chain([99, 98]).collect(),
+        ];
+        let expected =
+            Engine::new(c.clone()).unwrap().generate(&shared, 6).unwrap();
+
+        let factory = ChaosFactory { victim: 0, fuse: 12, kills: 1 };
+        let mut eng =
+            ElasticEngine::new(c, Box::new(factory)).unwrap();
+        let got = eng.generate(&shared, 6).unwrap();
+        assert_eq!(eng.recoveries(), 1);
+        assert_eq!(got, expected);
+        assert_eq!(eng.free_lanes(), 2);
+        // the rebuilt pool starts empty; published prefixes from the
+        // lost fleet must not be resurrected
+        assert_eq!(eng.free_pages(),
+                   eng.total_pages() - eng.shared_pages());
+    }
+
+    /// A factory that keeps killing past the recovery budget makes the
+    /// wrapper give up with the original cause attached.
+    #[test]
+    fn recovery_budget_is_a_circuit_breaker() {
+        let factory = ChaosFactory {
+            victim: 0,
+            fuse: 0,
+            kills: usize::MAX,
+        };
+        let mut eng =
+            ElasticEngine::new(cfg(1), Box::new(factory)).unwrap();
+        let _ = eng.enqueue(vec![1, 2, 3], 4);
+        let mut err = None;
+        for _ in 0..(DEFAULT_MAX_RECOVERIES + 2) {
+            if let Err(e) = eng.run_to_completion() {
+                err = Some(e);
+                break;
+            }
+        }
+        let err = err.expect("endless chaos must eventually propagate");
+        assert!(format!("{err:#}").contains("recoveries"),
+                "unexpected error: {err:#}");
+    }
+
+    /// Planned reshard mid-stream: 4 → 2 → 4, with the continuation
+    /// bit-identical to fresh launches at every world size (the
+    /// world-invariance argument of DESIGN.md §10/§17).
+    #[test]
+    fn planned_resize_mid_stream_is_bit_identical() {
+        let expected = Engine::new(cfg(2))
+            .unwrap()
+            .generate(&prompts(), 10)
+            .unwrap();
+        assert_eq!(expected,
+                   Engine::new(cfg(4))
+                       .unwrap()
+                       .generate(&prompts(), 10)
+                       .unwrap(),
+                   "world invariance precondition");
+
+        let mut eng = ElasticEngine::new_inproc(cfg(4)).unwrap();
+        let ids: Vec<u64> = prompts()
+            .iter()
+            .map(|p| eng.enqueue(p.clone(), 10))
+            .collect();
+        let mut done = Vec::new();
+        // let a few tokens stream at world 4 first
+        for _ in 0..3 {
+            done.extend(eng.step().unwrap());
+        }
+        eng.resize(2).unwrap();
+        assert_eq!(eng.config().world, 2);
+        for _ in 0..2 {
+            done.extend(eng.step().unwrap());
+        }
+        eng.resize(4).unwrap();
+        assert_eq!(eng.config().world, 4);
+        done.extend(eng.run_to_completion().unwrap());
+        assert_eq!(eng.resizes(), 2);
+
+        done.sort_by_key(|c| c.request_id);
+        for (i, id) in ids.iter().enumerate() {
+            let c = done.iter().find(|c| c.request_id == *id).unwrap();
+            assert_eq!(c.tokens, expected[i],
+                       "request {id} diverged across reshards");
+        }
+        assert_eq!(eng.free_lanes(), 2);
+        assert_eq!(eng.free_pages(), eng.total_pages());
+    }
+
+    /// Resize to a world the model can't shard over is refused cleanly
+    /// and the running fleet keeps serving.
+    #[test]
+    fn invalid_resize_is_refused_and_harmless() {
+        let mut eng = ElasticEngine::new_inproc(cfg(2)).unwrap();
+        let _ = eng.enqueue(vec![1, 2, 3], 4);
+        // tiny has 8 kv heads: world 3 doesn't divide
+        let err = eng.resize(3).unwrap_err();
+        assert!(format!("{err:#}").contains("resize to world 3"));
+        assert_eq!(eng.resizes(), 0);
+        let done = eng.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+    }
+
+    /// Error classification: transport deaths recover, compute errors
+    /// propagate.
+    #[test]
+    fn rank_failure_classification() {
+        for s in ["rank 1: worker rank 1 lost: connection reset",
+                  "rank worker died",
+                  "prefill: rank host unreachable",
+                  "rank 0 thread gone"] {
+            assert!(ElasticEngine::is_rank_failure(
+                        &anyhow::anyhow!("{s}")),
+                    "{s} should classify as a rank failure");
+        }
+        for s in ["rank 0: prefill_chunk: empty prefill chunk",
+                  "unknown built-in model \"huge\"",
+                  "rank 0 returned no candidates"] {
+            assert!(!ElasticEngine::is_rank_failure(
+                        &anyhow::anyhow!("{s}")),
+                    "{s} must propagate, not trigger recovery");
+        }
+    }
+}

@@ -57,6 +57,7 @@
 
 #![warn(missing_docs)]
 
+pub mod elastic;
 mod host;
 pub mod proto;
 pub(crate) mod rank;
@@ -72,7 +73,8 @@ pub use host::{RankHost, ThreadRankHost};
 use crate::backend::MemUsage;
 use crate::ccl::{CommGroup, StatsSnapshot};
 use crate::config::{EngineConfig, ModelPreset, ResolvedModel, SchedulerKind};
-use crate::kvcache::{LaneTable, PagedAllocator, PrefixCache, PrefixMatch};
+use crate::kvcache::{merge_rank_shards, split_image, LaneTable,
+                     PagedAllocator, PrefixCache, PrefixMatch};
 use crate::metrics::{RunMetrics, StepTiming};
 use crate::sampling::{self, Candidate};
 use crate::scheduler::PrefillCursor;
@@ -124,6 +126,13 @@ struct ActiveReq {
     id: u64,
     lane: usize,
     prompt_len: usize,
+    /// The served prompt (post-truncation, never empty — degenerate
+    /// requests normalize to the padding token).  Kept for the
+    /// request's whole lifetime so elastic recovery (DESIGN.md §17)
+    /// can replay `prompt ++ generated` through prefill on a fresh
+    /// fleet — the replay's KV and continuation bits are identical to
+    /// the lost lane's by chunk-invariance (§12).
+    prompt: Vec<i32>,
     generated: Vec<i32>,
     max_new: usize,
     /// Shared segment this lane rides on (continuous scheduler,
@@ -192,38 +201,8 @@ impl Engine {
     pub fn new(cfg: EngineConfig) -> Result<Engine> {
         cfg.validate()?;
         let rm = cfg.resolve_model()?;
-
-        // arena must hold the largest per-sync payload; with
-        // speculation on, a verify round carries up to
-        // batch · (spec_k + 1) activation rows (DESIGN.md §15)
-        let max_bucket = *rm.prefill_buckets.iter().max().unwrap();
-        let spec_rows = if cfg.spec_enabled() {
-            cfg.batch * (cfg.spec_k + 1)
-        } else {
-            0
-        };
-        let arena_elems = (cfg.batch * rm.preset.hidden)
-            .max(max_bucket * rm.preset.hidden)
-            .max(spec_rows * rm.preset.hidden);
-        let group = CommGroup::new_inproc(cfg.world, arena_elems);
-        let stats = group.stats.clone();
-
-        let (reply_tx, reply_rx) = channel();
-        let mut hosts: Vec<Box<dyn RankHost>> =
-            Vec::with_capacity(cfg.world);
-        for (rank, comm) in group.into_communicators().into_iter().enumerate()
-        {
-            let (tx, rx) = channel();
-            let cfg_r = cfg.clone();
-            let reply_tx = reply_tx.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("rank{rank}"))
-                .spawn(move || {
-                    rank::RankWorker::run(rank, cfg_r, comm, rx, reply_tx)
-                })?;
-            hosts.push(Box::new(ThreadRankHost::new(rank, tx, handle)));
-        }
-        Self::build(cfg, rm, hosts, reply_rx, stats)
+        let fleet = spawn_inproc_fleet(&cfg, &rm)?;
+        Self::build(cfg, rm, fleet.hosts, fleet.reply_rx, fleet.stats)
     }
 
     /// Build an engine over externally hosted rank workers (the
@@ -571,8 +550,13 @@ impl Engine {
         // ---- chunked prefill: one chunk, oldest prefilling lane ----
         // (the continuous scheduler always admits through the chunk
         // state machine, even in whole-prompt mode where each "chunk"
-        // is the full remaining span)
-        if self.cfg.prefill_chunk > 0 || continuous {
+        // is the full remaining span; and a request restored after a
+        // rank failure is parked mid-prefill regardless of scheduler —
+        // its replay must advance even under fcfs whole-prompt mode)
+        if self.cfg.prefill_chunk > 0
+            || continuous
+            || self.active.iter().any(|a| !a.decoding())
+        {
             loop {
                 if let Some(c) = self.prefill_chunk_step()? {
                     done.push(c);
@@ -673,14 +657,35 @@ impl Engine {
 
     fn admit_and_prefill(&mut self, req: PendingReq, bucket: usize,
                          worst: usize) -> Result<Option<Completion>> {
-        let mut prompt = req.prompt.clone();
+        let mut prompt = req.prompt;
         prompt.truncate(bucket);
-        let length = prompt.len().max(1);
+        if prompt.is_empty() {
+            // same row the chunked path runs for an empty prompt (its
+            // bucket padding token), so all admission flavors — and a
+            // post-failure replay — feed identical bits
+            prompt.push(0);
+        }
+        let length = prompt.len();
         let lane = self.lanes.alloc(req.id, length)?;
         self.pages.admit(lane, worst)?;
 
         let mut padded = prompt.clone();
         padded.resize(bucket, 0);
+
+        // on the books before the round runs: if a rank dies
+        // mid-prefill, elastic recovery finds the request in `active`
+        // and replays it instead of silently dropping it
+        self.active.push(ActiveReq {
+            id: req.id,
+            lane,
+            prompt_len: length,
+            prompt,
+            generated: Vec::new(),
+            max_new: req.max_new,
+            attached: None,
+            publish_tokens: None,
+            phase: Phase::Decode { next_token: 0 },
+        });
 
         let t0 = Instant::now();
         for host in &self.hosts {
@@ -693,17 +698,6 @@ impl Engine {
         }
         let (cands, _timing) = self.collect_round(true)?;
         self.metrics.record_prefill(t0.elapsed());
-
-        self.active.push(ActiveReq {
-            id: req.id,
-            lane,
-            prompt_len: length,
-            generated: Vec::new(),
-            max_new: req.max_new,
-            attached: None,
-            publish_tokens: None,
-            phase: Phase::Decode { next_token: 0 },
-        });
         self.finish_prefill(self.active.len() - 1, cands)
     }
 
@@ -730,7 +724,14 @@ impl Engine {
         self.emitted.push((a.id, first));
         a.generated.push(first);
         a.phase = Phase::Decode { next_token: first };
-        if a.max_new <= 1 || Some(first) == self.eos {
+        // budget check against generated.len(), not `max_new <= 1`: a
+        // replayed request (DESIGN.md §17) arrives here pre-seeded with
+        // everything it emitted before the failure, and may finish its
+        // budget — or fill the context window — on the replay round
+        if a.generated.len() >= a.max_new
+            || Some(first) == self.eos
+            || self.lanes.len_of(a.lane) == Some(self.preset.max_seq)
+        {
             let mut a = self.active.swap_remove(idx);
             return Ok(Some(self.retire(&mut a)?));
         }
@@ -759,6 +760,7 @@ impl Engine {
             id: req.id,
             lane,
             prompt_len: length,
+            prompt: prompt.clone(),
             generated: Vec::new(),
             max_new: req.max_new,
             attached: None,
@@ -832,6 +834,7 @@ impl Engine {
             id: req.id,
             lane,
             prompt_len: length,
+            prompt: prompt.clone(),
             generated: Vec::new(),
             max_new: req.max_new,
             attached,
@@ -1255,22 +1258,25 @@ impl Engine {
             }
         }
 
-        // retire highest index first so swap_remove can't shift an
-        // index still in the list
-        retire_idx.sort_unstable_by(|a, b| b.cmp(a));
-        let mut finished = Vec::new();
-        for i in retire_idx {
-            let mut a = self.active.swap_remove(i);
-            finished.push(self.retire(&mut a)?);
-        }
-
         // ---- draft catch-up round for fully accepted lanes ----
+        // (runs BEFORE the retires: a rank failure inside this round
+        // aborts the step, and a not-yet-retired request is still in
+        // `active` for elastic recovery to replay — retiring first
+        // would let a mid-step failure silently eat the completion.
+        // Lanes about to retire ride along parked, like any other
+        // decode round; their rows are rewritten before being read.)
         if !catchup.is_empty() {
             let mut tokens = vec![0i32; b];
             let mut positions = self.lanes.positions();
             for &(lane, tok, pos) in &catchup {
                 tokens[lane] = tok;
                 positions[lane] = pos;
+            }
+            // lanes about to retire may have advanced to the context
+            // boundary; park them at row 0 (rewritten by their next
+            // owner's prefill) instead of one past the KV capacity
+            for &i in &retire_idx {
+                positions[self.active[i].lane] = 0;
             }
             for host in &self.hosts {
                 let toks = (host.rank() == 0).then(|| tokens.clone());
@@ -1283,6 +1289,15 @@ impl Engine {
             // candidates are discarded: this round only lands KV
             let (_, t) = self.collect_round(false)?;
             timing.accumulate_round(&t);
+        }
+
+        // retire highest index first so swap_remove can't shift an
+        // index still in the list
+        retire_idx.sort_unstable_by(|a, b| b.cmp(a));
+        let mut finished = Vec::new();
+        for i in retire_idx {
+            let mut a = self.active.swap_remove(i);
+            finished.push(self.retire(&mut a)?);
         }
 
         timing.wall_us = t0.elapsed().as_micros() as u64;
@@ -1480,5 +1495,209 @@ impl Drop for Engine {
         for host in &mut self.hosts {
             host.shutdown();
         }
+    }
+}
+
+/// Spawn one in-process rank-worker thread per rank over a fresh
+/// in-proc ccl group — the fleet [`Engine::new`] runs on, factored out
+/// so [`elastic`] can rebuild an identical fleet after a rank failure
+/// or a planned reshard (DESIGN.md §17).
+pub(crate) fn spawn_inproc_fleet(cfg: &EngineConfig, rm: &ResolvedModel)
+                                 -> Result<elastic::Fleet> {
+    // arena must hold the largest per-sync payload; with
+    // speculation on, a verify round carries up to
+    // batch · (spec_k + 1) activation rows (DESIGN.md §15)
+    let max_bucket = *rm.prefill_buckets.iter().max().unwrap();
+    let spec_rows = if cfg.spec_enabled() {
+        cfg.batch * (cfg.spec_k + 1)
+    } else {
+        0
+    };
+    let arena_elems = (cfg.batch * rm.preset.hidden)
+        .max(max_bucket * rm.preset.hidden)
+        .max(spec_rows * rm.preset.hidden);
+    let group = CommGroup::new_inproc(cfg.world, arena_elems);
+    let stats = group.stats.clone();
+
+    let (reply_tx, reply_rx) = channel();
+    let mut hosts: Vec<Box<dyn RankHost>> = Vec::with_capacity(cfg.world);
+    for (rank, comm) in group.into_communicators().into_iter().enumerate() {
+        let (tx, rx) = channel();
+        let cfg_r = cfg.clone();
+        let tx_r = reply_tx.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("rank{rank}"))
+            .spawn(move || {
+                rank::RankWorker::run(rank, cfg_r, comm, rx, tx_r)
+            })?;
+        hosts.push(Box::new(ThreadRankHost::new(rank, tx, handle)));
+    }
+    Ok(elastic::Fleet { hosts, reply_rx, reply_tx, stats })
+}
+
+/// A request lifted out of a dying (or deliberately resharding) engine
+/// in *replay form* (DESIGN.md §17): the served prompt plus every token
+/// already emitted.  Prefilling `prompt ++ generated` on a fresh fleet
+/// rebuilds the lane's KV bit-for-bit (chunk-invariance, §12) and
+/// samples the *next* token — nothing already streamed is recomputed
+/// differently or re-emitted.
+#[derive(Debug)]
+pub(crate) struct RestorableReq {
+    pub id: u64,
+    /// served prompt, post-truncation — replay must not re-truncate
+    pub prompt: Vec<i32>,
+    /// tokens already emitted to the client, in order
+    pub generated: Vec<i32>,
+    pub max_new: usize,
+    /// `(merged lane image, rows)` captured by
+    /// [`Engine::snapshot_lane_image`] before the old fleet went down
+    /// (planned reshards only — a crashed rank's shard is gone, so
+    /// unplanned recovery always replays)
+    pub image: Option<(Vec<u8>, usize)>,
+}
+
+impl Engine {
+    /// Snapshot lane `lane`'s first `len` KV rows as a *world-invariant*
+    /// merged image: every rank serializes its head shard
+    /// ([`Cmd::SnapshotLane`]) and the shards concatenate along the
+    /// head axis per layer, so the image can be re-split for any world
+    /// size that divides the KV head count (DESIGN.md §17).
+    pub(crate) fn snapshot_lane_image(&mut self, lane: usize, len: usize)
+                                      -> Result<Vec<u8>> {
+        for host in &self.hosts {
+            host.send(Cmd::SnapshotLane { lane, len })
+                .context("rank host unreachable")?;
+        }
+        let mut shards: Vec<Option<Vec<u8>>> = vec![None; self.cfg.world];
+        for _ in 0..self.cfg.world {
+            match self.reply_rx.recv().context("rank worker died")? {
+                Reply::LaneSnapshot { rank, lane: l, bytes } => {
+                    anyhow::ensure!(
+                        rank < self.cfg.world,
+                        "snapshot from out-of-range rank {rank}");
+                    anyhow::ensure!(
+                        l == lane,
+                        "rank {rank} snapshot lane {l}, wanted {lane}");
+                    anyhow::ensure!(
+                        shards[rank].replace(bytes).is_none(),
+                        "rank {rank} replied twice in one round");
+                }
+                Reply::Error { rank, message } => {
+                    bail!("rank {rank}: {message}")
+                }
+                other => bail!("unexpected snapshot reply {other:?}"),
+            }
+        }
+        let shards: Vec<Vec<u8>> =
+            shards.into_iter().map(Option::unwrap).collect();
+        merge_rank_shards(&shards, self.preset.n_layers, len,
+                          self.cfg.kv_dtype, self.preset.head_dim,
+                          self.preset.n_kv_heads)
+    }
+
+    /// Load a merged lane image back into lane `lane`: re-split for
+    /// *this* engine's world size and ship one shard per rank
+    /// ([`Cmd::RestoreLane`]).  Blocks until every rank confirms.
+    pub(crate) fn restore_lane_image(&mut self, lane: usize, len: usize,
+                                     image: &[u8]) -> Result<()> {
+        let shards = split_image(image, self.cfg.world,
+                                 self.preset.n_layers, len,
+                                 self.cfg.kv_dtype, self.preset.head_dim,
+                                 self.preset.n_kv_heads)?;
+        for (host, bytes) in self.hosts.iter().zip(shards) {
+            host.send(Cmd::RestoreLane { lane, len, bytes })
+                .context("rank host unreachable")?;
+        }
+        let mut seen = vec![false; self.cfg.world];
+        for _ in 0..self.cfg.world {
+            match self.reply_rx.recv().context("rank worker died")? {
+                Reply::LaneRestored { rank, lane: l } => {
+                    anyhow::ensure!(
+                        rank < self.cfg.world,
+                        "restore ack from out-of-range rank {rank}");
+                    anyhow::ensure!(
+                        l == lane,
+                        "rank {rank} restored lane {l}, wanted {lane}");
+                    anyhow::ensure!(
+                        !std::mem::replace(&mut seen[rank], true),
+                        "rank {rank} replied twice in one round");
+                }
+                Reply::Error { rank, message } => {
+                    bail!("rank {rank}: {message}")
+                }
+                other => bail!("unexpected restore reply {other:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Re-admit a request lifted out of a previous engine: allocate a
+    /// lane sized for the full replay sequence, reserve the same
+    /// worst-case pages the original admission reserved, and park the
+    /// request mid-prefill over `prompt ++ generated`.  With an
+    /// `image`, the replayed rows load directly from the snapshot and
+    /// only the pending token's row runs through the model.
+    ///
+    /// The request resumes exactly where it left off: its next sampled
+    /// token is the one the lost fleet would have produced next
+    /// (bit-identical — pinned by `rust/tests/failover.rs`).
+    pub(crate) fn restore_request(&mut self, r: RestorableReq)
+                                  -> Result<()> {
+        anyhow::ensure!(!r.prompt.is_empty(),
+                        "restorable request {} has an empty prompt \
+                         (served prompts are normalized non-empty)",
+                        r.id);
+        self.next_id = self.next_id.max(r.id.saturating_add(1));
+        let plen = r.prompt.len();
+        let mut replay = r.prompt.clone();
+        replay.extend_from_slice(&r.generated);
+        let replay_len = replay.len();
+        anyhow::ensure!(
+            replay_len <= self.preset.max_seq,
+            "replay of request {} is {replay_len} tokens, over the \
+             {}-token context window", r.id, self.preset.max_seq);
+        let worst = (plen + r.max_new).min(self.preset.max_seq);
+        let lane = self.lanes.alloc(r.id, replay_len)?;
+        self.pages.admit(lane, worst)?;
+        let start = match &r.image {
+            Some((image, rows)) => {
+                // a decode lane's KV is one row short of the replay
+                // sequence: the pending token was sampled but never
+                // appended (the L = plen + g - 1 invariant)
+                anyhow::ensure!(
+                    rows + 1 == replay_len,
+                    "lane image holds {rows} rows for a {replay_len}-\
+                     token replay (want replay_len - 1)");
+                self.restore_lane_image(lane, *rows, image)?;
+                *rows
+            }
+            None => 0,
+        };
+        // replay in arena-sized chunks: chunk-invariance (§12) makes
+        // the bits identical to the original rounds no matter how the
+        // replay is tiled, and the largest prefill bucket is the
+        // biggest frame every fleet's comm arena is provisioned for
+        let chunk = if self.cfg.prefill_chunk > 0 {
+            self.cfg.prefill_chunk
+        } else {
+            *self.prefill_buckets.iter().max().unwrap()
+        };
+        let cursor = PrefillCursor::new_at(replay_len, chunk, start);
+        self.active.push(ActiveReq {
+            id: r.id,
+            lane,
+            prompt_len: plen,
+            prompt: r.prompt,
+            generated: r.generated,
+            max_new: r.max_new,
+            attached: None,
+            publish_tokens: None,
+            phase: Phase::Prefill {
+                prompt: replay,
+                cursor,
+                admitted: Instant::now(),
+            },
+        });
+        Ok(())
     }
 }

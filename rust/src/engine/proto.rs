@@ -138,6 +138,33 @@ pub enum Cmd {
         /// accepted KV length after rollback
         new_len: usize,
     },
+    /// Export lane `lane`'s first `len` KV rows as an opaque per-rank
+    /// shard (DESIGN.md §17).  Unlike the prefix family this command
+    /// is reply-*carrying*: the worker answers with
+    /// [`Reply::LaneSnapshot`] so the leader can merge the per-rank
+    /// head shards into a world-invariant full image before a planned
+    /// reshard.  Target backend only — the draft KV is rebuilt from
+    /// scratch after a reshard (a cold draft only lowers the
+    /// speculative accept rate, never the emitted bits).
+    SnapshotLane {
+        /// batch lane to export
+        lane: usize,
+        /// valid KV rows to export (the lane's current length)
+        len: usize,
+    },
+    /// Import a per-rank KV shard previously produced by
+    /// [`Cmd::SnapshotLane`] (re-split for this world size), making
+    /// lane `lane` hold `len` valid private rows.  Reply-carrying:
+    /// the worker answers [`Reply::LaneRestored`] so the leader can
+    /// barrier on all ranks before resuming decode.
+    RestoreLane {
+        /// batch lane to restore into
+        lane: usize,
+        /// valid KV rows carried by `bytes`
+        len: usize,
+        /// this rank's shard of the lane image
+        bytes: Vec<u8>,
+    },
 }
 
 /// Replies from rank workers to the leader.
@@ -197,6 +224,26 @@ pub enum Reply {
         /// merged top-k per verify row, in command row order (rank 0
         /// only)
         candidates: Option<Vec<Vec<Candidate>>>,
+    },
+    /// One [`Cmd::SnapshotLane`] finished: this rank's opaque KV shard
+    /// for the lane (layer-major `[layer][local_head][pos]` rows; see
+    /// `kvcache::lane_image`).  Every rank replies — the leader
+    /// concatenates head blocks per layer into the full image.
+    LaneSnapshot {
+        /// replying rank
+        rank: usize,
+        /// exported batch lane
+        lane: usize,
+        /// this rank's serialized shard
+        bytes: Vec<u8>,
+    },
+    /// One [`Cmd::RestoreLane`] finished; the lane's private KV now
+    /// holds the imported rows on this rank.
+    LaneRestored {
+        /// replying rank
+        rank: usize,
+        /// restored batch lane
+        lane: usize,
     },
 }
 
@@ -274,6 +321,11 @@ impl<'a> WireReader<'a> {
         }
     }
 
+    pub(crate) fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.usize32()?;
+        Ok(self.take(n)?.to_vec())
+    }
+
     pub(crate) fn candidates(&mut self) -> Result<Vec<Candidate>> {
         let n = self.usize32()?;
         Ok(sampling::decode_candidates(self.take(n * 8)?))
@@ -298,6 +350,11 @@ pub(crate) fn put_u64(out: &mut Vec<u8>, v: u64) {
 pub(crate) fn put_str(out: &mut Vec<u8>, s: &str) {
     put_u32(out, s.len() as u32);
     out.extend_from_slice(s.as_bytes());
+}
+
+pub(crate) fn put_bytes(out: &mut Vec<u8>, v: &[u8]) {
+    put_u32(out, v.len() as u32);
+    out.extend_from_slice(v);
 }
 
 pub(crate) fn put_vec_i32(out: &mut Vec<u8>, v: &[i32]) {
@@ -392,6 +449,17 @@ impl Cmd {
                 put_u32(out, *lane as u32);
                 put_u32(out, *new_len as u32);
             }
+            Cmd::SnapshotLane { lane, len } => {
+                out.push(12);
+                put_u32(out, *lane as u32);
+                put_u32(out, *len as u32);
+            }
+            Cmd::RestoreLane { lane, len, bytes } => {
+                out.push(13);
+                put_u32(out, *lane as u32);
+                put_u32(out, *len as u32);
+                put_bytes(out, bytes);
+            }
         }
     }
 
@@ -447,6 +515,15 @@ impl Cmd {
             11 => Cmd::TruncateLane {
                 lane: r.usize32()?,
                 new_len: r.usize32()?,
+            },
+            12 => Cmd::SnapshotLane {
+                lane: r.usize32()?,
+                len: r.usize32()?,
+            },
+            13 => Cmd::RestoreLane {
+                lane: r.usize32()?,
+                len: r.usize32()?,
+                bytes: r.bytes()?,
             },
             d => bail!("unknown Cmd discriminant {d}"),
         };
@@ -519,6 +596,17 @@ impl Reply {
                     }
                 }
             }
+            Reply::LaneSnapshot { rank, lane, bytes } => {
+                out.push(6);
+                put_u32(out, *rank as u32);
+                put_u32(out, *lane as u32);
+                put_bytes(out, bytes);
+            }
+            Reply::LaneRestored { rank, lane } => {
+                out.push(7);
+                put_u32(out, *rank as u32);
+                put_u32(out, *lane as u32);
+            }
         }
     }
 
@@ -580,6 +668,15 @@ impl Reply {
                 };
                 Reply::VerifyDone { rank, compute_us, comm_us, candidates }
             }
+            6 => Reply::LaneSnapshot {
+                rank: r.usize32()?,
+                lane: r.usize32()?,
+                bytes: r.bytes()?,
+            },
+            7 => Reply::LaneRestored {
+                rank: r.usize32()?,
+                lane: r.usize32()?,
+            },
             d => bail!("unknown Reply discriminant {d}"),
         };
         r.done()?;
@@ -663,6 +760,30 @@ mod tests {
             positions: vec![0],
         });
         roundtrip_cmd(Cmd::TruncateLane { lane: 3, new_len: 17 });
+        roundtrip_cmd(Cmd::SnapshotLane { lane: 1, len: 40 });
+        roundtrip_cmd(Cmd::RestoreLane {
+            lane: 2,
+            len: 3,
+            bytes: vec![0xde, 0xad, 0xbe, 0xef],
+        });
+        roundtrip_cmd(Cmd::RestoreLane { lane: 0, len: 0, bytes: vec![] });
+    }
+
+    #[test]
+    fn snapshot_cmds_reject_truncation_and_trailing_bytes() {
+        for cmd in [
+            Cmd::SnapshotLane { lane: 1, len: 16 },
+            Cmd::RestoreLane { lane: 0, len: 2, bytes: vec![1, 2, 3] },
+        ] {
+            let mut buf = Vec::new();
+            cmd.encode(&mut buf);
+            for cut in 0..buf.len() {
+                assert!(Cmd::decode(&buf[..cut]).is_err(),
+                        "{cmd:?} cut at {cut}");
+            }
+            buf.push(0);
+            assert!(Cmd::decode(&buf).is_err(), "{cmd:?} trailing byte");
+        }
     }
 
     #[test]
@@ -787,6 +908,34 @@ mod tests {
             comm_us: 0,
             candidates: None,
         });
+        roundtrip_reply(Reply::LaneSnapshot {
+            rank: 2,
+            lane: 1,
+            bytes: vec![9, 8, 7, 6, 5],
+        });
+        roundtrip_reply(Reply::LaneSnapshot {
+            rank: 0,
+            lane: 0,
+            bytes: vec![],
+        });
+        roundtrip_reply(Reply::LaneRestored { rank: 3, lane: 2 });
+    }
+
+    #[test]
+    fn snapshot_replies_reject_truncation_and_trailing_bytes() {
+        for reply in [
+            Reply::LaneSnapshot { rank: 1, lane: 0, bytes: vec![1, 2] },
+            Reply::LaneRestored { rank: 0, lane: 3 },
+        ] {
+            let mut buf = Vec::new();
+            reply.encode(&mut buf);
+            for cut in 0..buf.len() {
+                assert!(Reply::decode(&buf[..cut]).is_err(),
+                        "{reply:?} cut at {cut}");
+            }
+            buf.push(0);
+            assert!(Reply::decode(&buf).is_err(), "{reply:?} trailing byte");
+        }
     }
 
     #[test]

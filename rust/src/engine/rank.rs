@@ -343,6 +343,37 @@ impl RankWorker {
                         },
                     }
                 }
+                // lane checkpointing (DESIGN.md §17) is reply-carrying
+                // and target-only: the draft KV is not exported — a
+                // restored fleet rebuilds it cold, which can only
+                // lower the speculative accept rate, never the emitted
+                // bits (the §15 equivalence).
+                Cmd::SnapshotLane { lane, len } => {
+                    match self.target.backend.snapshot_lane(lane, len) {
+                        Ok(bytes) => Reply::LaneSnapshot {
+                            rank: self.rank,
+                            lane,
+                            bytes,
+                        },
+                        Err(e) => Reply::Error {
+                            rank: self.rank,
+                            message: format!("snapshot_lane: {e:#}"),
+                        },
+                    }
+                }
+                Cmd::RestoreLane { lane, len, bytes } => {
+                    match self.target.backend.restore_lane(lane, len,
+                                                           &bytes) {
+                        Ok(()) => Reply::LaneRestored {
+                            rank: self.rank,
+                            lane,
+                        },
+                        Err(e) => Reply::Error {
+                            rank: self.rank,
+                            message: format!("restore_lane: {e:#}"),
+                        },
+                    }
+                }
                 Cmd::Shutdown => break,
             };
             if reply_tx.send(reply).is_err() {

@@ -190,6 +190,150 @@ impl KvLayer {
             }
         }
     }
+
+    /// Serialize one row (values + scales) onto `out` — the lane
+    /// checkpoint primitive of DESIGN.md §17.  Layout per row:
+    /// f32 → `k[head_dim]·4 ‖ v[head_dim]·4` LE floats; int8 →
+    /// `k[head_dim] ‖ v[head_dim] ‖ k_scale·4 ‖ v_scale·4`.  A pure
+    /// bitwise copy of stored content (no re-quantization), so an
+    /// export/import round trip is exact in either dtype.
+    pub fn export_row(&self, row: usize, head_dim: usize,
+                      out: &mut Vec<u8>) {
+        let hd = head_dim;
+        match self {
+            KvLayer::F32 { k, v } => {
+                for x in &k[row * hd..(row + 1) * hd] {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+                for x in &v[row * hd..(row + 1) * hd] {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            KvLayer::Int8 { k, v, k_scale, v_scale } => {
+                out.extend(
+                    k[row * hd..(row + 1) * hd].iter().map(|b| *b as u8));
+                out.extend(
+                    v[row * hd..(row + 1) * hd].iter().map(|b| *b as u8));
+                out.extend_from_slice(&k_scale[row].to_le_bytes());
+                out.extend_from_slice(&v_scale[row].to_le_bytes());
+            }
+        }
+    }
+
+    /// Deserialize one row previously written by [`KvLayer::export_row`]
+    /// into `row`.  `bytes` must be exactly [`row_bytes`] long and in
+    /// this layer's dtype — callers slice the shard by fixed-size row
+    /// arithmetic, so a length mismatch means the shard geometry
+    /// disagrees with the cache and the restore must fail loudly.
+    pub fn import_row(&mut self, row: usize, head_dim: usize,
+                      bytes: &[u8]) -> Result<()> {
+        let hd = head_dim;
+        if bytes.len() != row_bytes(self.dtype(), hd) {
+            bail!("KV row image is {} bytes, expected {} ({:?})",
+                  bytes.len(), row_bytes(self.dtype(), hd), self.dtype());
+        }
+        match self {
+            KvLayer::F32 { k, v } => {
+                for (i, c) in bytes[..hd * 4].chunks_exact(4).enumerate() {
+                    k[row * hd + i] =
+                        f32::from_le_bytes(c.try_into().unwrap());
+                }
+                for (i, c) in bytes[hd * 4..].chunks_exact(4).enumerate() {
+                    v[row * hd + i] =
+                        f32::from_le_bytes(c.try_into().unwrap());
+                }
+            }
+            KvLayer::Int8 { k, v, k_scale, v_scale } => {
+                for (i, b) in bytes[..hd].iter().enumerate() {
+                    k[row * hd + i] = *b as i8;
+                }
+                for (i, b) in bytes[hd..2 * hd].iter().enumerate() {
+                    v[row * hd + i] = *b as i8;
+                }
+                k_scale[row] = f32::from_le_bytes(
+                    bytes[2 * hd..2 * hd + 4].try_into().unwrap());
+                v_scale[row] = f32::from_le_bytes(
+                    bytes[2 * hd + 4..].try_into().unwrap());
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Serialized size of one KV row in `dtype`: both planes' values plus
+/// (at int8) the two per-row scales.
+pub fn row_bytes(dtype: Dtype, head_dim: usize) -> usize {
+    match dtype {
+        Dtype::F32 => 2 * head_dim * 4,
+        Dtype::Int8 => 2 * head_dim + 8,
+    }
+}
+
+/// Merge per-rank lane shards (each `[layer][local_head][pos]` rows as
+/// written by [`KvLayer::export_row`], local heads in rank order) into
+/// the world-invariant full image `[layer][global_head][pos]`.
+///
+/// KV head shards are contiguous per rank (rank `r` of world `w` owns
+/// global heads `[r·H/w, (r+1)·H/w)` — the column-parallel slice of
+/// the quantize-before-shard grid), so merging is byte concatenation
+/// of head blocks per layer and the result is identical no matter
+/// which world size exported it.
+pub fn merge_rank_shards(shards: &[Vec<u8>], n_layers: usize, len: usize,
+                         dtype: Dtype, head_dim: usize,
+                         kv_heads_total: usize) -> Result<Vec<u8>> {
+    let world = shards.len();
+    if world == 0 || kv_heads_total % world != 0 {
+        bail!("cannot merge {world} shards over {kv_heads_total} KV heads");
+    }
+    let heads_l = kv_heads_total / world;
+    let rb = row_bytes(dtype, head_dim);
+    let layer_block = heads_l * len * rb;
+    for (r, s) in shards.iter().enumerate() {
+        if s.len() != n_layers * layer_block {
+            bail!("rank {r} shard is {} bytes, expected {} \
+                   ({n_layers} layers × {heads_l} heads × {len} rows)",
+                  s.len(), n_layers * layer_block);
+        }
+    }
+    let mut image =
+        Vec::with_capacity(n_layers * world * layer_block);
+    for li in 0..n_layers {
+        for shard in shards {
+            image.extend_from_slice(
+                &shard[li * layer_block..(li + 1) * layer_block]);
+        }
+    }
+    Ok(image)
+}
+
+/// Split a full lane image (as produced by [`merge_rank_shards`]) into
+/// per-rank shards for a `world`-rank fleet — the exact inverse of the
+/// merge at any world size that divides `kv_heads_total`.
+pub fn split_image(image: &[u8], world: usize, n_layers: usize,
+                   len: usize, dtype: Dtype, head_dim: usize,
+                   kv_heads_total: usize) -> Result<Vec<Vec<u8>>> {
+    if world == 0 || kv_heads_total % world != 0 {
+        bail!("cannot split over {world} ranks ({kv_heads_total} KV heads)");
+    }
+    let heads_l = kv_heads_total / world;
+    let rb = row_bytes(dtype, head_dim);
+    let head_block = len * rb;
+    let layer_block = kv_heads_total * head_block;
+    if image.len() != n_layers * layer_block {
+        bail!("lane image is {} bytes, expected {} \
+               ({n_layers} layers × {kv_heads_total} heads × {len} rows)",
+              image.len(), n_layers * layer_block);
+    }
+    let mut shards =
+        vec![Vec::with_capacity(n_layers * heads_l * head_block); world];
+    for li in 0..n_layers {
+        for (r, shard) in shards.iter_mut().enumerate() {
+            let start = li * layer_block + r * heads_l * head_block;
+            shard.extend_from_slice(
+                &image[start..start + heads_l * head_block]);
+        }
+    }
+    Ok(shards)
 }
 
 /// State of one batch lane.
@@ -1508,5 +1652,78 @@ mod tests {
         t.advance(a).unwrap();
         t.advance(a).unwrap();
         assert_eq!(t.positions(), vec![6, 7]);
+    }
+
+    #[test]
+    fn kv_row_export_import_roundtrip_is_bitwise_both_dtypes() {
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(0xE1A5);
+        let hd = 6;
+        let rows = 5;
+        for dtype in [Dtype::F32, Dtype::Int8] {
+            let mut src = KvLayer::new(dtype, rows, hd);
+            for r in 0..rows {
+                let krow: Vec<f32> =
+                    (0..hd).map(|_| rng.next_normal()).collect();
+                let vrow: Vec<f32> =
+                    (0..hd).map(|_| rng.next_normal()).collect();
+                src.append_row(r, (&krow, &vrow)).unwrap();
+            }
+            let rb = row_bytes(dtype, hd);
+            let mut dst = KvLayer::new(dtype, rows, hd);
+            for r in 0..rows {
+                let mut img = Vec::new();
+                src.export_row(r, hd, &mut img);
+                assert_eq!(img.len(), rb, "row_bytes mismatch at {dtype}");
+                dst.import_row(r, hd, &img).unwrap();
+                let mut back = Vec::new();
+                dst.export_row(r, hd, &mut back);
+                assert_eq!(img, back,
+                           "export/import not bitwise at {dtype}");
+            }
+            // a short or long row image must be rejected, not sliced
+            assert!(dst.import_row(0, hd, &vec![0u8; rb - 1]).is_err());
+            assert!(dst.import_row(0, hd, &vec![0u8; rb + 1]).is_err());
+        }
+    }
+
+    #[test]
+    fn lane_image_merge_split_roundtrip_is_world_invariant() {
+        use crate::util::SplitMix64;
+        let mut rng = SplitMix64::new(0x5AFE);
+        let (n_layers, len, hd, kv_heads) = (3, 7, 4, 4);
+        for dtype in [Dtype::F32, Dtype::Int8] {
+            let image: Vec<u8> = (0..n_layers * kv_heads * len
+                    * row_bytes(dtype, hd))
+                .map(|_| rng.next_u64() as u8)
+                .collect();
+            let mut merged_per_world = Vec::new();
+            for world in [1usize, 2, 4] {
+                let shards = split_image(&image, world, n_layers, len,
+                                         dtype, hd, kv_heads)
+                    .unwrap();
+                assert_eq!(shards.len(), world);
+                let back = merge_rank_shards(&shards, n_layers, len,
+                                             dtype, hd, kv_heads)
+                    .unwrap();
+                assert_eq!(back, image,
+                           "split→merge not identity at world {world}");
+                merged_per_world.push(back);
+            }
+            // the full image is the same no matter which world size
+            // produced the shards — the reshard bit-compat invariant
+            assert!(merged_per_world.windows(2).all(|w| w[0] == w[1]));
+            // geometry mismatches fail loudly
+            assert!(split_image(&image, 3, n_layers, len, dtype, hd,
+                                kv_heads).is_err(),
+                    "world must divide the KV head count");
+            assert!(split_image(&image[1..], 2, n_layers, len, dtype,
+                                hd, kv_heads).is_err());
+            let mut shards = split_image(&image, 2, n_layers, len,
+                                         dtype, hd, kv_heads).unwrap();
+            shards[1].pop();
+            assert!(merge_rank_shards(&shards, n_layers, len, dtype,
+                                      hd, kv_heads).is_err());
+        }
     }
 }

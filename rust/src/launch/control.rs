@@ -47,7 +47,13 @@ use crate::engine::proto::{self, Cmd, Reply, WireReader};
 /// `Cmd::DraftDecode`/`Verify`/`TruncateLane`, the `Reply::VerifyDone`
 /// frame, and the `spec_draft`/`spec_k` config keys — a v4 worker can
 /// decode none of them, so mixed fleets are refused at registration.
-pub const PROTO_VERSION: u32 = 5;
+///
+/// v6: elastic worlds (DESIGN.md §17): new reply-carrying
+/// `Cmd::SnapshotLane`/`RestoreLane` and their
+/// `Reply::LaneSnapshot`/`LaneRestored` frames, used by the planned
+/// quiesce→reshard→restore path — a v5 worker can decode none of
+/// them, so mixed fleets are refused at registration.
+pub const PROTO_VERSION: u32 = 6;
 
 /// How often an idle worker proves liveness to the coordinator.
 pub const HEARTBEAT_PERIOD: Duration = Duration::from_secs(2);
@@ -252,6 +258,73 @@ mod tests {
         buf.extend_from_slice(&10u32.to_le_bytes());
         buf.push(2);
         assert!(read_msg(&buf[..]).is_err());
+    }
+
+    /// Seeded byte-soup fuzz over the frame decoder (same idiom as the
+    /// toml_mini and server-JSON fuzzes): a half-dead worker can emit
+    /// arbitrary bytes, and the coordinator must turn every one of them
+    /// into a clean `Err` (a logged disconnect) — never a panic.  Three
+    /// flavors: raw soup through `read_msg`, raw soup straight into
+    /// `ControlMsg::decode` (bypassing the length/cap checks), and
+    /// bit-flipped corruptions of real frames, which exercise the
+    /// deeper `Cmd`/`Reply` decode paths.
+    #[test]
+    fn decode_never_panics_on_seeded_byte_soup() {
+        let mut rng = crate::util::SplitMix64::new(0xDEAD_50C5);
+        for _ in 0..4000 {
+            let len = rng.next_below(96);
+            let soup: Vec<u8> =
+                (0..len).map(|_| rng.next_u64() as u8).collect();
+            let _ = read_msg(&soup[..]); // Ok or Err — just no panic
+            let _ = ControlMsg::decode(&soup);
+        }
+        let real: Vec<ControlMsg> = vec![
+            ControlMsg::Hello { version: PROTO_VERSION, rank: 1 },
+            ControlMsg::Welcome {
+                rank: 0,
+                world: 2,
+                config_toml: "model = \"tiny\"\n".into(),
+                mesh_host: "127.0.0.1".into(),
+                mesh_base_port: 41900,
+            },
+            ControlMsg::Cmd(Cmd::Verify {
+                tokens: Some(vec![1, 2, 3]),
+                lanes: vec![0, 0, 1],
+                positions: vec![4, 5, 2],
+            }),
+            ControlMsg::Cmd(Cmd::RestoreLane {
+                lane: 1,
+                len: 2,
+                bytes: vec![1, 2, 3, 4],
+            }),
+            ControlMsg::Reply(Reply::LaneSnapshot {
+                rank: 0,
+                lane: 1,
+                bytes: vec![5, 6, 7],
+            }),
+            ControlMsg::Reply(Reply::StepDone {
+                rank: 0,
+                compute_us: 1,
+                comm_us: 2,
+                candidates: Some(vec![vec![Candidate {
+                    token: 3,
+                    logit: 0.5,
+                }]]),
+            }),
+        ];
+        for msg in &real {
+            let mut frame = Vec::new();
+            write_msg(&mut frame, msg).unwrap();
+            for _ in 0..500 {
+                let mut corrupt = frame.clone();
+                let flips = 1 + rng.next_below(4);
+                for _ in 0..flips {
+                    let i = rng.next_below(corrupt.len());
+                    corrupt[i] ^= 1 << rng.next_below(8);
+                }
+                let _ = read_msg(&corrupt[..]); // no panic
+            }
+        }
     }
 
     #[test]

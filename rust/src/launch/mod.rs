@@ -17,13 +17,24 @@
 //!   same `engine::proto` command stream a rank thread would — the
 //!   engine cannot tell the difference.
 //!
-//! Failure detection: workers heartbeat every
-//! [`control::HEARTBEAT_PERIOD`]; the coordinator-side reader declares a
+//! Failure detection: a dedicated timer thread on each worker
+//! heartbeats every [`control::HEARTBEAT_PERIOD`] regardless of what
+//! the reply pump is doing (a pump stalled mid-write on a large frame
+//! must not read as death); the coordinator-side reader declares a
 //! worker dead after [`control::WORKER_LOSS_TIMEOUT`] of silence (or
-//! instantly on EOF) and injects a `Reply::Error` into the engine's
-//! reply channel, so a killed worker surfaces as a clean engine error
-//! instead of a hang.  Ranks already blocked inside a collective are
-//! unblocked by the mesh's own [`crate::ccl::RECV_TIMEOUT`] backstop.
+//! instantly on EOF) and injects a `worker rank N lost` `Reply::Error`
+//! into the engine's reply channel, so a killed worker surfaces as a
+//! clean engine error instead of a hang.  Ranks already blocked inside
+//! a collective are unblocked by the mesh's own
+//! [`crate::ccl::RECV_TIMEOUT`] backstop.
+//!
+//! Fault tolerance (DESIGN.md §17): that injected error is exactly the
+//! shape [`crate::engine::elastic::ElasticEngine`] classifies as a rank
+//! failure, and [`RelaunchFactory`] is the piece that closes the loop —
+//! a [`crate::engine::elastic::HostFactory`] that re-runs coordination
+//! on a fresh port generation so a replacement worker fleet can
+//! re-register and the engine can re-shard and replay onto it.  A dead
+//! worker then costs a stall, not the deployment.
 //!
 //! Topology notes: the mesh bootstrap uses the `connect_mesh` port-block
 //! scheme, which assumes all ranks can reach `mesh_host` — i.e. one
@@ -37,7 +48,7 @@ use std::net::{TcpListener, TcpStream};
 use std::process::{Child, Command};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -45,6 +56,7 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::ccl::{CommGroup, CommStats, TcpTransport};
 use crate::config::{EngineConfig, WeightSource};
+use crate::engine::elastic::{Fleet, HostFactory};
 use crate::engine::proto::{Cmd, Reply};
 use crate::engine::{rank::RankWorker, Engine, RankHost};
 
@@ -84,6 +96,9 @@ impl Default for LaunchOptions {
 pub struct RankFleet {
     pub hosts: Vec<Box<dyn RankHost>>,
     pub reply_rx: Receiver<Reply>,
+    /// sending side of `reply_rx`, kept so elastic wrappers can inject
+    /// replies (DESIGN.md §17)
+    pub reply_tx: Sender<Reply>,
     pub stats: Arc<CommStats>,
 }
 
@@ -267,15 +282,33 @@ pub fn coordinate(cfg: &EngineConfig, opts: &LaunchOptions)
         write_msg(s, &ControlMsg::Start)?;
     }
 
+    fleet_from_slots(slots)
+}
+
+/// Assemble the [`RankFleet`] from the registration slots.  The
+/// registration loop counts each rank exactly once, so a hole here is a
+/// coordinator bookkeeping bug — but it must surface as a launch error
+/// naming the rank, never as an `unwrap` panic that takes the
+/// coordinator down with a useless backtrace.
+fn fleet_from_slots(slots: Vec<Option<TcpStream>>) -> Result<RankFleet> {
     let (reply_tx, reply_rx) = channel();
-    let mut hosts: Vec<Box<dyn RankHost>> = Vec::with_capacity(opts.world);
+    let mut hosts: Vec<Box<dyn RankHost>> =
+        Vec::with_capacity(slots.len());
     for (rank, slot) in slots.into_iter().enumerate() {
-        let stream = slot.unwrap();
+        let stream = slot.with_context(|| {
+            format!("launch bookkeeping error: rank {rank} counted as \
+                     registered but holds no control stream")
+        })?;
         stream.set_read_timeout(Some(WORKER_LOSS_TIMEOUT))?;
         hosts.push(Box::new(RemoteRankHost::new(
             rank, stream, reply_tx.clone())?));
     }
-    Ok(RankFleet { hosts, reply_rx, stats: Arc::new(CommStats::default()) })
+    Ok(RankFleet {
+        hosts,
+        reply_rx,
+        reply_tx,
+        stats: Arc::new(CommStats::default()),
+    })
 }
 
 /// Handle one registration handshake; on success the stream is parked
@@ -374,26 +407,35 @@ pub fn run_worker(rank: usize, coordinator: &str) -> Result<()> {
             }
         })?;
 
-    // reply pump: RankWorker replies → control frames, heartbeats when
-    // idle so the coordinator can tell silence from death
-    let write_half = stream.try_clone()?;
+    // reply pump: RankWorker replies → control frames.  The write half
+    // is shared with the heartbeat timer below; a control frame is two
+    // write_all calls, so the mutex is what keeps the two frame streams
+    // from interleaving mid-frame.
+    let write_half = Arc::new(Mutex::new(stream.try_clone()?));
+    let wh = write_half.clone();
     let reply_pump = std::thread::Builder::new()
         .name("reply-pump".into())
-        .spawn(move || loop {
-            let msg = match reply_rx.recv_timeout(HEARTBEAT_PERIOD) {
-                Ok(r) => ControlMsg::Reply(r),
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                    ControlMsg::Heartbeat
+        .spawn(move || {
+            while let Ok(r) = reply_rx.recv() {
+                let guard = wh.lock().unwrap();
+                if write_msg(&*guard, &ControlMsg::Reply(r)).is_err() {
+                    return; // coordinator gone; RankWorker will be told
+                            // by the command pump
                 }
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                    return;
-                }
-            };
-            if write_msg(&write_half, &msg).is_err() {
-                return; // coordinator gone; RankWorker will be told by
-                        // the command pump
             }
         })?;
+
+    // heartbeat timer: liveness on its own thread, unconditionally.
+    // The old design heartbeated from the reply pump's recv timeout,
+    // which starves exactly when liveness matters most: a pump stuck in
+    // one large write (a multi-megabyte LaneSnapshot reply on a
+    // congested socket) sends nothing for the whole stall, and after
+    // WORKER_LOSS_TIMEOUT the coordinator declares this worker dead
+    // mid-snapshot.  The timer keeps beating whenever the socket (and
+    // the shared write mutex) come free, independent of reply traffic.
+    let hb_stop = Arc::new(AtomicBool::new(false));
+    let heartbeat = spawn_heartbeat(write_half.clone(), HEARTBEAT_PERIOD,
+                                    hb_stop.clone())?;
 
     // rank-to-rank data plane.  This runs AFTER both pumps are up: mesh
     // bring-up can legitimately take tens of seconds (accept deadlines,
@@ -412,13 +454,46 @@ pub fn run_worker(rank: usize, coordinator: &str) -> Result<()> {
     RankWorker::run(rank, cfg, comm, cmd_rx, reply_tx);
 
     // RankWorker dropped its reply sender, so the reply pump drains and
-    // exits; then close the socket (all clones) to unblock the command
-    // pump if it is still parked in a read.
+    // exits; stop the heartbeat timer, then close the socket (all
+    // clones) to unblock the command pump if it is still parked in a
+    // read.
     let _ = reply_pump.join();
+    hb_stop.store(true, Ordering::SeqCst);
+    let _ = heartbeat.join();
     let _ = stream.shutdown(std::net::Shutdown::Both);
     let _ = cmd_pump.join();
     eprintln!("worker rank {rank}: clean shutdown");
     Ok(())
+}
+
+/// Spawn the worker-side liveness timer: one [`ControlMsg::Heartbeat`]
+/// per `period` on `write_half`, sharing the frame mutex with the reply
+/// pump so heartbeats never interleave into the middle of a reply
+/// frame.  Exits when `stop` is raised (checked every 25 ms, so worker
+/// shutdown stays prompt) or when the socket dies.
+fn spawn_heartbeat(write_half: Arc<Mutex<TcpStream>>, period: Duration,
+                   stop: Arc<AtomicBool>) -> Result<JoinHandle<()>> {
+    std::thread::Builder::new()
+        .name("heartbeat".into())
+        .spawn(move || {
+            let tick = Duration::from_millis(25).min(period);
+            let mut last = Instant::now();
+            loop {
+                std::thread::sleep(tick);
+                if stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if last.elapsed() < period {
+                    continue;
+                }
+                let guard = write_half.lock().unwrap();
+                if write_msg(&*guard, &ControlMsg::Heartbeat).is_err() {
+                    return; // socket gone — the pumps own teardown
+                }
+                last = Instant::now();
+            }
+        })
+        .context("spawning heartbeat thread")
 }
 
 fn connect_with_retry(addr: &str, budget: Duration) -> Result<TcpStream> {
@@ -454,4 +529,213 @@ pub fn spawn_local_workers(world: usize, coordinator: &str)
         );
     }
     Ok(children)
+}
+
+/// The distributed-deployment [`HostFactory`] (DESIGN.md §17): rebuild
+/// a worker fleet by re-running coordination.  Each build uses a fresh
+/// *port generation* — control port and mesh port block shifted by a
+/// per-generation stride — because the previous generation's sockets
+/// may still sit in TIME_WAIT, and a replacement fleet must not race
+/// the corpse of the old one for its ports.
+///
+/// With `spawn_local`, every build re-execs `world` local worker
+/// processes against the new control port (single-machine deployments
+/// and the CI chaos leg); otherwise the factory only listens, and
+/// re-admission is the operator's job — surviving workers are expected
+/// to be restarted by whatever supervises them, pointing at the
+/// generation's control address printed by the coordinator.
+pub struct RelaunchFactory {
+    opts: LaunchOptions,
+    /// re-exec local worker processes on every build
+    pub spawn_local: bool,
+    generation: u16,
+}
+
+/// Port stride between fleet generations: covers the mesh port block of
+/// any supported world size with room to spare.
+const GENERATION_PORT_STRIDE: u16 = 64;
+
+impl RelaunchFactory {
+    /// Factory whose generation 0 matches `opts` exactly (so the first
+    /// build is indistinguishable from a plain [`coordinate`] call).
+    pub fn new(opts: LaunchOptions, spawn_local: bool) -> RelaunchFactory {
+        RelaunchFactory { opts, spawn_local, generation: 0 }
+    }
+
+    /// Factory for a deployment whose *initial* fleet was already
+    /// coordinated on `opts` by the caller: builds start at generation
+    /// 1, so the first replacement fleet never fights the original's
+    /// ports.
+    pub fn for_replacements(opts: LaunchOptions, spawn_local: bool)
+                            -> RelaunchFactory {
+        RelaunchFactory { opts, spawn_local, generation: 1 }
+    }
+
+    /// The launch options of generation `g`.
+    fn generation_opts(&self, g: u16, world: usize)
+                       -> Result<LaunchOptions> {
+        let mut opts = self.opts.clone();
+        opts.world = world;
+        let (host, port) = self
+            .opts
+            .control_addr
+            .rsplit_once(':')
+            .with_context(|| format!("control address {:?} has no port",
+                                     self.opts.control_addr))?;
+        let port: u16 = port.parse().with_context(|| {
+            format!("control address {:?} port", self.opts.control_addr)
+        })?;
+        let shift = g.checked_mul(GENERATION_PORT_STRIDE)
+            .context("fleet generation counter overflowed")?;
+        opts.control_addr = format!(
+            "{host}:{}",
+            port.checked_add(shift)
+                .context("control port generation overflowed")?);
+        opts.mesh_base_port = self
+            .opts
+            .mesh_base_port
+            .checked_add(shift)
+            .context("mesh port generation overflowed")?;
+        Ok(opts)
+    }
+}
+
+impl HostFactory for RelaunchFactory {
+    fn build(&mut self, cfg: &EngineConfig) -> Result<Fleet> {
+        let opts = self.generation_opts(self.generation, cfg.world)?;
+        self.generation += 1;
+        if self.spawn_local {
+            // children are detached on purpose: they exit on the
+            // engine's Shutdown command, and a fleet that dies early is
+            // exactly what the next generation recovers from
+            let _ = spawn_local_workers(cfg.world, &opts.control_addr)?;
+        } else {
+            eprintln!(
+                "coordinator: fleet generation {} registering on {}",
+                self.generation, opts.control_addr
+            );
+        }
+        let fleet = coordinate(cfg, &opts)?;
+        Ok(Fleet {
+            hosts: fleet.hosts,
+            reply_rx: fleet.reply_rx,
+            reply_tx: fleet.reply_tx,
+            stats: fleet.stats,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Satellite regression (PR 10): a hole in the registration slots
+    /// must come back as a launch error naming the rank — the old code
+    /// `unwrap()`ed the slot and took the whole coordinator down.
+    #[test]
+    fn fleet_assembly_reports_missing_rank_instead_of_panicking() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let c0 = TcpStream::connect(addr).unwrap();
+        let (_s0, _) = listener.accept().unwrap();
+        let err = fleet_from_slots(vec![Some(c0), None]).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rank 1"), "error does not name the \
+                                         missing rank: {msg}");
+    }
+
+    #[test]
+    fn empty_slot_list_builds_an_empty_fleet() {
+        let fleet = fleet_from_slots(Vec::new()).unwrap();
+        assert!(fleet.hosts.is_empty());
+    }
+
+    /// Satellite regression (PR 10): heartbeats must keep flowing while
+    /// the reply pump is busy or stalled — the old design only
+    /// heartbeated from the pump's idle timeout, so a slow round of
+    /// large replies starved liveness until the coordinator declared
+    /// the worker dead.  Also pins the frame-interleaving contract:
+    /// heartbeats and large reply frames share one socket and must
+    /// never corrupt each other mid-frame.
+    #[test]
+    fn heartbeat_timer_survives_busy_reply_traffic() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        client.set_nodelay(true).unwrap();
+
+        let write_half = Arc::new(Mutex::new(client));
+        let stop = Arc::new(AtomicBool::new(false));
+        let period = Duration::from_millis(50);
+        let hb = spawn_heartbeat(write_half.clone(), period,
+                                 stop.clone())
+            .unwrap();
+
+        // a "reply pump" that goes quiet for 4 periods (the slow
+        // round), then blasts large frames through the shared mutex
+        let n_replies = 20usize;
+        let pump = {
+            let wh = write_half.clone();
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(200));
+                for i in 0..n_replies {
+                    let guard = wh.lock().unwrap();
+                    write_msg(&*guard, &ControlMsg::Reply(Reply::Error {
+                        rank: 0,
+                        message: format!("{i}:").repeat(20_000),
+                    }))
+                    .unwrap();
+                }
+            })
+        };
+
+        server.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let (mut beats, mut replies) = (0usize, 0usize);
+        while replies < n_replies {
+            match read_msg(&server) {
+                Ok(ControlMsg::Heartbeat) => beats += 1,
+                Ok(ControlMsg::Reply(_)) => replies += 1,
+                Ok(other) => panic!("unexpected frame {other:?}"),
+                Err(e) => panic!("control stream corrupted: {e:#}"),
+            }
+        }
+        assert!(beats >= 2,
+                "only {beats} heartbeats during a 200 ms stall at 50 ms \
+                 period — the timer starved");
+
+        stop.store(true, Ordering::SeqCst);
+        pump.join().unwrap();
+        hb.join().unwrap();
+    }
+
+    /// Each fleet generation must move to a disjoint port block and
+    /// carry the (possibly resized) world.
+    #[test]
+    fn relaunch_generations_shift_ports() {
+        let opts = LaunchOptions {
+            world: 4,
+            control_addr: "127.0.0.1:7200".into(),
+            mesh_base_port: 41900,
+            ..LaunchOptions::default()
+        };
+        let f = RelaunchFactory::new(opts, false);
+        let g0 = f.generation_opts(0, 4).unwrap();
+        assert_eq!(g0.control_addr, "127.0.0.1:7200");
+        assert_eq!(g0.mesh_base_port, 41900);
+        assert_eq!(g0.world, 4);
+        let g2 = f.generation_opts(2, 2).unwrap();
+        assert_eq!(g2.control_addr, "127.0.0.1:7328");
+        assert_eq!(g2.mesh_base_port, 42028);
+        assert_eq!(g2.world, 2, "resize must ride the next generation");
+        // a port near the top of the range overflows cleanly
+        let high = RelaunchFactory::new(
+            LaunchOptions {
+                control_addr: "127.0.0.1:65530".into(),
+                ..LaunchOptions::default()
+            },
+            false,
+        );
+        assert!(high.generation_opts(2, 2).is_err());
+    }
 }

@@ -12,6 +12,7 @@
 //! xeonserve bench    --validate BENCH.json
 //! xeonserve bench    [--steps 32] [--prompt-len 8]   (legacy one-shot)
 //! xeonserve storm    --addr HOST:PORT [--clients N] [-n N]
+//! xeonserve resize   --addr HOST:PORT --world N
 //! xeonserve isa      [--check scalar|avx2|avx512|vnni]
 //! xeonserve info     [--artifacts artifacts]
 //! ```
@@ -22,6 +23,7 @@ use anyhow::{bail, Context, Result};
 
 use xeonserve::benchkit::{self, suite};
 use xeonserve::config::{EngineConfig, Manifest};
+use xeonserve::engine::elastic::ElasticEngine;
 use xeonserve::engine::Engine;
 use xeonserve::launch::{self, LaunchOptions};
 use xeonserve::tokenizer::Tokenizer;
@@ -43,6 +45,7 @@ USAGE:
   xeonserve bench    --validate FILE
   xeonserve bench    [--steps N] [--prompt-len N]   (legacy one-shot)
   xeonserve storm    --addr HOST:PORT [--clients N] [-n N]
+  xeonserve resize   --addr HOST:PORT --world N
   xeonserve isa      [--check scalar|avx2|avx512|vnni]
   xeonserve info     [--artifacts DIR]
 
@@ -95,6 +98,16 @@ serve/launch --addr deployment and prints one JSON summary line —
 {\"clients\":N,\"ok\":A,\"shed\":B,\"errors\":C} — where every
 client must end in a clean done frame or a shed line for the CI
 smoke to pass.
+
+The serving stack is elastic (DESIGN.md \u{a7}17): a worker that
+dies mid-decode is detected by heartbeat loss, the fleet is rebuilt,
+and every in-flight request replays prompt + emitted tokens onto the
+new fleet — streaming clients see a stall, never an error and never
+a changed token.  resize drives the same quiesce/reshard/restore
+path deliberately: {\"resize\": N} reshards a running deployment to
+N ranks with lane KV carried across as world-invariant images, and
+{\"stats\": true} reports recoveries / resizes /
+recovery_stall_ms / tokens_lost next to the occupancy counters.
 
 Without --config the built-in default is used (tiny model, world=2,
 all paper optimizations ON).  See configs/*.toml for presets.";
@@ -166,15 +179,57 @@ fn run_launch(cfg: EngineConfig, opts: &LaunchOptions, args: &Args)
             let addr =
                 args.get("addr").unwrap_or("127.0.0.1:7070").to_string();
             let opts = opts.clone();
+            let spawn = args.get("spawn-workers") == Some("true");
             xeonserve::server::serve_with(
                 move || {
                     let fleet = launch::coordinate(&cfg, &opts)?;
-                    fleet.into_engine(cfg)
+                    let engine = fleet.into_engine(cfg)?;
+                    // replacement fleets re-coordinate on fresh port
+                    // generations; with --spawn-workers the factory
+                    // also re-execs the local worker processes, so a
+                    // SIGKILL'd worker is replaced without operator
+                    // action (DESIGN.md §17)
+                    Ok(ElasticEngine::from_engine(
+                        engine,
+                        Box::new(launch::RelaunchFactory::for_replacements(
+                            opts, spawn)),
+                    ))
                 },
                 &addr,
             )
         }
     }
+}
+
+/// `xeonserve resize`: drive a planned live reshard on a running
+/// deployment (DESIGN.md §17) by posting `{"resize": N}` to its JSON
+/// API and printing the acknowledgement.
+fn run_resize(args: &Args) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let addr = args
+        .get("addr")
+        .context("resize requires --addr HOST:PORT")?;
+    let world = args.get_usize("world", 0)?;
+    if world == 0 {
+        bail!("resize requires --world N (the new world size)\n\n{USAGE}");
+    }
+    let mut sock = TcpStream::connect(addr)
+        .with_context(|| format!("connecting {addr}"))?;
+    writeln!(sock, "{{\"resize\": {world}}}")?;
+    let mut line = String::new();
+    BufReader::new(sock).read_line(&mut line)?;
+    let line = line.trim();
+    if line.is_empty() {
+        bail!("server closed the connection without answering");
+    }
+    println!("{line}");
+    let j = Json::parse(line).context("unparseable resize reply")?;
+    if let Some(e) = j.get("error").and_then(Json::as_str) {
+        bail!("resize refused: {e}");
+    }
+    Ok(())
 }
 
 /// `xeonserve isa`: report the host's instruction tiers (DESIGN.md
@@ -500,6 +555,7 @@ fn main() -> Result<()> {
         }
         "bench" => run_bench(&args),
         "storm" => run_storm_cli(&args),
+        "resize" => run_resize(&args),
         "isa" => run_isa(&args),
         "info" => {
             let dir =

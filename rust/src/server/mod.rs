@@ -40,12 +40,30 @@
 //! ```
 //!
 //! `{"stats": true}` answers one introspection line (lane/page
-//! occupancy + serving counters) without generating:
+//! occupancy + serving counters, including the elastic-recovery
+//! counters of DESIGN.md §17 — `recoveries`, `resizes`,
+//! `recovery_stall_ms`, `tokens_lost`) without generating:
 //!
 //! ```text
 //! → {"stats": true}
 //! ← {"stats": {"active": 1, "pending": 0, "free_lanes": 1, ...}}
 //! ```
+//!
+//! `{"resize": world}` drives a planned live reshard (DESIGN.md §17):
+//! the engine quiesces, rebuilds its rank fleet at the new world size,
+//! restores every in-flight lane, and replies once the fleet is
+//! serving again — streams in flight stall for the rebuild and then
+//! continue bit-identically:
+//!
+//! ```text
+//! → {"resize": 2}
+//! ← {"resized": 2, "stall_ms": 840}
+//! ```
+//!
+//! A worker death takes the same path without the request: the engine
+//! wrapper ([`crate::engine::elastic::ElasticEngine`]) absorbs the
+//! rank failure inside `step`, so connected clients observe a stall in
+//! their token stream, **never** an error line or a dropped token.
 //!
 //! `{"cancel": id}` cancels a request by the id its frames carry —
 //! whether it is still queued ahead of the engine, engine-pending, or
@@ -82,6 +100,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::config::EngineConfig;
+use crate::engine::elastic::{ElasticEngine, InprocFactory};
 use crate::engine::Engine;
 use crate::metrics::ServeStats;
 use crate::scheduler::{AdmissionQueue, ShedPolicy};
@@ -111,6 +130,11 @@ pub struct ApiRequest {
     /// `prompt` may be omitted.  Idempotent at the API surface: an
     /// unknown/finished id answers a clean error line
     pub cancel: Option<u64>,
+    /// reshard the running deployment to this world size (DESIGN.md
+    /// §17) instead of generating; `prompt` may be omitted.  An
+    /// invalid world (0, non-divisible, unsupported) answers a clean
+    /// error line and the fleet keeps serving
+    pub resize: Option<usize>,
 }
 
 impl ApiRequest {
@@ -159,16 +183,38 @@ impl ApiRequest {
                 Some(n as u64)
             }
         };
+        let resize = match j.get("resize") {
+            None => None,
+            Some(v) => {
+                let n = v.as_f64().context(
+                    "resize must be a positive integer world size")?;
+                anyhow::ensure!(
+                    n.fract() == 0.0 && (1.0..=4096.0).contains(&n),
+                    "resize must be a positive integer world size, \
+                     got {n}"
+                );
+                Some(n as usize)
+            }
+        };
         let prompt = match j.get("prompt") {
             Some(v) => v
                 .as_str()
                 .context("prompt must be a string")?
                 .to_string(),
-            // pure stats/cancel probes need no prompt
-            None if stats || cancel.is_some() => String::new(),
+            // pure stats/cancel/resize probes need no prompt
+            None if stats || cancel.is_some() || resize.is_some() => {
+                String::new()
+            }
             None => anyhow::bail!("missing JSON key \"prompt\""),
         };
-        Ok(ApiRequest { prompt, max_new_tokens, stream, stats, cancel })
+        Ok(ApiRequest {
+            prompt,
+            max_new_tokens,
+            stream,
+            stats,
+            cancel,
+            resize,
+        })
     }
 }
 
@@ -239,6 +285,16 @@ pub fn cancelled_json(id: u64) -> String {
     Json::Obj(m).to_string()
 }
 
+/// The `{"resized": world, "stall_ms": ...}` acknowledgement of a
+/// completed planned reshard (DESIGN.md §17): sent once the new fleet
+/// is serving, carrying how long in-flight streams stalled.
+pub fn resized_json(world: usize, stall_ms: u64) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("resized".to_string(), Json::Num(world as f64));
+    m.insert("stall_ms".to_string(), Json::Num(stall_ms as f64));
+    Json::Obj(m).to_string()
+}
+
 /// The `{"error": "shed", ...}` admission-refusal line (DESIGN.md
 /// §16): carries the reason (`queue-depth` or `oldest-wait`) and the
 /// occupancy snapshot that triggered it, so a client can implement
@@ -276,7 +332,7 @@ struct Owner {
 /// Single-threaded by construction — the engine never crosses a
 /// thread.
 pub struct Front {
-    engine: Engine,
+    engine: ElasticEngine,
     tok: Tokenizer,
     sched: AdmissionQueue,
     shed: ShedPolicy,
@@ -290,8 +346,18 @@ pub struct Front {
 
 impl Front {
     /// Wrap an engine in the serving state machine; admission policy
-    /// and shed bounds come from the engine's own config.
+    /// and shed bounds come from the engine's own config.  Rank
+    /// failures recover onto in-process replacement fleets
+    /// ([`InprocFactory`]); deployments with a different fleet shape
+    /// use [`Front::new_elastic`].
     pub fn new(engine: Engine) -> Result<Front> {
+        Self::new_elastic(ElasticEngine::from_engine(
+            engine, Box::new(InprocFactory)))
+    }
+
+    /// Wrap an already-elastic engine — the launch coordinator pairs
+    /// its remote fleet with a `RelaunchFactory` here (DESIGN.md §17).
+    pub fn new_elastic(engine: ElasticEngine) -> Result<Front> {
         let tok = Tokenizer::byte_level(engine.preset().vocab)?;
         let cfg = engine.config();
         let sched = AdmissionQueue::for_kind(
@@ -318,6 +384,11 @@ impl Front {
     /// latency quantiles sort lazily and need `&mut`).
     pub fn engine_mut(&mut self) -> &mut Engine {
         &mut self.engine
+    }
+
+    /// The elastic wrapper, for the recovery/reshard counters.
+    pub fn elastic(&self) -> &ElasticEngine {
+        &self.engine
     }
 
     /// Requests currently owned by some connection (queued, pending,
@@ -373,6 +444,10 @@ impl Front {
             self.handle_cancel(conn, id);
             return;
         }
+        if let Some(world) = req.resize {
+            self.handle_resize(conn, world);
+            return;
+        }
         let (depth, oldest) = self.sched.occupancy();
         if let Some(reason) = self.shed.decision(depth, oldest) {
             self.stats.shed += 1;
@@ -410,6 +485,21 @@ impl Front {
             Ok(false) => error_json(&format!(
                 "cancel: unknown or already finished request id {id}")),
             Err(e) => error_json(&format!("cancel: {e:#}")),
+        };
+        self.reply_raw(conn, line);
+    }
+
+    /// `{"resize": world}`: drive a planned live reshard (DESIGN.md
+    /// §17).  Runs synchronously on the reactor thread — in-flight
+    /// streams stall for exactly the rebuild (that stall is the
+    /// figure the acknowledgement carries) and resume on the next
+    /// tick.  A refused resize (non-divisible world, unsupported
+    /// size) leaves the running fleet untouched.
+    fn handle_resize(&mut self, conn: ConnId, world: usize) {
+        let line = match self.engine.resize(world) {
+            Ok(()) => resized_json(
+                world, self.engine.last_recovery_stall_ms()),
+            Err(e) => error_json(&format!("resize: {e:#}")),
         };
         self.reply_raw(conn, line);
     }
@@ -502,6 +592,11 @@ impl Front {
                 Ok(())
             }
             Err(e) => {
+                // only *unrecoverable* errors reach here: the elastic
+                // wrapper absorbs rank failures inside step (clients
+                // see a stall, not this line — DESIGN.md §17), so what
+                // remains is a genuine engine inconsistency or a fleet
+                // that died faster than its recovery budget
                 let msg = error_json(&format!("engine: {e:#}"));
                 for (_, o) in self.owners.drain() {
                     self.outbox.push((o.conn, msg.clone()));
@@ -536,6 +631,14 @@ impl Front {
         put("tokens_out", self.engine.metrics.tokens_out as f64);
         put("prefix_hits", self.engine.metrics.prefix_hits as f64);
         put("prefix_misses", self.engine.metrics.prefix_misses as f64);
+        // elastic-recovery counters (DESIGN.md §17): how often the
+        // fleet was rebuilt, the last stall, and the tokens-lost
+        // invariant (always 0 — recovery replays, never drops)
+        put("recoveries", self.engine.recoveries() as f64);
+        put("resizes", self.engine.resizes() as f64);
+        put("recovery_stall_ms",
+            self.engine.last_recovery_stall_ms() as f64);
+        put("tokens_lost", self.engine.tokens_lost() as f64);
         // serving-layer counters (DESIGN.md §16)
         put("shed", self.stats.shed as f64);
         put("frames_sent", self.stats.frames_sent as f64);
@@ -550,21 +653,23 @@ impl Front {
 
 /// Serve `cfg` on `addr` (e.g. "127.0.0.1:7070") with in-process rank
 /// threads.  Runs until the process exits; one reactor thread serves
-/// every connection (DESIGN.md §16).
+/// every connection (DESIGN.md §16).  Rank failures recover onto
+/// fresh in-process fleets (DESIGN.md §17).
 pub fn serve(cfg: EngineConfig, addr: &str) -> Result<()> {
-    serve_with(move || Engine::new(cfg), addr)
+    serve_with(move || ElasticEngine::new_inproc(cfg), addr)
 }
 
-/// Serve on `addr` with an engine produced by `build` — the hook the
-/// launch coordinator uses to front a fleet of remote rank workers
-/// (see `crate::launch`).  `build` runs on the calling thread, which
-/// becomes the reactor thread: the engine never crosses a thread.
+/// Serve on `addr` with an elastic engine produced by `build` — the
+/// hook the launch coordinator uses to front a fleet of remote rank
+/// workers paired with a `RelaunchFactory` (see `crate::launch`).
+/// `build` runs on the calling thread, which becomes the reactor
+/// thread: the engine never crosses a thread.
 pub fn serve_with<F>(build: F, addr: &str) -> Result<()>
 where
-    F: FnOnce() -> Result<Engine>,
+    F: FnOnce() -> Result<ElasticEngine>,
 {
     let engine = build()?;
-    let front = Front::new(engine)?;
+    let front = Front::new_elastic(engine)?;
     let listener =
         TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     eprintln!("xeonserve listening on {addr}");
@@ -729,6 +834,38 @@ mod tests {
         assert_eq!(j.get("cancelled").unwrap().as_u64(), Some(7));
     }
 
+    #[test]
+    fn resize_field_is_strictly_typed_and_needs_no_prompt() {
+        let r = ApiRequest::parse(r#"{"resize": 2}"#).unwrap();
+        assert_eq!(r.resize, Some(2));
+        assert!(r.prompt.is_empty());
+        // absent on ordinary requests
+        let r = ApiRequest::parse(r#"{"prompt": "x"}"#).unwrap();
+        assert_eq!(r.resize, None);
+        // zero, negatives, non-integers: clean errors, never coercions
+        for bad in [
+            r#"{"resize": 0}"#,
+            r#"{"resize": -2}"#,
+            r#"{"resize": 2.5}"#,
+            r#"{"resize": "2"}"#,
+            r#"{"resize": true}"#,
+            r#"{"resize": null}"#,
+            r#"{"resize": [2]}"#,
+            r#"{"resize": 1e9}"#,
+        ] {
+            let e = ApiRequest::parse(bad);
+            assert!(e.is_err(), "accepted {bad}");
+            assert!(format!("{:#}", e.unwrap_err()).contains("resize"),
+                    "error should name the bad field for {bad}");
+        }
+        let j = Json::parse(&resized_json(2, 840)).unwrap();
+        assert_eq!(j.get("resized").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("stall_ms").unwrap().as_u64(), Some(840));
+        // a resize ack must never be mistaken for a generation reply
+        assert!(j.get("done").is_none());
+        assert!(j.get("token").is_none());
+    }
+
     /// Satellite: seeded random-JSON fuzz of [`ApiRequest::parse`].
     /// Every input must yield either a valid request or a clean JSON
     /// error — never a panic (the `#[test]` harness turns any panic
@@ -745,7 +882,7 @@ mod tests {
         let atoms: &[&str] = &[
             "{", "}", "[", "]", ":", ",", "\"", "\\",
             "\"prompt\"", "\"max_new_tokens\"", "\"stream\"",
-            "\"stats\"", "\"cancel\"", "\"bogus\"",
+            "\"stats\"", "\"cancel\"", "\"resize\"", "\"bogus\"",
             "true", "false", "null",
             "0", "1", "-1", "4.5", "1e99", "-1e99", "1e400", "NaN",
             "\"hi\"", "\"\\u0041\"", "\"\\q\"", "\"unterminated",
@@ -770,6 +907,7 @@ mod tests {
                     // an explicit "" prompt
                     assert!(req.stats
                                 || req.cancel.is_some()
+                                || req.resize.is_some()
                                 || line.contains("\"prompt\""),
                             "prompt-less accept from {line:?}");
                 }
@@ -777,8 +915,8 @@ mod tests {
             }
         }
         // structured inputs too: every field set to every atom type
-        for field in
-            ["prompt", "max_new_tokens", "stream", "stats", "cancel"]
+        for field in ["prompt", "max_new_tokens", "stream", "stats",
+                      "cancel", "resize"]
         {
             for val in [
                 "0", "16", "-3", "2.5", "true", "false", "null",

@@ -1,0 +1,227 @@
+//! Elastic-worlds integration suite (DESIGN.md §17): a dead worker is
+//! a non-event.  When a rank dies mid-decode the elastic engine tears
+//! the fleet down, brings replacements up, re-shards the weights from
+//! the world-invariant quant grid, and replays every in-flight lane —
+//! so a streaming client sees a stall, never an error, and the
+//! continuation is BIT-IDENTICAL to an uninterrupted run.  The same
+//! quiesce → rebuild → restore path driven deliberately is a planned
+//! live reshard, pinned here by post-reshard greedy tokens equal to a
+//! fresh launch at the new world size.  Both claims are checked
+//! across worlds {2, 4} × dtypes {f32, int8} × both admission
+//! schedulers, together with lane/page/refcount conservation after
+//! every rebuild.
+
+use std::collections::HashMap;
+
+use xeonserve::config::{BackendKind, Dtype, EngineConfig,
+                        SchedulerKind, WeightSource};
+use xeonserve::engine::elastic::{ChaosFactory, ElasticEngine};
+use xeonserve::engine::Engine;
+
+fn cfg(world: usize, dtype: Dtype, sched: SchedulerKind)
+       -> EngineConfig {
+    EngineConfig {
+        model: "tiny".into(),
+        backend: BackendKind::Reference,
+        world,
+        batch: 2,
+        weight_dtype: dtype,
+        kv_dtype: dtype,
+        scheduler: sched,
+        weights: WeightSource::Synthetic { seed: 0xC0FFEE },
+        ..Default::default()
+    }
+}
+
+/// Short enough that the fcfs bucket path (tiny's single 16-token
+/// bucket) never truncates, so every scheduler serves the same
+/// effective prompt.
+fn prompts() -> Vec<Vec<i32>> {
+    vec![
+        vec![11, 23, 5, 42, 7],
+        vec![3, 1, 4, 1, 5, 9, 2, 6],
+    ]
+}
+
+/// Drive an elastic engine to completion by single steps, draining
+/// the streaming feed after every step — the per-token view a server
+/// front relays to its clients.  Returns (per-request streams,
+/// completions).
+fn drive(eng: &mut ElasticEngine)
+         -> (HashMap<u64, Vec<i32>>, Vec<xeonserve::engine::Completion>) {
+    let mut streams: HashMap<u64, Vec<i32>> = HashMap::new();
+    let mut done = Vec::new();
+    while eng.has_work() {
+        done.extend(eng.step().expect(
+            "a rank death must stall the stream, never error it"));
+        for (id, tok) in eng.take_new_tokens() {
+            streams.entry(id).or_default().push(tok);
+        }
+    }
+    done.sort_by_key(|c| c.request_id);
+    (streams, done)
+}
+
+/// Nothing may leak across a rebuild: all lanes free, every page
+/// either free or pinned by a published shared prefix, and no
+/// refcounted segment left behind on schedulers that never share.
+fn assert_conserved(eng: &ElasticEngine) {
+    assert_eq!(eng.free_lanes(), 2, "lanes leaked across rebuild");
+    assert_eq!(eng.free_pages(),
+               eng.total_pages() - eng.shared_pages(),
+               "pages leaked across rebuild");
+    if eng.config().scheduler == SchedulerKind::Fcfs {
+        assert_eq!(eng.shared_pages(), 0,
+                   "fcfs never publishes prefixes");
+    }
+}
+
+/// The tentpole matrix: kill a worker mid-stream in every
+/// (world × dtype × scheduler) cell; the full streams and completions
+/// must come out bit-identical to an uninterrupted run, with
+/// conserved resources afterwards.
+#[test]
+fn kill_mid_stream_is_bit_identical_across_worlds_dtypes_schedulers() {
+    for world in [2usize, 4] {
+        for dtype in [Dtype::F32, Dtype::Int8] {
+            for sched in [SchedulerKind::Fcfs,
+                          SchedulerKind::Continuous] {
+                let label = format!("w{world} {dtype:?} {sched:?}");
+                let c = cfg(world, dtype, sched);
+                let expected = Engine::new(c.clone())
+                    .unwrap()
+                    .generate(&prompts(), 8)
+                    .unwrap();
+
+                // fuse 6: past both prefills, several tokens into
+                // decode — the lanes hold live KV when the rank dies
+                let factory = ChaosFactory {
+                    victim: world - 1,
+                    fuse: 6,
+                    kills: 1,
+                };
+                let mut eng =
+                    ElasticEngine::new(c, Box::new(factory)).unwrap();
+                let ids: Vec<u64> = prompts()
+                    .iter()
+                    .map(|p| eng.enqueue(p.clone(), 8))
+                    .collect();
+                let (streams, done) = drive(&mut eng);
+
+                assert_eq!(eng.recoveries(), 1,
+                           "{label}: the chaos fuse must blow");
+                assert_eq!(eng.tokens_lost(), 0, "{label}");
+                assert!(eng.last_recovery_stall_ms() < 60_000,
+                        "{label}: implausible stall");
+                for (i, id) in ids.iter().enumerate() {
+                    let c = done
+                        .iter()
+                        .find(|c| c.request_id == *id)
+                        .unwrap_or_else(|| panic!(
+                            "{label}: request {id} never completed"));
+                    assert_eq!(c.tokens, expected[i],
+                               "{label}: completion {id} diverged");
+                    assert_eq!(streams[id], expected[i],
+                               "{label}: stream {id} diverged");
+                }
+                assert_conserved(&eng);
+            }
+        }
+    }
+}
+
+/// The kill with every KV-layout feature live at once: continuous
+/// admission, chunked prefill, and a published shared prefix spanning
+/// a full page — the hardest replay shape (prompts longer than the
+/// fcfs bucket, KV rows split across private and shared segments).
+#[test]
+fn kill_under_chunked_continuous_shared_prefix() {
+    for dtype in [Dtype::F32, Dtype::Int8] {
+        let mut c = cfg(4, dtype, SchedulerKind::Continuous);
+        c.prefill_chunk = 4;
+        let shared: Vec<Vec<i32>> = vec![
+            (0..20).collect::<Vec<i32>>(),
+            (0..20).chain([99, 98]).collect(),
+        ];
+        let expected = Engine::new(c.clone())
+            .unwrap()
+            .generate(&shared, 6)
+            .unwrap();
+
+        let factory = ChaosFactory { victim: 0, fuse: 12, kills: 1 };
+        let mut eng = ElasticEngine::new(c, Box::new(factory)).unwrap();
+        let got = eng.generate(&shared, 6).unwrap();
+        assert_eq!(eng.recoveries(), 1, "{dtype:?}: fuse must blow");
+        assert_eq!(got, expected, "{dtype:?}: streams diverged");
+        assert_conserved(&eng);
+    }
+}
+
+/// Planned live reshard 4 → 2 → 4 mid-stream: every continuation
+/// segment must be bit-identical to a fresh launch at that world size
+/// (the world-invariance argument — same quant grid, same logits, so
+/// one fresh-launch reference pins all three segments at once).
+#[test]
+fn planned_reshard_4_2_4_matches_fresh_launch() {
+    for dtype in [Dtype::F32, Dtype::Int8] {
+        let fresh2 = Engine::new(cfg(2, dtype, SchedulerKind::Fcfs))
+            .unwrap()
+            .generate(&prompts(), 10)
+            .unwrap();
+        let fresh4 = Engine::new(cfg(4, dtype, SchedulerKind::Fcfs))
+            .unwrap()
+            .generate(&prompts(), 10)
+            .unwrap();
+        assert_eq!(fresh2, fresh4,
+                   "{dtype:?}: world invariance precondition");
+
+        let mut eng = ElasticEngine::new_inproc(
+            cfg(4, dtype, SchedulerKind::Fcfs)).unwrap();
+        let ids: Vec<u64> = prompts()
+            .iter()
+            .map(|p| eng.enqueue(p.clone(), 10))
+            .collect();
+        let mut done = Vec::new();
+        for _ in 0..3 {
+            done.extend(eng.step().unwrap());
+        }
+        eng.resize(2).unwrap();
+        assert_eq!(eng.config().world, 2);
+        for _ in 0..2 {
+            done.extend(eng.step().unwrap());
+        }
+        eng.resize(4).unwrap();
+        assert_eq!(eng.config().world, 4);
+        done.extend(eng.run_to_completion().unwrap());
+        assert_eq!(eng.resizes(), 2);
+
+        done.sort_by_key(|c| c.request_id);
+        for (i, id) in ids.iter().enumerate() {
+            let c = done.iter().find(|c| c.request_id == *id).unwrap();
+            assert_eq!(c.tokens, fresh2[i],
+                       "{dtype:?}: request {id} diverged across \
+                        reshards");
+        }
+        assert_conserved(&eng);
+    }
+}
+
+/// A resize nobody can shard over (tiny has 8 kv heads; 3 doesn't
+/// divide) is refused before any quiesce work, and the running world
+/// keeps serving untouched.
+#[test]
+fn refused_resize_leaves_the_world_serving() {
+    let mut eng = ElasticEngine::new_inproc(
+        cfg(2, Dtype::F32, SchedulerKind::Fcfs)).unwrap();
+    let ids: Vec<u64> = prompts()
+        .iter()
+        .map(|p| eng.enqueue(p.clone(), 6))
+        .collect();
+    let err = eng.resize(3).unwrap_err();
+    assert!(format!("{err:#}").contains("resize to world 3"),
+            "unexpected refusal: {err:#}");
+    assert_eq!(eng.resizes(), 0);
+    let done = eng.run_to_completion().unwrap();
+    assert_eq!(done.len(), ids.len());
+    assert_conserved(&eng);
+}
